@@ -1,0 +1,77 @@
+//! END-TO-END DRIVER (Fig. 5): full pipelined training of the 8-layer
+//! MLP on the synthetic teacher workload, sweeping all five
+//! weight-handling strategies and reporting the accuracy-vs-epoch curves
+//! plus the memory-footprint comparison. The recorded run lives in
+//! EXPERIMENTS.md.
+//!
+//! Run with:
+//!   cargo run --release --example fig5_strategies            # full (30 epochs)
+//!   cargo run --release --example fig5_strategies -- 8       # shorter
+//!
+//! All layers execute through AOT-compiled XLA artifacts whose matmuls
+//! are the L1 Pallas kernel; Python is not involved at runtime.
+
+use layerpipe2::config::ExperimentConfig;
+use layerpipe2::coordinator::{check_fig5_shape, Coordinator};
+use layerpipe2::metrics::write_csv;
+
+fn main() -> anyhow::Result<()> {
+    let epochs: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(30);
+
+    let mut cfg = match std::path::Path::new("configs/fig5.toml").exists() {
+        true => ExperimentConfig::load("configs/fig5.toml")?,
+        false => ExperimentConfig::default(),
+    };
+    cfg.epochs = epochs;
+    cfg.csv_out = None; // we write it ourselves below
+
+    let coordinator = Coordinator::new(cfg)?;
+    let result = coordinator.sweep()?;
+
+    // Accuracy curves, one row per epoch (the Fig. 5 series).
+    println!("\nepoch-by-epoch test accuracy:");
+    print!("{:>6}", "epoch");
+    for c in &result.curves {
+        print!("{:>14}", c.strategy);
+    }
+    println!();
+    let max_epochs = result.curves.iter().map(|c| c.epochs.len()).max().unwrap_or(0);
+    for e in 0..max_epochs {
+        print!("{e:>6}");
+        for c in &result.curves {
+            match c.epochs.get(e) {
+                Some(m) => print!("{:>14.4}", m.test_accuracy),
+                None => print!("{:>14}", "-"),
+            }
+        }
+        println!();
+    }
+
+    println!("\n{}", result.table());
+
+    // Memory footprint: the O(L·S) → O(L) claim.
+    println!("staleness-state memory (peak bytes):");
+    for c in &result.curves {
+        println!("  {:<16} {:>12}", c.strategy, c.peak_staleness_bytes());
+    }
+
+    write_csv("fig5_curves.csv", &result.curves)?;
+    println!("\nwrote fig5_curves.csv");
+
+    let problems = check_fig5_shape(&result);
+    if problems.is_empty() {
+        println!("fig5 shape: REPRODUCED — stashing tracks sequential, latest degrades,");
+        println!("pipeline-aware EMA recovers stashing-level accuracy at O(L) memory.");
+    } else {
+        println!("fig5 shape deviations:");
+        for p in &problems {
+            println!("  - {p}");
+        }
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Loads the AOT artifacts, derives the pipeline's delay structure via
+//! retiming, trains the proposed pipeline-aware EMA strategy for a few
+//! epochs against the sequential reference, and prints the comparison.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first).
+
+use layerpipe2::config::ExperimentConfig;
+use layerpipe2::coordinator::Coordinator;
+use layerpipe2::retiming::Derivation;
+use layerpipe2::strategy::StrategyKind;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The delay structure the paper derives (Eq. 1): per-layer
+    //    pipelining of an 8-layer network.
+    let stage_of: Vec<usize> = (0..8).collect();
+    let derivation = Derivation::derive(8, &stage_of)?;
+    derivation.verify()?;
+    println!("gradient delays Delay(l) = 2·S(l): {:?}", derivation.gradient_delay);
+
+    // 2. A short training comparison: sequential vs the proposed
+    //    pipeline-aware EMA reconstruction (no weight stashing).
+    let mut cfg = ExperimentConfig::default();
+    cfg.epochs = 5;
+    cfg.pipeline.warmup_epochs = 1;
+    cfg.strategies = vec![StrategyKind::Sequential, StrategyKind::PipelineAwareEma];
+
+    let coordinator = Coordinator::new(cfg)?;
+    let result = coordinator.sweep()?;
+    println!("\n{}", result.table());
+
+    let seq = result.curve(StrategyKind::Sequential).expect("sequential ran");
+    let ema = result.curve(StrategyKind::PipelineAwareEma).expect("ema ran");
+    println!(
+        "pipeline-aware EMA reaches {:.1}% of the sequential accuracy with {} B of staleness state",
+        100.0 * ema.final_accuracy() / seq.final_accuracy().max(1e-6),
+        ema.peak_staleness_bytes(),
+    );
+    Ok(())
+}

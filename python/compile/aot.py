@@ -1,0 +1,165 @@
+"""AOT compiler: lower every L2 entry point to HLO text + manifest.
+
+Runs once at build time (``make artifacts``); Python never touches the
+training path. The interchange format is HLO *text*, not a serialized
+``HloModuleProto``: jax >= 0.5 emits protos with 64-bit instruction ids
+that the Rust side's xla_extension 0.5.1 rejects, while the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts --preset small
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shape presets. ``small`` is the Fig. 5 experiment scale (DESIGN.md
+# substitutions: an 8-layer MLP giving the paper's 8 scheduling units);
+# ``tiny`` keeps python tests fast; ``paper`` is the throughput-model
+# scale used for VMEM/MXU estimates.
+PRESETS = {
+    "tiny": dict(batch=4, input_dim=8, hidden_dim=8, classes=4, layers=3),
+    "small": dict(batch=32, input_dim=64, hidden_dim=64, classes=16, layers=8),
+    "paper": dict(batch=128, input_dim=256, hidden_dim=512, classes=100, layers=8),
+}
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entries_for(cfg: dict):
+    """The artifact set: (name, python callable, example-arg specs)."""
+    b, d, h, c, layers = (
+        cfg["batch"],
+        cfg["input_dim"],
+        cfg["hidden_dim"],
+        cfg["classes"],
+        cfg["layers"],
+    )
+    assert layers >= 2
+
+    def fwd_relu(x, w, bb):
+        return model.dense_fwd(x, w, bb, relu=True)
+
+    def fwd_linear(x, w, bb):
+        return model.dense_fwd(x, w, bb, relu=False)
+
+    def bwd_relu(x, y, w, dy):
+        return model.dense_bwd(x, y, w, dy, relu=True)
+
+    ents = [
+        ("dense_fwd_in", fwd_relu, [f32(b, d), f32(d, h), f32(h)]),
+        ("dense_fwd_hid", fwd_relu, [f32(b, h), f32(h, h), f32(h)]),
+        ("dense_fwd_out", fwd_linear, [f32(b, h), f32(h, c), f32(c)]),
+        ("dense_bwd_in", bwd_relu, [f32(b, d), f32(b, h), f32(d, h), f32(b, h)]),
+        ("dense_bwd_hid", bwd_relu, [f32(b, h), f32(b, h), f32(h, h), f32(b, h)]),
+        ("dense_bwd_out", model.dense_bwd_linear, [f32(b, h), f32(h, c), f32(b, c)]),
+        ("loss_grad", model.loss_grad, [f32(b, c), f32(b, c)]),
+    ]
+
+    # Ablation artifact: the same hidden-layer forward lowered from the
+    # pure-jnp reference instead of the Pallas kernel. Used by the perf
+    # harness to quantify the interpret-mode lowering overhead on CPU
+    # (real-TPU Mosaic lowering does not pay it). Never on the train path.
+    def fwd_hid_jnp(x, w, bb):
+        from .kernels import ref
+
+        return (ref.dense_fwd_ref(x, w, bb, relu=True),)
+
+    ents.append(("ablation_fwd_hid_jnp", fwd_hid_jnp, [f32(b, h), f32(h, h), f32(h)]))
+
+    # Fused full-forward for evaluation: x + (w, b) per layer.
+    full_specs = [f32(b, d)]
+    for i in range(layers):
+        din = d if i == 0 else h
+        dout = c if i == layers - 1 else h
+        full_specs += [f32(din, dout), f32(dout)]
+    ents.append(("fwd_full", model.fwd_full, full_specs))
+    return ents
+
+
+def lower_entry(fn, specs):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    # Output arity = tuple length of an abstract eval.
+    out = jax.eval_shape(fn, *specs)
+    arity = len(out) if isinstance(out, tuple) else 1
+    return text, arity, out
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources, recorded for staleness checks."""
+    here = os.path.dirname(__file__)
+    paths = [
+        os.path.join(here, "model.py"),
+        os.path.join(here, "aot.py"),
+        os.path.join(here, "kernels", "matmul.py"),
+        os.path.join(here, "kernels", "ref.py"),
+    ]
+    hsh = hashlib.sha256()
+    for p in sorted(paths):
+        with open(p, "rb") as f:
+            hsh.update(f.read())
+    return hsh.hexdigest()[:16]
+
+
+def build(out_dir: str, preset: str) -> dict:
+    cfg = PRESETS[preset]
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "preset": preset,
+        "model": cfg,
+        "fingerprint": source_fingerprint(),
+        "entries": [],
+    }
+    for name, fn, specs in entries_for(cfg):
+        text, arity, out = lower_entry(fn, specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [list(s.shape) for s in specs],
+                "outputs": arity,
+                "output_shapes": [list(o.shape) for o in (out if isinstance(out, tuple) else (out,))],
+            }
+        )
+        print(f"  lowered {name}: {len(text)} chars, {len(specs)} inputs, {arity} outputs")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {out_dir}/manifest.json ({len(manifest['entries'])} entries)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="small", choices=sorted(PRESETS))
+    args = ap.parse_args()
+    build(args.out_dir, args.preset)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""L1: blocked Pallas matmul kernels (the training hot-spot).
+
+The paper's workload ran dense/conv compute through cuDNN on an RTX 3070
+Ti. The TPU rethink (DESIGN.md §Hardware-Adaptation): express the tiled
+matmul as a Pallas kernel whose ``BlockSpec`` grid encodes the HBM->VMEM
+schedule CUDA would express with threadblocks/shared memory, accumulating
+over the K grid axis in f32 with a ``@pl.when`` zero-init prologue and a
+fused bias(+ReLU) epilogue applied in VMEM on the last K step (avoiding
+an HBM round trip for the activation).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowers to plain HLO so
+the AOT artifacts are executable from the Rust runtime. Kernel structure
+(block shapes, VMEM footprint, MXU-friendly tiles) is what we optimize;
+interpret-mode wallclock is irrelevant.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tiles (128x128 systolic array). Clamped per-shape.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _block_dims(m: int, n: int, k: int,
+                bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                bk: int = DEFAULT_BK) -> tuple[int, int, int]:
+    """Clamp tile sizes to the problem, preferring exact divisors.
+
+    For paper-scale shapes (<=128 per dim) the tile covers the whole
+    operand and the grid is (1,1,1); for larger shapes we shrink to the
+    largest divisor <= the default tile so no masking is needed.
+    """
+
+    def clamp(dim: int, blk: int) -> int:
+        if dim <= blk:
+            return dim
+        b = blk
+        while dim % b != 0:
+            b -= 1
+        return b
+
+    return clamp(m, bm), clamp(n, bn), clamp(k, bk)
+
+
+def _make_kernel(k_steps: int, epilogue: str, with_bias: bool):
+    """Build the grid-step body.
+
+    The f32 output block doubles as the K-loop accumulator (zero-inited on
+    the first K step via ``@pl.when``); bias/ReLU fuse into the final K
+    step so the activation is produced in VMEM in one pass.
+    """
+
+    def body(*refs):
+        if with_bias:
+            x_ref, w_ref, b_ref, o_ref = refs
+        else:
+            (x_ref, w_ref, o_ref), b_ref = refs, None
+        kk = pl.program_id(2)
+
+        @pl.when(kk == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(
+            x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+        )
+
+        @pl.when(kk == k_steps - 1)
+        def _epilogue():
+            acc = o_ref[...]
+            if b_ref is not None:
+                acc = acc + b_ref[...][None, :]
+            if epilogue == "relu":
+                acc = jnp.maximum(acc, 0.0)
+            o_ref[...] = acc
+
+    return body
+
+
+def matmul_bias(x: jax.Array, w: jax.Array, b: jax.Array | None,
+                epilogue: str = "none") -> jax.Array:
+    """``x @ w (+ b)`` with optional fused ReLU, as a blocked Pallas call.
+
+    Args:
+      x: ``[m, k]`` input.
+      w: ``[k, n]`` weights.
+      b: ``[n]`` bias or ``None``.
+      epilogue: ``"none"`` or ``"relu"``.
+    """
+    if epilogue not in ("none", "relu"):
+        raise ValueError(f"unknown epilogue {epilogue!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {x.shape} @ {w.shape}")
+    if b is not None and b.shape != (n,):
+        raise ValueError(f"bias shape {b.shape} != ({n},)")
+
+    bm, bn, bk = _block_dims(m, n, k)
+    grid = (m // bm, n // bn, k // bk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    operands = [x, w]
+    if b is not None:
+        in_specs.append(pl.BlockSpec((bn,), lambda i, j, kk: (j,)))
+        operands.append(b)
+
+    return pl.pallas_call(
+        _make_kernel(grid[2], epilogue, with_bias=b is not None),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(*operands)
+
+
+@functools.partial(jax.jit, static_argnames=("epilogue",))
+def matmul(x: jax.Array, w: jax.Array, epilogue: str = "none") -> jax.Array:
+    """``x @ w`` with an optional fused ReLU epilogue (no bias)."""
+    return matmul_bias(x, w, None, epilogue=epilogue)
+
+
+def vmem_bytes(m: int, n: int, k: int) -> int:
+    """Estimated VMEM working set per grid step (DESIGN.md §Perf L1)."""
+    bm, bn, bk = _block_dims(m, n, k)
+    return 4 * (bm * bk + bk * bn + bm * bn + bn)
+
+
+def arithmetic_intensity(m: int, n: int, k: int) -> float:
+    """FLOPs per byte moved HBM->VMEM per grid step (MXU-bound when high)."""
+    bm, bn, bk = _block_dims(m, n, k)
+    flops = 2.0 * bm * bn * bk
+    bytes_moved = 4.0 * (bm * bk + bk * bn)
+    return flops / bytes_moved

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every compute graph in the artifact set.
+
+These are the correctness ground truth: pytest checks the Pallas kernels
+and the per-layer model functions against them (and against ``jax.grad``)
+before anything is lowered for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_ref(x, w, b=None, epilogue: str = "none"):
+    """Reference for kernels.matmul.matmul_bias."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b[None, :]
+    if epilogue == "relu":
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def dense_fwd_ref(x, w, b, relu: bool):
+    """Forward of one dense layer: ``act(x @ w + b)``."""
+    return matmul_bias_ref(x, w, b, "relu" if relu else "none")
+
+
+def dense_bwd_ref(x, y, w, dy, relu: bool):
+    """Backward of one dense layer given its saved input ``x``, saved
+    output ``y`` (for the ReLU mask), weights and upstream grad ``dy``.
+
+    Returns ``(dx, dw, db)``.
+    """
+    dz = jnp.where(y > 0, dy, 0.0) if relu else dy
+    dx = jnp.dot(dz, w.T)
+    dw = jnp.dot(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+def loss_grad_ref(logits, onehot):
+    """Mean softmax cross-entropy, gradient wrt logits, #correct rows.
+
+    ``onehot`` is the f32 one-hot label matrix (kept one-hot so the HLO
+    artifact avoids integer gathers).
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+    p = jnp.exp(logp)
+    dlogits = (p - onehot) / logits.shape[0]
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=-1) == jnp.argmax(onehot, axis=-1)).astype(
+            jnp.float32
+        )
+    )
+    return loss, dlogits, correct
+
+
+def mlp_loss_ref(params, x, onehot):
+    """End-to-end loss of the full MLP (for jax.grad cross-checks).
+
+    ``params`` is a list of ``(w, b)`` tuples; ReLU on all but the last.
+    """
+    h = x
+    for i, (w, b) in enumerate(params):
+        relu = i < len(params) - 1
+        h = dense_fwd_ref(h, w, b, relu)
+    loss, _, _ = loss_grad_ref(h, onehot)
+    return loss

@@ -1,0 +1,96 @@
+"""L2: per-layer JAX compute graphs of the training workload.
+
+Each function here is a *compilation unit*: ``aot.py`` lowers every entry
+point once, at fixed shapes, to HLO text that the Rust coordinator loads
+through PJRT. The functions call the L1 Pallas kernel
+(:mod:`compile.kernels.matmul`) for every matmul so the kernel lowers
+into the same HLO module.
+
+The per-layer split (rather than one fused train step) is what makes
+multistage pipelining possible at L3: the Rust trainer owns weights,
+stashes, EMA state and the delayed-gradient schedule, and invokes
+``dense_fwd_*`` / ``dense_bwd_*`` / ``loss_grad`` per stage per clock.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul_bias
+from .kernels import ref
+
+
+def dense_fwd(x, w, b, *, relu: bool):
+    """Forward of one dense layer: ``act(x @ w + b)``.
+
+    Returns a 1-tuple ``(y,)`` (all artifacts return tuples so the Rust
+    side can unwrap uniformly).
+    """
+    y = matmul_bias(x, w, b, epilogue="relu" if relu else "none")
+    return (y,)
+
+
+def dense_bwd(x, y, w, dy, *, relu: bool):
+    """Backward of one dense layer.
+
+    Args:
+      x: saved layer input (stashed at forward time by the L3 trainer).
+      y: saved layer output (ReLU mask source; ignored when linear).
+      w: the weight version *chosen by the weight-handling strategy* —
+         stashed, latest, or EMA-reconstructed (paper Fig. 5).
+      dy: upstream gradient.
+
+    Returns ``(dx, dw, db)``.
+    """
+    dz = jnp.where(y > 0, dy, 0.0) if relu else dy
+    dx = matmul_bias(dz, w.T, None)
+    dw = matmul_bias(x.T, dz, None)
+    db = jnp.sum(dz, axis=0)
+    return (dx, dw, db)
+
+
+def dense_bwd_linear(x, w, dy):
+    """Backward of the output (linear) layer — no saved output needed."""
+    dx = matmul_bias(dy, w.T, None)
+    dw = matmul_bias(x.T, dy, None)
+    db = jnp.sum(dy, axis=0)
+    return (dx, dw, db)
+
+
+def loss_grad(logits, onehot):
+    """Mean softmax cross-entropy + initial gradient + #correct.
+
+    Labels arrive one-hot (f32) to keep the artifact gather-free.
+    """
+    return ref.loss_grad_ref(logits, onehot)
+
+
+def fwd_full(x, *params_flat):
+    """Fused full-network forward (eval hot path).
+
+    ``params_flat`` is ``w0, b0, w1, b1, …``; ReLU on all but the last
+    layer. One artifact instead of L dispatches for test-set evaluation.
+    """
+    assert len(params_flat) % 2 == 0
+    layers = len(params_flat) // 2
+    h = x
+    for i in range(layers):
+        w, b = params_flat[2 * i], params_flat[2 * i + 1]
+        (h,) = dense_fwd(h, w, b, relu=i < layers - 1)
+    return (h,)
+
+
+def train_step_reference(params, x, onehot, lr):
+    """Fused sequential SGD step (reference/ablation artifact).
+
+    Used by tests to cross-check the L3 per-layer pipeline against a
+    monolithic jax.grad step, and by the sequential-throughput ablation.
+    Returns ``(loss, *new_params_flat)``.
+    """
+    loss, grads = jax.value_and_grad(ref.mlp_loss_ref)(params, x, onehot)
+    new_flat = []
+    for (w, b), (gw, gb) in zip(params, grads):
+        new_flat.append(w - lr * gw)
+        new_flat.append(b - lr * gb)
+    return (loss, *new_flat)

@@ -1,0 +1,74 @@
+"""AOT artifact generation: manifest integrity and HLO-text validity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build(out, "tiny")
+    return out, manifest
+
+
+def test_manifest_lists_all_entries(built):
+    out, manifest = built
+    names = {e["name"] for e in manifest["entries"]}
+    assert names == {
+        "dense_fwd_in", "dense_fwd_hid", "dense_fwd_out",
+        "dense_bwd_in", "dense_bwd_hid", "dense_bwd_out", "ablation_fwd_hid_jnp",
+        "loss_grad", "fwd_full",
+    }
+    with open(os.path.join(out, "manifest.json")) as f:
+        ondisk = json.load(f)
+    assert ondisk == manifest
+
+
+def test_hlo_files_exist_and_parse_as_hlo_text(built):
+    out, manifest = built
+    for e in manifest["entries"]:
+        path = os.path.join(out, e["file"])
+        assert os.path.exists(path), e["name"]
+        text = open(path).read()
+        assert text.startswith("HloModule"), e["name"]
+        assert "ENTRY" in text, e["name"]
+        # The rust CPU client cannot run custom-calls.
+        assert "custom-call" not in text, e["name"]
+
+
+def test_shapes_match_preset(built):
+    _, manifest = built
+    cfg = aot.PRESETS["tiny"]
+    by_name = {e["name"]: e for e in manifest["entries"]}
+    b, d, h, c = cfg["batch"], cfg["input_dim"], cfg["hidden_dim"], cfg["classes"]
+    assert by_name["dense_fwd_in"]["inputs"] == [[b, d], [d, h], [h]]
+    assert by_name["dense_fwd_hid"]["inputs"] == [[b, h], [h, h], [h]]
+    assert by_name["dense_fwd_out"]["inputs"] == [[b, h], [h, c], [c]]
+    assert by_name["loss_grad"]["inputs"] == [[b, c], [b, c]]
+    assert by_name["dense_bwd_hid"]["outputs"] == 3
+    # fwd_full: x + 2 tensors per layer.
+    assert len(by_name["fwd_full"]["inputs"]) == 1 + 2 * cfg["layers"]
+
+
+def test_output_shapes_recorded(built):
+    _, manifest = built
+    by_name = {e["name"]: e for e in manifest["entries"]}
+    cfg = aot.PRESETS["tiny"]
+    b, h, c = cfg["batch"], cfg["hidden_dim"], cfg["classes"]
+    assert by_name["dense_fwd_hid"]["output_shapes"] == [[b, h]]
+    assert by_name["loss_grad"]["output_shapes"] == [[], [b, c], []]
+
+
+def test_fingerprint_is_stable(built):
+    _, manifest = built
+    assert manifest["fingerprint"] == aot.source_fingerprint()
+    assert len(manifest["fingerprint"]) == 16
+
+
+def test_rejects_unknown_preset():
+    with pytest.raises(KeyError):
+        aot.build("/tmp/nonexistent_out", "huge")

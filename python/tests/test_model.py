@@ -1,0 +1,156 @@
+"""L2 correctness: per-layer fwd/bwd graphs vs jax.grad ground truth.
+
+The pipelined trainer composes per-layer artifacts; these tests prove
+that composition is *exactly* backpropagation when no delay is applied —
+the invariant that makes the sequential strategy a true reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_params(key, dims):
+    params = []
+    for i in range(len(dims) - 1):
+        key, k1, k2 = jax.random.split(key, 3)
+        params.append((
+            jax.random.normal(k1, (dims[i], dims[i + 1])) / np.sqrt(dims[i]),
+            jax.random.normal(k2, (dims[i + 1],)) * 0.01,
+        ))
+    return params
+
+
+def onehot(labels, classes):
+    return jax.nn.one_hot(labels, classes, dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(7)
+    dims = [8, 16, 12, 6]
+    params = make_params(key, dims)
+    x = jax.random.normal(jax.random.PRNGKey(1), (10, 8))
+    y = onehot(jnp.arange(10) % 6, 6)
+    return params, x, y
+
+
+def test_per_layer_fwd_matches_ref(setup):
+    params, x, _ = setup
+    h = x
+    for i, (w, b) in enumerate(params):
+        relu = i < len(params) - 1
+        (got,) = model.dense_fwd(h, w, b, relu=relu)
+        want = ref.dense_fwd_ref(h, w, b, relu)
+        np.testing.assert_allclose(np.array(got), np.array(want),
+                                   atol=1e-5, rtol=1e-5)
+        h = want
+
+
+def test_fwd_full_equals_layer_chain(setup):
+    params, x, _ = setup
+    flat = [t for wb in params for t in wb]
+    (full,) = model.fwd_full(x, *flat)
+    h = x
+    for i, (w, b) in enumerate(params):
+        (h,) = model.dense_fwd(h, w, b, relu=i < len(params) - 1)
+    np.testing.assert_allclose(np.array(full), np.array(h),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_composed_backward_equals_jax_grad(setup):
+    """Chain loss_grad + per-layer dense_bwd and compare every dW, db
+    against jax.grad of the monolithic loss."""
+    params, x, y = setup
+    L = len(params)
+
+    # Forward, saving (input, output) per layer like the Rust trainer.
+    saved = []
+    h = x
+    for i, (w, b) in enumerate(params):
+        (out,) = model.dense_fwd(h, w, b, relu=i < L - 1)
+        saved.append((h, out))
+        h = out
+
+    loss, dlogits, _ = model.loss_grad(h, y)
+
+    # Backward chain.
+    grads = [None] * L
+    dy = dlogits
+    for i in reversed(range(L)):
+        xin, yout = saved[i]
+        w, b = params[i]
+        if i == L - 1:
+            dx, dw, db = model.dense_bwd_linear(xin, w, dy)
+        else:
+            dx, dw, db = model.dense_bwd(xin, yout, w, dy, relu=True)
+        grads[i] = (dw, db)
+        dy = dx
+
+    ref_loss, ref_grads = jax.value_and_grad(ref.mlp_loss_ref)(params, x, y)
+    np.testing.assert_allclose(float(loss), float(ref_loss), rtol=1e-5)
+    for i in range(L):
+        np.testing.assert_allclose(np.array(grads[i][0]), np.array(ref_grads[i][0]),
+                                   atol=1e-5, rtol=1e-4, err_msg=f"dW layer {i}")
+        np.testing.assert_allclose(np.array(grads[i][1]), np.array(ref_grads[i][1]),
+                                   atol=1e-5, rtol=1e-4, err_msg=f"db layer {i}")
+
+
+@settings(max_examples=15, deadline=None)
+@given(batch=st.integers(2, 16), din=st.integers(2, 24),
+       dout=st.integers(2, 24), seed=st.integers(0, 2**31 - 1),
+       relu=st.booleans())
+def test_dense_bwd_matches_vjp(batch, din, dout, seed, relu):
+    """Property: per-layer backward == jax.vjp of the forward, for any
+    shape — including the ReLU mask path through the saved output."""
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    x = jax.random.normal(k1, (batch, din))
+    w = jax.random.normal(k2, (din, dout)) / np.sqrt(din)
+    b = jax.random.normal(k3, (dout,)) * 0.1
+    dy = jax.random.normal(k4, (batch, dout))
+
+    def f(x, w, b):
+        return ref.dense_fwd_ref(x, w, b, relu)
+
+    y, vjp = jax.vjp(f, x, w, b)
+    want_dx, want_dw, want_db = vjp(dy)
+    if relu:
+        got_dx, got_dw, got_db = model.dense_bwd(x, y, w, dy, relu=True)
+    else:
+        got_dx, got_dw, got_db = model.dense_bwd_linear(x, w, dy)
+    np.testing.assert_allclose(np.array(got_dx), np.array(want_dx), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.array(got_dw), np.array(want_dw), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.array(got_db), np.array(want_db), atol=1e-4, rtol=1e-4)
+
+
+def test_loss_grad_correct_count_and_fd():
+    logits = jnp.array([[5.0, 0.0, 0.0], [0.0, 5.0, 0.0], [0.0, 0.1, 5.0]])
+    y = onehot(jnp.array([0, 1, 1]), 3)
+    loss, dlogits, correct = model.loss_grad(logits, y)
+    assert float(correct) == 2.0
+    # Finite-difference check of dlogits.
+    eps = 1e-3
+    g = np.array(dlogits)
+    for i in range(3):
+        for j in range(3):
+            lp = logits.at[i, j].add(eps)
+            lm = logits.at[i, j].add(-eps)
+            fd = (float(model.loss_grad(lp, y)[0]) -
+                  float(model.loss_grad(lm, y)[0])) / (2 * eps)
+            assert abs(fd - g[i, j]) < 1e-3
+
+
+def test_train_step_reference_reduces_loss(setup):
+    params, x, y = setup
+    out = model.train_step_reference(params, x, y, 0.5)
+    loss0 = float(out[0])
+    flat = out[1:]
+    new_params = [(flat[2 * i], flat[2 * i + 1]) for i in range(len(params))]
+    loss1 = float(ref.mlp_loss_ref(new_params, x, y))
+    assert loss1 < loss0

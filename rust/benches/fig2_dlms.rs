@@ -1,0 +1,59 @@
+//! FIG2 bench: delayed-LMS adaptation (paper Fig. 2 / §III-A).
+//!
+//! Regenerates the figure's series: convergence behaviour vs update
+//! delay M, plus the delay-tightened stability boundary, plus raw
+//! simulator throughput. Paper shape to hold: convergence survives
+//! moderate delay, slows as M grows, and diverges past the μ bound.
+
+use layerpipe2::bench_util::{bench, print_header, print_row, print_table};
+use layerpipe2::dlms::{convergence_time, run, stable_mu_bound, DlmsConfig};
+
+fn main() {
+    // --- series 1: convergence vs delay --------------------------------
+    let mut rows = Vec::new();
+    for delay in [0usize, 1, 2, 4, 8, 16, 32, 64] {
+        let cfg = DlmsConfig { delay, mu: 0.01, ..Default::default() };
+        let r = run(&cfg);
+        rows.push(vec![
+            delay.to_string(),
+            format!("{:.3e}", r.misalignment),
+            format!("{:.3e}", r.steady_state_mse),
+            convergence_time(&r.mse_curve, 1e-3)
+                .map(|t| t.to_string())
+                .unwrap_or_else(|| "never".into()),
+            r.converged.to_string(),
+        ]);
+    }
+    print_table(
+        "FIG2a: DLMS convergence vs delay (16-tap FIR, mu=0.01)",
+        &["delay M", "misalignment", "steady MSE", "conv@1e-3", "stable"],
+        &rows,
+    );
+
+    // --- series 2: stability boundary vs delay -------------------------
+    let mut rows = Vec::new();
+    for delay in [0usize, 4, 16, 64] {
+        let bound = stable_mu_bound(16, delay, 1.0);
+        let at_half = run(&DlmsConfig { delay, mu: 0.5 * bound, samples: 30_000, ..Default::default() });
+        let at_2x = run(&DlmsConfig { delay, mu: 2.0 * bound, samples: 30_000, ..Default::default() });
+        rows.push(vec![
+            delay.to_string(),
+            format!("{bound:.4}"),
+            (at_half.converged && at_half.steady_state_mse < 1e-2).to_string(),
+            (!(at_2x.converged && at_2x.steady_state_mse < 1e-2)).to_string(),
+        ]);
+    }
+    print_table(
+        "FIG2b: stability boundary (stable at mu/2, diverges at 2mu)",
+        &["delay M", "mu bound", "stable@0.5x", "unstable@2x"],
+        &rows,
+    );
+
+    // --- timing ---------------------------------------------------------
+    print_header("FIG2 timing: simulator throughput");
+    for delay in [0usize, 16, 64] {
+        let cfg = DlmsConfig { delay, samples: 20_000, ..Default::default() };
+        let s = bench(&format!("dlms_20k_samples/delay={delay}"), 1, 10, || run(&cfg));
+        print_row(&s);
+    }
+}

@@ -1,0 +1,54 @@
+//! FIG3 bench: per-layer retiming derivation (paper Fig. 3, Eq. 1).
+//!
+//! Regenerates the per-layer delay table for increasing depths, checks
+//! the closed form `Delay(l) = 2·S(l)` and the stepwise==closed-form
+//! equivalence at every depth, and times the derivation engine.
+
+use layerpipe2::bench_util::{bench, print_header, print_row, print_table};
+use layerpipe2::retiming::{delay_formula, Derivation};
+use layerpipe2::schedule::Schedule;
+use layerpipe2::retiming::StagePartition;
+
+fn main() {
+    // --- per-layer delays across depths (the Fig. 3 structure) ---------
+    let mut rows = Vec::new();
+    for layers in [3usize, 4, 6, 8, 12] {
+        let stage_of: Vec<usize> = (0..layers).collect();
+        let d = Derivation::derive(layers, &stage_of).expect("derive");
+        d.verify().expect("Eq.1 verification");
+        let s = Derivation::derive_stepwise(layers, &stage_of).expect("stepwise");
+        assert_eq!(d.gradient_delay, s.gradient_delay, "stepwise == closed form");
+        // Cross-check against the schedule simulation (independent path).
+        let p = StagePartition::even(layers, layers).unwrap();
+        let sched = Schedule::build(&p, 64);
+        let observed: Vec<usize> = (0..layers)
+            .map(|l| sched.observed_staleness()[p.stage_of()[l]])
+            .collect();
+        assert_eq!(observed, delay_formula(&stage_of), "schedule agrees");
+        rows.push(vec![
+            layers.to_string(),
+            format!("{:?}", d.gradient_delay),
+            format!("{:?}", d.act_stash_depth),
+            "yes".into(),
+        ]);
+    }
+    print_table(
+        "FIG3: Delay(l)=2S(l) per depth (retiming == stepwise == schedule)",
+        &["layers", "gradient delays", "act-stash depths", "verified"],
+        &rows,
+    );
+
+    // --- timing ---------------------------------------------------------
+    print_header("FIG3 timing: derivation engine");
+    for layers in [8usize, 32, 128] {
+        let stage_of: Vec<usize> = (0..layers).collect();
+        let s = bench(&format!("derive_closed_form/L={layers}"), 2, 20, || {
+            Derivation::derive(layers, &stage_of).unwrap()
+        });
+        print_row(&s);
+        let s = bench(&format!("derive_stepwise/L={layers}"), 2, 20, || {
+            Derivation::derive_stepwise(layers, &stage_of).unwrap()
+        });
+        print_row(&s);
+    }
+}

@@ -1,0 +1,57 @@
+//! FIG4 bench: grouped multistage pipelining (paper Fig. 4 / §III-C).
+//!
+//! Regenerates the grouped-stage delay assignments: all layers in a
+//! group share one delay, determined by downstream *stages* not layers,
+//! across group shapes; and shows the delay/memory tradeoff of grouping.
+
+use layerpipe2::bench_util::{bench, print_header, print_row, print_table};
+use layerpipe2::retiming::{Derivation, StagePartition};
+
+fn main() {
+    // --- grouped delay assignments (Fig. 4 shape) -----------------------
+    let mut rows = Vec::new();
+    for (label, sizes) in [
+        ("8x1 (per-layer)", vec![1usize; 8]),
+        ("4x2 (pairs)", vec![2; 4]),
+        ("2x4", vec![4; 2]),
+        ("mixed 3+2+2+1", vec![3, 2, 2, 1]),
+        ("1x8 (sequential)", vec![8]),
+    ] {
+        let p = StagePartition::from_group_sizes(&sizes).unwrap();
+        let d = Derivation::derive(p.layers(), p.stage_of()).unwrap();
+        d.verify().unwrap();
+        // Within-group uniformity: the §III-C claim.
+        for s in 0..p.stages() {
+            let dl: Vec<usize> = p
+                .layers_in_stage(s)
+                .into_iter()
+                .map(|l| d.gradient_delay[l])
+                .collect();
+            assert!(dl.windows(2).all(|w| w[0] == w[1]), "group {s} delays differ: {dl:?}");
+        }
+        let total_delay: usize = d.gradient_delay.iter().sum();
+        rows.push(vec![
+            label.to_string(),
+            p.stages().to_string(),
+            format!("{:?}", d.gradient_delay),
+            total_delay.to_string(),
+        ]);
+    }
+    print_table(
+        "FIG4: grouped-stage delays (identical within each group)",
+        &["partition", "stages", "per-layer delays", "total stash depth"],
+        &rows,
+    );
+
+    // --- timing over random partitions ----------------------------------
+    print_header("FIG4 timing: derivation over grouped partitions");
+    for (name, sizes) in [("4x2", vec![2usize; 4]), ("8x4", vec![4; 8]), ("16x4", vec![4; 16])] {
+        let p = StagePartition::from_group_sizes(&sizes).unwrap();
+        let stage_of = p.stage_of().to_vec();
+        let layers = p.layers();
+        let s = bench(&format!("derive_grouped/{name}"), 2, 20, || {
+            Derivation::derive(layers, &stage_of).unwrap()
+        });
+        print_row(&s);
+    }
+}

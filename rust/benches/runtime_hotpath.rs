@@ -1,0 +1,93 @@
+//! HOTPATH bench: L3 runtime overhead on the request path.
+//!
+//! The perf deliverable's measurement harness: per-artifact dispatch
+//! latency (host→literal→execute→host), the full per-layer train
+//! iteration, and the fused-vs-chained forward comparison that motivates
+//! the `fwd_full` artifact. Requires `make artifacts`.
+
+use layerpipe2::bench_util::{bench, print_header, print_row};
+use layerpipe2::config::ExperimentConfig;
+use layerpipe2::data::teacher_dataset;
+use layerpipe2::model::Mlp;
+use layerpipe2::runtime::Engine;
+use layerpipe2::strategy::StrategyKind;
+use layerpipe2::tensor::Tensor;
+use layerpipe2::train::Trainer;
+use layerpipe2::util::Rng;
+
+fn main() {
+    let engine = Engine::load("artifacts").expect("make artifacts first");
+    let m = engine.manifest().model.clone();
+    let cfg = layerpipe2::config::ModelConfig {
+        batch: m.batch,
+        input_dim: m.input_dim,
+        hidden_dim: m.hidden_dim,
+        classes: m.classes,
+        layers: m.layers,
+        init_scale: 1.0,
+    };
+    let mut rng = Rng::new(9);
+    let mlp = Mlp::init(&cfg, &mut rng);
+    let x = Tensor::randn(&[m.batch, m.input_dim], 1.0, &mut rng);
+    let h = Tensor::randn(&[m.batch, m.hidden_dim], 1.0, &mut rng);
+    let w = Tensor::randn(&[m.hidden_dim, m.hidden_dim], 0.2, &mut rng);
+    let b = Tensor::randn(&[m.hidden_dim], 0.1, &mut rng);
+    let dy = Tensor::randn(&[m.batch, m.hidden_dim], 1.0, &mut rng);
+
+    print_header("HOTPATH: single-artifact dispatch latency");
+    print_row(&bench("dense_fwd_hid (32x64x64 + bias + relu)", 20, 200, || {
+        engine.run("dense_fwd_hid", &[&h, &w, &b]).unwrap()
+    }));
+    let y = engine.run("dense_fwd_hid", &[&h, &w, &b]).unwrap().remove(0);
+    print_row(&bench("dense_bwd_hid (dx,dw,db)", 20, 200, || {
+        engine.run("dense_bwd_hid", &[&h, &y, &w, &dy]).unwrap()
+    }));
+    print_row(&bench("fwd_full (8 layers fused)", 20, 200, || {
+        mlp.forward_full(&engine, &x).unwrap()
+    }));
+    print_row(&bench("fwd chained (8 dispatches)", 20, 200, || {
+        let mut hh = x.clone();
+        for l in 0..cfg.layers {
+            hh = mlp.forward_layer(&engine, l, &hh).unwrap();
+        }
+        hh
+    }));
+    // Ablation: the same layer lowered from plain jnp instead of the
+    // interpret-mode Pallas kernel — quantifies the interpret-lowering
+    // overhead the CPU backend pays for the kernel path (a real-TPU
+    // Mosaic build would not).
+    if engine.get("ablation_fwd_hid_jnp").is_ok() {
+        print_row(&bench("ablation: fwd_hid lowered from jnp", 20, 200, || {
+            engine.run("ablation_fwd_hid_jnp", &[&h, &w, &b]).unwrap()
+        }));
+    }
+
+    print_header("HOTPATH: full pipelined train iteration (8 stages)");
+    let mut ecfg = ExperimentConfig::default();
+    ecfg.epochs = 1;
+    ecfg.data.train_samples = 512;
+    ecfg.data.test_samples = 256;
+    let data = teacher_dataset(&ecfg.model, &ecfg.data);
+    for kind in [
+        StrategyKind::Sequential,
+        StrategyKind::Stashing,
+        StrategyKind::PipelineAwareEma,
+    ] {
+        let mut trng = Rng::new(1);
+        let mut trainer = Trainer::new(&engine, &ecfg, kind, &mut trng).unwrap();
+        let (xb, oh) = data.train.batch(&(0..ecfg.model.batch).collect::<Vec<_>>());
+        // Prime the pipeline so steady-state iterations do fwd+bwd work.
+        for _ in 0..16 {
+            trainer.iteration(Some((xb.clone(), oh.clone()))).unwrap();
+        }
+        let s = bench(&format!("train_iteration/{}", kind.name()), 5, 100, || {
+            trainer.iteration(Some((xb.clone(), oh.clone()))).unwrap()
+        });
+        print_row(&s);
+    }
+
+    println!(
+        "\nexec count served by engine this run: {} (dispatch bookkeeping works)",
+        engine.exec_count()
+    );
+}

@@ -1,0 +1,123 @@
+//! THRU bench: pipeline throughput & utilization (LayerPipe's headline,
+//! reaffirmed in §IV-D) — both the analytic schedule model and the real
+//! threaded runtime over XLA artifacts.
+//!
+//! Paper shape to hold: speedup grows with stage count, bounded by the
+//! bottleneck stage; utilization stays high for balanced partitions;
+//! communication volume grows with boundaries. Requires `make artifacts`.
+
+use layerpipe2::bench_util::print_table;
+use layerpipe2::model::Mlp;
+use layerpipe2::pipeline::{forward_sequential, forward_throughput};
+use layerpipe2::retiming::StagePartition;
+use layerpipe2::runtime::Engine;
+use layerpipe2::schedule::{evaluate, CostModel};
+use layerpipe2::tensor::Tensor;
+use layerpipe2::util::Rng;
+use std::sync::Arc;
+
+fn main() {
+    // --- analytic model: speedup/utilization/comm vs stages -------------
+    let layers = 8;
+    let mut cost = CostModel::uniform(layers);
+    cost.boundary_bytes = 32 * 64 * 4; // batch x hidden f32 activations
+    let mut rows = Vec::new();
+    for stages in [1usize, 2, 4, 8] {
+        let p = StagePartition::even(layers, stages).unwrap();
+        let perf = evaluate(&p, &cost, 10_000);
+        rows.push(vec![
+            stages.to_string(),
+            format!("{:.2}x", perf.speedup),
+            format!("{:.3}", perf.mean_utilization),
+            format!("{:.1}", perf.comm_bytes as f64 / 1e6),
+            format!("{:.1}", perf.bottleneck_cost),
+        ]);
+    }
+    print_table(
+        "THRU-a: analytic schedule model (8 uniform layers, 10k batches)",
+        &["stages", "speedup", "utilization", "comm MB", "bottleneck"],
+        &rows,
+    );
+
+    // --- unbalanced partitions: bottleneck caps speedup ----------------
+    let mut skew = CostModel::uniform(8);
+    skew.fwd[4] = 4.0;
+    skew.bwd[4] = 8.0;
+    let mut rows = Vec::new();
+    for stages in [2usize, 4, 8] {
+        let p = StagePartition::even(8, stages).unwrap();
+        let perf = evaluate(&p, &skew, 10_000);
+        rows.push(vec![
+            stages.to_string(),
+            format!("{:.2}x", perf.speedup),
+            format!("{:.3}", perf.mean_utilization),
+        ]);
+    }
+    print_table(
+        "THRU-b: skewed layer 4 at 4x cost (bottleneck-capped speedup)",
+        &["stages", "speedup", "utilization"],
+        &rows,
+    );
+
+    // --- multiprocessor assignment: LPT vs contiguous -------------------
+    // (the LayerPipe multiprocessor-scheduling axis: balance vs locality)
+    use layerpipe2::schedule::{assign_contiguous, assign_lpt, simulate_multiproc};
+    let mut skew2 = CostModel::uniform(8);
+    skew2.fwd[1] = 3.0;
+    skew2.bwd[1] = 6.0;
+    skew2.fwd[6] = 2.0;
+    skew2.bwd[6] = 4.0;
+    let p8 = StagePartition::even(8, 8).unwrap();
+    let mut rows = Vec::new();
+    for procs in [2usize, 4, 8] {
+        let lpt = simulate_multiproc(&p8, &skew2, &assign_lpt(&p8, &skew2, procs), 10_000);
+        let con = simulate_multiproc(&p8, &skew2, &assign_contiguous(&p8, procs), 10_000);
+        rows.push(vec![
+            procs.to_string(),
+            format!("{:.2}x / {}", lpt.speedup, lpt.remote_boundaries),
+            format!("{:.2}x / {}", con.speedup, con.remote_boundaries),
+        ]);
+    }
+    print_table(
+        "THRU-d: processor assignment on skewed layers (speedup / remote boundaries)",
+        &["procs", "LPT (balance)", "contiguous (locality)"],
+        &rows,
+    );
+
+    // --- real threaded pipeline over XLA artifacts ----------------------
+    let engine = Arc::new(Engine::load("artifacts").expect("make artifacts first"));
+    let m = engine.manifest().model.clone();
+    let cfg = layerpipe2::config::ModelConfig {
+        batch: m.batch,
+        input_dim: m.input_dim,
+        hidden_dim: m.hidden_dim,
+        classes: m.classes,
+        layers: m.layers,
+        init_scale: 1.0,
+    };
+    let mut rng = Rng::new(3);
+    let mlp = Mlp::init(&cfg, &mut rng);
+    let inputs: Vec<Tensor> =
+        (0..8).map(|_| Tensor::randn(&[m.batch, m.input_dim], 1.0, &mut rng)).collect();
+    let batches = 300;
+    let seq = forward_sequential(&engine, &mlp, &inputs, batches).unwrap();
+    let mut rows = vec![vec![
+        "sequential(1 thread)".to_string(),
+        format!("{:.0}", seq.batches_per_sec),
+        "1.00x".to_string(),
+    ]];
+    for stages in [2usize, 4, 8] {
+        let p = StagePartition::even(m.layers, stages).unwrap();
+        let r = forward_throughput(&engine, &mlp, &p, inputs.clone(), batches, 4).unwrap();
+        rows.push(vec![
+            format!("pipeline({stages} stages)"),
+            format!("{:.0}", r.batches_per_sec),
+            format!("{:.2}x", r.batches_per_sec / seq.batches_per_sec),
+        ]);
+    }
+    print_table(
+        "THRU-c: threaded pipeline on real XLA compute (300 batches)",
+        &["configuration", "batches/s", "speedup"],
+        &rows,
+    );
+}

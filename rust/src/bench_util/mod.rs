@@ -1,0 +1,131 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timed runs with mean/median/stddev, and a
+//! fixed-width table printer used by every `rust/benches/*.rs` target
+//! (all declared `harness = false`). Output format is stable so
+//! `bench_output.txt` diffs cleanly across runs.
+
+use crate::util::timer::fmt_duration;
+use std::time::Instant;
+
+/// Summary statistics of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    pub fn throughput(&self, items_per_run: f64) -> f64 {
+        items_per_run / self.mean_s
+    }
+}
+
+/// Time `f` for `samples` runs after `warmup` unmeasured runs.
+pub fn bench<T>(name: &str, warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    assert!(samples >= 1);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / samples as f64;
+    let median = times[samples / 2];
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / samples as f64;
+    BenchStats {
+        name: name.to_string(),
+        samples,
+        mean_s: mean,
+        median_s: median,
+        stddev_s: var.sqrt(),
+        min_s: times[0],
+        max_s: times[samples - 1],
+    }
+}
+
+/// Print a stats row (pair with [`print_header`]).
+pub fn print_row(s: &BenchStats) {
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10} {:>6}",
+        s.name,
+        fmt_duration(s.mean_s),
+        fmt_duration(s.median_s),
+        fmt_duration(s.min_s),
+        fmt_duration(s.max_s),
+        s.samples
+    );
+}
+
+pub fn print_header(title: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10} {:>6}",
+        "case", "mean", "median", "min", "max", "n"
+    );
+}
+
+/// Print an arbitrary table: header + rows of equal arity, auto-width.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let cols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), cols, "row arity mismatch");
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let fmt_row = |cells: Vec<String>| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i] + 2))
+            .collect::<String>()
+    };
+    println!("{}", fmt_row(header.iter().map(|s| s.to_string()).collect()));
+    for row in rows {
+        println!("{}", fmt_row(row.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let s = bench("noop", 1, 5, || 1 + 1);
+        assert_eq!(s.samples, 5);
+        assert!(s.mean_s >= 0.0 && s.min_s <= s.median_s && s.median_s <= s.max_s);
+    }
+
+    #[test]
+    fn throughput_inverts_mean() {
+        let s = BenchStats {
+            name: "x".into(),
+            samples: 1,
+            mean_s: 0.5,
+            median_s: 0.5,
+            stddev_s: 0.0,
+            min_s: 0.5,
+            max_s: 0.5,
+        };
+        assert_eq!(s.throughput(10.0), 20.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_checks_arity() {
+        print_table("t", &["a", "b"], &[vec!["1".into()]]);
+    }
+}

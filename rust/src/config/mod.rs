@@ -1,0 +1,366 @@
+//! Experiment configuration system.
+//!
+//! [`toml`] is a TOML-subset parser (sections, `key = value` with strings,
+//! ints, floats, bools, and homogeneous arrays — the subset every config in
+//! `configs/` uses; serde/toml crates are unavailable offline). The typed
+//! layer ([`ExperimentConfig`] et al.) validates and defaults every field,
+//! so binaries fail fast with a readable message instead of panicking deep
+//! in a run.
+
+pub mod toml;
+
+use crate::strategy::StrategyKind;
+use anyhow::{bail, Context, Result};
+use toml::TomlDoc;
+
+/// Shape preset shared with the Python AOT compiler. Must match a manifest
+/// produced by `python -m compile.aot --preset <name>`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Batch size (fixed at lowering time).
+    pub batch: usize,
+    /// Input feature dimension.
+    pub input_dim: usize,
+    /// Hidden width (all hidden layers share it so one artifact serves all).
+    pub hidden_dim: usize,
+    /// Number of classes.
+    pub classes: usize,
+    /// Total dense layers, input and output layers included (≥ 2).
+    pub layers: usize,
+    /// Parameter-init scale multiplier on He init.
+    pub init_scale: f32,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        // The `small` preset: an 8-layer MLP giving the paper's 8
+        // forward-backward scheduling units (see DESIGN.md substitutions).
+        ModelConfig {
+            batch: 32,
+            input_dim: 64,
+            hidden_dim: 64,
+            classes: 16,
+            layers: 8,
+            init_scale: 1.0,
+        }
+    }
+}
+
+impl ModelConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.layers < 2 {
+            bail!("model.layers must be >= 2 (input + output), got {}", self.layers);
+        }
+        for (name, v) in [
+            ("batch", self.batch),
+            ("input_dim", self.input_dim),
+            ("hidden_dim", self.hidden_dim),
+            ("classes", self.classes),
+        ] {
+            if v == 0 {
+                bail!("model.{name} must be positive");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Optimizer hyper-parameters (paper §IV-A: SGD momentum + weight decay,
+/// cosine-annealed lr starting at 0.1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OptimConfig {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// `true` → cosine annealing over the full training horizon.
+    pub cosine: bool,
+    /// Floor for the cosine schedule.
+    pub min_lr: f32,
+}
+
+impl Default for OptimConfig {
+    fn default() -> Self {
+        // The paper trains ResNet-18 with lr 0.1 / momentum 0.9. On this
+        // substitute workload the same settings put delayed-gradient
+        // training past the DLMS stability bound at the deepest delay
+        // (2·(8−1) = 14), so the *stashing baseline itself* diverges.
+        // lr 0.05 / momentum 0.7 is the regime that reproduces the
+        // paper's Fig. 5 contrast: stashing converges, latest-weight
+        // degrades, EMA reconstruction recovers (see DESIGN.md
+        // substitutions; all strategies share these settings).
+        OptimConfig { lr: 0.05, momentum: 0.7, weight_decay: 5e-4, cosine: true, min_lr: 1e-4 }
+    }
+}
+
+impl OptimConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !(self.lr > 0.0) {
+            bail!("optim.lr must be > 0, got {}", self.lr);
+        }
+        if !(0.0..1.0).contains(&self.momentum) {
+            bail!("optim.momentum must be in [0,1), got {}", self.momentum);
+        }
+        if self.weight_decay < 0.0 {
+            bail!("optim.weight_decay must be >= 0");
+        }
+        Ok(())
+    }
+}
+
+/// Pipeline shape: how layers are grouped into stages.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PipelineConfig {
+    /// Number of pipeline stages. Layers are partitioned contiguously and
+    /// as evenly as possible; `stages == layers` is the per-layer case.
+    pub stages: usize,
+    /// EMA warm-up in epochs before reconstruction is trusted (paper: 2).
+    pub warmup_epochs: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        // warmup_epochs = 0: the paper describes a 2-epoch warm-up during
+        // which the EMA stabilizes before being trusted, with latest
+        // weights used meanwhile. On this workload the latest-weight
+        // fallback is itself unstable, and it turns out the warm-up is
+        // structurally unnecessary: Eq. 7's β(n)=n/(n+1) ramp *is* a
+        // warm-up (exact cumulative mean during pipeline fill), and with
+        // update-aware lr_sum accounting (train/mod.rs) reconstruction is
+        // near-exact from the first delayed backward. The ablation bench
+        // sweeps warmup ∈ {0,1,2} to document this.
+        PipelineConfig { stages: 8, warmup_epochs: 0 }
+    }
+}
+
+/// Synthetic-dataset parameters (the CIFAR-100 substitute; DESIGN.md).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataConfig {
+    pub train_samples: usize,
+    pub test_samples: usize,
+    /// Hidden width of the teacher MLP that labels the data.
+    pub teacher_hidden: usize,
+    /// Fraction of labels resampled uniformly (label noise).
+    pub label_noise: f64,
+    pub seed: u64,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig {
+            train_samples: 4096,
+            test_samples: 1024,
+            teacher_hidden: 48,
+            label_noise: 0.05,
+            seed: 1234,
+        }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    pub model: ModelConfig,
+    pub optim: OptimConfig,
+    pub pipeline: PipelineConfig,
+    pub data: DataConfig,
+    pub epochs: usize,
+    pub seed: u64,
+    /// Which weight-handling strategies a sweep covers.
+    pub strategies: Vec<StrategyKind>,
+    /// Directory with `manifest.json` + `*.hlo.txt`.
+    pub artifacts_dir: String,
+    /// Optional CSV output path for per-epoch metrics.
+    pub csv_out: Option<String>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            model: ModelConfig::default(),
+            optim: OptimConfig::default(),
+            pipeline: PipelineConfig::default(),
+            data: DataConfig::default(),
+            epochs: 12,
+            seed: 7,
+            strategies: StrategyKind::all().to_vec(),
+            artifacts_dir: "artifacts".to_string(),
+            csv_out: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn validate(&self) -> Result<()> {
+        self.model.validate()?;
+        self.optim.validate()?;
+        if self.pipeline.stages == 0 {
+            bail!("pipeline.stages must be positive");
+        }
+        if self.pipeline.stages > self.model.layers {
+            bail!(
+                "pipeline.stages ({}) cannot exceed model.layers ({})",
+                self.pipeline.stages,
+                self.model.layers
+            );
+        }
+        if self.epochs == 0 {
+            bail!("epochs must be positive");
+        }
+        if self.strategies.is_empty() {
+            bail!("at least one strategy required");
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML file, overlaying defaults.
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Self::from_toml_str(&text).with_context(|| format!("parsing config {path}"))
+    }
+
+    /// Parse from TOML text, overlaying defaults.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut c = ExperimentConfig::default();
+
+        if let Some(v) = doc.get_usize("", "epochs")? {
+            c.epochs = v;
+        }
+        if let Some(v) = doc.get_u64("", "seed")? {
+            c.seed = v;
+        }
+        if let Some(v) = doc.get_str("", "artifacts_dir")? {
+            c.artifacts_dir = v;
+        }
+        if let Some(v) = doc.get_str("", "csv_out")? {
+            c.csv_out = Some(v);
+        }
+        if let Some(items) = doc.get_str_array("", "strategies")? {
+            c.strategies = items
+                .iter()
+                .map(|s| StrategyKind::parse(s))
+                .collect::<Result<Vec<_>>>()?;
+        }
+
+        if let Some(v) = doc.get_usize("model", "batch")? {
+            c.model.batch = v;
+        }
+        if let Some(v) = doc.get_usize("model", "input_dim")? {
+            c.model.input_dim = v;
+        }
+        if let Some(v) = doc.get_usize("model", "hidden_dim")? {
+            c.model.hidden_dim = v;
+        }
+        if let Some(v) = doc.get_usize("model", "classes")? {
+            c.model.classes = v;
+        }
+        if let Some(v) = doc.get_usize("model", "layers")? {
+            c.model.layers = v;
+        }
+        if let Some(v) = doc.get_f64("model", "init_scale")? {
+            c.model.init_scale = v as f32;
+        }
+
+        if let Some(v) = doc.get_f64("optim", "lr")? {
+            c.optim.lr = v as f32;
+        }
+        if let Some(v) = doc.get_f64("optim", "momentum")? {
+            c.optim.momentum = v as f32;
+        }
+        if let Some(v) = doc.get_f64("optim", "weight_decay")? {
+            c.optim.weight_decay = v as f32;
+        }
+        if let Some(v) = doc.get_bool("optim", "cosine")? {
+            c.optim.cosine = v;
+        }
+        if let Some(v) = doc.get_f64("optim", "min_lr")? {
+            c.optim.min_lr = v as f32;
+        }
+
+        if let Some(v) = doc.get_usize("pipeline", "stages")? {
+            c.pipeline.stages = v;
+        }
+        if let Some(v) = doc.get_usize("pipeline", "warmup_epochs")? {
+            c.pipeline.warmup_epochs = v;
+        }
+
+        if let Some(v) = doc.get_usize("data", "train_samples")? {
+            c.data.train_samples = v;
+        }
+        if let Some(v) = doc.get_usize("data", "test_samples")? {
+            c.data.test_samples = v;
+        }
+        if let Some(v) = doc.get_usize("data", "teacher_hidden")? {
+            c.data.teacher_hidden = v;
+        }
+        if let Some(v) = doc.get_f64("data", "label_noise")? {
+            c.data.label_noise = v;
+        }
+        if let Some(v) = doc.get_u64("data", "seed")? {
+            c.data.seed = v;
+        }
+
+        c.validate()?;
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_overlays_defaults() {
+        let c = ExperimentConfig::from_toml_str(
+            r#"
+epochs = 3
+seed = 99
+strategies = ["stashing", "latest"]
+
+[model]
+layers = 4
+hidden_dim = 32
+
+[optim]
+lr = 0.05
+cosine = false
+
+[pipeline]
+stages = 4
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.epochs, 3);
+        assert_eq!(c.seed, 99);
+        assert_eq!(c.model.layers, 4);
+        assert_eq!(c.model.hidden_dim, 32);
+        assert_eq!(c.model.batch, 32); // default preserved
+        assert_eq!(c.optim.lr, 0.05);
+        assert!(!c.optim.cosine);
+        assert_eq!(c.pipeline.stages, 4);
+        assert_eq!(c.strategies.len(), 2);
+    }
+
+    #[test]
+    fn rejects_more_stages_than_layers() {
+        let r = ExperimentConfig::from_toml_str("[model]\nlayers = 2\n[pipeline]\nstages = 4\n");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_bad_strategy_name() {
+        let r = ExperimentConfig::from_toml_str(r#"strategies = ["nonsense"]"#);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_zero_epochs() {
+        assert!(ExperimentConfig::from_toml_str("epochs = 0").is_err());
+    }
+}

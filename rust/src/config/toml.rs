@@ -1,0 +1,279 @@
+//! TOML-subset parser.
+//!
+//! Supports the subset used by `configs/*.toml`: `[section]` headers
+//! (one level), `key = value` pairs with basic strings, integers, floats,
+//! booleans, and flat homogeneous arrays, plus `#` comments. Duplicate
+//! keys within a section are an error (catches config typos). This is a
+//! deliberate substitute for the `toml` crate, which the offline registry
+//! does not carry.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+/// A parsed document: `(section, key) → value`. The root section is `""`.
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    map: BTreeMap<(String, String), TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: malformed section header '{raw}'", lineno + 1);
+                };
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("line {}: expected 'key = value', got '{raw}'", lineno + 1);
+            };
+            let key = line[..eq].trim().to_string();
+            let val_src = line[eq + 1..].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(val_src)
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            if doc
+                .map
+                .insert((section.clone(), key.clone()), value)
+                .is_some()
+            {
+                bail!("line {}: duplicate key '{key}' in section '[{section}]'", lineno + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.map.get(&(section.to_string(), key.to_string()))
+    }
+
+    /// All `(section, key)` pairs (used by config linting).
+    pub fn keys(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.map.keys().map(|(s, k)| (s.as_str(), k.as_str()))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Result<Option<String>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(TomlValue::Str(s)) => Ok(Some(s.clone())),
+            Some(v) => bail!("[{section}].{key}: expected string, got {v:?}"),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(TomlValue::Bool(b)) => Ok(Some(*b)),
+            Some(v) => bail!("[{section}].{key}: expected bool, got {v:?}"),
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(TomlValue::Float(f)) => Ok(Some(*f)),
+            Some(TomlValue::Int(i)) => Ok(Some(*i as f64)),
+            Some(v) => bail!("[{section}].{key}: expected number, got {v:?}"),
+        }
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str) -> Result<Option<u64>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(TomlValue::Int(i)) if *i >= 0 => Ok(Some(*i as u64)),
+            Some(v) => bail!("[{section}].{key}: expected non-negative int, got {v:?}"),
+        }
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>> {
+        Ok(self.get_u64(section, key)?.map(|v| v as usize))
+    }
+
+    pub fn get_str_array(&self, section: &str, key: &str) -> Result<Option<Vec<String>>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(TomlValue::Array(items)) => items
+                .iter()
+                .map(|v| match v {
+                    TomlValue::Str(s) => Ok(s.clone()),
+                    other => bail!("[{section}].{key}: expected string array item, got {other:?}"),
+                })
+                .collect::<Result<Vec<_>>>()
+                .map(Some),
+            Some(v) => bail!("[{section}].{key}: expected array, got {v:?}"),
+        }
+    }
+}
+
+/// Strip a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(src: &str) -> Result<TomlValue> {
+    let src = src.trim();
+    if src.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(body) = src.strip_prefix('"') {
+        let Some(end) = body.find('"') else { bail!("unterminated string") };
+        if !body[end + 1..].trim().is_empty() {
+            bail!("trailing characters after string");
+        }
+        return Ok(TomlValue::Str(body[..end].to_string()));
+    }
+    if src == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if src == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = src.strip_prefix('[') {
+        let Some(body) = body.strip_suffix(']') else { bail!("unterminated array") };
+        let body = body.trim();
+        if body.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items = split_array_items(body)?
+            .into_iter()
+            .map(|s| parse_value(&s))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    // Numbers: int if it parses as i64 and has no '.', 'e', 'E'.
+    let clean = src.replace('_', "");
+    if !clean.contains(['.', 'e', 'E']) {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value '{src}'")
+}
+
+/// Split `a, b, "c,d"` on commas outside string literals.
+fn split_array_items(body: &str) -> Result<Vec<String>> {
+    let mut items = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in body.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                items.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if in_str {
+        bail!("unterminated string in array");
+    }
+    if !cur.trim().is_empty() {
+        items.push(cur.trim().to_string());
+    }
+    Ok(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+# top comment
+epochs = 50            # trailing comment
+lr = 0.1
+name = "fig5 # not a comment"
+flag = true
+
+[model]
+layers = 8
+dims = [32, 64]
+tags = ["a", "b"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_usize("", "epochs").unwrap(), Some(50));
+        assert_eq!(doc.get_f64("", "lr").unwrap(), Some(0.1));
+        assert_eq!(doc.get_str("", "name").unwrap().unwrap(), "fig5 # not a comment");
+        assert_eq!(doc.get_bool("", "flag").unwrap(), Some(true));
+        assert_eq!(doc.get_usize("model", "layers").unwrap(), Some(8));
+        assert_eq!(
+            doc.get_str_array("model", "tags").unwrap().unwrap(),
+            vec!["a".to_string(), "b".to_string()]
+        );
+    }
+
+    #[test]
+    fn int_vs_float_coercion() {
+        let doc = TomlDoc::parse("x = 3\ny = 3.5\nz = 1e-3\nu = 1_000\n").unwrap();
+        assert_eq!(doc.get_f64("", "x").unwrap(), Some(3.0));
+        assert_eq!(doc.get_f64("", "y").unwrap(), Some(3.5));
+        assert_eq!(doc.get_f64("", "z").unwrap(), Some(1e-3));
+        assert_eq!(doc.get_u64("", "u").unwrap(), Some(1000));
+    }
+
+    #[test]
+    fn duplicate_key_is_error() {
+        assert!(TomlDoc::parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn type_mismatch_is_error() {
+        let doc = TomlDoc::parse("a = \"str\"\n").unwrap();
+        assert!(doc.get_usize("", "a").is_err());
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(TomlDoc::parse("[unclosed\n").is_err());
+        assert!(TomlDoc::parse("justakey\n").is_err());
+        assert!(TomlDoc::parse("k = [1, 2\n").is_err());
+        assert!(TomlDoc::parse("k = \"oops\n").is_err());
+    }
+
+    #[test]
+    fn missing_returns_none() {
+        let doc = TomlDoc::parse("a = 1\n").unwrap();
+        assert_eq!(doc.get_usize("model", "nope").unwrap(), None);
+    }
+}

@@ -1,0 +1,208 @@
+//! Synthetic dataset substrate (the CIFAR-100 substitute, DESIGN.md).
+//!
+//! The paper's Fig. 5 claim is about optimization dynamics under delayed
+//! gradients, so the dataset's job is to provide a classification task
+//! with (a) a meaningful generalization gap, (b) deterministic
+//! generation, and (c) the artifact shapes. A frozen random *teacher*
+//! MLP labels gaussian inputs, plus label noise — a standard
+//! teacher-student setup whose test accuracy saturates well below 100 %,
+//! giving the accuracy-vs-epoch curves room to separate (as in Fig. 5).
+
+use crate::config::{DataConfig, ModelConfig};
+use crate::tensor::{matmul, relu, Tensor};
+use crate::util::Rng;
+
+/// An in-memory labelled dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// `[n, input_dim]` features.
+    pub x: Tensor,
+    /// Class index per sample.
+    pub labels: Vec<usize>,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.x.shape()[1]
+    }
+
+    /// Extract a batch by sample indices; returns `(x, onehot)` shaped
+    /// for the artifacts.
+    pub fn batch(&self, idx: &[usize]) -> (Tensor, Tensor) {
+        let d = self.input_dim();
+        let mut xb = Tensor::zeros(&[idx.len(), d]);
+        let mut oh = Tensor::zeros(&[idx.len(), self.classes]);
+        for (row, &i) in idx.iter().enumerate() {
+            let src = &self.x.data()[i * d..(i + 1) * d];
+            xb.data_mut()[row * d..(row + 1) * d].copy_from_slice(src);
+            oh.set2(row, self.labels[i], 1.0);
+        }
+        (xb, oh)
+    }
+}
+
+/// Train/test pair.
+#[derive(Clone, Debug)]
+pub struct Splits {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// Generate the teacher-labelled dataset for a model config.
+pub fn teacher_dataset(model: &ModelConfig, data: &DataConfig) -> Splits {
+    let mut rng = Rng::new(data.seed);
+    // Frozen two-layer teacher, wider margins via tanh-free argmax head.
+    let t_w1 = Tensor::randn(&[model.input_dim, data.teacher_hidden], 1.0, &mut rng);
+    let t_w2 = Tensor::randn(&[data.teacher_hidden, model.classes], 1.0, &mut rng);
+
+    let gen = |n: usize, rng: &mut Rng| -> Dataset {
+        let x = Tensor::randn(&[n, model.input_dim], 1.0, rng);
+        let h = relu(&matmul(&x, &t_w1));
+        let logits = matmul(&h, &t_w2);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let row = &logits.data()[i * model.classes..(i + 1) * model.classes];
+            let mut arg = 0;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[arg] {
+                    arg = j;
+                }
+            }
+            // Label noise: resample uniformly with probability `label_noise`.
+            if rng.chance(data.label_noise) {
+                arg = rng.index(model.classes);
+            }
+            labels.push(arg);
+        }
+        Dataset { x, labels, classes: model.classes }
+    };
+
+    let train = gen(data.train_samples, &mut rng);
+    let test = gen(data.test_samples, &mut rng);
+    Splits { train, test }
+}
+
+/// Deterministic epoch iterator over shuffled fixed-size batches
+/// (drops the trailing partial batch — artifact shapes are static).
+pub struct BatchIter<'a> {
+    data: &'a Dataset,
+    order: Vec<usize>,
+    batch: usize,
+    pos: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(data: &'a Dataset, batch: usize, rng: &mut Rng) -> Self {
+        assert!(batch > 0 && batch <= data.len(), "batch {batch} vs {} samples", data.len());
+        let order = rng.permutation(data.len());
+        BatchIter { data, order, batch, pos: 0 }
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.data.len() / self.batch
+    }
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    type Item = (Tensor, Tensor);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos + self.batch > self.order.len() {
+            return None;
+        }
+        let idx = &self.order[self.pos..self.pos + self.batch];
+        self.pos += self.batch;
+        Some(self.data.batch(idx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfgs() -> (ModelConfig, DataConfig) {
+        (
+            ModelConfig { batch: 8, input_dim: 16, hidden_dim: 8, classes: 4, layers: 3, init_scale: 1.0 },
+            DataConfig { train_samples: 64, test_samples: 32, teacher_hidden: 8, label_noise: 0.0, seed: 5 },
+        )
+    }
+
+    #[test]
+    fn shapes_and_label_range() {
+        let (m, d) = cfgs();
+        let s = teacher_dataset(&m, &d);
+        assert_eq!(s.train.len(), 64);
+        assert_eq!(s.test.len(), 32);
+        assert_eq!(s.train.x.shape(), &[64, 16]);
+        assert!(s.train.labels.iter().all(|&l| l < 4));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (m, d) = cfgs();
+        let a = teacher_dataset(&m, &d);
+        let b = teacher_dataset(&m, &d);
+        assert_eq!(a.train.x, b.train.x);
+        assert_eq!(a.train.labels, b.train.labels);
+    }
+
+    #[test]
+    fn labels_cover_multiple_classes() {
+        let (m, mut d) = cfgs();
+        d.train_samples = 256;
+        let s = teacher_dataset(&m, &d);
+        let mut seen = vec![false; m.classes];
+        for &l in &s.train.labels {
+            seen[l] = true;
+        }
+        assert!(seen.iter().filter(|&&x| x).count() >= 3, "teacher too degenerate");
+    }
+
+    #[test]
+    fn label_noise_changes_labels() {
+        let (m, d) = cfgs();
+        let clean = teacher_dataset(&m, &d);
+        let noisy = teacher_dataset(&m, &DataConfig { label_noise: 0.5, ..d });
+        let diffs = clean
+            .train
+            .labels
+            .iter()
+            .zip(&noisy.train.labels)
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(diffs > 5, "noise had no effect ({diffs} diffs)");
+    }
+
+    #[test]
+    fn batch_extracts_onehot() {
+        let (m, d) = cfgs();
+        let s = teacher_dataset(&m, &d);
+        let (xb, oh) = s.train.batch(&[0, 3, 5]);
+        assert_eq!(xb.shape(), &[3, 16]);
+        assert_eq!(oh.shape(), &[3, 4]);
+        for row in 0..3 {
+            let sum: f32 = (0..4).map(|c| oh.at2(row, c)).sum();
+            assert_eq!(sum, 1.0);
+        }
+    }
+
+    #[test]
+    fn batch_iter_covers_epoch_without_repeats() {
+        let (m, d) = cfgs();
+        let s = teacher_dataset(&m, &d);
+        let mut rng = Rng::new(3);
+        let it = BatchIter::new(&s.train, 8, &mut rng);
+        assert_eq!(it.batches_per_epoch(), 8);
+        let n: usize = it.map(|(x, _)| x.shape()[0]).sum();
+        assert_eq!(n, 64);
+    }
+}

@@ -1,0 +1,356 @@
+//! Gradient averaging for weight recompute (paper §III-D, Eqs. 4–9).
+//!
+//! Pipelined execution needs the historical weight `W(t−d)` when a delayed
+//! gradient arrives. Instead of stashing `d` weight versions, the paper
+//! reconstructs it from the current weight plus an estimate of the
+//! intervening updates (Eq. 3):
+//!
+//! ```text
+//! W(t−d) = W(t) + Σ_{i<d} lr(t−i)·U(t−i)          (exact)
+//!        ≈ W(t) + lr·d·Ḡ                           (averaged)
+//! ```
+//!
+//! Three averagers implement the `Ḡ` estimate:
+//!
+//! - [`ExactWindow`] — ring buffer of the last `d` applied updates; makes
+//!   Eq. 3 an identity. O(d) memory; used as the ground-truth oracle in
+//!   tests and as an ablation point.
+//! - [`PipelineAwareEma`] — the paper's proposal: the incremental-mean
+//!   recurrence `Ḡ(k) = k/(k+1)·Ḡ(k−1) + 1/(k+1)·G(k)` (Eq. 7) whose decay
+//!   `β(k) = k/(k+1)` (Eq. 8) is *matched to the layer's own delay*: the
+//!   window ramps exactly like a cumulative mean until it spans `d`
+//!   samples, then holds `β = d/(d+1)`. O(1) memory.
+//! - [`FixedEma`] — conventional EMA with delay-independent `β` (the
+//!   paper's fixed-decay baseline, `β = 0.9`).
+
+use crate::tensor::Tensor;
+
+/// Online estimator of the average recent update/gradient for one tensor.
+pub trait GradientAverager: Send {
+    /// Feed the applied update of one optimizer step.
+    fn push(&mut self, update: &Tensor);
+
+    /// Current estimate `Ḡ` of the mean update over the target window.
+    /// `None` until at least one sample has been pushed.
+    fn mean(&self) -> Option<&Tensor>;
+
+    /// Number of samples pushed so far.
+    fn count(&self) -> usize;
+
+    /// Bytes of estimator state (memory-footprint experiment).
+    fn state_nbytes(&self) -> usize;
+
+    /// Reconstruct `Ŵ(t−d) = W(t) + lr_sum·Ḡ` where `lr_sum` is the sum of
+    /// learning rates over the delay window (`lr·d` for constant lr —
+    /// paper Eq. 9 with `lr_sum = α(2n+1)`). Returns a copy of `current`
+    /// when no samples exist yet (warm-up behaviour).
+    fn reconstruct(&self, current: &Tensor, lr_sum: f32) -> Tensor {
+        let mut w = current.clone();
+        if let Some(g) = self.mean() {
+            w.axpy(lr_sum, g);
+        }
+        w
+    }
+}
+
+/// Exact sliding-window mean via a ring buffer of the last `window`
+/// updates. Makes the Eq. 3 reconstruction exact (up to fp rounding).
+#[derive(Clone, Debug)]
+pub struct ExactWindow {
+    window: usize,
+    buf: Vec<Tensor>,
+    next: usize,
+    count: usize,
+    mean: Option<Tensor>,
+}
+
+impl ExactWindow {
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0, "window must be positive");
+        ExactWindow { window, buf: Vec::new(), next: 0, count: 0, mean: None }
+    }
+
+    /// Sum (not mean) over the stored window — what Eq. 3 needs directly.
+    pub fn window_sum(&self) -> Option<Tensor> {
+        self.mean.as_ref().map(|m| {
+            let mut s = m.clone();
+            s.scale(self.count.min(self.window) as f32);
+            s
+        })
+    }
+}
+
+impl GradientAverager for ExactWindow {
+    fn push(&mut self, update: &Tensor) {
+        if self.buf.len() < self.window {
+            self.buf.push(update.clone());
+        } else {
+            self.buf[self.next] = update.clone();
+        }
+        self.next = (self.next + 1) % self.window;
+        self.count += 1;
+        // Recompute the mean from the buffer (O(window·n)); exactness over
+        // speed — the O(1)-memory EMA is the production path.
+        let k = self.buf.len();
+        let mut m = Tensor::zeros(update.shape());
+        for t in &self.buf {
+            m.axpy(1.0 / k as f32, t);
+        }
+        self.mean = Some(m);
+    }
+
+    fn mean(&self) -> Option<&Tensor> {
+        self.mean.as_ref()
+    }
+
+    fn count(&self) -> usize {
+        self.count
+    }
+
+    fn state_nbytes(&self) -> usize {
+        self.buf.iter().map(Tensor::nbytes).sum::<usize>()
+            + self.mean.as_ref().map_or(0, Tensor::nbytes)
+    }
+}
+
+/// The paper's pipeline-aware EMA (Eqs. 7–8): cumulative-mean ramp to the
+/// delay-matched window, then fixed `β = d/(d+1)`.
+#[derive(Clone, Debug)]
+pub struct PipelineAwareEma {
+    /// Target window length == the layer's gradient delay `d` (+1 samples).
+    window: usize,
+    mean: Option<Tensor>,
+    count: usize,
+}
+
+impl PipelineAwareEma {
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0, "window must be positive");
+        PipelineAwareEma { window, mean: None, count: 0 }
+    }
+
+    /// The delay-conditioned decay currently in effect (Eq. 8).
+    pub fn beta(&self) -> f32 {
+        let k = self.count.min(self.window);
+        k as f32 / (k as f32 + 1.0)
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+}
+
+impl GradientAverager for PipelineAwareEma {
+    fn push(&mut self, update: &Tensor) {
+        // β(k) = k/(k+1) with k capped at the delay-matched window,
+        // i.e. exact cumulative mean while k < window (Eq. 7), then
+        // a fixed-β EMA whose effective window stays `window+1`.
+        let beta = self.beta();
+        match &mut self.mean {
+            None => {
+                self.mean = Some(update.clone());
+            }
+            Some(m) => {
+                m.ema_update(beta, update);
+            }
+        }
+        self.count += 1;
+    }
+
+    fn mean(&self) -> Option<&Tensor> {
+        self.mean.as_ref()
+    }
+
+    fn count(&self) -> usize {
+        self.count
+    }
+
+    fn state_nbytes(&self) -> usize {
+        self.mean.as_ref().map_or(0, Tensor::nbytes)
+    }
+}
+
+/// Conventional fixed-decay EMA (the paper's `β = 0.9` baseline): the
+/// decay ignores the pipeline delay entirely.
+#[derive(Clone, Debug)]
+pub struct FixedEma {
+    beta: f32,
+    mean: Option<Tensor>,
+    count: usize,
+}
+
+impl FixedEma {
+    pub fn new(beta: f32) -> Self {
+        assert!((0.0..1.0).contains(&beta), "beta must be in [0,1)");
+        FixedEma { beta, mean: None, count: 0 }
+    }
+
+    pub fn beta(&self) -> f32 {
+        self.beta
+    }
+}
+
+impl GradientAverager for FixedEma {
+    fn push(&mut self, update: &Tensor) {
+        match &mut self.mean {
+            None => self.mean = Some(update.clone()),
+            Some(m) => m.ema_update(self.beta, update),
+        }
+        self.count += 1;
+    }
+
+    fn mean(&self) -> Option<&Tensor> {
+        self.mean.as_ref()
+    }
+
+    fn count(&self) -> usize {
+        self.count
+    }
+
+    fn state_nbytes(&self) -> usize {
+        self.mean.as_ref().map_or(0, Tensor::nbytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_allclose, property};
+    use crate::util::Rng;
+
+    fn t1(v: f32) -> Tensor {
+        Tensor::from_vec(&[1], vec![v])
+    }
+
+    #[test]
+    fn exact_window_mean_is_sliding_mean() {
+        let mut w = ExactWindow::new(3);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            w.push(&t1(v));
+        }
+        // last 3: (2+3+4)/3 = 3
+        assert!((w.mean().unwrap().data()[0] - 3.0).abs() < 1e-6);
+        assert!((w.window_sum().unwrap().data()[0] - 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pipeline_aware_matches_cumulative_mean_during_ramp() {
+        // Eq. 7 is the exact recurrence for the running mean: while
+        // count <= window the EMA must equal the cumulative mean exactly.
+        let mut ema = PipelineAwareEma::new(10);
+        let mut sum = 0.0;
+        for k in 1..=10 {
+            let v = (k * k) as f32;
+            sum += v;
+            ema.push(&t1(v));
+            let cm = sum / k as f32;
+            assert!(
+                (ema.mean().unwrap().data()[0] - cm).abs() < 1e-4,
+                "k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn pipeline_aware_beta_ramps_then_holds() {
+        let mut ema = PipelineAwareEma::new(4);
+        let betas: Vec<f32> = (0..7)
+            .map(|_| {
+                let b = ema.beta();
+                ema.push(&t1(1.0));
+                b
+            })
+            .collect();
+        assert_allclose(
+            &betas,
+            &[0.0, 0.5, 2.0 / 3.0, 0.75, 0.8, 0.8, 0.8],
+            1e-6,
+            0.0,
+            "beta ramp",
+        );
+    }
+
+    #[test]
+    fn exact_reconstruction_inverts_sgd() {
+        // Plain SGD + ExactWindow: Ŵ(t−d) must equal the true stored
+        // W(t−d) to fp rounding — the paper's Eq. 3 identity.
+        property(16, |rng, _case| {
+            let d = 1 + rng.index(8);
+            let steps = d + 2 + rng.index(20);
+            let lr = 0.05;
+            let mut w = Tensor::randn(&[6], 1.0, rng);
+            let mut hist = vec![w.clone()];
+            let mut win = ExactWindow::new(d);
+            for _ in 0..steps {
+                let g = Tensor::randn(&[6], 1.0, rng);
+                // plain SGD step: U = g
+                w.axpy(-lr, &g);
+                win.push(&g);
+                hist.push(w.clone());
+            }
+            // Eq. 3: W(t−d) = W(t) + lr·Σ last-d updates
+            let target = &hist[hist.len() - 1 - d];
+            let mut recon = w.clone();
+            recon.axpy(lr, &win.window_sum().unwrap());
+            assert!(
+                recon.max_abs_diff(target) < 1e-4,
+                "d={d} diff={}",
+                recon.max_abs_diff(target)
+            );
+        });
+    }
+
+    #[test]
+    fn pipeline_aware_approximates_exact_window() {
+        // On a slowly-varying update stream the O(1) EMA should track the
+        // exact window mean closely (the DLMS slow-variation assumption).
+        let mut rng = Rng::new(42);
+        let d = 6;
+        let mut exact = ExactWindow::new(d);
+        let mut ema = PipelineAwareEma::new(d);
+        let mut drift = 0.0f32;
+        for t in 0..200 {
+            drift += 0.01;
+            let v = drift + 0.05 * rng.gauss() as f32;
+            exact.push(&t1(v));
+            ema.push(&t1(v));
+            if t > 3 * d {
+                let e = exact.mean().unwrap().data()[0];
+                let a = ema.mean().unwrap().data()[0];
+                assert!((e - a).abs() < 0.15, "t={t}: exact {e} vs ema {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_ema_is_standard() {
+        let mut ema = FixedEma::new(0.9);
+        ema.push(&t1(1.0));
+        ema.push(&t1(0.0));
+        assert!((ema.mean().unwrap().data()[0] - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn memory_footprint_ordering() {
+        // The whole point: pipeline-aware EMA is O(1) in the delay, the
+        // exact window is O(d).
+        let shape = [64, 64];
+        let upd = Tensor::zeros(&shape);
+        let mut exact = ExactWindow::new(14);
+        let mut ema = PipelineAwareEma::new(14);
+        for _ in 0..20 {
+            exact.push(&upd);
+            ema.push(&upd);
+        }
+        assert!(exact.state_nbytes() >= 14 * upd.nbytes());
+        assert_eq!(ema.state_nbytes(), upd.nbytes());
+    }
+
+    #[test]
+    fn reconstruct_without_samples_returns_current() {
+        let ema = PipelineAwareEma::new(4);
+        let cur = t1(3.5);
+        let r = ema.reconstruct(&cur, 0.7);
+        assert_eq!(r.data(), cur.data());
+    }
+}

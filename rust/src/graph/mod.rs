@@ -1,0 +1,476 @@
+//! Backpropagation dataflow graphs (paper §III-A/B).
+//!
+//! Training one layer involves four computation nodes — forward `F_l`,
+//! activation gradient `D_l` (the paper's δ), weight gradient `G_l`, and
+//! the weight update `W_l` — wired into the nested feedback structure of
+//! Fig. 1/3. Edges carry integer *delay* counts (the `D` elements of DSP
+//! retiming); one delay = one training iteration of temporal separation.
+//!
+//! The module provides the graph representation, the standard backprop
+//! builder, feedforward-cutset detection, cycle analysis (including the
+//! zero-delay gradient loop that makes naive pipelining impossible), and
+//! the classical iteration bound `T∞ = max_cycles (Σcompute / Σdelay)`
+//! from Ito & Parhi [12] used by the schedule model.
+
+use std::collections::BTreeSet;
+
+/// Role of a node in the training dataflow graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeKind {
+    /// Environment (data source / gradient sink), outside all stages.
+    Env,
+    /// Forward computation of layer `l`.
+    Forward(usize),
+    /// Activation-gradient (δ) computation of layer `l`.
+    ActGrad(usize),
+    /// Weight-gradient (G) computation of layer `l`.
+    WeightGrad(usize),
+    /// Weight update/storage of layer `l`.
+    Weight(usize),
+    /// Loss + initial gradient computation (lives in the last stage).
+    Loss,
+}
+
+impl NodeKind {
+    /// Layer index, if the node belongs to a layer.
+    pub fn layer(&self) -> Option<usize> {
+        match self {
+            NodeKind::Forward(l)
+            | NodeKind::ActGrad(l)
+            | NodeKind::WeightGrad(l)
+            | NodeKind::Weight(l) => Some(*l),
+            _ => None,
+        }
+    }
+
+    /// `true` for nodes on the forward/weight side of a stage (`F`, `W`),
+    /// `false` for backward-side nodes (`D`, `G`), `None` for env/loss.
+    pub fn is_forward_side(&self) -> Option<bool> {
+        match self {
+            NodeKind::Forward(_) | NodeKind::Weight(_) => Some(true),
+            NodeKind::ActGrad(_) | NodeKind::WeightGrad(_) => Some(false),
+            _ => None,
+        }
+    }
+}
+
+/// Semantic role of an edge (used to read stash depths off the graph).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Forward activation `F_l → F_{l+1}` (or into Loss).
+    Activation,
+    /// Stashed activation into the backward pass: `F_l → {G_l, D_l}`.
+    ActStash,
+    /// Backward gradient flow `D_{l+1} → {D_l, G_l}` (or from Loss).
+    GradFlow,
+    /// Weights consumed by forward: `W_l → F_l`.
+    WeightUse,
+    /// Weights consumed by backward (δ needs `Wᵀ`): `W_l → D_l`.
+    WeightUseBwd,
+    /// Gradient→update feedback `G_l → W_l` — the DLMS insertion site.
+    GradToWeight,
+    /// Weight state self-loop `W_l → W_l` (the iteration boundary).
+    WeightState,
+    /// Env → first forward (network input feedforward cutset edge).
+    EnvIn,
+    /// First act-grad → env (network output-side cutset edge).
+    EnvOut,
+}
+
+/// A node with an optional pipeline-stage assignment.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub kind: NodeKind,
+    /// Stage index; `None` for Env.
+    pub stage: Option<usize>,
+    /// Abstract compute time (for iteration-bound / schedule analysis).
+    pub compute: f64,
+}
+
+/// A directed edge carrying `delay` pipeline registers.
+#[derive(Clone, Debug)]
+pub struct Edge {
+    pub from: usize,
+    pub to: usize,
+    pub delay: i64,
+    pub kind: EdgeKind,
+}
+
+/// The training dataflow graph.
+#[derive(Clone, Debug, Default)]
+pub struct Dfg {
+    pub nodes: Vec<Node>,
+    pub edges: Vec<Edge>,
+}
+
+impl Dfg {
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn add_node(&mut self, kind: NodeKind, stage: Option<usize>, compute: f64) -> usize {
+        self.nodes.push(Node { kind, stage, compute });
+        self.nodes.len() - 1
+    }
+
+    pub fn add_edge(&mut self, from: usize, to: usize, delay: i64, kind: EdgeKind) -> usize {
+        assert!(from < self.nodes.len() && to < self.nodes.len(), "edge endpoint out of range");
+        assert!(delay >= 0, "initial edge delay must be non-negative");
+        self.edges.push(Edge { from, to, delay, kind });
+        self.edges.len() - 1
+    }
+
+    /// Find the unique node of a given kind.
+    pub fn find(&self, kind: NodeKind) -> Option<usize> {
+        self.nodes.iter().position(|n| n.kind == kind)
+    }
+
+    /// The delay on the unique edge `(from_kind → to_kind)`.
+    pub fn edge_delay(&self, from: NodeKind, to: NodeKind) -> Option<i64> {
+        let f = self.find(from)?;
+        let t = self.find(to)?;
+        self.edges
+            .iter()
+            .find(|e| e.from == f && e.to == t)
+            .map(|e| e.delay)
+    }
+
+    // ------------------------------------------------------------------
+    // Construction of the standard backprop graph
+    // ------------------------------------------------------------------
+
+    /// Build the backpropagation dataflow graph for `layers` dense layers
+    /// with the stage assignment `stage_of[l]` (contiguous, ascending).
+    /// Compute weights default to 1.0 per node (override for schedule
+    /// experiments via [`Dfg::set_layer_compute`]).
+    ///
+    /// All edges start with 0 delays except the weight-state self-loops
+    /// (1 delay: updates take effect next iteration) — the *sequential*
+    /// semantics the paper's construction starts from.
+    pub fn backprop(layers: usize, stage_of: &[usize]) -> Dfg {
+        assert!(layers >= 1);
+        assert_eq!(stage_of.len(), layers, "need a stage per layer");
+        for w in stage_of.windows(2) {
+            assert!(w[1] >= w[0], "stage assignment must be ascending");
+            assert!(w[1] - w[0] <= 1, "stages must be contiguous");
+        }
+        assert_eq!(stage_of[0], 0, "first layer must be in stage 0");
+        let num_stages = stage_of[layers - 1] + 1;
+
+        let mut g = Dfg::default();
+        let env = g.add_node(NodeKind::Env, None, 0.0);
+        let fwd: Vec<usize> = (0..layers)
+            .map(|l| g.add_node(NodeKind::Forward(l), Some(stage_of[l]), 1.0))
+            .collect();
+        let act: Vec<usize> = (0..layers)
+            .map(|l| g.add_node(NodeKind::ActGrad(l), Some(stage_of[l]), 1.0))
+            .collect();
+        let wgrad: Vec<usize> = (0..layers)
+            .map(|l| g.add_node(NodeKind::WeightGrad(l), Some(stage_of[l]), 1.0))
+            .collect();
+        let weight: Vec<usize> = (0..layers)
+            .map(|l| g.add_node(NodeKind::Weight(l), Some(stage_of[l]), 0.0))
+            .collect();
+        let loss = g.add_node(NodeKind::Loss, Some(num_stages - 1), 1.0);
+
+        g.add_edge(env, fwd[0], 0, EdgeKind::EnvIn);
+        for l in 0..layers {
+            if l + 1 < layers {
+                g.add_edge(fwd[l], fwd[l + 1], 0, EdgeKind::Activation);
+            } else {
+                g.add_edge(fwd[l], loss, 0, EdgeKind::Activation);
+            }
+            // Stashed activations feed both backward components.
+            g.add_edge(fwd[l], wgrad[l], 0, EdgeKind::ActStash);
+            g.add_edge(fwd[l], act[l], 0, EdgeKind::ActStash);
+            // Backward gradient flow from the following layer (or loss).
+            if l + 1 < layers {
+                g.add_edge(act[l + 1], act[l], 0, EdgeKind::GradFlow);
+                g.add_edge(act[l + 1], wgrad[l], 0, EdgeKind::GradFlow);
+            } else {
+                g.add_edge(loss, act[l], 0, EdgeKind::GradFlow);
+                g.add_edge(loss, wgrad[l], 0, EdgeKind::GradFlow);
+            }
+            // Weight uses and the gradient-update feedback loop.
+            g.add_edge(weight[l], fwd[l], 0, EdgeKind::WeightUse);
+            g.add_edge(weight[l], act[l], 0, EdgeKind::WeightUseBwd);
+            g.add_edge(wgrad[l], weight[l], 0, EdgeKind::GradToWeight);
+            g.add_edge(weight[l], weight[l], 1, EdgeKind::WeightState);
+        }
+        g.add_edge(act[0], env, 0, EdgeKind::EnvOut);
+        g
+    }
+
+    /// Set per-layer compute times: forward `f`, backward components get
+    /// `b/2` each (δ and G), mirroring backward ≈ 2× forward cost.
+    pub fn set_layer_compute(&mut self, layer: usize, f: f64, b: f64) {
+        for n in &mut self.nodes {
+            match n.kind {
+                NodeKind::Forward(l) if l == layer => n.compute = f,
+                NodeKind::ActGrad(l) | NodeKind::WeightGrad(l) if l == layer => {
+                    n.compute = b / 2.0
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Cutsets
+    // ------------------------------------------------------------------
+
+    /// Classify the cut `(set, V∖set)`:
+    /// `Some(true)` — feedforward cutset, all crossing edges leave `set`;
+    /// `Some(false)` — feedforward cutset entering `set`;
+    /// `None` — edges cross in both directions (a feedback cutset).
+    pub fn feedforward_cutset_direction(&self, set: &BTreeSet<usize>) -> Option<bool> {
+        let mut out = false;
+        let mut inb = false;
+        for e in &self.edges {
+            let f_in = set.contains(&e.from);
+            let t_in = set.contains(&e.to);
+            if f_in && !t_in {
+                out = true;
+            } else if !f_in && t_in {
+                inb = true;
+            }
+        }
+        match (out, inb) {
+            (true, false) => Some(true),
+            (false, true) => Some(false),
+            _ => None,
+        }
+    }
+
+    /// The two feedforward cutsets the paper identifies (§III-A): the
+    /// network-input cut `{Env}` complement side and the network-output
+    /// cut. Returns `(input_cut, output_cut)` as node sets whose crossing
+    /// edges are exactly `EnvIn` / `EnvOut`.
+    ///
+    /// Note: in the *training* graph (forward and backward both present)
+    /// the only feedforward cutsets separate Env from the rest; every
+    /// layer boundary is a feedback cutset — that is precisely why naive
+    /// pipelining is illegal and DLMS-style insertion is needed.
+    pub fn env_cutsets(&self) -> (BTreeSet<usize>, BTreeSet<usize>) {
+        let env = self.find(NodeKind::Env).expect("graph has an Env node");
+        let input_cut: BTreeSet<usize> = [env].into_iter().collect();
+        let output_cut: BTreeSet<usize> =
+            (0..self.nodes.len()).filter(|&i| i != env).collect();
+        (input_cut, output_cut)
+    }
+
+    // ------------------------------------------------------------------
+    // Cycles & legality
+    // ------------------------------------------------------------------
+
+    /// `true` if every edge has a non-negative delay.
+    pub fn delays_legal(&self) -> bool {
+        self.edges.iter().all(|e| e.delay >= 0)
+    }
+
+    /// Minimum total delay over all directed cycles, or `None` if acyclic.
+    /// A zero result identifies the algorithmic loops that retiming alone
+    /// cannot pipeline (the gradient feedback loops of §II).
+    pub fn min_cycle_delay(&self) -> Option<i64> {
+        // Bellman-Ford over edge weight = delay, detecting the minimum
+        // mean first is unnecessary: we only need min over cycles of the
+        // (integer, non-negative) sum. Use DP: for increasing path length,
+        // dist[k][v] = min delay of a k-edge walk ending at v; a cycle is
+        // found when a walk returns to its start. n·m DP (Karp-style).
+        let n = self.nodes.len();
+        if n == 0 {
+            return None;
+        }
+        let mut best: Option<i64> = None;
+        for start in 0..n {
+            // Dijkstra-like relaxation works since delays >= 0.
+            let mut dist = vec![i64::MAX; n];
+            // Initialize with edges out of `start`.
+            let mut heap = std::collections::BinaryHeap::new();
+            for e in self.edges.iter().filter(|e| e.from == start) {
+                if e.to == start {
+                    best = Some(best.map_or(e.delay, |b: i64| b.min(e.delay)));
+                } else if e.delay < dist[e.to] {
+                    dist[e.to] = e.delay;
+                    heap.push(std::cmp::Reverse((e.delay, e.to)));
+                }
+            }
+            while let Some(std::cmp::Reverse((d, v))) = heap.pop() {
+                if d > dist[v] {
+                    continue;
+                }
+                for e in self.edges.iter().filter(|e| e.from == v) {
+                    if e.to == start {
+                        let cyc = d + e.delay;
+                        best = Some(best.map_or(cyc, |b: i64| b.min(cyc)));
+                    } else if d + e.delay < dist[e.to] {
+                        dist[e.to] = d + e.delay;
+                        heap.push(std::cmp::Reverse((dist[e.to], e.to)));
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Classical iteration bound `T∞ = max over cycles of Σcompute/Σdelay`
+    /// (Ito & Parhi [12]). Returns `None` if some cycle has zero delay
+    /// (unbounded — the graph is not pipelineable as-is) and `Some(0.0)`
+    /// for acyclic graphs.
+    ///
+    /// Computed by binary search on `λ`: `λ ≥ T∞` iff the graph with edge
+    /// weight `compute(from) − λ·delay(e)` has no positive cycle
+    /// (Bellman-Ford detection).
+    pub fn iteration_bound(&self) -> Option<f64> {
+        match self.min_cycle_delay() {
+            None => return Some(0.0),
+            Some(0) => return None,
+            Some(_) => {}
+        }
+        let total_compute: f64 = self.nodes.iter().map(|n| n.compute).sum();
+        let (mut lo, mut hi) = (0.0f64, total_compute.max(1.0));
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if self.has_positive_cycle(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Some(hi)
+    }
+
+    /// `true` if the graph with edge weight `compute(from) − λ·delay` has
+    /// a positive-weight cycle.
+    fn has_positive_cycle(&self, lambda: f64) -> bool {
+        let n = self.nodes.len();
+        // Longest-path Bellman-Ford from a virtual source to all nodes.
+        let mut dist = vec![0.0f64; n];
+        for _ in 0..n {
+            let mut changed = false;
+            for e in &self.edges {
+                let w = self.nodes[e.from].compute - lambda * e.delay as f64;
+                if dist[e.from] + w > dist[e.to] + 1e-12 {
+                    dist[e.to] = dist[e.from] + w;
+                    changed = true;
+                }
+            }
+            if !changed {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Sum of delays around an explicit node cycle (for invariance tests).
+    /// `cycle` lists node ids; consecutive pairs (wrapping) must each have
+    /// at least one edge, the minimum-delay edge is taken.
+    pub fn cycle_delay(&self, cycle: &[usize]) -> Option<i64> {
+        let mut total = 0i64;
+        for i in 0..cycle.len() {
+            let (u, v) = (cycle[i], cycle[(i + 1) % cycle.len()]);
+            let d = self
+                .edges
+                .iter()
+                .filter(|e| e.from == u && e.to == v)
+                .map(|e| e.delay)
+                .min()?;
+            total += d;
+        }
+        Some(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn per_layer_stages(l: usize) -> Vec<usize> {
+        (0..l).collect()
+    }
+
+    #[test]
+    fn backprop_graph_shape() {
+        let g = Dfg::backprop(4, &per_layer_stages(4));
+        // env + 4*(F,D,G,W) + loss
+        assert_eq!(g.node_count(), 1 + 16 + 1);
+        // per layer: act(1) + stash(2) + gradflow(2) + uses(2) + g2w(1) + self(1) = 9
+        // plus env-in and env-out
+        assert_eq!(g.edges.len(), 4 * 9 + 2);
+        assert!(g.delays_legal());
+    }
+
+    #[test]
+    fn sequential_graph_has_zero_delay_gradient_loop() {
+        // The W→F→…→G→W loop carries no delay: retiming alone cannot
+        // pipeline backprop (the paper's §II observation).
+        let g = Dfg::backprop(3, &per_layer_stages(3));
+        assert_eq!(g.min_cycle_delay(), Some(0));
+        assert!(g.iteration_bound().is_none());
+    }
+
+    #[test]
+    fn env_cutsets_are_feedforward() {
+        let g = Dfg::backprop(3, &per_layer_stages(3));
+        let (inp, out) = g.env_cutsets();
+        // Env-only set: EnvIn leaves it, EnvOut enters it → feedback as a
+        // *bidirectional* pair, but each individual edge set is checked by
+        // direction, so classify the complement cut.
+        assert_eq!(g.feedforward_cutset_direction(&out), None,
+            "training graph layer cut contains both directions");
+        // A pure-forward subgraph cut IS feedforward: take only F nodes.
+        let fwd_prefix: BTreeSet<usize> = g
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| matches!(n.kind, NodeKind::Forward(l) if l < 2))
+            .map(|(i, _)| i)
+            .collect();
+        // F-prefix cut in the full training graph is not feedforward
+        // (gradients flow back into it) — this is the key structural fact.
+        assert_eq!(g.feedforward_cutset_direction(&fwd_prefix), None);
+        let _ = inp;
+    }
+
+    #[test]
+    fn cycle_delay_reads_weight_loop() {
+        let g = Dfg::backprop(2, &per_layer_stages(2));
+        let w0 = g.find(NodeKind::Weight(0)).unwrap();
+        assert_eq!(g.cycle_delay(&[w0]), Some(1), "self-loop holds one delay");
+    }
+
+    #[test]
+    fn iteration_bound_simple_loop() {
+        // Two-node loop, computes 1.0 each, 2 delays total → T∞ = 1.0.
+        let mut g = Dfg::default();
+        let a = g.add_node(NodeKind::Loss, None, 1.0);
+        let b = g.add_node(NodeKind::Env, None, 1.0);
+        g.add_edge(a, b, 1, EdgeKind::Activation);
+        g.add_edge(b, a, 1, EdgeKind::Activation);
+        let t = g.iteration_bound().unwrap();
+        assert!((t - 1.0).abs() < 1e-6, "got {t}");
+    }
+
+    #[test]
+    fn iteration_bound_acyclic_is_zero() {
+        let mut g = Dfg::default();
+        let a = g.add_node(NodeKind::Loss, None, 1.0);
+        let b = g.add_node(NodeKind::Env, None, 1.0);
+        g.add_edge(a, b, 0, EdgeKind::Activation);
+        assert_eq!(g.iteration_bound(), Some(0.0));
+    }
+
+    #[test]
+    fn grouped_stage_assignment_accepted() {
+        let g = Dfg::backprop(4, &[0, 0, 1, 1]);
+        assert!(g.delays_legal());
+        assert_eq!(g.nodes[g.find(NodeKind::Forward(1)).unwrap()].stage, Some(0));
+        assert_eq!(g.nodes[g.find(NodeKind::Loss).unwrap()].stage, Some(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "contiguous")]
+    fn rejects_gapped_stages() {
+        Dfg::backprop(3, &[0, 2, 2]);
+    }
+}

@@ -1,0 +1,51 @@
+//! # LayerPipe2
+//!
+//! A production-grade reproduction of *"LayerPipe2: Multistage Pipelining
+//! and Weight Recompute via Improved Exponential Moving Average for
+//! Training Neural Networks"* (Unnikrishnan & Parhi, 2025).
+//!
+//! The library is the L3 (Rust) layer of a three-layer Rust + JAX + Pallas
+//! stack: JAX/Pallas author the per-layer compute graphs at build time and
+//! AOT-lower them to HLO text (`make artifacts`); this crate loads the
+//! artifacts through the PJRT C API ([`runtime`]) and owns everything else:
+//!
+//! - the paper's **retiming-theoretic pipeline derivation** ([`graph`],
+//!   [`retiming`]) including the closed form `Delay(l) = 2·S(l)` and
+//!   grouped multistage partitions;
+//! - the **DLMS delayed-gradient foundation** ([`dlms`]);
+//! - the **pipeline schedule model** ([`schedule`]) and a real threaded
+//!   pipeline runtime ([`pipeline`]);
+//! - **weight/activation stashing** with byte-level accounting ([`stash`])
+//!   and the paper's **pipeline-aware EMA weight recompute** ([`ema`]);
+//! - the five weight-handling **strategies** of the paper's Fig. 5
+//!   ([`strategy`]) and the delayed-gradient **trainer** ([`train`]);
+//! - supporting substrates written from scratch for this offline
+//!   environment: deterministic RNG, JSON, a TOML-subset config system,
+//!   host tensors, a bench harness and a property-test helper.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod util;
+pub mod config;
+pub mod tensor;
+pub mod graph;
+pub mod retiming;
+pub mod dlms;
+pub mod schedule;
+pub mod stash;
+pub mod ema;
+pub mod optim;
+pub mod strategy;
+pub mod model;
+pub mod runtime;
+pub mod data;
+pub mod train;
+pub mod pipeline;
+pub mod coordinator;
+pub mod metrics;
+pub mod bench_util;
+pub mod testing;
+
+/// Crate-wide result alias (anyhow-based; `eyre` is unavailable offline).
+pub type Result<T> = anyhow::Result<T>;

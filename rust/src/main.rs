@@ -1,0 +1,356 @@
+//! `layerpipe2` — CLI launcher for the LayerPipe2 reproduction.
+//!
+//! Subcommands (clap is unavailable offline; parsing is hand-rolled):
+//!
+//! ```text
+//! layerpipe2 train   [--config F] [--strategy S]... [--epochs N] [--stages K] [--csv PATH]
+//! layerpipe2 retime  [--layers L] [--groups a,b,c]
+//! layerpipe2 dlms    [--delays 0,1,4,16] [--mu MU] [--taps T]
+//! layerpipe2 schedule [--layers L] [--stages K] [--batches B]
+//! layerpipe2 throughput [--stages 1,2,4,8] [--batches B] [--artifacts DIR]
+//! layerpipe2 info    [--artifacts DIR]
+//! ```
+
+use anyhow::{bail, Context, Result};
+use layerpipe2::config::ExperimentConfig;
+use layerpipe2::coordinator::{check_fig5_shape, Coordinator};
+use layerpipe2::dlms;
+use layerpipe2::model::Mlp;
+use layerpipe2::pipeline;
+use layerpipe2::retiming::{Derivation, StagePartition};
+use layerpipe2::runtime::Engine;
+use layerpipe2::schedule::{sweep_stages, CostModel, Schedule};
+use layerpipe2::strategy::StrategyKind;
+use layerpipe2::tensor::Tensor;
+use layerpipe2::util::Rng;
+use std::sync::Arc;
+
+/// Minimal flag parser: `--key value` pairs after the subcommand;
+/// repeated keys accumulate.
+struct Args {
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = &argv[i];
+            if !k.starts_with("--") {
+                bail!("expected --flag, got '{k}'");
+            }
+            let v = argv
+                .get(i + 1)
+                .with_context(|| format!("flag {k} needs a value"))?;
+            flags.push((k[2..].to_string(), v.clone()));
+            i += 2;
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    fn usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().with_context(|| format!("bad list item '{s}' in --{key}")))
+                .collect(),
+        }
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "retime" => cmd_retime(&args),
+        "dlms" => cmd_dlms(&args),
+        "schedule" => cmd_schedule(&args),
+        "throughput" => cmd_throughput(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try 'layerpipe2 help')"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "layerpipe2 — multistage pipelined training with EMA weight recompute
+
+USAGE: layerpipe2 <COMMAND> [--flag value]...
+
+COMMANDS:
+  train       run the Fig. 5 strategy sweep (pipelined training)
+              --config F --strategy S (repeatable) --epochs N --stages K
+              --csv PATH --artifacts DIR --seed N
+  retime      derive pipeline delays via retiming (Figs. 3/4)
+              --layers L  --groups a,b,c (group sizes)
+  dlms        delayed-LMS convergence sweep (Fig. 2)
+              --delays 0,1,4,16 --mu 0.01 --taps 16 --samples 20000
+  schedule    clock-schedule analysis (utilization/speedup/staleness)
+              --layers L --stages K --batches B
+  throughput  threaded pipeline throughput on real XLA compute
+              --stages 1,2,4,8 --batches B --artifacts DIR
+  info        print artifact manifest details  --artifacts DIR"
+    );
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    }
+    cfg.epochs = args.usize_or("epochs", cfg.epochs)?;
+    cfg.pipeline.stages = args.usize_or("stages", cfg.pipeline.stages)?;
+    cfg.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
+    if let Some(csv) = args.get("csv") {
+        cfg.csv_out = Some(csv.to_string());
+    }
+    let requested = args.get_all("strategy");
+    if !requested.is_empty() {
+        cfg.strategies = requested
+            .iter()
+            .map(|s| StrategyKind::parse(s))
+            .collect::<Result<_>>()?;
+    }
+    cfg.validate()?;
+
+    let coord = Coordinator::new(cfg)?;
+    let result = coord.sweep()?;
+    println!("{}", result.table());
+    let problems = check_fig5_shape(&result);
+    if problems.is_empty() {
+        println!("fig5 shape: REPRODUCED (orderings + memory reduction hold)");
+    } else {
+        for p in &problems {
+            println!("fig5 shape deviation: {p}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_retime(args: &Args) -> Result<()> {
+    let layers = args.usize_or("layers", 8)?;
+    let partition = match args.get("groups") {
+        Some(_) => {
+            let sizes = args.usize_list("groups", &[])?;
+            StagePartition::from_group_sizes(&sizes)?
+        }
+        None => StagePartition::even(layers, layers)?,
+    };
+    let d = Derivation::derive(partition.layers(), partition.stage_of())?;
+    d.verify()?;
+    println!("layers: {}  stages: {}", partition.layers(), partition.stages());
+    println!(
+        "{:<8} {:>6} {:>16} {:>12} {:>12}",
+        "layer", "stage", "Delay(l)=2S(l)", "act stash", "wt stash"
+    );
+    for l in 0..partition.layers() {
+        println!(
+            "{:<8} {:>6} {:>16} {:>12} {:>12}",
+            l,
+            partition.stage_of()[l],
+            d.gradient_delay[l],
+            d.act_stash_depth[l],
+            d.weight_stash_depth[l]
+        );
+    }
+    println!("verified: retimed graph legal, Eq.1 closed form holds");
+    Ok(())
+}
+
+fn cmd_dlms(args: &Args) -> Result<()> {
+    let delays = args.usize_list("delays", &[0, 1, 4, 16, 64])?;
+    let mu = args.f64_or("mu", 0.01)?;
+    let taps = args.usize_or("taps", 16)?;
+    let samples = args.usize_or("samples", 20_000)?;
+    println!(
+        "{:<8} {:>12} {:>16} {:>14} {:>10}",
+        "delay", "misalign", "steady MSE", "conv@1e-3", "stable"
+    );
+    for &delay in &delays {
+        let cfg = dlms::DlmsConfig { taps, mu, delay, samples, ..Default::default() };
+        let r = dlms::run(&cfg);
+        let conv = dlms::convergence_time(&r.mse_curve, 1e-3)
+            .map(|t| t.to_string())
+            .unwrap_or_else(|| "-".to_string());
+        println!(
+            "{:<8} {:>12.3e} {:>16.3e} {:>14} {:>10}",
+            delay, r.misalignment, r.steady_state_mse, conv, r.converged
+        );
+    }
+    println!("μ stability bound (white input): μ < 2/(σ²(T+2M))");
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let layers = args.usize_or("layers", 8)?;
+    let stages = args.usize_or("stages", 8)?;
+    let batches = args.usize_or("batches", 64)? as u64;
+    let p = StagePartition::even(layers, stages)?;
+    let s = Schedule::build(&p, batches);
+    println!("observed staleness per stage: {:?}", s.observed_staleness());
+    println!("stash versions per stage:     {:?}", s.stash_versions());
+    println!(
+        "utilization per stage:        {:?}",
+        s.utilization().iter().map(|u| format!("{u:.3}")).collect::<Vec<_>>()
+    );
+    let cost = CostModel::uniform(layers);
+    for (k, perf) in sweep_stages(layers, &cost, batches, &[1, 2, 4, stages.min(layers)]) {
+        println!(
+            "stages={k}: speedup {:.2}x  util {:.3}  bottleneck {:.1}",
+            perf.speedup, perf.mean_utilization, perf.bottleneck_cost
+        );
+    }
+    Ok(())
+}
+
+fn cmd_throughput(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let stage_counts = args.usize_list("stages", &[1, 2, 4, 8])?;
+    let batches = args.usize_or("batches", 200)?;
+    let depth = args.usize_or("depth", 4)?;
+    let engine = Arc::new(Engine::load(dir)?);
+    let m = engine.manifest().model.clone();
+    let cfg = layerpipe2::config::ModelConfig {
+        batch: m.batch,
+        input_dim: m.input_dim,
+        hidden_dim: m.hidden_dim,
+        classes: m.classes,
+        layers: m.layers,
+        init_scale: 1.0,
+    };
+    let mut rng = Rng::new(7);
+    let mlp = Mlp::init(&cfg, &mut rng);
+    let inputs: Vec<Tensor> =
+        (0..8).map(|_| Tensor::randn(&[m.batch, m.input_dim], 1.0, &mut rng)).collect();
+    let seq = pipeline::forward_sequential(&engine, &mlp, &inputs, batches)?;
+    println!("sequential: {:.1} batches/s", seq.batches_per_sec);
+    for &k in &stage_counts {
+        if k < 1 || k > m.layers {
+            continue;
+        }
+        let p = StagePartition::even(m.layers, k)?;
+        let r = pipeline::forward_throughput(&engine, &mlp, &p, inputs.clone(), batches, depth)?;
+        println!(
+            "stages={k}: {:.1} batches/s  speedup {:.2}x",
+            r.batches_per_sec,
+            r.batches_per_sec / seq.batches_per_sec
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Args;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_defaults() {
+        let a = args(&["--epochs", "5", "--strategy", "stashing", "--strategy", "latest"]);
+        assert_eq!(a.usize_or("epochs", 1).unwrap(), 5);
+        assert_eq!(a.usize_or("stages", 8).unwrap(), 8);
+        assert_eq!(a.get_all("strategy"), vec!["stashing", "latest"]);
+        assert_eq!(a.get("missing"), None);
+    }
+
+    #[test]
+    fn last_value_wins_for_get() {
+        let a = args(&["--seed", "1", "--seed", "2"]);
+        assert_eq!(a.get("seed"), Some("2"));
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = args(&["--delays", "0, 4,16"]);
+        assert_eq!(a.usize_list("delays", &[]).unwrap(), vec![0, 4, 16]);
+        assert_eq!(a.usize_list("other", &[7]).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn errors_are_helpful() {
+        assert!(Args::parse(&["bare".to_string()]).is_err());
+        assert!(Args::parse(&["--flag".to_string()]).is_err());
+        let a = args(&["--epochs", "many"]);
+        assert!(a.usize_or("epochs", 1).is_err());
+        assert!(args(&["--mu", "x"]).f64_or("mu", 0.1).is_err());
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let engine = Engine::load(dir)?;
+    let m = engine.manifest();
+    println!("preset: {}  fingerprint: {}", m.preset, m.fingerprint);
+    println!(
+        "model: batch={} input={} hidden={} classes={} layers={}",
+        m.model.batch, m.model.input_dim, m.model.hidden_dim, m.model.classes, m.model.layers
+    );
+    for e in &m.entries {
+        println!(
+            "  {:<16} {} inputs → {} outputs  ({})",
+            e.name,
+            e.inputs.len(),
+            e.outputs,
+            e.file
+        );
+    }
+    Ok(())
+}

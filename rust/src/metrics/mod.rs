@@ -1,0 +1,154 @@
+//! Training metrics: per-epoch records, CSV export, run summaries.
+
+use anyhow::{Context, Result};
+use std::io::Write;
+
+/// One epoch's measurements for one strategy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EpochMetrics {
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub test_accuracy: f32,
+    pub lr: f32,
+    /// Peak staleness-handling bytes (weight stash + EMA state).
+    pub staleness_bytes: usize,
+    /// Peak activation-stash bytes.
+    pub activation_bytes: usize,
+    /// Wall-clock seconds spent in this epoch.
+    pub seconds: f64,
+}
+
+/// A full training curve for one strategy.
+#[derive(Clone, Debug, Default)]
+pub struct RunCurve {
+    pub strategy: String,
+    pub epochs: Vec<EpochMetrics>,
+}
+
+impl RunCurve {
+    pub fn final_accuracy(&self) -> f32 {
+        self.epochs.last().map_or(0.0, |e| e.test_accuracy)
+    }
+
+    pub fn best_accuracy(&self) -> f32 {
+        self.epochs.iter().map(|e| e.test_accuracy).fold(0.0, f32::max)
+    }
+
+    /// Mean accuracy over the last `k` epochs (steady-state comparison —
+    /// single-epoch values are noisy at small scale).
+    pub fn tail_accuracy(&self, k: usize) -> f32 {
+        let n = self.epochs.len().min(k).max(1);
+        let s: f32 = self.epochs.iter().rev().take(n).map(|e| e.test_accuracy).sum();
+        s / n as f32
+    }
+
+    pub fn peak_staleness_bytes(&self) -> usize {
+        self.epochs.iter().map(|e| e.staleness_bytes).max().unwrap_or(0)
+    }
+}
+
+/// Write a set of curves to CSV: `strategy,epoch,train_loss,test_acc,...`.
+pub fn write_csv(path: &str, curves: &[RunCurve]) -> Result<()> {
+    let mut f = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    writeln!(
+        f,
+        "strategy,epoch,train_loss,test_accuracy,lr,staleness_bytes,activation_bytes,seconds"
+    )?;
+    for c in curves {
+        for e in &c.epochs {
+            writeln!(
+                f,
+                "{},{},{:.6},{:.4},{:.6},{},{},{:.3}",
+                c.strategy,
+                e.epoch,
+                e.train_loss,
+                e.test_accuracy,
+                e.lr,
+                e.staleness_bytes,
+                e.activation_bytes,
+                e.seconds
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// Render curves as a fixed-width comparison table (stdout reporting).
+pub fn accuracy_table(curves: &[RunCurve]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>10} {:>10} {:>10} {:>14}\n",
+        "strategy", "final acc", "best acc", "tail3 acc", "staleness KiB"
+    ));
+    for c in curves {
+        out.push_str(&format!(
+            "{:<16} {:>10.4} {:>10.4} {:>10.4} {:>14.1}\n",
+            c.strategy,
+            c.final_accuracy(),
+            c.best_accuracy(),
+            c.tail_accuracy(3),
+            c.peak_staleness_bytes() as f64 / 1024.0
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(name: &str, accs: &[f32]) -> RunCurve {
+        RunCurve {
+            strategy: name.to_string(),
+            epochs: accs
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| EpochMetrics {
+                    epoch: i,
+                    train_loss: 1.0 / (i + 1) as f32,
+                    test_accuracy: a,
+                    lr: 0.1,
+                    staleness_bytes: 1024 * (i + 1),
+                    activation_bytes: 64,
+                    seconds: 0.5,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn summaries() {
+        let c = curve("stashing", &[0.1, 0.5, 0.4]);
+        assert_eq!(c.final_accuracy(), 0.4);
+        assert_eq!(c.best_accuracy(), 0.5);
+        assert!((c.tail_accuracy(2) - 0.45).abs() < 1e-6);
+        assert_eq!(c.peak_staleness_bytes(), 3072);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let path = std::env::temp_dir().join("lp2_metrics_test.csv");
+        let path = path.to_str().unwrap();
+        write_csv(path, &[curve("a", &[0.1, 0.2]), curve("b", &[0.3])]).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4); // header + 3 rows
+        assert!(lines[0].starts_with("strategy,epoch"));
+        assert!(lines[1].starts_with("a,0,"));
+        assert!(lines[3].starts_with("b,0,"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn table_contains_all_strategies() {
+        let t = accuracy_table(&[curve("x", &[0.5]), curve("y", &[0.6])]);
+        assert!(t.contains('x') && t.contains('y'));
+    }
+
+    #[test]
+    fn empty_curve_is_safe() {
+        let c = RunCurve { strategy: "e".into(), epochs: vec![] };
+        assert_eq!(c.final_accuracy(), 0.0);
+        assert_eq!(c.tail_accuracy(3), 0.0);
+    }
+}

@@ -1,0 +1,245 @@
+//! Checkpointing: save/restore model parameters deterministically.
+//!
+//! Own binary format (serde is unavailable offline): a small header,
+//! then per-layer `(role, shape, f32 data)` records, little-endian, with
+//! a trailing FNV-1a checksum so truncated/corrupted files are rejected
+//! rather than silently loaded.
+
+use super::{LayerRole, Mlp};
+use crate::tensor::Tensor;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 8] = b"LPIPE2CK";
+const VERSION: u32 = 1;
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(), "checkpoint truncated");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+}
+
+fn role_tag(role: LayerRole) -> u32 {
+    match role {
+        LayerRole::Input => 0,
+        LayerRole::Hidden => 1,
+        LayerRole::Output => 2,
+    }
+}
+
+fn tag_role(tag: u32) -> Result<LayerRole> {
+    Ok(match tag {
+        0 => LayerRole::Input,
+        1 => LayerRole::Hidden,
+        2 => LayerRole::Output,
+        other => bail!("unknown layer role tag {other}"),
+    })
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    put_u32(out, t.ndim() as u32);
+    for &d in t.shape() {
+        put_u64(out, d as u64);
+    }
+    for &v in t.data() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn read_tensor(r: &mut Reader<'_>) -> Result<Tensor> {
+    let ndim = r.u32()? as usize;
+    ensure!(ndim <= 8, "implausible tensor rank {ndim}");
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(r.u64()? as usize);
+    }
+    let n: usize = shape.iter().product();
+    ensure!(n <= 1 << 28, "implausible tensor size {n}");
+    let raw = r.take(4 * n)?;
+    let data = raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+        .collect();
+    Ok(Tensor::from_vec(&shape, data))
+}
+
+/// Serialize the model parameters.
+pub fn to_bytes(mlp: &Mlp) -> Vec<u8> {
+    let mut out = Vec::with_capacity(mlp.nbytes() + 256);
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, VERSION);
+    put_u32(&mut out, mlp.layers.len() as u32);
+    for lp in &mlp.layers {
+        put_u32(&mut out, role_tag(lp.role));
+        put_tensor(&mut out, &lp.w);
+        put_tensor(&mut out, &lp.b);
+    }
+    let sum = fnv1a(&out);
+    put_u64(&mut out, sum);
+    out
+}
+
+/// Restore parameters into an existing (architecture-matching) model.
+pub fn from_bytes(mlp: &mut Mlp, bytes: &[u8]) -> Result<()> {
+    ensure!(bytes.len() >= 8 + 4 + 4 + 8, "checkpoint too short");
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let want = u64::from_le_bytes(tail.try_into().expect("8 bytes"));
+    ensure!(fnv1a(body) == want, "checkpoint checksum mismatch (corrupted file)");
+
+    let mut r = Reader { buf: body, pos: 0 };
+    ensure!(r.take(8)? == MAGIC, "not a layerpipe2 checkpoint");
+    let version = r.u32()?;
+    ensure!(version == VERSION, "unsupported checkpoint version {version}");
+    let layers = r.u32()? as usize;
+    ensure!(
+        layers == mlp.layers.len(),
+        "checkpoint has {layers} layers, model has {}",
+        mlp.layers.len()
+    );
+    for (i, lp) in mlp.layers.iter_mut().enumerate() {
+        let role = tag_role(r.u32()?)?;
+        ensure!(role == lp.role, "layer {i}: role mismatch");
+        let w = read_tensor(&mut r)?;
+        let b = read_tensor(&mut r)?;
+        ensure!(w.shape() == lp.w.shape(), "layer {i}: weight shape mismatch");
+        ensure!(b.shape() == lp.b.shape(), "layer {i}: bias shape mismatch");
+        lp.w = w;
+        lp.b = b;
+    }
+    ensure!(r.pos == body.len(), "trailing bytes in checkpoint");
+    Ok(())
+}
+
+/// Save to a file.
+pub fn save(mlp: &Mlp, path: &str) -> Result<()> {
+    let bytes = to_bytes(mlp);
+    let mut f = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Load from a file into an architecture-matching model.
+pub fn load(mlp: &mut Mlp, path: &str) -> Result<()> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {path}"))?
+        .read_to_end(&mut bytes)?;
+    from_bytes(mlp, &bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::util::Rng;
+
+    fn model() -> Mlp {
+        let cfg = ModelConfig {
+            batch: 4,
+            input_dim: 8,
+            hidden_dim: 6,
+            classes: 3,
+            layers: 3,
+            init_scale: 1.0,
+        };
+        let mut rng = Rng::new(77);
+        Mlp::init(&cfg, &mut rng)
+    }
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let src = model();
+        let bytes = to_bytes(&src);
+        let mut dst = model();
+        // Perturb so restore is observable.
+        dst.layers[1].w.scale(0.0);
+        from_bytes(&mut dst, &bytes).unwrap();
+        for (a, b) in src.layers.iter().zip(&dst.layers) {
+            assert_eq!(a.w, b.w);
+            assert_eq!(a.b, b.b);
+        }
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let src = model();
+        let mut bytes = to_bytes(&src);
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        let mut dst = model();
+        let err = from_bytes(&mut dst, &bytes).err().expect("must fail");
+        assert!(format!("{err:#}").contains("checksum"));
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let src = model();
+        let bytes = to_bytes(&src);
+        let mut dst = model();
+        assert!(from_bytes(&mut dst, &bytes[..bytes.len() - 9]).is_err());
+        assert!(from_bytes(&mut dst, &bytes[..4]).is_err());
+    }
+
+    #[test]
+    fn architecture_mismatch_is_rejected() {
+        let src = model();
+        let bytes = to_bytes(&src);
+        let cfg = ModelConfig {
+            batch: 4,
+            input_dim: 8,
+            hidden_dim: 6,
+            classes: 3,
+            layers: 4, // one more layer
+            init_scale: 1.0,
+        };
+        let mut rng = Rng::new(1);
+        let mut other = Mlp::init(&cfg, &mut rng);
+        assert!(from_bytes(&mut other, &bytes).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let src = model();
+        let path = std::env::temp_dir().join(format!("lp2_ck_{}.bin", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        save(&src, &path).unwrap();
+        let mut dst = model();
+        dst.layers[0].b.data_mut()[0] = 42.0;
+        load(&mut dst, &path).unwrap();
+        assert_eq!(src.layers[0].b, dst.layers[0].b);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,251 @@
+//! Model layer: the MLP whose per-layer compute lives in AOT artifacts.
+//!
+//! Rust owns the parameters (host tensors), their initialization, and the
+//! layer→artifact mapping; XLA owns the math. One `dense_fwd_hid` /
+//! `dense_bwd_hid` artifact serves every hidden layer because all hidden
+//! layers share the `[H, H]` shape — the artifact set stays O(1) in depth.
+
+pub mod checkpoint;
+
+use crate::config::ModelConfig;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use anyhow::{ensure, Result};
+
+/// Which artifact pair a layer dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerRole {
+    /// First layer: `[B, D] → [B, H]`, ReLU.
+    Input,
+    /// Middle layers: `[B, H] → [B, H]`, ReLU.
+    Hidden,
+    /// Last layer: `[B, H] → [B, C]`, linear (logits).
+    Output,
+}
+
+impl LayerRole {
+    pub fn of(layer: usize, layers: usize) -> LayerRole {
+        if layer == 0 {
+            LayerRole::Input
+        } else if layer + 1 == layers {
+            LayerRole::Output
+        } else {
+            LayerRole::Hidden
+        }
+    }
+
+    pub fn fwd_artifact(&self) -> &'static str {
+        match self {
+            LayerRole::Input => "dense_fwd_in",
+            LayerRole::Hidden => "dense_fwd_hid",
+            LayerRole::Output => "dense_fwd_out",
+        }
+    }
+
+    pub fn bwd_artifact(&self) -> &'static str {
+        match self {
+            LayerRole::Input => "dense_bwd_in",
+            LayerRole::Hidden => "dense_bwd_hid",
+            LayerRole::Output => "dense_bwd_out",
+        }
+    }
+
+    pub fn has_relu(&self) -> bool {
+        !matches!(self, LayerRole::Output)
+    }
+}
+
+/// One layer's parameters.
+#[derive(Clone, Debug)]
+pub struct LayerParams {
+    pub w: Tensor,
+    pub b: Tensor,
+    pub role: LayerRole,
+}
+
+impl LayerParams {
+    pub fn nbytes(&self) -> usize {
+        self.w.nbytes() + self.b.nbytes()
+    }
+}
+
+/// The full MLP parameter set.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<LayerParams>,
+    pub cfg: ModelConfig,
+}
+
+impl Mlp {
+    /// He-initialized parameters (ReLU network), biases at zero.
+    pub fn init(cfg: &ModelConfig, rng: &mut Rng) -> Mlp {
+        let mut layers = Vec::with_capacity(cfg.layers);
+        for l in 0..cfg.layers {
+            let role = LayerRole::of(l, cfg.layers);
+            let (din, dout) = layer_dims(cfg, l);
+            let std = cfg.init_scale * (2.0 / din as f32).sqrt();
+            layers.push(LayerParams {
+                w: Tensor::randn(&[din, dout], std, rng),
+                b: Tensor::zeros(&[dout]),
+                role,
+            });
+        }
+        Mlp { layers, cfg: cfg.clone() }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total parameter bytes (memory accounting baseline).
+    pub fn nbytes(&self) -> usize {
+        self.layers.iter().map(LayerParams::nbytes).sum()
+    }
+
+    /// Total scalar parameter count.
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.w.len() + l.b.len()).sum()
+    }
+
+    /// Forward one layer through the engine. Returns the activation.
+    pub fn forward_layer(&self, engine: &Engine, l: usize, x: &Tensor) -> Result<Tensor> {
+        self.forward_layer_with(engine, l, x, &self.layers[l].w, &self.layers[l].b)
+    }
+
+    /// Forward one layer with an explicit weight version (strategies may
+    /// substitute stashed/reconstructed weights).
+    pub fn forward_layer_with(
+        &self,
+        engine: &Engine,
+        l: usize,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+    ) -> Result<Tensor> {
+        let role = self.layers[l].role;
+        let mut out = engine.run(role.fwd_artifact(), &[x, w, b])?;
+        ensure!(out.len() == 1, "forward artifact returns one tensor");
+        Ok(out.pop().expect("one output"))
+    }
+
+    /// Backward one layer with an explicit weight version.
+    /// Returns `(dx, dw, db)`.
+    pub fn backward_layer_with(
+        &self,
+        engine: &Engine,
+        l: usize,
+        x: &Tensor,
+        y: &Tensor,
+        w: &Tensor,
+        dy: &Tensor,
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        let role = self.layers[l].role;
+        let out = if role.has_relu() {
+            engine.run(role.bwd_artifact(), &[x, y, w, dy])?
+        } else {
+            engine.run(role.bwd_artifact(), &[x, w, dy])?
+        };
+        ensure!(out.len() == 3, "backward artifact returns (dx, dw, db)");
+        let mut it = out.into_iter();
+        Ok((
+            it.next().expect("dx"),
+            it.next().expect("dw"),
+            it.next().expect("db"),
+        ))
+    }
+
+    /// Loss + initial gradient + #correct via the `loss_grad` artifact.
+    pub fn loss_grad(
+        &self,
+        engine: &Engine,
+        logits: &Tensor,
+        onehot: &Tensor,
+    ) -> Result<(f32, Tensor, f32)> {
+        let out = engine.run("loss_grad", &[logits, onehot])?;
+        ensure!(out.len() == 3, "loss_grad returns (loss, dlogits, correct)");
+        let mut it = out.into_iter();
+        let loss = it.next().expect("loss").data()[0];
+        let dlogits = it.next().expect("dlogits");
+        let correct = it.next().expect("correct").data()[0];
+        Ok((loss, dlogits, correct))
+    }
+
+    /// Fused full-network forward (eval path): one dispatch instead of L.
+    pub fn forward_full(&self, engine: &Engine, x: &Tensor) -> Result<Tensor> {
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(1 + 2 * self.layers.len());
+        inputs.push(x);
+        for lp in &self.layers {
+            inputs.push(&lp.w);
+            inputs.push(&lp.b);
+        }
+        let mut out = engine.run("fwd_full", &inputs)?;
+        ensure!(out.len() == 1, "fwd_full returns logits");
+        Ok(out.pop().expect("logits"))
+    }
+}
+
+/// `(din, dout)` of layer `l` under a config.
+pub fn layer_dims(cfg: &ModelConfig, l: usize) -> (usize, usize) {
+    let din = if l == 0 { cfg.input_dim } else { cfg.hidden_dim };
+    let dout = if l + 1 == cfg.layers { cfg.classes } else { cfg.hidden_dim };
+    (din, dout)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { batch: 4, input_dim: 8, hidden_dim: 8, classes: 4, layers: 3, init_scale: 1.0 }
+    }
+
+    #[test]
+    fn roles_and_artifacts() {
+        assert_eq!(LayerRole::of(0, 3), LayerRole::Input);
+        assert_eq!(LayerRole::of(1, 3), LayerRole::Hidden);
+        assert_eq!(LayerRole::of(2, 3), LayerRole::Output);
+        assert_eq!(LayerRole::Input.fwd_artifact(), "dense_fwd_in");
+        assert_eq!(LayerRole::Output.bwd_artifact(), "dense_bwd_out");
+        assert!(LayerRole::Hidden.has_relu());
+        assert!(!LayerRole::Output.has_relu());
+    }
+
+    #[test]
+    fn two_layer_net_has_no_hidden() {
+        assert_eq!(LayerRole::of(0, 2), LayerRole::Input);
+        assert_eq!(LayerRole::of(1, 2), LayerRole::Output);
+    }
+
+    #[test]
+    fn init_shapes_and_counts() {
+        let mut rng = Rng::new(1);
+        let m = Mlp::init(&cfg(), &mut rng);
+        assert_eq!(m.num_layers(), 3);
+        assert_eq!(m.layers[0].w.shape(), &[8, 8]);
+        assert_eq!(m.layers[2].w.shape(), &[8, 4]);
+        assert_eq!(m.layers[2].b.shape(), &[4]);
+        assert_eq!(m.num_params(), 8 * 8 + 8 + 8 * 8 + 8 + 8 * 4 + 4);
+        assert_eq!(m.nbytes(), m.num_params() * 4);
+    }
+
+    #[test]
+    fn he_init_scale() {
+        let mut rng = Rng::new(2);
+        let c = ModelConfig { input_dim: 512, hidden_dim: 512, ..cfg() };
+        let m = Mlp::init(&c, &mut rng);
+        let w = &m.layers[0].w;
+        let var: f32 =
+            w.data().iter().map(|x| x * x).sum::<f32>() / w.len() as f32;
+        let expect = 2.0 / 512.0;
+        assert!((var - expect).abs() < 0.2 * expect, "var {var} vs {expect}");
+    }
+
+    #[test]
+    fn layer_dims_table() {
+        let c = cfg();
+        assert_eq!(layer_dims(&c, 0), (8, 8));
+        assert_eq!(layer_dims(&c, 1), (8, 8));
+        assert_eq!(layer_dims(&c, 2), (8, 4));
+    }
+}

@@ -1,0 +1,78 @@
+//! Learning-rate schedules. The paper uses cosine annealing from the
+//! initial lr over the full training horizon (§IV-A).
+
+/// A learning-rate schedule over global steps.
+pub trait LrSchedule: Send + Sync {
+    /// Learning rate at 0-indexed global step `t` of `total` steps.
+    fn lr(&self, t: usize) -> f32;
+}
+
+/// Constant learning rate.
+#[derive(Clone, Debug)]
+pub struct ConstantLr(pub f32);
+
+impl LrSchedule for ConstantLr {
+    fn lr(&self, _t: usize) -> f32 {
+        self.0
+    }
+}
+
+/// Cosine annealing: `min + (max−min)·(1+cos(π·t/T))/2`, clamped at `T`.
+#[derive(Clone, Debug)]
+pub struct CosineLr {
+    pub max_lr: f32,
+    pub min_lr: f32,
+    pub total_steps: usize,
+}
+
+impl CosineLr {
+    pub fn new(max_lr: f32, min_lr: f32, total_steps: usize) -> Self {
+        assert!(total_steps > 0);
+        CosineLr { max_lr, min_lr, total_steps }
+    }
+}
+
+impl LrSchedule for CosineLr {
+    fn lr(&self, t: usize) -> f32 {
+        let t = t.min(self.total_steps) as f32;
+        let frac = t / self.total_steps as f32;
+        let cos = (std::f32::consts::PI * frac).cos();
+        self.min_lr + (self.max_lr - self.min_lr) * 0.5 * (1.0 + cos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_endpoints() {
+        let s = CosineLr::new(0.1, 0.001, 100);
+        assert!((s.lr(0) - 0.1).abs() < 1e-7);
+        assert!((s.lr(100) - 0.001).abs() < 1e-7);
+        assert!((s.lr(50) - 0.0505).abs() < 1e-4);
+    }
+
+    #[test]
+    fn cosine_is_monotone_decreasing() {
+        let s = CosineLr::new(0.1, 0.0, 200);
+        let mut prev = f32::INFINITY;
+        for t in 0..=200 {
+            let lr = s.lr(t);
+            assert!(lr <= prev + 1e-9, "t={t}");
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn cosine_clamps_past_horizon() {
+        let s = CosineLr::new(0.1, 0.01, 10);
+        assert_eq!(s.lr(10), s.lr(999));
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = ConstantLr(0.05);
+        assert_eq!(s.lr(0), s.lr(12345));
+    }
+}

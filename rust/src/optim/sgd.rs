@@ -1,0 +1,91 @@
+//! SGD with momentum and decoupled-style weight decay (PyTorch semantics:
+//! weight decay is added to the gradient before the momentum buffer).
+
+use super::Optimizer;
+use crate::tensor::Tensor;
+
+/// `v ← μ·v + (g + wd·w)`; `w ← w − lr·v`.
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    velocity: Tensor,
+    momentum: f32,
+    weight_decay: f32,
+    steps: u64,
+}
+
+impl Sgd {
+    pub fn new(shape: &[usize], momentum: f32, weight_decay: f32) -> Self {
+        Sgd { velocity: Tensor::zeros(shape), momentum, weight_decay, steps: 0 }
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, weights: &mut Tensor, grad: &Tensor, lr: f32) -> Tensor {
+        assert_eq!(weights.shape(), grad.shape(), "sgd shape mismatch");
+        let mu = self.momentum;
+        let wd = self.weight_decay;
+        for ((v, g), w) in self
+            .velocity
+            .data_mut()
+            .iter_mut()
+            .zip(grad.data().iter())
+            .zip(weights.data().iter())
+        {
+            *v = mu * *v + (g + wd * w);
+        }
+        // Applied update U = velocity; W ← W − lr·U.
+        for (w, v) in weights.data_mut().iter_mut().zip(self.velocity.data().iter()) {
+            *w -= lr * v;
+        }
+        self.steps += 1;
+        self.velocity.clone()
+    }
+
+    fn state_nbytes(&self) -> usize {
+        self.velocity.nbytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_matches_hand_calc() {
+        let mut sgd = Sgd::new(&[2], 0.0, 0.0);
+        let mut w = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let g = Tensor::from_vec(&[2], vec![0.5, -0.5]);
+        sgd.step(&mut w, &g, 0.1);
+        assert_eq!(w.data(), &[0.95, 2.05]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut sgd = Sgd::new(&[1], 0.5, 0.0);
+        let mut w = Tensor::from_vec(&[1], vec![0.0]);
+        let g = Tensor::from_vec(&[1], vec![1.0]);
+        sgd.step(&mut w, &g, 1.0); // v=1, w=-1
+        sgd.step(&mut w, &g, 1.0); // v=1.5, w=-2.5
+        assert!((w.data()[0] + 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_weights() {
+        let mut sgd = Sgd::new(&[1], 0.0, 0.1);
+        let mut w = Tensor::from_vec(&[1], vec![10.0]);
+        let g = Tensor::zeros(&[1]);
+        sgd.step(&mut w, &g, 0.1);
+        // v = 0.1*10 = 1; w = 10 - 0.1*1 = 9.9
+        assert!((w.data()[0] - 9.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn state_accounting() {
+        let sgd = Sgd::new(&[8, 8], 0.9, 0.0);
+        assert_eq!(sgd.state_nbytes(), 256);
+    }
+}

@@ -1,0 +1,138 @@
+//! Threaded pipeline runtime: real concurrent stage execution.
+//!
+//! The [`crate::train::Trainer`] runs the pipeline's *semantics*
+//! (delayed gradients) single-threaded for deterministic Fig. 5 curves;
+//! this module runs the pipeline *physically*: one OS thread per stage,
+//! activations flowing through bounded channels, each stage executing
+//! its layers' forward artifacts through the shared PJRT engine. It
+//! measures the throughput side of LayerPipe — speedup and utilization
+//! versus sequential execution — on real XLA compute rather than the
+//! abstract cost model of [`crate::schedule`].
+//!
+//! tokio is unavailable offline; `std::thread` + `mpsc::sync_channel`
+//! provide the same bounded-queue backpressure structure.
+
+use crate::model::Mlp;
+use crate::retiming::StagePartition;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::util::Stopwatch;
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Throughput measurement of one run.
+#[derive(Clone, Debug)]
+pub struct ThroughputReport {
+    pub stages: usize,
+    pub batches: usize,
+    pub seconds: f64,
+    pub batches_per_sec: f64,
+}
+
+/// Run `batches` forward passes through a `stages`-stage pipeline — one
+/// OS thread per stage, pre-built inputs cycled through the feeder —
+/// returning the measured throughput.
+///
+/// `depth` bounds each inter-stage queue (backpressure): the number of
+/// in-flight batches ≈ `stages · depth`, mirroring the activation-stash
+/// budget of the schedule model.
+pub fn forward_throughput(
+    engine: &Arc<Engine>,
+    mlp: &Mlp,
+    partition: &StagePartition,
+    inputs: Vec<Tensor>,
+    batches: usize,
+    depth: usize,
+) -> Result<ThroughputReport> {
+    let k = partition.stages();
+    assert!(k >= 1 && depth >= 1 && batches >= 1 && !inputs.is_empty());
+
+    let sw = Stopwatch::start();
+    let mut txs = Vec::with_capacity(k + 1);
+    let mut rxs = Vec::with_capacity(k + 1);
+    for _ in 0..=k {
+        let (tx, rx) = mpsc::sync_channel::<Tensor>(depth);
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    let mut rx_iter = rxs.into_iter();
+    let mut handles = Vec::with_capacity(k);
+    for s in 0..k {
+        let rx = rx_iter.next().expect("stage rx");
+        let tx = txs[s + 1].clone();
+        let engine = Arc::clone(engine);
+        let params: Vec<(Tensor, Tensor, crate::model::LayerRole)> = partition
+            .layers_in_stage(s)
+            .iter()
+            .map(|&l| (mlp.layers[l].w.clone(), mlp.layers[l].b.clone(), mlp.layers[l].role))
+            .collect();
+        handles.push(std::thread::spawn(move || -> Result<usize> {
+            let mut count = 0usize;
+            while let Ok(mut h) = rx.recv() {
+                for (w, b, role) in &params {
+                    let out = engine
+                        .run(role.fwd_artifact(), &[&h, w, b])
+                        .context("stage forward")?;
+                    h = out.into_iter().next().expect("activation");
+                }
+                count += 1;
+                if tx.send(h).is_err() {
+                    break;
+                }
+            }
+            Ok(count)
+        }));
+    }
+    let feeder = txs.remove(0);
+    drop(txs);
+    let collector = rx_iter.next().expect("collector rx");
+
+    let feed = std::thread::spawn(move || {
+        for i in 0..batches {
+            let x = inputs[i % inputs.len()].clone();
+            if feeder.send(x).is_err() {
+                break;
+            }
+        }
+    });
+
+    let mut received = 0usize;
+    while received < batches {
+        collector
+            .recv()
+            .map_err(|_| anyhow::anyhow!("pipeline closed early at {received}/{batches}"))?;
+        received += 1;
+    }
+    drop(collector);
+    feed.join().expect("feeder join");
+    for h in handles {
+        let processed = h.join().expect("stage join")?;
+        debug_assert!(processed >= batches);
+    }
+    let seconds = sw.elapsed_secs();
+    Ok(ThroughputReport {
+        stages: k,
+        batches,
+        seconds,
+        batches_per_sec: batches as f64 / seconds,
+    })
+}
+
+/// Sequential reference: the same `batches` forwards on one thread.
+pub fn forward_sequential(
+    engine: &Arc<Engine>,
+    mlp: &Mlp,
+    inputs: &[Tensor],
+    batches: usize,
+) -> Result<ThroughputReport> {
+    let sw = Stopwatch::start();
+    for i in 0..batches {
+        let mut h = inputs[i % inputs.len()].clone();
+        for l in 0..mlp.num_layers() {
+            h = mlp.forward_layer(engine, l, &h)?;
+        }
+    }
+    let seconds = sw.elapsed_secs();
+    Ok(ThroughputReport { stages: 1, batches, seconds, batches_per_sec: batches as f64 / seconds })
+}

@@ -1,0 +1,137 @@
+//! Layer→stage partitioning (paper §III-C: arbitrary pipeline partitions).
+
+use anyhow::{ensure, Result};
+
+/// A contiguous partition of `layers` into `stages` pipeline stages.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StagePartition {
+    stage_of: Vec<usize>,
+    stages: usize,
+}
+
+impl StagePartition {
+    /// Even contiguous split: remainders go to the *earliest* stages so
+    /// later (outer) stages — which also carry the least gradient delay —
+    /// stay lightest, matching LayerPipe's load-balancing intuition.
+    pub fn even(layers: usize, stages: usize) -> Result<Self> {
+        ensure!(stages >= 1, "need at least one stage");
+        ensure!(stages <= layers, "stages ({stages}) exceed layers ({layers})");
+        let base = layers / stages;
+        let extra = layers % stages;
+        let mut stage_of = Vec::with_capacity(layers);
+        for s in 0..stages {
+            let size = base + usize::from(s < extra);
+            stage_of.extend(std::iter::repeat(s).take(size));
+        }
+        Ok(StagePartition { stage_of, stages })
+    }
+
+    /// Explicit group sizes, e.g. `[2, 2, 4]` for 8 layers in 3 stages.
+    pub fn from_group_sizes(sizes: &[usize]) -> Result<Self> {
+        ensure!(!sizes.is_empty(), "need at least one group");
+        ensure!(sizes.iter().all(|&s| s > 0), "group sizes must be positive");
+        let mut stage_of = Vec::new();
+        for (s, &size) in sizes.iter().enumerate() {
+            stage_of.extend(std::iter::repeat(s).take(size));
+        }
+        Ok(StagePartition { stage_of, stages: sizes.len() })
+    }
+
+    /// From a raw assignment vector (validated).
+    pub fn from_stage_of(stage_of: Vec<usize>) -> Result<Self> {
+        ensure!(!stage_of.is_empty(), "empty partition");
+        ensure!(stage_of[0] == 0, "first layer must be in stage 0");
+        for w in stage_of.windows(2) {
+            ensure!(w[1] >= w[0] && w[1] - w[0] <= 1, "stages must be contiguous ascending");
+        }
+        let stages = stage_of.last().unwrap() + 1;
+        Ok(StagePartition { stage_of, stages })
+    }
+
+    pub fn layers(&self) -> usize {
+        self.stage_of.len()
+    }
+
+    pub fn stages(&self) -> usize {
+        self.stages
+    }
+
+    pub fn stage_of(&self) -> &[usize] {
+        &self.stage_of
+    }
+
+    /// Stages after layer `l`'s stage — the `S(l)` of Eq. 1.
+    pub fn downstream_stages(&self, layer: usize) -> usize {
+        self.stages - 1 - self.stage_of[layer]
+    }
+
+    /// `Delay(l) = 2·S(l)` for every layer.
+    pub fn gradient_delays(&self) -> Vec<usize> {
+        (0..self.layers()).map(|l| 2 * self.downstream_stages(l)).collect()
+    }
+
+    /// Layers in stage `s`.
+    pub fn layers_in_stage(&self, s: usize) -> Vec<usize> {
+        (0..self.layers()).filter(|&l| self.stage_of[l] == s).collect()
+    }
+
+    /// The maximum delay any layer carries (stage-0 layers): `2·(K−1)`.
+    pub fn max_delay(&self) -> usize {
+        2 * (self.stages - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_split_balances() {
+        let p = StagePartition::even(8, 3).unwrap();
+        assert_eq!(p.stage_of(), &[0, 0, 0, 1, 1, 1, 2, 2]);
+        assert_eq!(p.stages(), 3);
+    }
+
+    #[test]
+    fn per_layer_split() {
+        let p = StagePartition::even(4, 4).unwrap();
+        assert_eq!(p.stage_of(), &[0, 1, 2, 3]);
+        assert_eq!(p.gradient_delays(), vec![6, 4, 2, 0]);
+        assert_eq!(p.max_delay(), 6);
+    }
+
+    #[test]
+    fn group_sizes() {
+        let p = StagePartition::from_group_sizes(&[2, 2]).unwrap();
+        assert_eq!(p.stage_of(), &[0, 0, 1, 1]);
+        assert_eq!(p.gradient_delays(), vec![2, 2, 0, 0]);
+        assert_eq!(p.layers_in_stage(0), vec![0, 1]);
+    }
+
+    #[test]
+    fn single_stage_is_sequential() {
+        let p = StagePartition::even(5, 1).unwrap();
+        assert_eq!(p.gradient_delays(), vec![0; 5]);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(StagePartition::even(2, 3).is_err());
+        assert!(StagePartition::even(2, 0).is_err());
+        assert!(StagePartition::from_group_sizes(&[]).is_err());
+        assert!(StagePartition::from_group_sizes(&[1, 0]).is_err());
+        assert!(StagePartition::from_stage_of(vec![1, 2]).is_err());
+        assert!(StagePartition::from_stage_of(vec![0, 2]).is_err());
+    }
+
+    #[test]
+    fn downstream_matches_formula() {
+        let p = StagePartition::even(6, 3).unwrap();
+        for l in 0..6 {
+            assert_eq!(
+                p.gradient_delays()[l],
+                2 * p.downstream_stages(l),
+            );
+        }
+    }
+}

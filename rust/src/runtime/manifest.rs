@@ -1,0 +1,171 @@
+//! `artifacts/manifest.json` schema (written by `python/compile/aot.py`).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One lowered artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    /// Input shapes, in call order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Number of tuple outputs.
+    pub outputs: usize,
+    /// Output shapes, in tuple order.
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// Shape parameters the artifacts were lowered at.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelShape {
+    pub batch: usize,
+    pub input_dim: usize,
+    pub hidden_dim: usize,
+    pub classes: usize,
+    pub layers: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub fingerprint: String,
+    pub model: ModelShape,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text).with_context(|| format!("parsing manifest {path:?}"))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).context("manifest is not valid JSON")?;
+        let need_str = |v: &Json, k: &str| -> Result<String> {
+            Ok(v.get(k)
+                .and_then(Json::as_str)
+                .with_context(|| format!("manifest missing string '{k}'"))?
+                .to_string())
+        };
+        let model_v = root.get("model").context("manifest missing 'model'")?;
+        let need_dim = |k: &str| -> Result<usize> {
+            model_v
+                .get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("model missing '{k}'"))
+        };
+        let model = ModelShape {
+            batch: need_dim("batch")?,
+            input_dim: need_dim("input_dim")?,
+            hidden_dim: need_dim("hidden_dim")?,
+            classes: need_dim("classes")?,
+            layers: need_dim("layers")?,
+        };
+        let mut entries = Vec::new();
+        for e in root
+            .get("entries")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'entries'")?
+        {
+            let shapes = |k: &str| -> Result<Vec<Vec<usize>>> {
+                e.get(k)
+                    .and_then(Json::as_arr)
+                    .with_context(|| format!("entry missing '{k}'"))?
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .context("shape must be an array")?
+                            .iter()
+                            .map(|d| d.as_usize().context("dim must be a non-negative int"))
+                            .collect()
+                    })
+                    .collect()
+            };
+            let entry = ManifestEntry {
+                name: need_str(e, "name")?,
+                file: need_str(e, "file")?,
+                inputs: shapes("inputs")?,
+                outputs: e
+                    .get("outputs")
+                    .and_then(Json::as_usize)
+                    .context("entry missing 'outputs'")?,
+                output_shapes: shapes("output_shapes")?,
+            };
+            if entry.outputs != entry.output_shapes.len() {
+                bail!(
+                    "entry {}: outputs {} != output_shapes len {}",
+                    entry.name,
+                    entry.outputs,
+                    entry.output_shapes.len()
+                );
+            }
+            entries.push(entry);
+        }
+        if entries.is_empty() {
+            bail!("manifest has no entries");
+        }
+        Ok(Manifest {
+            preset: need_str(&root, "preset")?,
+            fingerprint: need_str(&root, "fingerprint")?,
+            model,
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "preset": "tiny", "fingerprint": "abc123",
+      "model": {"batch": 4, "input_dim": 8, "hidden_dim": 8, "classes": 4, "layers": 3},
+      "entries": [
+        {"name": "dense_fwd_hid", "file": "dense_fwd_hid.hlo.txt",
+         "inputs": [[4, 8], [8, 8], [8]], "outputs": 1, "output_shapes": [[4, 8]]},
+        {"name": "loss_grad", "file": "loss_grad.hlo.txt",
+         "inputs": [[4, 4], [4, 4]], "outputs": 3,
+         "output_shapes": [[], [4, 4], []]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.model.batch, 4);
+        assert_eq!(m.entries.len(), 2);
+        let e = m.entry("loss_grad").unwrap();
+        assert_eq!(e.outputs, 3);
+        assert_eq!(e.output_shapes[0], Vec::<usize>::new()); // scalar
+        assert_eq!(e.inputs[0], vec![4, 4]);
+    }
+
+    #[test]
+    fn rejects_inconsistent_outputs() {
+        let bad = SAMPLE.replace(r#""outputs": 3"#, r#""outputs": 2"#);
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_and_garbage() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+        assert!(Manifest::parse(r#"{"preset":"x","fingerprint":"y","model":{"batch":1,"input_dim":1,"hidden_dim":1,"classes":1,"layers":2},"entries":[]}"#).is_err());
+    }
+
+    #[test]
+    fn entry_lookup() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.entry("dense_fwd_hid").is_some());
+        assert!(m.entry("nope").is_none());
+    }
+}

@@ -1,0 +1,130 @@
+//! Adaptive stage/delay selection (the paper's §V future-work item:
+//! "incorporating adaptive delay selection into the training process").
+//!
+//! Picks the pipeline depth that maximizes modeled throughput subject to
+//! two constraints the paper's analysis exposes:
+//!
+//! 1. **Staleness budget** — the deepest layer's delay `2·(K−1)` must
+//!    stay under a DLMS-style stability margin `max_delay` (derived from
+//!    the optimizer's effective step size; callers may obtain it from
+//!    [`crate::dlms::stable_mu_bound`]-style reasoning or empirics).
+//! 2. **Communication budget** — bytes crossing stage boundaries per
+//!    batch must not exceed `max_comm_bytes` (the paper's
+//!    communication-computation tradeoff).
+
+use super::{evaluate, CostModel};
+use crate::retiming::StagePartition;
+
+/// Constraints for adaptive selection.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveLimits {
+    /// Largest tolerable gradient delay (`2·(K−1) ≤ max_delay`).
+    pub max_delay: usize,
+    /// Per-batch boundary traffic budget in bytes (0 = unlimited).
+    pub max_comm_bytes: usize,
+}
+
+impl Default for AdaptiveLimits {
+    fn default() -> Self {
+        AdaptiveLimits { max_delay: usize::MAX, max_comm_bytes: 0 }
+    }
+}
+
+/// Outcome of the selection.
+#[derive(Clone, Debug)]
+pub struct AdaptiveChoice {
+    pub stages: usize,
+    pub speedup: f64,
+    pub max_delay: usize,
+    pub comm_bytes_per_batch: usize,
+    /// (stages, speedup, feasible) for every candidate — the audit trail.
+    pub candidates: Vec<(usize, f64, bool)>,
+}
+
+/// Choose the stage count in `1..=layers` with the best modeled speedup
+/// that satisfies the limits. Always feasible: K=1 has zero delay and
+/// zero communication.
+pub fn choose_stages(layers: usize, cost: &CostModel, limits: &AdaptiveLimits) -> AdaptiveChoice {
+    assert!(layers >= 1);
+    let mut best: Option<(usize, f64)> = None;
+    let mut candidates = Vec::with_capacity(layers);
+    for k in 1..=layers {
+        let p = StagePartition::even(layers, k).expect("valid partition");
+        let perf = evaluate(&p, cost, 10_000);
+        let delay = p.max_delay();
+        let comm = 2 * (k - 1) * cost.boundary_bytes;
+        let feasible = delay <= limits.max_delay
+            && (limits.max_comm_bytes == 0 || comm <= limits.max_comm_bytes);
+        candidates.push((k, perf.speedup, feasible));
+        if feasible && best.map_or(true, |(_, s)| perf.speedup > s) {
+            best = Some((k, perf.speedup));
+        }
+    }
+    let (stages, speedup) = best.expect("K=1 is always feasible");
+    let p = StagePartition::even(layers, stages).expect("valid partition");
+    AdaptiveChoice {
+        stages,
+        speedup,
+        max_delay: p.max_delay(),
+        comm_bytes_per_batch: 2 * (stages - 1) * cost.boundary_bytes,
+        candidates,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unconstrained_picks_max_stages_on_uniform_costs() {
+        let cost = CostModel::uniform(8);
+        let c = choose_stages(8, &cost, &AdaptiveLimits::default());
+        assert_eq!(c.stages, 8);
+        assert!(c.speedup > 7.0);
+    }
+
+    #[test]
+    fn staleness_budget_caps_depth() {
+        let cost = CostModel::uniform(8);
+        // max delay 6 ⇒ 2(K−1) ≤ 6 ⇒ K ≤ 4.
+        let c = choose_stages(8, &cost, &AdaptiveLimits { max_delay: 6, max_comm_bytes: 0 });
+        assert_eq!(c.stages, 4);
+        assert_eq!(c.max_delay, 6);
+    }
+
+    #[test]
+    fn comm_budget_caps_depth() {
+        let mut cost = CostModel::uniform(8);
+        cost.boundary_bytes = 100;
+        // comm = 2(K−1)·100 ≤ 500 ⇒ K ≤ 3.
+        let c = choose_stages(8, &cost, &AdaptiveLimits { max_delay: usize::MAX, max_comm_bytes: 500 });
+        assert_eq!(c.stages, 3);
+        assert!(c.comm_bytes_per_batch <= 500);
+    }
+
+    #[test]
+    fn skewed_costs_prefer_fewer_stages() {
+        // When one layer dominates, deeper pipelines add staleness and
+        // comm for little speedup; the selector should notice the
+        // flattening speedup curve and every candidate be reported.
+        let mut cost = CostModel::uniform(4);
+        cost.fwd[0] = 50.0;
+        cost.bwd[0] = 100.0;
+        let c = choose_stages(4, &cost, &AdaptiveLimits::default());
+        assert_eq!(c.candidates.len(), 4);
+        // Speedup is essentially flat (≤ ~1.06x) — bottleneck-capped.
+        assert!(c.speedup < 1.1, "speedup {}", c.speedup);
+    }
+
+    #[test]
+    fn always_feasible_fallback_is_sequential() {
+        let cost = CostModel::uniform(4);
+        let c = choose_stages(
+            4,
+            &cost,
+            &AdaptiveLimits { max_delay: 0, max_comm_bytes: 0 },
+        );
+        assert_eq!(c.stages, 1);
+        assert_eq!(c.max_delay, 0);
+    }
+}

@@ -1,0 +1,318 @@
+//! Pipeline clock-cycle schedule model (LayerPipe's throughput side).
+//!
+//! Models a `K`-stage training pipeline at per-clock granularity. Each
+//! stage is a *forward-backward scheduling unit* (the paper trains with
+//! "eight forward-backward scheduling units"): its forward and backward
+//! sub-units run concurrently, so in steady state one batch enters the
+//! pipeline per clock. Stage `s` forwards batch `t` at clock `t + s` and
+//! runs the matching backward at clock `t + 2K − 2 − s` — exactly the
+//! temporal separation the retimed DFG's boundary delays impose. From
+//! the timeline the module derives makespan, per-unit utilization,
+//! speedup over sequential execution, per-boundary communication volume,
+//! and — crucially — the observed gradient staleness per stage, which
+//! must equal `2·S` (Eq. 1): the schedule-level confirmation of the
+//! retiming-level derivation.
+
+pub mod adaptive;
+pub mod multiproc;
+
+pub use adaptive::{choose_stages, AdaptiveChoice, AdaptiveLimits};
+pub use multiproc::{assign_contiguous, assign_lpt, simulate as simulate_multiproc, Assignment, MultiprocPerf};
+
+use crate::retiming::StagePartition;
+
+/// What one lane of a scheduling unit does in one clock slot.
+pub type Slot = Option<u64>;
+
+/// Per-layer compute cost model (abstract time units).
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Forward cost per layer.
+    pub fwd: Vec<f64>,
+    /// Backward cost per layer (δ + G; typically ≈ 2× forward).
+    pub bwd: Vec<f64>,
+    /// Activation bytes crossing each stage boundary per batch.
+    pub boundary_bytes: usize,
+}
+
+impl CostModel {
+    /// Uniform costs: forward 1.0, backward 2.0 per layer.
+    pub fn uniform(layers: usize) -> Self {
+        CostModel { fwd: vec![1.0; layers], bwd: vec![2.0; layers], boundary_bytes: 0 }
+    }
+
+    pub fn stage_cost(&self, part: &StagePartition, stage: usize) -> f64 {
+        part.layers_in_stage(stage)
+            .into_iter()
+            .map(|l| self.fwd[l] + self.bwd[l])
+            .sum()
+    }
+}
+
+/// The simulated schedule of a pipelined training run.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    /// `fwd[stage][clock]` — batch forwarded by stage `stage` at `clock`.
+    pub fwd: Vec<Vec<Slot>>,
+    /// `bwd[stage][clock]` — batch whose backward runs at `clock`.
+    pub bwd: Vec<Vec<Slot>>,
+    pub partition: StagePartition,
+    pub batches: u64,
+}
+
+impl Schedule {
+    /// Build the steady-state schedule: stage `s` forwards batch `t` at
+    /// clock `t + s` and backwards batch `t` at clock `t + 2K − 2 − s`,
+    /// the slot assignment induced by the retimed DFG (one delay per
+    /// boundary per direction ⇒ one clock of separation per crossing).
+    pub fn build(partition: &StagePartition, batches: u64) -> Schedule {
+        assert!(batches > 0);
+        let k = partition.stages();
+        // Last event: backward of batch B−1 at stage 0 at clock
+        // (B−1) + 2K − 2, so the span is B + 2K − 2 slots.
+        let span = batches as usize + 2 * k - 2;
+        let mut fwd = vec![vec![None; span]; k];
+        let mut bwd = vec![vec![None; span]; k];
+        for t in 0..batches {
+            for s in 0..k {
+                let fc = t as usize + s;
+                debug_assert_eq!(fwd[s][fc], None);
+                fwd[s][fc] = Some(t);
+                let bc = t as usize + 2 * k - 2 - s;
+                debug_assert_eq!(bwd[s][bc], None);
+                bwd[s][bc] = Some(t);
+            }
+        }
+        Schedule { fwd, bwd, partition: partition.clone(), batches }
+    }
+
+    /// Number of clock slots until all work completes.
+    pub fn makespan_slots(&self) -> usize {
+        let last = |rows: &Vec<Vec<Slot>>| {
+            rows.iter()
+                .map(|row| row.iter().rposition(Option::is_some).map_or(0, |p| p + 1))
+                .max()
+                .unwrap_or(0)
+        };
+        last(&self.fwd).max(last(&self.bwd))
+    }
+
+    /// Fraction of non-idle slots per scheduling unit (both lanes),
+    /// within the makespan.
+    pub fn utilization(&self) -> Vec<f64> {
+        let span = self.makespan_slots();
+        (0..self.partition.stages())
+            .map(|s| {
+                let busy = self.fwd[s][..span].iter().filter(|x| x.is_some()).count()
+                    + self.bwd[s][..span].iter().filter(|x| x.is_some()).count();
+                busy as f64 / (2 * span) as f64
+            })
+            .collect()
+    }
+
+    /// Observed gradient staleness per stage: the number of batches whose
+    /// forward launches after `Fwd(t)` and at-or-before the clock where
+    /// `Bwd(t)` produces the gradient — i.e. how many updates the
+    /// gradient misses. This is the execution-level quantity Eq. 1
+    /// predicts as `2·S(stage)`.
+    pub fn observed_staleness(&self) -> Vec<usize> {
+        let k = self.partition.stages();
+        assert!(
+            self.batches as usize >= 4 * k,
+            "need >= 4K batches to probe steady state (got {} for K={k})",
+            self.batches
+        );
+        let mut out = Vec::with_capacity(k);
+        // Use a mid-pipeline batch to avoid fill/drain edges.
+        let probe = self.batches / 2;
+        for s in 0..k {
+            let fpos = self.fwd[s].iter().position(|x| *x == Some(probe)).expect("fwd scheduled");
+            let bpos = self.bwd[s].iter().position(|x| *x == Some(probe)).expect("bwd scheduled");
+            let stale = self.fwd[s][fpos + 1..=bpos]
+                .iter()
+                .filter(|x| x.is_some())
+                .count();
+            out.push(stale);
+        }
+        out
+    }
+
+    /// Weight versions a stashing implementation must retain per stage:
+    /// staleness + 1 (current + in-flight) — the O(L·S) term of §III-D.
+    pub fn stash_versions(&self) -> Vec<usize> {
+        self.observed_staleness().iter().map(|s| s + 1).collect()
+    }
+}
+
+/// Timed performance summary under a cost model.
+#[derive(Clone, Debug)]
+pub struct PipelinePerf {
+    /// Total time for `batches` iterations, pipelined.
+    pub pipelined_time: f64,
+    /// Total time sequentially (sum of all layer costs × batches).
+    pub sequential_time: f64,
+    /// Speedup (sequential / pipelined).
+    pub speedup: f64,
+    /// Mean processor utilization in steady state.
+    pub mean_utilization: f64,
+    /// Bytes crossing stage boundaries over the whole run (activations
+    /// forward + gradients backward).
+    pub comm_bytes: usize,
+    /// The slowest stage's per-iteration cost (the pipeline's clock).
+    pub bottleneck_cost: f64,
+}
+
+/// Evaluate throughput of a partition under a cost model.
+///
+/// In steady state the pipeline completes one iteration per
+/// `max_stage_cost` time; fill/drain add `(K−1)` stage times at each end.
+pub fn evaluate(partition: &StagePartition, cost: &CostModel, batches: u64) -> PipelinePerf {
+    let k = partition.stages();
+    let stage_costs: Vec<f64> = (0..k).map(|s| cost.stage_cost(partition, s)).collect();
+    let bottleneck = stage_costs.iter().cloned().fold(0.0, f64::max);
+    let total_per_batch: f64 = stage_costs.iter().sum();
+    let sequential_time = total_per_batch * batches as f64;
+    // Fill with per-stage costs, then bottleneck-paced steady state.
+    let fill: f64 = stage_costs.iter().take(k - 1).sum();
+    let pipelined_time = fill + bottleneck * batches as f64;
+    let speedup = sequential_time / pipelined_time;
+    let mean_utilization = total_per_batch / (k as f64 * bottleneck);
+    // Each boundary moves activations forward and gradients backward once
+    // per batch: 2 transfers per boundary per batch.
+    let comm_bytes = 2 * (k - 1) * cost.boundary_bytes * batches as usize;
+    PipelinePerf {
+        pipelined_time,
+        sequential_time,
+        speedup,
+        mean_utilization: mean_utilization.min(1.0),
+        comm_bytes,
+        bottleneck_cost: bottleneck,
+    }
+}
+
+/// Sweep stage counts for a fixed layer count, reporting the
+/// communication-computation tradeoff the paper's conclusion discusses.
+pub fn sweep_stages(
+    layers: usize,
+    cost: &CostModel,
+    batches: u64,
+    stage_counts: &[usize],
+) -> Vec<(usize, PipelinePerf)> {
+    stage_counts
+        .iter()
+        .filter(|&&k| k >= 1 && k <= layers)
+        .map(|&k| {
+            let p = StagePartition::even(layers, k).expect("valid partition");
+            (k, evaluate(&p, cost, batches))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::retiming::delay_formula;
+    use crate::testing::property;
+
+    #[test]
+    fn schedule_slots_are_conflict_free() {
+        let p = StagePartition::even(4, 4).unwrap();
+        let s = Schedule::build(&p, 6);
+        // Each stage does each batch's F and B exactly once, one per slot.
+        for st in 0..4 {
+            let fwd = s.fwd[st].iter().filter(|x| x.is_some()).count();
+            let bwd = s.bwd[st].iter().filter(|x| x.is_some()).count();
+            assert_eq!(fwd, 6);
+            assert_eq!(bwd, 6);
+            // Batches appear in order in each lane.
+            let batches: Vec<u64> = s.fwd[st].iter().flatten().copied().collect();
+            assert_eq!(batches, (0..6).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn makespan_is_batches_plus_fill_drain() {
+        let p = StagePartition::even(4, 4).unwrap();
+        let s = Schedule::build(&p, 10);
+        // Last event at clock B−1 + 2K−2 ⇒ makespan B + 2K − 2.
+        assert_eq!(s.makespan_slots(), 10 + 2 * 4 - 2);
+    }
+
+    #[test]
+    fn observed_staleness_matches_eq1() {
+        // The schedule-level check of Delay(l) = 2·S(l): a per-layer
+        // pipeline over 5 layers must show staleness [8, 6, 4, 2, 0].
+        let p = StagePartition::even(5, 5).unwrap();
+        let s = Schedule::build(&p, 20);
+        assert_eq!(s.observed_staleness(), vec![8, 6, 4, 2, 0]);
+    }
+
+    #[test]
+    fn property_schedule_staleness_equals_retiming_delays() {
+        // The paper's two derivations agree: schedule simulation and
+        // retiming closed form give identical delays for ANY partition.
+        property(30, |rng, _case| {
+            let layers = 2 + rng.index(8);
+            let stages = 1 + rng.index(layers);
+            let p = StagePartition::even(layers, stages).unwrap();
+            let s = Schedule::build(&p, 64);
+            let per_stage = s.observed_staleness();
+            let per_layer: Vec<usize> =
+                (0..layers).map(|l| per_stage[p.stage_of()[l]]).collect();
+            assert_eq!(
+                per_layer,
+                delay_formula(p.stage_of()),
+                "layers={layers} stages={stages}"
+            );
+        });
+    }
+
+    #[test]
+    fn stash_versions_are_staleness_plus_one() {
+        let p = StagePartition::even(4, 4).unwrap();
+        let s = Schedule::build(&p, 16);
+        assert_eq!(s.stash_versions(), vec![7, 5, 3, 1]);
+    }
+
+    #[test]
+    fn speedup_grows_with_stages_on_uniform_costs() {
+        let cost = CostModel::uniform(8);
+        let r = sweep_stages(8, &cost, 1000, &[1, 2, 4, 8]);
+        let speedups: Vec<f64> = r.iter().map(|(_, p)| p.speedup).collect();
+        assert!(speedups.windows(2).all(|w| w[1] > w[0]), "{speedups:?}");
+        // 8 uniform stages → near-8× in the long-batch limit.
+        assert!(speedups[3] > 7.0, "{}", speedups[3]);
+        // Sequential (1 stage) is exactly 1.0.
+        assert!((speedups[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bottleneck_stage_limits_speedup() {
+        // One expensive layer caps the pipeline clock.
+        let mut cost = CostModel::uniform(4);
+        cost.fwd[2] = 10.0;
+        cost.bwd[2] = 20.0;
+        let p = StagePartition::even(4, 4).unwrap();
+        let perf = evaluate(&p, &cost, 1000);
+        assert!((perf.bottleneck_cost - 30.0).abs() < 1e-9);
+        // total per batch = 3·3 + 30 = 39 → speedup ≤ 39/30.
+        assert!(perf.speedup < 39.0 / 30.0 + 1e-6);
+    }
+
+    #[test]
+    fn comm_volume_scales_with_boundaries() {
+        let mut cost = CostModel::uniform(8);
+        cost.boundary_bytes = 100;
+        let r = sweep_stages(8, &cost, 10, &[1, 2, 4, 8]);
+        let bytes: Vec<usize> = r.iter().map(|(_, p)| p.comm_bytes).collect();
+        assert_eq!(bytes, vec![0, 2000, 6000, 14000]);
+    }
+
+    #[test]
+    fn utilization_bounded_and_sane() {
+        let cost = CostModel::uniform(6);
+        let p = StagePartition::even(6, 3).unwrap();
+        let perf = evaluate(&p, &cost, 100);
+        assert!(perf.mean_utilization > 0.9 && perf.mean_utilization <= 1.0);
+    }
+}

@@ -1,0 +1,208 @@
+//! Multiprocessor scheduling of forward/backward units (the
+//! "multiprocessor scheduling" half of LayerPipe [11] that LayerPipe2
+//! §I builds on).
+//!
+//! Each layer contributes two schedulable units — F_l and B_l (the δ+G
+//! pair) — which the retimed delays make independent across stage
+//! boundaries. This module maps units onto `P` processors:
+//!
+//! - [`assign_lpt`] — longest-processing-time list scheduling of whole
+//!   stages onto processors (the classic 4/3-approximation), used when
+//!   `P <` number of stages;
+//! - [`simulate`] — per-clock simulation of the resulting system,
+//!   reporting makespan, per-processor busy time, utilization and
+//!   speedup over one processor.
+//!
+//! The paper's headline scheduling behaviour to reproduce: speedup
+//! scales with P until the bottleneck stage dominates, and assigning
+//! *adjacent* stages to one processor keeps communication local.
+
+use crate::retiming::StagePartition;
+
+use super::CostModel;
+
+/// A processor assignment: `proc_of_stage[s]` = processor running stage `s`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    pub proc_of_stage: Vec<usize>,
+    pub processors: usize,
+}
+
+impl Assignment {
+    /// Stages owned by processor `p`, in order.
+    pub fn stages_of(&self, p: usize) -> Vec<usize> {
+        (0..self.proc_of_stage.len())
+            .filter(|&s| self.proc_of_stage[s] == p)
+            .collect()
+    }
+
+    /// Number of boundary crossings that are *remote* (between stages on
+    /// different processors) — the communication the paper trades
+    /// against computation.
+    pub fn remote_boundaries(&self) -> usize {
+        self.proc_of_stage
+            .windows(2)
+            .filter(|w| w[0] != w[1])
+            .count()
+    }
+}
+
+/// Longest-processing-time list scheduling of stages onto `processors`,
+/// with a contiguity repair pass: stages are sorted by cost descending,
+/// greedily placed on the least-loaded processor, then relabelled so
+/// that each processor's stage set is renumbered in pipeline order
+/// (keeps the measurement of remote boundaries meaningful).
+pub fn assign_lpt(partition: &StagePartition, cost: &CostModel, processors: usize) -> Assignment {
+    let k = partition.stages();
+    assert!(processors >= 1);
+    let p_eff = processors.min(k);
+    let costs: Vec<f64> = (0..k).map(|s| cost.stage_cost(partition, s)).collect();
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| costs[b].partial_cmp(&costs[a]).unwrap());
+    let mut load = vec![0.0f64; p_eff];
+    let mut proc_of_stage = vec![0usize; k];
+    for &s in &order {
+        let (p, _) = load
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .expect("nonempty");
+        proc_of_stage[s] = p;
+        load[p] += costs[s];
+    }
+    Assignment { proc_of_stage, processors: p_eff }
+}
+
+/// Contiguous block assignment: stage `s` → processor `s·P/K` (adjacent
+/// stages share processors — minimal remote communication, possibly
+/// worse balance). The baseline LPT is compared against.
+pub fn assign_contiguous(partition: &StagePartition, processors: usize) -> Assignment {
+    let k = partition.stages();
+    let p_eff = processors.min(k);
+    let proc_of_stage = (0..k).map(|s| s * p_eff / k).collect();
+    Assignment { proc_of_stage, processors: p_eff }
+}
+
+/// Simulation outcome.
+#[derive(Clone, Debug)]
+pub struct MultiprocPerf {
+    pub makespan: f64,
+    pub busy: Vec<f64>,
+    pub utilization: f64,
+    /// Speedup over running everything on one processor.
+    pub speedup: f64,
+    pub remote_boundaries: usize,
+}
+
+/// Evaluate an assignment under the cost model for `batches` iterations:
+/// each processor's steady-state period is the sum of its stages' costs;
+/// the pipeline clock is the slowest processor; utilization is
+/// Σbusy / (P · makespan).
+pub fn simulate(
+    partition: &StagePartition,
+    cost: &CostModel,
+    assign: &Assignment,
+    batches: u64,
+) -> MultiprocPerf {
+    let k = partition.stages();
+    assert_eq!(assign.proc_of_stage.len(), k);
+    let mut per_proc = vec![0.0f64; assign.processors];
+    for s in 0..k {
+        per_proc[assign.proc_of_stage[s]] += cost.stage_cost(partition, s);
+    }
+    let period = per_proc.iter().cloned().fold(0.0, f64::max);
+    let total: f64 = per_proc.iter().sum();
+    // Fill latency ≈ one traversal of all stages, then period-paced.
+    let fill: f64 = (0..k.saturating_sub(1))
+        .map(|s| cost.stage_cost(partition, s))
+        .sum();
+    let makespan = fill + period * batches as f64;
+    let busy: Vec<f64> = per_proc.iter().map(|c| c * batches as f64).collect();
+    let utilization =
+        busy.iter().sum::<f64>() / (assign.processors as f64 * makespan);
+    let speedup = (total * batches as f64) / makespan;
+    MultiprocPerf {
+        makespan,
+        busy,
+        utilization: utilization.min(1.0),
+        speedup,
+        remote_boundaries: assign.remote_boundaries(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn part(layers: usize, stages: usize) -> StagePartition {
+        StagePartition::even(layers, stages).unwrap()
+    }
+
+    #[test]
+    fn lpt_balances_uniform_stages() {
+        let p = part(8, 8);
+        let cost = CostModel::uniform(8);
+        let a = assign_lpt(&p, &cost, 4);
+        // 8 uniform stages on 4 procs → exactly 2 each.
+        for proc in 0..4 {
+            assert_eq!(a.stages_of(proc).len(), 2, "proc {proc}");
+        }
+    }
+
+    #[test]
+    fn lpt_handles_skew_better_than_contiguous() {
+        // One giant stage: LPT isolates it; contiguous blocks may pair it.
+        let p = part(8, 8);
+        let mut cost = CostModel::uniform(8);
+        cost.fwd[0] = 10.0;
+        cost.bwd[0] = 20.0;
+        let lpt = simulate(&p, &cost, &assign_lpt(&p, &cost, 4), 1000);
+        let contig = simulate(&p, &cost, &assign_contiguous(&p, 4), 1000);
+        assert!(lpt.speedup >= contig.speedup - 1e-9);
+    }
+
+    #[test]
+    fn contiguous_minimizes_remote_boundaries() {
+        let p = part(8, 8);
+        let cost = CostModel::uniform(8);
+        let contig = assign_contiguous(&p, 4);
+        let lpt = assign_lpt(&p, &cost, 4);
+        assert_eq!(contig.remote_boundaries(), 3); // P−1 cuts
+        assert!(lpt.remote_boundaries() >= contig.remote_boundaries());
+    }
+
+    #[test]
+    fn speedup_scales_until_stage_count() {
+        let p = part(8, 8);
+        let cost = CostModel::uniform(8);
+        let mut prev = 0.0;
+        for procs in [1usize, 2, 4, 8] {
+            let perf = simulate(&p, &cost, &assign_contiguous(&p, procs), 10_000);
+            assert!(perf.speedup > prev, "procs {procs}");
+            prev = perf.speedup;
+        }
+        // Beyond K processors nothing improves (stages are atomic units).
+        let at_k = simulate(&p, &cost, &assign_contiguous(&p, 8), 10_000).speedup;
+        let past_k = simulate(&p, &cost, &assign_contiguous(&p, 16), 10_000).speedup;
+        assert!((at_k - past_k).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_processor_is_sequential() {
+        let p = part(4, 4);
+        let cost = CostModel::uniform(4);
+        let perf = simulate(&p, &cost, &assign_contiguous(&p, 1), 100);
+        assert!((perf.speedup - 1.0).abs() < 0.05);
+        assert!(perf.utilization > 0.95);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let p = part(6, 3);
+        let mut cost = CostModel::uniform(6);
+        cost.fwd[5] = 7.0;
+        let perf = simulate(&p, &cost, &assign_lpt(&p, &cost, 3), 500);
+        assert!(perf.utilization > 0.0 && perf.utilization <= 1.0);
+        assert_eq!(perf.busy.len(), 3);
+    }
+}

@@ -1,0 +1,233 @@
+//! Weight and activation stashing with byte-level memory accounting.
+//!
+//! The paper's §III-B derivation shows stashing is the *structural*
+//! consequence of retiming: states displaced by delay motion must remain
+//! available until the delayed gradients return. A direct implementation
+//! stores one weight version per in-flight iteration — `O(L·S)` memory —
+//! which the pipeline-aware EMA of [`crate::ema`] replaces with `O(L)`.
+//! This module is that direct implementation (the PipeDream-style
+//! baseline) plus the activation stash every pipelined strategy needs.
+
+use crate::tensor::Tensor;
+use std::collections::VecDeque;
+
+/// Ring buffer of historical weight versions for one layer.
+///
+/// `push(t, w)` stores version `t`; `get(t)` retrieves it while it is
+/// still within the retention window (`capacity` versions).
+#[derive(Clone, Debug)]
+pub struct WeightStash {
+    capacity: usize,
+    entries: VecDeque<(u64, Tensor)>,
+    peak_nbytes: usize,
+}
+
+impl WeightStash {
+    /// `capacity` = number of versions retained = the layer's gradient
+    /// delay + 1 (a gradient delayed by `d` needs the version from `d`
+    /// iterations ago while the current version also exists).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "stash capacity must be positive");
+        WeightStash { capacity, entries: VecDeque::new(), peak_nbytes: 0 }
+    }
+
+    /// Store the weight version at iteration `t`. Versions must be pushed
+    /// in increasing `t` order; the oldest is evicted beyond capacity.
+    pub fn push(&mut self, t: u64, w: &Tensor) {
+        if let Some(&(last, _)) = self.entries.back() {
+            assert!(t > last, "stash pushes must be in increasing order ({t} after {last})");
+        }
+        self.entries.push_back((t, w.clone()));
+        while self.entries.len() > self.capacity {
+            self.entries.pop_front();
+        }
+        self.peak_nbytes = self.peak_nbytes.max(self.nbytes());
+    }
+
+    /// Retrieve the stashed version from iteration `t`, if still retained.
+    pub fn get(&self, t: u64) -> Option<&Tensor> {
+        self.entries.iter().find(|(vt, _)| *vt == t).map(|(_, w)| w)
+    }
+
+    /// Oldest retained version index.
+    pub fn oldest(&self) -> Option<u64> {
+        self.entries.front().map(|(t, _)| *t)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Current bytes held.
+    pub fn nbytes(&self) -> usize {
+        self.entries.iter().map(|(_, w)| w.nbytes()).sum()
+    }
+
+    /// High-water mark of bytes held (the memory-footprint metric).
+    pub fn peak_nbytes(&self) -> usize {
+        self.peak_nbytes
+    }
+}
+
+/// FIFO stash of per-iteration activations (and any per-batch state) for
+/// one layer: pushed at forward time, popped when the matching backward
+/// arrives. All pipelined strategies require this — only *weight* state is
+/// optimized away by the EMA recompute.
+#[derive(Clone, Debug, Default)]
+pub struct ActivationStash {
+    entries: VecDeque<(u64, Vec<Tensor>)>,
+    peak_nbytes: usize,
+}
+
+impl ActivationStash {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: u64, tensors: Vec<Tensor>) {
+        if let Some(&(last, _)) = self.entries.back() {
+            assert!(t > last, "activation pushes must be in increasing order");
+        }
+        self.entries.push_back((t, tensors));
+        self.peak_nbytes = self.peak_nbytes.max(self.nbytes());
+    }
+
+    /// Pop the activations for iteration `t`. Entries are expected to be
+    /// consumed in FIFO order (the pipeline guarantees this); popping out
+    /// of order is an error that signals a scheduler bug.
+    pub fn pop(&mut self, t: u64) -> Option<Vec<Tensor>> {
+        match self.entries.front() {
+            Some(&(ft, _)) if ft == t => self.entries.pop_front().map(|(_, v)| v),
+            Some(&(ft, _)) => panic!("activation stash out-of-order pop: want {t}, front {ft}"),
+            None => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.entries
+            .iter()
+            .map(|(_, v)| v.iter().map(Tensor::nbytes).sum::<usize>())
+            .sum()
+    }
+
+    pub fn peak_nbytes(&self) -> usize {
+        self.peak_nbytes
+    }
+}
+
+/// Aggregate memory report across a model's layers (bytes).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MemoryReport {
+    pub weight_stash: usize,
+    pub activation_stash: usize,
+    pub ema_state: usize,
+    pub optimizer_state: usize,
+    pub weights: usize,
+}
+
+impl MemoryReport {
+    pub fn total(&self) -> usize {
+        self.weight_stash
+            + self.activation_stash
+            + self.ema_state
+            + self.optimizer_state
+            + self.weights
+    }
+
+    /// Extra state beyond the live weights + optimizer (what the paper's
+    /// O(LS)→O(L) claim is about).
+    pub fn staleness_overhead(&self) -> usize {
+        self.weight_stash + self.ema_state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(v: f32) -> Tensor {
+        Tensor::from_vec(&[2], vec![v, v])
+    }
+
+    #[test]
+    fn stash_retrieves_within_window() {
+        let mut s = WeightStash::new(3);
+        for t in 0..5u64 {
+            s.push(t, &w(t as f32));
+        }
+        assert_eq!(s.len(), 3);
+        assert!(s.get(1).is_none(), "evicted");
+        assert_eq!(s.get(2).unwrap().data()[0], 2.0);
+        assert_eq!(s.get(4).unwrap().data()[0], 4.0);
+        assert_eq!(s.oldest(), Some(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "increasing order")]
+    fn stash_rejects_out_of_order() {
+        let mut s = WeightStash::new(2);
+        s.push(3, &w(0.0));
+        s.push(2, &w(0.0));
+    }
+
+    #[test]
+    fn stash_memory_scales_with_capacity() {
+        let mut small = WeightStash::new(2);
+        let mut large = WeightStash::new(8);
+        for t in 0..10u64 {
+            small.push(t, &w(0.0));
+            large.push(t, &w(0.0));
+        }
+        assert_eq!(small.nbytes(), 2 * 8);
+        assert_eq!(large.nbytes(), 8 * 8);
+        assert_eq!(large.peak_nbytes(), 8 * 8);
+    }
+
+    #[test]
+    fn activation_fifo_order() {
+        let mut a = ActivationStash::new();
+        a.push(0, vec![w(0.0)]);
+        a.push(1, vec![w(1.0), w(1.5)]);
+        assert_eq!(a.nbytes(), 3 * 8);
+        let v0 = a.pop(0).unwrap();
+        assert_eq!(v0.len(), 1);
+        let v1 = a.pop(1).unwrap();
+        assert_eq!(v1.len(), 2);
+        assert!(a.pop(2).is_none());
+        assert_eq!(a.peak_nbytes(), 3 * 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "out-of-order pop")]
+    fn activation_pop_out_of_order_panics() {
+        let mut a = ActivationStash::new();
+        a.push(0, vec![w(0.0)]);
+        a.push(1, vec![w(1.0)]);
+        let _ = a.pop(1);
+    }
+
+    #[test]
+    fn memory_report_totals() {
+        let r = MemoryReport {
+            weight_stash: 100,
+            activation_stash: 50,
+            ema_state: 10,
+            optimizer_state: 20,
+            weights: 20,
+        };
+        assert_eq!(r.total(), 200);
+        assert_eq!(r.staleness_overhead(), 110);
+    }
+}

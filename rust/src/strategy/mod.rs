@@ -1,0 +1,311 @@
+//! The five weight-handling strategies of the paper's Fig. 5.
+//!
+//! In pipelined execution, the backward pass for the batch launched at
+//! iteration `t` runs at iteration `t + d` (layer delay `d = 2·S(l)`,
+//! Eq. 1). Each strategy answers one question: *which weight version does
+//! that delayed backward use?*
+//!
+//! | strategy            | backward weights                  | extra memory |
+//! |---------------------|-----------------------------------|--------------|
+//! | sequential          | (no delay; reference)             | none         |
+//! | weight stashing     | true stored `W(t)`                | `O(d)`/layer |
+//! | latest-weight       | current `W(t+d)`                  | none         |
+//! | fixed-decay EMA     | `W(t+d) + lr_sum·Ḡ_β`, `β=0.9`    | `O(1)`/layer |
+//! | pipeline-aware EMA  | `W(t+d) + lr_sum·Ḡ(n)`, Eqs. 7–9  | `O(1)`/layer |
+
+use crate::ema::{FixedEma, GradientAverager, PipelineAwareEma};
+use crate::stash::WeightStash;
+use crate::tensor::Tensor;
+use anyhow::bail;
+
+/// Identifier for a weight-handling strategy (config / CLI surface).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StrategyKind {
+    /// Standard non-pipelined backpropagation (delay 0 everywhere).
+    Sequential,
+    /// Pipelined with exact historical weight storage (PipeDream-style).
+    Stashing,
+    /// Pipelined, delayed gradients computed against current weights.
+    Latest,
+    /// Pipelined, historical weights approximated with a fixed-β EMA.
+    FixedEma,
+    /// Pipelined, the paper's delay-conditioned EMA reconstruction.
+    PipelineAwareEma,
+}
+
+impl StrategyKind {
+    pub fn all() -> &'static [StrategyKind] {
+        &[
+            StrategyKind::Sequential,
+            StrategyKind::Stashing,
+            StrategyKind::Latest,
+            StrategyKind::FixedEma,
+            StrategyKind::PipelineAwareEma,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::Sequential => "sequential",
+            StrategyKind::Stashing => "stashing",
+            StrategyKind::Latest => "latest",
+            StrategyKind::FixedEma => "fixed_ema",
+            StrategyKind::PipelineAwareEma => "pipeline_ema",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<StrategyKind> {
+        Ok(match s {
+            "sequential" | "seq" => StrategyKind::Sequential,
+            "stashing" | "stash" => StrategyKind::Stashing,
+            "latest" | "latest_weight" => StrategyKind::Latest,
+            "fixed_ema" | "fixed-ema" => StrategyKind::FixedEma,
+            "pipeline_ema" | "pipeline-ema" | "pipeline_aware" => StrategyKind::PipelineAwareEma,
+            other => bail!(
+                "unknown strategy '{other}' (expected one of: sequential, stashing, latest, fixed_ema, pipeline_ema)"
+            ),
+        })
+    }
+
+    /// Whether this strategy executes with pipeline delays.
+    pub fn is_pipelined(&self) -> bool {
+        !matches!(self, StrategyKind::Sequential)
+    }
+}
+
+/// Fixed-decay β for the conventional-EMA baseline (paper §IV-B).
+pub const FIXED_EMA_BETA: f32 = 0.9;
+
+/// Per-layer staleness-handling state for one strategy.
+///
+/// Lifecycle per pipelined iteration `t` for a layer with delay `d`:
+/// 1. `on_forward(t, &weights)` when the batch launches;
+/// 2. `backward_weights(t, &weights_now, lr_sum)` at `t + d`, returning
+///    the weight version the backward pass must use;
+/// 3. after the optimizer applies the resulting gradient,
+///    `on_update(&applied_update)`.
+pub struct LayerStrategy {
+    kind: StrategyKind,
+    /// Gradient delay `d = 2·S(l)` for this layer.
+    delay: usize,
+    stash: Option<WeightStash>,
+    averager: Option<Box<dyn GradientAverager>>,
+    /// While `true`, EMA strategies fall back to latest weights (the
+    /// paper's warm-up period during which the averages stabilize).
+    warmup: bool,
+}
+
+impl LayerStrategy {
+    pub fn new(kind: StrategyKind, delay: usize) -> Self {
+        let stash = match kind {
+            StrategyKind::Stashing if delay > 0 => Some(WeightStash::new(delay + 1)),
+            _ => None,
+        };
+        let averager: Option<Box<dyn GradientAverager>> = match kind {
+            StrategyKind::FixedEma => Some(Box::new(FixedEma::new(FIXED_EMA_BETA))),
+            StrategyKind::PipelineAwareEma => {
+                // Window matched to the layer's own delay (Eq. 8–9);
+                // a zero-delay layer needs no reconstruction but keep a
+                // width-1 window so the state machine is uniform.
+                Some(Box::new(PipelineAwareEma::new(delay.max(1))))
+            }
+            _ => None,
+        };
+        LayerStrategy { kind, delay, stash, averager, warmup: false }
+    }
+
+    pub fn kind(&self) -> StrategyKind {
+        self.kind
+    }
+
+    pub fn delay(&self) -> usize {
+        self.delay
+    }
+
+    /// Enable/disable the EMA warm-up fallback.
+    pub fn set_warmup(&mut self, on: bool) {
+        self.warmup = on;
+    }
+
+    /// Record the weight version used by the forward pass of iteration `t`.
+    pub fn on_forward(&mut self, t: u64, weights: &Tensor) {
+        if let Some(stash) = &mut self.stash {
+            stash.push(t, weights);
+        }
+    }
+
+    /// The weight version for the backward pass of the batch launched at
+    /// iteration `t` (running now, `delay` iterations later).
+    ///
+    /// `current` are the live weights; `lr_sum` is the sum of learning
+    /// rates over the `delay` intervening optimizer steps (Eq. 9's
+    /// `α(2n+1)` term under a constant lr, exact under schedules).
+    ///
+    /// Returns a borrow whenever the version already exists (latest /
+    /// stashed) — the hot path performs zero copies for those
+    /// strategies; only EMA reconstruction materializes a new tensor.
+    pub fn backward_weights<'a>(
+        &'a self,
+        t: u64,
+        current: &'a Tensor,
+        lr_sum: f32,
+    ) -> std::borrow::Cow<'a, Tensor> {
+        use std::borrow::Cow;
+        if self.delay == 0 {
+            return Cow::Borrowed(current);
+        }
+        match self.kind {
+            StrategyKind::Sequential | StrategyKind::Latest => Cow::Borrowed(current),
+            StrategyKind::Stashing => {
+                let stash = self.stash.as_ref().expect("stashing strategy has a stash");
+                Cow::Borrowed(stash.get(t).unwrap_or_else(|| {
+                    panic!(
+                        "weight stash miss: iteration {t} not retained (oldest {:?})",
+                        stash.oldest()
+                    )
+                }))
+            }
+            StrategyKind::FixedEma | StrategyKind::PipelineAwareEma => {
+                if self.warmup {
+                    Cow::Borrowed(current)
+                } else {
+                    Cow::Owned(
+                        self.averager
+                            .as_ref()
+                            .expect("ema strategy has an averager")
+                            .reconstruct(current, lr_sum),
+                    )
+                }
+            }
+        }
+    }
+
+    /// Feed the applied optimizer update (for the EMA accumulators).
+    pub fn on_update(&mut self, update: &Tensor) {
+        if let Some(avg) = &mut self.averager {
+            avg.push(update);
+        }
+    }
+
+    /// Bytes of staleness-handling state (stash + EMA accumulators).
+    pub fn staleness_nbytes(&self) -> usize {
+        self.stash.as_ref().map_or(0, |s| s.nbytes())
+            + self.averager.as_ref().map_or(0, |a| a.state_nbytes())
+    }
+
+    /// Peak bytes (stash high-water mark + EMA state).
+    pub fn peak_staleness_nbytes(&self) -> usize {
+        self.stash.as_ref().map_or(0, |s| s.peak_nbytes())
+            + self.averager.as_ref().map_or(0, |a| a.state_nbytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(v: f32) -> Tensor {
+        Tensor::from_vec(&[2], vec![v, 2.0 * v])
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in StrategyKind::all() {
+            assert_eq!(StrategyKind::parse(k.name()).unwrap(), *k);
+        }
+        assert!(StrategyKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn stashing_returns_the_launch_version() {
+        let mut s = LayerStrategy::new(StrategyKind::Stashing, 2);
+        s.on_forward(0, &w(0.0));
+        s.on_forward(1, &w(1.0));
+        s.on_forward(2, &w(2.0));
+        // backward for t=0 runs now (t=2): must see W(0), not W(2).
+        let cur = w(2.0);
+        let bw = s.backward_weights(0, &cur, 0.0);
+        assert_eq!(bw.data(), w(0.0).data());
+    }
+
+    #[test]
+    #[should_panic(expected = "stash miss")]
+    fn stashing_misses_beyond_window() {
+        let mut s = LayerStrategy::new(StrategyKind::Stashing, 1);
+        for t in 0..4 {
+            s.on_forward(t, &w(t as f32));
+        }
+        let cur = w(3.0);
+        let _ = s.backward_weights(0, &cur, 0.0);
+    }
+
+    #[test]
+    fn latest_returns_current() {
+        let mut s = LayerStrategy::new(StrategyKind::Latest, 3);
+        s.on_forward(0, &w(0.0));
+        let cur = w(9.0);
+        let bw = s.backward_weights(0, &cur, 0.5);
+        assert_eq!(bw.data(), cur.data());
+    }
+
+    #[test]
+    fn ema_reconstructs_toward_history() {
+        // Constant update u ⇒ W(t−d) = W(t) + lr·d·u exactly; pipeline-
+        // aware EMA of a constant stream equals u, so reconstruction is
+        // exact here.
+        let d = 4;
+        let lr = 0.1;
+        let mut s = LayerStrategy::new(StrategyKind::PipelineAwareEma, d);
+        let u = w(1.0);
+        let mut cur = w(10.0);
+        for t in 0..10u64 {
+            s.on_forward(t, &cur);
+            cur.axpy(-lr, &u);
+            s.on_update(&u);
+        }
+        let lr_sum = lr * d as f32;
+        let recon = s.backward_weights(5, &cur, lr_sum);
+        let mut expect = cur.clone();
+        expect.axpy(lr_sum, &u);
+        assert!(recon.max_abs_diff(&expect) < 1e-6);
+    }
+
+    #[test]
+    fn warmup_falls_back_to_latest() {
+        let mut s = LayerStrategy::new(StrategyKind::PipelineAwareEma, 4);
+        s.set_warmup(true);
+        s.on_update(&w(100.0));
+        let cur = w(1.0);
+        let bw = s.backward_weights(0, &cur, 1.0);
+        assert_eq!(bw.data(), cur.data());
+        s.set_warmup(false);
+        let bw2 = s.backward_weights(0, &cur, 1.0);
+        assert!(bw2.max_abs_diff(&cur) > 1.0, "reconstruction active after warmup");
+    }
+
+    #[test]
+    fn zero_delay_is_transparent_for_all() {
+        for k in StrategyKind::all() {
+            let mut s = LayerStrategy::new(*k, 0);
+            s.on_forward(0, &w(1.0));
+            let cur = w(5.0);
+            let bw = s.backward_weights(0, &cur, 0.3);
+            assert_eq!(bw.data(), cur.data(), "{k:?}");
+        }
+    }
+
+    #[test]
+    fn memory_ordering_stash_vs_ema() {
+        let delay = 14;
+        let mut stash = LayerStrategy::new(StrategyKind::Stashing, delay);
+        let mut ema = LayerStrategy::new(StrategyKind::PipelineAwareEma, delay);
+        let big = Tensor::zeros(&[64, 64]);
+        for t in 0..20u64 {
+            stash.on_forward(t, &big);
+            ema.on_forward(t, &big);
+            ema.on_update(&big);
+        }
+        assert!(stash.staleness_nbytes() >= delay * big.nbytes());
+        assert_eq!(ema.staleness_nbytes(), big.nbytes());
+    }
+}

@@ -1,0 +1,184 @@
+//! Host-side dense `f32` tensors.
+//!
+//! Weights, optimizer state, stashes and EMA accumulators live on the host
+//! in Rust; XLA executables only see them as input literals. This module
+//! provides the small set of operations those components need, plus a
+//! reference matmul used by tests to cross-check the PJRT path.
+
+mod ops;
+
+pub use ops::*;
+
+/// Dense row-major `f32` tensor with explicit shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Tensor from existing data; panics if the element count mismatches.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {shape:?} needs {n} elems, got {}", data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// i.i.d. normal entries with standard deviation `std`.
+    pub fn randn(shape: &[usize], std: f32, rng: &mut crate::util::Rng) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal_f32(&mut t.data, std);
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Size in bytes of the payload (for stash memory accounting).
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// 2-D accessor (row-major); debug-asserts bounds.
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        let cols = self.shape[1];
+        self.data[i * cols + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.ndim(), 2);
+        let cols = self.shape[1];
+        self.data[i * cols + j] = v;
+    }
+
+    /// `self += alpha * other` (axpy). Shapes must match.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `self *= s`.
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// In-place convex blend `self = beta*self + (1-beta)*other` — the EMA
+    /// update primitive (paper Eq. 7).
+    pub fn ema_update(&mut self, beta: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "ema shape mismatch");
+        let omb = 1.0 - beta;
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a = beta * *a + omb * b;
+        }
+    }
+
+    /// Euclidean norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Max |a-b| against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[3, 4]);
+        assert_eq!(t.shape(), &[3, 4]);
+        assert_eq!(t.len(), 12);
+        assert_eq!(t.nbytes(), 48);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn from_vec_checks_len() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![10.0, 20.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[6.0, 12.0]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[12.0, 24.0]);
+    }
+
+    #[test]
+    fn ema_update_blends() {
+        let mut a = Tensor::from_vec(&[2], vec![0.0, 4.0]);
+        let b = Tensor::from_vec(&[2], vec![2.0, 0.0]);
+        a.ema_update(0.5, &b);
+        assert_eq!(a.data(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn randn_statistics() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&[100, 100], 0.5, &mut rng);
+        let mean: f32 = t.data().iter().sum::<f32>() / t.len() as f32;
+        let var: f32 =
+            t.data().iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / t.len() as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 0.25).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn at2_is_row_major() {
+        let t = Tensor::from_vec(&[2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.at2(0, 2), 2.0);
+        assert_eq!(t.at2(1, 0), 3.0);
+    }
+}

@@ -1,0 +1,242 @@
+//! Reference tensor operations on the host.
+//!
+//! These are *not* the hot path (XLA executes the lowered HLO for all
+//! per-layer compute); they exist to (a) cross-check the PJRT path in
+//! integration tests and (b) support pure-Rust components such as the
+//! DLMS simulator and the dataset synthesizer. The matmul is cache-blocked
+//! so host-side checks stay fast at paper-scale shapes.
+
+use super::Tensor;
+
+/// `C = A @ B` for 2-D tensors, blocked for locality.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2, "matmul lhs must be 2-D");
+    assert_eq!(b.ndim(), 2, "matmul rhs must be 2-D");
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    const BLK: usize = 32;
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    for i0 in (0..m).step_by(BLK) {
+        for k0 in (0..k).step_by(BLK) {
+            for j0 in (0..n).step_by(BLK) {
+                let i1 = (i0 + BLK).min(m);
+                let k1 = (k0 + BLK).min(k);
+                let j1 = (j0 + BLK).min(n);
+                for i in i0..i1 {
+                    for kk in k0..k1 {
+                        let aik = ad[i * k + kk];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &bd[kk * n + j0..kk * n + j1];
+                        let crow = &mut cd[i * n + j0..i * n + j1];
+                        for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                            *cv += aik * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// `A^T` for a 2-D tensor.
+pub fn transpose(a: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let mut t = Tensor::zeros(&[n, m]);
+    for i in 0..m {
+        for j in 0..n {
+            t.set2(j, i, a.at2(i, j));
+        }
+    }
+    t
+}
+
+/// Row-broadcast add: `y[i, j] = x[i, j] + b[j]`.
+pub fn add_bias(x: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(x.ndim(), 2);
+    assert_eq!(b.ndim(), 1);
+    assert_eq!(x.shape()[1], b.shape()[0]);
+    let mut y = x.clone();
+    let n = b.len();
+    for (i, v) in y.data_mut().iter_mut().enumerate() {
+        *v += b.data()[i % n];
+    }
+    y
+}
+
+/// Elementwise ReLU.
+pub fn relu(x: &Tensor) -> Tensor {
+    let mut y = x.clone();
+    for v in y.data_mut().iter_mut() {
+        *v = v.max(0.0);
+    }
+    y
+}
+
+/// Gradient mask of ReLU given its *output* `y`: `dy * (y > 0)`.
+pub fn relu_grad(y: &Tensor, dy: &Tensor) -> Tensor {
+    assert_eq!(y.shape(), dy.shape());
+    let mut g = dy.clone();
+    for (gv, yv) in g.data_mut().iter_mut().zip(y.data().iter()) {
+        if *yv <= 0.0 {
+            *gv = 0.0;
+        }
+    }
+    g
+}
+
+/// Numerically-stable row softmax.
+pub fn softmax_rows(x: &Tensor) -> Tensor {
+    assert_eq!(x.ndim(), 2);
+    let (m, n) = (x.shape()[0], x.shape()[1]);
+    let mut y = x.clone();
+    for i in 0..m {
+        let row = &mut y.data_mut()[i * n..(i + 1) * n];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    y
+}
+
+/// Mean softmax cross-entropy and its gradient w.r.t. logits, plus the
+/// number of argmax-correct rows. Mirrors the `loss_grad` HLO artifact.
+pub fn softmax_xent(logits: &Tensor, labels: &[usize]) -> (f32, Tensor, usize) {
+    let (m, n) = (logits.shape()[0], logits.shape()[1]);
+    assert_eq!(m, labels.len());
+    let p = softmax_rows(logits);
+    let mut loss = 0.0f32;
+    let mut correct = 0usize;
+    let mut dl = p.clone();
+    for i in 0..m {
+        let li = labels[i];
+        assert!(li < n, "label {li} out of range {n}");
+        loss -= p.at2(i, li).max(1e-12).ln();
+        let row = &p.data()[i * n..(i + 1) * n];
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if argmax == li {
+            correct += 1;
+        }
+        let d = dl.at2(i, li) - 1.0;
+        dl.set2(i, li, d);
+    }
+    dl.scale(1.0 / m as f32);
+    (loss / m as f32, dl, correct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape()[0], a.shape()[1]);
+        let n = b.shape()[1];
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a.at2(i, kk) * b.at2(kk, j);
+                }
+                c.set2(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive_on_random_shapes() {
+        let mut rng = Rng::new(77);
+        for _ in 0..10 {
+            let m = 1 + rng.index(40);
+            let k = 1 + rng.index(40);
+            let n = 1 + rng.index(40);
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            let c_ref = naive_matmul(&a, &b);
+            assert!(c.max_abs_diff(&c_ref) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(5);
+        let a = Tensor::randn(&[7, 3], 1.0, &mut rng);
+        assert_eq!(transpose(&transpose(&a)), a);
+    }
+
+    #[test]
+    fn relu_and_grad() {
+        let x = Tensor::from_vec(&[1, 4], vec![-1.0, 0.0, 2.0, -3.0]);
+        let y = relu(&x);
+        assert_eq!(y.data(), &[0.0, 0.0, 2.0, 0.0]);
+        let dy = Tensor::from_vec(&[1, 4], vec![1.0; 4]);
+        let g = relu_grad(&y, &dy);
+        assert_eq!(g.data(), &[0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[5, 9], 3.0, &mut rng);
+        let p = softmax_rows(&x);
+        for i in 0..5 {
+            let s: f32 = (0..9).map(|j| p.at2(i, j)).sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn xent_gradient_matches_finite_difference() {
+        let mut rng = Rng::new(21);
+        let logits = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let labels = vec![0usize, 3, 5, 2];
+        let (_, grad, _) = softmax_xent(&logits, &labels);
+        let eps = 1e-3;
+        for idx in 0..logits.len() {
+            let mut lp = logits.clone();
+            lp.data_mut()[idx] += eps;
+            let (l_plus, _, _) = softmax_xent(&lp, &labels);
+            let mut lm = logits.clone();
+            lm.data_mut()[idx] -= eps;
+            let (l_minus, _, _) = softmax_xent(&lm, &labels);
+            let fd = (l_plus - l_minus) / (2.0 * eps);
+            assert!(
+                (fd - grad.data()[idx]).abs() < 1e-3,
+                "idx {idx}: fd {fd} vs grad {}",
+                grad.data()[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn xent_perfect_prediction_low_loss() {
+        // Strongly peaked logits at the true label → loss ≈ 0, all correct.
+        let mut logits = Tensor::zeros(&[3, 4]);
+        for (i, &l) in [1usize, 2, 0].iter().enumerate() {
+            logits.set2(i, l, 20.0);
+        }
+        let (loss, _, correct) = softmax_xent(&logits, &[1, 2, 0]);
+        assert!(loss < 1e-3);
+        assert_eq!(correct, 3);
+    }
+}

@@ -1,0 +1,95 @@
+//! Lightweight property-testing harness.
+//!
+//! The offline registry lacks `proptest`, so this module provides the
+//! pieces our invariant tests need: seeded random case generation with a
+//! configurable case count, and failure reports that include the seed and
+//! case index so any failure replays deterministically.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath in this image)
+//! use layerpipe2::testing::property;
+//! property(64, |rng, case| {
+//!     let n = 1 + rng.index(100);
+//!     assert!(n >= 1, "case {case}");
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Default base seed; override with `LAYERPIPE2_PROP_SEED` to reproduce a
+/// CI failure locally.
+fn base_seed() -> u64 {
+    std::env::var("LAYERPIPE2_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FF_EE00)
+}
+
+/// Run `body` for `cases` independently-seeded cases. On panic, re-raises
+/// with the seed and case index prepended so the case can be replayed.
+pub fn property(cases: usize, body: impl Fn(&mut Rng, usize) + std::panic::RefUnwindSafe) {
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut r = rng.clone();
+            body(&mut r, case);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed at case {case}/{cases} (LAYERPIPE2_PROP_SEED={seed}): {msg}"
+            );
+        }
+        // keep rng "used" for clarity; each case derives its own stream
+        let _ = rng.next_u64();
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "{what}: index {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_runs_all_cases() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static COUNT: AtomicUsize = AtomicUsize::new(0);
+        property(10, |_rng, _case| {
+            COUNT.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(COUNT.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn property_reports_case() {
+        property(5, |_rng, case| {
+            assert!(case < 3, "boom");
+        });
+    }
+
+    #[test]
+    fn allclose_passes_and_fails() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0], 1e-5, 1e-5, "ok");
+        let r = std::panic::catch_unwind(|| {
+            assert_allclose(&[1.0], &[1.1], 1e-5, 1e-5, "bad");
+        });
+        assert!(r.is_err());
+    }
+}

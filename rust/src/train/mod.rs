@@ -1,0 +1,401 @@
+//! The delayed-gradient trainer: the Fig. 5 experiment engine.
+//!
+//! Implements pipelined training in *iteration-indexed* form, which the
+//! schedule module proves equivalent to the clock-level pipeline: with
+//! layer delays `d_l = 2·S(l)` (Eq. 1),
+//!
+//! - at iteration `t`, batch `t` forwards through all layers using each
+//!   layer's **current** weights; per-layer inputs/outputs are stashed
+//!   (the activation stashing that §III-B shows is structural);
+//! - the backward of batch `t` at layer `l` executes at iteration
+//!   `t + d_l`, using the weight version chosen by the
+//!   [`crate::strategy::LayerStrategy`] (stashed / latest / EMA-recomputed);
+//! - the resulting gradient is applied immediately (SGD + momentum + wd,
+//!   cosine lr), so the gradient misses exactly `d_l` updates — the
+//!   staleness the paper analyzes.
+//!
+//! The sequential strategy sets every `d_l = 0`, collapsing to standard
+//! backpropagation on the same code path (a true reference curve).
+
+use crate::config::ExperimentConfig;
+use crate::data::{BatchIter, Splits};
+use crate::metrics::{EpochMetrics, RunCurve};
+use crate::model::Mlp;
+use crate::optim::{ConstantLr, CosineLr, LrSchedule, Optimizer, Sgd};
+use crate::retiming::StagePartition;
+use crate::runtime::Engine;
+use crate::strategy::{LayerStrategy, StrategyKind};
+use crate::tensor::Tensor;
+use crate::util::{Rng, Stopwatch};
+use anyhow::{ensure, Context, Result};
+use std::collections::VecDeque;
+
+/// Per-layer training state.
+struct LayerState {
+    strategy: LayerStrategy,
+    opt_w: Sgd,
+    opt_b: Sgd,
+    /// Gradient delay `d_l = 2·S(l)`.
+    delay: usize,
+}
+
+/// One in-flight batch: everything the delayed backward will need.
+struct Inflight {
+    /// Iteration at which the batch was forwarded.
+    t: u64,
+    /// Per-layer saved `(input, output)` activations.
+    saved: Vec<(Tensor, Tensor)>,
+    /// One-hot labels (consumed by `loss_grad` at backward time).
+    onehot: Tensor,
+    /// Upstream gradient flowing down the backward chain.
+    dy: Option<Tensor>,
+    /// Next layer whose backward is pending (`layers-1` → 0), or None
+    /// when fully retired.
+    next_bwd: Option<usize>,
+    /// Loss observed when this batch's loss_grad ran.
+    loss: Option<f32>,
+}
+
+impl Inflight {
+    fn nbytes(&self) -> usize {
+        self.saved.iter().map(|(a, b)| a.nbytes() + b.nbytes()).sum::<usize>()
+            + self.onehot.nbytes()
+            + self.dy.as_ref().map_or(0, Tensor::nbytes)
+    }
+}
+
+/// The pipelined trainer for one strategy.
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    pub mlp: Mlp,
+    cfg: ExperimentConfig,
+    kind: StrategyKind,
+    partition: StagePartition,
+    layers: Vec<LayerState>,
+    lr: Box<dyn LrSchedule>,
+    /// Prefix sums of lr over global steps: `lr_prefix[t] = Σ_{τ<t} lr(τ)`
+    /// (grown lazily) — gives exact `lr_sum` for Eq. 9 under schedules.
+    lr_prefix: Vec<f64>,
+    inflight: VecDeque<Inflight>,
+    step: u64,
+    peak_activation_bytes: usize,
+    /// Losses observed this epoch (at backward time).
+    epoch_losses: Vec<f32>,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(
+        engine: &'e Engine,
+        cfg: &ExperimentConfig,
+        kind: StrategyKind,
+        rng: &mut Rng,
+    ) -> Result<Trainer<'e>> {
+        cfg.validate()?;
+        let m = engine.manifest();
+        ensure!(
+            m.model.batch == cfg.model.batch
+                && m.model.input_dim == cfg.model.input_dim
+                && m.model.hidden_dim == cfg.model.hidden_dim
+                && m.model.classes == cfg.model.classes
+                && m.model.layers == cfg.model.layers,
+            "artifact preset {:?} does not match experiment model config {:?} — \
+             re-run `make artifacts` with the matching preset",
+            m.model,
+            cfg.model
+        );
+        let mlp = Mlp::init(&cfg.model, rng);
+        // Sequential runs as a 1-stage pipeline (all delays zero).
+        let stages = if kind.is_pipelined() { cfg.pipeline.stages } else { 1 };
+        let partition = StagePartition::even(cfg.model.layers, stages)?;
+        let delays = partition.gradient_delays();
+        let layers = (0..cfg.model.layers)
+            .map(|l| {
+                let (din, dout) = crate::model::layer_dims(&cfg.model, l);
+                LayerState {
+                    strategy: LayerStrategy::new(kind, delays[l]),
+                    opt_w: Sgd::new(&[din, dout], cfg.optim.momentum, cfg.optim.weight_decay),
+                    opt_b: Sgd::new(&[dout], cfg.optim.momentum, 0.0),
+                    delay: delays[l],
+                }
+            })
+            .collect();
+        let steps_per_epoch = cfg.data.train_samples / cfg.model.batch;
+        let total_steps = steps_per_epoch * cfg.epochs;
+        let lr: Box<dyn LrSchedule> = if cfg.optim.cosine {
+            Box::new(CosineLr::new(cfg.optim.lr, cfg.optim.min_lr, total_steps.max(1)))
+        } else {
+            Box::new(ConstantLr(cfg.optim.lr))
+        };
+        Ok(Trainer {
+            engine,
+            mlp,
+            cfg: cfg.clone(),
+            kind,
+            partition,
+            layers,
+            lr,
+            lr_prefix: vec![0.0],
+            inflight: VecDeque::new(),
+            step: 0,
+            peak_activation_bytes: 0,
+            epoch_losses: Vec::new(),
+        })
+    }
+
+    pub fn kind(&self) -> StrategyKind {
+        self.kind
+    }
+
+    pub fn partition(&self) -> &StagePartition {
+        &self.partition
+    }
+
+    pub fn gradient_delays(&self) -> Vec<usize> {
+        self.layers.iter().map(|l| l.delay).collect()
+    }
+
+    fn lr_at(&mut self, t: u64) -> f32 {
+        self.grow_prefix(t + 1);
+        self.lr.lr(t as usize)
+    }
+
+    fn grow_prefix(&mut self, upto: u64) {
+        while self.lr_prefix.len() <= upto as usize {
+            let t = self.lr_prefix.len() - 1;
+            let last = *self.lr_prefix.last().expect("nonempty");
+            self.lr_prefix.push(last + self.lr.lr(t) as f64);
+        }
+    }
+
+    /// `Σ lr(τ)` for `τ ∈ [t0, t1)` — the `lr_sum` of Eq. 9.
+    fn lr_sum(&mut self, t0: u64, t1: u64) -> f32 {
+        self.grow_prefix(t1);
+        (self.lr_prefix[t1 as usize] - self.lr_prefix[t0 as usize]) as f32
+    }
+
+    /// One pipelined iteration: forward batch `t` (if provided), then run
+    /// every backward scheduled for this iteration.
+    pub fn iteration(&mut self, batch: Option<(Tensor, Tensor)>) -> Result<()> {
+        let t = self.step;
+
+        // ---- forward lane ------------------------------------------------
+        if let Some((x, onehot)) = batch {
+            let mut saved = Vec::with_capacity(self.mlp.num_layers());
+            let mut h = x;
+            for l in 0..self.mlp.num_layers() {
+                self.layers[l].strategy.on_forward(t, &self.mlp.layers[l].w);
+                let y = self.mlp.forward_layer(self.engine, l, &h)?;
+                saved.push((h, y.clone()));
+                h = y;
+            }
+            self.inflight.push_back(Inflight {
+                t,
+                saved,
+                onehot,
+                dy: None,
+                next_bwd: Some(self.mlp.num_layers() - 1),
+                loss: None,
+            });
+            let act_bytes: usize = self.inflight.iter().map(Inflight::nbytes).sum();
+            self.peak_activation_bytes = self.peak_activation_bytes.max(act_bytes);
+        }
+
+        // ---- backward lane -----------------------------------------------
+        // Delays are non-increasing in l, so scanning in-flight batches
+        // oldest-first and their layers top-down preserves dataflow order.
+        let mut retired = 0;
+        for idx in 0..self.inflight.len() {
+            loop {
+                let rec = &self.inflight[idx];
+                let Some(l) = rec.next_bwd else { break };
+                if rec.t + self.layers[l].delay as u64 != t {
+                    break;
+                }
+                self.backward_layer(idx, l)
+                    .with_context(|| format!("backward layer {l} of batch {}", self.inflight[idx].t))?;
+            }
+            if self.inflight[idx].next_bwd.is_none() {
+                retired += 1;
+            }
+        }
+        for _ in 0..retired {
+            let rec = self.inflight.pop_front().expect("retired record");
+            debug_assert!(rec.next_bwd.is_none());
+            if let Some(loss) = rec.loss {
+                self.epoch_losses.push(loss);
+            }
+        }
+
+        self.step += 1;
+        Ok(())
+    }
+
+    /// Run one layer's delayed backward for in-flight record `idx`.
+    fn backward_layer(&mut self, idx: usize, l: usize) -> Result<()> {
+        let t_now = self.step;
+        let t0 = self.inflight[idx].t;
+        let last = l + 1 == self.mlp.num_layers();
+
+        // Initial gradient from the loss artifact (last layer only).
+        if last {
+            let rec = &self.inflight[idx];
+            let logits = &rec.saved[l].1;
+            let (loss, dlogits, _correct) =
+                self.mlp.loss_grad(self.engine, logits, &rec.onehot)?;
+            let rec = &mut self.inflight[idx];
+            rec.loss = Some(loss);
+            rec.dy = Some(dlogits);
+        }
+
+        // The strategy picks the weight version for this backward.
+        // `lr_sum` spans only the iterations where this layer actually
+        // updated: updates start at iteration d_l (pipeline fill), so for
+        // early batches fewer than d_l updates intervened — and the EMA's
+        // cumulative-mean ramp (Eq. 7) holds exactly that many samples,
+        // making reconstruction near-exact from the very first backward.
+        let first_update = self.layers[l].delay as u64;
+        let lr_sum = self.lr_sum(t0.max(first_update), t_now);
+        let state = &self.layers[l];
+        let w_bwd = state
+            .strategy
+            .backward_weights(t0, &self.mlp.layers[l].w, lr_sum);
+
+        // Move (not clone) the stashed activations and upstream gradient
+        // out of the record: layer l's backward is their last consumer.
+        let (x, y, dy) = {
+            let rec = &mut self.inflight[idx];
+            let (x, y) = std::mem::replace(
+                &mut rec.saved[l],
+                (Tensor::zeros(&[0]), Tensor::zeros(&[0])),
+            );
+            let dy = rec.dy.take().expect("upstream gradient present");
+            (x, y, dy)
+        };
+        let (dx, dw, db) =
+            self.mlp.backward_layer_with(self.engine, l, &x, &y, &w_bwd, &dy)?;
+
+        // Apply immediately: the gradient lands d_l iterations after
+        // launch, exactly the Eq. 1 staleness.
+        let lr = self.lr_at(t_now);
+        let state = &mut self.layers[l];
+        let upd_w = state.opt_w.step(&mut self.mlp.layers[l].w, &dw, lr);
+        let _upd_b = state.opt_b.step(&mut self.mlp.layers[l].b, &db, lr);
+        state.strategy.on_update(&upd_w);
+
+        let rec = &mut self.inflight[idx];
+        rec.dy = Some(dx);
+        rec.next_bwd = if l == 0 { None } else { Some(l - 1) };
+        Ok(())
+    }
+
+    /// Drain: run delay-only iterations until every in-flight batch has
+    /// fully retired (end of training).
+    pub fn drain(&mut self) -> Result<()> {
+        while !self.inflight.is_empty() {
+            self.iteration(None)?;
+        }
+        Ok(())
+    }
+
+    /// Test accuracy via the fused `fwd_full` artifact.
+    pub fn evaluate(&self, data: &Splits) -> Result<f32> {
+        let b = self.cfg.model.batch;
+        let n = data.test.len() / b * b;
+        ensure!(n > 0, "test set smaller than one batch");
+        let mut correct = 0usize;
+        for start in (0..n).step_by(b) {
+            let idx: Vec<usize> = (start..start + b).collect();
+            let (x, _) = data.test.batch(&idx);
+            let logits = self.mlp.forward_full(self.engine, &x)?;
+            let c = logits.shape()[1];
+            for row in 0..b {
+                let slice = &logits.data()[row * c..(row + 1) * c];
+                let mut arg = 0;
+                for (j, &v) in slice.iter().enumerate() {
+                    if v > slice[arg] {
+                        arg = j;
+                    }
+                }
+                if arg == data.test.labels[start + row] {
+                    correct += 1;
+                }
+            }
+        }
+        Ok(correct as f32 / n as f32)
+    }
+
+    /// Peak staleness-handling bytes across layers (stash + EMA).
+    pub fn staleness_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.strategy.peak_staleness_nbytes()).sum()
+    }
+
+    pub fn peak_activation_bytes(&self) -> usize {
+        self.peak_activation_bytes
+    }
+
+    /// Train for the configured epochs, returning the metrics curve.
+    pub fn train(&mut self, data: &Splits, rng: &mut Rng) -> Result<RunCurve> {
+        let mut curve = RunCurve {
+            strategy: self.kind.name().to_string(),
+            epochs: Vec::with_capacity(self.cfg.epochs),
+        };
+        for epoch in 0..self.cfg.epochs {
+            let warmup = epoch < self.cfg.pipeline.warmup_epochs;
+            for ls in &mut self.layers {
+                ls.strategy.set_warmup(warmup);
+            }
+            let sw = Stopwatch::start();
+            self.epoch_losses.clear();
+            let iter = BatchIter::new(&data.train, self.cfg.model.batch, rng);
+            for (x, onehot) in iter {
+                self.iteration(Some((x, onehot)))?;
+            }
+            let test_accuracy = self.evaluate(data)?;
+            let train_loss = if self.epoch_losses.is_empty() {
+                f32::NAN
+            } else {
+                self.epoch_losses.iter().sum::<f32>() / self.epoch_losses.len() as f32
+            };
+            let m = EpochMetrics {
+                epoch,
+                train_loss,
+                test_accuracy,
+                lr: self.lr.lr(self.step as usize),
+                staleness_bytes: self.staleness_bytes(),
+                activation_bytes: self.peak_activation_bytes,
+                seconds: sw.elapsed_secs(),
+            };
+            crate::log_info!(
+                "[{}] epoch {epoch}: loss {:.4} acc {:.4} ({}s)",
+                self.kind.name(),
+                m.train_loss,
+                m.test_accuracy,
+                format!("{:.2}", m.seconds)
+            );
+            curve.epochs.push(m);
+        }
+        self.drain()?;
+        Ok(curve)
+    }
+}
+
+// Unit tests for scheduling logic use a mock-free path: they need the
+// Engine, so they live in rust/tests/ (integration). Pure helpers are
+// tested here.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inflight_nbytes_counts_everything() {
+        let rec = Inflight {
+            t: 0,
+            saved: vec![(Tensor::zeros(&[2, 2]), Tensor::zeros(&[2, 2]))],
+            onehot: Tensor::zeros(&[2, 4]),
+            dy: Some(Tensor::zeros(&[2, 2])),
+            next_bwd: Some(0),
+            loss: None,
+        };
+        assert_eq!(rec.nbytes(), (4 + 4 + 8 + 4) * 4);
+    }
+}

@@ -1,0 +1,92 @@
+//! Leveled stderr logging with an env-controlled threshold.
+//!
+//! `LAYERPIPE2_LOG` ∈ {error, warn, info, debug, trace}; default `info`.
+//! Deliberately tiny: no timestamps by default (keeps test output stable),
+//! atomics for the level, zero allocation when filtered out.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialised
+
+fn init_from_env() -> u8 {
+    let lvl = match std::env::var("LAYERPIPE2_LOG").ok().as_deref() {
+        Some("error") => Level::Error,
+        Some("warn") => Level::Warn,
+        Some("debug") => Level::Debug,
+        Some("trace") => Level::Trace,
+        _ => Level::Info,
+    } as u8;
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Current threshold, lazily read from the environment.
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    let raw = if raw == 255 { init_from_env() } else { raw };
+    match raw {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the threshold programmatically (tests, CLI `--verbose`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// `true` if a message at `l` would be emitted.
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+#[doc(hidden)]
+pub fn emit(l: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_error { ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Error, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Warn, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Info, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Debug, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Trace, format_args!($($t)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_filters() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

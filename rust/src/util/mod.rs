@@ -1,0 +1,13 @@
+//! Small self-contained substrates: RNG, JSON, logging, timing.
+//!
+//! The build environment is offline with a minimal crate cache, so these
+//! are written from scratch rather than pulled from crates.io (see
+//! DESIGN.md §Reproduction bands & substitutions).
+
+pub mod rng;
+pub mod json;
+pub mod log;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Stopwatch;

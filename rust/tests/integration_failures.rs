@@ -1,0 +1,99 @@
+//! Failure injection: the runtime must fail loudly and legibly, never
+//! crash in XLA or silently compute garbage.
+
+use layerpipe2::runtime::{Engine, Manifest};
+use std::io::Write;
+
+fn write_dir(files: &[(&str, &str)]) -> tempdir::TempDirLite {
+    let dir = tempdir::TempDirLite::new("lp2_fail");
+    for (name, content) in files {
+        let mut f = std::fs::File::create(dir.path().join(name)).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+    }
+    dir
+}
+
+/// Minimal tempdir (the tempfile crate is unavailable offline).
+mod tempdir {
+    use std::path::{Path, PathBuf};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+    pub struct TempDirLite(PathBuf);
+
+    impl TempDirLite {
+        pub fn new(prefix: &str) -> Self {
+            let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+            let p = std::env::temp_dir().join(format!(
+                "{prefix}_{}_{n}",
+                std::process::id()
+            ));
+            std::fs::create_dir_all(&p).unwrap();
+            TempDirLite(p)
+        }
+
+        pub fn path(&self) -> &Path {
+            &self.0
+        }
+    }
+
+    impl Drop for TempDirLite {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+}
+
+const MINI_MANIFEST: &str = r#"{
+  "preset": "tiny", "fingerprint": "x",
+  "model": {"batch": 2, "input_dim": 2, "hidden_dim": 2, "classes": 2, "layers": 2},
+  "entries": [
+    {"name": "only", "file": "only.hlo.txt",
+     "inputs": [[2, 2]], "outputs": 1, "output_shapes": [[2, 2]]}
+  ]
+}"#;
+
+#[test]
+fn missing_manifest_dir_is_a_clear_error() {
+    let err = Engine::load("/nonexistent/path").err().expect("must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "got: {msg}");
+}
+
+#[test]
+fn corrupt_manifest_json_is_rejected() {
+    let dir = write_dir(&[("manifest.json", "{not json")]);
+    let err = Engine::load(dir.path().to_str().unwrap()).err().expect("must fail");
+    assert!(format!("{err:#}").contains("JSON"), "{err:#}");
+}
+
+#[test]
+fn manifest_referencing_missing_hlo_file_is_rejected() {
+    let dir = write_dir(&[("manifest.json", MINI_MANIFEST)]);
+    let err = Engine::load(dir.path().to_str().unwrap()).err().expect("must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("only"), "names the bad entry: {msg}");
+}
+
+#[test]
+fn garbage_hlo_text_is_rejected_at_compile_time() {
+    let dir = write_dir(&[
+        ("manifest.json", MINI_MANIFEST),
+        ("only.hlo.txt", "this is not HLO at all"),
+    ]);
+    let err = Engine::load(dir.path().to_str().unwrap()).err().expect("must fail");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("only") || msg.contains("HLO") || msg.contains("pars"),
+        "load-time rejection, got: {msg}"
+    );
+}
+
+#[test]
+fn manifest_parse_rejects_wrong_types() {
+    let bad = MINI_MANIFEST.replace("\"batch\": 2", "\"batch\": \"two\"");
+    assert!(Manifest::parse(&bad).is_err());
+    let bad = MINI_MANIFEST.replace("[[2, 2]]", "[[2, -2]]");
+    assert!(Manifest::parse(&bad).is_err());
+}

@@ -1,0 +1,164 @@
+//! Integration: PJRT runtime vs host-tensor oracles, over real artifacts.
+//!
+//! These tests require `make artifacts` (the `small` preset manifest in
+//! `artifacts/`). They prove the full AOT bridge: jax/pallas → HLO text →
+//! rust compile → execute → numbers match the from-scratch host ops.
+
+use layerpipe2::config::ModelConfig;
+use layerpipe2::model::{LayerRole, Mlp};
+use layerpipe2::runtime::Engine;
+use layerpipe2::tensor::{self, Tensor};
+use layerpipe2::testing::assert_allclose;
+use layerpipe2::util::Rng;
+use std::sync::OnceLock;
+
+fn engine() -> &'static Engine {
+    static ENGINE: OnceLock<Engine> = OnceLock::new();
+    ENGINE.get_or_init(|| {
+        Engine::load("artifacts").expect("run `make artifacts` before cargo test")
+    })
+}
+
+fn model_cfg() -> ModelConfig {
+    let m = &engine().manifest().model;
+    ModelConfig {
+        batch: m.batch,
+        input_dim: m.input_dim,
+        hidden_dim: m.hidden_dim,
+        classes: m.classes,
+        layers: m.layers,
+        init_scale: 1.0,
+    }
+}
+
+#[test]
+fn manifest_matches_small_preset() {
+    let m = engine().manifest();
+    assert_eq!(m.preset, "small");
+    assert_eq!(m.model.batch, 32);
+    assert_eq!(m.model.layers, 8);
+    assert_eq!(m.entries.len(), 9); // incl. ablation_fwd_hid_jnp
+}
+
+#[test]
+fn dense_fwd_matches_host_oracle() {
+    let cfg = model_cfg();
+    let mut rng = Rng::new(42);
+    let x = Tensor::randn(&[cfg.batch, cfg.hidden_dim], 1.0, &mut rng);
+    let w = Tensor::randn(&[cfg.hidden_dim, cfg.hidden_dim], 0.2, &mut rng);
+    let b = Tensor::randn(&[cfg.hidden_dim], 0.1, &mut rng);
+    let got = engine().run("dense_fwd_hid", &[&x, &w, &b]).unwrap();
+    let want = tensor::relu(&tensor::add_bias(&tensor::matmul(&x, &w), &b));
+    assert_allclose(got[0].data(), want.data(), 1e-4, 1e-4, "dense_fwd_hid");
+}
+
+#[test]
+fn dense_bwd_matches_host_oracle() {
+    let cfg = model_cfg();
+    let mut rng = Rng::new(43);
+    let h = cfg.hidden_dim;
+    let x = Tensor::randn(&[cfg.batch, h], 1.0, &mut rng);
+    let w = Tensor::randn(&[h, h], 0.2, &mut rng);
+    let b = Tensor::randn(&[h], 0.1, &mut rng);
+    let y = tensor::relu(&tensor::add_bias(&tensor::matmul(&x, &w), &b));
+    let dy = Tensor::randn(&[cfg.batch, h], 1.0, &mut rng);
+
+    let got = engine().run("dense_bwd_hid", &[&x, &y, &w, &dy]).unwrap();
+    let dz = tensor::relu_grad(&y, &dy);
+    let want_dx = tensor::matmul(&dz, &tensor::transpose(&w));
+    let want_dw = tensor::matmul(&tensor::transpose(&x), &dz);
+    assert_allclose(got[0].data(), want_dx.data(), 1e-3, 1e-3, "dx");
+    assert_allclose(got[1].data(), want_dw.data(), 1e-3, 1e-3, "dw");
+    // db = column sums of dz
+    let mut want_db = Tensor::zeros(&[h]);
+    for r in 0..cfg.batch {
+        for c in 0..h {
+            want_db.data_mut()[c] += dz.at2(r, c);
+        }
+    }
+    assert_allclose(got[2].data(), want_db.data(), 1e-3, 1e-3, "db");
+}
+
+#[test]
+fn loss_grad_matches_host_oracle() {
+    let cfg = model_cfg();
+    let mut rng = Rng::new(44);
+    let logits = Tensor::randn(&[cfg.batch, cfg.classes], 2.0, &mut rng);
+    let labels: Vec<usize> = (0..cfg.batch).map(|_| rng.index(cfg.classes)).collect();
+    let mut onehot = Tensor::zeros(&[cfg.batch, cfg.classes]);
+    for (i, &l) in labels.iter().enumerate() {
+        onehot.set2(i, l, 1.0);
+    }
+    let got = engine().run("loss_grad", &[&logits, &onehot]).unwrap();
+    let (want_loss, want_dl, want_correct) = tensor::softmax_xent(&logits, &labels);
+    assert!((got[0].data()[0] - want_loss).abs() < 1e-4, "loss");
+    assert_allclose(got[1].data(), want_dl.data(), 1e-5, 1e-4, "dlogits");
+    assert_eq!(got[2].data()[0] as usize, want_correct, "correct count");
+}
+
+#[test]
+fn fwd_full_equals_per_layer_chain() {
+    let cfg = model_cfg();
+    let mut rng = Rng::new(45);
+    let mlp = Mlp::init(&cfg, &mut rng);
+    let x = Tensor::randn(&[cfg.batch, cfg.input_dim], 1.0, &mut rng);
+
+    let fused = mlp.forward_full(engine(), &x).unwrap();
+    let mut h = x;
+    for l in 0..cfg.layers {
+        h = mlp.forward_layer(engine(), l, &h).unwrap();
+    }
+    assert_allclose(fused.data(), h.data(), 1e-3, 1e-3, "fused vs chain");
+}
+
+#[test]
+fn layer_roles_dispatch_correct_artifacts() {
+    let cfg = model_cfg();
+    let mut rng = Rng::new(46);
+    let mlp = Mlp::init(&cfg, &mut rng);
+    assert_eq!(mlp.layers[0].role, LayerRole::Input);
+    assert_eq!(mlp.layers[cfg.layers - 1].role, LayerRole::Output);
+    // Input layer consumes [B, D]; output produces [B, C].
+    let x = Tensor::randn(&[cfg.batch, cfg.input_dim], 1.0, &mut rng);
+    let y0 = mlp.forward_layer(engine(), 0, &x).unwrap();
+    assert_eq!(y0.shape(), &[cfg.batch, cfg.hidden_dim]);
+    let logits = mlp
+        .forward_layer(engine(), cfg.layers - 1, &y0)
+        .unwrap();
+    assert_eq!(logits.shape(), &[cfg.batch, cfg.classes]);
+}
+
+#[test]
+fn shape_mismatch_is_rejected_not_ub() {
+    let cfg = model_cfg();
+    let mut rng = Rng::new(47);
+    let wrong = Tensor::randn(&[cfg.batch, cfg.hidden_dim + 1], 1.0, &mut rng);
+    let w = Tensor::randn(&[cfg.hidden_dim, cfg.hidden_dim], 1.0, &mut rng);
+    let b = Tensor::randn(&[cfg.hidden_dim], 1.0, &mut rng);
+    let err = engine().run("dense_fwd_hid", &[&wrong, &w, &b]);
+    assert!(err.is_err(), "shape mismatch must error");
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("shape"), "useful message, got: {msg}");
+}
+
+#[test]
+fn unknown_artifact_is_rejected() {
+    assert!(engine().run("nonexistent", &[]).is_err());
+}
+
+#[test]
+fn relu_epilogue_is_active_in_artifact() {
+    // All-negative pre-activations → exactly zero output (fused ReLU).
+    let cfg = model_cfg();
+    let x = Tensor::from_vec(
+        &[cfg.batch, cfg.hidden_dim],
+        vec![1.0; cfg.batch * cfg.hidden_dim],
+    );
+    let mut w = Tensor::zeros(&[cfg.hidden_dim, cfg.hidden_dim]);
+    for v in w.data_mut().iter_mut() {
+        *v = -0.1;
+    }
+    let b = Tensor::zeros(&[cfg.hidden_dim]);
+    let y = engine().run("dense_fwd_hid", &[&x, &w, &b]).unwrap();
+    assert!(y[0].data().iter().all(|&v| v == 0.0));
+}

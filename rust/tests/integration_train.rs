@@ -1,0 +1,154 @@
+//! Integration: the pipelined trainer over real artifacts.
+//!
+//! Verifies the delayed-gradient semantics end-to-end: the sequential
+//! strategy is exact backprop, pipelined strategies carry the Eq. 1
+//! delays, stashing stays numerically consistent, and the memory
+//! accounting matches O(L·S) vs O(L).
+
+use layerpipe2::config::{DataConfig, ExperimentConfig};
+use layerpipe2::coordinator::Coordinator;
+use layerpipe2::data::teacher_dataset;
+use layerpipe2::runtime::Engine;
+use layerpipe2::strategy::StrategyKind;
+use layerpipe2::train::Trainer;
+use layerpipe2::util::Rng;
+use std::sync::OnceLock;
+
+fn engine() -> &'static Engine {
+    static ENGINE: OnceLock<Engine> = OnceLock::new();
+    ENGINE.get_or_init(|| {
+        Engine::load("artifacts").expect("run `make artifacts` before cargo test")
+    })
+}
+
+fn quick_cfg(epochs: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.epochs = epochs;
+    cfg.data = DataConfig {
+        train_samples: 512,
+        test_samples: 256,
+        teacher_hidden: 48,
+        label_noise: 0.0,
+        seed: 99,
+    };
+    cfg
+}
+
+#[test]
+fn delays_match_eq1_for_trainer() {
+    let cfg = quick_cfg(1);
+    let mut rng = Rng::new(1);
+    let t = Trainer::new(engine(), &cfg, StrategyKind::Stashing, &mut rng).unwrap();
+    assert_eq!(t.gradient_delays(), vec![14, 12, 10, 8, 6, 4, 2, 0]);
+    let seq = Trainer::new(engine(), &cfg, StrategyKind::Sequential, &mut rng).unwrap();
+    assert_eq!(seq.gradient_delays(), vec![0; 8]);
+}
+
+#[test]
+fn sequential_training_learns() {
+    let cfg = quick_cfg(3);
+    let data = teacher_dataset(&cfg.model, &cfg.data);
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = Trainer::new(engine(), &cfg, StrategyKind::Sequential, &mut rng).unwrap();
+    let mut batch_rng = Rng::new(5);
+    let curve = t.train(&data, &mut batch_rng).unwrap();
+    let random_acc = 1.0 / cfg.model.classes as f32;
+    assert!(
+        curve.final_accuracy() > 2.0 * random_acc,
+        "no learning: {}",
+        curve.final_accuracy()
+    );
+    // Loss decreases across epochs.
+    let first = curve.epochs.first().unwrap().train_loss;
+    let last = curve.epochs.last().unwrap().train_loss;
+    assert!(last < first, "loss {first} → {last}");
+}
+
+#[test]
+fn stashing_converges_under_full_delay() {
+    let cfg = quick_cfg(3);
+    let data = teacher_dataset(&cfg.model, &cfg.data);
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = Trainer::new(engine(), &cfg, StrategyKind::Stashing, &mut rng).unwrap();
+    let mut batch_rng = Rng::new(5);
+    let curve = t.train(&data, &mut batch_rng).unwrap();
+    assert!(
+        curve.final_accuracy() > 1.5 / cfg.model.classes as f32 * 2.0,
+        "delayed-but-consistent gradients must converge: {}",
+        curve.final_accuracy()
+    );
+    // Stashing must hold O(Σ d_l) weight versions.
+    assert!(t.staleness_bytes() > 0);
+}
+
+#[test]
+fn pipeline_ema_memory_is_o_l_not_o_ls() {
+    let cfg = quick_cfg(2);
+    let data = teacher_dataset(&cfg.model, &cfg.data);
+    let run = |kind| {
+        let mut rng = Rng::new(cfg.seed);
+        let mut t = Trainer::new(engine(), &cfg, kind, &mut rng).unwrap();
+        let mut batch_rng = Rng::new(5);
+        t.train(&data, &mut batch_rng).unwrap();
+        t.staleness_bytes()
+    };
+    let stash = run(StrategyKind::Stashing);
+    let ema = run(StrategyKind::PipelineAwareEma);
+    // 8 layers, delays 14..0: stash ≈ Σ(d_l+1)·|W| = 64 versions vs 8
+    // EMA accumulators → ≥ 6× reduction even counting the mixed shapes.
+    assert!(
+        stash > 5 * ema,
+        "expected O(LS) vs O(L): stash {stash} B, ema {ema} B"
+    );
+}
+
+#[test]
+fn coordinator_sweep_is_deterministic() {
+    // Same config ⇒ bit-identical curves (init, batch order, and XLA
+    // compute are all deterministic), and the sweep covers every
+    // requested strategy under the same data.
+    let mut cfg = quick_cfg(1);
+    cfg.strategies = vec![StrategyKind::Sequential, StrategyKind::Latest];
+    let coord = Coordinator::new(cfg).unwrap();
+    let a = coord.sweep().unwrap();
+    let b = coord.sweep().unwrap();
+    assert_eq!(a.curves.len(), 2);
+    for (ca, cb) in a.curves.iter().zip(&b.curves) {
+        assert_eq!(ca.strategy, cb.strategy);
+        for (ea, eb) in ca.epochs.iter().zip(&cb.epochs) {
+            // Everything but wall-clock must be bit-identical.
+            assert_eq!(ea.train_loss, eb.train_loss, "loss not deterministic");
+            assert_eq!(ea.test_accuracy, eb.test_accuracy, "accuracy not deterministic");
+            assert_eq!(ea.staleness_bytes, eb.staleness_bytes);
+            assert_eq!(ea.activation_bytes, eb.activation_bytes);
+        }
+    }
+}
+
+#[test]
+fn trainer_rejects_mismatched_artifacts() {
+    // Experiment config that disagrees with the lowered shapes must fail
+    // fast with a readable error, not crash inside XLA.
+    let mut cfg = quick_cfg(1);
+    cfg.model.hidden_dim = 128;
+    let mut rng = Rng::new(0);
+    let err = Trainer::new(engine(), &cfg, StrategyKind::Sequential, &mut rng);
+    assert!(err.is_err());
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("preset"), "got: {msg}");
+}
+
+#[test]
+fn grouped_pipeline_trains_with_shared_delays() {
+    // 4 stages over 8 layers: two-layer groups share their stage's
+    // delay 2·(3−stage) ⇒ [6,6,4,4,2,2,0,0] (the Fig. 4 structure).
+    let mut cfg = quick_cfg(2);
+    cfg.pipeline.stages = 4;
+    let data = teacher_dataset(&cfg.model, &cfg.data);
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = Trainer::new(engine(), &cfg, StrategyKind::PipelineAwareEma, &mut rng).unwrap();
+    assert_eq!(t.gradient_delays(), vec![6, 6, 4, 4, 2, 2, 0, 0]);
+    let mut batch_rng = Rng::new(5);
+    let curve = t.train(&data, &mut batch_rng).unwrap();
+    assert!(curve.final_accuracy() > 1.0 / cfg.model.classes as f32);
+}

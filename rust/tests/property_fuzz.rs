@@ -1,0 +1,196 @@
+//! Property/fuzz tests over the substrates: random inputs must never
+//! panic the parsers, and the algebraic invariants must hold for
+//! arbitrary generated instances.
+
+use layerpipe2::config::toml::TomlDoc;
+use layerpipe2::ema::{ExactWindow, GradientAverager, PipelineAwareEma};
+use layerpipe2::graph::Dfg;
+use layerpipe2::retiming::{closed_form_lags, insert_pipeline_delays, Retiming, StagePartition};
+use layerpipe2::schedule::{choose_stages, AdaptiveLimits, CostModel};
+use layerpipe2::tensor::Tensor;
+use layerpipe2::testing::property;
+use layerpipe2::util::json::Json;
+use layerpipe2::util::Rng;
+
+fn random_ascii(rng: &mut Rng, max_len: usize) -> String {
+    let len = rng.index(max_len + 1);
+    (0..len)
+        .map(|_| {
+            let c = 32 + rng.index(95) as u8; // printable ASCII
+            c as char
+        })
+        .collect()
+}
+
+#[test]
+fn json_parser_never_panics_on_garbage() {
+    property(300, |rng, _case| {
+        let s = random_ascii(rng, 64);
+        let _ = Json::parse(&s); // must return Ok or Err, never panic
+    });
+}
+
+#[test]
+fn json_roundtrip_on_generated_values() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.index(4) } else { rng.index(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.index(2_000_001) as f64) - 1_000_000.0),
+            3 => Json::Str(random_ascii(rng, 12)),
+            4 => Json::Arr((0..rng.index(4)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for _ in 0..rng.index(4) {
+                    m.insert(random_ascii(rng, 8), gen(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    property(200, |rng, case| {
+        let v = gen(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("case {case}: reparse failed: {e} on {text}"));
+        assert_eq!(back, v, "case {case}");
+    });
+}
+
+#[test]
+fn toml_parser_never_panics_on_garbage() {
+    property(300, |rng, _case| {
+        let lines = rng.index(6);
+        let mut s = String::new();
+        for _ in 0..lines {
+            s.push_str(&random_ascii(rng, 40));
+            s.push('\n');
+        }
+        let _ = TomlDoc::parse(&s);
+    });
+}
+
+#[test]
+fn retiming_legality_iff_apply_succeeds() {
+    // For random graphs and random lags: apply() succeeds exactly when
+    // every retimed edge is non-negative, and cycle delays are invariant.
+    property(100, |rng, _case| {
+        let layers = 2 + rng.index(6);
+        let stage_of: Vec<usize> = {
+            let mut v = vec![0usize];
+            for _ in 1..layers {
+                let next = v.last().unwrap() + usize::from(rng.chance(0.5));
+                v.push(next);
+            }
+            v
+        };
+        let mut g = Dfg::backprop(layers, &stage_of);
+        insert_pipeline_delays(&mut g);
+        // Random lags in [-2, 2].
+        let mut r = Retiming::identity(&g);
+        for lag in r.lags.iter_mut() {
+            *lag = rng.index(5) as i64 - 2;
+        }
+        let manual_legal = g.edges.iter().all(|e| {
+            e.delay + r.lags[e.to] - r.lags[e.from] >= 0
+        });
+        match r.apply(&g) {
+            Ok(rg) => {
+                assert!(manual_legal, "apply succeeded but edges negative");
+                // Cycle invariance through the weight self-loops.
+                for (i, n) in g.nodes.iter().enumerate() {
+                    if matches!(n.kind, layerpipe2::graph::NodeKind::Weight(_)) {
+                        assert_eq!(g.cycle_delay(&[i]), rg.cycle_delay(&[i]));
+                    }
+                }
+            }
+            Err(_) => assert!(!manual_legal, "apply failed on a legal retiming"),
+        }
+    });
+}
+
+#[test]
+fn closed_form_retiming_is_always_legal() {
+    property(100, |rng, _case| {
+        let layers = 2 + rng.index(10);
+        let stages = 1 + rng.index(layers);
+        let p = StagePartition::even(layers, stages).unwrap();
+        let mut g = Dfg::backprop(layers, p.stage_of());
+        insert_pipeline_delays(&mut g);
+        closed_form_lags(&g)
+            .apply(&g)
+            .expect("closed-form retiming must be legal for every partition");
+    });
+}
+
+#[test]
+fn ema_tracks_exact_window_within_bound() {
+    // On bounded-drift update streams the O(1) pipeline-aware EMA stays
+    // within a modest factor of the exact sliding-window mean.
+    property(60, |rng, case| {
+        let d = 2 + rng.index(16);
+        let mut exact = ExactWindow::new(d);
+        let mut ema = PipelineAwareEma::new(d);
+        let mut level = rng.uniform(-1.0, 1.0) as f32;
+        for t in 0..300 {
+            level += (rng.gauss() as f32) * 0.02; // slow drift
+            let u = Tensor::from_vec(&[1], vec![level + (rng.gauss() as f32) * 0.01]);
+            exact.push(&u);
+            ema.push(&u);
+            if t > 4 * d {
+                let e = exact.mean().unwrap().data()[0];
+                let a = ema.mean().unwrap().data()[0];
+                assert!(
+                    (e - a).abs() < 0.2,
+                    "case {case} d={d} t={t}: exact {e} vs ema {a}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn adaptive_choice_is_always_feasible_and_best() {
+    property(80, |rng, case| {
+        let layers = 1 + rng.index(12);
+        let mut cost = CostModel::uniform(layers);
+        for l in 0..layers {
+            cost.fwd[l] = 0.5 + rng.f64() * 4.0;
+            cost.bwd[l] = 2.0 * cost.fwd[l];
+        }
+        cost.boundary_bytes = rng.index(1000);
+        let limits = AdaptiveLimits {
+            max_delay: rng.index(2 * layers + 1),
+            max_comm_bytes: if rng.chance(0.5) { 0 } else { rng.index(8000) },
+        };
+        let c = choose_stages(layers, &cost, &limits);
+        assert!(c.max_delay <= limits.max_delay || c.stages == 1, "case {case}");
+        // No feasible candidate beats the chosen speedup.
+        for &(k, s, feasible) in &c.candidates {
+            if feasible {
+                assert!(
+                    s <= c.speedup + 1e-9,
+                    "case {case}: candidate {k} ({s}) beats chosen ({})",
+                    c.speedup
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn schedule_and_partition_agree_for_all_shapes() {
+    use layerpipe2::retiming::delay_formula;
+    use layerpipe2::schedule::Schedule;
+    property(60, |rng, _case| {
+        let layers = 2 + rng.index(6);
+        let stages = 1 + rng.index(layers);
+        let p = StagePartition::even(layers, stages).unwrap();
+        let s = Schedule::build(&p, (4 * stages).max(16) as u64);
+        let per_stage = s.observed_staleness();
+        let formula = delay_formula(p.stage_of());
+        for l in 0..layers {
+            assert_eq!(per_stage[p.stage_of()[l]], formula[l]);
+        }
+    });
+}
