@@ -1,70 +1,110 @@
-//! HOTPATH bench: L3 runtime overhead on the request path.
+//! HOTPATH bench: backend dispatch overhead + host kernel throughput.
 //!
-//! The perf deliverable's measurement harness: per-artifact dispatch
-//! latency (host→literal→execute→host), the full per-layer train
-//! iteration, and the fused-vs-chained forward comparison that motivates
-//! the `fwd_full` artifact. Requires `make artifacts`.
+//! The perf deliverable's measurement harness, in three parts:
+//!
+//! 1. Host kernel GFLOP/s — the blocked (and, at size, row-parallel)
+//!    matmul plus the dense fwd/bwd kernels of the host backend. Runs
+//!    everywhere, no artifacts needed.
+//! 2. PJRT per-artifact dispatch latency — only when artifacts are
+//!    present and the crate was built with `--features pjrt`; skipped
+//!    with a note otherwise, so the bench binary stays useful on a
+//!    clean checkout.
+//! 3. Full pipelined train iterations on whatever backend
+//!    `LAYERPIPE2_BACKEND`/auto selects.
 
-use layerpipe2::bench_util::{bench, print_header, print_row};
+use layerpipe2::backend::{self, Exec, HostBackend};
+use layerpipe2::bench_util::{bench, print_header, print_row, BenchStats};
 use layerpipe2::config::ExperimentConfig;
 use layerpipe2::data::teacher_dataset;
-use layerpipe2::model::Mlp;
+use layerpipe2::model::LayerRole;
 use layerpipe2::runtime::Engine;
 use layerpipe2::strategy::StrategyKind;
-use layerpipe2::tensor::Tensor;
+use layerpipe2::tensor::{self, Tensor};
 use layerpipe2::train::Trainer;
 use layerpipe2::util::Rng;
 
-fn main() {
-    let engine = Engine::load("artifacts").expect("make artifacts first");
-    let m = engine.manifest().model.clone();
-    let cfg = layerpipe2::config::ModelConfig {
-        batch: m.batch,
-        input_dim: m.input_dim,
-        hidden_dim: m.hidden_dim,
-        classes: m.classes,
-        layers: m.layers,
-        init_scale: 1.0,
+fn print_gflops(stats: &BenchStats, flops_per_run: f64) {
+    print_row(stats);
+    println!(
+        "    -> {:.2} GFLOP/s (median)",
+        flops_per_run / stats.median_s / 1e9
+    );
+}
+
+fn host_kernel_section() {
+    print_header("HOTPATH-a: host kernel GFLOP/s (blocked matmul, row-parallel at size)");
+    let mut rng = Rng::new(3);
+    for &(m, k, n) in &[(64usize, 64usize, 64usize), (256, 256, 256), (512, 512, 512)] {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let stats = bench(&format!("host matmul {m}x{k}x{n}"), 3, 30, || {
+            tensor::matmul(&a, &b)
+        });
+        print_gflops(&stats, 2.0 * (m * k * n) as f64);
+    }
+
+    let host = HostBackend::new();
+    let (bsz, h) = (32usize, 64usize);
+    let x = Tensor::randn(&[bsz, h], 1.0, &mut rng);
+    let w = Tensor::randn(&[h, h], 0.2, &mut rng);
+    let bias = Tensor::randn(&[h], 0.1, &mut rng);
+    let dy = Tensor::randn(&[bsz, h], 1.0, &mut rng);
+    let y = host.forward(LayerRole::Hidden, &x, &w, &bias).unwrap();
+    let fwd_flops = 2.0 * (bsz * h * h) as f64;
+    let stats = bench("host dense_fwd_hid (32x64x64 + bias + relu)", 20, 200, || {
+        host.forward(LayerRole::Hidden, &x, &w, &bias).unwrap()
+    });
+    print_gflops(&stats, fwd_flops);
+    let stats = bench("host dense_bwd_hid (dx,dw,db)", 20, 200, || {
+        host.backward(LayerRole::Hidden, &x, &y, &w, &dy).unwrap()
+    });
+    print_gflops(&stats, 2.0 * fwd_flops); // dx + dw matmuls dominate
+}
+
+fn pjrt_section() {
+    print_header("HOTPATH-b: PJRT single-artifact dispatch latency");
+    let engine = match Engine::load("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            println!("  skipped: {e:#}");
+            return;
+        }
     };
+    let m = engine.manifest().model.clone();
     let mut rng = Rng::new(9);
-    let mlp = Mlp::init(&cfg, &mut rng);
-    let x = Tensor::randn(&[m.batch, m.input_dim], 1.0, &mut rng);
     let h = Tensor::randn(&[m.batch, m.hidden_dim], 1.0, &mut rng);
     let w = Tensor::randn(&[m.hidden_dim, m.hidden_dim], 0.2, &mut rng);
     let b = Tensor::randn(&[m.hidden_dim], 0.1, &mut rng);
     let dy = Tensor::randn(&[m.batch, m.hidden_dim], 1.0, &mut rng);
-
-    print_header("HOTPATH: single-artifact dispatch latency");
-    print_row(&bench("dense_fwd_hid (32x64x64 + bias + relu)", 20, 200, || {
+    print_row(&bench("pjrt dense_fwd_hid", 20, 200, || {
         engine.run("dense_fwd_hid", &[&h, &w, &b]).unwrap()
     }));
     let y = engine.run("dense_fwd_hid", &[&h, &w, &b]).unwrap().remove(0);
-    print_row(&bench("dense_bwd_hid (dx,dw,db)", 20, 200, || {
+    print_row(&bench("pjrt dense_bwd_hid (dx,dw,db)", 20, 200, || {
         engine.run("dense_bwd_hid", &[&h, &y, &w, &dy]).unwrap()
-    }));
-    print_row(&bench("fwd_full (8 layers fused)", 20, 200, || {
-        mlp.forward_full(&engine, &x).unwrap()
-    }));
-    print_row(&bench("fwd chained (8 dispatches)", 20, 200, || {
-        let mut hh = x.clone();
-        for l in 0..cfg.layers {
-            hh = mlp.forward_layer(&engine, l, &hh).unwrap();
-        }
-        hh
     }));
     // Ablation: the same layer lowered from plain jnp instead of the
     // interpret-mode Pallas kernel — quantifies the interpret-lowering
     // overhead the CPU backend pays for the kernel path (a real-TPU
     // Mosaic build would not).
     if engine.get("ablation_fwd_hid_jnp").is_ok() {
-        print_row(&bench("ablation: fwd_hid lowered from jnp", 20, 200, || {
+        print_row(&bench("pjrt ablation: fwd_hid lowered from jnp", 20, 200, || {
             engine.run("ablation_fwd_hid_jnp", &[&h, &w, &b]).unwrap()
         }));
     }
+    println!(
+        "  exec count served by engine this run: {} (dispatch bookkeeping works)",
+        engine.exec_count()
+    );
+}
 
-    print_header("HOTPATH: full pipelined train iteration (8 stages)");
-    let mut ecfg = ExperimentConfig::default();
-    ecfg.epochs = 1;
+fn train_iteration_section() {
+    let backend = backend::from_env("artifacts").expect("backend selection");
+    print_header(&format!(
+        "HOTPATH-c: full pipelined train iteration (8 stages, backend: {})",
+        backend.name()
+    ));
+    let mut ecfg = ExperimentConfig { epochs: 1, ..ExperimentConfig::default() };
     ecfg.data.train_samples = 512;
     ecfg.data.test_samples = 256;
     let data = teacher_dataset(&ecfg.model, &ecfg.data);
@@ -74,7 +114,7 @@ fn main() {
         StrategyKind::PipelineAwareEma,
     ] {
         let mut trng = Rng::new(1);
-        let mut trainer = Trainer::new(&engine, &ecfg, kind, &mut trng).unwrap();
+        let mut trainer = Trainer::new(backend.clone(), &ecfg, kind, &mut trng).unwrap();
         let (xb, oh) = data.train.batch(&(0..ecfg.model.batch).collect::<Vec<_>>());
         // Prime the pipeline so steady-state iterations do fwd+bwd work.
         for _ in 0..16 {
@@ -85,9 +125,14 @@ fn main() {
         });
         print_row(&s);
     }
-
     println!(
-        "\nexec count served by engine this run: {} (dispatch bookkeeping works)",
-        engine.exec_count()
+        "\nexec count served by backend this run: {}",
+        backend.exec_count()
     );
+}
+
+fn main() {
+    host_kernel_section();
+    pjrt_section();
+    train_iteration_section();
 }

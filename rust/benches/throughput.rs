@@ -1,20 +1,21 @@
 //! THRU bench: pipeline throughput & utilization (LayerPipe's headline,
 //! reaffirmed in §IV-D) — both the analytic schedule model and the real
-//! threaded runtime over XLA artifacts.
+//! threaded runtime over whichever backend is available (PJRT artifacts
+//! when present, the pure-Rust host backend otherwise).
 //!
 //! Paper shape to hold: speedup grows with stage count, bounded by the
 //! bottleneck stage; utilization stays high for balanced partitions;
-//! communication volume grows with boundaries. Requires `make artifacts`.
+//! communication volume grows with boundaries.
 
+use layerpipe2::backend::{self, Exec};
 use layerpipe2::bench_util::print_table;
 use layerpipe2::model::Mlp;
 use layerpipe2::pipeline::{forward_sequential, forward_throughput};
 use layerpipe2::retiming::StagePartition;
-use layerpipe2::runtime::Engine;
+use layerpipe2::runtime::Manifest;
 use layerpipe2::schedule::{evaluate, CostModel};
 use layerpipe2::tensor::Tensor;
 use layerpipe2::util::Rng;
-use std::sync::Arc;
 
 fn main() {
     // --- analytic model: speedup/utilization/comm vs stages -------------
@@ -84,31 +85,23 @@ fn main() {
         &rows,
     );
 
-    // --- real threaded pipeline over XLA artifacts ----------------------
-    let engine = Arc::new(Engine::load("artifacts").expect("make artifacts first"));
-    let m = engine.manifest().model.clone();
-    let cfg = layerpipe2::config::ModelConfig {
-        batch: m.batch,
-        input_dim: m.input_dim,
-        hidden_dim: m.hidden_dim,
-        classes: m.classes,
-        layers: m.layers,
-        init_scale: 1.0,
-    };
+    // --- real threaded pipeline over the selected backend ---------------
+    let backend = backend::from_env("artifacts").expect("backend selection");
+    let cfg = Manifest::model_config_or_default("artifacts");
     let mut rng = Rng::new(3);
     let mlp = Mlp::init(&cfg, &mut rng);
     let inputs: Vec<Tensor> =
-        (0..8).map(|_| Tensor::randn(&[m.batch, m.input_dim], 1.0, &mut rng)).collect();
+        (0..8).map(|_| Tensor::randn(&[cfg.batch, cfg.input_dim], 1.0, &mut rng)).collect();
     let batches = 300;
-    let seq = forward_sequential(&engine, &mlp, &inputs, batches).unwrap();
+    let seq = forward_sequential(&backend, &mlp, &inputs, batches).unwrap();
     let mut rows = vec![vec![
         "sequential(1 thread)".to_string(),
         format!("{:.0}", seq.batches_per_sec),
         "1.00x".to_string(),
     ]];
     for stages in [2usize, 4, 8] {
-        let p = StagePartition::even(m.layers, stages).unwrap();
-        let r = forward_throughput(&engine, &mlp, &p, inputs.clone(), batches, 4).unwrap();
+        let p = StagePartition::even(cfg.layers, stages).unwrap();
+        let r = forward_throughput(&backend, &mlp, &p, inputs.clone(), batches, 4).unwrap();
         rows.push(vec![
             format!("pipeline({stages} stages)"),
             format!("{:.0}", r.batches_per_sec),
@@ -116,7 +109,7 @@ fn main() {
         ]);
     }
     print_table(
-        "THRU-c: threaded pipeline on real XLA compute (300 batches)",
+        &format!("THRU-c: threaded pipeline on real compute (300 batches, backend: {})", backend.name()),
         &["configuration", "batches/s", "speedup"],
         &rows,
     );

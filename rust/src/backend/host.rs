@@ -1,0 +1,253 @@
+//! Pure-Rust execution backend over the host tensor kernels.
+//!
+//! Mirrors the artifact contract exactly (same math as the lowered HLO:
+//! dense + bias + optional fused ReLU forward; `(dx, dw, db)` backward
+//! with the ReLU mask applied from the *output* activation; softmax-CE
+//! loss/grad over one-hot labels), so the single-threaded trainer, the
+//! threaded pipelined executor, every test and every bench run unchanged
+//! on machines without PJRT artifacts.
+
+use super::Exec;
+use crate::config::ModelConfig;
+use crate::model::LayerRole;
+use crate::tensor::{self, Tensor};
+use anyhow::{ensure, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The host backend: stateless except for dispatch bookkeeping.
+#[derive(Debug, Default)]
+pub struct HostBackend {
+    exec_count: AtomicU64,
+}
+
+impl HostBackend {
+    pub fn new() -> HostBackend {
+        HostBackend::default()
+    }
+
+    fn count(&self) {
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl Exec for HostBackend {
+    fn name(&self) -> &'static str {
+        "host"
+    }
+
+    fn check_model(&self, cfg: &ModelConfig) -> Result<()> {
+        // Any validated shape is servable: kernels are shape-generic.
+        cfg.validate()
+    }
+
+    fn forward(&self, role: LayerRole, x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
+        self.count();
+        ensure!(
+            x.ndim() == 2 && w.ndim() == 2 && b.ndim() == 1,
+            "host forward: x/w must be 2-D and b 1-D, got {:?}/{:?}/{:?}",
+            x.shape(),
+            w.shape(),
+            b.shape()
+        );
+        ensure!(
+            x.shape()[1] == w.shape()[0] && w.shape()[1] == b.shape()[0],
+            "host forward shape mismatch: x {:?} @ w {:?} + b {:?}",
+            x.shape(),
+            w.shape(),
+            b.shape()
+        );
+        let z = tensor::add_bias(&tensor::matmul(x, w), b);
+        Ok(if role.has_relu() { tensor::relu(&z) } else { z })
+    }
+
+    fn backward(
+        &self,
+        role: LayerRole,
+        x: &Tensor,
+        y: &Tensor,
+        w: &Tensor,
+        dy: &Tensor,
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        self.count();
+        // Rank checks first: indexing shape()[1] below must never panic
+        // (the backend contract is Err, not UB/panics, on bad shapes).
+        ensure!(
+            x.ndim() == 2 && y.ndim() == 2 && w.ndim() == 2 && dy.ndim() == 2,
+            "host backward: x/y/w/dy must all be 2-D, got {:?}/{:?}/{:?}/{:?}",
+            x.shape(),
+            y.shape(),
+            w.shape(),
+            dy.shape()
+        );
+        ensure!(
+            y.shape() == dy.shape(),
+            "host backward: y {:?} vs dy {:?}",
+            y.shape(),
+            dy.shape()
+        );
+        ensure!(
+            x.shape()[1] == w.shape()[0] && w.shape()[1] == dy.shape()[1],
+            "host backward shape mismatch: x {:?}, w {:?}, dy {:?}",
+            x.shape(),
+            w.shape(),
+            dy.shape()
+        );
+        // Pre-activation gradient: mask with the saved output for ReLU
+        // layers (y > 0 ⇔ the unit was active), pass-through otherwise.
+        let masked;
+        let dz = if role.has_relu() {
+            masked = tensor::relu_grad(y, dy);
+            &masked
+        } else {
+            dy
+        };
+        let dx = tensor::matmul_nt(dz, w);
+        let dw = tensor::matmul_tn(x, dz);
+        let db = tensor::col_sum(dz);
+        Ok((dx, dw, db))
+    }
+
+    fn loss_grad(&self, logits: &Tensor, onehot: &Tensor) -> Result<(f32, Tensor, f32)> {
+        self.count();
+        ensure!(
+            logits.ndim() == 2 && logits.shape() == onehot.shape(),
+            "host loss_grad: logits {:?} vs onehot {:?} (both must be 2-D)",
+            logits.shape(),
+            onehot.shape()
+        );
+        Ok(tensor::softmax_xent_onehot(logits, onehot))
+    }
+
+    fn exec_count(&self) -> u64 {
+        self.exec_count.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{layer_dims, Mlp};
+    use crate::util::Rng;
+
+    fn be() -> HostBackend {
+        HostBackend::new()
+    }
+
+    #[test]
+    fn forward_matches_op_composition() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let w = Tensor::randn(&[6, 5], 0.3, &mut rng);
+        let b = Tensor::randn(&[5], 0.1, &mut rng);
+        let z = tensor::add_bias(&tensor::matmul(&x, &w), &b);
+        let hid = be().forward(LayerRole::Hidden, &x, &w, &b).unwrap();
+        assert_eq!(hid, tensor::relu(&z));
+        // Output layer skips the ReLU: raw affine result comes through.
+        let out = be().forward(LayerRole::Output, &x, &w, &b).unwrap();
+        assert_eq!(out, z);
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        // Scalar-project the layer output and check every parameter
+        // gradient against central differences.
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let w = Tensor::randn(&[4, 5], 0.5, &mut rng);
+        let b = Tensor::randn(&[5], 0.1, &mut rng);
+        let proj = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let backend = be();
+        let fwd = |w: &Tensor, b: &Tensor, x: &Tensor| -> f32 {
+            let y = backend.forward(LayerRole::Hidden, x, w, b).unwrap();
+            y.data().iter().zip(proj.data()).map(|(a, p)| a * p).sum()
+        };
+        let y = backend.forward(LayerRole::Hidden, &x, &w, &b).unwrap();
+        let (dx, dw, db) = backend.backward(LayerRole::Hidden, &x, &y, &w, &proj).unwrap();
+        let eps = 1e-3;
+        let check = |grad: &Tensor, target: &Tensor, which: &str| {
+            for idx in 0..target.len() {
+                let (mut tp, mut tm) = (target.clone(), target.clone());
+                tp.data_mut()[idx] += eps;
+                tm.data_mut()[idx] -= eps;
+                let (fp, fm) = match which {
+                    "w" => (fwd(&tp, &b, &x), fwd(&tm, &b, &x)),
+                    "b" => (fwd(&w, &tp, &x), fwd(&w, &tm, &x)),
+                    _ => (fwd(&w, &b, &tp), fwd(&w, &b, &tm)),
+                };
+                let fd = (fp - fm) / (2.0 * eps);
+                assert!(
+                    (fd - grad.data()[idx]).abs() < 2e-2,
+                    "{which}[{idx}]: fd {fd} vs analytic {}",
+                    grad.data()[idx]
+                );
+            }
+        };
+        check(&dw, &w, "w");
+        check(&db, &b, "b");
+        check(&dx, &x, "x");
+    }
+
+    #[test]
+    fn loss_grad_matches_host_oracle() {
+        let mut rng = Rng::new(3);
+        let logits = Tensor::randn(&[4, 6], 2.0, &mut rng);
+        let labels = [1usize, 5, 0, 3];
+        let mut onehot = Tensor::zeros(&[4, 6]);
+        for (i, &l) in labels.iter().enumerate() {
+            onehot.set2(i, l, 1.0);
+        }
+        let (loss, dl, correct) = be().loss_grad(&logits, &onehot).unwrap();
+        let (wl, wdl, wc) = tensor::softmax_xent(&logits, &labels);
+        assert_eq!(loss, wl);
+        assert_eq!(dl, wdl);
+        assert_eq!(correct, wc as f32);
+    }
+
+    #[test]
+    fn forward_full_chains_layers() {
+        let cfg = ModelConfig {
+            batch: 4,
+            input_dim: 6,
+            hidden_dim: 5,
+            classes: 3,
+            layers: 3,
+            init_scale: 1.0,
+        };
+        let mut rng = Rng::new(4);
+        let mlp = Mlp::init(&cfg, &mut rng);
+        let x = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let backend = be();
+        let fused = backend.forward_full(&x, &mlp.layers).unwrap();
+        let mut h = x;
+        for (l, lp) in mlp.layers.iter().enumerate() {
+            let (din, _) = layer_dims(&cfg, l);
+            assert_eq!(h.shape()[1], din);
+            h = backend.forward(lp.role, &h, &lp.w, &lp.b).unwrap();
+        }
+        assert_eq!(fused, h);
+        assert!(backend.exec_count() >= 6);
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error_not_a_panic() {
+        let x = Tensor::zeros(&[2, 3]);
+        let w = Tensor::zeros(&[4, 5]); // 3 != 4
+        let b = Tensor::zeros(&[5]);
+        let err = be().forward(LayerRole::Hidden, &x, &w, &b);
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("shape"));
+    }
+
+    #[test]
+    fn any_model_shape_is_accepted() {
+        let cfg = ModelConfig {
+            batch: 3,
+            input_dim: 11,
+            hidden_dim: 7,
+            classes: 2,
+            layers: 5,
+            init_scale: 1.0,
+        };
+        be().check_model(&cfg).unwrap();
+    }
+}

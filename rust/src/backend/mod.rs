@@ -1,0 +1,152 @@
+//! Execution backends: the compute abstraction under model, trainer and
+//! pipeline.
+//!
+//! The seed hard-wired every consumer to the PJRT [`crate::runtime::Engine`],
+//! which made all training code unrunnable on machines without AOT
+//! artifacts + libpjrt. The [`Exec`] trait is the seam: per-layer forward,
+//! per-layer backward, loss/grad, and fused full-network forward — exactly
+//! the artifact surface of `manifest.json` — with two implementations:
+//!
+//! - [`HostBackend`]: pure Rust on [`crate::tensor`] kernels. Always
+//!   available; the default for tests, examples and clean checkouts.
+//! - [`PjrtBackend`] (`pjrt` feature): wraps the engine and dispatches to
+//!   the lowered HLO artifacts, preserving the original hot path.
+//!
+//! Selection ([`from_env`]): the `LAYERPIPE2_BACKEND` env var picks
+//! `host`, `pjrt` or `auto` (default). `auto` uses PJRT only when the
+//! feature is compiled in *and* `manifest.json` exists in the artifacts
+//! directory; otherwise it silently falls back to the host backend so
+//! `cargo test -q` passes from a clean checkout.
+
+mod host;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+
+pub use host::HostBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+use crate::config::ModelConfig;
+use crate::model::{LayerParams, LayerRole};
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Environment variable selecting the execution backend
+/// (`host` | `pjrt` | `auto`).
+pub const BACKEND_ENV: &str = "LAYERPIPE2_BACKEND";
+
+/// Shared handle to a backend: cheap to clone into stage worker threads.
+pub type Backend = Arc<dyn Exec>;
+
+/// The execution contract every backend honors. One method per artifact
+/// class; tensors are host-resident on both sides of every call.
+pub trait Exec: Send + Sync {
+    /// Stable identifier for logs and reports (`"host"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// Fail fast if this backend cannot serve the model shape (the PJRT
+    /// backend is locked to the shapes its artifacts were lowered at;
+    /// the host backend accepts anything).
+    fn check_model(&self, cfg: &ModelConfig) -> Result<()>;
+
+    /// One dense layer forward: `y = act(x @ w + b)` with the activation
+    /// implied by `role` (`ReLU` except for the output layer).
+    fn forward(&self, role: LayerRole, x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor>;
+
+    /// One dense layer backward given the saved forward pair `(x, y)` and
+    /// the upstream gradient `dy`; returns `(dx, dw, db)`.
+    fn backward(
+        &self,
+        role: LayerRole,
+        x: &Tensor,
+        y: &Tensor,
+        w: &Tensor,
+        dy: &Tensor,
+    ) -> Result<(Tensor, Tensor, Tensor)>;
+
+    /// Mean softmax cross-entropy against one-hot labels:
+    /// `(loss, dlogits, argmax-correct row count)`.
+    fn loss_grad(&self, logits: &Tensor, onehot: &Tensor) -> Result<(f32, Tensor, f32)>;
+
+    /// Full-network forward (eval path). Backends with a fused artifact
+    /// override this; the default chains [`Exec::forward`].
+    fn forward_full(&self, x: &Tensor, layers: &[LayerParams]) -> Result<Tensor> {
+        let mut h = x.clone();
+        for lp in layers {
+            h = self.forward(lp.role, &h, &lp.w, &lp.b)?;
+        }
+        Ok(h)
+    }
+
+    /// Total kernel/artifact executions served (dispatch bookkeeping).
+    fn exec_count(&self) -> u64;
+}
+
+/// Whether an artifacts directory holds a loadable manifest.
+pub fn artifacts_present(dir: &str) -> bool {
+    Path::new(dir).join("manifest.json").is_file()
+}
+
+/// Construct the PJRT backend, or a readable error when the crate was
+/// built without the `pjrt` feature.
+#[cfg(feature = "pjrt")]
+pub fn load_pjrt(artifacts_dir: &str) -> Result<Backend> {
+    Ok(Arc::new(PjrtBackend::load(artifacts_dir)?))
+}
+
+/// Construct the PJRT backend, or a readable error when the crate was
+/// built without the `pjrt` feature.
+#[cfg(not(feature = "pjrt"))]
+pub fn load_pjrt(artifacts_dir: &str) -> Result<Backend> {
+    // Engine::load carries the canonical "rebuild with --features pjrt"
+    // message; delegating keeps the two paths' errors identical.
+    crate::runtime::Engine::load(artifacts_dir)?;
+    unreachable!("stub Engine::load always errors");
+}
+
+/// Select a backend from `LAYERPIPE2_BACKEND` (default `auto`): explicit
+/// `host`/`pjrt`, or automatic PJRT-when-available with host fallback.
+pub fn from_env(artifacts_dir: &str) -> Result<Backend> {
+    let choice = std::env::var(BACKEND_ENV).unwrap_or_default();
+    match choice.as_str() {
+        "host" => Ok(Arc::new(HostBackend::new())),
+        "pjrt" => load_pjrt(artifacts_dir),
+        "" | "auto" => {
+            if cfg!(feature = "pjrt") && artifacts_present(artifacts_dir) {
+                load_pjrt(artifacts_dir)
+            } else {
+                Ok(Arc::new(HostBackend::new()))
+            }
+        }
+        other => bail!(
+            "unknown {BACKEND_ENV}='{other}' (expected one of: host, pjrt, auto)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_without_artifacts_is_host() {
+        // No manifest at this path → auto must fall back to the host
+        // backend regardless of features.
+        let b = from_env("/nonexistent/artifacts").unwrap();
+        assert_eq!(b.name(), "host");
+    }
+
+    #[test]
+    fn artifacts_probe_is_path_based() {
+        assert!(!artifacts_present("/nonexistent/artifacts"));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_without_feature_is_a_clear_error() {
+        let err = load_pjrt("artifacts").unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"));
+    }
+}

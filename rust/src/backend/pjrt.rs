@@ -1,0 +1,112 @@
+//! PJRT execution backend (`pjrt` feature): the original artifact hot
+//! path, now behind the [`Exec`] seam.
+//!
+//! Dispatch mapping is the role→artifact table of [`LayerRole`]; the
+//! fused `fwd_full` artifact serves [`Exec::forward_full`] in one
+//! dispatch instead of `L`.
+
+use super::Exec;
+use crate::config::ModelConfig;
+use crate::model::{LayerParams, LayerRole};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Backend over a compiled artifact set.
+pub struct PjrtBackend {
+    engine: Engine,
+}
+
+impl PjrtBackend {
+    /// Load `manifest.json` + HLO artifacts from `dir` and compile them.
+    pub fn load(dir: &str) -> Result<PjrtBackend> {
+        Ok(PjrtBackend { engine: Engine::load(dir)? })
+    }
+
+    /// Wrap an already-loaded engine.
+    pub fn from_engine(engine: Engine) -> PjrtBackend {
+        PjrtBackend { engine }
+    }
+
+    /// The underlying engine (manifest inspection, raw dispatch).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl Exec for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn check_model(&self, cfg: &ModelConfig) -> Result<()> {
+        cfg.validate()?;
+        let m = self.engine.manifest();
+        ensure!(
+            m.model.batch == cfg.batch
+                && m.model.input_dim == cfg.input_dim
+                && m.model.hidden_dim == cfg.hidden_dim
+                && m.model.classes == cfg.classes
+                && m.model.layers == cfg.layers,
+            "artifact preset {:?} does not match experiment model config {:?} — \
+             re-run `make artifacts` with the matching preset",
+            m.model,
+            cfg
+        );
+        Ok(())
+    }
+
+    fn forward(&self, role: LayerRole, x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
+        let mut out = self.engine.run(role.fwd_artifact(), &[x, w, b])?;
+        ensure!(out.len() == 1, "forward artifact returns one tensor");
+        Ok(out.pop().expect("one output"))
+    }
+
+    fn backward(
+        &self,
+        role: LayerRole,
+        x: &Tensor,
+        y: &Tensor,
+        w: &Tensor,
+        dy: &Tensor,
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        let out = if role.has_relu() {
+            self.engine.run(role.bwd_artifact(), &[x, y, w, dy])?
+        } else {
+            self.engine.run(role.bwd_artifact(), &[x, w, dy])?
+        };
+        ensure!(out.len() == 3, "backward artifact returns (dx, dw, db)");
+        let mut it = out.into_iter();
+        Ok((
+            it.next().expect("dx"),
+            it.next().expect("dw"),
+            it.next().expect("db"),
+        ))
+    }
+
+    fn loss_grad(&self, logits: &Tensor, onehot: &Tensor) -> Result<(f32, Tensor, f32)> {
+        let out = self.engine.run("loss_grad", &[logits, onehot])?;
+        ensure!(out.len() == 3, "loss_grad returns (loss, dlogits, correct)");
+        let mut it = out.into_iter();
+        let loss = it.next().expect("loss").data()[0];
+        let dlogits = it.next().expect("dlogits");
+        let correct = it.next().expect("correct").data()[0];
+        Ok((loss, dlogits, correct))
+    }
+
+    fn forward_full(&self, x: &Tensor, layers: &[LayerParams]) -> Result<Tensor> {
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(1 + 2 * layers.len());
+        inputs.push(x);
+        for lp in layers {
+            inputs.push(&lp.w);
+            inputs.push(&lp.b);
+        }
+        let mut out = self.engine.run("fwd_full", &inputs)?;
+        ensure!(out.len() == 1, "fwd_full returns logits");
+        Ok(out.pop().expect("logits"))
+    }
+
+    fn exec_count(&self) -> u64 {
+        self.engine.exec_count()
+    }
+}

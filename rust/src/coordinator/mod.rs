@@ -1,19 +1,34 @@
 //! Experiment coordinator: the launcher that ties the stack together.
 //!
-//! Owns the lifecycle of an experiment: load artifacts → synthesize the
-//! dataset → run each requested weight-handling strategy through the
-//! pipelined trainer → aggregate curves, memory accounting and reports.
-//! This is the entry point the CLI, the examples and the Fig. 5 bench all
-//! share, so every consumer runs the identical code path.
+//! Owns the lifecycle of an experiment: select an execution backend
+//! (PJRT artifacts when available, pure-Rust host otherwise — see
+//! [`crate::backend::from_env`]) → synthesize the dataset → run each
+//! requested weight-handling strategy through the pipelined trainer (the
+//! iteration-indexed oracle, or the multi-threaded executor) → aggregate
+//! curves, memory accounting and reports. This is the entry point the
+//! CLI, the examples and the Fig. 5 bench all share, so every consumer
+//! runs the identical code path.
 
+use crate::backend::{self, Backend, Exec};
 use crate::config::ExperimentConfig;
 use crate::data::{teacher_dataset, Splits};
 use crate::metrics::{accuracy_table, write_csv, RunCurve};
-use crate::runtime::Engine;
+use crate::pipeline::PipelinedTrainer;
 use crate::strategy::StrategyKind;
 use crate::train::Trainer;
 use crate::util::Rng;
 use anyhow::{Context, Result};
+
+/// Which execution engine a sweep uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ExecutorKind {
+    /// Single-threaded iteration-indexed trainer (the numerical oracle).
+    #[default]
+    Iteration,
+    /// Multi-threaded per-stage pipelined executor (physically overlapped
+    /// forward/backward; reproduces the oracle's curves).
+    Threaded,
+}
 
 /// Results of a full strategy sweep.
 #[derive(Debug)]
@@ -33,28 +48,29 @@ impl SweepResult {
     }
 }
 
-/// The coordinator: compiled runtime + dataset, reusable across sweeps.
+/// The coordinator: a compiled backend + dataset, reusable across sweeps.
 pub struct Coordinator {
-    pub engine: Engine,
+    pub backend: Backend,
     pub data: Splits,
     pub cfg: ExperimentConfig,
 }
 
 impl Coordinator {
-    /// Load artifacts and synthesize the dataset for a config.
+    /// Select the backend and synthesize the dataset for a config.
     pub fn new(cfg: ExperimentConfig) -> Result<Coordinator> {
         cfg.validate()?;
-        let engine = Engine::load(&cfg.artifacts_dir)
-            .with_context(|| format!("loading artifacts from {}", cfg.artifacts_dir))?;
+        let backend = backend::from_env(&cfg.artifacts_dir)
+            .with_context(|| format!("selecting backend (artifacts: {})", cfg.artifacts_dir))?;
         let data = teacher_dataset(&cfg.model, &cfg.data);
         crate::log_info!(
-            "coordinator: {} train / {} test samples, {} layers, {} stages",
+            "coordinator: backend {}, {} train / {} test samples, {} layers, {} stages",
+            backend.name(),
             data.train.len(),
             data.test.len(),
             cfg.model.layers,
             cfg.pipeline.stages
         );
-        Ok(Coordinator { engine, data, cfg })
+        Ok(Coordinator { backend, data, cfg })
     }
 
     /// Train one strategy from a fresh, seed-identical initialization.
@@ -65,23 +81,45 @@ impl Coordinator {
     /// comparison is apples-to-apples.
     pub fn run_strategy(&self, kind: StrategyKind) -> Result<RunCurve> {
         let mut init_rng = Rng::new(self.cfg.seed);
-        let mut trainer = Trainer::new(&self.engine, &self.cfg, kind, &mut init_rng)?;
+        let mut trainer = Trainer::new(self.backend.clone(), &self.cfg, kind, &mut init_rng)?;
         let mut batch_rng = Rng::new(self.cfg.seed ^ 0x5EED_BA7C);
         trainer.train(&self.data, &mut batch_rng)
     }
 
-    /// Run the configured strategy sweep (the Fig. 5 experiment).
-    pub fn sweep(&self) -> Result<SweepResult> {
+    /// Train one strategy on the multi-threaded pipelined executor, with
+    /// the exact seed discipline of [`Coordinator::run_strategy`]. Loss,
+    /// accuracy and staleness metrics are interchangeable with the
+    /// oracle's; `activation_bytes` uses stage-local accounting and is
+    /// not comparable across the two engines.
+    pub fn run_strategy_threaded(&self, kind: StrategyKind) -> Result<RunCurve> {
+        let mut init_rng = Rng::new(self.cfg.seed);
+        let mut ex = PipelinedTrainer::new(self.backend.clone(), &self.cfg, kind, &mut init_rng)?;
+        let mut batch_rng = Rng::new(self.cfg.seed ^ 0x5EED_BA7C);
+        ex.train(&self.data, &mut batch_rng)
+    }
+
+    /// Run the configured strategy sweep (the Fig. 5 experiment) on the
+    /// chosen executor.
+    pub fn sweep_on(&self, executor: ExecutorKind) -> Result<SweepResult> {
         let mut curves = Vec::with_capacity(self.cfg.strategies.len());
         for &kind in &self.cfg.strategies {
-            crate::log_info!("=== strategy: {} ===", kind.name());
-            curves.push(self.run_strategy(kind)?);
+            crate::log_info!("=== strategy: {} ({executor:?}) ===", kind.name());
+            let curve = match executor {
+                ExecutorKind::Iteration => self.run_strategy(kind)?,
+                ExecutorKind::Threaded => self.run_strategy_threaded(kind)?,
+            };
+            curves.push(curve);
         }
         if let Some(path) = &self.cfg.csv_out {
             write_csv(path, &curves).with_context(|| format!("writing {path}"))?;
             crate::log_info!("wrote {path}");
         }
         Ok(SweepResult { curves, config: self.cfg.clone() })
+    }
+
+    /// Run the configured strategy sweep on the iteration-indexed oracle.
+    pub fn sweep(&self) -> Result<SweepResult> {
+        self.sweep_on(ExecutorKind::Iteration)
     }
 }
 

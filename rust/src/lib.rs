@@ -6,15 +6,20 @@
 //!
 //! The library is the L3 (Rust) layer of a three-layer Rust + JAX + Pallas
 //! stack: JAX/Pallas author the per-layer compute graphs at build time and
-//! AOT-lower them to HLO text (`make artifacts`); this crate loads the
-//! artifacts through the PJRT C API ([`runtime`]) and owns everything else:
+//! AOT-lower them to HLO text (`make artifacts`); this crate executes them
+//! through a pluggable [`backend`] — the PJRT C API ([`runtime`], behind
+//! the `pjrt` feature) or a pure-Rust host backend — and owns everything
+//! else:
 //!
 //! - the paper's **retiming-theoretic pipeline derivation** ([`graph`],
 //!   [`retiming`]) including the closed form `Delay(l) = 2·S(l)` and
 //!   grouped multistage partitions;
 //! - the **DLMS delayed-gradient foundation** ([`dlms`]);
 //! - the **pipeline schedule model** ([`schedule`]) and a real threaded
-//!   pipeline runtime ([`pipeline`]);
+//!   pipeline runtime ([`pipeline`]) whose multi-threaded training
+//!   executor physically overlaps forward and delayed backward per the
+//!   retiming schedule, reproducing the iteration-indexed [`train`]
+//!   oracle's curves;
 //! - **weight/activation stashing** with byte-level accounting ([`stash`])
 //!   and the paper's **pipeline-aware EMA weight recompute** ([`ema`]);
 //! - the five weight-handling **strategies** of the paper's Fig. 5
@@ -23,12 +28,13 @@
 //!   environment: deterministic RNG, JSON, a TOML-subset config system,
 //!   host tensors, a bench harness and a property-test helper.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` for the system inventory, the backend trait contract
+//! and the executor threading model.
 
 pub mod util;
 pub mod config;
 pub mod tensor;
+pub mod backend;
 pub mod graph;
 pub mod retiming;
 pub mod dlms;

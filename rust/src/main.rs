@@ -12,18 +12,19 @@
 //! ```
 
 use anyhow::{bail, Context, Result};
+use layerpipe2::backend::{self, Exec};
 use layerpipe2::config::ExperimentConfig;
-use layerpipe2::coordinator::{check_fig5_shape, Coordinator};
+use layerpipe2::coordinator::{check_fig5_shape, Coordinator, ExecutorKind};
 use layerpipe2::dlms;
 use layerpipe2::model::Mlp;
 use layerpipe2::pipeline;
 use layerpipe2::retiming::{Derivation, StagePartition};
-use layerpipe2::runtime::Engine;
+use layerpipe2::runtime::Manifest;
 use layerpipe2::schedule::{sweep_stages, CostModel, Schedule};
 use layerpipe2::strategy::StrategyKind;
 use layerpipe2::tensor::Tensor;
 use layerpipe2::util::Rng;
-use std::sync::Arc;
+use std::path::Path;
 
 /// Minimal flag parser: `--key value` pairs after the subcommand;
 /// repeated keys accumulate.
@@ -133,6 +134,7 @@ COMMANDS:
   train       run the Fig. 5 strategy sweep (pipelined training)
               --config F --strategy S (repeatable) --epochs N --stages K
               --csv PATH --artifacts DIR --seed N
+              --executor iteration|threaded (threaded = one thread/stage)
   retime      derive pipeline delays via retiming (Figs. 3/4)
               --layers L  --groups a,b,c (group sizes)
   dlms        delayed-LMS convergence sweep (Fig. 2)
@@ -167,9 +169,14 @@ fn cmd_train(args: &Args) -> Result<()> {
             .collect::<Result<_>>()?;
     }
     cfg.validate()?;
+    let executor = match args.get("executor").unwrap_or("iteration") {
+        "iteration" | "oracle" => ExecutorKind::Iteration,
+        "threaded" | "pipelined" => ExecutorKind::Threaded,
+        other => bail!("unknown --executor '{other}' (expected iteration|threaded)"),
+    };
 
     let coord = Coordinator::new(cfg)?;
-    let result = coord.sweep()?;
+    let result = coord.sweep_on(executor)?;
     println!("{}", result.table());
     let problems = check_fig5_shape(&result);
     if problems.is_empty() {
@@ -263,28 +270,23 @@ fn cmd_throughput(args: &Args) -> Result<()> {
     let stage_counts = args.usize_list("stages", &[1, 2, 4, 8])?;
     let batches = args.usize_or("batches", 200)?;
     let depth = args.usize_or("depth", 4)?;
-    let engine = Arc::new(Engine::load(dir)?);
-    let m = engine.manifest().model.clone();
-    let cfg = layerpipe2::config::ModelConfig {
-        batch: m.batch,
-        input_dim: m.input_dim,
-        hidden_dim: m.hidden_dim,
-        classes: m.classes,
-        layers: m.layers,
-        init_scale: 1.0,
-    };
+    let backend = backend::from_env(dir)?;
+    // Manifest shapes when present (the PJRT backend is locked to them),
+    // the default preset otherwise (the host backend takes any shape).
+    let cfg = Manifest::model_config_or_default(dir);
+    println!("backend: {}", backend.name());
     let mut rng = Rng::new(7);
     let mlp = Mlp::init(&cfg, &mut rng);
     let inputs: Vec<Tensor> =
-        (0..8).map(|_| Tensor::randn(&[m.batch, m.input_dim], 1.0, &mut rng)).collect();
-    let seq = pipeline::forward_sequential(&engine, &mlp, &inputs, batches)?;
+        (0..8).map(|_| Tensor::randn(&[cfg.batch, cfg.input_dim], 1.0, &mut rng)).collect();
+    let seq = pipeline::forward_sequential(&backend, &mlp, &inputs, batches)?;
     println!("sequential: {:.1} batches/s", seq.batches_per_sec);
     for &k in &stage_counts {
-        if k < 1 || k > m.layers {
+        if k < 1 || k > cfg.layers {
             continue;
         }
-        let p = StagePartition::even(m.layers, k)?;
-        let r = pipeline::forward_throughput(&engine, &mlp, &p, inputs.clone(), batches, depth)?;
+        let p = StagePartition::even(cfg.layers, k)?;
+        let r = pipeline::forward_throughput(&backend, &mlp, &p, inputs.clone(), batches, depth)?;
         println!(
             "stages={k}: {:.1} batches/s  speedup {:.2}x",
             r.batches_per_sec,
@@ -335,9 +337,10 @@ mod tests {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
+    // Manifest inspection works on every build; only execution needs the
+    // `pjrt` feature.
     let dir = args.get("artifacts").unwrap_or("artifacts");
-    let engine = Engine::load(dir)?;
-    let m = engine.manifest();
+    let m = Manifest::load(&Path::new(dir).join("manifest.json"))?;
     println!("preset: {}  fingerprint: {}", m.preset, m.fingerprint);
     println!(
         "model: batch={} input={} hidden={} classes={} layers={}",

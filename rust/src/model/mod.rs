@@ -1,17 +1,18 @@
-//! Model layer: the MLP whose per-layer compute lives in AOT artifacts.
+//! Model layer: the MLP whose per-layer compute runs on an [`Exec`]
+//! backend (AOT artifacts under PJRT, host kernels otherwise).
 //!
 //! Rust owns the parameters (host tensors), their initialization, and the
-//! layer→artifact mapping; XLA owns the math. One `dense_fwd_hid` /
+//! layer→kernel mapping; the backend owns the math. One `dense_fwd_hid` /
 //! `dense_bwd_hid` artifact serves every hidden layer because all hidden
 //! layers share the `[H, H]` shape — the artifact set stays O(1) in depth.
 
 pub mod checkpoint;
 
+use crate::backend::Exec;
 use crate::config::ModelConfig;
-use crate::runtime::Engine;
 use crate::tensor::Tensor;
 use crate::util::Rng;
-use anyhow::{ensure, Result};
+use anyhow::Result;
 
 /// Which artifact pair a layer dispatches to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -108,80 +109,52 @@ impl Mlp {
         self.layers.iter().map(|l| l.w.len() + l.b.len()).sum()
     }
 
-    /// Forward one layer through the engine. Returns the activation.
-    pub fn forward_layer(&self, engine: &Engine, l: usize, x: &Tensor) -> Result<Tensor> {
-        self.forward_layer_with(engine, l, x, &self.layers[l].w, &self.layers[l].b)
+    /// Forward one layer through the backend. Returns the activation.
+    pub fn forward_layer(&self, exec: &dyn Exec, l: usize, x: &Tensor) -> Result<Tensor> {
+        self.forward_layer_with(exec, l, x, &self.layers[l].w, &self.layers[l].b)
     }
 
     /// Forward one layer with an explicit weight version (strategies may
     /// substitute stashed/reconstructed weights).
     pub fn forward_layer_with(
         &self,
-        engine: &Engine,
+        exec: &dyn Exec,
         l: usize,
         x: &Tensor,
         w: &Tensor,
         b: &Tensor,
     ) -> Result<Tensor> {
-        let role = self.layers[l].role;
-        let mut out = engine.run(role.fwd_artifact(), &[x, w, b])?;
-        ensure!(out.len() == 1, "forward artifact returns one tensor");
-        Ok(out.pop().expect("one output"))
+        exec.forward(self.layers[l].role, x, w, b)
     }
 
     /// Backward one layer with an explicit weight version.
     /// Returns `(dx, dw, db)`.
     pub fn backward_layer_with(
         &self,
-        engine: &Engine,
+        exec: &dyn Exec,
         l: usize,
         x: &Tensor,
         y: &Tensor,
         w: &Tensor,
         dy: &Tensor,
     ) -> Result<(Tensor, Tensor, Tensor)> {
-        let role = self.layers[l].role;
-        let out = if role.has_relu() {
-            engine.run(role.bwd_artifact(), &[x, y, w, dy])?
-        } else {
-            engine.run(role.bwd_artifact(), &[x, w, dy])?
-        };
-        ensure!(out.len() == 3, "backward artifact returns (dx, dw, db)");
-        let mut it = out.into_iter();
-        Ok((
-            it.next().expect("dx"),
-            it.next().expect("dw"),
-            it.next().expect("db"),
-        ))
+        exec.backward(self.layers[l].role, x, y, w, dy)
     }
 
-    /// Loss + initial gradient + #correct via the `loss_grad` artifact.
+    /// Loss + initial gradient + #correct via the backend's loss kernel.
     pub fn loss_grad(
         &self,
-        engine: &Engine,
+        exec: &dyn Exec,
         logits: &Tensor,
         onehot: &Tensor,
     ) -> Result<(f32, Tensor, f32)> {
-        let out = engine.run("loss_grad", &[logits, onehot])?;
-        ensure!(out.len() == 3, "loss_grad returns (loss, dlogits, correct)");
-        let mut it = out.into_iter();
-        let loss = it.next().expect("loss").data()[0];
-        let dlogits = it.next().expect("dlogits");
-        let correct = it.next().expect("correct").data()[0];
-        Ok((loss, dlogits, correct))
+        exec.loss_grad(logits, onehot)
     }
 
-    /// Fused full-network forward (eval path): one dispatch instead of L.
-    pub fn forward_full(&self, engine: &Engine, x: &Tensor) -> Result<Tensor> {
-        let mut inputs: Vec<&Tensor> = Vec::with_capacity(1 + 2 * self.layers.len());
-        inputs.push(x);
-        for lp in &self.layers {
-            inputs.push(&lp.w);
-            inputs.push(&lp.b);
-        }
-        let mut out = engine.run("fwd_full", &inputs)?;
-        ensure!(out.len() == 1, "fwd_full returns logits");
-        Ok(out.pop().expect("logits"))
+    /// Full-network forward (eval path): one fused dispatch on backends
+    /// that support it, a layer chain otherwise.
+    pub fn forward_full(&self, exec: &dyn Exec, x: &Tensor) -> Result<Tensor> {
+        exec.forward_full(x, &self.layers)
     }
 }
 

@@ -10,7 +10,7 @@
 mod schedule;
 mod sgd;
 
-pub use schedule::{ConstantLr, CosineLr, LrSchedule};
+pub use schedule::{ConstantLr, CosineLr, LrBook, LrSchedule};
 pub use sgd::Sgd;
 
 use crate::tensor::Tensor;

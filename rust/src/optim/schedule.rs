@@ -41,9 +41,59 @@ impl LrSchedule for CosineLr {
     }
 }
 
+/// A schedule plus lazily-grown prefix sums of its learning rates:
+/// `prefix[t] = Σ_{τ<t} lr(τ)` in f64, giving the exact `lr_sum` of the
+/// paper's Eq. 9 under arbitrary schedules. Shared by the iteration-
+/// indexed trainer and the threaded pipelined executor so both compute
+/// bit-identical reconstruction sums.
+pub struct LrBook {
+    sched: Box<dyn LrSchedule>,
+    prefix: Vec<f64>,
+}
+
+impl LrBook {
+    pub fn new(sched: Box<dyn LrSchedule>) -> LrBook {
+        LrBook { sched, prefix: vec![0.0] }
+    }
+
+    fn grow(&mut self, upto: u64) {
+        while self.prefix.len() <= upto as usize {
+            let t = self.prefix.len() - 1;
+            let last = *self.prefix.last().expect("nonempty prefix");
+            self.prefix.push(last + self.sched.lr(t) as f64);
+        }
+    }
+
+    /// Learning rate at step `t`, growing the prefix through `t`.
+    pub fn lr(&mut self, t: u64) -> f32 {
+        self.grow(t + 1);
+        self.sched.lr(t as usize)
+    }
+
+    /// Learning rate at step `t` without touching the prefix (reporting).
+    pub fn peek(&self, t: u64) -> f32 {
+        self.sched.lr(t as usize)
+    }
+
+    /// `Σ lr(τ)` for `τ ∈ [t0, t1)` — the `lr_sum` of Eq. 9.
+    pub fn lr_sum(&mut self, t0: u64, t1: u64) -> f32 {
+        self.grow(t1);
+        (self.prefix[t1 as usize] - self.prefix[t0 as usize]) as f32
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn lr_book_sums_match_direct_accumulation() {
+        let mut book = LrBook::new(Box::new(CosineLr::new(0.1, 0.001, 50)));
+        let direct: f64 = (10..30).map(|t| book.peek(t) as f64).sum();
+        assert!((book.lr_sum(10, 30) as f64 - direct).abs() < 1e-6);
+        assert_eq!(book.lr_sum(7, 7), 0.0);
+        assert_eq!(book.lr(3), book.peek(3));
+    }
 
     #[test]
     fn cosine_endpoints() {

@@ -1,25 +1,49 @@
 //! Threaded pipeline runtime: real concurrent stage execution.
 //!
-//! The [`crate::train::Trainer`] runs the pipeline's *semantics*
-//! (delayed gradients) single-threaded for deterministic Fig. 5 curves;
-//! this module runs the pipeline *physically*: one OS thread per stage,
-//! activations flowing through bounded channels, each stage executing
-//! its layers' forward artifacts through the shared PJRT engine. It
-//! measures the throughput side of LayerPipe — speedup and utilization
-//! versus sequential execution — on real XLA compute rather than the
-//! abstract cost model of [`crate::schedule`].
+//! Two layers of machinery live here:
+//!
+//! 1. [`forward_throughput`] / [`forward_sequential`] — the forward-only
+//!    throughput harness the seed shipped, now backend-generic.
+//! 2. [`PipelinedTrainer`] — a **pipelined training executor**: one OS
+//!    thread per stage, each owning its layers' parameters, optimizers
+//!    and weight-version strategy, interleaving the forward of batch `t`
+//!    with the delayed backward of batch `t − d_s` exactly per the
+//!    retiming schedule (`d_s = 2·S(stage)`, Eq. 1). Activations flow
+//!    forward and gradients flow backward through bounded channels; no
+//!    locks sit on the hot path because every weight is owned by exactly
+//!    one stage thread.
+//!
+//! ### Equivalence with the iteration-indexed oracle
+//!
+//! [`crate::train::Trainer`] executes, per stage, the event sequence
+//! `…, fwd(t), bwd(t − d_s), fwd(t+1), bwd(t+1 − d_s), …` with gradients
+//! applied stage-locally the moment they materialize. The executor runs
+//! the *same local sequence* on each stage thread and communicates only
+//! through dataflow (activations down, gradients up), so every f32
+//! operation happens in the same order on the same operands — the loss
+//! curves match the oracle bit-for-bit while the stages physically
+//! overlap in wall-clock time. Epoch boundaries are barriers (the
+//! trainer evaluates between epochs), and a final drain span retires the
+//! pipeline tail, mirroring `Trainer::drain`.
 //!
 //! tokio is unavailable offline; `std::thread` + `mpsc::sync_channel`
 //! provide the same bounded-queue backpressure structure.
 
-use crate::model::Mlp;
+use crate::backend::{Backend, Exec};
+use crate::config::ExperimentConfig;
+use crate::data::{BatchIter, Splits};
+use crate::metrics::{EpochMetrics, RunCurve};
+use crate::model::{LayerParams, Mlp};
+use crate::optim::{LrBook, Optimizer, Sgd};
 use crate::retiming::StagePartition;
-use crate::runtime::Engine;
+use crate::strategy::{LayerStrategy, StrategyKind};
 use crate::tensor::Tensor;
-use crate::util::Stopwatch;
-use anyhow::{Context, Result};
-use std::sync::mpsc;
-use std::sync::Arc;
+use crate::train::{evaluate_params, lr_schedule_for};
+use crate::util::{Rng, Stopwatch};
+use anyhow::{anyhow, Context, Result};
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{mpsc, Arc};
 
 /// Throughput measurement of one run.
 #[derive(Clone, Debug)]
@@ -38,7 +62,7 @@ pub struct ThroughputReport {
 /// in-flight batches ≈ `stages · depth`, mirroring the activation-stash
 /// budget of the schedule model.
 pub fn forward_throughput(
-    engine: &Arc<Engine>,
+    backend: &Backend,
     mlp: &Mlp,
     partition: &StagePartition,
     inputs: Vec<Tensor>,
@@ -61,7 +85,7 @@ pub fn forward_throughput(
     for s in 0..k {
         let rx = rx_iter.next().expect("stage rx");
         let tx = txs[s + 1].clone();
-        let engine = Arc::clone(engine);
+        let backend = Arc::clone(backend);
         let params: Vec<(Tensor, Tensor, crate::model::LayerRole)> = partition
             .layers_in_stage(s)
             .iter()
@@ -71,10 +95,7 @@ pub fn forward_throughput(
             let mut count = 0usize;
             while let Ok(mut h) = rx.recv() {
                 for (w, b, role) in &params {
-                    let out = engine
-                        .run(role.fwd_artifact(), &[&h, w, b])
-                        .context("stage forward")?;
-                    h = out.into_iter().next().expect("activation");
+                    h = backend.forward(*role, &h, w, b).context("stage forward")?;
                 }
                 count += 1;
                 if tx.send(h).is_err() {
@@ -101,7 +122,7 @@ pub fn forward_throughput(
     while received < batches {
         collector
             .recv()
-            .map_err(|_| anyhow::anyhow!("pipeline closed early at {received}/{batches}"))?;
+            .map_err(|_| anyhow!("pipeline closed early at {received}/{batches}"))?;
         received += 1;
     }
     drop(collector);
@@ -121,7 +142,7 @@ pub fn forward_throughput(
 
 /// Sequential reference: the same `batches` forwards on one thread.
 pub fn forward_sequential(
-    engine: &Arc<Engine>,
+    backend: &Backend,
     mlp: &Mlp,
     inputs: &[Tensor],
     batches: usize,
@@ -130,9 +151,564 @@ pub fn forward_sequential(
     for i in 0..batches {
         let mut h = inputs[i % inputs.len()].clone();
         for l in 0..mlp.num_layers() {
-            h = mlp.forward_layer(engine, l, &h)?;
+            h = mlp.forward_layer(backend.as_ref(), l, &h)?;
         }
     }
     let seconds = sw.elapsed_secs();
     Ok(ThroughputReport { stages: 1, batches, seconds, batches_per_sec: batches as f64 / seconds })
+}
+
+// ---------------------------------------------------------------------------
+// The pipelined training executor.
+// ---------------------------------------------------------------------------
+
+/// A batch-tagged tensor moving between stages.
+type Packet = (u64, Tensor);
+
+/// One layer owned by a stage worker. The gradient delay is not stored
+/// per layer: every layer of a stage shares the stage's `delay`.
+struct StageLayer {
+    params: LayerParams,
+    strategy: LayerStrategy,
+    opt_w: Sgd,
+    opt_b: Sgd,
+}
+
+/// Everything one stage thread owns: its layers, its slice of the lr
+/// bookkeeping, and the activations stashed for pending backwards.
+struct StageState {
+    stage: usize,
+    /// Layers in ascending global-layer order.
+    layers: Vec<StageLayer>,
+    /// The stage's gradient delay `d_s = 2·(K − 1 − s)`.
+    delay: u64,
+    lr: LrBook,
+    /// FIFO of `(t, per-layer (input, output))` awaiting backward.
+    saved: VecDeque<(u64, Vec<(Tensor, Tensor)>)>,
+    saved_bytes: usize,
+    peak_saved_bytes: usize,
+    /// Last stage only: `(t, loss)` records awaiting epoch attribution.
+    losses: VecDeque<(u64, f32)>,
+}
+
+impl StageState {
+    fn is_last(&self, stages: usize) -> bool {
+        self.stage + 1 == stages
+    }
+}
+
+/// The channel endpoints a stage keeps across spans. Messages buffered at
+/// an epoch barrier (gradients produced upstream but not yet consumed)
+/// survive inside the channels.
+#[derive(Default)]
+struct StageLinks {
+    act_in: Option<Receiver<Packet>>,
+    act_out: Option<SyncSender<Packet>>,
+    grad_in: Option<Receiver<Packet>>,
+    grad_out: Option<SyncSender<Packet>>,
+}
+
+/// The multi-threaded pipelined trainer: same constructor inputs and
+/// curve outputs as [`crate::train::Trainer`], but executed by one worker
+/// thread per stage with physically overlapped forward/backward.
+pub struct PipelinedTrainer {
+    backend: Backend,
+    cfg: ExperimentConfig,
+    kind: StrategyKind,
+    partition: StagePartition,
+    stages: Vec<StageState>,
+    links: Vec<StageLinks>,
+    /// Reporting schedule (per-stage books do the hot-path sums).
+    report_lr: LrBook,
+    /// Batches fed so far == the next global iteration index.
+    step: u64,
+}
+
+impl PipelinedTrainer {
+    /// Seed-identical construction: consumes `rng` exactly like
+    /// `Trainer::new`, so both start from the same parameters.
+    pub fn new(
+        backend: Backend,
+        cfg: &ExperimentConfig,
+        kind: StrategyKind,
+        rng: &mut Rng,
+    ) -> Result<PipelinedTrainer> {
+        cfg.validate()?;
+        backend.check_model(&cfg.model)?;
+        let mlp = Mlp::init(&cfg.model, rng);
+        let stages_n = if kind.is_pipelined() { cfg.pipeline.stages } else { 1 };
+        let partition = StagePartition::even(cfg.model.layers, stages_n)?;
+        let delays = partition.gradient_delays();
+        let stage_of = partition.stage_of().to_vec();
+
+        let mut stages: Vec<StageState> = (0..stages_n)
+            .map(|s| StageState {
+                stage: s,
+                layers: Vec::new(),
+                delay: 0, // set below from the partition's layer delays
+                lr: LrBook::new(lr_schedule_for(cfg)),
+                saved: VecDeque::new(),
+                saved_bytes: 0,
+                peak_saved_bytes: 0,
+                losses: VecDeque::new(),
+            })
+            .collect();
+        for (l, lp) in mlp.layers.into_iter().enumerate() {
+            let (din, dout) = crate::model::layer_dims(&cfg.model, l);
+            // All layers of a stage share one delay (d = 2·S(stage));
+            // deriving the stage delay from the same `delays` vector the
+            // strategies use keeps scheduler and stash windows in lockstep.
+            stages[stage_of[l]].delay = delays[l] as u64;
+            stages[stage_of[l]].layers.push(StageLayer {
+                params: lp,
+                strategy: LayerStrategy::new(kind, delays[l]),
+                opt_w: Sgd::new(&[din, dout], cfg.optim.momentum, cfg.optim.weight_decay),
+                opt_b: Sgd::new(&[dout], cfg.optim.momentum, 0.0),
+            });
+        }
+
+        // Channel capacity: a stage can run at most ~d_max iterations
+        // ahead of its neighbors (then its own delayed backward blocks on
+        // the upstream gradient), so this depth makes sends non-blocking
+        // in steady state while still bounding in-flight memory.
+        let cap = partition.max_delay() + 4;
+        let mut links: Vec<StageLinks> = (0..stages_n).map(|_| StageLinks::default()).collect();
+        for s in 0..stages_n.saturating_sub(1) {
+            let (atx, arx) = mpsc::sync_channel::<Packet>(cap);
+            links[s].act_out = Some(atx);
+            links[s + 1].act_in = Some(arx);
+            let (gtx, grx) = mpsc::sync_channel::<Packet>(cap);
+            links[s + 1].grad_out = Some(gtx);
+            links[s].grad_in = Some(grx);
+        }
+
+        Ok(PipelinedTrainer {
+            backend,
+            cfg: cfg.clone(),
+            kind,
+            partition,
+            stages,
+            links,
+            report_lr: LrBook::new(lr_schedule_for(cfg)),
+            step: 0,
+        })
+    }
+
+    pub fn kind(&self) -> StrategyKind {
+        self.kind
+    }
+
+    pub fn partition(&self) -> &StagePartition {
+        &self.partition
+    }
+
+    pub fn gradient_delays(&self) -> Vec<usize> {
+        self.stages
+            .iter()
+            .flat_map(|st| st.layers.iter().map(move |_| st.delay as usize))
+            .collect()
+    }
+
+    /// Snapshot of the full parameter set in global layer order.
+    pub fn layer_params(&self) -> Vec<LayerParams> {
+        self.stages
+            .iter()
+            .flat_map(|st| st.layers.iter().map(|sl| sl.params.clone()))
+            .collect()
+    }
+
+    /// Peak staleness-handling bytes across layers (stash + EMA).
+    pub fn staleness_bytes(&self) -> usize {
+        self.stages
+            .iter()
+            .flat_map(|st| st.layers.iter())
+            .map(|sl| sl.strategy.peak_staleness_nbytes())
+            .sum()
+    }
+
+    /// Peak bytes of stage-local activation stash, summed over stages.
+    ///
+    /// Accounting note: this counts the per-layer `(input, output)`
+    /// pairs each stage holds for pending backwards. The oracle
+    /// `Trainer` additionally counts each in-flight record's one-hot
+    /// labels and the gradient flowing down its backward chain, so the
+    /// `activation_bytes` metric is *not* comparable across the two
+    /// engines (loss, accuracy and staleness bytes are).
+    pub fn peak_activation_bytes(&self) -> usize {
+        self.stages.iter().map(|st| st.peak_saved_bytes).sum()
+    }
+
+    /// Test accuracy of the current (stage-distributed) parameters.
+    pub fn evaluate(&self, data: &Splits) -> Result<f32> {
+        let params = self.layer_params();
+        evaluate_params(self.backend.as_ref(), &params, self.cfg.model.batch, data)
+    }
+
+    /// Run all stage workers concurrently over global iterations
+    /// `[t0, t1)`. `xs`/`ohs` are this span's batches (empty for a drain
+    /// span); `fed_total` is the total number of batches ever fed once
+    /// this span completes, which bounds which backwards are due.
+    fn run_span(
+        &mut self,
+        xs: Vec<Tensor>,
+        ohs: Vec<Tensor>,
+        t0: u64,
+        t1: u64,
+        fed_total: u64,
+    ) -> Result<()> {
+        let k = self.stages.len();
+        let fwd_count = xs.len();
+        debug_assert_eq!(ohs.len(), fwd_count);
+        debug_assert!(t0 + fwd_count as u64 <= t1);
+        let mut feeds: Vec<(Vec<Tensor>, Vec<Tensor>)> =
+            (0..k).map(|_| (Vec::new(), Vec::new())).collect();
+        feeds[0].0 = xs;
+        feeds[k - 1].1 = ohs;
+
+        let backend = self.backend.clone();
+        let results: Vec<Result<()>> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(k);
+            for ((st, links), (sxs, sohs)) in self
+                .stages
+                .iter_mut()
+                .zip(self.links.iter_mut())
+                .zip(feeds.into_iter())
+            {
+                let backend = backend.clone();
+                handles.push(scope.spawn(move || {
+                    run_stage_span(
+                        backend.as_ref(),
+                        k,
+                        st,
+                        links,
+                        sxs,
+                        sohs,
+                        t0,
+                        t1,
+                        fwd_count,
+                        fed_total,
+                    )
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(r) => r,
+                    Err(payload) => std::panic::resume_unwind(payload),
+                })
+                .collect()
+        });
+        for r in results {
+            r?;
+        }
+        Ok(())
+    }
+
+    /// Train for the configured epochs, returning the metrics curve.
+    /// Matches `Trainer::train` batch-for-batch: same rng consumption,
+    /// same epoch barriers, same loss attribution (a batch's loss counts
+    /// toward the epoch in which it fully retires).
+    pub fn train(&mut self, data: &Splits, rng: &mut Rng) -> Result<RunCurve> {
+        let mut curve = RunCurve {
+            strategy: self.kind.name().to_string(),
+            epochs: Vec::with_capacity(self.cfg.epochs),
+        };
+        // Delay of the deepest (stage-0) layers: the retirement lag.
+        let d0 = self.stages[0].delay;
+        for epoch in 0..self.cfg.epochs {
+            let warmup = epoch < self.cfg.pipeline.warmup_epochs;
+            for st in &mut self.stages {
+                for sl in &mut st.layers {
+                    sl.strategy.set_warmup(warmup);
+                }
+            }
+            let sw = Stopwatch::start();
+            let mut xs = Vec::new();
+            let mut ohs = Vec::new();
+            for (x, onehot) in BatchIter::new(&data.train, self.cfg.model.batch, rng) {
+                xs.push(x);
+                ohs.push(onehot);
+            }
+            let t0 = self.step;
+            let t1 = t0 + xs.len() as u64;
+            self.run_span(xs, ohs, t0, t1, t1)
+                .with_context(|| format!("executor epoch {epoch}"))?;
+            self.step = t1;
+
+            // Losses of batches that fully retired this epoch: batch tb
+            // retires when its stage-0 backward lands at iteration tb+d0.
+            let mut epoch_losses = Vec::new();
+            let last = self.stages.last_mut().expect("at least one stage");
+            while let Some(&(tb, loss)) = last.losses.front() {
+                if tb + d0 < t1 {
+                    epoch_losses.push(loss);
+                    last.losses.pop_front();
+                } else {
+                    break;
+                }
+            }
+            let train_loss = if epoch_losses.is_empty() {
+                f32::NAN
+            } else {
+                epoch_losses.iter().sum::<f32>() / epoch_losses.len() as f32
+            };
+            let test_accuracy = self.evaluate(data)?;
+            let m = EpochMetrics {
+                epoch,
+                train_loss,
+                test_accuracy,
+                lr: self.report_lr.peek(self.step),
+                staleness_bytes: self.staleness_bytes(),
+                activation_bytes: self.peak_activation_bytes(),
+                seconds: sw.elapsed_secs(),
+            };
+            crate::log_info!(
+                "[{}/threaded] epoch {epoch}: loss {:.4} acc {:.4} ({}s)",
+                self.kind.name(),
+                m.train_loss,
+                m.test_accuracy,
+                format!("{:.2}", m.seconds)
+            );
+            curve.epochs.push(m);
+        }
+        // Final drain: retire the pipeline tail (no new batches).
+        let t_end = self.step;
+        let d_max = self.partition.max_delay() as u64;
+        if d_max > 0 {
+            self.run_span(Vec::new(), Vec::new(), t_end, t_end + d_max, t_end)
+                .context("executor drain")?;
+        }
+        self.step = t_end + d_max;
+        Ok(curve)
+    }
+}
+
+/// One stage worker's span, with fail-fast teardown: if the span loop
+/// errors, this stage's channel endpoints are dropped so neighbors
+/// blocked in `recv()`/`send()` see a disconnect and unwind too —
+/// otherwise a single failing stage would deadlock the scope join.
+#[allow(clippy::too_many_arguments)]
+fn run_stage_span(
+    backend: &dyn Exec,
+    stages: usize,
+    st: &mut StageState,
+    links: &mut StageLinks,
+    xs: Vec<Tensor>,
+    ohs: Vec<Tensor>,
+    t0: u64,
+    t1: u64,
+    fwd_count: usize,
+    fed_total: u64,
+) -> Result<()> {
+    // Reborrow st/links inside the closure (rather than moving the &mut
+    // bindings) so they stay usable for the teardown below.
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        stage_span_loop(backend, stages, &mut *st, &mut *links, xs, ohs, t0, t1, fwd_count, fed_total)
+    }));
+    let ok = matches!(result, Ok(Ok(())));
+    if !ok {
+        // Unblock neighbors: dropping our endpoints disconnects their
+        // recv()/send(), cascading the shutdown instead of deadlocking.
+        // The stage state may be mid-iteration here, which is fine —
+        // the error/panic aborts the whole training run.
+        links.act_in = None;
+        links.act_out = None;
+        links.grad_in = None;
+        links.grad_out = None;
+    }
+    match result {
+        Ok(r) => r,
+        Err(payload) => std::panic::resume_unwind(payload),
+    }
+}
+
+/// The per-iteration body of a stage worker: for each global iteration
+/// `t` in `[t0, t1)`, run the forward of batch `t` (when one exists) and
+/// then the delayed backward of batch `t − d_s` (when due) — the exact
+/// per-stage event order of the iteration-indexed oracle.
+#[allow(clippy::too_many_arguments)]
+fn stage_span_loop(
+    backend: &dyn Exec,
+    stages: usize,
+    st: &mut StageState,
+    links: &mut StageLinks,
+    xs: Vec<Tensor>,
+    ohs: Vec<Tensor>,
+    t0: u64,
+    t1: u64,
+    fwd_count: usize,
+    fed_total: u64,
+) -> Result<()> {
+    let s = st.stage;
+    let last = st.is_last(stages);
+    let fwd_end = t0 + fwd_count as u64;
+    let mut xs_it = xs.into_iter();
+    let mut oh_it = ohs.into_iter();
+
+    for t in t0..t1 {
+        // ---- forward lane -------------------------------------------
+        if t < fwd_end {
+            let mut h = match &links.act_in {
+                Some(rx) => {
+                    let (tin, h) = rx
+                        .recv()
+                        .map_err(|_| anyhow!("stage {s}: upstream closed before act {t}"))?;
+                    debug_assert_eq!(tin, t, "activation arrived out of order");
+                    h
+                }
+                None => xs_it.next().expect("feeder batch present"),
+            };
+            let mut saved = Vec::with_capacity(st.layers.len());
+            for sl in st.layers.iter_mut() {
+                sl.strategy.on_forward(t, &sl.params.w);
+                let y = backend.forward(sl.params.role, &h, &sl.params.w, &sl.params.b)?;
+                saved.push((h, y.clone()));
+                h = y;
+            }
+            st.saved_bytes += saved
+                .iter()
+                .map(|(a, b)| a.nbytes() + b.nbytes())
+                .sum::<usize>();
+            st.peak_saved_bytes = st.peak_saved_bytes.max(st.saved_bytes);
+            st.saved.push_back((t, saved));
+            if let Some(tx) = &links.act_out {
+                tx.send((t, h))
+                    .map_err(|_| anyhow!("stage {s}: downstream closed at act {t}"))?;
+            }
+        }
+
+        // ---- backward lane ------------------------------------------
+        if t < st.delay || t - st.delay >= fed_total {
+            continue;
+        }
+        let tb = t - st.delay;
+        let mut dy = if last {
+            let (_, saved) = st.saved.front().expect("logits saved for loss");
+            let logits = &saved.last().expect("output layer activation").1;
+            let onehot = oh_it.next().expect("onehot batch present");
+            let (loss, dlogits, _correct) = backend.loss_grad(logits, &onehot)?;
+            st.losses.push_back((tb, loss));
+            dlogits
+        } else {
+            let (tg, g) = links
+                .grad_in
+                .as_ref()
+                .expect("inner stage has a gradient input")
+                .recv()
+                .map_err(|_| anyhow!("stage {s}: downstream closed before grad {tb}"))?;
+            debug_assert_eq!(tg, tb, "gradient arrived out of order");
+            g
+        };
+        let (tb2, acts) = st.saved.pop_front().expect("stashed activations for backward");
+        debug_assert_eq!(tb2, tb, "activation stash out of order");
+        st.saved_bytes -= acts
+            .iter()
+            .map(|(a, b)| a.nbytes() + b.nbytes())
+            .sum::<usize>();
+        // Every layer of the stage shares the delay, so the Eq. 9 lr sum
+        // (spanning only iterations where the layer actually updated —
+        // updates start at iteration d_s) and the step lr are uniform.
+        let lr_sum = st.lr.lr_sum(tb.max(st.delay), t);
+        let lr = st.lr.lr(t);
+        // Layers top-down, exactly as the oracle's backward chain.
+        for (sl, (x, y)) in st.layers.iter_mut().rev().zip(acts.into_iter().rev()) {
+            let (dx, dw, db) = {
+                let w_bwd = sl.strategy.backward_weights(tb, &sl.params.w, lr_sum);
+                backend.backward(sl.params.role, &x, &y, &w_bwd, &dy)?
+            };
+            let upd_w = sl.opt_w.step(&mut sl.params.w, &dw, lr);
+            let _upd_b = sl.opt_b.step(&mut sl.params.b, &db, lr);
+            sl.strategy.on_update(&upd_w);
+            dy = dx;
+        }
+        if let Some(tx) = &links.grad_out {
+            tx.send((tb, dy))
+                .map_err(|_| anyhow!("stage {s}: upstream closed at grad {tb}"))?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::HostBackend;
+    use crate::config::DataConfig;
+    use crate::data::teacher_dataset;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model.batch = 8;
+        cfg.model.input_dim = 12;
+        cfg.model.hidden_dim = 10;
+        cfg.model.classes = 4;
+        cfg.model.layers = 4;
+        cfg.pipeline.stages = 4;
+        cfg.epochs = 2;
+        cfg.data = DataConfig {
+            train_samples: 64,
+            test_samples: 32,
+            teacher_hidden: 8,
+            label_noise: 0.0,
+            seed: 3,
+        };
+        cfg
+    }
+
+    fn backend() -> Backend {
+        Arc::new(HostBackend::new())
+    }
+
+    #[test]
+    fn executor_construction_matches_partition() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(1);
+        let ex = PipelinedTrainer::new(backend(), &cfg, StrategyKind::Stashing, &mut rng).unwrap();
+        assert_eq!(ex.gradient_delays(), vec![6, 4, 2, 0]);
+        assert_eq!(ex.layer_params().len(), 4);
+        let seq =
+            PipelinedTrainer::new(backend(), &cfg, StrategyKind::Sequential, &mut Rng::new(1))
+                .unwrap();
+        assert_eq!(seq.gradient_delays(), vec![0; 4]);
+    }
+
+    #[test]
+    fn executor_trains_and_learns_on_host_backend() {
+        let cfg = tiny_cfg();
+        let data = teacher_dataset(&cfg.model, &cfg.data);
+        let mut rng = Rng::new(cfg.seed);
+        let mut ex =
+            PipelinedTrainer::new(backend(), &cfg, StrategyKind::Stashing, &mut rng).unwrap();
+        let mut batch_rng = Rng::new(5);
+        let curve = ex.train(&data, &mut batch_rng).unwrap();
+        assert_eq!(curve.epochs.len(), cfg.epochs);
+        // After the drain, every stash is empty and all losses attributed
+        // or queued for the dropped tail.
+        for st in &ex.stages {
+            assert!(st.saved.is_empty(), "stage {} stash not drained", st.stage);
+        }
+        assert!(curve.final_accuracy() > 0.0);
+    }
+
+    #[test]
+    fn executor_is_deterministic() {
+        let cfg = tiny_cfg();
+        let data = teacher_dataset(&cfg.model, &cfg.data);
+        let run = || {
+            let mut rng = Rng::new(cfg.seed);
+            let mut ex =
+                PipelinedTrainer::new(backend(), &cfg, StrategyKind::PipelineAwareEma, &mut rng)
+                    .unwrap();
+            let mut batch_rng = Rng::new(5);
+            ex.train(&data, &mut batch_rng).unwrap()
+        };
+        let (a, b) = (run(), run());
+        for (ea, eb) in a.epochs.iter().zip(&b.epochs) {
+            assert!(
+                ea.train_loss == eb.train_loss
+                    || (ea.train_loss.is_nan() && eb.train_loss.is_nan())
+            );
+            assert_eq!(ea.test_accuracy, eb.test_accuracy);
+        }
+    }
 }

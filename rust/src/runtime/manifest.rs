@@ -27,6 +27,21 @@ pub struct ModelShape {
     pub layers: usize,
 }
 
+impl ModelShape {
+    /// The experiment model config these artifacts serve (the single
+    /// source for every tool that sizes models off a manifest).
+    pub fn to_model_config(&self) -> crate::config::ModelConfig {
+        crate::config::ModelConfig {
+            batch: self.batch,
+            input_dim: self.input_dim,
+            hidden_dim: self.hidden_dim,
+            classes: self.classes,
+            layers: self.layers,
+            init_scale: 1.0,
+        }
+    }
+}
+
 /// Parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
@@ -37,6 +52,16 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Model config for the artifacts in `dir`, or the default preset
+    /// when no manifest is readable there — the shared sizing policy for
+    /// every tool that runs with or without artifacts (CLI throughput,
+    /// benches, examples).
+    pub fn model_config_or_default(dir: &str) -> crate::config::ModelConfig {
+        Self::load(&Path::new(dir).join("manifest.json"))
+            .map(|m| m.model.to_model_config())
+            .unwrap_or_default()
+    }
+
     pub fn load(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading manifest {path:?} — run `make artifacts` first"))?;

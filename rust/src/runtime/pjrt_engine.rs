@@ -1,0 +1,149 @@
+//! The real PJRT engine (`pjrt` feature): compile every manifest entry on
+//! the PJRT CPU client and execute artifacts by name.
+
+use super::manifest::{Manifest, ManifestEntry};
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A compiled artifact plus its manifest signature.
+pub struct Executable {
+    entry: ManifestEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    pub fn entry(&self) -> &ManifestEntry {
+        &self.entry
+    }
+
+    /// Execute with shape-checked tensor inputs, returning one host
+    /// tensor per declared output.
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.entry.inputs.len() {
+            bail!(
+                "{}: got {} inputs, manifest declares {}",
+                self.entry.name,
+                inputs.len(),
+                self.entry.inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&self.entry.inputs).enumerate() {
+            if t.shape() != spec.as_slice() {
+                bail!(
+                    "{}: input {i} shape {:?} != manifest {:?}",
+                    self.entry.name,
+                    t.shape(),
+                    spec
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| to_literal(t)).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.entry.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("device→host copy")?
+            .to_tuple()
+            .context("unwrapping result tuple")?;
+        if tuple.len() != self.entry.outputs {
+            bail!(
+                "{}: runtime produced {} outputs, manifest declares {}",
+                self.entry.name,
+                tuple.len(),
+                self.entry.outputs
+            );
+        }
+        tuple
+            .into_iter()
+            .zip(&self.entry.output_shapes)
+            .map(|(lit, shape)| {
+                let data = lit.to_vec::<f32>().context("literal→vec")?;
+                Ok(Tensor::from_vec(shape, data))
+            })
+            .collect()
+    }
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    // Single host→literal copy: build directly at the target shape
+    // (the vec1 + reshape route copies twice).
+    let bytes = unsafe {
+        std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.nbytes())
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, t.shape(), bytes)
+        .context("literal from tensor")
+}
+
+/// The runtime engine: a PJRT client plus every compiled artifact.
+pub struct Engine {
+    manifest: Manifest,
+    executables: HashMap<String, Executable>,
+    exec_count: AtomicU64,
+}
+
+impl Engine {
+    /// Load `manifest.json` from `dir` and compile every entry.
+    pub fn load(dir: &str) -> Result<Engine> {
+        let manifest = Manifest::load(&Path::new(dir).join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for entry in &manifest.entries {
+            let path = Path::new(dir).join(&entry.file);
+            let path_str = path
+                .to_str()
+                .with_context(|| format!("non-utf8 path {path:?}"))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
+                .with_context(|| format!("parsing HLO text {path_str}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", entry.name))?;
+            executables.insert(entry.name.clone(), Executable { entry: entry.clone(), exe });
+        }
+        crate::log_info!(
+            "runtime: compiled {} artifacts from {dir} (preset {})",
+            executables.len(),
+            manifest.preset
+        );
+        Ok(Engine { manifest, executables, exec_count: AtomicU64::new(0) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Look up a compiled artifact by name.
+    pub fn get(&self, name: &str) -> Result<&Executable> {
+        self.executables
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    /// Execute an artifact by name.
+    pub fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
+        self.get(name)?.run(inputs)
+    }
+
+    /// Total executions since startup (metrics).
+    pub fn exec_count(&self) -> u64 {
+        self.exec_count.load(Ordering::Relaxed)
+    }
+}
+
+// SAFETY: the PJRT client and loaded executables wrap refcounted,
+// internally-synchronized XLA C++ objects; the CPU client supports
+// concurrent Execute calls. The manifest is immutable after load and the
+// counter is atomic.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+// Engine tests that need real artifacts live in rust/tests/ (integration)
+// since `make artifacts` must run first; manifest parsing is unit-tested
+// in manifest.rs.

@@ -1,0 +1,63 @@
+//! Stub engine compiled when the `pjrt` feature is off.
+//!
+//! Keeps every `runtime::Engine` call site compiling (CLI subcommands,
+//! benches, throughput tools) while making the unavailability explicit at
+//! runtime: [`Engine::load`] fails with an actionable message and nothing
+//! else can ever be reached, because no `Engine` value can be
+//! constructed. Consumers that want compute should go through
+//! [`crate::backend::from_env`], which falls back to the host backend.
+
+use super::manifest::Manifest;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Placeholder for the compiled-artifact handle (never constructed).
+pub struct Executable {
+    _unconstructible: std::convert::Infallible,
+}
+
+/// Placeholder engine (never constructed; `load` always errors).
+pub struct Engine {
+    manifest: Manifest,
+    _unconstructible: std::convert::Infallible,
+}
+
+impl Engine {
+    /// Always fails: the crate was built without PJRT support.
+    pub fn load(dir: &str) -> Result<Engine> {
+        bail!(
+            "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+             (artifacts dir: {dir}). Use the pure-Rust host backend \
+             (LAYERPIPE2_BACKEND=host, the default fallback) or rebuild with \
+             `--features pjrt` after enabling the `xla` dependency in Cargo.toml"
+        );
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn get(&self, _name: &str) -> Result<&Executable> {
+        match self._unconstructible {}
+    }
+
+    pub fn run(&self, _name: &str, _inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        match self._unconstructible {}
+    }
+
+    pub fn exec_count(&self) -> u64 {
+        match self._unconstructible {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = Engine::load("artifacts").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt"), "actionable message, got: {msg}");
+    }
+}

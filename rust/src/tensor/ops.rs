@@ -1,33 +1,42 @@
-//! Reference tensor operations on the host.
+//! Host tensor kernels: the compute substrate of the pure-Rust backend.
 //!
-//! These are *not* the hot path (XLA executes the lowered HLO for all
-//! per-layer compute); they exist to (a) cross-check the PJRT path in
-//! integration tests and (b) support pure-Rust components such as the
-//! DLMS simulator and the dataset synthesizer. The matmul is cache-blocked
-//! so host-side checks stay fast at paper-scale shapes.
+//! Originally these were cross-check oracles for the PJRT path; with the
+//! [`crate::backend::HostBackend`] they are also a real execution path,
+//! so the forward kernels are joined by the backward set (matmul with
+//! transposed operands, bias-grad reduction, ReLU mask, softmax-CE
+//! loss/grad) and the blocked matmul parallelizes across row blocks with
+//! `std::thread::scope` once shapes are large enough to amortize spawns.
+//! Results are bit-identical across thread counts: each row of `C` is
+//! always accumulated in the same block order by exactly one thread.
 
 use super::Tensor;
 
-/// `C = A @ B` for 2-D tensors, blocked for locality.
-pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
-    assert_eq!(a.ndim(), 2, "matmul lhs must be 2-D");
-    assert_eq!(b.ndim(), 2, "matmul rhs must be 2-D");
-    let (m, k) = (a.shape()[0], a.shape()[1]);
-    let (k2, n) = (b.shape()[0], b.shape()[1]);
-    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
-    let mut c = Tensor::zeros(&[m, n]);
-    const BLK: usize = 32;
-    let (ad, bd) = (a.data(), b.data());
-    let cd = c.data_mut();
-    for i0 in (0..m).step_by(BLK) {
+/// Cache-block edge for the matmul kernels.
+const BLK: usize = 32;
+
+/// Below this many multiply-adds the blocked matmul stays single-threaded
+/// (thread spawn + join costs more than the kernel itself).
+const PAR_MIN_MADDS: usize = 1 << 20;
+
+/// Worker count for the parallel matmul: the machine's parallelism,
+/// clamped so tiny matrices never see degenerate row chunks.
+fn matmul_threads(m: usize) -> usize {
+    let hw = std::thread::available_parallelism().map_or(1, |n| n.get());
+    hw.min(m.div_ceil(BLK)).max(1)
+}
+
+/// Blocked kernel over the row range `[i0, i0 + rows)` of `A`, writing the
+/// matching rows of `C` (passed as the disjoint slice `cd`).
+fn matmul_rows(ad: &[f32], bd: &[f32], cd: &mut [f32], i0: usize, rows: usize, k: usize, n: usize) {
+    for ib in (0..rows).step_by(BLK) {
         for k0 in (0..k).step_by(BLK) {
             for j0 in (0..n).step_by(BLK) {
-                let i1 = (i0 + BLK).min(m);
+                let i1 = (ib + BLK).min(rows);
                 let k1 = (k0 + BLK).min(k);
                 let j1 = (j0 + BLK).min(n);
-                for i in i0..i1 {
+                for i in ib..i1 {
                     for kk in k0..k1 {
-                        let aik = ad[i * k + kk];
+                        let aik = ad[(i0 + i) * k + kk];
                         if aik == 0.0 {
                             continue;
                         }
@@ -41,7 +50,132 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
             }
         }
     }
+}
+
+/// `C = A @ B` for 2-D tensors, blocked for locality and parallelized
+/// across row blocks for large shapes (no extra dependencies —
+/// `std::thread::scope` only).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2, "matmul lhs must be 2-D");
+    assert_eq!(b.ndim(), 2, "matmul rhs must be 2-D");
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    let threads = matmul_threads(m);
+    if m * k * n < PAR_MIN_MADDS || threads == 1 {
+        matmul_rows(ad, bd, cd, 0, m, k, n);
+        return c;
+    }
+    // Row chunks aligned to the cache block so per-row accumulation order
+    // (and thus the fp result) is independent of the thread count.
+    let rows_per = m.div_ceil(threads).div_ceil(BLK) * BLK;
+    std::thread::scope(|scope| {
+        for (chunk_idx, c_chunk) in cd.chunks_mut(rows_per * n).enumerate() {
+            let i0 = chunk_idx * rows_per;
+            let rows = c_chunk.len() / n;
+            scope.spawn(move || matmul_rows(ad, bd, c_chunk, i0, rows, k, n));
+        }
+    });
     c
+}
+
+/// Row-dot kernel over `[i0, i0 + rows)` of `A` for [`matmul_nt`],
+/// writing the matching rows of `C` (disjoint slice `cd`).
+fn matmul_nt_rows(ad: &[f32], bd: &[f32], cd: &mut [f32], i0: usize, rows: usize, k: usize, n: usize) {
+    for i in 0..rows {
+        let arow = &ad[(i0 + i) * k..(i0 + i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut s = 0.0f32;
+            for (av, bv) in arow.iter().zip(brow.iter()) {
+                s += av * bv;
+            }
+            cd[i * n + j] = s;
+        }
+    }
+}
+
+/// `C = A @ Bᵀ` with `A: [m, k]`, `B: [n, k]` → `C: [m, n]`.
+///
+/// The `dx = dy @ Wᵀ` backward kernel. Both operands stream row-major, so
+/// no explicit transpose materializes; rows of `C` are independent, so
+/// large shapes split across threads exactly like [`matmul`] (bit-stable:
+/// each row's dot order never changes).
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2, "matmul_nt lhs must be 2-D");
+    assert_eq!(b.ndim(), 2, "matmul_nt rhs must be 2-D");
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (n, k2) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul_nt inner dims: {k} vs {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    let threads = matmul_threads(m);
+    if m * k * n < PAR_MIN_MADDS || threads == 1 {
+        matmul_nt_rows(ad, bd, cd, 0, m, k, n);
+        return c;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (chunk_idx, c_chunk) in cd.chunks_mut(rows_per * n).enumerate() {
+            let i0 = chunk_idx * rows_per;
+            let rows = c_chunk.len() / n;
+            scope.spawn(move || matmul_nt_rows(ad, bd, c_chunk, i0, rows, k, n));
+        }
+    });
+    c
+}
+
+/// `C = Aᵀ @ B` with `A: [r, m]`, `B: [r, n]` → `C: [m, n]`.
+///
+/// The `dw = xᵀ @ dy` backward kernel, accumulated as a sum of row outer
+/// products so every access stays row-major. Stays single-threaded: `r`
+/// is the batch dimension (small at training shapes), and parallelizing
+/// the reduction would either need per-thread partials (changing fp
+/// summation order → breaking the oracle/executor bit-equivalence) or
+/// strided column chunking with poor locality.
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2, "matmul_tn lhs must be 2-D");
+    assert_eq!(b.ndim(), 2, "matmul_tn rhs must be 2-D");
+    let (r, m) = (a.shape()[0], a.shape()[1]);
+    let (r2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(r, r2, "matmul_tn outer dims: {r} vs {r2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    for rr in 0..r {
+        let brow = &bd[rr * n..(rr + 1) * n];
+        for i in 0..m {
+            let ari = ad[rr * m + i];
+            if ari == 0.0 {
+                continue;
+            }
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += ari * bv;
+            }
+        }
+    }
+    c
+}
+
+/// Column sums of a 2-D tensor: `out[j] = Σ_i x[i, j]` — the bias-grad
+/// reduction (`db = Σ_rows dz`).
+pub fn col_sum(x: &Tensor) -> Tensor {
+    assert_eq!(x.ndim(), 2, "col_sum needs a 2-D tensor");
+    let (m, n) = (x.shape()[0], x.shape()[1]);
+    let mut out = Tensor::zeros(&[n]);
+    let (xd, od) = (x.data(), out.data_mut());
+    for i in 0..m {
+        let row = &xd[i * n..(i + 1) * n];
+        for (ov, xv) in od.iter_mut().zip(row.iter()) {
+            *ov += xv;
+        }
+    }
+    out
 }
 
 /// `A^T` for a 2-D tensor.
@@ -141,6 +275,28 @@ pub fn softmax_xent(logits: &Tensor, labels: &[usize]) -> (f32, Tensor, usize) {
     (loss / m as f32, dl, correct)
 }
 
+/// [`softmax_xent`] with one-hot labels — the exact input/output contract
+/// of the `loss_grad` artifact, so the host backend is a drop-in
+/// replacement: `(mean loss, dlogits, argmax-correct row count)`.
+pub fn softmax_xent_onehot(logits: &Tensor, onehot: &Tensor) -> (f32, Tensor, f32) {
+    assert_eq!(logits.shape(), onehot.shape(), "logits vs onehot shape");
+    let (m, n) = (logits.shape()[0], logits.shape()[1]);
+    let labels: Vec<usize> = (0..m)
+        .map(|i| {
+            let row = &onehot.data()[i * n..(i + 1) * n];
+            let mut arg = 0;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[arg] {
+                    arg = j;
+                }
+            }
+            arg
+        })
+        .collect();
+    let (loss, dl, correct) = softmax_xent(logits, &labels);
+    (loss, dl, correct as f32)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,6 +331,78 @@ mod tests {
             let c_ref = naive_matmul(&a, &b);
             assert!(c.max_abs_diff(&c_ref) < 1e-4);
         }
+    }
+
+    #[test]
+    fn matmul_is_deterministic_across_parallel_threshold() {
+        // Shapes straddling PAR_MIN_MADDS must agree with the naive
+        // kernel; the parallel split may not change the fp result.
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (160, 96, 96); // 160·96·96 ≈ 1.5M madds → parallel
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let par = matmul(&a, &b);
+        let mut serial = Tensor::zeros(&[m, n]);
+        matmul_rows(a.data(), b.data(), serial.data_mut(), 0, m, k, n);
+        assert_eq!(par, serial, "parallel result must be bit-identical");
+    }
+
+    #[test]
+    fn matmul_nt_matches_transpose_composition() {
+        let mut rng = Rng::new(12);
+        // Small shapes (serial path) plus one above PAR_MIN_MADDS so the
+        // threaded row split is exercised too.
+        let mut cases: Vec<(usize, usize, usize)> = (0..8)
+            .map(|_| (1 + rng.index(20), 1 + rng.index(20), 1 + rng.index(20)))
+            .collect();
+        cases.push((160, 96, 96));
+        for (m, k, n) in cases {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[n, k], 1.0, &mut rng);
+            let got = matmul_nt(&a, &b);
+            let mut serial = Tensor::zeros(&[m, n]);
+            matmul_nt_rows(a.data(), b.data(), serial.data_mut(), 0, m, k, n);
+            assert_eq!(got, serial, "parallel nt must be bit-identical");
+            let want = matmul(&a, &transpose(&b));
+            assert!(got.max_abs_diff(&want) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn matmul_tn_matches_transpose_composition() {
+        let mut rng = Rng::new(13);
+        for _ in 0..8 {
+            let r = 1 + rng.index(20);
+            let m = 1 + rng.index(20);
+            let n = 1 + rng.index(20);
+            let a = Tensor::randn(&[r, m], 1.0, &mut rng);
+            let b = Tensor::randn(&[r, n], 1.0, &mut rng);
+            let got = matmul_tn(&a, &b);
+            let want = matmul(&transpose(&a), &b);
+            assert!(got.max_abs_diff(&want) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn col_sum_reduces_rows() {
+        let x = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 10.0, 20.0, 30.0]);
+        assert_eq!(col_sum(&x).data(), &[11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn onehot_xent_matches_label_xent() {
+        let mut rng = Rng::new(14);
+        let logits = Tensor::randn(&[5, 7], 2.0, &mut rng);
+        let labels: Vec<usize> = (0..5).map(|_| rng.index(7)).collect();
+        let mut onehot = Tensor::zeros(&[5, 7]);
+        for (i, &l) in labels.iter().enumerate() {
+            onehot.set2(i, l, 1.0);
+        }
+        let (l1, g1, c1) = softmax_xent(&logits, &labels);
+        let (l2, g2, c2) = softmax_xent_onehot(&logits, &onehot);
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+        assert_eq!(c1 as f32, c2);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! The delayed-gradient trainer: the Fig. 5 experiment engine.
+//! The delayed-gradient trainer: the Fig. 5 experiment engine, and the
+//! numerical oracle for the threaded executor in [`crate::pipeline`].
 //!
 //! Implements pipelined training in *iteration-indexed* form, which the
 //! schedule module proves equivalent to the clock-level pipeline: with
@@ -16,19 +17,70 @@
 //!
 //! The sequential strategy sets every `d_l = 0`, collapsing to standard
 //! backpropagation on the same code path (a true reference curve).
+//!
+//! Per-stage event order is the contract the multi-threaded executor
+//! must reproduce: at iteration `t` a stage sees `forward(t)` first,
+//! then `backward(t − d)` — see `DESIGN.md` for the equivalence
+//! argument.
 
+use crate::backend::{Backend, Exec};
 use crate::config::ExperimentConfig;
 use crate::data::{BatchIter, Splits};
 use crate::metrics::{EpochMetrics, RunCurve};
-use crate::model::Mlp;
-use crate::optim::{ConstantLr, CosineLr, LrSchedule, Optimizer, Sgd};
+use crate::model::{LayerParams, Mlp};
+use crate::optim::{ConstantLr, CosineLr, LrBook, LrSchedule, Optimizer, Sgd};
 use crate::retiming::StagePartition;
-use crate::runtime::Engine;
 use crate::strategy::{LayerStrategy, StrategyKind};
 use crate::tensor::Tensor;
 use crate::util::{Rng, Stopwatch};
 use anyhow::{ensure, Context, Result};
 use std::collections::VecDeque;
+
+/// The learning-rate schedule a config implies (cosine over the full
+/// horizon, or constant). Shared by trainer and executor so both see
+/// identical rates.
+pub fn lr_schedule_for(cfg: &ExperimentConfig) -> Box<dyn LrSchedule> {
+    let steps_per_epoch = cfg.data.train_samples / cfg.model.batch;
+    let total_steps = steps_per_epoch * cfg.epochs;
+    if cfg.optim.cosine {
+        Box::new(CosineLr::new(cfg.optim.lr, cfg.optim.min_lr, total_steps.max(1)))
+    } else {
+        Box::new(ConstantLr(cfg.optim.lr))
+    }
+}
+
+/// Batched argmax accuracy of a parameter set over the test split, via
+/// the backend's full-network forward. Shared eval path for the trainer
+/// and the pipelined executor.
+pub fn evaluate_params(
+    exec: &dyn Exec,
+    layers: &[LayerParams],
+    batch: usize,
+    data: &Splits,
+) -> Result<f32> {
+    let n = data.test.len() / batch * batch;
+    ensure!(n > 0, "test set smaller than one batch");
+    let mut correct = 0usize;
+    for start in (0..n).step_by(batch) {
+        let idx: Vec<usize> = (start..start + batch).collect();
+        let (x, _) = data.test.batch(&idx);
+        let logits = exec.forward_full(&x, layers)?;
+        let c = logits.shape()[1];
+        for row in 0..batch {
+            let slice = &logits.data()[row * c..(row + 1) * c];
+            let mut arg = 0;
+            for (j, &v) in slice.iter().enumerate() {
+                if v > slice[arg] {
+                    arg = j;
+                }
+            }
+            if arg == data.test.labels[start + row] {
+                correct += 1;
+            }
+        }
+    }
+    Ok(correct as f32 / n as f32)
+}
 
 /// Per-layer training state.
 struct LayerState {
@@ -65,17 +117,14 @@ impl Inflight {
 }
 
 /// The pipelined trainer for one strategy.
-pub struct Trainer<'e> {
-    engine: &'e Engine,
+pub struct Trainer {
+    backend: Backend,
     pub mlp: Mlp,
     cfg: ExperimentConfig,
     kind: StrategyKind,
     partition: StagePartition,
     layers: Vec<LayerState>,
-    lr: Box<dyn LrSchedule>,
-    /// Prefix sums of lr over global steps: `lr_prefix[t] = Σ_{τ<t} lr(τ)`
-    /// (grown lazily) — gives exact `lr_sum` for Eq. 9 under schedules.
-    lr_prefix: Vec<f64>,
+    lr: LrBook,
     inflight: VecDeque<Inflight>,
     step: u64,
     peak_activation_bytes: usize,
@@ -83,26 +132,15 @@ pub struct Trainer<'e> {
     epoch_losses: Vec<f32>,
 }
 
-impl<'e> Trainer<'e> {
+impl Trainer {
     pub fn new(
-        engine: &'e Engine,
+        backend: Backend,
         cfg: &ExperimentConfig,
         kind: StrategyKind,
         rng: &mut Rng,
-    ) -> Result<Trainer<'e>> {
+    ) -> Result<Trainer> {
         cfg.validate()?;
-        let m = engine.manifest();
-        ensure!(
-            m.model.batch == cfg.model.batch
-                && m.model.input_dim == cfg.model.input_dim
-                && m.model.hidden_dim == cfg.model.hidden_dim
-                && m.model.classes == cfg.model.classes
-                && m.model.layers == cfg.model.layers,
-            "artifact preset {:?} does not match experiment model config {:?} — \
-             re-run `make artifacts` with the matching preset",
-            m.model,
-            cfg.model
-        );
+        backend.check_model(&cfg.model)?;
         let mlp = Mlp::init(&cfg.model, rng);
         // Sequential runs as a 1-stage pipeline (all delays zero).
         let stages = if kind.is_pipelined() { cfg.pipeline.stages } else { 1 };
@@ -119,22 +157,15 @@ impl<'e> Trainer<'e> {
                 }
             })
             .collect();
-        let steps_per_epoch = cfg.data.train_samples / cfg.model.batch;
-        let total_steps = steps_per_epoch * cfg.epochs;
-        let lr: Box<dyn LrSchedule> = if cfg.optim.cosine {
-            Box::new(CosineLr::new(cfg.optim.lr, cfg.optim.min_lr, total_steps.max(1)))
-        } else {
-            Box::new(ConstantLr(cfg.optim.lr))
-        };
+        let lr = LrBook::new(lr_schedule_for(cfg));
         Ok(Trainer {
-            engine,
+            backend,
             mlp,
             cfg: cfg.clone(),
             kind,
             partition,
             layers,
             lr,
-            lr_prefix: vec![0.0],
             inflight: VecDeque::new(),
             step: 0,
             peak_activation_bytes: 0,
@@ -146,31 +177,16 @@ impl<'e> Trainer<'e> {
         self.kind
     }
 
+    pub fn backend(&self) -> &dyn Exec {
+        self.backend.as_ref()
+    }
+
     pub fn partition(&self) -> &StagePartition {
         &self.partition
     }
 
     pub fn gradient_delays(&self) -> Vec<usize> {
         self.layers.iter().map(|l| l.delay).collect()
-    }
-
-    fn lr_at(&mut self, t: u64) -> f32 {
-        self.grow_prefix(t + 1);
-        self.lr.lr(t as usize)
-    }
-
-    fn grow_prefix(&mut self, upto: u64) {
-        while self.lr_prefix.len() <= upto as usize {
-            let t = self.lr_prefix.len() - 1;
-            let last = *self.lr_prefix.last().expect("nonempty");
-            self.lr_prefix.push(last + self.lr.lr(t) as f64);
-        }
-    }
-
-    /// `Σ lr(τ)` for `τ ∈ [t0, t1)` — the `lr_sum` of Eq. 9.
-    fn lr_sum(&mut self, t0: u64, t1: u64) -> f32 {
-        self.grow_prefix(t1);
-        (self.lr_prefix[t1 as usize] - self.lr_prefix[t0 as usize]) as f32
     }
 
     /// One pipelined iteration: forward batch `t` (if provided), then run
@@ -184,7 +200,7 @@ impl<'e> Trainer<'e> {
             let mut h = x;
             for l in 0..self.mlp.num_layers() {
                 self.layers[l].strategy.on_forward(t, &self.mlp.layers[l].w);
-                let y = self.mlp.forward_layer(self.engine, l, &h)?;
+                let y = self.mlp.forward_layer(self.backend.as_ref(), l, &h)?;
                 saved.push((h, y.clone()));
                 h = y;
             }
@@ -236,12 +252,12 @@ impl<'e> Trainer<'e> {
         let t0 = self.inflight[idx].t;
         let last = l + 1 == self.mlp.num_layers();
 
-        // Initial gradient from the loss artifact (last layer only).
+        // Initial gradient from the loss kernel (last layer only).
         if last {
             let rec = &self.inflight[idx];
             let logits = &rec.saved[l].1;
             let (loss, dlogits, _correct) =
-                self.mlp.loss_grad(self.engine, logits, &rec.onehot)?;
+                self.mlp.loss_grad(self.backend.as_ref(), logits, &rec.onehot)?;
             let rec = &mut self.inflight[idx];
             rec.loss = Some(loss);
             rec.dy = Some(dlogits);
@@ -254,11 +270,7 @@ impl<'e> Trainer<'e> {
         // cumulative-mean ramp (Eq. 7) holds exactly that many samples,
         // making reconstruction near-exact from the very first backward.
         let first_update = self.layers[l].delay as u64;
-        let lr_sum = self.lr_sum(t0.max(first_update), t_now);
-        let state = &self.layers[l];
-        let w_bwd = state
-            .strategy
-            .backward_weights(t0, &self.mlp.layers[l].w, lr_sum);
+        let lr_sum = self.lr.lr_sum(t0.max(first_update), t_now);
 
         // Move (not clone) the stashed activations and upstream gradient
         // out of the record: layer l's backward is their last consumer.
@@ -271,12 +283,18 @@ impl<'e> Trainer<'e> {
             let dy = rec.dy.take().expect("upstream gradient present");
             (x, y, dy)
         };
-        let (dx, dw, db) =
-            self.mlp.backward_layer_with(self.engine, l, &x, &y, &w_bwd, &dy)?;
+        let (dx, dw, db) = {
+            let state = &self.layers[l];
+            let w_bwd = state
+                .strategy
+                .backward_weights(t0, &self.mlp.layers[l].w, lr_sum);
+            self.mlp
+                .backward_layer_with(self.backend.as_ref(), l, &x, &y, &w_bwd, &dy)?
+        };
 
         // Apply immediately: the gradient lands d_l iterations after
         // launch, exactly the Eq. 1 staleness.
-        let lr = self.lr_at(t_now);
+        let lr = self.lr.lr(t_now);
         let state = &mut self.layers[l];
         let upd_w = state.opt_w.step(&mut self.mlp.layers[l].w, &dw, lr);
         let _upd_b = state.opt_b.step(&mut self.mlp.layers[l].b, &db, lr);
@@ -297,31 +315,9 @@ impl<'e> Trainer<'e> {
         Ok(())
     }
 
-    /// Test accuracy via the fused `fwd_full` artifact.
+    /// Test accuracy via the backend's full-network forward.
     pub fn evaluate(&self, data: &Splits) -> Result<f32> {
-        let b = self.cfg.model.batch;
-        let n = data.test.len() / b * b;
-        ensure!(n > 0, "test set smaller than one batch");
-        let mut correct = 0usize;
-        for start in (0..n).step_by(b) {
-            let idx: Vec<usize> = (start..start + b).collect();
-            let (x, _) = data.test.batch(&idx);
-            let logits = self.mlp.forward_full(self.engine, &x)?;
-            let c = logits.shape()[1];
-            for row in 0..b {
-                let slice = &logits.data()[row * c..(row + 1) * c];
-                let mut arg = 0;
-                for (j, &v) in slice.iter().enumerate() {
-                    if v > slice[arg] {
-                        arg = j;
-                    }
-                }
-                if arg == data.test.labels[start + row] {
-                    correct += 1;
-                }
-            }
-        }
-        Ok(correct as f32 / n as f32)
+        evaluate_params(self.backend.as_ref(), &self.mlp.layers, self.cfg.model.batch, data)
     }
 
     /// Peak staleness-handling bytes across layers (stash + EMA).
@@ -360,7 +356,7 @@ impl<'e> Trainer<'e> {
                 epoch,
                 train_loss,
                 test_accuracy,
-                lr: self.lr.lr(self.step as usize),
+                lr: self.lr.peek(self.step),
                 staleness_bytes: self.staleness_bytes(),
                 activation_bytes: self.peak_activation_bytes,
                 seconds: sw.elapsed_secs(),
@@ -379,9 +375,8 @@ impl<'e> Trainer<'e> {
     }
 }
 
-// Unit tests for scheduling logic use a mock-free path: they need the
-// Engine, so they live in rust/tests/ (integration). Pure helpers are
-// tested here.
+// Unit tests for the pure helpers; scheduling-semantics tests live in
+// rust/tests/ (integration) against the host backend.
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -397,5 +392,15 @@ mod tests {
             loss: None,
         };
         assert_eq!(rec.nbytes(), (4 + 4 + 8 + 4) * 4);
+    }
+
+    #[test]
+    fn lr_schedule_for_respects_cosine_flag() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.optim.cosine = false;
+        assert_eq!(lr_schedule_for(&cfg).lr(0), lr_schedule_for(&cfg).lr(999));
+        cfg.optim.cosine = true;
+        let s = lr_schedule_for(&cfg);
+        assert!(s.lr(0) > s.lr(100));
     }
 }

@@ -1,0 +1,142 @@
+//! Integration: the multi-threaded pipelined executor against the
+//! single-threaded iteration-indexed `Trainer` oracle.
+//!
+//! The executor runs one worker thread per stage, interleaving forward
+//! of batch `t` with the delayed backward of batch `t − d` and applying
+//! gradients stage-locally — the paper's schedule, physically executed.
+//! Because each stage performs the identical sequence of f32 operations
+//! as the oracle, the per-epoch loss curves must agree to tight
+//! tolerance (they are bit-identical in practice) for every Fig. 5
+//! strategy, per-layer and grouped partitions alike.
+//!
+//! Everything runs on the host backend so a clean checkout exercises the
+//! full concurrency machinery.
+
+use layerpipe2::backend::{Backend, HostBackend};
+use layerpipe2::config::{DataConfig, ExperimentConfig};
+use layerpipe2::data::teacher_dataset;
+use layerpipe2::metrics::RunCurve;
+use layerpipe2::pipeline::PipelinedTrainer;
+use layerpipe2::strategy::StrategyKind;
+use layerpipe2::train::Trainer;
+use layerpipe2::util::Rng;
+use std::sync::Arc;
+
+fn host() -> Backend {
+    Arc::new(HostBackend::new())
+}
+
+fn tiny_cfg(stages: usize, epochs: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model.batch = 8;
+    cfg.model.input_dim = 16;
+    cfg.model.hidden_dim = 12;
+    cfg.model.classes = 4;
+    cfg.model.layers = 4;
+    cfg.pipeline.stages = stages;
+    cfg.epochs = epochs;
+    cfg.data = DataConfig {
+        train_samples: 128,
+        test_samples: 64,
+        teacher_hidden: 10,
+        label_noise: 0.0,
+        seed: 17,
+    };
+    cfg
+}
+
+/// Train the same (config, strategy) on both engines with the identical
+/// seed discipline the coordinator uses.
+fn run_both(cfg: &ExperimentConfig, kind: StrategyKind) -> (RunCurve, RunCurve) {
+    let data = teacher_dataset(&cfg.model, &cfg.data);
+    let oracle = {
+        let mut rng = Rng::new(cfg.seed);
+        let mut t = Trainer::new(host(), cfg, kind, &mut rng).expect("oracle init");
+        let mut batch_rng = Rng::new(cfg.seed ^ 0x5EED_BA7C);
+        t.train(&data, &mut batch_rng).expect("oracle train")
+    };
+    let threaded = {
+        let mut rng = Rng::new(cfg.seed);
+        let mut ex = PipelinedTrainer::new(host(), cfg, kind, &mut rng).expect("executor init");
+        let mut batch_rng = Rng::new(cfg.seed ^ 0x5EED_BA7C);
+        ex.train(&data, &mut batch_rng).expect("executor train")
+    };
+    (oracle, threaded)
+}
+
+fn assert_curves_match(kind: StrategyKind, oracle: &RunCurve, threaded: &RunCurve, tol: f32) {
+    assert_eq!(oracle.epochs.len(), threaded.epochs.len(), "{kind:?}: epoch count");
+    for (e, (a, b)) in oracle.epochs.iter().zip(&threaded.epochs).enumerate() {
+        if a.train_loss.is_nan() || b.train_loss.is_nan() {
+            assert!(
+                a.train_loss.is_nan() && b.train_loss.is_nan(),
+                "{kind:?} epoch {e}: NaN mismatch ({} vs {})",
+                a.train_loss,
+                b.train_loss
+            );
+        } else {
+            assert!(
+                (a.train_loss - b.train_loss).abs() <= tol,
+                "{kind:?} epoch {e}: oracle loss {} vs executor {}",
+                a.train_loss,
+                b.train_loss
+            );
+        }
+        assert!(
+            (a.test_accuracy - b.test_accuracy).abs() <= tol,
+            "{kind:?} epoch {e}: oracle acc {} vs executor {}",
+            a.test_accuracy,
+            b.test_accuracy
+        );
+        assert_eq!(
+            a.staleness_bytes, b.staleness_bytes,
+            "{kind:?} epoch {e}: staleness accounting diverged"
+        );
+    }
+}
+
+#[test]
+fn executor_matches_oracle_for_all_five_strategies() {
+    // Per-layer pipelining (4 stages over 4 layers, delays [6,4,2,0]):
+    // the acceptance bar — every Fig. 5 strategy, loss curves within
+    // 1e-4 of the oracle under identical seeds and delays.
+    let cfg = tiny_cfg(4, 3);
+    for &kind in StrategyKind::all() {
+        let (oracle, threaded) = run_both(&cfg, kind);
+        assert_curves_match(kind, &oracle, &threaded, 1e-4);
+    }
+}
+
+#[test]
+fn executor_matches_oracle_on_grouped_partition() {
+    // 2 stages over 4 layers (delays [2,2,0,0]): grouped delays share a
+    // stage and the executor's per-stage workers each own two layers.
+    let cfg = tiny_cfg(2, 3);
+    for &kind in &[StrategyKind::Stashing, StrategyKind::PipelineAwareEma] {
+        let (oracle, threaded) = run_both(&cfg, kind);
+        assert_curves_match(kind, &oracle, &threaded, 1e-4);
+    }
+}
+
+#[test]
+fn executor_matches_oracle_with_warmup_epochs() {
+    // Warm-up toggling happens at epoch barriers; both engines must
+    // apply it to the same backwards.
+    let mut cfg = tiny_cfg(4, 3);
+    cfg.pipeline.warmup_epochs = 1;
+    let (oracle, threaded) = run_both(&cfg, StrategyKind::PipelineAwareEma);
+    assert_curves_match(StrategyKind::PipelineAwareEma, &oracle, &threaded, 1e-4);
+}
+
+#[test]
+fn executor_handles_delay_longer_than_an_epoch_tail() {
+    // 8 layers in 8 stages (max delay 14) with only 16 iterations per
+    // epoch: most of an epoch is pipeline fill, batches retire across
+    // epoch boundaries, and the final drain spans many idle iterations.
+    let mut cfg = tiny_cfg(4, 2);
+    cfg.model.layers = 8;
+    cfg.model.hidden_dim = 8;
+    cfg.pipeline.stages = 8;
+    let (oracle, threaded) = run_both(&cfg, StrategyKind::Stashing);
+    assert_curves_match(StrategyKind::Stashing, &oracle, &threaded, 1e-4);
+}

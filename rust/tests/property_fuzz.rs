@@ -194,3 +194,59 @@ fn schedule_and_partition_agree_for_all_shapes() {
         }
     });
 }
+
+#[test]
+fn ema_reconstruction_matches_stashed_weights_within_eq9_tolerance() {
+    // The paper's Eq. 9 claim, as a property over random delay
+    // assignments: reconstructing W(t−d) from the current weights plus
+    // the delay-matched EMA of applied updates must (a) be exact for a
+    // constant update stream, and (b) track the explicitly stashed
+    // version closely — and strictly better than using the latest
+    // weights — for a slowly-varying stream.
+    use layerpipe2::stash::WeightStash;
+    property(24, |rng, case| {
+        let d = 1 + rng.index(8);
+        let n = 4 + rng.index(8);
+        let lr = 0.03f32;
+        let jitter = if rng.chance(0.5) { 0.0 } else { 0.02 };
+        let base = Tensor::randn(&[n], 1.0, rng);
+        let mut w = Tensor::randn(&[n], 1.0, rng);
+        let mut stash = WeightStash::new(d + 1);
+        let mut ema = PipelineAwareEma::new(d);
+        let steps = (d as u64) + 4 + rng.index(30) as u64;
+        for t in 0..steps {
+            stash.push(t, &w);
+            let mut u = base.clone();
+            if jitter > 0.0 {
+                u.axpy(jitter, &Tensor::randn(&[n], 1.0, rng));
+            }
+            w.axpy(-lr, &u);
+            ema.push(&u);
+        }
+        // The backward for the batch launched at t = steps − d runs now:
+        // it needs W(steps − d), which stashing stored explicitly.
+        let target = stash
+            .get(steps - d as u64)
+            .unwrap_or_else(|| panic!("case {case}: stash must retain t-d"));
+        let lr_sum = lr * d as f32; // constant-lr Eq. 9 sum
+        let recon = ema.reconstruct(&w, lr_sum);
+        let recon_err = recon.max_abs_diff(target);
+        let latest_err = w.max_abs_diff(target);
+        if jitter == 0.0 {
+            assert!(
+                recon_err < 1e-4,
+                "case {case} d={d}: constant stream must reconstruct exactly, err {recon_err}"
+            );
+        } else {
+            assert!(
+                recon_err < 0.08,
+                "case {case} d={d}: reconstruction err {recon_err} beyond Eq. 9 tolerance"
+            );
+        }
+        // Reconstruction must not be worse than skipping it (latest).
+        assert!(
+            recon_err <= latest_err + 0.01,
+            "case {case} d={d}: recon {recon_err} much worse than latest {latest_err}"
+        );
+    });
+}

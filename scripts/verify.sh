@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate + lint. Run from anywhere; no artifacts, no
+# network, and no PJRT toolchain required — the default feature set is
+# fully self-contained (vendored anyhow, host backend).
+#
+#   scripts/verify.sh            # build + test + clippy
+#   scripts/verify.sh --pjrt     # additionally verify the pjrt feature
+#                                # (needs the xla dep enabled in Cargo.toml)
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo clippy -- -D warnings"
+cargo clippy -- -D warnings
+
+if [[ "${1:-}" == "--pjrt" ]]; then
+    echo "==> cargo build --release --features pjrt"
+    cargo build --release --features pjrt
+    echo "==> cargo test -q --features pjrt"
+    cargo test -q --features pjrt
+fi
+
+echo "verify: OK"
