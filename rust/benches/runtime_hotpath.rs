@@ -1,46 +1,136 @@
-//! HOTPATH bench: backend dispatch overhead + host kernel throughput.
+//! HOTPATH bench: backend dispatch overhead + host kernel throughput +
+//! hot-path allocation accounting.
 //!
 //! The perf deliverable's measurement harness, in three parts:
 //!
-//! 1. Host kernel GFLOP/s — the blocked (and, at size, row-parallel)
-//!    matmul plus the dense fwd/bwd kernels of the host backend. Runs
-//!    everywhere, no artifacts needed.
+//! 1. Host kernel GFLOP/s — each kernel benched twice: the allocating
+//!    form ("before") and the `_into`-reused-buffer form ("after"), with
+//!    allocations-per-iteration measured by a counting global allocator.
 //! 2. PJRT per-artifact dispatch latency — only when artifacts are
 //!    present and the crate was built with `--features pjrt`; skipped
 //!    with a note otherwise, so the bench binary stays useful on a
 //!    clean checkout.
 //! 3. Full pipelined train iterations on whatever backend
-//!    `LAYERPIPE2_BACKEND`/auto selects.
+//!    `LAYERPIPE2_BACKEND`/auto selects, with steady-state
+//!    allocations-per-iteration.
+//!
+//! Besides the human-readable tables, the run writes a machine-readable
+//! `BENCH_hotpath.json` (override the path with `LAYERPIPE2_BENCH_JSON`)
+//! so the perf trajectory is tracked across PRs. Set
+//! `LAYERPIPE2_BENCH_SMOKE=1` for a fast CI smoke run (reduced sizes and
+//! sample counts, same coverage).
 
 use layerpipe2::backend::{self, Exec, HostBackend};
 use layerpipe2::bench_util::{bench, print_header, print_row, BenchStats};
 use layerpipe2::config::ExperimentConfig;
 use layerpipe2::data::teacher_dataset;
 use layerpipe2::model::LayerRole;
+use layerpipe2::pipeline::PipelinedTrainer;
 use layerpipe2::runtime::Engine;
 use layerpipe2::strategy::StrategyKind;
 use layerpipe2::tensor::{self, Tensor};
 use layerpipe2::train::Trainer;
+use layerpipe2::util::json::Json;
 use layerpipe2::util::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
-fn print_gflops(stats: &BenchStats, flops_per_run: f64) {
+// ---- counting allocator (allocs/iter metric) --------------------------
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Run the warmup outside the counted region (pools and caches reach
+/// steady state), then bench while counting heap allocations.
+fn bench_counted<T>(
+    name: &str,
+    warmup: usize,
+    samples: usize,
+    mut f: impl FnMut() -> T,
+) -> (BenchStats, f64) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    let stats = bench(name, 0, samples, f);
+    let allocs = ALLOCS.load(Ordering::Relaxed) - a0;
+    (stats, allocs as f64 / samples as f64)
+}
+
+fn smoke() -> bool {
+    std::env::var_os("LAYERPIPE2_BENCH_SMOKE").is_some()
+}
+
+fn jnum(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn jobj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn print_gflops(stats: &BenchStats, flops_per_run: f64, allocs_per_iter: f64) {
     print_row(stats);
     println!(
-        "    -> {:.2} GFLOP/s (median)",
+        "    -> {:.2} GFLOP/s (median), {allocs_per_iter:.2} allocs/iter",
         flops_per_run / stats.median_s / 1e9
     );
 }
 
-fn host_kernel_section() {
-    print_header("HOTPATH-a: host kernel GFLOP/s (blocked matmul, row-parallel at size)");
+fn host_kernel_section(smoke: bool) -> Json {
+    print_header("HOTPATH-a: host kernels — allocating (before) vs _into reused buffer (after)");
+    let mut rows: Vec<Json> = Vec::new();
     let mut rng = Rng::new(3);
-    for &(m, k, n) in &[(64usize, 64usize, 64usize), (256, 256, 256), (512, 512, 512)] {
+    let sizes: &[(usize, usize, usize)] = if smoke {
+        &[(64, 64, 64), (256, 256, 256)]
+    } else {
+        &[(64, 64, 64), (256, 256, 256), (512, 512, 512)]
+    };
+    let samples = if smoke { 5 } else { 30 };
+    for &(m, k, n) in sizes {
         let a = Tensor::randn(&[m, k], 1.0, &mut rng);
         let b = Tensor::randn(&[k, n], 1.0, &mut rng);
-        let stats = bench(&format!("host matmul {m}x{k}x{n}"), 3, 30, || {
-            tensor::matmul(&a, &b)
-        });
-        print_gflops(&stats, 2.0 * (m * k * n) as f64);
+        let flops = 2.0 * (m * k * n) as f64;
+        let (s_alloc, n_alloc) =
+            bench_counted(&format!("host matmul {m}x{k}x{n} (alloc)"), 3, samples, || {
+                tensor::matmul(&a, &b)
+            });
+        print_gflops(&s_alloc, flops, n_alloc);
+        let mut out = Tensor::empty();
+        let (s_into, n_into) =
+            bench_counted(&format!("host matmul {m}x{k}x{n} (into)"), 3, samples, || {
+                tensor::matmul_into(&a, &b, &mut out)
+            });
+        print_gflops(&s_into, flops, n_into);
+        rows.push(jobj(vec![
+            ("case", Json::Str(format!("matmul_{m}x{k}x{n}"))),
+            ("gflops_alloc", jnum(flops / s_alloc.median_s / 1e9)),
+            ("gflops_into", jnum(flops / s_into.median_s / 1e9)),
+            ("ns_per_iter_into", jnum(s_into.median_s * 1e9)),
+            ("allocs_per_iter_alloc", jnum(n_alloc)),
+            ("allocs_per_iter_into", jnum(n_into)),
+        ]));
     }
 
     let host = HostBackend::new();
@@ -51,14 +141,59 @@ fn host_kernel_section() {
     let dy = Tensor::randn(&[bsz, h], 1.0, &mut rng);
     let y = host.forward(LayerRole::Hidden, &x, &w, &bias).unwrap();
     let fwd_flops = 2.0 * (bsz * h * h) as f64;
-    let stats = bench("host dense_fwd_hid (32x64x64 + bias + relu)", 20, 200, || {
+    let reps = if smoke { 40 } else { 200 };
+
+    let (s, n_alloc) = bench_counted("host dense_fwd_hid (alloc)", 20, reps, || {
         host.forward(LayerRole::Hidden, &x, &w, &bias).unwrap()
     });
-    print_gflops(&stats, fwd_flops);
-    let stats = bench("host dense_bwd_hid (dx,dw,db)", 20, 200, || {
+    print_gflops(&s, fwd_flops, n_alloc);
+    let mut fwd_out = Tensor::empty();
+    let (s_into, n_into) =
+        bench_counted("host dense_fwd_hid (into, fused bias+relu)", 20, reps, || {
+            host.forward_into(LayerRole::Hidden, &x, &w, &bias, &mut fwd_out).unwrap()
+        });
+    print_gflops(&s_into, fwd_flops, n_into);
+    rows.push(jobj(vec![
+        ("case", Json::Str("dense_fwd_hid_32x64x64".to_string())),
+        ("gflops_alloc", jnum(fwd_flops / s.median_s / 1e9)),
+        ("gflops_into", jnum(fwd_flops / s_into.median_s / 1e9)),
+        ("ns_per_iter_into", jnum(s_into.median_s * 1e9)),
+        ("allocs_per_iter_alloc", jnum(n_alloc)),
+        ("allocs_per_iter_into", jnum(n_into)),
+    ]));
+
+    let bwd_flops = 2.0 * fwd_flops; // dx + dw matmuls dominate
+    let (s, n_alloc) = bench_counted("host dense_bwd_hid (alloc)", 20, reps, || {
         host.backward(LayerRole::Hidden, &x, &y, &w, &dy).unwrap()
     });
-    print_gflops(&stats, 2.0 * fwd_flops); // dx + dw matmuls dominate
+    print_gflops(&s, bwd_flops, n_alloc);
+    let (mut scr, mut dxb, mut dwb, mut dbb) =
+        (Tensor::empty(), Tensor::empty(), Tensor::empty(), Tensor::empty());
+    let (s_into, n_into) =
+        bench_counted("host dense_bwd_hid (into, fused mask+colsum)", 20, reps, || {
+            host.backward_into(
+                LayerRole::Hidden,
+                &x,
+                &y,
+                &w,
+                &dy,
+                &mut scr,
+                &mut dxb,
+                &mut dwb,
+                &mut dbb,
+            )
+            .unwrap()
+        });
+    print_gflops(&s_into, bwd_flops, n_into);
+    rows.push(jobj(vec![
+        ("case", Json::Str("dense_bwd_hid_32x64x64".to_string())),
+        ("gflops_alloc", jnum(bwd_flops / s.median_s / 1e9)),
+        ("gflops_into", jnum(bwd_flops / s_into.median_s / 1e9)),
+        ("ns_per_iter_into", jnum(s_into.median_s * 1e9)),
+        ("allocs_per_iter_alloc", jnum(n_alloc)),
+        ("allocs_per_iter_into", jnum(n_into)),
+    ]));
+    Json::Arr(rows)
 }
 
 fn pjrt_section() {
@@ -98,16 +233,18 @@ fn pjrt_section() {
     );
 }
 
-fn train_iteration_section() {
+fn train_iteration_section(smoke: bool) -> Json {
     let backend = backend::from_env("artifacts").expect("backend selection");
     print_header(&format!(
-        "HOTPATH-c: full pipelined train iteration (8 stages, backend: {})",
+        "HOTPATH-c: pipelined train iteration (iteration-indexed oracle, 8-stage delays, backend: {})",
         backend.name()
     ));
     let mut ecfg = ExperimentConfig { epochs: 1, ..ExperimentConfig::default() };
     ecfg.data.train_samples = 512;
     ecfg.data.test_samples = 256;
     let data = teacher_dataset(&ecfg.model, &ecfg.data);
+    let mut rows: Vec<Json> = Vec::new();
+    let (warmup, reps) = if smoke { (3, 20) } else { (5, 100) };
     for kind in [
         StrategyKind::Sequential,
         StrategyKind::Stashing,
@@ -116,23 +253,80 @@ fn train_iteration_section() {
         let mut trng = Rng::new(1);
         let mut trainer = Trainer::new(backend.clone(), &ecfg, kind, &mut trng).unwrap();
         let (xb, oh) = data.train.batch(&(0..ecfg.model.batch).collect::<Vec<_>>());
-        // Prime the pipeline so steady-state iterations do fwd+bwd work.
-        for _ in 0..16 {
+        // Prime the pipeline past the deepest delay so steady-state
+        // iterations do fwd+bwd work on warmed pools.
+        for _ in 0..32 {
             trainer.iteration(Some((xb.clone(), oh.clone()))).unwrap();
         }
-        let s = bench(&format!("train_iteration/{}", kind.name()), 5, 100, || {
-            trainer.iteration(Some((xb.clone(), oh.clone()))).unwrap()
-        });
+        // Batches are cloned outside the counted region: feeding data is
+        // the loader's cost, not the iteration's.
+        let mut feed: Vec<(Tensor, Tensor)> =
+            (0..(warmup + reps)).map(|_| (xb.clone(), oh.clone())).collect();
+        feed.reverse();
+        let (s, allocs) =
+            bench_counted(&format!("train_iteration/{}", kind.name()), warmup, reps, || {
+                trainer.iteration(Some(feed.pop().expect("prefed batch"))).unwrap()
+            });
         print_row(&s);
+        println!("    -> {allocs:.2} allocs/iter (steady state)");
+        rows.push(jobj(vec![
+            ("strategy", Json::Str(kind.name().to_string())),
+            ("ns_per_iter", jnum(s.median_s * 1e9)),
+            ("allocs_per_iter", jnum(allocs)),
+        ]));
     }
     println!(
         "\nexec count served by backend this run: {}",
         backend.exec_count()
     );
+    Json::Arr(rows)
+}
+
+fn executor_pool_section(smoke: bool) -> Json {
+    let backend = backend::from_env("artifacts").expect("backend selection");
+    print_header(&format!(
+        "HOTPATH-d: threaded executor stage-pool reuse (8 stages, backend: {})",
+        backend.name()
+    ));
+    let mut ecfg = ExperimentConfig { epochs: if smoke { 1 } else { 2 }, ..ExperimentConfig::default() };
+    ecfg.data.train_samples = if smoke { 128 } else { 256 };
+    ecfg.data.test_samples = 64;
+    let data = teacher_dataset(&ecfg.model, &ecfg.data);
+    let mut rng = Rng::new(1);
+    let mut ex =
+        PipelinedTrainer::new(backend, &ecfg, StrategyKind::PipelineAwareEma, &mut rng).unwrap();
+    let mut batch_rng = Rng::new(5);
+    ex.train(&data, &mut batch_rng).expect("executor train");
+    let (hits, misses) = ex.pool_stats();
+    let served = hits as f64 * 100.0 / (hits + misses).max(1) as f64;
+    println!(
+        "  stage-pool takes: {hits} hits / {misses} misses ({served:.1}% served from recycled buffers)"
+    );
+    jobj(vec![
+        ("pool_hits", jnum(hits as f64)),
+        ("pool_misses", jnum(misses as f64)),
+        ("pool_served_pct", jnum(served)),
+    ])
 }
 
 fn main() {
-    host_kernel_section();
+    let smoke = smoke();
+    if smoke {
+        println!("[smoke mode: reduced sizes and sample counts]");
+    }
+    let kernels = host_kernel_section(smoke);
     pjrt_section();
-    train_iteration_section();
+    let train = train_iteration_section(smoke);
+    let executor = executor_pool_section(smoke);
+
+    let mut obj = BTreeMap::new();
+    obj.insert("bench".to_string(), Json::Str("runtime_hotpath".to_string()));
+    obj.insert("smoke".to_string(), Json::Bool(smoke));
+    obj.insert("host_kernels".to_string(), kernels);
+    obj.insert("train_iteration".to_string(), train);
+    obj.insert("executor_pool".to_string(), executor);
+    let path = std::env::var("LAYERPIPE2_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    std::fs::write(&path, Json::Obj(obj).to_string()).expect("write bench json");
+    println!("\nwrote {path}");
 }

@@ -6,6 +6,12 @@
 //! Paper shape to hold: speedup grows with stage count, bounded by the
 //! bottleneck stage; utilization stays high for balanced partitions;
 //! communication volume grows with boundaries.
+//!
+//! The threaded runtime section exercises the zero-allocation hot path:
+//! stage workers run `forward_into` on stage-local `BufferPool`s and the
+//! parallel matmuls dispatch to the persistent `WorkerPool` (no per-call
+//! thread spawns), so measured batches/sec reflect steady-state kernel
+//! cost rather than allocator/spawn churn.
 
 use layerpipe2::backend::{self, Exec};
 use layerpipe2::bench_util::print_table;

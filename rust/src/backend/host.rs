@@ -41,6 +41,23 @@ impl Exec for HostBackend {
     }
 
     fn forward(&self, role: LayerRole, x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
+        let mut out = Tensor::empty();
+        self.forward_into(role, x, w, b, &mut out)?;
+        Ok(out)
+    }
+
+    /// Fused dense forward: matmul into `out`, then one bias(+ReLU)
+    /// epilogue pass — bitwise identical to the matmul/add_bias/relu
+    /// composition, with zero allocations when `out` is a recycled
+    /// buffer.
+    fn forward_into(
+        &self,
+        role: LayerRole,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        out: &mut Tensor,
+    ) -> Result<()> {
         self.count();
         ensure!(
             x.ndim() == 2 && w.ndim() == 2 && b.ndim() == 1,
@@ -56,8 +73,9 @@ impl Exec for HostBackend {
             w.shape(),
             b.shape()
         );
-        let z = tensor::add_bias(&tensor::matmul(x, w), b);
-        Ok(if role.has_relu() { tensor::relu(&z) } else { z })
+        tensor::matmul_into(x, w, out);
+        tensor::bias_act_inplace(out, b, role.has_relu());
+        Ok(())
     }
 
     fn backward(
@@ -68,6 +86,28 @@ impl Exec for HostBackend {
         w: &Tensor,
         dy: &Tensor,
     ) -> Result<(Tensor, Tensor, Tensor)> {
+        let (mut scratch, mut dx, mut dw, mut db) =
+            (Tensor::empty(), Tensor::empty(), Tensor::empty(), Tensor::empty());
+        self.backward_into(role, x, y, w, dy, &mut scratch, &mut dx, &mut dw, &mut db)?;
+        Ok((dx, dw, db))
+    }
+
+    /// Fused dense backward: the ReLU mask and the bias-grad reduction
+    /// run as one streaming epilogue over `dy` (writing `dz` into
+    /// `scratch` and `db` together), then the two gradient matmuls fill
+    /// `dx`/`dw` — all into caller-owned buffers.
+    fn backward_into(
+        &self,
+        role: LayerRole,
+        x: &Tensor,
+        y: &Tensor,
+        w: &Tensor,
+        dy: &Tensor,
+        scratch: &mut Tensor,
+        dx: &mut Tensor,
+        dw: &mut Tensor,
+        db: &mut Tensor,
+    ) -> Result<()> {
         self.count();
         // Rank checks first: indexing shape()[1] below must never panic
         // (the backend contract is Err, not UB/panics, on bad shapes).
@@ -93,21 +133,27 @@ impl Exec for HostBackend {
             dy.shape()
         );
         // Pre-activation gradient: mask with the saved output for ReLU
-        // layers (y > 0 ⇔ the unit was active), pass-through otherwise.
-        let masked;
-        let dz = if role.has_relu() {
-            masked = tensor::relu_grad(y, dy);
-            &masked
+        // layers (y > 0 ⇔ the unit was active), pass-through otherwise;
+        // db streams out of the same pass.
+        let use_mask = role.has_relu();
+        if use_mask {
+            tensor::relu_grad_col_sum_into(y, dy, scratch, db);
         } else {
-            dy
-        };
-        let dx = tensor::matmul_nt(dz, w);
-        let dw = tensor::matmul_tn(x, dz);
-        let db = tensor::col_sum(dz);
-        Ok((dx, dw, db))
+            tensor::col_sum_into(dy, db);
+        }
+        let dz: &Tensor = if use_mask { scratch } else { dy };
+        tensor::matmul_nt_into(dz, w, dx);
+        tensor::matmul_tn_into(x, dz, dw);
+        Ok(())
     }
 
     fn loss_grad(&self, logits: &Tensor, onehot: &Tensor) -> Result<(f32, Tensor, f32)> {
+        let mut dl = Tensor::empty();
+        let (loss, correct) = self.loss_grad_into(logits, onehot, &mut dl)?;
+        Ok((loss, dl, correct))
+    }
+
+    fn loss_grad_into(&self, logits: &Tensor, onehot: &Tensor, dl: &mut Tensor) -> Result<(f32, f32)> {
         self.count();
         ensure!(
             logits.ndim() == 2 && logits.shape() == onehot.shape(),
@@ -115,7 +161,7 @@ impl Exec for HostBackend {
             logits.shape(),
             onehot.shape()
         );
-        Ok(tensor::softmax_xent_onehot(logits, onehot))
+        Ok(tensor::softmax_xent_onehot_into(logits, onehot, dl))
     }
 
     fn exec_count(&self) -> u64 {
@@ -185,6 +231,52 @@ mod tests {
         check(&dw, &w, "w");
         check(&db, &b, "b");
         check(&dx, &x, "x");
+    }
+
+    #[test]
+    fn into_variants_match_allocating_bitwise() {
+        // The allocating Exec methods delegate to the `_into` kernels,
+        // and `_into` outputs are fully overwritten — so results must be
+        // bit-identical even into dirty recycled buffers.
+        let mut rng = Rng::new(9);
+        let x = Tensor::randn(&[5, 6], 1.0, &mut rng);
+        let w = Tensor::randn(&[6, 4], 0.4, &mut rng);
+        let b = Tensor::randn(&[4], 0.1, &mut rng);
+        let dy = Tensor::randn(&[5, 4], 1.0, &mut rng);
+        let backend = be();
+        for role in [LayerRole::Hidden, LayerRole::Output] {
+            let y = backend.forward(role, &x, &w, &b).unwrap();
+            let mut y2 = Tensor::randn(&[2, 2], 3.0, &mut rng);
+            backend.forward_into(role, &x, &w, &b, &mut y2).unwrap();
+            assert_eq!(y, y2, "{role:?} forward");
+            let (dx, dw, db) = backend.backward(role, &x, &y, &w, &dy).unwrap();
+            let (mut scr, mut dx2, mut dw2, mut db2) = (
+                Tensor::randn(&[3], 1.0, &mut rng),
+                Tensor::randn(&[3], 1.0, &mut rng),
+                Tensor::randn(&[3], 1.0, &mut rng),
+                Tensor::randn(&[3], 1.0, &mut rng),
+            );
+            backend
+                .backward_into(role, &x, &y, &w, &dy, &mut scr, &mut dx2, &mut dw2, &mut db2)
+                .unwrap();
+            assert_eq!(dx, dx2, "{role:?} dx");
+            assert_eq!(dw, dw2, "{role:?} dw");
+            assert_eq!(db, db2, "{role:?} db");
+        }
+        let onehot = {
+            let mut oh = Tensor::zeros(&[5, 4]);
+            for i in 0..5 {
+                oh.set2(i, i % 4, 1.0);
+            }
+            oh
+        };
+        let logits = backend.forward(LayerRole::Output, &x, &w, &b).unwrap();
+        let (loss, dl, correct) = backend.loss_grad(&logits, &onehot).unwrap();
+        let mut dl2 = Tensor::randn(&[1], 1.0, &mut rng);
+        let (loss2, correct2) = backend.loss_grad_into(&logits, &onehot, &mut dl2).unwrap();
+        assert_eq!(loss, loss2);
+        assert_eq!(dl, dl2);
+        assert_eq!(correct, correct2);
     }
 
     #[test]

@@ -70,6 +70,60 @@ pub trait Exec: Send + Sync {
     /// `(loss, dlogits, argmax-correct row count)`.
     fn loss_grad(&self, logits: &Tensor, onehot: &Tensor) -> Result<(f32, Tensor, f32)>;
 
+    // ---- buffer-aware variants (hot-path memory discipline) -----------
+    //
+    // The `_into` methods write caller-owned outputs (resized in place)
+    // so trainers can run their steady-state loops on recycled
+    // workspaces. Default impls delegate to the allocating methods —
+    // backends like PJRT, whose outputs materialize device-side anyway,
+    // need not implement them; `HostBackend` overrides all three with
+    // fused allocation-free kernels.
+
+    /// [`Exec::forward`] into a caller-owned output buffer.
+    fn forward_into(
+        &self,
+        role: LayerRole,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        *out = self.forward(role, x, w, b)?;
+        Ok(())
+    }
+
+    /// [`Exec::backward`] into caller-owned gradient buffers. `scratch`
+    /// is a workspace for the pre-activation gradient `dz` (contents
+    /// unspecified on return); backends that don't need it ignore it.
+    #[allow(clippy::too_many_arguments)]
+    fn backward_into(
+        &self,
+        role: LayerRole,
+        x: &Tensor,
+        y: &Tensor,
+        w: &Tensor,
+        dy: &Tensor,
+        scratch: &mut Tensor,
+        dx: &mut Tensor,
+        dw: &mut Tensor,
+        db: &mut Tensor,
+    ) -> Result<()> {
+        let _ = scratch;
+        let (gx, gw, gb) = self.backward(role, x, y, w, dy)?;
+        *dx = gx;
+        *dw = gw;
+        *db = gb;
+        Ok(())
+    }
+
+    /// [`Exec::loss_grad`] with the logits gradient written into `dl`:
+    /// returns `(loss, argmax-correct row count)`.
+    fn loss_grad_into(&self, logits: &Tensor, onehot: &Tensor, dl: &mut Tensor) -> Result<(f32, f32)> {
+        let (loss, dlogits, correct) = self.loss_grad(logits, onehot)?;
+        *dl = dlogits;
+        Ok((loss, correct))
+    }
+
     /// Full-network forward (eval path). Backends with a fused artifact
     /// override this; the default chains [`Exec::forward`].
     fn forward_full(&self, x: &Tensor, layers: &[LayerParams]) -> Result<Tensor> {
@@ -148,5 +202,73 @@ mod tests {
     fn pjrt_without_feature_is_a_clear_error() {
         let err = load_pjrt("artifacts").unwrap_err();
         assert!(format!("{err:#}").contains("pjrt"));
+    }
+
+    /// Minimal backend that implements only the allocating methods — the
+    /// `_into` defaults must delegate so PJRT-style backends stay
+    /// correct without overrides.
+    struct AllocOnly(HostBackend);
+
+    impl Exec for AllocOnly {
+        fn name(&self) -> &'static str {
+            "alloc-only"
+        }
+
+        fn check_model(&self, cfg: &ModelConfig) -> Result<()> {
+            self.0.check_model(cfg)
+        }
+
+        fn forward(&self, role: LayerRole, x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
+            self.0.forward(role, x, w, b)
+        }
+
+        fn backward(
+            &self,
+            role: LayerRole,
+            x: &Tensor,
+            y: &Tensor,
+            w: &Tensor,
+            dy: &Tensor,
+        ) -> Result<(Tensor, Tensor, Tensor)> {
+            self.0.backward(role, x, y, w, dy)
+        }
+
+        fn loss_grad(&self, logits: &Tensor, onehot: &Tensor) -> Result<(f32, Tensor, f32)> {
+            self.0.loss_grad(logits, onehot)
+        }
+
+        fn exec_count(&self) -> u64 {
+            self.0.exec_count()
+        }
+    }
+
+    #[test]
+    fn into_defaults_delegate_to_allocating_methods() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(6);
+        let x = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let w = Tensor::randn(&[5, 4], 0.4, &mut rng);
+        let b = Tensor::randn(&[4], 0.1, &mut rng);
+        let dy = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let be = AllocOnly(HostBackend::new());
+        let role = LayerRole::Hidden;
+        let mut out = Tensor::empty();
+        be.forward_into(role, &x, &w, &b, &mut out).unwrap();
+        let y = be.forward(role, &x, &w, &b).unwrap();
+        assert_eq!(out, y);
+        let (mut scr, mut dx, mut dw, mut db) =
+            (Tensor::empty(), Tensor::empty(), Tensor::empty(), Tensor::empty());
+        be.backward_into(role, &x, &y, &w, &dy, &mut scr, &mut dx, &mut dw, &mut db).unwrap();
+        let (dx2, dw2, db2) = be.backward(role, &x, &y, &w, &dy).unwrap();
+        assert_eq!((dx, dw, db), (dx2, dw2, db2));
+        let mut onehot = Tensor::zeros(&[3, 4]);
+        for i in 0..3 {
+            onehot.set2(i, i, 1.0);
+        }
+        let mut dl = Tensor::empty();
+        let (loss, correct) = be.loss_grad_into(&y, &onehot, &mut dl).unwrap();
+        let (loss2, dl2, correct2) = be.loss_grad(&y, &onehot).unwrap();
+        assert_eq!((loss, correct), (loss2, correct2));
+        assert_eq!(dl, dl2);
     }
 }

@@ -45,11 +45,19 @@ pub trait GradientAverager: Send {
     /// paper Eq. 9 with `lr_sum = α(2n+1)`). Returns a copy of `current`
     /// when no samples exist yet (warm-up behaviour).
     fn reconstruct(&self, current: &Tensor, lr_sum: f32) -> Tensor {
-        let mut w = current.clone();
-        if let Some(g) = self.mean() {
-            w.axpy(lr_sum, g);
-        }
+        let mut w = Tensor::empty();
+        self.reconstruct_into(current, lr_sum, &mut w);
         w
+    }
+
+    /// [`GradientAverager::reconstruct`] without the allocation: copy +
+    /// axpy into a caller-owned buffer (the per-layer reconstruction
+    /// workspace of `strategy::LayerStrategy` on the hot path).
+    fn reconstruct_into(&self, current: &Tensor, lr_sum: f32, out: &mut Tensor) {
+        out.copy_from(current);
+        if let Some(g) = self.mean() {
+            out.axpy(lr_sum, g);
+        }
     }
 }
 
@@ -82,21 +90,26 @@ impl ExactWindow {
 
 impl GradientAverager for ExactWindow {
     fn push(&mut self, update: &Tensor) {
+        // Ring slots reuse their allocations once the window has filled
+        // (copy into the evicted slot, never a fresh clone), and the mean
+        // accumulator is recomputed in place — steady-state pushes are
+        // copy + axpy only (hot-path memory discipline).
         if self.buf.len() < self.window {
             self.buf.push(update.clone());
         } else {
-            self.buf[self.next] = update.clone();
+            self.buf[self.next].copy_from(update);
         }
         self.next = (self.next + 1) % self.window;
         self.count += 1;
         // Recompute the mean from the buffer (O(window·n)); exactness over
         // speed — the O(1)-memory EMA is the production path.
         let k = self.buf.len();
-        let mut m = Tensor::zeros(update.shape());
+        let mean = self.mean.get_or_insert_with(Tensor::empty);
+        mean.resize(update.shape());
+        mean.fill(0.0);
         for t in &self.buf {
-            m.axpy(1.0 / k as f32, t);
+            mean.axpy(1.0 / k as f32, t);
         }
-        self.mean = Some(m);
     }
 
     fn mean(&self) -> Option<&Tensor> {
@@ -344,6 +357,35 @@ mod tests {
         }
         assert!(exact.state_nbytes() >= 14 * upd.nbytes());
         assert_eq!(ema.state_nbytes(), upd.nbytes());
+    }
+
+    #[test]
+    fn exact_window_ring_reuse_keeps_sliding_mean_exact() {
+        // The ring slots are overwritten in place once the window fills;
+        // the sliding mean must stay exact far past the first wrap.
+        let mut w = ExactWindow::new(3);
+        for v in 1..=20u32 {
+            w.push(&t1(v as f32));
+            let k = v.min(3);
+            let lo = v - k + 1;
+            let expect: f32 = (lo..=v).map(|x| x as f32).sum::<f32>() / k as f32;
+            assert!((w.mean().unwrap().data()[0] - expect).abs() < 1e-5, "v={v}");
+        }
+        assert_eq!(w.count(), 20);
+        assert_eq!(w.state_nbytes(), 4 * 4, "3 slots + mean, all width 1");
+    }
+
+    #[test]
+    fn reconstruct_into_matches_reconstruct() {
+        let mut ema = PipelineAwareEma::new(4);
+        for v in [1.0, 2.0, 3.0] {
+            ema.push(&t1(v));
+        }
+        let cur = t1(10.0);
+        let a = ema.reconstruct(&cur, 0.7);
+        let mut b = t1(-99.0); // dirty buffer
+        ema.reconstruct_into(&cur, 0.7, &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -127,28 +127,17 @@ impl Mlp {
         exec.forward(self.layers[l].role, x, w, b)
     }
 
-    /// Backward one layer with an explicit weight version.
-    /// Returns `(dx, dw, db)`.
-    pub fn backward_layer_with(
+    /// Forward one layer into a caller-owned output buffer (the
+    /// backend's `_into` path — zero allocation with recycled buffers).
+    pub fn forward_layer_into(
         &self,
         exec: &dyn Exec,
         l: usize,
         x: &Tensor,
-        y: &Tensor,
-        w: &Tensor,
-        dy: &Tensor,
-    ) -> Result<(Tensor, Tensor, Tensor)> {
-        exec.backward(self.layers[l].role, x, y, w, dy)
-    }
-
-    /// Loss + initial gradient + #correct via the backend's loss kernel.
-    pub fn loss_grad(
-        &self,
-        exec: &dyn Exec,
-        logits: &Tensor,
-        onehot: &Tensor,
-    ) -> Result<(f32, Tensor, f32)> {
-        exec.loss_grad(logits, onehot)
+        out: &mut Tensor,
+    ) -> Result<()> {
+        let lp = &self.layers[l];
+        exec.forward_into(lp.role, x, &lp.w, &lp.b, out)
     }
 
     /// Full-network forward (eval path): one fused dispatch on backends

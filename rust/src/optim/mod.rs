@@ -18,9 +18,10 @@ use crate::tensor::Tensor;
 /// A first-order optimizer over one parameter tensor.
 pub trait Optimizer {
     /// Apply `grad` to `weights` at the current step with learning rate
-    /// `lr`. Returns the applied update vector `U` such that
-    /// `W_new = W_old − lr · U`.
-    fn step(&mut self, weights: &mut Tensor, grad: &Tensor, lr: f32) -> Tensor;
+    /// `lr`. Returns a borrow of the applied update vector `U` (owned by
+    /// the optimizer's state — no per-step clone on the hot path) such
+    /// that `W_new = W_old − lr · U`.
+    fn step(&mut self, weights: &mut Tensor, grad: &Tensor, lr: f32) -> &Tensor;
 
     /// Bytes of optimizer state (for the memory-footprint experiment).
     fn state_nbytes(&self) -> usize;
@@ -41,7 +42,7 @@ mod tests {
         for _ in 0..10 {
             let g = Tensor::randn(&[4], 1.0, &mut rng);
             let w_old = w.clone();
-            let u = sgd.step(&mut w, &g, 0.1);
+            let u = sgd.step(&mut w, &g, 0.1).clone();
             let mut recon = w.clone();
             recon.axpy(0.1, &u);
             assert!(recon.max_abs_diff(&w_old) < 1e-6);

@@ -24,7 +24,7 @@ impl Sgd {
 }
 
 impl Optimizer for Sgd {
-    fn step(&mut self, weights: &mut Tensor, grad: &Tensor, lr: f32) -> Tensor {
+    fn step(&mut self, weights: &mut Tensor, grad: &Tensor, lr: f32) -> &Tensor {
         assert_eq!(weights.shape(), grad.shape(), "sgd shape mismatch");
         let mu = self.momentum;
         let wd = self.weight_decay;
@@ -37,12 +37,14 @@ impl Optimizer for Sgd {
         {
             *v = mu * *v + (g + wd * w);
         }
-        // Applied update U = velocity; W ← W − lr·U.
+        // Applied update U = velocity; W ← W − lr·U. Returned by borrow:
+        // the EMA accumulators copy what they need, so the hot path pays
+        // no per-step clone.
         for (w, v) in weights.data_mut().iter_mut().zip(self.velocity.data().iter()) {
             *w -= lr * v;
         }
         self.steps += 1;
-        self.velocity.clone()
+        &self.velocity
     }
 
     fn state_nbytes(&self) -> usize {

@@ -37,7 +37,7 @@ use crate::model::{LayerParams, Mlp};
 use crate::optim::{LrBook, Optimizer, Sgd};
 use crate::retiming::StagePartition;
 use crate::strategy::{LayerStrategy, StrategyKind};
-use crate::tensor::Tensor;
+use crate::tensor::{BufferPool, Tensor};
 use crate::train::{evaluate_params, lr_schedule_for};
 use crate::util::{Rng, Stopwatch};
 use anyhow::{anyhow, Context, Result};
@@ -93,9 +93,15 @@ pub fn forward_throughput(
             .collect();
         handles.push(std::thread::spawn(move || -> Result<usize> {
             let mut count = 0usize;
+            // Stage-local recycling: inputs retire into the pool as each
+            // layer's output (pooled) replaces them — no steady-state
+            // allocation in the forward loop.
+            let mut pool = BufferPool::new();
             while let Ok(mut h) = rx.recv() {
                 for (w, b, role) in &params {
-                    h = backend.forward(*role, &h, w, b).context("stage forward")?;
+                    let mut y = pool.take(&[h.shape()[0], w.shape()[1]]);
+                    backend.forward_into(*role, &h, w, b, &mut y).context("stage forward")?;
+                    pool.recycle(std::mem::replace(&mut h, y));
                 }
                 count += 1;
                 if tx.send(h).is_err() {
@@ -172,10 +178,16 @@ struct StageLayer {
     strategy: LayerStrategy,
     opt_w: Sgd,
     opt_b: Sgd,
+    /// Persistent `_into` workspaces for this layer's weight/bias
+    /// gradients (overwritten every backward, never reallocated).
+    dw_buf: Tensor,
+    db_buf: Tensor,
 }
 
 /// Everything one stage thread owns: its layers, its slice of the lr
-/// bookkeeping, and the activations stashed for pending backwards.
+/// bookkeeping, the activations stashed for pending backwards, and the
+/// recycled-buffer workspaces that make its steady-state loop
+/// allocation-free.
 struct StageState {
     stage: usize,
     /// Layers in ascending global-layer order.
@@ -183,12 +195,22 @@ struct StageState {
     /// The stage's gradient delay `d_s = 2·(K − 1 − s)`.
     delay: u64,
     lr: LrBook,
-    /// FIFO of `(t, per-layer (input, output))` awaiting backward.
-    saved: VecDeque<(u64, Vec<(Tensor, Tensor)>)>,
+    /// FIFO of `(t, activation chain)` awaiting backward: `chain[0]` is
+    /// the stage input, `chain[i + 1]` is stage-local layer `i`'s output
+    /// (each stored once).
+    saved: VecDeque<(u64, Vec<Tensor>)>,
     saved_bytes: usize,
     peak_saved_bytes: usize,
     /// Last stage only: `(t, loss)` records awaiting epoch attribution.
     losses: VecDeque<(u64, f32)>,
+    /// Stage-local recycled tensor storage. Gradients arriving from
+    /// downstream retire into this pool while same-shaped outputs are
+    /// drawn from it — flows balance in steady state.
+    pool: BufferPool,
+    /// Pre-activation-gradient workspace shared across layer backwards.
+    scratch: Tensor,
+    /// Emptied activation-chain Vecs, reused by the forward lane.
+    spare_chains: Vec<Vec<Tensor>>,
 }
 
 impl StageState {
@@ -251,6 +273,9 @@ impl PipelinedTrainer {
                 saved_bytes: 0,
                 peak_saved_bytes: 0,
                 losses: VecDeque::new(),
+                pool: BufferPool::new(),
+                scratch: Tensor::empty(),
+                spare_chains: Vec::new(),
             })
             .collect();
         for (l, lp) in mlp.layers.into_iter().enumerate() {
@@ -264,6 +289,8 @@ impl PipelinedTrainer {
                 strategy: LayerStrategy::new(kind, delays[l]),
                 opt_w: Sgd::new(&[din, dout], cfg.optim.momentum, cfg.optim.weight_decay),
                 opt_b: Sgd::new(&[dout], cfg.optim.momentum, 0.0),
+                dw_buf: Tensor::empty(),
+                db_buf: Tensor::empty(),
             });
         }
 
@@ -326,14 +353,25 @@ impl PipelinedTrainer {
             .sum()
     }
 
+    /// `(hits, misses)` summed over the stage buffer pools — the
+    /// executor's allocs-per-iteration proxy: steady-state takes are
+    /// pool hits (no allocation); misses happen only while the pools
+    /// warm up during pipeline fill.
+    pub fn pool_stats(&self) -> (u64, u64) {
+        self.stages
+            .iter()
+            .fold((0, 0), |(h, m), st| (h + st.pool.hits(), m + st.pool.misses()))
+    }
+
     /// Peak bytes of stage-local activation stash, summed over stages.
     ///
-    /// Accounting note: this counts the per-layer `(input, output)`
-    /// pairs each stage holds for pending backwards. The oracle
-    /// `Trainer` additionally counts each in-flight record's one-hot
-    /// labels and the gradient flowing down its backward chain, so the
-    /// `activation_bytes` metric is *not* comparable across the two
-    /// engines (loss, accuracy and staleness bytes are).
+    /// Accounting note: this counts the activation chains (stage input +
+    /// one output per layer, each stored once) each stage holds for
+    /// pending backwards. The oracle `Trainer` additionally counts each
+    /// in-flight record's one-hot labels and the gradient flowing down
+    /// its backward chain, so the `activation_bytes` metric is *not*
+    /// comparable across the two engines (loss, accuracy and staleness
+    /// bytes are).
     pub fn peak_activation_bytes(&self) -> usize {
         self.stages.iter().map(|st| st.peak_saved_bytes).sum()
     }
@@ -548,7 +586,7 @@ fn stage_span_loop(
     for t in t0..t1 {
         // ---- forward lane -------------------------------------------
         if t < fwd_end {
-            let mut h = match &links.act_in {
+            let h_in = match &links.act_in {
                 Some(rx) => {
                     let (tin, h) = rx
                         .recv()
@@ -558,23 +596,35 @@ fn stage_span_loop(
                 }
                 None => xs_it.next().expect("feeder batch present"),
             };
-            let mut saved = Vec::with_capacity(st.layers.len());
+            // Recycled chain Vec + pooled outputs: steady-state forwards
+            // allocate nothing (hot-path memory discipline).
+            let mut acts = st.spare_chains.pop().unwrap_or_default();
+            debug_assert!(acts.is_empty());
+            acts.reserve(st.layers.len() + 1);
+            acts.push(h_in);
             for sl in st.layers.iter_mut() {
                 sl.strategy.on_forward(t, &sl.params.w);
-                let y = backend.forward(sl.params.role, &h, &sl.params.w, &sl.params.b)?;
-                saved.push((h, y.clone()));
-                h = y;
+                let rows = acts.last().expect("chain nonempty").shape()[0];
+                let mut y = st.pool.take(&[rows, sl.params.w.shape()[1]]);
+                backend.forward_into(
+                    sl.params.role,
+                    acts.last().expect("chain nonempty"),
+                    &sl.params.w,
+                    &sl.params.b,
+                    &mut y,
+                )?;
+                acts.push(y);
             }
-            st.saved_bytes += saved
-                .iter()
-                .map(|(a, b)| a.nbytes() + b.nbytes())
-                .sum::<usize>();
+            st.saved_bytes += acts.iter().map(Tensor::nbytes).sum::<usize>();
             st.peak_saved_bytes = st.peak_saved_bytes.max(st.saved_bytes);
-            st.saved.push_back((t, saved));
             if let Some(tx) = &links.act_out {
-                tx.send((t, h))
+                // The stash keeps the original; downstream gets a pooled
+                // copy (one copy per stage boundary, not per layer).
+                let out = st.pool.take_copy(acts.last().expect("chain nonempty"));
+                tx.send((t, out))
                     .map_err(|_| anyhow!("stage {s}: downstream closed at act {t}"))?;
             }
+            st.saved.push_back((t, acts));
         }
 
         // ---- backward lane ------------------------------------------
@@ -583,12 +633,13 @@ fn stage_span_loop(
         }
         let tb = t - st.delay;
         let mut dy = if last {
-            let (_, saved) = st.saved.front().expect("logits saved for loss");
-            let logits = &saved.last().expect("output layer activation").1;
+            let (_, chain) = st.saved.front().expect("logits saved for loss");
+            let logits = chain.last().expect("output layer activation");
             let onehot = oh_it.next().expect("onehot batch present");
-            let (loss, dlogits, _correct) = backend.loss_grad(logits, &onehot)?;
+            let mut dl = st.pool.take(logits.shape());
+            let (loss, _correct) = backend.loss_grad_into(logits, &onehot, &mut dl)?;
             st.losses.push_back((tb, loss));
-            dlogits
+            dl
         } else {
             let (tg, g) = links
                 .grad_in
@@ -599,32 +650,57 @@ fn stage_span_loop(
             debug_assert_eq!(tg, tb, "gradient arrived out of order");
             g
         };
-        let (tb2, acts) = st.saved.pop_front().expect("stashed activations for backward");
+        let (tb2, mut acts) = st.saved.pop_front().expect("stashed activations for backward");
         debug_assert_eq!(tb2, tb, "activation stash out of order");
-        st.saved_bytes -= acts
-            .iter()
-            .map(|(a, b)| a.nbytes() + b.nbytes())
-            .sum::<usize>();
+        st.saved_bytes -= acts.iter().map(Tensor::nbytes).sum::<usize>();
         // Every layer of the stage shares the delay, so the Eq. 9 lr sum
         // (spanning only iterations where the layer actually updated —
         // updates start at iteration d_s) and the step lr are uniform.
         let lr_sum = st.lr.lr_sum(tb.max(st.delay), t);
         let lr = st.lr.lr(t);
-        // Layers top-down, exactly as the oracle's backward chain.
-        for (sl, (x, y)) in st.layers.iter_mut().rev().zip(acts.into_iter().rev()) {
-            let (dx, dw, db) = {
-                let w_bwd = sl.strategy.backward_weights(tb, &sl.params.w, lr_sum);
-                backend.backward(sl.params.role, &x, &y, &w_bwd, &dy)?
-            };
-            let upd_w = sl.opt_w.step(&mut sl.params.w, &dw, lr);
-            let _upd_b = sl.opt_b.step(&mut sl.params.b, &db, lr);
-            sl.strategy.on_update(&upd_w);
-            dy = dx;
+        // Layers top-down, exactly as the oracle's backward chain. Each
+        // layer's output is popped off the chain (its last consumer);
+        // spent gradients and outputs retire into the stage pool.
+        for sl in st.layers.iter_mut().rev() {
+            let y = acts.pop().expect("layer output present");
+            let mut dx = st.pool.take(acts.last().expect("layer input present").shape());
+            let StageLayer { params, strategy, opt_w, opt_b, dw_buf, db_buf } = sl;
+            let w_bwd = strategy.backward_weights(tb, &params.w, lr_sum);
+            backend.backward_into(
+                params.role,
+                acts.last().expect("layer input present"),
+                &y,
+                w_bwd,
+                &dy,
+                &mut st.scratch,
+                &mut dx,
+                dw_buf,
+                db_buf,
+            )?;
+            let upd_w = opt_w.step(&mut params.w, dw_buf, lr);
+            strategy.on_update(upd_w);
+            opt_b.step(&mut params.b, db_buf, lr);
+            st.pool.recycle(y);
+            let spent = std::mem::replace(&mut dy, dx);
+            st.pool.recycle(spent);
         }
         if let Some(tx) = &links.grad_out {
             tx.send((tb, dy))
                 .map_err(|_| anyhow!("stage {s}: upstream closed at grad {tb}"))?;
+        } else {
+            st.pool.recycle(dy);
         }
+        // The remaining chain entry is the stage input: retire it into
+        // the pool when it came from upstream (pooled there), or drop it
+        // when it is a feeder batch (owned by the epoch's input vec —
+        // recycling those would grow the pool by one batch per iteration
+        // up to the cap for no reuse benefit).
+        for a in acts.drain(..) {
+            if links.act_in.is_some() {
+                st.pool.recycle(a);
+            }
+        }
+        st.spare_chains.push(acts);
     }
     Ok(())
 }
@@ -688,6 +764,30 @@ mod tests {
             assert!(st.saved.is_empty(), "stage {} stash not drained", st.stage);
         }
         assert!(curve.final_accuracy() > 0.0);
+    }
+
+    #[test]
+    fn executor_steady_state_is_pool_served() {
+        // The zero-allocation discipline, asserted for the *threaded*
+        // executor: after a few epochs, buffer-pool hits (recycled
+        // storage, no allocation) must dominate misses (fresh
+        // allocations, which only happen while the stage pools warm up
+        // during pipeline fill).
+        let mut cfg = tiny_cfg();
+        cfg.epochs = 4;
+        let data = teacher_dataset(&cfg.model, &cfg.data);
+        let mut rng = Rng::new(cfg.seed);
+        let mut ex =
+            PipelinedTrainer::new(backend(), &cfg, StrategyKind::PipelineAwareEma, &mut rng)
+                .unwrap();
+        let mut batch_rng = Rng::new(5);
+        ex.train(&data, &mut batch_rng).unwrap();
+        let (hits, misses) = ex.pool_stats();
+        assert!(hits > 0, "stage pools never served a take");
+        assert!(
+            hits >= 3 * misses,
+            "stage pools not steady: {hits} hits vs {misses} misses"
+        );
     }
 
     #[test]

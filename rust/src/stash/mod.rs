@@ -37,9 +37,15 @@ impl WeightStash {
         if let Some(&(last, _)) = self.entries.back() {
             assert!(t > last, "stash pushes must be in increasing order ({t} after {last})");
         }
-        self.entries.push_back((t, w.clone()));
-        while self.entries.len() > self.capacity {
-            self.entries.pop_front();
+        if self.entries.len() == self.capacity {
+            // At capacity, recycle the evicted version's allocation
+            // instead of cloning (hot-path memory discipline: steady-
+            // state stashing pushes are a copy, not an allocation).
+            let (_, mut slot) = self.entries.pop_front().expect("nonempty at capacity");
+            slot.copy_from(w);
+            self.entries.push_back((t, slot));
+        } else {
+            self.entries.push_back((t, w.clone()));
         }
         self.peak_nbytes = self.peak_nbytes.max(self.nbytes());
     }

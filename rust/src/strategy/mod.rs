@@ -93,6 +93,11 @@ pub struct LayerStrategy {
     /// While `true`, EMA strategies fall back to latest weights (the
     /// paper's warm-up period during which the averages stabilize).
     warmup: bool,
+    /// Persistent workspace for EMA weight reconstruction: reused every
+    /// backward, so the hot path performs copy + axpy with zero
+    /// allocation. A scratch buffer, not state — excluded from the
+    /// staleness-byte accounting.
+    recon_buf: Tensor,
 }
 
 impl LayerStrategy {
@@ -111,7 +116,7 @@ impl LayerStrategy {
             }
             _ => None,
         };
-        LayerStrategy { kind, delay, stash, averager, warmup: false }
+        LayerStrategy { kind, delay, stash, averager, warmup: false, recon_buf: Tensor::empty() }
     }
 
     pub fn kind(&self) -> StrategyKind {
@@ -141,40 +146,31 @@ impl LayerStrategy {
     /// rates over the `delay` intervening optimizer steps (Eq. 9's
     /// `α(2n+1)` term under a constant lr, exact under schedules).
     ///
-    /// Returns a borrow whenever the version already exists (latest /
-    /// stashed) — the hot path performs zero copies for those
-    /// strategies; only EMA reconstruction materializes a new tensor.
-    pub fn backward_weights<'a>(
-        &'a self,
-        t: u64,
-        current: &'a Tensor,
-        lr_sum: f32,
-    ) -> std::borrow::Cow<'a, Tensor> {
-        use std::borrow::Cow;
+    /// Always returns a borrow: latest/stashed versions already exist,
+    /// and EMA reconstruction writes into the strategy's persistent
+    /// workspace — the hot path never allocates here.
+    pub fn backward_weights<'a>(&'a mut self, t: u64, current: &'a Tensor, lr_sum: f32) -> &'a Tensor {
         if self.delay == 0 {
-            return Cow::Borrowed(current);
+            return current;
         }
         match self.kind {
-            StrategyKind::Sequential | StrategyKind::Latest => Cow::Borrowed(current),
+            StrategyKind::Sequential | StrategyKind::Latest => current,
             StrategyKind::Stashing => {
                 let stash = self.stash.as_ref().expect("stashing strategy has a stash");
-                Cow::Borrowed(stash.get(t).unwrap_or_else(|| {
+                stash.get(t).unwrap_or_else(|| {
                     panic!(
                         "weight stash miss: iteration {t} not retained (oldest {:?})",
                         stash.oldest()
                     )
-                }))
+                })
             }
             StrategyKind::FixedEma | StrategyKind::PipelineAwareEma => {
                 if self.warmup {
-                    Cow::Borrowed(current)
+                    current
                 } else {
-                    Cow::Owned(
-                        self.averager
-                            .as_ref()
-                            .expect("ema strategy has an averager")
-                            .reconstruct(current, lr_sum),
-                    )
+                    let avg = self.averager.as_ref().expect("ema strategy has an averager");
+                    avg.reconstruct_into(current, lr_sum, &mut self.recon_buf);
+                    &self.recon_buf
                 }
             }
         }

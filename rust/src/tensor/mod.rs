@@ -6,8 +6,12 @@
 //! reference matmul used by tests to cross-check the PJRT path.
 
 mod ops;
+pub mod pool;
+pub mod workers;
 
 pub use ops::*;
+pub use pool::BufferPool;
+pub use workers::WorkerPool;
 
 /// Dense row-major `f32` tensor with explicit shape.
 #[derive(Clone, Debug, PartialEq)]
@@ -28,6 +32,40 @@ impl Tensor {
         let n: usize = shape.iter().product();
         assert_eq!(n, data.len(), "shape {shape:?} needs {n} elems, got {}", data.len());
         Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Allocation-free placeholder (no shape, no data). Used as the
+    /// `mem::replace` filler for consumed stash slots and as the initial
+    /// value of `_into`-kernel outputs, which resize it on first write.
+    /// Only `len()`/`is_empty()`/`nbytes()` are meaningful on it.
+    pub fn empty() -> Self {
+        Tensor { shape: Vec::new(), data: Vec::new() }
+    }
+
+    /// Reshape in place, reusing the backing store when the element count
+    /// matches (the `_into`-kernel output contract). Grown elements are
+    /// zero-initialized; existing elements keep their (stale) values —
+    /// callers must overwrite or [`Tensor::fill`].
+    pub fn resize(&mut self, shape: &[usize]) {
+        let n: usize = shape.iter().product();
+        if self.shape.as_slice() != shape {
+            self.shape.clear();
+            self.shape.extend_from_slice(shape);
+        }
+        if self.data.len() != n {
+            self.data.resize(n, 0.0);
+        }
+    }
+
+    /// `self = src`, reusing the existing allocation when sizes match.
+    pub fn copy_from(&mut self, src: &Tensor) {
+        self.resize(&src.shape);
+        self.data.copy_from_slice(&src.data);
+    }
+
+    /// Set every element to `v`.
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
     }
 
     /// i.i.d. normal entries with standard deviation `std`.
@@ -173,6 +211,23 @@ mod tests {
             t.data().iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / t.len() as f32;
         assert!(mean.abs() < 0.02, "mean {mean}");
         assert!((var - 0.25).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn resize_copy_fill_reuse_storage() {
+        let mut t = Tensor::empty();
+        assert!(t.is_empty());
+        t.resize(&[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+        t.fill(7.0);
+        let src = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        t.copy_from(&src);
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.data(), src.data());
+        // Shrinking then regrowing keeps contents well-defined.
+        t.resize(&[2]);
+        assert_eq!(t.data(), &[1.0, 2.0]);
     }
 
     #[test]

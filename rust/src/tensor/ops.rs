@@ -1,47 +1,57 @@
 //! Host tensor kernels: the compute substrate of the pure-Rust backend.
 //!
-//! Originally these were cross-check oracles for the PJRT path; with the
-//! [`crate::backend::HostBackend`] they are also a real execution path,
-//! so the forward kernels are joined by the backward set (matmul with
-//! transposed operands, bias-grad reduction, ReLU mask, softmax-CE
-//! loss/grad) and the blocked matmul parallelizes across row blocks with
-//! `std::thread::scope` once shapes are large enough to amortize spawns.
-//! Results are bit-identical across thread counts: each row of `C` is
-//! always accumulated in the same block order by exactly one thread.
+//! Every kernel comes in two forms: an `_into` variant that writes a
+//! caller-owned output (resizing it in place — combined with
+//! [`super::BufferPool`] the hot path allocates nothing), and an
+//! allocating wrapper that delegates to it, so the two are bitwise
+//! identical by construction. The blocked matmuls run i-k-j inside fixed
+//! `BLK`-edge cache blocks with tight, autovectorizer-friendly inner
+//! loops, and parallelize across row chunks on the persistent
+//! [`super::WorkerPool`] (no per-call thread spawns) once shapes are
+//! large enough to amortize the queue handoff. Results are bit-identical
+//! across worker counts: each row of `C` is always accumulated in the
+//! same block order by exactly one task.
 
+use super::workers::{self, Task};
 use super::Tensor;
 
 /// Cache-block edge for the matmul kernels.
 const BLK: usize = 32;
 
 /// Below this many multiply-adds the blocked matmul stays single-threaded
-/// (thread spawn + join costs more than the kernel itself).
+/// (the queue handoff costs more than the kernel itself).
 const PAR_MIN_MADDS: usize = 1 << 20;
 
-/// Worker count for the parallel matmul: the machine's parallelism,
-/// clamped so tiny matrices never see degenerate row chunks.
-fn matmul_threads(m: usize) -> usize {
-    let hw = std::thread::available_parallelism().map_or(1, |n| n.get());
-    hw.min(m.div_ceil(BLK)).max(1)
+/// Worker count for a matmul of `m·k·n` multiply-adds: 1 below the
+/// parallel threshold — WITHOUT touching the worker pool, so
+/// serial-sized matmuls never spawn it — else the pool's parallelism
+/// clamped so tiny row counts don't produce degenerate chunks.
+fn matmul_threads(m: usize, k: usize, n: usize) -> usize {
+    if m * k * n < PAR_MIN_MADDS {
+        return 1;
+    }
+    workers::pool_size().min(m.div_ceil(BLK)).max(1)
 }
 
-/// Blocked kernel over the row range `[i0, i0 + rows)` of `A`, writing the
-/// matching rows of `C` (passed as the disjoint slice `cd`).
+/// Blocked i-k-j kernel over the row range `[i0, i0 + rows)` of `A`,
+/// writing the matching rows of `C` (passed as the disjoint slice `cd`,
+/// which must be zero-initialized — the kernel accumulates).
 fn matmul_rows(ad: &[f32], bd: &[f32], cd: &mut [f32], i0: usize, rows: usize, k: usize, n: usize) {
     for ib in (0..rows).step_by(BLK) {
+        let i1 = (ib + BLK).min(rows);
         for k0 in (0..k).step_by(BLK) {
+            let k1 = (k0 + BLK).min(k);
             for j0 in (0..n).step_by(BLK) {
-                let i1 = (ib + BLK).min(rows);
-                let k1 = (k0 + BLK).min(k);
                 let j1 = (j0 + BLK).min(n);
                 for i in ib..i1 {
+                    let arow = &ad[(i0 + i) * k..(i0 + i) * k + k];
+                    let crow = &mut cd[i * n + j0..i * n + j1];
                     for kk in k0..k1 {
-                        let aik = ad[(i0 + i) * k + kk];
+                        let aik = arow[kk];
                         if aik == 0.0 {
                             continue;
                         }
                         let brow = &bd[kk * n + j0..kk * n + j1];
-                        let crow = &mut cd[i * n + j0..i * n + j1];
                         for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
                             *cv += aik * bv;
                         }
@@ -52,33 +62,53 @@ fn matmul_rows(ad: &[f32], bd: &[f32], cd: &mut [f32], i0: usize, rows: usize, k
     }
 }
 
-/// `C = A @ B` for 2-D tensors, blocked for locality and parallelized
-/// across row blocks for large shapes (no extra dependencies —
-/// `std::thread::scope` only).
-pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+/// `C = A @ B` into `out` (resized in place), blocked for locality and
+/// parallelized across row chunks on the persistent worker pool for
+/// large shapes.
+pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    assert_eq!(a.ndim(), 2, "matmul lhs must be 2-D");
+    assert_eq!(b.ndim(), 2, "matmul rhs must be 2-D");
+    let threads = matmul_threads(a.shape()[0], a.shape()[1], b.shape()[1]);
+    matmul_into_with_threads(a, b, out, threads);
+}
+
+/// [`matmul_into`] with an explicit worker count — exposed so tests and
+/// benches can prove the fp result is bit-identical for every `threads`
+/// value (the row partition depends on `threads`, the per-row
+/// accumulation order never does).
+pub fn matmul_into_with_threads(a: &Tensor, b: &Tensor, out: &mut Tensor, threads: usize) {
     assert_eq!(a.ndim(), 2, "matmul lhs must be 2-D");
     assert_eq!(b.ndim(), 2, "matmul rhs must be 2-D");
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let (k2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
-    let mut c = Tensor::zeros(&[m, n]);
+    out.resize(&[m, n]);
+    out.fill(0.0);
     let (ad, bd) = (a.data(), b.data());
-    let cd = c.data_mut();
-    let threads = matmul_threads(m);
-    if m * k * n < PAR_MIN_MADDS || threads == 1 {
+    let cd = out.data_mut();
+    if m * k * n < PAR_MIN_MADDS || threads <= 1 {
         matmul_rows(ad, bd, cd, 0, m, k, n);
-        return c;
+        return;
     }
     // Row chunks aligned to the cache block so per-row accumulation order
-    // (and thus the fp result) is independent of the thread count.
+    // (and thus the fp result) is independent of the worker count.
     let rows_per = m.div_ceil(threads).div_ceil(BLK) * BLK;
-    std::thread::scope(|scope| {
-        for (chunk_idx, c_chunk) in cd.chunks_mut(rows_per * n).enumerate() {
+    let tasks: Vec<Task<'_>> = cd
+        .chunks_mut(rows_per * n)
+        .enumerate()
+        .map(|(chunk_idx, c_chunk)| {
             let i0 = chunk_idx * rows_per;
             let rows = c_chunk.len() / n;
-            scope.spawn(move || matmul_rows(ad, bd, c_chunk, i0, rows, k, n));
-        }
-    });
+            Box::new(move || matmul_rows(ad, bd, c_chunk, i0, rows, k, n)) as Task<'_>
+        })
+        .collect();
+    workers::global().run(tasks);
+}
+
+/// `C = A @ B` for 2-D tensors (allocating wrapper over [`matmul_into`]).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let mut c = Tensor::empty();
+    matmul_into(a, b, &mut c);
     c
 }
 
@@ -98,38 +128,54 @@ fn matmul_nt_rows(ad: &[f32], bd: &[f32], cd: &mut [f32], i0: usize, rows: usize
     }
 }
 
-/// `C = A @ Bᵀ` with `A: [m, k]`, `B: [n, k]` → `C: [m, n]`.
+/// `C = A @ Bᵀ` into `out`, with `A: [m, k]`, `B: [n, k]` → `C: [m, n]`.
 ///
 /// The `dx = dy @ Wᵀ` backward kernel. Both operands stream row-major, so
 /// no explicit transpose materializes; rows of `C` are independent, so
-/// large shapes split across threads exactly like [`matmul`] (bit-stable:
-/// each row's dot order never changes).
-pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+/// large shapes split across pool workers exactly like [`matmul_into`]
+/// (bit-stable: each row's dot order never changes).
+pub fn matmul_nt_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    assert_eq!(a.ndim(), 2, "matmul_nt lhs must be 2-D");
+    assert_eq!(b.ndim(), 2, "matmul_nt rhs must be 2-D");
+    let threads = matmul_threads(a.shape()[0], a.shape()[1], b.shape()[0]);
+    matmul_nt_into_with_threads(a, b, out, threads);
+}
+
+/// [`matmul_nt_into`] with an explicit worker count (determinism tests).
+pub fn matmul_nt_into_with_threads(a: &Tensor, b: &Tensor, out: &mut Tensor, threads: usize) {
     assert_eq!(a.ndim(), 2, "matmul_nt lhs must be 2-D");
     assert_eq!(b.ndim(), 2, "matmul_nt rhs must be 2-D");
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let (n, k2) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "matmul_nt inner dims: {k} vs {k2}");
-    let mut c = Tensor::zeros(&[m, n]);
+    out.resize(&[m, n]);
     let (ad, bd) = (a.data(), b.data());
-    let cd = c.data_mut();
-    let threads = matmul_threads(m);
-    if m * k * n < PAR_MIN_MADDS || threads == 1 {
+    let cd = out.data_mut();
+    if m * k * n < PAR_MIN_MADDS || threads <= 1 {
         matmul_nt_rows(ad, bd, cd, 0, m, k, n);
-        return c;
+        return;
     }
     let rows_per = m.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (chunk_idx, c_chunk) in cd.chunks_mut(rows_per * n).enumerate() {
+    let tasks: Vec<Task<'_>> = cd
+        .chunks_mut(rows_per * n)
+        .enumerate()
+        .map(|(chunk_idx, c_chunk)| {
             let i0 = chunk_idx * rows_per;
             let rows = c_chunk.len() / n;
-            scope.spawn(move || matmul_nt_rows(ad, bd, c_chunk, i0, rows, k, n));
-        }
-    });
+            Box::new(move || matmul_nt_rows(ad, bd, c_chunk, i0, rows, k, n)) as Task<'_>
+        })
+        .collect();
+    workers::global().run(tasks);
+}
+
+/// `C = A @ Bᵀ` (allocating wrapper over [`matmul_nt_into`]).
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let mut c = Tensor::empty();
+    matmul_nt_into(a, b, &mut c);
     c
 }
 
-/// `C = Aᵀ @ B` with `A: [r, m]`, `B: [r, n]` → `C: [m, n]`.
+/// `C = Aᵀ @ B` into `out`, with `A: [r, m]`, `B: [r, n]` → `C: [m, n]`.
 ///
 /// The `dw = xᵀ @ dy` backward kernel, accumulated as a sum of row outer
 /// products so every access stays row-major. Stays single-threaded: `r`
@@ -137,15 +183,16 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
 /// the reduction would either need per-thread partials (changing fp
 /// summation order → breaking the oracle/executor bit-equivalence) or
 /// strided column chunking with poor locality.
-pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+pub fn matmul_tn_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
     assert_eq!(a.ndim(), 2, "matmul_tn lhs must be 2-D");
     assert_eq!(b.ndim(), 2, "matmul_tn rhs must be 2-D");
     let (r, m) = (a.shape()[0], a.shape()[1]);
     let (r2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(r, r2, "matmul_tn outer dims: {r} vs {r2}");
-    let mut c = Tensor::zeros(&[m, n]);
+    out.resize(&[m, n]);
+    out.fill(0.0);
     let (ad, bd) = (a.data(), b.data());
-    let cd = c.data_mut();
+    let cd = out.data_mut();
     for rr in 0..r {
         let brow = &bd[rr * n..(rr + 1) * n];
         for i in 0..m {
@@ -159,15 +206,22 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
             }
         }
     }
+}
+
+/// `C = Aᵀ @ B` (allocating wrapper over [`matmul_tn_into`]).
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let mut c = Tensor::empty();
+    matmul_tn_into(a, b, &mut c);
     c
 }
 
-/// Column sums of a 2-D tensor: `out[j] = Σ_i x[i, j]` — the bias-grad
-/// reduction (`db = Σ_rows dz`).
-pub fn col_sum(x: &Tensor) -> Tensor {
+/// Column sums of a 2-D tensor into `out`: `out[j] = Σ_i x[i, j]` — the
+/// bias-grad reduction (`db = Σ_rows dz`).
+pub fn col_sum_into(x: &Tensor, out: &mut Tensor) {
     assert_eq!(x.ndim(), 2, "col_sum needs a 2-D tensor");
     let (m, n) = (x.shape()[0], x.shape()[1]);
-    let mut out = Tensor::zeros(&[n]);
+    out.resize(&[n]);
+    out.fill(0.0);
     let (xd, od) = (x.data(), out.data_mut());
     for i in 0..m {
         let row = &xd[i * n..(i + 1) * n];
@@ -175,10 +229,16 @@ pub fn col_sum(x: &Tensor) -> Tensor {
             *ov += xv;
         }
     }
+}
+
+/// Column sums (allocating wrapper over [`col_sum_into`]).
+pub fn col_sum(x: &Tensor) -> Tensor {
+    let mut out = Tensor::empty();
+    col_sum_into(x, &mut out);
     out
 }
 
-/// `A^T` for a 2-D tensor.
+/// `A^T` for a 2-D tensor (cold path: checkpointing and tests only).
 pub fn transpose(a: &Tensor) -> Tensor {
     assert_eq!(a.ndim(), 2);
     let (m, n) = (a.shape()[0], a.shape()[1]);
@@ -191,47 +251,111 @@ pub fn transpose(a: &Tensor) -> Tensor {
     t
 }
 
-/// Row-broadcast add: `y[i, j] = x[i, j] + b[j]`.
-pub fn add_bias(x: &Tensor, b: &Tensor) -> Tensor {
+/// Fused forward epilogue, in place on `y` (typically a fresh matmul
+/// result): `y[i, j] += b[j]`, then `max(0, ·)` when `relu` — one pass
+/// instead of the add-bias + relu pair, same per-element op order.
+pub fn bias_act_inplace(y: &mut Tensor, b: &Tensor, relu: bool) {
+    assert_eq!(y.ndim(), 2);
+    assert_eq!(b.ndim(), 1);
+    let (m, n) = (y.shape()[0], y.shape()[1]);
+    assert_eq!(n, b.shape()[0]);
+    let (yd, bd) = (y.data_mut(), b.data());
+    for i in 0..m {
+        let row = &mut yd[i * n..(i + 1) * n];
+        if relu {
+            for (v, bv) in row.iter_mut().zip(bd.iter()) {
+                *v = (*v + bv).max(0.0);
+            }
+        } else {
+            for (v, bv) in row.iter_mut().zip(bd.iter()) {
+                *v += bv;
+            }
+        }
+    }
+}
+
+/// Row-broadcast add into `out`: `out[i, j] = x[i, j] + b[j]`.
+pub fn add_bias_into(x: &Tensor, b: &Tensor, out: &mut Tensor) {
     assert_eq!(x.ndim(), 2);
     assert_eq!(b.ndim(), 1);
     assert_eq!(x.shape()[1], b.shape()[0]);
-    let mut y = x.clone();
-    let n = b.len();
-    for (i, v) in y.data_mut().iter_mut().enumerate() {
-        *v += b.data()[i % n];
-    }
+    out.copy_from(x);
+    bias_act_inplace(out, b, false);
+}
+
+/// Row-broadcast add (allocating wrapper over [`add_bias_into`]).
+pub fn add_bias(x: &Tensor, b: &Tensor) -> Tensor {
+    let mut y = Tensor::empty();
+    add_bias_into(x, b, &mut y);
     y
 }
 
-/// Elementwise ReLU.
-pub fn relu(x: &Tensor) -> Tensor {
-    let mut y = x.clone();
-    for v in y.data_mut().iter_mut() {
+/// Elementwise ReLU into `out`.
+pub fn relu_into(x: &Tensor, out: &mut Tensor) {
+    out.copy_from(x);
+    for v in out.data_mut().iter_mut() {
         *v = v.max(0.0);
     }
+}
+
+/// Elementwise ReLU (allocating wrapper over [`relu_into`]).
+pub fn relu(x: &Tensor) -> Tensor {
+    let mut y = Tensor::empty();
+    relu_into(x, &mut y);
     y
 }
 
-/// Gradient mask of ReLU given its *output* `y`: `dy * (y > 0)`.
-pub fn relu_grad(y: &Tensor, dy: &Tensor) -> Tensor {
+/// Gradient mask of ReLU given its *output* `y`, into `out`:
+/// `dy * (y > 0)`.
+pub fn relu_grad_into(y: &Tensor, dy: &Tensor, out: &mut Tensor) {
     assert_eq!(y.shape(), dy.shape());
-    let mut g = dy.clone();
-    for (gv, yv) in g.data_mut().iter_mut().zip(y.data().iter()) {
+    out.copy_from(dy);
+    for (gv, yv) in out.data_mut().iter_mut().zip(y.data().iter()) {
         if *yv <= 0.0 {
             *gv = 0.0;
         }
     }
+}
+
+/// ReLU gradient mask (allocating wrapper over [`relu_grad_into`]).
+pub fn relu_grad(y: &Tensor, dy: &Tensor) -> Tensor {
+    let mut g = Tensor::empty();
+    relu_grad_into(y, dy, &mut g);
     g
 }
 
-/// Numerically-stable row softmax.
-pub fn softmax_rows(x: &Tensor) -> Tensor {
+/// Fused backward epilogue: the ReLU mask and the bias-grad reduction in
+/// one streaming pass — `dz = dy * (y > 0)` and `db[j] = Σ_i dz[i, j]`,
+/// bit-identical to [`relu_grad_into`] + [`col_sum_into`] (same
+/// per-element ops, same row-major accumulation order) but touching `dy`
+/// and `dz` once instead of twice.
+pub fn relu_grad_col_sum_into(y: &Tensor, dy: &Tensor, dz: &mut Tensor, db: &mut Tensor) {
+    assert_eq!(y.shape(), dy.shape());
+    assert_eq!(y.ndim(), 2, "fused backward epilogue needs 2-D activations");
+    let (m, n) = (y.shape()[0], y.shape()[1]);
+    dz.copy_from(dy);
+    db.resize(&[n]);
+    db.fill(0.0);
+    let (zd, yd, sd) = (dz.data_mut(), y.data(), db.data_mut());
+    for i in 0..m {
+        let zrow = &mut zd[i * n..(i + 1) * n];
+        let yrow = &yd[i * n..(i + 1) * n];
+        for ((zv, yv), sv) in zrow.iter_mut().zip(yrow.iter()).zip(sd.iter_mut()) {
+            if *yv <= 0.0 {
+                *zv = 0.0;
+            }
+            *sv += *zv;
+        }
+    }
+}
+
+/// Numerically-stable row softmax into `out`.
+pub fn softmax_rows_into(x: &Tensor, out: &mut Tensor) {
     assert_eq!(x.ndim(), 2);
     let (m, n) = (x.shape()[0], x.shape()[1]);
-    let mut y = x.clone();
+    out.copy_from(x);
     for i in 0..m {
-        let row = &mut y.data_mut()[i * n..(i + 1) * n];
+        let row = &mut out.data_mut()[i * n..(i + 1) * n];
         let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut sum = 0.0;
         for v in row.iter_mut() {
@@ -242,59 +366,87 @@ pub fn softmax_rows(x: &Tensor) -> Tensor {
             *v /= sum;
         }
     }
+}
+
+/// Numerically-stable row softmax (allocating wrapper).
+pub fn softmax_rows(x: &Tensor) -> Tensor {
+    let mut y = Tensor::empty();
+    softmax_rows_into(x, &mut y);
     y
+}
+
+/// Shared cross-entropy core: `p` holds row-softmax probabilities on
+/// entry and the mean loss gradient w.r.t. logits on exit. `label_of(i)`
+/// supplies row `i`'s class. Returns `(mean loss, argmax-correct rows)`.
+fn xent_from_probs(p: &mut Tensor, label_of: impl Fn(usize) -> usize) -> (f32, usize) {
+    let (m, n) = (p.shape()[0], p.shape()[1]);
+    let mut loss = 0.0f32;
+    let mut correct = 0usize;
+    let pd = p.data_mut();
+    for i in 0..m {
+        let row = &mut pd[i * n..(i + 1) * n];
+        let li = label_of(i);
+        assert!(li < n, "label {li} out of range {n}");
+        loss -= row[li].max(1e-12).ln();
+        let mut argmax = 0;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[argmax] {
+                argmax = j;
+            }
+        }
+        if argmax == li {
+            correct += 1;
+        }
+        row[li] -= 1.0;
+    }
+    p.scale(1.0 / m as f32);
+    (loss / m as f32, correct)
+}
+
+/// Mean softmax cross-entropy into `dl` (the gradient w.r.t. logits),
+/// returning `(mean loss, argmax-correct rows)`.
+pub fn softmax_xent_into(logits: &Tensor, labels: &[usize], dl: &mut Tensor) -> (f32, usize) {
+    assert_eq!(logits.shape()[0], labels.len());
+    softmax_rows_into(logits, dl);
+    xent_from_probs(dl, |i| labels[i])
 }
 
 /// Mean softmax cross-entropy and its gradient w.r.t. logits, plus the
 /// number of argmax-correct rows. Mirrors the `loss_grad` HLO artifact.
 pub fn softmax_xent(logits: &Tensor, labels: &[usize]) -> (f32, Tensor, usize) {
-    let (m, n) = (logits.shape()[0], logits.shape()[1]);
-    assert_eq!(m, labels.len());
-    let p = softmax_rows(logits);
-    let mut loss = 0.0f32;
-    let mut correct = 0usize;
-    let mut dl = p.clone();
-    for i in 0..m {
-        let li = labels[i];
-        assert!(li < n, "label {li} out of range {n}");
-        loss -= p.at2(i, li).max(1e-12).ln();
-        let row = &p.data()[i * n..(i + 1) * n];
-        let argmax = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
-        if argmax == li {
-            correct += 1;
+    let mut dl = Tensor::empty();
+    let (loss, correct) = softmax_xent_into(logits, labels, &mut dl);
+    (loss, dl, correct)
+}
+
+/// [`softmax_xent_into`] with one-hot labels (row argmax, no intermediate
+/// label vector — the hot path allocates nothing): `(loss, correct)`,
+/// gradient in `dl`.
+pub fn softmax_xent_onehot_into(logits: &Tensor, onehot: &Tensor, dl: &mut Tensor) -> (f32, f32) {
+    assert_eq!(logits.shape(), onehot.shape(), "logits vs onehot shape");
+    let n = logits.shape()[1];
+    softmax_rows_into(logits, dl);
+    let od = onehot.data();
+    let (loss, correct) = xent_from_probs(dl, |i| {
+        let row = &od[i * n..(i + 1) * n];
+        let mut arg = 0;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[arg] {
+                arg = j;
+            }
         }
-        let d = dl.at2(i, li) - 1.0;
-        dl.set2(i, li, d);
-    }
-    dl.scale(1.0 / m as f32);
-    (loss / m as f32, dl, correct)
+        arg
+    });
+    (loss, correct as f32)
 }
 
 /// [`softmax_xent`] with one-hot labels — the exact input/output contract
 /// of the `loss_grad` artifact, so the host backend is a drop-in
 /// replacement: `(mean loss, dlogits, argmax-correct row count)`.
 pub fn softmax_xent_onehot(logits: &Tensor, onehot: &Tensor) -> (f32, Tensor, f32) {
-    assert_eq!(logits.shape(), onehot.shape(), "logits vs onehot shape");
-    let (m, n) = (logits.shape()[0], logits.shape()[1]);
-    let labels: Vec<usize> = (0..m)
-        .map(|i| {
-            let row = &onehot.data()[i * n..(i + 1) * n];
-            let mut arg = 0;
-            for (j, &v) in row.iter().enumerate() {
-                if v > row[arg] {
-                    arg = j;
-                }
-            }
-            arg
-        })
-        .collect();
-    let (loss, dl, correct) = softmax_xent(logits, &labels);
-    (loss, dl, correct as f32)
+    let mut dl = Tensor::empty();
+    let (loss, correct) = softmax_xent_onehot_into(logits, onehot, &mut dl);
+    (loss, dl, correct)
 }
 
 #[cfg(test)]
@@ -351,7 +503,7 @@ mod tests {
     fn matmul_nt_matches_transpose_composition() {
         let mut rng = Rng::new(12);
         // Small shapes (serial path) plus one above PAR_MIN_MADDS so the
-        // threaded row split is exercised too.
+        // pooled row split is exercised too.
         let mut cases: Vec<(usize, usize, usize)> = (0..8)
             .map(|_| (1 + rng.index(20), 1 + rng.index(20), 1 + rng.index(20)))
             .collect();
@@ -403,6 +555,31 @@ mod tests {
         assert_eq!(l1, l2);
         assert_eq!(g1, g2);
         assert_eq!(c1 as f32, c2);
+    }
+
+    #[test]
+    fn fused_bias_act_matches_composition() {
+        let mut rng = Rng::new(15);
+        let x = Tensor::randn(&[6, 9], 1.0, &mut rng);
+        let b = Tensor::randn(&[9], 0.5, &mut rng);
+        let mut fused = x.clone();
+        bias_act_inplace(&mut fused, &b, true);
+        assert_eq!(fused, relu(&add_bias(&x, &b)), "relu epilogue");
+        let mut affine = x.clone();
+        bias_act_inplace(&mut affine, &b, false);
+        assert_eq!(affine, add_bias(&x, &b), "linear epilogue");
+    }
+
+    #[test]
+    fn fused_backward_epilogue_matches_composition() {
+        let mut rng = Rng::new(16);
+        let y = relu(&Tensor::randn(&[7, 5], 1.0, &mut rng));
+        let dy = Tensor::randn(&[7, 5], 1.0, &mut rng);
+        let (mut dz, mut db) = (Tensor::empty(), Tensor::empty());
+        relu_grad_col_sum_into(&y, &dy, &mut dz, &mut db);
+        let dz_ref = relu_grad(&y, &dy);
+        assert_eq!(dz, dz_ref);
+        assert_eq!(db, col_sum(&dz_ref));
     }
 
     #[test]

@@ -1,0 +1,151 @@
+//! Size-keyed recycling pool for tensor backing stores.
+//!
+//! The training hot path produces and retires same-shaped tensors every
+//! iteration (activations, gradients, loss buffers). A [`BufferPool`]
+//! keeps retired tensors bucketed by element count and hands them back
+//! out via [`BufferPool::take`], so the steady-state loop performs no
+//! heap allocation: `take` pops a spare and [`Tensor::resize`]s it in
+//! place (a no-op when the shape repeats, which it always does in steady
+//! state).
+//!
+//! Pools are owner-local (one per trainer / per pipeline stage) — no
+//! locks, no sharing. Tensors may be recycled into a *different* pool
+//! than they were taken from (gradients crossing stage boundaries do
+//! this); per-size-class caps keep any imbalance bounded.
+
+use super::Tensor;
+use std::collections::HashMap;
+
+/// Spare buffers retained per size class; recycles beyond this are
+/// dropped, bounding pool memory when a size class has unbalanced
+/// producers/consumers (e.g. per-epoch input batches).
+const MAX_SPARES_PER_SIZE: usize = 8;
+
+/// A recycling allocator for [`Tensor`] backing stores.
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    free: HashMap<usize, Vec<Tensor>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool::default()
+    }
+
+    /// Hand out a tensor of `shape`. **Contents are unspecified** —
+    /// recycled buffers keep stale values — so pooled tensors must only
+    /// be used as `_into`-kernel outputs (which fully overwrite or
+    /// zero-initialize) or be explicitly [`Tensor::fill`]ed.
+    pub fn take(&mut self, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        match self.free.get_mut(&n).and_then(Vec::pop) {
+            Some(mut t) => {
+                self.hits += 1;
+                t.resize(shape);
+                t
+            }
+            None => {
+                self.misses += 1;
+                Tensor::zeros(shape)
+            }
+        }
+    }
+
+    /// Pooled deep copy of `src`.
+    pub fn take_copy(&mut self, src: &Tensor) -> Tensor {
+        let mut t = self.take(src.shape());
+        t.data_mut().copy_from_slice(src.data());
+        t
+    }
+
+    /// Return a tensor's backing store to the pool. Empty placeholders
+    /// are dropped, as are spares beyond the per-size cap.
+    pub fn recycle(&mut self, t: Tensor) {
+        if t.is_empty() {
+            return;
+        }
+        let bucket = self.free.entry(t.len()).or_default();
+        if bucket.len() < MAX_SPARES_PER_SIZE {
+            bucket.push(t);
+        }
+    }
+
+    /// Takes served from a spare buffer (no allocation).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Takes that had to allocate fresh storage.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Spare buffers currently held.
+    pub fn spares(&self) -> usize {
+        self.free.values().map(Vec::len).sum()
+    }
+
+    /// Bytes parked in spare buffers (memory accounting).
+    pub fn spare_nbytes(&self) -> usize {
+        self.free.values().flatten().map(Tensor::nbytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_recycle_take_reuses_storage() {
+        let mut pool = BufferPool::new();
+        let mut t = pool.take(&[4, 3]);
+        assert_eq!(pool.misses(), 1);
+        t.fill(5.0);
+        pool.recycle(t);
+        assert_eq!(pool.spares(), 1);
+        // Same element count, different shape: the spare is reused and
+        // reshaped; contents are unspecified (stale 5s prove reuse).
+        let t2 = pool.take(&[6, 2]);
+        assert_eq!(pool.hits(), 1);
+        assert_eq!(t2.shape(), &[6, 2]);
+        assert!(t2.data().iter().all(|&v| v == 5.0), "storage was not reused");
+        assert_eq!(pool.spares(), 0);
+    }
+
+    #[test]
+    fn mismatched_sizes_allocate_fresh() {
+        let mut pool = BufferPool::new();
+        pool.recycle(Tensor::zeros(&[8]));
+        let t = pool.take(&[9]);
+        assert_eq!(t.len(), 9);
+        assert_eq!(pool.misses(), 1);
+        assert_eq!(pool.spares(), 1, "the size-8 spare stays parked");
+    }
+
+    #[test]
+    fn per_size_cap_bounds_spares() {
+        let mut pool = BufferPool::new();
+        for _ in 0..(MAX_SPARES_PER_SIZE + 5) {
+            pool.recycle(Tensor::zeros(&[16]));
+        }
+        assert_eq!(pool.spares(), MAX_SPARES_PER_SIZE);
+        assert_eq!(pool.spare_nbytes(), MAX_SPARES_PER_SIZE * 16 * 4);
+    }
+
+    #[test]
+    fn empty_placeholders_are_dropped() {
+        let mut pool = BufferPool::new();
+        pool.recycle(Tensor::empty());
+        assert_eq!(pool.spares(), 0);
+    }
+
+    #[test]
+    fn take_copy_matches_source() {
+        let mut pool = BufferPool::new();
+        let src = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let cp = pool.take_copy(&src);
+        assert_eq!(cp, src);
+    }
+}

@@ -1,0 +1,247 @@
+//! Persistent worker pool for the parallel tensor kernels.
+//!
+//! The seed's parallel matmul spawned OS threads via `std::thread::scope`
+//! on *every* call, so each pipelined layer paid a spawn+join per batch.
+//! This pool spawns its workers once (lazily, on first use) and then
+//! parks them on a condvar; a kernel submits a batch of borrowed-closure
+//! tasks with [`WorkerPool::run`], which blocks until all of them have
+//! executed. Steady-state cost per batch is a queue lock + wakeup instead
+//! of thread creation.
+//!
+//! Determinism contract: the pool executes whatever row partition the
+//! caller built — it never re-partitions work — so kernel results remain
+//! bit-identical across pool sizes (see the matmul chunking in `ops.rs`).
+//!
+//! Tasks must not submit nested batches to the pool (a worker blocking in
+//! `run` would starve the queue it is supposed to drain).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A borrowed unit of work: executed exactly once, strictly before the
+/// submitting [`WorkerPool::run`] call returns.
+pub type Task<'scope> = Box<dyn FnOnce() + Send + 'scope>;
+
+type StaticTask = Box<dyn FnOnce() + Send + 'static>;
+type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
+
+/// Env var overriding the worker count (default: the machine's available
+/// parallelism). Affects throughput only, never results.
+pub const WORKERS_ENV: &str = "LAYERPIPE2_WORKERS";
+
+/// Completion latch for one `run` batch: counts outstanding tasks and
+/// carries the first panic payload back to the submitter.
+struct Latch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panic: Option<PanicPayload>,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { state: Mutex::new(LatchState { remaining: n, panic: None }), cv: Condvar::new() }
+    }
+
+    fn complete(&self, panic: Option<PanicPayload>) {
+        let mut st = self.state.lock().expect("latch lock");
+        if let Some(p) = panic {
+            st.panic.get_or_insert(p);
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) -> Option<PanicPayload> {
+        let mut st = self.state.lock().expect("latch lock");
+        while st.remaining > 0 {
+            st = self.cv.wait(st).expect("latch wait");
+        }
+        st.panic.take()
+    }
+}
+
+struct Job {
+    task: StaticTask,
+    latch: Arc<Latch>,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+}
+
+/// A fixed-size pool of parked worker threads (spawned once, reused for
+/// every kernel invocation in the process).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    size: usize,
+}
+
+/// Extend a borrowed task's lifetime so it can cross the queue.
+///
+/// # Safety
+/// The caller must not return until the task has finished executing
+/// ([`WorkerPool::run`] blocks on the completion latch in all paths,
+/// including task panics), so every borrow captured by the task strictly
+/// outlives its execution.
+unsafe fn erase_lifetime(task: Task<'_>) -> StaticTask {
+    std::mem::transmute::<Task<'_>, StaticTask>(task)
+}
+
+impl WorkerPool {
+    fn start(size: usize) -> WorkerPool {
+        let shared = Arc::new(Shared { queue: Mutex::new(VecDeque::new()), cv: Condvar::new() });
+        for i in 0..size {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("lp2-worker-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawn pool worker");
+        }
+        WorkerPool { shared, size }
+    }
+
+    /// Number of worker threads (the kernels' parallelism bound).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Execute every task, blocking until all have completed. A panic in
+    /// any task is re-raised here (after the whole batch has finished, so
+    /// borrowed data never escapes). Single-task batches and size-1 pools
+    /// run inline, skipping the queue entirely.
+    pub fn run(&self, tasks: Vec<Task<'_>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        if n == 1 || self.size <= 1 {
+            for task in tasks {
+                task();
+            }
+            return;
+        }
+        let latch = Arc::new(Latch::new(n));
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue lock");
+            for task in tasks {
+                // SAFETY: `latch.wait()` below blocks until every task in
+                // this batch has executed, so the borrows captured by
+                // `task` outlive its execution (see `erase_lifetime`).
+                let task = unsafe { erase_lifetime(task) };
+                q.push_back(Job { task, latch: Arc::clone(&latch) });
+            }
+        }
+        self.shared.cv.notify_all();
+        if let Some(payload) = latch.wait() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().expect("pool queue lock");
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                q = shared.cv.wait(q).expect("pool queue wait");
+            }
+        };
+        // Catch panics so the worker survives and the submitter (not the
+        // pool) decides how to unwind.
+        let task = job.task;
+        let result = catch_unwind(AssertUnwindSafe(move || task()));
+        job.latch.complete(result.err());
+    }
+}
+
+fn default_size() -> usize {
+    std::env::var(WORKERS_ENV)
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()))
+}
+
+static POOL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide pool, spawned on first use.
+pub fn global() -> &'static WorkerPool {
+    POOL.get_or_init(|| WorkerPool::start(default_size()))
+}
+
+/// Worker count of the global pool (kernel partition sizing).
+pub fn pool_size() -> usize {
+    global().size()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_every_task_with_borrowed_state() {
+        let pool = global();
+        let mut outs = vec![0usize; 16];
+        let tasks: Vec<Task<'_>> = outs
+            .chunks_mut(1)
+            .enumerate()
+            .map(|(i, c)| Box::new(move || c[0] = i + 1) as Task<'_>)
+            .collect();
+        pool.run(tasks);
+        assert_eq!(outs, (1..=16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single_batches_are_inline() {
+        global().run(Vec::new());
+        let mut hit = false;
+        global().run(vec![Box::new(|| hit = true) as Task<'_>]);
+        assert!(hit);
+    }
+
+    #[test]
+    fn reuses_workers_across_batches() {
+        // Many batches back-to-back: the whole point is that this does
+        // not spawn threads per call, and every batch still completes.
+        let pool = global();
+        for round in 0..50 {
+            let mut acc = vec![0u64; 4];
+            let tasks: Vec<Task<'_>> = acc
+                .chunks_mut(1)
+                .map(|c| Box::new(move || c[0] = round) as Task<'_>)
+                .collect();
+            pool.run(tasks);
+            assert!(acc.iter().all(|&v| v == round), "round {round}");
+        }
+    }
+
+    #[test]
+    fn panics_propagate_after_the_batch_completes() {
+        let done = std::sync::atomic::AtomicUsize::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            global().run(vec![
+                Box::new(|| panic!("boom")) as Task<'_>,
+                Box::new(|| {
+                    done.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                }) as Task<'_>,
+            ]);
+        }));
+        assert!(result.is_err(), "task panic must reach the submitter");
+        if global().size() > 1 {
+            // Queued path: the rest of the batch still ran to completion
+            // before the panic was re-raised (borrow-safety contract).
+            assert_eq!(done.load(std::sync::atomic::Ordering::SeqCst), 1);
+        }
+    }
+}

@@ -31,7 +31,7 @@ use crate::model::{LayerParams, Mlp};
 use crate::optim::{ConstantLr, CosineLr, LrBook, LrSchedule, Optimizer, Sgd};
 use crate::retiming::StagePartition;
 use crate::strategy::{LayerStrategy, StrategyKind};
-use crate::tensor::Tensor;
+use crate::tensor::{BufferPool, Tensor};
 use crate::util::{Rng, Stopwatch};
 use anyhow::{ensure, Context, Result};
 use std::collections::VecDeque;
@@ -89,14 +89,21 @@ struct LayerState {
     opt_b: Sgd,
     /// Gradient delay `d_l = 2·S(l)`.
     delay: usize,
+    /// Persistent `_into` workspaces for this layer's weight/bias
+    /// gradients (overwritten every backward, never reallocated).
+    dw_buf: Tensor,
+    db_buf: Tensor,
 }
 
 /// One in-flight batch: everything the delayed backward will need.
 struct Inflight {
     /// Iteration at which the batch was forwarded.
     t: u64,
-    /// Per-layer saved `(input, output)` activations.
-    saved: Vec<(Tensor, Tensor)>,
+    /// Activation chain: `acts[0]` is the batch input, `acts[l + 1]` is
+    /// layer `l`'s output (each stored once — a layer's input *is* the
+    /// previous layer's output). Entries consumed by retiring backwards
+    /// are replaced with empty placeholders and recycled into the pool.
+    acts: Vec<Tensor>,
     /// One-hot labels (consumed by `loss_grad` at backward time).
     onehot: Tensor,
     /// Upstream gradient flowing down the backward chain.
@@ -110,7 +117,7 @@ struct Inflight {
 
 impl Inflight {
     fn nbytes(&self) -> usize {
-        self.saved.iter().map(|(a, b)| a.nbytes() + b.nbytes()).sum::<usize>()
+        self.acts.iter().map(Tensor::nbytes).sum::<usize>()
             + self.onehot.nbytes()
             + self.dy.as_ref().map_or(0, Tensor::nbytes)
     }
@@ -130,6 +137,14 @@ pub struct Trainer {
     peak_activation_bytes: usize,
     /// Losses observed this epoch (at backward time).
     epoch_losses: Vec<f32>,
+    /// Recycled tensor storage for activations and gradients: the
+    /// steady-state loop allocates nothing.
+    pool: BufferPool,
+    /// Pre-activation-gradient workspace shared across layer backwards.
+    bwd_scratch: Tensor,
+    /// Emptied activation-chain Vecs from retired batches, reused by the
+    /// forward lane.
+    spare_chains: Vec<Vec<Tensor>>,
 }
 
 impl Trainer {
@@ -154,6 +169,8 @@ impl Trainer {
                     opt_w: Sgd::new(&[din, dout], cfg.optim.momentum, cfg.optim.weight_decay),
                     opt_b: Sgd::new(&[dout], cfg.optim.momentum, 0.0),
                     delay: delays[l],
+                    dw_buf: Tensor::empty(),
+                    db_buf: Tensor::empty(),
                 }
             })
             .collect();
@@ -170,6 +187,9 @@ impl Trainer {
             step: 0,
             peak_activation_bytes: 0,
             epoch_losses: Vec::new(),
+            pool: BufferPool::new(),
+            bwd_scratch: Tensor::empty(),
+            spare_chains: Vec::new(),
         })
     }
 
@@ -196,20 +216,27 @@ impl Trainer {
 
         // ---- forward lane ------------------------------------------------
         if let Some((x, onehot)) = batch {
-            let mut saved = Vec::with_capacity(self.mlp.num_layers());
-            let mut h = x;
-            for l in 0..self.mlp.num_layers() {
+            let nl = self.mlp.num_layers();
+            // Recycled chain Vec + pooled output buffers: the steady-state
+            // forward performs zero heap allocation.
+            let mut acts = self.spare_chains.pop().unwrap_or_default();
+            debug_assert!(acts.is_empty());
+            acts.reserve(nl + 1);
+            acts.push(x);
+            for l in 0..nl {
                 self.layers[l].strategy.on_forward(t, &self.mlp.layers[l].w);
-                let y = self.mlp.forward_layer(self.backend.as_ref(), l, &h)?;
-                saved.push((h, y.clone()));
-                h = y;
+                let rows = acts[l].shape()[0];
+                let dout = self.mlp.layers[l].w.shape()[1];
+                let mut y = self.pool.take(&[rows, dout]);
+                self.mlp.forward_layer_into(self.backend.as_ref(), l, &acts[l], &mut y)?;
+                acts.push(y);
             }
             self.inflight.push_back(Inflight {
                 t,
-                saved,
+                acts,
                 onehot,
                 dy: None,
-                next_bwd: Some(self.mlp.num_layers() - 1),
+                next_bwd: Some(nl - 1),
                 loss: None,
             });
             let act_bytes: usize = self.inflight.iter().map(Inflight::nbytes).sum();
@@ -235,11 +262,20 @@ impl Trainer {
             }
         }
         for _ in 0..retired {
-            let rec = self.inflight.pop_front().expect("retired record");
+            let mut rec = self.inflight.pop_front().expect("retired record");
             debug_assert!(rec.next_bwd.is_none());
             if let Some(loss) = rec.loss {
                 self.epoch_losses.push(loss);
             }
+            // Recycle the record's remaining buffers and chain storage.
+            if let Some(dy) = rec.dy.take() {
+                self.pool.recycle(dy);
+            }
+            self.pool.recycle(rec.onehot);
+            for a in rec.acts.drain(..) {
+                self.pool.recycle(a);
+            }
+            self.spare_chains.push(rec.acts);
         }
 
         self.step += 1;
@@ -247,6 +283,11 @@ impl Trainer {
     }
 
     /// Run one layer's delayed backward for in-flight record `idx`.
+    ///
+    /// Hot-path memory discipline: the loss gradient and `dx` come from
+    /// the pool, `dw`/`db` land in the layer's persistent workspaces, the
+    /// ReLU mask uses the shared scratch, and every consumed tensor is
+    /// recycled — the steady-state backward allocates nothing.
     fn backward_layer(&mut self, idx: usize, l: usize) -> Result<()> {
         let t_now = self.step;
         let t0 = self.inflight[idx].t;
@@ -254,13 +295,15 @@ impl Trainer {
 
         // Initial gradient from the loss kernel (last layer only).
         if last {
-            let rec = &self.inflight[idx];
-            let logits = &rec.saved[l].1;
-            let (loss, dlogits, _correct) =
-                self.mlp.loss_grad(self.backend.as_ref(), logits, &rec.onehot)?;
+            let mut dl = self.pool.take(self.inflight[idx].acts[l + 1].shape());
+            let (loss, _correct) = {
+                let rec = &self.inflight[idx];
+                self.backend
+                    .loss_grad_into(&rec.acts[l + 1], &rec.onehot, &mut dl)?
+            };
             let rec = &mut self.inflight[idx];
             rec.loss = Some(loss);
-            rec.dy = Some(dlogits);
+            rec.dy = Some(dl);
         }
 
         // The strategy picks the weight version for this backward.
@@ -272,33 +315,44 @@ impl Trainer {
         let first_update = self.layers[l].delay as u64;
         let lr_sum = self.lr.lr_sum(t0.max(first_update), t_now);
 
-        // Move (not clone) the stashed activations and upstream gradient
-        // out of the record: layer l's backward is their last consumer.
-        let (x, y, dy) = {
+        // Move (not clone) layer l's output and the upstream gradient out
+        // of the record — this backward is their last consumer. The input
+        // `acts[l]` stays: it is layer l−1's output, still needed there.
+        let (y, dy) = {
             let rec = &mut self.inflight[idx];
-            let (x, y) = std::mem::replace(
-                &mut rec.saved[l],
-                (Tensor::zeros(&[0]), Tensor::zeros(&[0])),
-            );
+            let y = std::mem::replace(&mut rec.acts[l + 1], Tensor::empty());
             let dy = rec.dy.take().expect("upstream gradient present");
-            (x, y, dy)
+            (y, dy)
         };
-        let (dx, dw, db) = {
-            let state = &self.layers[l];
+        let mut dx = self.pool.take(self.inflight[idx].acts[l].shape());
+        {
+            let rec = &self.inflight[idx];
+            let state = &mut self.layers[l];
             let w_bwd = state
                 .strategy
                 .backward_weights(t0, &self.mlp.layers[l].w, lr_sum);
-            self.mlp
-                .backward_layer_with(self.backend.as_ref(), l, &x, &y, &w_bwd, &dy)?
-        };
+            self.backend.backward_into(
+                self.mlp.layers[l].role,
+                &rec.acts[l],
+                &y,
+                w_bwd,
+                &dy,
+                &mut self.bwd_scratch,
+                &mut dx,
+                &mut state.dw_buf,
+                &mut state.db_buf,
+            )?;
+        }
+        self.pool.recycle(y);
+        self.pool.recycle(dy);
 
         // Apply immediately: the gradient lands d_l iterations after
         // launch, exactly the Eq. 1 staleness.
         let lr = self.lr.lr(t_now);
         let state = &mut self.layers[l];
-        let upd_w = state.opt_w.step(&mut self.mlp.layers[l].w, &dw, lr);
-        let _upd_b = state.opt_b.step(&mut self.mlp.layers[l].b, &db, lr);
-        state.strategy.on_update(&upd_w);
+        let upd_w = state.opt_w.step(&mut self.mlp.layers[l].w, &state.dw_buf, lr);
+        state.strategy.on_update(upd_w);
+        state.opt_b.step(&mut self.mlp.layers[l].b, &state.db_buf, lr);
 
         let rec = &mut self.inflight[idx];
         rec.dy = Some(dx);
@@ -383,9 +437,11 @@ mod tests {
 
     #[test]
     fn inflight_nbytes_counts_everything() {
+        // Chain of input + one output, one-hot labels, and the in-flight
+        // gradient — each stored (and counted) exactly once.
         let rec = Inflight {
             t: 0,
-            saved: vec![(Tensor::zeros(&[2, 2]), Tensor::zeros(&[2, 2]))],
+            acts: vec![Tensor::zeros(&[2, 2]), Tensor::zeros(&[2, 2])],
             onehot: Tensor::zeros(&[2, 4]),
             dy: Some(Tensor::zeros(&[2, 2])),
             next_bwd: Some(0),

@@ -1,0 +1,152 @@
+//! Equivalence gate for the zero-allocation kernel substrate.
+//!
+//! Two contracts are load-bearing for the hot-path refactor:
+//!
+//! 1. Every `_into` kernel is **bitwise identical** to its allocating
+//!    counterpart, on random shapes, even when the output buffer arrives
+//!    dirty (the BufferPool hands out recycled storage with stale
+//!    contents).
+//! 2. The persistent-WorkerPool matmuls are **bit-stable across worker
+//!    counts**: the row partition depends on the thread count, the
+//!    per-row accumulation order never does.
+
+use layerpipe2::tensor::{self, Tensor};
+use layerpipe2::util::Rng;
+
+/// A deliberately dirty output buffer (wrong shape, garbage contents).
+fn dirty(rng: &mut Rng) -> Tensor {
+    Tensor::randn(&[1 + rng.index(5), 1 + rng.index(5)], 9.0, rng)
+}
+
+#[test]
+fn into_kernels_match_allocating_bitwise_on_random_shapes() {
+    let mut rng = Rng::new(2024);
+    for case in 0..12 {
+        let m = 1 + rng.index(48);
+        let k = 1 + rng.index(48);
+        let n = 1 + rng.index(48);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let bt = Tensor::randn(&[n, k], 1.0, &mut rng);
+
+        let mut out = dirty(&mut rng);
+        tensor::matmul_into(&a, &b, &mut out);
+        assert_eq!(out, tensor::matmul(&a, &b), "case {case}: matmul");
+
+        let mut out = dirty(&mut rng);
+        tensor::matmul_nt_into(&a, &bt, &mut out);
+        assert_eq!(out, tensor::matmul_nt(&a, &bt), "case {case}: matmul_nt");
+
+        let a2 = Tensor::randn(&[k, m], 1.0, &mut rng);
+        let b2 = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let mut out = dirty(&mut rng);
+        tensor::matmul_tn_into(&a2, &b2, &mut out);
+        assert_eq!(out, tensor::matmul_tn(&a2, &b2), "case {case}: matmul_tn");
+
+        let bias = Tensor::randn(&[n], 0.5, &mut rng);
+        let x = Tensor::randn(&[m, n], 1.0, &mut rng);
+        let mut out = dirty(&mut rng);
+        tensor::add_bias_into(&x, &bias, &mut out);
+        assert_eq!(out, tensor::add_bias(&x, &bias), "case {case}: add_bias");
+
+        let mut out = dirty(&mut rng);
+        tensor::relu_into(&x, &mut out);
+        assert_eq!(out, tensor::relu(&x), "case {case}: relu");
+
+        let y = tensor::relu(&x);
+        let dy = Tensor::randn(&[m, n], 1.0, &mut rng);
+        let mut out = dirty(&mut rng);
+        tensor::relu_grad_into(&y, &dy, &mut out);
+        assert_eq!(out, tensor::relu_grad(&y, &dy), "case {case}: relu_grad");
+
+        let mut out = dirty(&mut rng);
+        tensor::col_sum_into(&x, &mut out);
+        assert_eq!(out, tensor::col_sum(&x), "case {case}: col_sum");
+
+        let mut out = dirty(&mut rng);
+        tensor::softmax_rows_into(&x, &mut out);
+        assert_eq!(out, tensor::softmax_rows(&x), "case {case}: softmax_rows");
+
+        // Loss kernel: loss, gradient and correct-count all bitwise.
+        let classes = 2 + rng.index(9);
+        let logits = Tensor::randn(&[m, classes], 2.0, &mut rng);
+        let mut onehot = Tensor::zeros(&[m, classes]);
+        for i in 0..m {
+            let label = rng.index(classes);
+            onehot.set2(i, label, 1.0);
+        }
+        let (loss_ref, dl_ref, correct_ref) = tensor::softmax_xent_onehot(&logits, &onehot);
+        let mut dl = dirty(&mut rng);
+        let (loss, correct) = tensor::softmax_xent_onehot_into(&logits, &onehot, &mut dl);
+        assert_eq!(loss, loss_ref, "case {case}: xent loss");
+        assert_eq!(dl, dl_ref, "case {case}: xent gradient");
+        assert_eq!(correct, correct_ref, "case {case}: xent correct");
+    }
+}
+
+#[test]
+fn fused_backward_epilogue_matches_unfused_composition() {
+    let mut rng = Rng::new(31);
+    for case in 0..8 {
+        let m = 1 + rng.index(32);
+        let n = 1 + rng.index(32);
+        let y = tensor::relu(&Tensor::randn(&[m, n], 1.0, &mut rng));
+        let dy = Tensor::randn(&[m, n], 1.0, &mut rng);
+        let (mut dz, mut db) = (dirty(&mut rng), dirty(&mut rng));
+        tensor::relu_grad_col_sum_into(&y, &dy, &mut dz, &mut db);
+        let dz_ref = tensor::relu_grad(&y, &dy);
+        assert_eq!(dz, dz_ref, "case {case}: fused dz");
+        assert_eq!(db, tensor::col_sum(&dz_ref), "case {case}: fused db");
+    }
+}
+
+#[test]
+fn worker_pool_matmul_is_bit_stable_across_thread_counts() {
+    let mut rng = Rng::new(7);
+    // Above PAR_MIN_MADDS (160·96·96 ≈ 1.5M madds) so the pooled row
+    // split actually engages for threads > 1.
+    let (m, k, n) = (160usize, 96usize, 96usize);
+    let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+    let mut reference = Tensor::empty();
+    tensor::matmul_into_with_threads(&a, &b, &mut reference, 1);
+    for threads in [2, 3, 4, 7, 16] {
+        let mut out = Tensor::empty();
+        tensor::matmul_into_with_threads(&a, &b, &mut out, threads);
+        assert_eq!(out, reference, "matmul diverged at threads={threads}");
+    }
+
+    let bt = Tensor::randn(&[n, k], 1.0, &mut rng);
+    let mut nt_reference = Tensor::empty();
+    tensor::matmul_nt_into_with_threads(&a, &bt, &mut nt_reference, 1);
+    for threads in [2, 3, 4, 7, 16] {
+        let mut out = Tensor::empty();
+        tensor::matmul_nt_into_with_threads(&a, &bt, &mut out, threads);
+        assert_eq!(out, nt_reference, "matmul_nt diverged at threads={threads}");
+    }
+}
+
+#[test]
+fn worker_pool_survives_concurrent_submitters() {
+    // Pipeline stage threads share the global pool: concurrent matmuls
+    // from several OS threads must all come out bit-identical to the
+    // serial reference.
+    let mut rng = Rng::new(42);
+    let (m, k, n) = (160usize, 96usize, 96usize);
+    let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+    let mut reference = Tensor::empty();
+    tensor::matmul_into_with_threads(&a, &b, &mut reference, 1);
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let (a, b, reference) = (&a, &b, &reference);
+            scope.spawn(move || {
+                for _ in 0..8 {
+                    let mut out = Tensor::empty();
+                    tensor::matmul_into(a, b, &mut out);
+                    assert_eq!(&out, reference);
+                }
+            });
+        }
+    });
+}

@@ -16,8 +16,14 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
-echo "==> cargo clippy -- -D warnings"
-cargo clippy -- -D warnings
+echo "==> cargo clippy -- -D warnings -D clippy::perf"
+cargo clippy -- -D warnings -D clippy::perf
+
+# Release-mode bench smoke: runs the hot-path bench with reduced samples
+# so kernel/allocation regressions fail the gate (and refreshes
+# BENCH_hotpath.json, the machine-readable perf trajectory).
+echo "==> bench smoke (release, reduced samples)"
+LAYERPIPE2_BENCH_SMOKE=1 cargo bench --bench runtime_hotpath
 
 if [[ "${1:-}" == "--pjrt" ]]; then
     echo "==> cargo build --release --features pjrt"
