@@ -24,6 +24,7 @@ use layerpipe2::backend::{self, Exec, HostBackend};
 use layerpipe2::bench_util::{bench, print_header, print_row, BenchStats};
 use layerpipe2::config::ExperimentConfig;
 use layerpipe2::data::teacher_dataset;
+use layerpipe2::layers::{Conv2d, Layer};
 use layerpipe2::model::LayerRole;
 use layerpipe2::pipeline::PipelinedTrainer;
 use layerpipe2::runtime::Engine;
@@ -196,6 +197,61 @@ fn host_kernel_section(smoke: bool) -> Json {
     Json::Arr(rows)
 }
 
+/// HOTPATH-e: conv layer kernels (im2col + pooled matmul) — GFLOP/s and
+/// allocs/iter for forward and backward, written to `BENCH_layers.json`
+/// so the layer-zoo perf trajectory is tracked separately from the
+/// dense hot path.
+fn layers_section(smoke: bool) -> Json {
+    print_header("HOTPATH-e: conv layer fwd/bwd (im2col + pooled matmul, persistent workspaces)");
+    let mut rows: Vec<Json> = Vec::new();
+    let mut rng = Rng::new(17);
+    // (batch, h, w, in_c, out_c, k): small stays serial; large crosses
+    // the worker-pool threshold inside matmul.
+    let cases: &[(usize, usize, usize, usize, usize, usize)] = if smoke {
+        &[(16, 8, 8, 4, 8, 3), (16, 16, 16, 8, 16, 3)]
+    } else {
+        &[(16, 8, 8, 4, 8, 3), (16, 16, 16, 8, 16, 3), (32, 32, 32, 16, 32, 3)]
+    };
+    let samples = if smoke { 5 } else { 30 };
+    for &(bsz, h, w, ic, oc, k) in cases {
+        let mut op = Conv2d::new(h, w, ic, oc, k, 1, 1, true).unwrap();
+        let (wt, b) = op.init_params(1.0, &mut rng);
+        let x = Tensor::randn(&[bsz, op.in_dim()], 1.0, &mut rng);
+        let be = HostBackend::new();
+        let case = format!("conv_{bsz}x{h}x{w}x{ic}->c{oc}k{k}");
+        // The op's own cost report — correct for any stride/pad/kernel.
+        let cost = op.cost(bsz);
+        let fwd_flops = cost.fwd_flops as f64;
+        let bwd_flops = cost.bwd_flops as f64;
+
+        let mut y = Tensor::empty();
+        let (s_fwd, n_fwd) = bench_counted(&format!("{case} fwd"), 3, samples, || {
+            op.forward_into(&be, &x, &wt, &b, &mut y).unwrap()
+        });
+        print_gflops(&s_fwd, fwd_flops, n_fwd);
+
+        let dy = Tensor::randn(&[bsz, op.out_dim()], 1.0, &mut rng);
+        let (mut scr, mut dx, mut dw, mut db) =
+            (Tensor::empty(), Tensor::empty(), Tensor::empty(), Tensor::empty());
+        let (s_bwd, n_bwd) = bench_counted(&format!("{case} bwd"), 3, samples, || {
+            op.backward_into(&be, &x, &y, &wt, &dy, &mut scr, &mut dx, &mut dw, &mut db)
+                .unwrap()
+        });
+        print_gflops(&s_bwd, bwd_flops, n_bwd);
+
+        rows.push(jobj(vec![
+            ("case", Json::Str(case)),
+            ("gflops_fwd", jnum(fwd_flops / s_fwd.median_s / 1e9)),
+            ("gflops_bwd", jnum(bwd_flops / s_bwd.median_s / 1e9)),
+            ("ns_per_iter_fwd", jnum(s_fwd.median_s * 1e9)),
+            ("ns_per_iter_bwd", jnum(s_bwd.median_s * 1e9)),
+            ("allocs_per_iter_fwd", jnum(n_fwd)),
+            ("allocs_per_iter_bwd", jnum(n_bwd)),
+        ]));
+    }
+    Json::Arr(rows)
+}
+
 fn pjrt_section() {
     print_header("HOTPATH-b: PJRT single-artifact dispatch latency");
     let engine = match Engine::load("artifacts") {
@@ -315,6 +371,7 @@ fn main() {
         println!("[smoke mode: reduced sizes and sample counts]");
     }
     let kernels = host_kernel_section(smoke);
+    let layers = layers_section(smoke);
     pjrt_section();
     let train = train_iteration_section(smoke);
     let executor = executor_pool_section(smoke);
@@ -329,4 +386,14 @@ fn main() {
         .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
     std::fs::write(&path, Json::Obj(obj).to_string()).expect("write bench json");
     println!("\nwrote {path}");
+
+    // Layer-zoo perf lives in its own trajectory file.
+    let mut lobj = BTreeMap::new();
+    lobj.insert("bench".to_string(), Json::Str("runtime_hotpath/layers".to_string()));
+    lobj.insert("smoke".to_string(), Json::Bool(smoke));
+    lobj.insert("conv_kernels".to_string(), layers);
+    let lpath = std::env::var("LAYERPIPE2_BENCH_LAYERS_JSON")
+        .unwrap_or_else(|_| "BENCH_layers.json".to_string());
+    std::fs::write(&lpath, Json::Obj(lobj).to_string()).expect("write layers bench json");
+    println!("wrote {lpath}");
 }

@@ -12,6 +12,12 @@
 //! - [`PjrtBackend`] (`pjrt` feature): wraps the engine and dispatches to
 //!   the lowered HLO artifacts, preserving the original hot path.
 //!
+//! Trainers no longer dispatch on `LayerRole` directly: they drive
+//! `Box<dyn crate::layers::Layer>` ops, and the *dense* op routes back
+//! through this trait (keeping PJRT artifact dispatch) while conv, pool
+//! and spiking ops compute on host kernels — per-op PJRT artifacts are
+//! a ROADMAP open item.
+//!
 //! Selection ([`from_env`]): the `LAYERPIPE2_BACKEND` env var picks
 //! `host`, `pjrt` or `auto` (default). `auto` uses PJRT only when the
 //! feature is compiled in *and* `manifest.json` exists in the artifacts

@@ -35,17 +35,28 @@ impl Dataset {
         self.x.shape()[1]
     }
 
-    /// Extract a batch by sample indices; returns `(x, onehot)` shaped
-    /// for the artifacts.
-    pub fn batch(&self, idx: &[usize]) -> (Tensor, Tensor) {
+    /// Extract a batch into caller-owned buffers (resized in place,
+    /// contents fully overwritten — dirty recycled pool buffers are
+    /// fine). The trainers feed their steady-state loops through this:
+    /// combined with a `BufferPool`, batch extraction allocates nothing.
+    pub fn batch_into(&self, idx: &[usize], x: &mut Tensor, onehot: &mut Tensor) {
         let d = self.input_dim();
-        let mut xb = Tensor::zeros(&[idx.len(), d]);
-        let mut oh = Tensor::zeros(&[idx.len(), self.classes]);
+        x.resize(&[idx.len(), d]);
+        onehot.resize(&[idx.len(), self.classes]);
+        onehot.fill(0.0);
         for (row, &i) in idx.iter().enumerate() {
             let src = &self.x.data()[i * d..(i + 1) * d];
-            xb.data_mut()[row * d..(row + 1) * d].copy_from_slice(src);
-            oh.set2(row, self.labels[i], 1.0);
+            x.data_mut()[row * d..(row + 1) * d].copy_from_slice(src);
+            onehot.set2(row, self.labels[i], 1.0);
         }
+    }
+
+    /// Extract a batch by sample indices; returns `(x, onehot)` shaped
+    /// for the artifacts (allocating wrapper over [`Dataset::batch_into`],
+    /// bitwise identical by construction).
+    pub fn batch(&self, idx: &[usize]) -> (Tensor, Tensor) {
+        let (mut xb, mut oh) = (Tensor::empty(), Tensor::empty());
+        self.batch_into(idx, &mut xb, &mut oh);
         (xb, oh)
     }
 }
@@ -57,6 +68,39 @@ pub struct Splits {
     pub test: Dataset,
 }
 
+/// The shared labeling recipe of every teacher dataset: argmax of a
+/// frozen two-layer ReLU teacher over the rows of `x`, resampled
+/// uniformly with probability `label_noise`. Kept in one place so the
+/// flat and image dataset families can never label differently (the
+/// argmax tie rule here must also match `count_correct` in `train`).
+fn teacher_labels(
+    x: &Tensor,
+    t_w1: &Tensor,
+    t_w2: &Tensor,
+    classes: usize,
+    label_noise: f64,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let h = relu(&matmul(x, t_w1));
+    let logits = matmul(&h, t_w2);
+    let n = x.shape()[0];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let row = &logits.data()[i * classes..(i + 1) * classes];
+        let mut arg = 0;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[arg] {
+                arg = j;
+            }
+        }
+        if rng.chance(label_noise) {
+            arg = rng.index(classes);
+        }
+        labels.push(arg);
+    }
+    labels
+}
+
 /// Generate the teacher-labelled dataset for a model config.
 pub fn teacher_dataset(model: &ModelConfig, data: &DataConfig) -> Splits {
     let mut rng = Rng::new(data.seed);
@@ -66,24 +110,65 @@ pub fn teacher_dataset(model: &ModelConfig, data: &DataConfig) -> Splits {
 
     let gen = |n: usize, rng: &mut Rng| -> Dataset {
         let x = Tensor::randn(&[n, model.input_dim], 1.0, rng);
-        let h = relu(&matmul(&x, &t_w1));
-        let logits = matmul(&h, &t_w2);
-        let mut labels = Vec::with_capacity(n);
-        for i in 0..n {
-            let row = &logits.data()[i * model.classes..(i + 1) * model.classes];
-            let mut arg = 0;
-            for (j, &v) in row.iter().enumerate() {
-                if v > row[arg] {
-                    arg = j;
+        let labels = teacher_labels(&x, &t_w1, &t_w2, model.classes, data.label_noise, rng);
+        Dataset { x, labels, classes: model.classes }
+    };
+
+    let train = gen(data.train_samples, &mut rng);
+    let test = gen(data.test_samples, &mut rng);
+    Splits { train, test }
+}
+
+/// Deterministic *image-shaped* teacher dataset for convolutional and
+/// spiking workloads: NHWC maps of `h·w·c` features per sample (the
+/// logical `[B, C, H, W]` batch, stored channel-last and flattened on
+/// the wire like every activation in [`crate::layers`]).
+///
+/// Pixels are gaussian noise passed through one fixed 3×3 box blur per
+/// channel, giving the local spatial correlation a conv kernel can
+/// exploit; labels come from a frozen random teacher MLP over the
+/// flattened image plus optional label noise — the same
+/// teacher-student recipe as [`teacher_dataset`], so test accuracy
+/// saturates below 100 % and curves have room to separate.
+pub fn image_teacher_dataset(
+    h: usize,
+    w: usize,
+    c: usize,
+    classes: usize,
+    data: &DataConfig,
+) -> Splits {
+    assert!(h > 0 && w > 0 && c > 0 && classes > 0, "image dims must be positive");
+    let dim = h * w * c;
+    let mut rng = Rng::new(data.seed);
+    let t_w1 = Tensor::randn(&[dim, data.teacher_hidden], 1.0, &mut rng);
+    let t_w2 = Tensor::randn(&[data.teacher_hidden, classes], 1.0, &mut rng);
+
+    let gen = |n: usize, rng: &mut Rng| -> Dataset {
+        let raw = Tensor::randn(&[n, dim], 1.0, rng);
+        // 3×3 box blur per channel (zero-padded borders), NHWC layout.
+        let mut x = Tensor::zeros(&[n, dim]);
+        for s in 0..n {
+            let src = &raw.data()[s * dim..(s + 1) * dim];
+            let dst = &mut x.data_mut()[s * dim..(s + 1) * dim];
+            for iy in 0..h {
+                for ix in 0..w {
+                    for ch in 0..c {
+                        let mut sum = 0.0f32;
+                        for dy in -1i32..=1 {
+                            for dx in -1i32..=1 {
+                                let (py, px) = (iy as i32 + dy, ix as i32 + dx);
+                                if py >= 0 && py < h as i32 && px >= 0 && px < w as i32 {
+                                    sum += src[(py as usize * w + px as usize) * c + ch];
+                                }
+                            }
+                        }
+                        dst[(iy * w + ix) * c + ch] = sum / 9.0;
+                    }
                 }
             }
-            // Label noise: resample uniformly with probability `label_noise`.
-            if rng.chance(data.label_noise) {
-                arg = rng.index(model.classes);
-            }
-            labels.push(arg);
         }
-        Dataset { x, labels, classes: model.classes }
+        let labels = teacher_labels(&x, &t_w1, &t_w2, classes, data.label_noise, rng);
+        Dataset { x, labels, classes }
     };
 
     let train = gen(data.train_samples, &mut rng);
@@ -110,18 +195,28 @@ impl<'a> BatchIter<'a> {
     pub fn batches_per_epoch(&self) -> usize {
         self.data.len() / self.batch
     }
+
+    /// The next batch's sample indices, without materializing tensors —
+    /// callers pass them to [`Dataset::batch_into`] with pooled buffers
+    /// (the allocation-free feed path). Same traversal as the `Iterator`
+    /// impl, so the two produce identical batch sequences.
+    pub fn next_indices(&mut self) -> Option<&[usize]> {
+        if self.pos + self.batch > self.order.len() {
+            return None;
+        }
+        let idx = &self.order[self.pos..self.pos + self.batch];
+        self.pos += self.batch;
+        Some(idx)
+    }
 }
 
 impl<'a> Iterator for BatchIter<'a> {
     type Item = (Tensor, Tensor);
 
     fn next(&mut self) -> Option<Self::Item> {
-        if self.pos + self.batch > self.order.len() {
-            return None;
-        }
-        let idx = &self.order[self.pos..self.pos + self.batch];
-        self.pos += self.batch;
-        Some(self.data.batch(idx))
+        let data = self.data;
+        let idx = self.next_indices()?;
+        Some(data.batch(idx))
     }
 }
 
@@ -193,6 +288,83 @@ mod tests {
             let sum: f32 = (0..4).map(|c| oh.at2(row, c)).sum();
             assert_eq!(sum, 1.0);
         }
+    }
+
+    #[test]
+    fn batch_into_matches_batch_bitwise_on_dirty_buffers() {
+        let (m, d) = cfgs();
+        let s = teacher_dataset(&m, &d);
+        let (xb, oh) = s.train.batch(&[1, 4, 9]);
+        let mut rng = Rng::new(44);
+        let mut x2 = Tensor::randn(&[7, 2], 5.0, &mut rng);
+        let mut oh2 = Tensor::randn(&[3, 3], 5.0, &mut rng);
+        s.train.batch_into(&[1, 4, 9], &mut x2, &mut oh2);
+        assert_eq!(xb, x2);
+        assert_eq!(oh, oh2);
+    }
+
+    #[test]
+    fn next_indices_matches_iterator_sequence() {
+        let (m, d) = cfgs();
+        let s = teacher_dataset(&m, &d);
+        let mut a = BatchIter::new(&s.train, 8, &mut Rng::new(9));
+        let mut b = BatchIter::new(&s.train, 8, &mut Rng::new(9));
+        loop {
+            let via_iter = b.next();
+            let Some(idx) = a.next_indices() else {
+                assert!(via_iter.is_none());
+                break;
+            };
+            let want = s.train.batch(idx);
+            assert_eq!(via_iter.expect("same length"), want);
+        }
+    }
+
+    #[test]
+    fn image_dataset_shapes_and_determinism() {
+        let (_, d) = cfgs();
+        let s = image_teacher_dataset(6, 5, 2, 4, &d);
+        assert_eq!(s.train.x.shape(), &[64, 60]);
+        assert_eq!(s.test.len(), 32);
+        assert!(s.train.labels.iter().all(|&l| l < 4));
+        let s2 = image_teacher_dataset(6, 5, 2, 4, &d);
+        assert_eq!(s.train.x, s2.train.x);
+        assert_eq!(s.train.labels, s2.train.labels);
+    }
+
+    #[test]
+    fn image_dataset_is_spatially_smoothed() {
+        // The box blur must induce positive correlation between
+        // horizontally adjacent pixels (raw gaussian noise has ~none).
+        let (_, d) = cfgs();
+        let (h, w, c) = (8, 8, 1);
+        let s = image_teacher_dataset(h, w, c, 4, &d);
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for smp in 0..s.train.len() {
+            let img = &s.train.x.data()[smp * h * w..(smp + 1) * h * w];
+            for iy in 0..h {
+                for ix in 0..w - 1 {
+                    let (a, b) = (img[iy * w + ix] as f64, img[iy * w + ix + 1] as f64);
+                    num += a * b;
+                    den += a * a;
+                }
+            }
+        }
+        let corr = num / den;
+        assert!(corr > 0.3, "adjacent-pixel correlation {corr} too weak");
+    }
+
+    #[test]
+    fn image_dataset_covers_multiple_classes() {
+        let (_, mut d) = cfgs();
+        d.train_samples = 256;
+        let s = image_teacher_dataset(6, 6, 1, 4, &d);
+        let mut seen = vec![false; 4];
+        for &l in &s.train.labels {
+            seen[l] = true;
+        }
+        assert!(seen.iter().filter(|&&x| x).count() >= 3, "teacher too degenerate");
     }
 
     #[test]

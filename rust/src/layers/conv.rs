@@ -1,0 +1,502 @@
+//! 2-D convolution via im2col + the existing blocked/worker-pool matmul.
+//!
+//! Layout: activations are NHWC flattened to `[batch, h·w·c]`, so a conv
+//! output (`[batch·oh·ow, out_c]` after the matmul) reshapes to the next
+//! layer's input for free — same backing store, no transpose.
+//!
+//! Workspace lifecycle (hot-path memory discipline): the op owns two
+//! persistent buffers, `cols` (im2col patches) and `dcols` (their
+//! gradient). Both are resized in place every call — a no-op once shapes
+//! repeat — so steady-state conv forward/backward allocates nothing.
+//! The backward *recomputes* im2col from the stashed input rather than
+//! caching the forward's patches: in pipelined execution the backward of
+//! batch `t` runs `d` iterations after its forward, and caching patches
+//! per in-flight batch would cost `O(d·k²·c·h·w)` bytes per stage — the
+//! recompute trades one gather pass for that stash, mirroring the
+//! paper's recompute-over-stash theme.
+
+use super::{Layer, LayerCost};
+use crate::backend::Exec;
+use crate::tensor::{self, Tensor};
+use crate::util::Rng;
+use anyhow::{ensure, Result};
+
+/// `y = act(conv2d(x, w) + b)` over NHWC maps.
+///
+/// `w: [k·k·in_c, out_c]` (patch-major, matching the im2col column
+/// order), `b: [out_c]`.
+pub struct Conv2d {
+    in_h: usize,
+    in_w: usize,
+    in_c: usize,
+    out_c: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    relu: bool,
+    /// Persistent im2col workspace: `[batch·oh·ow, k·k·in_c]`.
+    cols: Tensor,
+    /// Persistent patch-gradient workspace (same shape as `cols`).
+    dcols: Tensor,
+}
+
+impl Conv2d {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        in_h: usize,
+        in_w: usize,
+        in_c: usize,
+        out_c: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        relu: bool,
+    ) -> Result<Conv2d> {
+        ensure!(in_h > 0 && in_w > 0 && in_c > 0, "conv input dims must be positive");
+        ensure!(out_c > 0 && k > 0 && stride > 0, "conv out_c/k/stride must be positive");
+        ensure!(
+            in_h + 2 * pad >= k && in_w + 2 * pad >= k,
+            "conv kernel {k} exceeds padded input {}x{}",
+            in_h + 2 * pad,
+            in_w + 2 * pad
+        );
+        Ok(Conv2d {
+            in_h,
+            in_w,
+            in_c,
+            out_c,
+            k,
+            stride,
+            pad,
+            relu,
+            cols: Tensor::empty(),
+            dcols: Tensor::empty(),
+        })
+    }
+
+    /// Output spatial dims `(oh, ow)`.
+    pub fn out_hw(&self) -> (usize, usize) {
+        (
+            (self.in_h + 2 * self.pad - self.k) / self.stride + 1,
+            (self.in_w + 2 * self.pad - self.k) / self.stride + 1,
+        )
+    }
+
+    fn patch(&self) -> usize {
+        self.k * self.k * self.in_c
+    }
+
+    /// Gather NHWC patches of `x` into `cols: [batch·oh·ow, k·k·in_c]`,
+    /// zero-filling out-of-bounds (padding) positions. Fully overwrites
+    /// `cols`, so dirty recycled storage is fine.
+    fn im2col(&self, x: &Tensor, cols: &mut Tensor) {
+        let bsz = x.shape()[0];
+        let (h, w, c) = (self.in_h, self.in_w, self.in_c);
+        let (oh, ow) = self.out_hw();
+        let patch = self.patch();
+        cols.resize(&[bsz * oh * ow, patch]);
+        let xd = x.data();
+        let cd = cols.data_mut();
+        let mut row = 0usize;
+        for bi in 0..bsz {
+            let xoff = bi * h * w * c;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let dst = &mut cd[row * patch..(row + 1) * patch];
+                    let mut p = 0usize;
+                    for ky in 0..self.k {
+                        let iy = (oy * self.stride + ky) as isize - self.pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            dst[p..p + self.k * c].fill(0.0);
+                            p += self.k * c;
+                            continue;
+                        }
+                        let rowoff = xoff + (iy as usize) * w * c;
+                        for kx in 0..self.k {
+                            let ix = (ox * self.stride + kx) as isize - self.pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                dst[p..p + c].fill(0.0);
+                            } else {
+                                let src = rowoff + (ix as usize) * c;
+                                dst[p..p + c].copy_from_slice(&xd[src..src + c]);
+                            }
+                            p += c;
+                        }
+                    }
+                    row += 1;
+                }
+            }
+        }
+    }
+
+    /// Scatter-add the patch gradients back onto the input map:
+    /// the exact transpose of [`Conv2d::im2col`]. `dx` must be resized
+    /// and zero-filled by the caller.
+    fn col2im_add(&self, dcols: &Tensor, dx: &mut Tensor) {
+        let bsz = dx.shape()[0];
+        let (h, w, c) = (self.in_h, self.in_w, self.in_c);
+        let (oh, ow) = self.out_hw();
+        let patch = self.patch();
+        let gd = dcols.data();
+        let xd = dx.data_mut();
+        let mut row = 0usize;
+        for bi in 0..bsz {
+            let xoff = bi * h * w * c;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let src = &gd[row * patch..(row + 1) * patch];
+                    let mut p = 0usize;
+                    for ky in 0..self.k {
+                        let iy = (oy * self.stride + ky) as isize - self.pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            p += self.k * c;
+                            continue;
+                        }
+                        let rowoff = xoff + (iy as usize) * w * c;
+                        for kx in 0..self.k {
+                            let ix = (ox * self.stride + kx) as isize - self.pad as isize;
+                            if ix >= 0 && ix < w as isize {
+                                let at = rowoff + (ix as usize) * c;
+                                for (xv, gv) in
+                                    xd[at..at + c].iter_mut().zip(src[p..p + c].iter())
+                                {
+                                    *xv += gv;
+                                }
+                            }
+                            p += c;
+                        }
+                    }
+                    row += 1;
+                }
+            }
+        }
+    }
+
+    fn check_input(&self, x: &Tensor, what: &str) -> Result<usize> {
+        ensure!(
+            x.ndim() == 2 && x.shape()[1] == self.in_dim(),
+            "conv {what}: expected [batch, {}], got {:?}",
+            self.in_dim(),
+            x.shape()
+        );
+        Ok(x.shape()[0])
+    }
+}
+
+impl Layer for Conv2d {
+    fn name(&self) -> String {
+        let (oh, ow) = self.out_hw();
+        format!(
+            "conv2d[{}x{}x{}->{}x{}x{},k{},s{},p{}{}]",
+            self.in_h,
+            self.in_w,
+            self.in_c,
+            oh,
+            ow,
+            self.out_c,
+            self.k,
+            self.stride,
+            self.pad,
+            if self.relu { ",relu" } else { "" }
+        )
+    }
+
+    fn in_dim(&self) -> usize {
+        self.in_h * self.in_w * self.in_c
+    }
+
+    fn out_dim(&self) -> usize {
+        let (oh, ow) = self.out_hw();
+        oh * ow * self.out_c
+    }
+
+    fn checkpoint_tag(&self) -> u32 {
+        3
+    }
+
+    fn param_shapes(&self) -> (Vec<usize>, Vec<usize>) {
+        (vec![self.patch(), self.out_c], vec![self.out_c])
+    }
+
+    fn init_params(&self, init_scale: f32, rng: &mut Rng) -> (Tensor, Tensor) {
+        // He init on the receptive-field fan-in (k·k·in_c).
+        let std = init_scale * (2.0 / self.patch() as f32).sqrt();
+        (Tensor::randn(&[self.patch(), self.out_c], std, rng), Tensor::zeros(&[self.out_c]))
+    }
+
+    fn cost(&self, batch: usize) -> LayerCost {
+        let (oh, ow) = self.out_hw();
+        let madds = (batch * oh * ow * self.out_c * self.patch()) as u64;
+        LayerCost {
+            fwd_flops: 2 * madds,
+            // dw + dcols matmuls, each the forward's size (the im2col
+            // gathers are bandwidth, not flops).
+            bwd_flops: 4 * madds,
+            act_bytes: (batch * oh * ow * self.out_c * 4) as u64,
+            param_bytes: ((self.patch() * self.out_c + self.out_c) * 4) as u64,
+        }
+    }
+
+    /// im2col → matmul (worker-pool parallel for large shapes) → fused
+    /// bias(+ReLU) epilogue → reshape to the flat NHWC wire format.
+    fn forward_into(
+        &mut self,
+        exec: &dyn Exec,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        let _ = exec; // host kernels; PJRT conv artifacts are an open item
+        let bsz = self.check_input(x, "forward")?;
+        ensure!(
+            w.shape() == [self.patch(), self.out_c] && b.shape() == [self.out_c],
+            "conv forward: param shapes {:?}/{:?} vs expected [{}, {}]/[{}]",
+            w.shape(),
+            b.shape(),
+            self.patch(),
+            self.out_c,
+            self.out_c
+        );
+        let mut cols = std::mem::replace(&mut self.cols, Tensor::empty());
+        self.im2col(x, &mut cols);
+        tensor::matmul_into(&cols, w, out); // [bsz·oh·ow, out_c]
+        self.cols = cols;
+        tensor::bias_act_inplace(out, b, self.relu);
+        out.resize(&[bsz, self.out_dim()]); // same storage, wire shape
+        Ok(())
+    }
+
+    /// Fused ReLU-mask + per-channel bias-grad epilogue into `scratch`
+    /// (= `dz`), then `dw = colsᵀ·dz` and `dx = col2im(dz·wᵀ)`.
+    fn backward_into(
+        &mut self,
+        exec: &dyn Exec,
+        x: &Tensor,
+        y: &Tensor,
+        w: &Tensor,
+        dy: &Tensor,
+        scratch: &mut Tensor,
+        dx: &mut Tensor,
+        dw: &mut Tensor,
+        db: &mut Tensor,
+    ) -> Result<()> {
+        let _ = exec;
+        let bsz = self.check_input(x, "backward")?;
+        ensure!(
+            y.shape() == [bsz, self.out_dim()] && dy.shape() == y.shape(),
+            "conv backward: y {:?} / dy {:?} vs expected [{bsz}, {}]",
+            y.shape(),
+            dy.shape(),
+            self.out_dim()
+        );
+        ensure!(
+            w.shape() == [self.patch(), self.out_c],
+            "conv backward: weight shape {:?} vs expected [{}, {}]",
+            w.shape(),
+            self.patch(),
+            self.out_c
+        );
+        let (oh, ow) = self.out_hw();
+        let rows = bsz * oh * ow;
+        let oc = self.out_c;
+
+        // dz = dy ⊙ (y > 0 when relu), db[ch] = Σ dz[·, ch]: one
+        // streaming pass over the [rows, out_c] channel-major view —
+        // same element order as the dense fused epilogue.
+        scratch.resize(&[rows, oc]);
+        db.resize(&[oc]);
+        db.fill(0.0);
+        let (yd, dyd) = (y.data(), dy.data());
+        let zd = scratch.data_mut();
+        let bd = db.data_mut();
+        for r in 0..rows {
+            let o = r * oc;
+            for (ch, sv) in bd.iter_mut().enumerate() {
+                let mut g = dyd[o + ch];
+                if self.relu && yd[o + ch] <= 0.0 {
+                    g = 0.0;
+                }
+                zd[o + ch] = g;
+                *sv += g;
+            }
+        }
+
+        // dw = colsᵀ @ dz — im2col recomputed from the stashed input
+        // (see module docs on the recompute-over-stash tradeoff).
+        let mut cols = std::mem::replace(&mut self.cols, Tensor::empty());
+        self.im2col(x, &mut cols);
+        tensor::matmul_tn_into(&cols, scratch, dw);
+        self.cols = cols;
+
+        // dx = col2im(dz @ wᵀ).
+        let mut dcols = std::mem::replace(&mut self.dcols, Tensor::empty());
+        tensor::matmul_nt_into(scratch, w, &mut dcols);
+        dx.resize(&[bsz, self.in_dim()]);
+        dx.fill(0.0);
+        self.col2im_add(&dcols, dx);
+        self.dcols = dcols;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::HostBackend;
+
+    /// Direct (quadruple-loop) conv reference in NHWC.
+    fn naive_conv(op: &Conv2d, x: &Tensor, w: &Tensor, b: &Tensor) -> Tensor {
+        let bsz = x.shape()[0];
+        let (oh, ow) = op.out_hw();
+        let (h, wd, c, oc, k) = (op.in_h, op.in_w, op.in_c, op.out_c, op.k);
+        let mut out = Tensor::zeros(&[bsz, oh * ow * oc]);
+        for bi in 0..bsz {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for ch in 0..oc {
+                        let mut s = b.data()[ch];
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let iy = (oy * op.stride + ky) as isize - op.pad as isize;
+                                let ix = (ox * op.stride + kx) as isize - op.pad as isize;
+                                if iy < 0 || iy >= h as isize || ix < 0 || ix >= wd as isize {
+                                    continue;
+                                }
+                                for ci in 0..c {
+                                    let xv = x.data()
+                                        [bi * h * wd * c + (iy as usize * wd + ix as usize) * c + ci];
+                                    let wv = w.data()[((ky * k + kx) * c + ci) * oc + ch];
+                                    s += xv * wv;
+                                }
+                            }
+                        }
+                        if op.relu {
+                            s = s.max(0.0);
+                        }
+                        out.data_mut()[bi * oh * ow * oc + (oy * ow + ox) * oc + ch] = s;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn mk(relu: bool) -> (Conv2d, Tensor, Tensor, Tensor) {
+        let mut rng = Rng::new(11);
+        let op = Conv2d::new(5, 6, 2, 3, 3, 1, 1, relu).unwrap();
+        let (w, b0) = op.init_params(1.0, &mut rng);
+        let mut b = b0;
+        rng.fill_normal_f32(b.data_mut(), 0.1); // nonzero bias for coverage
+        let x = Tensor::randn(&[2, op.in_dim()], 1.0, &mut rng);
+        (op, x, w, b)
+    }
+
+    #[test]
+    fn forward_matches_naive_conv() {
+        for relu in [false, true] {
+            let (mut op, x, w, b) = mk(relu);
+            let be = HostBackend::new();
+            let mut y = Tensor::empty();
+            op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+            assert_eq!(y.shape(), &[2, op.out_dim()]);
+            let want = naive_conv(&op, &x, &w, &b);
+            assert!(y.max_abs_diff(&want) < 1e-4, "relu={relu}");
+        }
+    }
+
+    #[test]
+    fn forward_into_dirty_buffer_is_clean() {
+        let (mut op, x, w, b) = mk(true);
+        let be = HostBackend::new();
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        let mut dirty = Tensor::randn(&[3, 7], 9.0, &mut Rng::new(1));
+        op.forward_into(&be, &x, &w, &b, &mut dirty).unwrap();
+        assert_eq!(y, dirty);
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        // Scalar-project the output and check every gradient against
+        // central differences (strides/padding exercised).
+        let mut rng = Rng::new(21);
+        let mut op = Conv2d::new(4, 4, 2, 3, 3, 2, 1, true).unwrap();
+        let (w, b) = op.init_params(1.0, &mut rng);
+        let x = Tensor::randn(&[2, op.in_dim()], 1.0, &mut rng);
+        let proj = Tensor::randn(&[2, op.out_dim()], 1.0, &mut rng);
+        let be = HostBackend::new();
+        let mut fwd = |op: &mut Conv2d, x: &Tensor, w: &Tensor, b: &Tensor| -> f32 {
+            let mut y = Tensor::empty();
+            op.forward_into(&be, x, w, b, &mut y).unwrap();
+            y.data().iter().zip(proj.data()).map(|(a, p)| a * p).sum()
+        };
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        let (mut scr, mut dx, mut dw, mut db) =
+            (Tensor::empty(), Tensor::empty(), Tensor::empty(), Tensor::empty());
+        op.backward_into(&be, &x, &y, &w, &proj, &mut scr, &mut dx, &mut dw, &mut db).unwrap();
+        let eps = 1e-2;
+        let mut check = |which: &str, grad: &Tensor| {
+            let target = match which {
+                "w" => &w,
+                "b" => &b,
+                _ => &x,
+            };
+            for idx in 0..target.len() {
+                let (mut tp, mut tm) = (target.clone(), target.clone());
+                tp.data_mut()[idx] += eps;
+                tm.data_mut()[idx] -= eps;
+                let (fp, fm) = match which {
+                    "w" => (fwd(&mut op, &x, &tp, &b), fwd(&mut op, &x, &tm, &b)),
+                    "b" => (fwd(&mut op, &x, &w, &tp), fwd(&mut op, &x, &w, &tm)),
+                    _ => (fwd(&mut op, &tp, &w, &b), fwd(&mut op, &tm, &w, &b)),
+                };
+                let fd = (fp - fm) / (2.0 * eps);
+                assert!(
+                    (fd - grad.data()[idx]).abs() < 3e-2,
+                    "{which}[{idx}]: fd {fd} vs analytic {}",
+                    grad.data()[idx]
+                );
+            }
+        };
+        check("w", &dw);
+        check("b", &db);
+        check("x", &dx);
+    }
+
+    #[test]
+    fn workspaces_persist_across_calls() {
+        let (mut op, x, w, b) = mk(true);
+        let be = HostBackend::new();
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        let cap0 = op.cols.len();
+        assert!(cap0 > 0, "im2col workspace materialized");
+        let y0 = y.clone();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        assert_eq!(y, y0, "repeat forward is deterministic");
+        assert_eq!(op.cols.len(), cap0, "workspace reused, not regrown");
+    }
+
+    #[test]
+    fn rejects_bad_geometry_and_shapes() {
+        assert!(Conv2d::new(2, 2, 1, 1, 5, 1, 0, true).is_err()); // kernel > input
+        assert!(Conv2d::new(4, 4, 1, 0, 3, 1, 1, true).is_err()); // zero out_c
+        let (mut op, _, w, b) = mk(true);
+        let bad = Tensor::zeros(&[2, 7]);
+        let be = HostBackend::new();
+        let mut y = Tensor::empty();
+        assert!(op.forward_into(&be, &bad, &w, &b, &mut y).is_err());
+    }
+
+    #[test]
+    fn cost_counts_receptive_field() {
+        let op = Conv2d::new(8, 8, 2, 4, 3, 1, 1, true).unwrap();
+        let c = op.cost(2);
+        // 2 · B·oh·ow·oc·k²·ic = 2 · 2·8·8·4·18
+        assert_eq!(c.fwd_flops, 2 * 2 * 8 * 8 * 4 * 18);
+        assert_eq!(c.bwd_flops, 2 * c.fwd_flops);
+        assert_eq!(c.act_bytes, (2 * 8 * 8 * 4 * 4) as u64);
+    }
+}

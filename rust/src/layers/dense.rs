@@ -1,0 +1,151 @@
+//! Fully connected layer — the port of the seed's `LayerRole` path.
+//!
+//! Compute still dispatches through [`Exec`]'s dense methods, so the
+//! PJRT backend keeps serving dense layers from its lowered artifacts
+//! while conv/pool/LIF run on host kernels (PJRT artifacts for those are
+//! a ROADMAP open item).
+
+use super::{Layer, LayerCost};
+use crate::backend::Exec;
+use crate::model::LayerRole;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// `y = act(x @ w + b)` with `w: [din, dout]`, optional fused ReLU.
+pub struct Dense {
+    din: usize,
+    dout: usize,
+    role: LayerRole,
+}
+
+impl Dense {
+    /// `index` is the layer's position in the stack; the role (and thus
+    /// the artifact name + ReLU) follows [`super::dense_role`].
+    pub fn new(din: usize, dout: usize, relu: bool, index: usize) -> Dense {
+        Dense { din, dout, role: super::dense_role(index, relu) }
+    }
+
+    pub fn role(&self) -> LayerRole {
+        self.role
+    }
+}
+
+impl Layer for Dense {
+    fn name(&self) -> String {
+        format!(
+            "dense[{}x{}{}]",
+            self.din,
+            self.dout,
+            if self.role.has_relu() { ",relu" } else { "" }
+        )
+    }
+
+    fn in_dim(&self) -> usize {
+        self.din
+    }
+
+    fn out_dim(&self) -> usize {
+        self.dout
+    }
+
+    fn checkpoint_tag(&self) -> u32 {
+        // Mirrors the v1 checkpoint role tags (Input/Hidden/Output).
+        match self.role {
+            LayerRole::Input => 0,
+            LayerRole::Hidden => 1,
+            LayerRole::Output => 2,
+        }
+    }
+
+    fn param_shapes(&self) -> (Vec<usize>, Vec<usize>) {
+        (vec![self.din, self.dout], vec![self.dout])
+    }
+
+    fn init_params(&self, init_scale: f32, rng: &mut Rng) -> (Tensor, Tensor) {
+        // He init (ReLU nets), zero biases — identical to `Mlp::init`.
+        let std = init_scale * (2.0 / self.din as f32).sqrt();
+        (Tensor::randn(&[self.din, self.dout], std, rng), Tensor::zeros(&[self.dout]))
+    }
+
+    fn cost(&self, batch: usize) -> LayerCost {
+        let madds = (batch * self.din * self.dout) as u64;
+        LayerCost {
+            fwd_flops: 2 * madds,
+            // Backward runs two matmuls (dx, dw) of the forward's size.
+            bwd_flops: 4 * madds,
+            act_bytes: (batch * self.dout * 4) as u64,
+            param_bytes: ((self.din * self.dout + self.dout) * 4) as u64,
+        }
+    }
+
+    fn forward_into(
+        &mut self,
+        exec: &dyn Exec,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        exec.forward_into(self.role, x, w, b, out)
+    }
+
+    fn backward_into(
+        &mut self,
+        exec: &dyn Exec,
+        x: &Tensor,
+        y: &Tensor,
+        w: &Tensor,
+        dy: &Tensor,
+        scratch: &mut Tensor,
+        dx: &mut Tensor,
+        dw: &mut Tensor,
+        db: &mut Tensor,
+    ) -> Result<()> {
+        exec.backward_into(self.role, x, y, w, dy, scratch, dx, dw, db)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::HostBackend;
+
+    #[test]
+    fn dense_matches_exec_role_dispatch() {
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let be = HostBackend::new();
+        let mut op = Dense::new(5, 4, true, 1);
+        assert_eq!(op.role(), LayerRole::Hidden);
+        let (w, b) = op.init_params(1.0, &mut rng);
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        assert_eq!(y, be.forward(LayerRole::Hidden, &x, &w, &b).unwrap());
+
+        let dy = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let (mut scr, mut dx, mut dw, mut db) =
+            (Tensor::empty(), Tensor::empty(), Tensor::empty(), Tensor::empty());
+        op.backward_into(&be, &x, &y, &w, &dy, &mut scr, &mut dx, &mut dw, &mut db).unwrap();
+        let (dx2, dw2, db2) = be.backward(LayerRole::Hidden, &x, &y, &w, &dy).unwrap();
+        assert_eq!((dx, dw, db), (dx2, dw2, db2));
+    }
+
+    #[test]
+    fn role_assignment_matches_seed_table() {
+        assert_eq!(Dense::new(4, 4, true, 0).role(), LayerRole::Input);
+        assert_eq!(Dense::new(4, 4, true, 2).role(), LayerRole::Hidden);
+        assert_eq!(Dense::new(4, 4, false, 2).role(), LayerRole::Output);
+        assert_eq!(Dense::new(4, 4, false, 0).role(), LayerRole::Output);
+    }
+
+    #[test]
+    fn cost_scales_with_batch() {
+        let op = Dense::new(8, 16, true, 1);
+        let c1 = op.cost(1);
+        let c4 = op.cost(4);
+        assert_eq!(c4.fwd_flops, 4 * c1.fwd_flops);
+        assert_eq!(c4.param_bytes, c1.param_bytes);
+        assert_eq!(c1.fwd_flops, 2 * 8 * 16);
+    }
+}

@@ -1,0 +1,128 @@
+//! Spatial → flat marker layer.
+//!
+//! Activations are already flattened NHWC on the wire, so flatten is an
+//! identity copy; it exists so specs state the spatial/flat transition
+//! explicitly and so stage partitions can place the boundary on a
+//! zero-FLOP layer when that balances compute.
+
+use super::{Layer, LayerCost};
+use crate::backend::Exec;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Identity on `[batch, dim]` (parameter-free).
+pub struct Flatten {
+    dim: usize,
+}
+
+impl Flatten {
+    pub fn new(dim: usize) -> Flatten {
+        Flatten { dim }
+    }
+}
+
+impl Layer for Flatten {
+    fn name(&self) -> String {
+        format!("flatten[{}]", self.dim)
+    }
+
+    fn in_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn checkpoint_tag(&self) -> u32 {
+        5
+    }
+
+    fn cost(&self, batch: usize) -> LayerCost {
+        LayerCost {
+            fwd_flops: 0,
+            bwd_flops: 0,
+            act_bytes: (batch * self.dim * 4) as u64,
+            param_bytes: 0,
+        }
+    }
+
+    fn forward_into(
+        &mut self,
+        exec: &dyn Exec,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        let _ = (exec, w, b);
+        ensure!(
+            x.ndim() == 2 && x.shape()[1] == self.dim,
+            "flatten: expected [batch, {}], got {:?}",
+            self.dim,
+            x.shape()
+        );
+        out.copy_from(x);
+        Ok(())
+    }
+
+    fn backward_into(
+        &mut self,
+        exec: &dyn Exec,
+        x: &Tensor,
+        y: &Tensor,
+        w: &Tensor,
+        dy: &Tensor,
+        scratch: &mut Tensor,
+        dx: &mut Tensor,
+        dw: &mut Tensor,
+        db: &mut Tensor,
+    ) -> Result<()> {
+        let _ = (exec, x, y, w, scratch);
+        ensure!(
+            dy.ndim() == 2 && dy.shape()[1] == self.dim,
+            "flatten backward: expected [batch, {}], got {:?}",
+            self.dim,
+            dy.shape()
+        );
+        dx.copy_from(dy);
+        dw.resize(&[0]);
+        db.resize(&[0]);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::HostBackend;
+    use crate::util::Rng;
+
+    #[test]
+    fn flatten_is_identity_both_ways() {
+        let mut rng = Rng::new(2);
+        let mut op = Flatten::new(12);
+        let x = Tensor::randn(&[3, 12], 1.0, &mut rng);
+        let dy = Tensor::randn(&[3, 12], 1.0, &mut rng);
+        let be = HostBackend::new();
+        let (w, b) = (Tensor::zeros(&[0]), Tensor::zeros(&[0]));
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        assert_eq!(y, x);
+        let (mut scr, mut dx, mut dw, mut db) =
+            (Tensor::empty(), Tensor::empty(), Tensor::empty(), Tensor::empty());
+        op.backward_into(&be, &x, &y, &w, &dy, &mut scr, &mut dx, &mut dw, &mut db).unwrap();
+        assert_eq!(dx, dy);
+        assert_eq!(dw.shape(), &[0]);
+        assert_eq!(op.cost(4).total_flops(), 0);
+    }
+
+    #[test]
+    fn width_mismatch_is_an_error() {
+        let mut op = Flatten::new(8);
+        let be = HostBackend::new();
+        let (w, b) = (Tensor::zeros(&[0]), Tensor::zeros(&[0]));
+        let mut y = Tensor::empty();
+        assert!(op.forward_into(&be, &Tensor::zeros(&[2, 9]), &w, &b, &mut y).is_err());
+    }
+}

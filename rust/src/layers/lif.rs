@@ -1,0 +1,212 @@
+//! Leaky-integrate-and-fire spiking activation with a surrogate gradient.
+//!
+//! The layer treats its input as the membrane potential `v` (produced by
+//! the preceding linear/conv synapse layer) and emits a binary spike
+//! `s = 𝟙[v ≥ v_th]`. The spike function's true derivative is zero
+//! almost everywhere, so the backward substitutes the standard
+//! triangular surrogate (STBP/SuperSpike family):
+//!
+//! ```text
+//! ∂s/∂v ≈ max(0, 1 − |v − v_th| / α) / α
+//! ```
+//!
+//! a unit-mass tent centered on the threshold whose width `α` bounds the
+//! gradient support. The surrogate reads the *stashed* membrane
+//! potential (the layer input, which the pipeline already retains for
+//! the delayed backward), so spiking layers ride the existing
+//! DLMS-style delayed-update machinery unchanged: their upstream synapse
+//! weights receive gradients delayed by `d = 2·S(l)` and every
+//! weight-version strategy (stash / latest / EMA recompute) applies
+//! as-is.
+//!
+//! Single-timestep rate-free formulation: with one pipeline iteration
+//! per batch there is no temporal membrane state to carry, which keeps
+//! the layer stateless and the oracle/executor equivalence exact.
+
+use super::{Layer, LayerCost};
+use crate::backend::Exec;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Spiking activation: `s = 𝟙[v ≥ v_th]`, triangular surrogate backward.
+pub struct Lif {
+    dim: usize,
+    v_th: f32,
+    alpha: f32,
+}
+
+impl Lif {
+    pub fn new(dim: usize, v_th: f32, alpha: f32) -> Result<Lif> {
+        ensure!(dim > 0, "lif width must be positive");
+        ensure!(alpha > 0.0, "lif surrogate width must be positive, got {alpha}");
+        Ok(Lif { dim, v_th, alpha })
+    }
+
+    /// The surrogate derivative at membrane potential `v`.
+    pub fn surrogate(&self, v: f32) -> f32 {
+        (1.0 - (v - self.v_th).abs() / self.alpha).max(0.0) / self.alpha
+    }
+}
+
+impl Layer for Lif {
+    fn name(&self) -> String {
+        format!("lif[{},vth={},alpha={}]", self.dim, self.v_th, self.alpha)
+    }
+
+    fn in_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn checkpoint_tag(&self) -> u32 {
+        6
+    }
+
+    fn cost(&self, batch: usize) -> LayerCost {
+        let n = (batch * self.dim) as u64;
+        LayerCost {
+            fwd_flops: n,      // one threshold compare per element
+            bwd_flops: 2 * n,  // tent eval + multiply
+            act_bytes: (batch * self.dim * 4) as u64,
+            param_bytes: 0,
+        }
+    }
+
+    fn forward_into(
+        &mut self,
+        exec: &dyn Exec,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        let _ = (exec, w, b);
+        ensure!(
+            x.ndim() == 2 && x.shape()[1] == self.dim,
+            "lif: expected [batch, {}], got {:?}",
+            self.dim,
+            x.shape()
+        );
+        out.resize(x.shape());
+        let th = self.v_th;
+        for (ov, xv) in out.data_mut().iter_mut().zip(x.data().iter()) {
+            *ov = if *xv >= th { 1.0 } else { 0.0 };
+        }
+        Ok(())
+    }
+
+    fn backward_into(
+        &mut self,
+        exec: &dyn Exec,
+        x: &Tensor,
+        y: &Tensor,
+        w: &Tensor,
+        dy: &Tensor,
+        scratch: &mut Tensor,
+        dx: &mut Tensor,
+        dw: &mut Tensor,
+        db: &mut Tensor,
+    ) -> Result<()> {
+        let _ = (exec, y, w, scratch);
+        ensure!(
+            x.ndim() == 2 && x.shape()[1] == self.dim && dy.shape() == x.shape(),
+            "lif backward: x {:?} / dy {:?} vs width {}",
+            x.shape(),
+            dy.shape(),
+            self.dim
+        );
+        dx.resize(x.shape());
+        let (th, al) = (self.v_th, self.alpha);
+        for ((gv, xv), dv) in dx
+            .data_mut()
+            .iter_mut()
+            .zip(x.data().iter())
+            .zip(dy.data().iter())
+        {
+            let tent = (1.0 - (xv - th).abs() / al).max(0.0) / al;
+            *gv = dv * tent;
+        }
+        dw.resize(&[0]);
+        db.resize(&[0]);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::HostBackend;
+
+    #[test]
+    fn spikes_are_binary_thresholded() {
+        let mut op = Lif::new(4, 0.5, 1.0).unwrap();
+        let x = Tensor::from_vec(&[1, 4], vec![-1.0, 0.5, 0.49, 2.0]);
+        let be = HostBackend::new();
+        let (w, b) = (Tensor::zeros(&[0]), Tensor::zeros(&[0]));
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        assert_eq!(y.data(), &[0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn surrogate_is_a_unit_tent_at_threshold() {
+        let op = Lif::new(1, 1.0, 0.5).unwrap();
+        assert_eq!(op.surrogate(1.0), 2.0); // peak 1/α
+        assert_eq!(op.surrogate(1.5), 0.0); // support edge
+        assert_eq!(op.surrogate(0.4), 0.0); // outside support
+        let mid = op.surrogate(1.25);
+        assert!((mid - 1.0).abs() < 1e-6, "half-way down the tent: {mid}");
+        // Unit mass: ∫ tent = α·(1/α) = 1 — spot-check by symmetry.
+        assert_eq!(op.surrogate(0.75), op.surrogate(1.25));
+    }
+
+    #[test]
+    fn backward_masks_gradient_by_membrane_distance() {
+        let mut op = Lif::new(3, 0.0, 1.0).unwrap();
+        let x = Tensor::from_vec(&[1, 3], vec![0.0, 0.5, 5.0]);
+        let dy = Tensor::from_vec(&[1, 3], vec![1.0, 1.0, 1.0]);
+        let be = HostBackend::new();
+        let (w, b) = (Tensor::zeros(&[0]), Tensor::zeros(&[0]));
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        let (mut scr, mut dx, mut dw, mut db) =
+            (Tensor::empty(), Tensor::empty(), Tensor::empty(), Tensor::empty());
+        op.backward_into(&be, &x, &y, &w, &dy, &mut scr, &mut dx, &mut dw, &mut db).unwrap();
+        assert_eq!(dx.data(), &[1.0, 0.5, 0.0]);
+        assert_eq!(dw.shape(), &[0]);
+        assert_eq!(db.shape(), &[0]);
+    }
+
+    #[test]
+    fn surrogate_matches_finite_difference_of_smoothed_spike() {
+        // The tent is the exact derivative of the piecewise-linear
+        // "hard sigmoid" relaxation clamp((v - v_th + α)/(2α)·2, 0, 1)…
+        // verified here as: integral of the surrogate from far-left to v
+        // equals the relaxed spike value.
+        let op = Lif::new(1, 0.0, 1.0).unwrap();
+        let relaxed = |v: f32| -> f32 {
+            // ∫ tent = piecewise quadratic ramp from 0 to 1 over [−α, α].
+            if v <= -1.0 {
+                0.0
+            } else if v >= 1.0 {
+                1.0
+            } else if v < 0.0 {
+                0.5 * (1.0 + v) * (1.0 + v)
+            } else {
+                1.0 - 0.5 * (1.0 - v) * (1.0 - v)
+            }
+        };
+        let eps = 1e-3;
+        for v in [-0.9f32, -0.3, 0.0, 0.4, 0.8] {
+            let fd = (relaxed(v + eps) - relaxed(v - eps)) / (2.0 * eps);
+            assert!(
+                (fd - op.surrogate(v)).abs() < 1e-2,
+                "v={v}: fd {fd} vs tent {}",
+                op.surrogate(v)
+            );
+        }
+    }
+}

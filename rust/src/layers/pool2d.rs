@@ -1,0 +1,286 @@
+//! 2-D max pooling over NHWC maps (parameter-free).
+//!
+//! The backward *recomputes* each window's argmax from the stashed input
+//! instead of saving index maps per in-flight batch — the same
+//! recompute-over-stash tradeoff as the conv im2col (and deterministic:
+//! ties resolve to the first maximum in scan order in both passes).
+
+use super::{Layer, LayerCost};
+use crate::backend::Exec;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// `y[b, oy, ox, c] = max` over a `k×k` window with the given stride
+/// (no padding).
+pub struct MaxPool2d {
+    in_h: usize,
+    in_w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+}
+
+impl MaxPool2d {
+    pub fn new(in_h: usize, in_w: usize, c: usize, k: usize, stride: usize) -> Result<MaxPool2d> {
+        ensure!(in_h > 0 && in_w > 0 && c > 0, "pool input dims must be positive");
+        ensure!(k > 0 && stride > 0, "pool k/stride must be positive");
+        ensure!(k <= in_h && k <= in_w, "pool window {k} exceeds input {in_h}x{in_w}");
+        Ok(MaxPool2d { in_h, in_w, c, k, stride })
+    }
+
+    /// Output spatial dims `(oh, ow)`.
+    pub fn out_hw(&self) -> (usize, usize) {
+        ((self.in_h - self.k) / self.stride + 1, (self.in_w - self.k) / self.stride + 1)
+    }
+
+    /// Flat NHWC index of the argmax of window `(oy, ox)`, channel `ch`,
+    /// within one sample's map. First maximum in `(ky, kx)` scan order
+    /// wins — the single tie rule both passes share.
+    fn argmax(&self, map: &[f32], oy: usize, ox: usize, ch: usize) -> usize {
+        let (w, c) = (self.in_w, self.c);
+        let mut best_at = (oy * self.stride * w + ox * self.stride) * c + ch;
+        let mut best = map[best_at];
+        for ky in 0..self.k {
+            let iy = oy * self.stride + ky;
+            for kx in 0..self.k {
+                let ix = ox * self.stride + kx;
+                let at = (iy * w + ix) * c + ch;
+                if map[at] > best {
+                    best = map[at];
+                    best_at = at;
+                }
+            }
+        }
+        best_at
+    }
+
+    fn check_input(&self, x: &Tensor, what: &str) -> Result<usize> {
+        ensure!(
+            x.ndim() == 2 && x.shape()[1] == self.in_dim(),
+            "max-pool {what}: expected [batch, {}], got {:?}",
+            self.in_dim(),
+            x.shape()
+        );
+        Ok(x.shape()[0])
+    }
+}
+
+impl Layer for MaxPool2d {
+    fn name(&self) -> String {
+        let (oh, ow) = self.out_hw();
+        format!(
+            "maxpool[{}x{}x{}->{}x{}x{},k{},s{}]",
+            self.in_h, self.in_w, self.c, oh, ow, self.c, self.k, self.stride
+        )
+    }
+
+    fn in_dim(&self) -> usize {
+        self.in_h * self.in_w * self.c
+    }
+
+    fn out_dim(&self) -> usize {
+        let (oh, ow) = self.out_hw();
+        oh * ow * self.c
+    }
+
+    fn checkpoint_tag(&self) -> u32 {
+        4
+    }
+
+    fn cost(&self, batch: usize) -> LayerCost {
+        let (oh, ow) = self.out_hw();
+        let compares = (batch * oh * ow * self.c * self.k * self.k) as u64;
+        LayerCost {
+            fwd_flops: compares,
+            bwd_flops: compares, // argmax recompute + scatter
+            act_bytes: (batch * oh * ow * self.c * 4) as u64,
+            param_bytes: 0,
+        }
+    }
+
+    fn forward_into(
+        &mut self,
+        exec: &dyn Exec,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        let _ = (exec, w, b);
+        let bsz = self.check_input(x, "forward")?;
+        let (oh, ow) = self.out_hw();
+        out.resize(&[bsz, self.out_dim()]);
+        let xd = x.data();
+        let od = out.data_mut();
+        let per = self.in_dim();
+        let oper = oh * ow * self.c;
+        for bi in 0..bsz {
+            let map = &xd[bi * per..(bi + 1) * per];
+            let orow = &mut od[bi * oper..(bi + 1) * oper];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for ch in 0..self.c {
+                        orow[(oy * ow + ox) * self.c + ch] =
+                            map[self.argmax(map, oy, ox, ch)];
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn backward_into(
+        &mut self,
+        exec: &dyn Exec,
+        x: &Tensor,
+        y: &Tensor,
+        w: &Tensor,
+        dy: &Tensor,
+        scratch: &mut Tensor,
+        dx: &mut Tensor,
+        dw: &mut Tensor,
+        db: &mut Tensor,
+    ) -> Result<()> {
+        let _ = (exec, y, w, scratch);
+        let bsz = self.check_input(x, "backward")?;
+        ensure!(
+            dy.shape() == [bsz, self.out_dim()],
+            "max-pool backward: dy {:?} vs expected [{bsz}, {}]",
+            dy.shape(),
+            self.out_dim()
+        );
+        let (oh, ow) = self.out_hw();
+        dx.resize(&[bsz, self.in_dim()]);
+        dx.fill(0.0);
+        dw.resize(&[0]);
+        db.resize(&[0]);
+        let xd = x.data();
+        let gd = dy.data();
+        let xgd = dx.data_mut();
+        let per = self.in_dim();
+        let oper = oh * ow * self.c;
+        for bi in 0..bsz {
+            let map = &xd[bi * per..(bi + 1) * per];
+            let grow = &gd[bi * oper..(bi + 1) * oper];
+            let xrow = &mut xgd[bi * per..(bi + 1) * per];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for ch in 0..self.c {
+                        // Overlapping windows (stride < k) accumulate.
+                        xrow[self.argmax(map, oy, ox, ch)] +=
+                            grow[(oy * ow + ox) * self.c + ch];
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::HostBackend;
+    use crate::util::Rng;
+
+    #[test]
+    fn forward_picks_window_maxima() {
+        // 1 sample, 2x2 pool on a 4x4 single-channel map.
+        let mut op = MaxPool2d::new(4, 4, 1, 2, 2).unwrap();
+        #[rustfmt::skip]
+        let x = Tensor::from_vec(&[1, 16], vec![
+            1.0, 2.0, 3.0, 4.0,
+            5.0, 6.0, 7.0, 8.0,
+            9.0, 1.0, 2.0, 3.0,
+            4.0, 5.0, 6.0, 7.0,
+        ]);
+        let be = HostBackend::new();
+        let (w, b) = (Tensor::zeros(&[0]), Tensor::zeros(&[0]));
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        assert_eq!(y.shape(), &[1, 4]);
+        assert_eq!(y.data(), &[6.0, 8.0, 9.0, 7.0]);
+    }
+
+    #[test]
+    fn backward_routes_gradient_to_argmax() {
+        let mut op = MaxPool2d::new(4, 4, 1, 2, 2).unwrap();
+        #[rustfmt::skip]
+        let x = Tensor::from_vec(&[1, 16], vec![
+            1.0, 2.0, 3.0, 4.0,
+            5.0, 6.0, 7.0, 8.0,
+            9.0, 1.0, 2.0, 3.0,
+            4.0, 5.0, 6.0, 7.0,
+        ]);
+        let be = HostBackend::new();
+        let (w, b) = (Tensor::zeros(&[0]), Tensor::zeros(&[0]));
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        let dy = Tensor::from_vec(&[1, 4], vec![10.0, 20.0, 30.0, 40.0]);
+        let (mut scr, mut dx, mut dw, mut db) =
+            (Tensor::empty(), Tensor::empty(), Tensor::empty(), Tensor::empty());
+        op.backward_into(&be, &x, &y, &w, &dy, &mut scr, &mut dx, &mut dw, &mut db).unwrap();
+        assert_eq!(dw.shape(), &[0]);
+        assert_eq!(db.shape(), &[0]);
+        let mut want = vec![0.0f32; 16];
+        want[5] = 10.0; // 6
+        want[7] = 20.0; // 8
+        want[8] = 30.0; // 9
+        want[15] = 40.0; // 7
+        assert_eq!(dx.data(), &want[..]);
+    }
+
+    #[test]
+    fn ties_resolve_identically_in_both_passes() {
+        // A constant map: forward's max equals the first window element,
+        // so backward must route everything there too.
+        let mut op = MaxPool2d::new(2, 2, 1, 2, 2).unwrap();
+        let x = Tensor::from_vec(&[1, 4], vec![3.0; 4]);
+        let be = HostBackend::new();
+        let (w, b) = (Tensor::zeros(&[0]), Tensor::zeros(&[0]));
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        assert_eq!(y.data(), &[3.0]);
+        let dy = Tensor::from_vec(&[1, 1], vec![5.0]);
+        let (mut scr, mut dx, mut dw, mut db) =
+            (Tensor::empty(), Tensor::empty(), Tensor::empty(), Tensor::empty());
+        op.backward_into(&be, &x, &y, &w, &dy, &mut scr, &mut dx, &mut dw, &mut db).unwrap();
+        assert_eq!(dx.data(), &[5.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn multichannel_pooling_is_per_channel() {
+        let mut rng = Rng::new(8);
+        let mut op = MaxPool2d::new(4, 4, 3, 2, 2).unwrap();
+        let x = Tensor::randn(&[2, op.in_dim()], 1.0, &mut rng);
+        let be = HostBackend::new();
+        let (w, b) = (Tensor::zeros(&[0]), Tensor::zeros(&[0]));
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        assert_eq!(y.shape(), &[2, 2 * 2 * 3]);
+        // Every output equals the max over its window, per channel.
+        for bi in 0..2 {
+            for oy in 0..2 {
+                for ox in 0..2 {
+                    for ch in 0..3 {
+                        let got = y.data()[bi * 12 + (oy * 2 + ox) * 3 + ch];
+                        let mut want = f32::NEG_INFINITY;
+                        for ky in 0..2 {
+                            for kx in 0..2 {
+                                let at = bi * 48 + ((oy * 2 + ky) * 4 + ox * 2 + kx) * 3 + ch;
+                                want = want.max(x.data()[at]);
+                            }
+                        }
+                        assert_eq!(got, want);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        assert!(MaxPool2d::new(2, 2, 1, 3, 1).is_err());
+        assert!(MaxPool2d::new(4, 4, 0, 2, 2).is_err());
+    }
+}

@@ -24,6 +24,10 @@
 //!   and the paper's **pipeline-aware EMA weight recompute** ([`ema`]);
 //! - the five weight-handling **strategies** of the paper's Fig. 5
 //!   ([`strategy`]) and the delayed-gradient **trainer** ([`train`]);
+//! - a **heterogeneous layer zoo** ([`layers`]): dense, conv (im2col),
+//!   max-pool, flatten and surrogate-gradient spiking layers behind one
+//!   `Layer` trait, with per-layer cost reports driving cost-balanced
+//!   stage partitioning;
 //! - supporting substrates written from scratch for this offline
 //!   environment: deterministic RNG, JSON, a TOML-subset config system,
 //!   host tensors, a bench harness and a property-test helper.
@@ -44,6 +48,7 @@ pub mod ema;
 pub mod optim;
 pub mod strategy;
 pub mod model;
+pub mod layers;
 pub mod runtime;
 pub mod data;
 pub mod train;

@@ -1,17 +1,26 @@
 //! Checkpointing: save/restore model parameters deterministically.
 //!
 //! Own binary format (serde is unavailable offline): a small header,
-//! then per-layer `(role, shape, f32 data)` records, little-endian, with
+//! then per-layer `(tag, shape, f32 data)` records, little-endian, with
 //! a trailing FNV-1a checksum so truncated/corrupted files are rejected
 //! rather than silently loaded.
+//!
+//! Two record formats share the container: version 1 is the seed's
+//! dense-MLP layout (role tags), version 2 covers heterogeneous
+//! [`Network`]s (per-op `checkpoint_tag` + zero-length params for
+//! parameter-free layers). Both restore only into an
+//! architecture-matching model, so a checkpoint can never silently
+//! reshape a network.
 
 use super::{LayerRole, Mlp};
+use crate::layers::Network;
 use crate::tensor::Tensor;
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 
 const MAGIC: &[u8; 8] = b"LPIPE2CK";
 const VERSION: u32 = 1;
+const NET_VERSION: u32 = 2;
 
 fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
@@ -143,6 +152,80 @@ pub fn from_bytes(mlp: &mut Mlp, bytes: &[u8]) -> Result<()> {
     Ok(())
 }
 
+/// Serialize a heterogeneous network's parameters (version-2 records:
+/// per-op tag + `(w, b)`, zero-length tensors for parameter-free layers).
+pub fn network_to_bytes(net: &Network) -> Vec<u8> {
+    let mut out = Vec::with_capacity(net.nbytes() + 256);
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, NET_VERSION);
+    put_u32(&mut out, net.layers.len() as u32);
+    for nl in &net.layers {
+        put_u32(&mut out, nl.op.checkpoint_tag());
+        put_tensor(&mut out, &nl.w);
+        put_tensor(&mut out, &nl.b);
+    }
+    let sum = fnv1a(&out);
+    put_u64(&mut out, sum);
+    out
+}
+
+/// Restore parameters into an existing architecture-matching network
+/// (op tags and parameter shapes must agree layer by layer).
+pub fn network_from_bytes(net: &mut Network, bytes: &[u8]) -> Result<()> {
+    ensure!(bytes.len() >= 8 + 4 + 4 + 8, "checkpoint too short");
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let want = u64::from_le_bytes(tail.try_into().expect("8 bytes"));
+    ensure!(fnv1a(body) == want, "checkpoint checksum mismatch (corrupted file)");
+
+    let mut r = Reader { buf: body, pos: 0 };
+    ensure!(r.take(8)? == MAGIC, "not a layerpipe2 checkpoint");
+    let version = r.u32()?;
+    ensure!(
+        version == NET_VERSION,
+        "checkpoint version {version} is not a network checkpoint (expected {NET_VERSION})"
+    );
+    let layers = r.u32()? as usize;
+    ensure!(
+        layers == net.layers.len(),
+        "checkpoint has {layers} layers, network has {}",
+        net.layers.len()
+    );
+    for (i, nl) in net.layers.iter_mut().enumerate() {
+        let tag = r.u32()?;
+        ensure!(
+            tag == nl.op.checkpoint_tag(),
+            "layer {i} ({}): checkpoint op tag {tag} vs model tag {}",
+            nl.op.name(),
+            nl.op.checkpoint_tag()
+        );
+        let w = read_tensor(&mut r)?;
+        let b = read_tensor(&mut r)?;
+        ensure!(w.shape() == nl.w.shape(), "layer {i}: weight shape mismatch");
+        ensure!(b.shape() == nl.b.shape(), "layer {i}: bias shape mismatch");
+        nl.w = w;
+        nl.b = b;
+    }
+    ensure!(r.pos == body.len(), "trailing bytes in checkpoint");
+    Ok(())
+}
+
+/// Save a heterogeneous network to a file.
+pub fn save_network(net: &Network, path: &str) -> Result<()> {
+    let bytes = network_to_bytes(net);
+    let mut f = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Load from a file into an architecture-matching network.
+pub fn load_network(net: &mut Network, path: &str) -> Result<()> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {path}"))?
+        .read_to_end(&mut bytes)?;
+    network_from_bytes(net, &bytes)
+}
+
 /// Save to a file.
 pub fn save(mlp: &Mlp, path: &str) -> Result<()> {
     let bytes = to_bytes(mlp);
@@ -228,6 +311,82 @@ mod tests {
         let mut rng = Rng::new(1);
         let mut other = Mlp::init(&cfg, &mut rng);
         assert!(from_bytes(&mut other, &bytes).is_err());
+    }
+
+    fn hetero_net() -> Network {
+        use crate::layers::{Feature, LayerSpec, NetworkSpec};
+        let spec = NetworkSpec {
+            input: Feature::Image { h: 4, w: 4, c: 1 },
+            layers: vec![
+                LayerSpec::Conv2d { out_c: 3, k: 3, stride: 1, pad: 1, relu: true },
+                LayerSpec::MaxPool2d { k: 2, stride: 2 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { units: 6, relu: false },
+                LayerSpec::Lif { v_th: 0.5, alpha: 1.0 },
+            ],
+            init_scale: 1.0,
+        };
+        Network::build(&spec, &mut Rng::new(31)).unwrap()
+    }
+
+    #[test]
+    fn network_roundtrip_is_exact() {
+        let src = hetero_net();
+        let bytes = network_to_bytes(&src);
+        let mut dst = hetero_net();
+        dst.layers[0].w.scale(0.0);
+        dst.layers[3].w.scale(0.0);
+        network_from_bytes(&mut dst, &bytes).unwrap();
+        for (a, b) in src.layers.iter().zip(&dst.layers) {
+            assert_eq!(a.w, b.w);
+            assert_eq!(a.b, b.b);
+        }
+    }
+
+    #[test]
+    fn network_checkpoint_rejects_v1_and_vice_versa() {
+        let mlp_bytes = to_bytes(&model());
+        let mut net = hetero_net();
+        let err = network_from_bytes(&mut net, &mlp_bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("version"));
+        let net_bytes = network_to_bytes(&hetero_net());
+        let mut mlp = model();
+        assert!(from_bytes(&mut mlp, &net_bytes).is_err());
+    }
+
+    #[test]
+    fn network_checkpoint_rejects_op_mismatch() {
+        // Same parameter shapes, different op kind at layer 4 (LIF vs
+        // flatten are both paramless) — the tag check must catch it.
+        use crate::layers::{Feature, LayerSpec, NetworkSpec};
+        let bytes = network_to_bytes(&hetero_net());
+        let spec = NetworkSpec {
+            input: Feature::Image { h: 4, w: 4, c: 1 },
+            layers: vec![
+                LayerSpec::Conv2d { out_c: 3, k: 3, stride: 1, pad: 1, relu: true },
+                LayerSpec::MaxPool2d { k: 2, stride: 2 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { units: 6, relu: false },
+                LayerSpec::Flatten,
+            ],
+            init_scale: 1.0,
+        };
+        let mut other = Network::build(&spec, &mut Rng::new(1)).unwrap();
+        let err = network_from_bytes(&mut other, &bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("tag"));
+    }
+
+    #[test]
+    fn network_file_roundtrip() {
+        let src = hetero_net();
+        let path = std::env::temp_dir().join(format!("lp2_net_{}.bin", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        save_network(&src, &path).unwrap();
+        let mut dst = hetero_net();
+        dst.layers[3].b.data_mut()[0] = 9.0;
+        load_network(&mut dst, &path).unwrap();
+        assert_eq!(src.layers[3].b, dst.layers[3].b);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -1,10 +1,17 @@
-//! Model layer: the MLP whose per-layer compute runs on an [`Exec`]
-//! backend (AOT artifacts under PJRT, host kernels otherwise).
+//! Model layer: the dense MLP whose per-layer compute runs on an
+//! [`Exec`] backend (AOT artifacts under PJRT, host kernels otherwise).
 //!
 //! Rust owns the parameters (host tensors), their initialization, and the
 //! layer→kernel mapping; the backend owns the math. One `dense_fwd_hid` /
 //! `dense_bwd_hid` artifact serves every hidden layer because all hidden
 //! layers share the `[H, H]` shape — the artifact set stays O(1) in depth.
+//!
+//! Both trainers now execute heterogeneous [`crate::layers::Network`]
+//! stacks (dense/conv/pool/spiking behind the `Layer` trait); `Mlp`
+//! remains the dense parameter container for the PJRT artifact surface,
+//! the forward-throughput harness and the v1 checkpoint format.
+//! [`crate::layers::NetworkSpec::mlp`] builds the trait-object
+//! equivalent with bit-identical initialization.
 
 pub mod checkpoint;
 

@@ -13,6 +13,12 @@
 //!    locks sit on the hot path because every weight is owned by exactly
 //!    one stage thread.
 //!
+//! Stages own heterogeneous `Box<dyn Layer>` ops ([`crate::layers`]):
+//! conv, pool, spiking and dense layers all ride the same worker loop,
+//! and [`PipelinedTrainer::with_spec`] places stage boundaries by
+//! cost-balanced compute (LayerPipe) while [`PipelinedTrainer::new`]
+//! keeps the seed's even dense partition bit-compatible.
+//!
 //! ### Equivalence with the iteration-indexed oracle
 //!
 //! [`crate::train::Trainer`] executes, per stage, the event sequence
@@ -26,19 +32,25 @@
 //! trainer evaluates between epochs), and a final drain span retires the
 //! pipeline tail, mirroring `Trainer::drain`.
 //!
+//! Batch feeding is arena-based: the trainer keeps one persistent
+//! `Vec<Tensor>` pair refilled in place via `Dataset::batch_into` each
+//! epoch, spans borrow it as slices, and stage 0 pulls pooled copies —
+//! after the first epoch the feed path allocates nothing.
+//!
 //! tokio is unavailable offline; `std::thread` + `mpsc::sync_channel`
 //! provide the same bounded-queue backpressure structure.
 
 use crate::backend::{Backend, Exec};
 use crate::config::ExperimentConfig;
 use crate::data::{BatchIter, Splits};
+use crate::layers::{Feature, LayerSpec, Network, NetworkSpec};
 use crate::metrics::{EpochMetrics, RunCurve};
-use crate::model::{LayerParams, Mlp};
+use crate::model::Mlp;
 use crate::optim::{LrBook, Optimizer, Sgd};
 use crate::retiming::StagePartition;
 use crate::strategy::{LayerStrategy, StrategyKind};
 use crate::tensor::{BufferPool, Tensor};
-use crate::train::{evaluate_params, lr_schedule_for};
+use crate::train::{evaluate_network, lr_schedule_for};
 use crate::util::{Rng, Stopwatch};
 use anyhow::{anyhow, Context, Result};
 use std::collections::VecDeque;
@@ -173,8 +185,13 @@ type Packet = (u64, Tensor);
 
 /// One layer owned by a stage worker. The gradient delay is not stored
 /// per layer: every layer of a stage shares the stage's `delay`.
+/// Parameter-free ops (pool / flatten / LIF) carry zero-length `w`/`b`,
+/// making their optimizer/strategy traffic a uniform no-op.
 struct StageLayer {
-    params: LayerParams,
+    spec: LayerSpec,
+    op: Box<dyn crate::layers::Layer>,
+    w: Tensor,
+    b: Tensor,
     strategy: LayerStrategy,
     opt_w: Sgd,
     opt_b: Sgd,
@@ -238,8 +255,15 @@ pub struct PipelinedTrainer {
     cfg: ExperimentConfig,
     kind: StrategyKind,
     partition: StagePartition,
+    /// Input feature shape + init scale (for network snapshots).
+    input: Feature,
+    init_scale: f32,
     stages: Vec<StageState>,
     links: Vec<StageLinks>,
+    /// Persistent feed arenas: refilled in place per epoch via
+    /// `Dataset::batch_into`, borrowed by spans as slices.
+    feed_x: Vec<Tensor>,
+    feed_oh: Vec<Tensor>,
     /// Reporting schedule (per-stage books do the hot-path sums).
     report_lr: LrBook,
     /// Batches fed so far == the next global iteration index.
@@ -257,11 +281,40 @@ impl PipelinedTrainer {
     ) -> Result<PipelinedTrainer> {
         cfg.validate()?;
         backend.check_model(&cfg.model)?;
-        let mlp = Mlp::init(&cfg.model, rng);
+        let net = Network::build(&NetworkSpec::mlp(&cfg.model), rng)?;
         let stages_n = if kind.is_pipelined() { cfg.pipeline.stages } else { 1 };
-        let partition = StagePartition::even(cfg.model.layers, stages_n)?;
+        let partition = StagePartition::even(net.num_layers(), stages_n)?;
+        Self::assemble(backend, cfg, kind, net, partition)
+    }
+
+    /// Heterogeneous executor: any [`NetworkSpec`], stage boundaries by
+    /// cost-balanced compute — mirrors [`crate::train::Trainer::with_spec`]
+    /// (identical rng consumption and partition, so the two engines stay
+    /// numerically interchangeable on heterogeneous stacks too).
+    pub fn with_spec(
+        backend: Backend,
+        cfg: &ExperimentConfig,
+        spec: &NetworkSpec,
+        kind: StrategyKind,
+        rng: &mut Rng,
+    ) -> Result<PipelinedTrainer> {
+        let (net, partition) =
+            crate::train::build_spec_network(backend.as_ref(), cfg, spec, kind, rng)?;
+        Self::assemble(backend, cfg, kind, net, partition)
+    }
+
+    fn assemble(
+        backend: Backend,
+        cfg: &ExperimentConfig,
+        kind: StrategyKind,
+        net: Network,
+        partition: StagePartition,
+    ) -> Result<PipelinedTrainer> {
+        let stages_n = partition.stages();
         let delays = partition.gradient_delays();
         let stage_of = partition.stage_of().to_vec();
+        let input = net.input.clone();
+        let init_scale = net.init_scale;
 
         let mut stages: Vec<StageState> = (0..stages_n)
             .map(|s| StageState {
@@ -278,17 +331,19 @@ impl PipelinedTrainer {
                 spare_chains: Vec::new(),
             })
             .collect();
-        for (l, lp) in mlp.layers.into_iter().enumerate() {
-            let (din, dout) = crate::model::layer_dims(&cfg.model, l);
+        for (l, nl) in net.layers.into_iter().enumerate() {
             // All layers of a stage share one delay (d = 2·S(stage));
             // deriving the stage delay from the same `delays` vector the
             // strategies use keeps scheduler and stash windows in lockstep.
             stages[stage_of[l]].delay = delays[l] as u64;
             stages[stage_of[l]].layers.push(StageLayer {
-                params: lp,
                 strategy: LayerStrategy::new(kind, delays[l]),
-                opt_w: Sgd::new(&[din, dout], cfg.optim.momentum, cfg.optim.weight_decay),
-                opt_b: Sgd::new(&[dout], cfg.optim.momentum, 0.0),
+                opt_w: Sgd::new(nl.w.shape(), cfg.optim.momentum, cfg.optim.weight_decay),
+                opt_b: Sgd::new(nl.b.shape(), cfg.optim.momentum, 0.0),
+                spec: nl.spec,
+                op: nl.op,
+                w: nl.w,
+                b: nl.b,
                 dw_buf: Tensor::empty(),
                 db_buf: Tensor::empty(),
             });
@@ -314,8 +369,12 @@ impl PipelinedTrainer {
             cfg: cfg.clone(),
             kind,
             partition,
+            input,
+            init_scale,
             stages,
             links,
+            feed_x: Vec::new(),
+            feed_oh: Vec::new(),
             report_lr: LrBook::new(lr_schedule_for(cfg)),
             step: 0,
         })
@@ -329,6 +388,10 @@ impl PipelinedTrainer {
         &self.partition
     }
 
+    pub fn num_layers(&self) -> usize {
+        self.stages.iter().map(|st| st.layers.len()).sum()
+    }
+
     pub fn gradient_delays(&self) -> Vec<usize> {
         self.stages
             .iter()
@@ -336,12 +399,16 @@ impl PipelinedTrainer {
             .collect()
     }
 
-    /// Snapshot of the full parameter set in global layer order.
-    pub fn layer_params(&self) -> Vec<LayerParams> {
-        self.stages
+    /// Snapshot the stage-distributed parameters as a [`Network`]
+    /// (fresh op workspaces, cloned weights) in global layer order.
+    pub fn network(&self) -> Result<Network> {
+        let parts = self
+            .stages
             .iter()
-            .flat_map(|st| st.layers.iter().map(|sl| sl.params.clone()))
-            .collect()
+            .flat_map(|st| st.layers.iter())
+            .map(|sl| (sl.spec.clone(), sl.w.clone(), sl.b.clone()))
+            .collect();
+        Network::from_parts(self.input.clone(), self.init_scale, parts)
     }
 
     /// Peak staleness-handling bytes across layers (stash + EMA).
@@ -376,49 +443,63 @@ impl PipelinedTrainer {
         self.stages.iter().map(|st| st.peak_saved_bytes).sum()
     }
 
-    /// Test accuracy of the current (stage-distributed) parameters.
+    /// Test accuracy of the current (stage-distributed) parameters —
+    /// the same f32 sequence as the oracle trainer's evaluation. Pure-
+    /// dense stacks collect the fused-eval `LayerParams` view straight
+    /// off the stage weights (one clone, the PR 2 cost); heterogeneous
+    /// stacks evaluate a network snapshot.
     pub fn evaluate(&self, data: &Splits) -> Result<f32> {
-        let params = self.layer_params();
-        evaluate_params(self.backend.as_ref(), &params, self.cfg.model.batch, data)
+        let dense = crate::layers::dense_params_view(
+            self.stages
+                .iter()
+                .flat_map(|st| st.layers.iter())
+                .map(|sl| (&sl.spec, &sl.w, &sl.b)),
+        );
+        if let Some(params) = dense {
+            return crate::train::evaluate_params(
+                self.backend.as_ref(),
+                &params,
+                self.cfg.model.batch,
+                data,
+            );
+        }
+        let mut net = self.network()?;
+        evaluate_network(self.backend.as_ref(), &mut net, self.cfg.model.batch, data)
     }
 
     /// Run all stage workers concurrently over global iterations
-    /// `[t0, t1)`. `xs`/`ohs` are this span's batches (empty for a drain
-    /// span); `fed_total` is the total number of batches ever fed once
-    /// this span completes, which bounds which backwards are due.
+    /// `[t0, t1)`. `xs`/`ohs` are this span's batches, borrowed from the
+    /// feed arenas (empty for a drain span); `fed_total` is the total
+    /// number of batches ever fed once this span completes, which bounds
+    /// which backwards are due.
+    #[allow(clippy::too_many_arguments)]
     fn run_span(
-        &mut self,
-        xs: Vec<Tensor>,
-        ohs: Vec<Tensor>,
+        backend: &Backend,
+        stages: &mut [StageState],
+        links: &mut [StageLinks],
+        xs: &[Tensor],
+        ohs: &[Tensor],
         t0: u64,
         t1: u64,
         fed_total: u64,
     ) -> Result<()> {
-        let k = self.stages.len();
+        let k = stages.len();
         let fwd_count = xs.len();
         debug_assert_eq!(ohs.len(), fwd_count);
         debug_assert!(t0 + fwd_count as u64 <= t1);
-        let mut feeds: Vec<(Vec<Tensor>, Vec<Tensor>)> =
-            (0..k).map(|_| (Vec::new(), Vec::new())).collect();
-        feeds[0].0 = xs;
-        feeds[k - 1].1 = ohs;
 
-        let backend = self.backend.clone();
         let results: Vec<Result<()>> = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(k);
-            for ((st, links), (sxs, sohs)) in self
-                .stages
-                .iter_mut()
-                .zip(self.links.iter_mut())
-                .zip(feeds.into_iter())
-            {
-                let backend = backend.clone();
+            for (s, (st, lk)) in stages.iter_mut().zip(links.iter_mut()).enumerate() {
+                let backend = Arc::clone(backend);
+                let sxs: &[Tensor] = if s == 0 { xs } else { &[] };
+                let sohs: &[Tensor] = if s + 1 == k { ohs } else { &[] };
                 handles.push(scope.spawn(move || {
                     run_stage_span(
                         backend.as_ref(),
                         k,
                         st,
-                        links,
+                        lk,
                         sxs,
                         sohs,
                         t0,
@@ -461,16 +542,32 @@ impl PipelinedTrainer {
                 }
             }
             let sw = Stopwatch::start();
-            let mut xs = Vec::new();
-            let mut ohs = Vec::new();
-            for (x, onehot) in BatchIter::new(&data.train, self.cfg.model.batch, rng) {
-                xs.push(x);
-                ohs.push(onehot);
+            // Refill the persistent feed arenas in place (`batch_into`
+            // fully overwrites): past the first epoch this allocates
+            // nothing but the shuffle permutation.
+            let mut nb = 0usize;
+            let mut iter = BatchIter::new(&data.train, self.cfg.model.batch, rng);
+            while let Some(idx) = iter.next_indices() {
+                if self.feed_x.len() <= nb {
+                    self.feed_x.push(Tensor::empty());
+                    self.feed_oh.push(Tensor::empty());
+                }
+                data.train.batch_into(idx, &mut self.feed_x[nb], &mut self.feed_oh[nb]);
+                nb += 1;
             }
             let t0 = self.step;
-            let t1 = t0 + xs.len() as u64;
-            self.run_span(xs, ohs, t0, t1, t1)
-                .with_context(|| format!("executor epoch {epoch}"))?;
+            let t1 = t0 + nb as u64;
+            Self::run_span(
+                &self.backend,
+                &mut self.stages,
+                &mut self.links,
+                &self.feed_x[..nb],
+                &self.feed_oh[..nb],
+                t0,
+                t1,
+                t1,
+            )
+            .with_context(|| format!("executor epoch {epoch}"))?;
             self.step = t1;
 
             // Losses of batches that fully retired this epoch: batch tb
@@ -513,8 +610,17 @@ impl PipelinedTrainer {
         let t_end = self.step;
         let d_max = self.partition.max_delay() as u64;
         if d_max > 0 {
-            self.run_span(Vec::new(), Vec::new(), t_end, t_end + d_max, t_end)
-                .context("executor drain")?;
+            Self::run_span(
+                &self.backend,
+                &mut self.stages,
+                &mut self.links,
+                &[],
+                &[],
+                t_end,
+                t_end + d_max,
+                t_end,
+            )
+            .context("executor drain")?;
         }
         self.step = t_end + d_max;
         Ok(curve)
@@ -531,8 +637,8 @@ fn run_stage_span(
     stages: usize,
     st: &mut StageState,
     links: &mut StageLinks,
-    xs: Vec<Tensor>,
-    ohs: Vec<Tensor>,
+    xs: &[Tensor],
+    ohs: &[Tensor],
     t0: u64,
     t1: u64,
     fwd_count: usize,
@@ -570,8 +676,8 @@ fn stage_span_loop(
     stages: usize,
     st: &mut StageState,
     links: &mut StageLinks,
-    xs: Vec<Tensor>,
-    ohs: Vec<Tensor>,
+    xs: &[Tensor],
+    ohs: &[Tensor],
     t0: u64,
     t1: u64,
     fwd_count: usize,
@@ -580,8 +686,6 @@ fn stage_span_loop(
     let s = st.stage;
     let last = st.is_last(stages);
     let fwd_end = t0 + fwd_count as u64;
-    let mut xs_it = xs.into_iter();
-    let mut oh_it = ohs.into_iter();
 
     for t in t0..t1 {
         // ---- forward lane -------------------------------------------
@@ -594,7 +698,10 @@ fn stage_span_loop(
                     debug_assert_eq!(tin, t, "activation arrived out of order");
                     h
                 }
-                None => xs_it.next().expect("feeder batch present"),
+                // Feeder stage: pooled copy of the arena batch (the
+                // arena persists across epochs, the copy retires into
+                // the stage pool with the rest of the chain).
+                None => st.pool.take_copy(&xs[(t - t0) as usize]),
             };
             // Recycled chain Vec + pooled outputs: steady-state forwards
             // allocate nothing (hot-path memory discipline).
@@ -603,14 +710,14 @@ fn stage_span_loop(
             acts.reserve(st.layers.len() + 1);
             acts.push(h_in);
             for sl in st.layers.iter_mut() {
-                sl.strategy.on_forward(t, &sl.params.w);
+                sl.strategy.on_forward(t, &sl.w);
                 let rows = acts.last().expect("chain nonempty").shape()[0];
-                let mut y = st.pool.take(&[rows, sl.params.w.shape()[1]]);
-                backend.forward_into(
-                    sl.params.role,
+                let mut y = st.pool.take(&[rows, sl.op.out_dim()]);
+                sl.op.forward_into(
+                    backend,
                     acts.last().expect("chain nonempty"),
-                    &sl.params.w,
-                    &sl.params.b,
+                    &sl.w,
+                    &sl.b,
                     &mut y,
                 )?;
                 acts.push(y);
@@ -635,9 +742,11 @@ fn stage_span_loop(
         let mut dy = if last {
             let (_, chain) = st.saved.front().expect("logits saved for loss");
             let logits = chain.last().expect("output layer activation");
-            let onehot = oh_it.next().expect("onehot batch present");
+            // Last stage has delay 0 ⇒ tb ∈ [t0, fwd_end): the arena
+            // one-hot row is borrowed in place, never copied.
+            let onehot = &ohs[(tb - t0) as usize];
             let mut dl = st.pool.take(logits.shape());
-            let (loss, _correct) = backend.loss_grad_into(logits, &onehot, &mut dl)?;
+            let (loss, _correct) = backend.loss_grad_into(logits, onehot, &mut dl)?;
             st.losses.push_back((tb, loss));
             dl
         } else {
@@ -664,10 +773,10 @@ fn stage_span_loop(
         for sl in st.layers.iter_mut().rev() {
             let y = acts.pop().expect("layer output present");
             let mut dx = st.pool.take(acts.last().expect("layer input present").shape());
-            let StageLayer { params, strategy, opt_w, opt_b, dw_buf, db_buf } = sl;
-            let w_bwd = strategy.backward_weights(tb, &params.w, lr_sum);
-            backend.backward_into(
-                params.role,
+            let StageLayer { op, w, b, strategy, opt_w, opt_b, dw_buf, db_buf, .. } = sl;
+            let w_bwd = strategy.backward_weights(tb, w, lr_sum);
+            op.backward_into(
+                backend,
                 acts.last().expect("layer input present"),
                 &y,
                 w_bwd,
@@ -677,9 +786,9 @@ fn stage_span_loop(
                 dw_buf,
                 db_buf,
             )?;
-            let upd_w = opt_w.step(&mut params.w, dw_buf, lr);
+            let upd_w = opt_w.step(w, dw_buf, lr);
             strategy.on_update(upd_w);
-            opt_b.step(&mut params.b, db_buf, lr);
+            opt_b.step(b, db_buf, lr);
             st.pool.recycle(y);
             let spent = std::mem::replace(&mut dy, dx);
             st.pool.recycle(spent);
@@ -690,15 +799,11 @@ fn stage_span_loop(
         } else {
             st.pool.recycle(dy);
         }
-        // The remaining chain entry is the stage input: retire it into
-        // the pool when it came from upstream (pooled there), or drop it
-        // when it is a feeder batch (owned by the epoch's input vec —
-        // recycling those would grow the pool by one batch per iteration
-        // up to the cap for no reuse benefit).
+        // The remaining chain entry is the stage input — pooled here
+        // whether it arrived from upstream or was copied off the feed
+        // arena, so it always retires into the stage pool.
         for a in acts.drain(..) {
-            if links.act_in.is_some() {
-                st.pool.recycle(a);
-            }
+            st.pool.recycle(a);
         }
         st.spare_chains.push(acts);
     }
@@ -741,7 +846,8 @@ mod tests {
         let mut rng = Rng::new(1);
         let ex = PipelinedTrainer::new(backend(), &cfg, StrategyKind::Stashing, &mut rng).unwrap();
         assert_eq!(ex.gradient_delays(), vec![6, 4, 2, 0]);
-        assert_eq!(ex.layer_params().len(), 4);
+        assert_eq!(ex.num_layers(), 4);
+        assert_eq!(ex.network().unwrap().num_layers(), 4);
         let seq =
             PipelinedTrainer::new(backend(), &cfg, StrategyKind::Sequential, &mut Rng::new(1))
                 .unwrap();

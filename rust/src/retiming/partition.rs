@@ -26,6 +26,53 @@ impl StagePartition {
         Ok(StagePartition { stage_of, stages })
     }
 
+    /// Cost-balanced contiguous split (LayerPipe: stage boundaries are
+    /// chosen by per-layer compute, not layer count): minimizes the
+    /// maximum per-stage cost over all contiguous partitions into
+    /// exactly `stages` stages. Deterministic tie-break: the greedy
+    /// left-fill at the optimal capacity, which loads *earlier* stages
+    /// first — for uniform costs this reduces to [`StagePartition::even`],
+    /// so homogeneous stacks keep their seed partitions.
+    ///
+    /// The variable-delay assignment is untouched: whatever the
+    /// boundaries, each layer's delay remains `2·S(l)` with `S(l)` the
+    /// number of *downstream stages* (paper Eq. 1) — costs move the
+    /// boundaries, never the delay rule.
+    pub fn balanced(costs: &[u64], stages: usize) -> Result<Self> {
+        ensure!(stages >= 1, "need at least one stage");
+        ensure!(
+            stages <= costs.len(),
+            "stages ({stages}) exceed layers ({})",
+            costs.len()
+        );
+        // Binary-search the smallest per-stage capacity the greedy
+        // left-fill can honor, then materialize that packing.
+        let lo = costs.iter().copied().max().unwrap_or(0);
+        let hi: u64 = costs.iter().sum();
+        let (mut lo, mut hi) = (lo, hi.max(lo));
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if pack(costs, stages, mid).is_some() {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        let stage_of = pack(costs, stages, lo).expect("max-cost capacity is always feasible");
+        Ok(StagePartition { stage_of, stages })
+    }
+
+    /// Maximum per-stage cost sum under this partition (the balancing
+    /// objective — what a pipelined iteration's critical stage pays).
+    pub fn max_stage_cost(&self, costs: &[u64]) -> u64 {
+        assert_eq!(costs.len(), self.layers(), "cost vector length mismatch");
+        let mut sums = vec![0u64; self.stages];
+        for (l, &c) in costs.iter().enumerate() {
+            sums[self.stage_of[l]] += c;
+        }
+        sums.into_iter().max().unwrap_or(0)
+    }
+
     /// Explicit group sizes, e.g. `[2, 2, 4]` for 8 layers in 3 stages.
     pub fn from_group_sizes(sizes: &[usize]) -> Result<Self> {
         ensure!(!sizes.is_empty(), "need at least one group");
@@ -81,6 +128,35 @@ impl StagePartition {
     }
 }
 
+/// Greedy left-fill of `costs` into at most `stages` contiguous groups
+/// of per-group cost ≤ `cap`, forced to leave one layer for every
+/// not-yet-opened stage. Returns the stage assignment when `cap` is
+/// feasible, `None` otherwise. Every feasible packing uses exactly
+/// `stages` groups (the forced breaks open trailing stages in time).
+fn pack(costs: &[u64], stages: usize, cap: u64) -> Option<Vec<usize>> {
+    let n = costs.len();
+    let mut stage_of = Vec::with_capacity(n);
+    let (mut s, mut load, mut count) = (0usize, 0u64, 0usize);
+    for (i, &c) in costs.iter().enumerate() {
+        // Keeping layer i in stage s requires the n−i−1 layers after it
+        // to cover the stages−s−1 stages after it, i.e. n−i ≥ stages−s.
+        let must_open = count > 0 && (load + c > cap || n - i < stages - s);
+        if must_open {
+            s += 1;
+            if s == stages {
+                return None; // cap too small: ran out of stages
+            }
+            load = 0;
+            count = 0;
+        }
+        stage_of.push(s);
+        load += c;
+        count += 1;
+    }
+    debug_assert_eq!(s + 1, stages, "forced breaks must open every stage");
+    Some(stage_of)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +198,69 @@ mod tests {
         assert!(StagePartition::from_group_sizes(&[1, 0]).is_err());
         assert!(StagePartition::from_stage_of(vec![1, 2]).is_err());
         assert!(StagePartition::from_stage_of(vec![0, 2]).is_err());
+    }
+
+    #[test]
+    fn balanced_uniform_costs_reduce_to_even() {
+        for (layers, stages) in [(8usize, 3usize), (6, 3), (5, 2), (4, 4), (7, 1)] {
+            let costs = vec![10u64; layers];
+            let b = StagePartition::balanced(&costs, stages).unwrap();
+            let e = StagePartition::even(layers, stages).unwrap();
+            assert_eq!(b, e, "{layers} layers / {stages} stages");
+        }
+    }
+
+    #[test]
+    fn balanced_moves_boundaries_toward_cheap_layers() {
+        // One conv-heavy layer followed by cheap ones: the heavy layer
+        // gets a stage to itself, unlike the even split.
+        let costs = [100u64, 10, 10, 10];
+        let p = StagePartition::balanced(&costs, 2).unwrap();
+        assert_eq!(p.stage_of(), &[0, 1, 1, 1]);
+        assert_eq!(p.max_stage_cost(&costs), 100);
+        // The even split would pay 110.
+        let e = StagePartition::even(4, 2).unwrap();
+        assert_eq!(e.max_stage_cost(&costs), 110);
+    }
+
+    #[test]
+    fn balanced_is_minmax_optimal_over_contiguous_partitions() {
+        // Brute-force every contiguous 3-way split and compare.
+        let costs = [7u64, 3, 9, 1, 1, 6, 2];
+        let p = StagePartition::balanced(&costs, 3).unwrap();
+        let got = p.max_stage_cost(&costs);
+        let mut best = u64::MAX;
+        for b1 in 1..costs.len() - 1 {
+            for b2 in b1 + 1..costs.len() {
+                let s0: u64 = costs[..b1].iter().sum();
+                let s1: u64 = costs[b1..b2].iter().sum();
+                let s2: u64 = costs[b2..].iter().sum();
+                best = best.min(s0.max(s1).max(s2));
+            }
+        }
+        assert_eq!(got, best, "stage_of {:?}", p.stage_of());
+    }
+
+    #[test]
+    fn balanced_handles_zero_cost_layers() {
+        // Flatten-style zero-cost layers pack with their neighbors, and
+        // every stage still gets at least one layer.
+        let costs = [0u64, 0, 0, 0];
+        let p = StagePartition::balanced(&costs, 3).unwrap();
+        assert_eq!(p.stages(), 3);
+        assert_eq!(p.stage_of(), &[0, 0, 1, 2]);
+        assert!(StagePartition::balanced(&costs, 5).is_err());
+    }
+
+    #[test]
+    fn balanced_delays_still_follow_downstream_stage_count() {
+        // Cost-driven boundaries never change the delay rule: d = 2·S(l).
+        let costs = [50u64, 5, 5, 5, 40, 5];
+        let p = StagePartition::balanced(&costs, 3).unwrap();
+        let delays = p.gradient_delays();
+        for l in 0..costs.len() {
+            assert_eq!(delays[l], 2 * p.downstream_stages(l));
+        }
     }
 
     #[test]

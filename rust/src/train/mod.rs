@@ -18,6 +18,17 @@
 //! The sequential strategy sets every `d_l = 0`, collapsing to standard
 //! backpropagation on the same code path (a true reference curve).
 //!
+//! The trainer is layer-kind-agnostic: it drives a [`Network`] of
+//! `Box<dyn Layer>` ops (dense, conv, pool, spiking — see
+//! [`crate::layers`]), with strategies, optimizers, stashes and EMA
+//! accumulators operating uniformly on each layer's parameter tensors
+//! (zero-length for parameter-free layers). [`Trainer::new`] builds the
+//! legacy dense MLP from the model config with the seed's even
+//! partition (bit-identical curves); [`Trainer::with_spec`] accepts any
+//! heterogeneous stack and picks stage boundaries by **cost-balanced
+//! compute** ([`StagePartition::balanced`], per LayerPipe) — the delay
+//! per layer is still `2 ·` downstream stage count, never cost-derived.
+//!
 //! Per-stage event order is the contract the multi-threaded executor
 //! must reproduce: at iteration `t` a stage sees `forward(t)` first,
 //! then `backward(t − d)` — see `DESIGN.md` for the equivalence
@@ -26,8 +37,9 @@
 use crate::backend::{Backend, Exec};
 use crate::config::ExperimentConfig;
 use crate::data::{BatchIter, Splits};
+use crate::layers::{NetLayer, Network, NetworkSpec};
 use crate::metrics::{EpochMetrics, RunCurve};
-use crate::model::{LayerParams, Mlp};
+use crate::model::LayerParams;
 use crate::optim::{ConstantLr, CosineLr, LrBook, LrSchedule, Optimizer, Sgd};
 use crate::retiming::StagePartition;
 use crate::strategy::{LayerStrategy, StrategyKind};
@@ -49,9 +61,28 @@ pub fn lr_schedule_for(cfg: &ExperimentConfig) -> Box<dyn LrSchedule> {
     }
 }
 
-/// Batched argmax accuracy of a parameter set over the test split, via
-/// the backend's full-network forward. Shared eval path for the trainer
-/// and the pipelined executor.
+/// Argmax-correct row count of `logits` against true labels.
+fn count_correct(logits: &Tensor, labels: &[usize], offset: usize) -> usize {
+    let (rows, c) = (logits.shape()[0], logits.shape()[1]);
+    let mut correct = 0usize;
+    for row in 0..rows {
+        let slice = &logits.data()[row * c..(row + 1) * c];
+        let mut arg = 0;
+        for (j, &v) in slice.iter().enumerate() {
+            if v > slice[arg] {
+                arg = j;
+            }
+        }
+        if arg == labels[offset + row] {
+            correct += 1;
+        }
+    }
+    correct
+}
+
+/// Batched argmax accuracy of a dense parameter set over the test split,
+/// via the backend's full-network forward (kept for the legacy `Mlp`
+/// harness; trainers evaluate through [`evaluate_network`]).
 pub fn evaluate_params(
     exec: &dyn Exec,
     layers: &[LayerParams],
@@ -65,21 +96,111 @@ pub fn evaluate_params(
         let idx: Vec<usize> = (start..start + batch).collect();
         let (x, _) = data.test.batch(&idx);
         let logits = exec.forward_full(&x, layers)?;
-        let c = logits.shape()[1];
-        for row in 0..batch {
-            let slice = &logits.data()[row * c..(row + 1) * c];
-            let mut arg = 0;
-            for (j, &v) in slice.iter().enumerate() {
-                if v > slice[arg] {
-                    arg = j;
-                }
-            }
-            if arg == data.test.labels[start + row] {
-                correct += 1;
-            }
-        }
+        correct += count_correct(&logits, &data.test.labels, start);
     }
     Ok(correct as f32 / n as f32)
+}
+
+/// Batched argmax accuracy of a heterogeneous network over the test
+/// split — the shared evaluation path of both training engines (the
+/// executor evaluates a snapshot, so both run identical f32 sequences).
+///
+/// Pure-dense stacks route through [`evaluate_params`] and thus the
+/// backend's *fused* full-network forward (one PJRT `fwd_full` artifact
+/// dispatch per batch, as the seed did); the host default chains the
+/// same per-layer kernels, so the two paths are bitwise identical
+/// there. Heterogeneous stacks chain their ops.
+pub fn evaluate_network(
+    exec: &dyn Exec,
+    net: &mut Network,
+    batch: usize,
+    data: &Splits,
+) -> Result<f32> {
+    if let Some(params) = net.dense_params() {
+        return evaluate_params(exec, &params, batch, data);
+    }
+    let n = data.test.len() / batch * batch;
+    ensure!(n > 0, "test set smaller than one batch");
+    let mut correct = 0usize;
+    for start in (0..n).step_by(batch) {
+        let idx: Vec<usize> = (start..start + batch).collect();
+        let (x, _) = data.test.batch(&idx);
+        let logits = net.forward_full(exec, &x)?;
+        correct += count_correct(&logits, &data.test.labels, start);
+    }
+    Ok(correct as f32 / n as f32)
+}
+
+/// Fail fast at construction when the backend cannot serve a spec:
+/// pure-dense stacks go through the backend's own shape check (and on
+/// PJRT must match the uniform-MLP geometry its artifacts were lowered
+/// at, layer for layer), while conv/pool/spiking ops only have host
+/// kernels today (PJRT per-op artifacts: ROADMAP open item). Shared by
+/// both engines' `with_spec` constructors.
+fn check_backend_serves_spec(
+    exec: &dyn Exec,
+    cfg: &ExperimentConfig,
+    spec: &NetworkSpec,
+) -> Result<()> {
+    if spec.is_dense() {
+        exec.check_model(&cfg.model)?;
+        let mlp = NetworkSpec::mlp(&cfg.model);
+        ensure!(
+            exec.name() != "pjrt" || (spec.input == mlp.input && spec.layers == mlp.layers),
+            "PJRT dense artifacts are lowered for the uniform MLP preset of \
+             cfg.model; this dense spec's layer geometry differs — use the \
+             host backend (LAYERPIPE2_BACKEND=host) or regenerate artifacts"
+        );
+        Ok(())
+    } else {
+        ensure!(
+            exec.name() != "pjrt",
+            "the PJRT backend serves only dense layers; this spec has \
+             conv/pool/spiking ops — use the host backend \
+             (LAYERPIPE2_BACKEND=host) or see ROADMAP: PJRT conv artifacts"
+        );
+        Ok(())
+    }
+}
+
+/// The shared `with_spec` front half of both training engines: validate
+/// the spec against the config and backend, build the network
+/// (consuming `rng` deterministically), and derive the cost-balanced
+/// partition. One seam, so the oracle and the threaded executor can
+/// never accept different specs or pick different partitions — the
+/// precondition of their numerical interchangeability.
+pub(crate) fn build_spec_network(
+    exec: &dyn Exec,
+    cfg: &ExperimentConfig,
+    spec: &NetworkSpec,
+    kind: StrategyKind,
+    rng: &mut Rng,
+) -> Result<(Network, StagePartition)> {
+    cfg.validate()?;
+    let net = Network::build(spec, rng)?;
+    ensure!(
+        net.input_dim() == cfg.model.input_dim,
+        "spec input dim {} vs cfg.model.input_dim {}",
+        net.input_dim(),
+        cfg.model.input_dim
+    );
+    ensure!(
+        net.out_dim() == cfg.model.classes,
+        "spec output dim {} vs cfg.model.classes {}",
+        net.out_dim(),
+        cfg.model.classes
+    );
+    ensure!(
+        net.num_layers() == cfg.model.layers,
+        "spec has {} layers but cfg.model.layers = {}",
+        net.num_layers(),
+        cfg.model.layers
+    );
+    check_backend_serves_spec(exec, cfg, spec)?;
+    let stages = if kind.is_pipelined() { cfg.pipeline.stages } else { 1 };
+    let costs: Vec<u64> = net.costs(cfg.model.batch).iter().map(|c| c.total_flops()).collect();
+    let partition = StagePartition::balanced(&costs, stages)?;
+    Ok((net, partition))
 }
 
 /// Per-layer training state.
@@ -126,7 +247,7 @@ impl Inflight {
 /// The pipelined trainer for one strategy.
 pub struct Trainer {
     backend: Backend,
-    pub mlp: Mlp,
+    pub net: Network,
     cfg: ExperimentConfig,
     kind: StrategyKind,
     partition: StagePartition,
@@ -148,6 +269,9 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// The legacy dense-MLP trainer: seed-identical parameters (same rng
+    /// consumption as `Mlp::init`) and the seed's even layer partition,
+    /// so existing curves are unchanged.
     pub fn new(
         backend: Backend,
         cfg: &ExperimentConfig,
@@ -156,28 +280,55 @@ impl Trainer {
     ) -> Result<Trainer> {
         cfg.validate()?;
         backend.check_model(&cfg.model)?;
-        let mlp = Mlp::init(&cfg.model, rng);
+        let net = Network::build(&NetworkSpec::mlp(&cfg.model), rng)?;
         // Sequential runs as a 1-stage pipeline (all delays zero).
         let stages = if kind.is_pipelined() { cfg.pipeline.stages } else { 1 };
-        let partition = StagePartition::even(cfg.model.layers, stages)?;
+        let partition = StagePartition::even(net.num_layers(), stages)?;
+        Self::assemble(backend, cfg, kind, net, partition)
+    }
+
+    /// Heterogeneous trainer: any [`NetworkSpec`] (conv / pool / spiking
+    /// / dense), with stage boundaries chosen by **cost-balanced
+    /// compute** from each layer's [`crate::layers::LayerCost`] report.
+    /// `cfg.model` must agree with the spec on batch/input/classes and
+    /// carry `layers == spec.layers.len()` (it still drives the data
+    /// generator and lr horizon).
+    pub fn with_spec(
+        backend: Backend,
+        cfg: &ExperimentConfig,
+        spec: &NetworkSpec,
+        kind: StrategyKind,
+        rng: &mut Rng,
+    ) -> Result<Trainer> {
+        let (net, partition) = build_spec_network(backend.as_ref(), cfg, spec, kind, rng)?;
+        Self::assemble(backend, cfg, kind, net, partition)
+    }
+
+    fn assemble(
+        backend: Backend,
+        cfg: &ExperimentConfig,
+        kind: StrategyKind,
+        net: Network,
+        partition: StagePartition,
+    ) -> Result<Trainer> {
         let delays = partition.gradient_delays();
-        let layers = (0..cfg.model.layers)
-            .map(|l| {
-                let (din, dout) = crate::model::layer_dims(&cfg.model, l);
-                LayerState {
-                    strategy: LayerStrategy::new(kind, delays[l]),
-                    opt_w: Sgd::new(&[din, dout], cfg.optim.momentum, cfg.optim.weight_decay),
-                    opt_b: Sgd::new(&[dout], cfg.optim.momentum, 0.0),
-                    delay: delays[l],
-                    dw_buf: Tensor::empty(),
-                    db_buf: Tensor::empty(),
-                }
+        let layers = net
+            .layers
+            .iter()
+            .zip(&delays)
+            .map(|(nl, &d)| LayerState {
+                strategy: LayerStrategy::new(kind, d),
+                opt_w: Sgd::new(nl.w.shape(), cfg.optim.momentum, cfg.optim.weight_decay),
+                opt_b: Sgd::new(nl.b.shape(), cfg.optim.momentum, 0.0),
+                delay: d,
+                dw_buf: Tensor::empty(),
+                db_buf: Tensor::empty(),
             })
             .collect();
         let lr = LrBook::new(lr_schedule_for(cfg));
         Ok(Trainer {
             backend,
-            mlp,
+            net,
             cfg: cfg.clone(),
             kind,
             partition,
@@ -216,7 +367,7 @@ impl Trainer {
 
         // ---- forward lane ------------------------------------------------
         if let Some((x, onehot)) = batch {
-            let nl = self.mlp.num_layers();
+            let nl = self.net.num_layers();
             // Recycled chain Vec + pooled output buffers: the steady-state
             // forward performs zero heap allocation.
             let mut acts = self.spare_chains.pop().unwrap_or_default();
@@ -224,11 +375,14 @@ impl Trainer {
             acts.reserve(nl + 1);
             acts.push(x);
             for l in 0..nl {
-                self.layers[l].strategy.on_forward(t, &self.mlp.layers[l].w);
                 let rows = acts[l].shape()[0];
-                let dout = self.mlp.layers[l].w.shape()[1];
+                let dout = self.net.layers[l].op.out_dim();
                 let mut y = self.pool.take(&[rows, dout]);
-                self.mlp.forward_layer_into(self.backend.as_ref(), l, &acts[l], &mut y)?;
+                let layer = &mut self.net.layers[l];
+                self.layers[l].strategy.on_forward(t, &layer.w);
+                layer
+                    .op
+                    .forward_into(self.backend.as_ref(), &acts[l], &layer.w, &layer.b, &mut y)?;
                 acts.push(y);
             }
             self.inflight.push_back(Inflight {
@@ -286,12 +440,13 @@ impl Trainer {
     ///
     /// Hot-path memory discipline: the loss gradient and `dx` come from
     /// the pool, `dw`/`db` land in the layer's persistent workspaces, the
-    /// ReLU mask uses the shared scratch, and every consumed tensor is
-    /// recycled — the steady-state backward allocates nothing.
+    /// op's mask/patch work uses the shared scratch and op-local
+    /// workspaces, and every consumed tensor is recycled — the
+    /// steady-state backward allocates nothing.
     fn backward_layer(&mut self, idx: usize, l: usize) -> Result<()> {
         let t_now = self.step;
         let t0 = self.inflight[idx].t;
-        let last = l + 1 == self.mlp.num_layers();
+        let last = l + 1 == self.net.num_layers();
 
         // Initial gradient from the loss kernel (last layer only).
         if last {
@@ -328,11 +483,10 @@ impl Trainer {
         {
             let rec = &self.inflight[idx];
             let state = &mut self.layers[l];
-            let w_bwd = state
-                .strategy
-                .backward_weights(t0, &self.mlp.layers[l].w, lr_sum);
-            self.backend.backward_into(
-                self.mlp.layers[l].role,
+            let NetLayer { op, w, .. } = &mut self.net.layers[l];
+            let w_bwd = state.strategy.backward_weights(t0, w, lr_sum);
+            op.backward_into(
+                self.backend.as_ref(),
                 &rec.acts[l],
                 &y,
                 w_bwd,
@@ -347,12 +501,14 @@ impl Trainer {
         self.pool.recycle(dy);
 
         // Apply immediately: the gradient lands d_l iterations after
-        // launch, exactly the Eq. 1 staleness.
+        // launch, exactly the Eq. 1 staleness. Parameter-free layers
+        // carry zero-length params — their step is a uniform no-op.
         let lr = self.lr.lr(t_now);
         let state = &mut self.layers[l];
-        let upd_w = state.opt_w.step(&mut self.mlp.layers[l].w, &state.dw_buf, lr);
+        let layer = &mut self.net.layers[l];
+        let upd_w = state.opt_w.step(&mut layer.w, &state.dw_buf, lr);
         state.strategy.on_update(upd_w);
-        state.opt_b.step(&mut self.mlp.layers[l].b, &state.db_buf, lr);
+        state.opt_b.step(&mut layer.b, &state.db_buf, lr);
 
         let rec = &mut self.inflight[idx];
         rec.dy = Some(dx);
@@ -369,9 +525,12 @@ impl Trainer {
         Ok(())
     }
 
-    /// Test accuracy via the backend's full-network forward.
-    pub fn evaluate(&self, data: &Splits) -> Result<f32> {
-        evaluate_params(self.backend.as_ref(), &self.mlp.layers, self.cfg.model.batch, data)
+    /// Test accuracy — the identical evaluation sequence the threaded
+    /// executor uses ([`evaluate_network`] owns the dense fast-path
+    /// dispatch; running it on the live network reuses op workspaces
+    /// and clones nothing beyond the dense param view).
+    pub fn evaluate(&mut self, data: &Splits) -> Result<f32> {
+        evaluate_network(self.backend.as_ref(), &mut self.net, self.cfg.model.batch, data)
     }
 
     /// Peak staleness-handling bytes across layers (stash + EMA).
@@ -396,9 +555,18 @@ impl Trainer {
             }
             let sw = Stopwatch::start();
             self.epoch_losses.clear();
-            let iter = BatchIter::new(&data.train, self.cfg.model.batch, rng);
-            for (x, onehot) in iter {
-                self.iteration(Some((x, onehot)))?;
+            // Pooled batch extraction (`batch_into`): input and one-hot
+            // buffers come from the trainer pool and return to it when
+            // the batch retires — feeding data allocates nothing in
+            // steady state.
+            let d = data.train.input_dim();
+            let classes = data.train.classes;
+            let mut iter = BatchIter::new(&data.train, self.cfg.model.batch, rng);
+            while let Some(idx) = iter.next_indices() {
+                let mut x = self.pool.take(&[idx.len(), d]);
+                let mut oh = self.pool.take(&[idx.len(), classes]);
+                data.train.batch_into(idx, &mut x, &mut oh);
+                self.iteration(Some((x, oh)))?;
             }
             let test_accuracy = self.evaluate(data)?;
             let train_loss = if self.epoch_losses.is_empty() {

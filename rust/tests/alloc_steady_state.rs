@@ -15,7 +15,8 @@
 
 use layerpipe2::backend::{Backend, HostBackend};
 use layerpipe2::config::ExperimentConfig;
-use layerpipe2::data::teacher_dataset;
+use layerpipe2::data::{image_teacher_dataset, teacher_dataset};
+use layerpipe2::layers::{Feature, LayerSpec, NetworkSpec};
 use layerpipe2::strategy::StrategyKind;
 use layerpipe2::tensor::Tensor;
 use layerpipe2::train::Trainer;
@@ -93,6 +94,69 @@ fn steady_state_iterations_allocate_near_zero() {
             "steady-state hot path regressed to {per_iter:.2} allocs/iter for {} \
              (expected (near-)zero: pooled activations/gradients, persistent \
              workspaces, in-place EMA and stash reuse)",
+            kind.name()
+        );
+    }
+
+    // ---- heterogeneous (conv + pool + dense + LIF) path ----------------
+    //
+    // The same discipline must hold for the layer zoo: im2col/dcols live
+    // in persistent op workspaces, the fused conv epilogue writes the
+    // shared scratch, pool/LIF backwards resize zero-length param grads
+    // in place. Shapes stay under the parallel-matmul threshold so the
+    // worker pool (whose task boxing allocates) never engages — conv
+    // parallelism is exercised by the throughput benches instead.
+    let (h, w, c, classes) = (8usize, 8usize, 1usize, 4usize);
+    let spec = NetworkSpec {
+        input: Feature::Image { h, w, c },
+        layers: vec![
+            LayerSpec::Conv2d { out_c: 4, k: 3, stride: 1, pad: 1, relu: true },
+            LayerSpec::MaxPool2d { k: 2, stride: 2 },
+            LayerSpec::Flatten,
+            LayerSpec::Dense { units: 32, relu: false },
+            LayerSpec::Lif { v_th: 0.5, alpha: 1.0 },
+            LayerSpec::Dense { units: classes, relu: false },
+        ],
+        init_scale: 1.0,
+    };
+    let mut hcfg = ExperimentConfig { epochs: 1, ..ExperimentConfig::default() };
+    hcfg.model.batch = 16;
+    hcfg.model.input_dim = h * w * c;
+    hcfg.model.classes = classes;
+    hcfg.model.layers = spec.layers.len();
+    hcfg.pipeline.stages = 3;
+    hcfg.data.train_samples = 128;
+    hcfg.data.test_samples = 32;
+    let hdata = image_teacher_dataset(h, w, c, classes, &hcfg.data);
+
+    for kind in [StrategyKind::Stashing, StrategyKind::PipelineAwareEma] {
+        let backend: Backend = Arc::new(HostBackend::new());
+        let mut rng = Rng::new(2);
+        let mut trainer = Trainer::with_spec(backend, &hcfg, &spec, kind, &mut rng).unwrap();
+        let (xb, oh) = hdata.train.batch(&(0..hcfg.model.batch).collect::<Vec<_>>());
+        let prime = 24usize;
+        let measure = 32usize;
+        let mut feed: Vec<(Tensor, Tensor)> =
+            (0..(prime + measure)).map(|_| (xb.clone(), oh.clone())).collect();
+        feed.reverse();
+        for _ in 0..prime {
+            trainer.iteration(Some(feed.pop().expect("primed batch"))).unwrap();
+        }
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for _ in 0..measure {
+            trainer.iteration(Some(feed.pop().expect("measured batch"))).unwrap();
+        }
+        let total = ALLOCS.load(Ordering::Relaxed) - before;
+        let per_iter = total as f64 / measure as f64;
+        println!(
+            "conv path / {}: {total} allocs over {measure} iters = {per_iter:.2}/iter",
+            kind.name()
+        );
+        assert!(
+            per_iter <= 4.0,
+            "conv-path hot path regressed to {per_iter:.2} allocs/iter for {} \
+             (expected (near-)zero: persistent im2col/dcols workspaces, pooled \
+             chains, zero-length param-grad resizes)",
             kind.name()
         );
     }

@@ -1,0 +1,286 @@
+//! Integration: the heterogeneous layer subsystem end to end.
+//!
+//! The acceptance bar of the layers PR:
+//!  - a conv+pool+dense stack and a dense+LIF spiking stack both train
+//!    through the multi-threaded `PipelinedTrainer` with cost-balanced
+//!    stages, matching the iteration-indexed `Trainer` oracle ≤ 1e-4
+//!    for **all five** weight-version strategies (the Fig. 5 sweep on
+//!    non-dense workloads);
+//!  - stage boundaries come from the per-layer cost reports while the
+//!    gradient delays stay `2·S(l)` (downstream stage count only);
+//!  - heterogeneous checkpoints roundtrip;
+//!  - the CNN actually learns on the image teacher data.
+//!
+//! Everything runs on the host backend so a clean checkout exercises
+//! the full machinery.
+
+use layerpipe2::backend::{Backend, HostBackend};
+use layerpipe2::config::{DataConfig, ExperimentConfig};
+use layerpipe2::data::{image_teacher_dataset, teacher_dataset, Splits};
+use layerpipe2::layers::{Feature, LayerSpec, Network, NetworkSpec};
+use layerpipe2::metrics::RunCurve;
+use layerpipe2::model::checkpoint;
+use layerpipe2::pipeline::PipelinedTrainer;
+use layerpipe2::strategy::StrategyKind;
+use layerpipe2::tensor::Tensor;
+use layerpipe2::train::Trainer;
+use layerpipe2::util::Rng;
+use std::sync::Arc;
+
+fn host() -> Backend {
+    Arc::new(HostBackend::new())
+}
+
+/// The equivalence workload: conv + pool + flatten + dense + LIF + dense
+/// — every layer kind in one stack, 3 cost-balanced stages.
+fn hetero_spec() -> NetworkSpec {
+    NetworkSpec {
+        input: Feature::Image { h: 6, w: 6, c: 1 },
+        layers: vec![
+            LayerSpec::Conv2d { out_c: 3, k: 3, stride: 1, pad: 1, relu: true },
+            LayerSpec::MaxPool2d { k: 2, stride: 2 },
+            LayerSpec::Flatten,
+            LayerSpec::Dense { units: 16, relu: false },
+            LayerSpec::Lif { v_th: 0.5, alpha: 1.0 },
+            LayerSpec::Dense { units: 4, relu: false },
+        ],
+        init_scale: 1.0,
+    }
+}
+
+fn hetero_cfg(epochs: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model.batch = 8;
+    cfg.model.input_dim = 36;
+    cfg.model.hidden_dim = 16;
+    cfg.model.classes = 4;
+    cfg.model.layers = 6;
+    cfg.pipeline.stages = 3;
+    cfg.epochs = epochs;
+    cfg.seed = 13;
+    cfg.data = DataConfig {
+        train_samples: 96,
+        test_samples: 48,
+        teacher_hidden: 12,
+        label_noise: 0.0,
+        seed: 21,
+    };
+    cfg
+}
+
+fn hetero_data(cfg: &ExperimentConfig) -> Splits {
+    image_teacher_dataset(6, 6, 1, cfg.model.classes, &cfg.data)
+}
+
+/// Train the same (config, spec, strategy) on both engines with the
+/// coordinator's seed discipline.
+fn run_both(
+    cfg: &ExperimentConfig,
+    spec: &NetworkSpec,
+    data: &Splits,
+    kind: StrategyKind,
+) -> (RunCurve, RunCurve) {
+    let oracle = {
+        let mut rng = Rng::new(cfg.seed);
+        let mut t = Trainer::with_spec(host(), cfg, spec, kind, &mut rng).expect("oracle init");
+        let mut batch_rng = Rng::new(cfg.seed ^ 0x5EED_BA7C);
+        t.train(data, &mut batch_rng).expect("oracle train")
+    };
+    let threaded = {
+        let mut rng = Rng::new(cfg.seed);
+        let mut ex =
+            PipelinedTrainer::with_spec(host(), cfg, spec, kind, &mut rng).expect("executor init");
+        let mut batch_rng = Rng::new(cfg.seed ^ 0x5EED_BA7C);
+        ex.train(data, &mut batch_rng).expect("executor train")
+    };
+    (oracle, threaded)
+}
+
+fn assert_curves_match(kind: StrategyKind, oracle: &RunCurve, threaded: &RunCurve, tol: f32) {
+    assert_eq!(oracle.epochs.len(), threaded.epochs.len(), "{kind:?}: epoch count");
+    for (e, (a, b)) in oracle.epochs.iter().zip(&threaded.epochs).enumerate() {
+        if a.train_loss.is_nan() || b.train_loss.is_nan() {
+            assert!(
+                a.train_loss.is_nan() && b.train_loss.is_nan(),
+                "{kind:?} epoch {e}: NaN mismatch ({} vs {})",
+                a.train_loss,
+                b.train_loss
+            );
+        } else {
+            assert!(
+                (a.train_loss - b.train_loss).abs() <= tol,
+                "{kind:?} epoch {e}: oracle loss {} vs executor {}",
+                a.train_loss,
+                b.train_loss
+            );
+        }
+        assert!(
+            (a.test_accuracy - b.test_accuracy).abs() <= tol,
+            "{kind:?} epoch {e}: oracle acc {} vs executor {}",
+            a.test_accuracy,
+            b.test_accuracy
+        );
+        assert_eq!(
+            a.staleness_bytes, b.staleness_bytes,
+            "{kind:?} epoch {e}: staleness accounting diverged"
+        );
+    }
+}
+
+#[test]
+fn hetero_executor_matches_oracle_for_all_five_strategies() {
+    // The PR's bitwise-equivalence bar: conv + dense + LIF through real
+    // threaded stages, every Fig. 5 strategy within 1e-4 of the oracle.
+    let cfg = hetero_cfg(3);
+    let spec = hetero_spec();
+    let data = hetero_data(&cfg);
+    for &kind in StrategyKind::all() {
+        let (oracle, threaded) = run_both(&cfg, &spec, &data, kind);
+        assert_curves_match(kind, &oracle, &threaded, 1e-4);
+    }
+}
+
+#[test]
+fn hetero_partition_is_cost_balanced_with_eq1_delays() {
+    let cfg = hetero_cfg(1);
+    let spec = hetero_spec();
+    let mut rng = Rng::new(cfg.seed);
+    let t = Trainer::with_spec(host(), &cfg, &spec, StrategyKind::Stashing, &mut rng).unwrap();
+    let p = t.partition();
+    assert_eq!(p.stages(), 3);
+    // The conv layer dominates compute, so it gets a lean stage while
+    // the cheap tail groups together — compare against the balanced
+    // optimum recomputed from the cost reports.
+    let net = Network::build(&spec, &mut Rng::new(0)).unwrap();
+    let costs: Vec<u64> = net.costs(cfg.model.batch).iter().map(|c| c.total_flops()).collect();
+    let best = layerpipe2::retiming::StagePartition::balanced(&costs, 3).unwrap();
+    assert_eq!(p.stage_of(), best.stage_of());
+    assert_eq!(p.max_stage_cost(&costs), best.max_stage_cost(&costs));
+    // Delays depend only on downstream stage count (paper Eq. 1),
+    // never on costs.
+    let delays = t.gradient_delays();
+    for (l, &d) in delays.iter().enumerate() {
+        assert_eq!(d, 2 * p.downstream_stages(l));
+    }
+    // Grouped layers share their stage's delay.
+    for l in 1..delays.len() {
+        if p.stage_of()[l] == p.stage_of()[l - 1] {
+            assert_eq!(delays[l], delays[l - 1]);
+        }
+    }
+}
+
+#[test]
+fn cnn_learns_on_image_teacher_data() {
+    let mut cfg = hetero_cfg(5);
+    cfg.data.train_samples = 256;
+    cfg.data.test_samples = 96;
+    cfg.model.layers = 5;
+    // Pure conv+pool+dense classifier (no spiking bottleneck) — the
+    // learning bar; the spiking stack's bar is stability + equivalence.
+    let spec = NetworkSpec {
+        input: Feature::Image { h: 6, w: 6, c: 1 },
+        layers: vec![
+            LayerSpec::Conv2d { out_c: 4, k: 3, stride: 1, pad: 1, relu: true },
+            LayerSpec::MaxPool2d { k: 2, stride: 2 },
+            LayerSpec::Flatten,
+            LayerSpec::Dense { units: 24, relu: true },
+            LayerSpec::Dense { units: 4, relu: false },
+        ],
+        init_scale: 1.0,
+    };
+    let data = hetero_data(&cfg);
+    let mut rng = Rng::new(cfg.seed);
+    let mut t =
+        Trainer::with_spec(host(), &cfg, &spec, StrategyKind::Sequential, &mut rng).unwrap();
+    let mut batch_rng = Rng::new(5);
+    let curve = t.train(&data, &mut batch_rng).unwrap();
+    let chance = 1.0 / cfg.model.classes as f32;
+    assert!(
+        curve.final_accuracy() > 1.5 * chance,
+        "CNN failed to learn: {} (chance {chance})",
+        curve.final_accuracy()
+    );
+    let first = curve.epochs.first().unwrap().train_loss;
+    let last = curve.epochs.last().unwrap().train_loss;
+    assert!(last < first, "loss {first} → {last}");
+}
+
+#[test]
+fn snn_trains_with_surrogate_gradients_under_pipeline_delays() {
+    // Dense+LIF under real pipeline delays: gradients exist (surrogate),
+    // training is stable (finite loss), both engines agree.
+    let mut cfg = hetero_cfg(2);
+    cfg.model.input_dim = 24;
+    cfg.model.hidden_dim = 20;
+    cfg.model.layers = 5;
+    cfg.pipeline.stages = 3;
+    let spec = NetworkSpec {
+        input: Feature::Flat(24),
+        layers: vec![
+            LayerSpec::Dense { units: 20, relu: false },
+            LayerSpec::Lif { v_th: 0.5, alpha: 1.0 },
+            LayerSpec::Dense { units: 20, relu: false },
+            LayerSpec::Lif { v_th: 0.5, alpha: 1.0 },
+            LayerSpec::Dense { units: 4, relu: false },
+        ],
+        init_scale: 1.0,
+    };
+    let data = teacher_dataset(&cfg.model, &cfg.data);
+    let (oracle, threaded) = run_both(&cfg, &spec, &data, StrategyKind::PipelineAwareEma);
+    assert_curves_match(StrategyKind::PipelineAwareEma, &oracle, &threaded, 1e-4);
+    for e in &oracle.epochs {
+        assert!(e.train_loss.is_finite(), "SNN loss diverged: {}", e.train_loss);
+    }
+}
+
+#[test]
+fn hetero_network_checkpoint_roundtrips_through_training() {
+    // Train a few iterations, checkpoint, perturb, restore, and verify
+    // the restored network evaluates identically.
+    let cfg = hetero_cfg(1);
+    let spec = hetero_spec();
+    let data = hetero_data(&cfg);
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = Trainer::with_spec(host(), &cfg, &spec, StrategyKind::Latest, &mut rng).unwrap();
+    let mut batch_rng = Rng::new(5);
+    t.train(&data, &mut batch_rng).unwrap();
+
+    let bytes = checkpoint::network_to_bytes(&t.net);
+    let mut restored = Network::build(&spec, &mut Rng::new(999)).unwrap();
+    checkpoint::network_from_bytes(&mut restored, &bytes).unwrap();
+    for (a, b) in t.net.layers.iter().zip(&restored.layers) {
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.b, b.b);
+    }
+    let be = HostBackend::new();
+    let x = Tensor::randn(&[4, 36], 1.0, &mut Rng::new(3));
+    let mut snap = t.net.snapshot().unwrap();
+    assert_eq!(
+        snap.forward_full(&be, &x).unwrap(),
+        restored.forward_full(&be, &x).unwrap()
+    );
+}
+
+#[test]
+fn executor_snapshot_matches_oracle_params_bitwise() {
+    // After identical training, the stage-distributed parameters must
+    // equal the oracle's exactly (the executor is the oracle, threaded).
+    let cfg = hetero_cfg(2);
+    let spec = hetero_spec();
+    let data = hetero_data(&cfg);
+    let kind = StrategyKind::Stashing;
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = Trainer::with_spec(host(), &cfg, &spec, kind, &mut rng).unwrap();
+    let mut batch_rng = Rng::new(cfg.seed ^ 0x5EED_BA7C);
+    t.train(&data, &mut batch_rng).unwrap();
+    let mut rng = Rng::new(cfg.seed);
+    let mut ex = PipelinedTrainer::with_spec(host(), &cfg, &spec, kind, &mut rng).unwrap();
+    let mut batch_rng = Rng::new(cfg.seed ^ 0x5EED_BA7C);
+    ex.train(&data, &mut batch_rng).unwrap();
+    let net = ex.network().unwrap();
+    for (l, (a, b)) in t.net.layers.iter().zip(&net.layers).enumerate() {
+        assert_eq!(a.w, b.w, "layer {l} weights diverged");
+        assert_eq!(a.b, b.b, "layer {l} biases diverged");
+    }
+}

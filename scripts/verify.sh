@@ -21,9 +21,16 @@ cargo clippy -- -D warnings -D clippy::perf
 
 # Release-mode bench smoke: runs the hot-path bench with reduced samples
 # so kernel/allocation regressions fail the gate (and refreshes
-# BENCH_hotpath.json, the machine-readable perf trajectory).
+# BENCH_hotpath.json + BENCH_layers.json — the dense and layer-zoo
+# machine-readable perf trajectories).
 echo "==> bench smoke (release, reduced samples)"
 LAYERPIPE2_BENCH_SMOKE=1 cargo bench --bench runtime_hotpath
+
+# Heterogeneous end-to-end smoke: conv+pool+dense and dense+LIF stacks
+# through the threaded executor with cost-balanced stages, asserting
+# oracle equivalence ≤ 1e-4 (the layers-PR acceptance bar).
+echo "==> conv pipeline example (smoke)"
+LAYERPIPE2_SMOKE=1 cargo run --release --example conv_pipeline
 
 if [[ "${1:-}" == "--pjrt" ]]; then
     echo "==> cargo build --release --features pjrt"
