@@ -14,11 +14,15 @@
 //!    `LAYERPIPE2_BACKEND`/auto selects, with steady-state
 //!    allocations-per-iteration.
 //!
-//! Besides the human-readable tables, the run writes a machine-readable
-//! `BENCH_hotpath.json` (override the path with `LAYERPIPE2_BENCH_JSON`)
-//! so the perf trajectory is tracked across PRs. Set
-//! `LAYERPIPE2_BENCH_SMOKE=1` for a fast CI smoke run (reduced sizes and
-//! sample counts, same coverage).
+//! Besides the human-readable tables, the run writes machine-readable
+//! trajectories: `BENCH_hotpath.json` (dense hot path),
+//! `BENCH_layers.json` (layer zoo) and `BENCH_kernels.json` (kernel
+//! family: scalar reference vs packed/tree kernels, serial vs parallel —
+//! with in-run NaN/shape/bit-stability validation, so a kernel
+//! regression fails the bench). Override paths with
+//! `LAYERPIPE2_BENCH_JSON` / `LAYERPIPE2_BENCH_LAYERS_JSON` /
+//! `LAYERPIPE2_BENCH_KERNELS_JSON`. Set `LAYERPIPE2_BENCH_SMOKE=1` for a
+//! fast CI smoke run (reduced sizes and sample counts, same coverage).
 
 use layerpipe2::backend::{self, Exec, HostBackend};
 use layerpipe2::bench_util::{bench, print_header, print_row, BenchStats};
@@ -252,6 +256,174 @@ fn layers_section(smoke: bool) -> Json {
     Json::Arr(rows)
 }
 
+/// HOTPATH-f: the kernel family, serial scalar reference ("before") vs
+/// the tiled kernel on one worker vs the tiled kernel on the pool
+/// ("after") — GFLOP/s per kernel per shape, written to
+/// `BENCH_kernels.json`. Every variant's output is validated in-run:
+/// shapes must match, no NaN/non-finite values, the packed matmul/nt
+/// must be bitwise equal to the reference, the tree-reduction tn must be
+/// bit-stable across worker counts and close to the sequential
+/// reference — a silent kernel regression fails the bench (and
+/// `verify.sh`, which runs it in smoke mode).
+fn kernel_family_section(smoke: bool) -> Json {
+    print_header(&format!(
+        "HOTPATH-f: kernel family — scalar reference vs tiled/tree (pool: {} workers)",
+        layerpipe2::tensor::workers::pool_size()
+    ));
+    let mut rows: Vec<Json> = Vec::new();
+    let mut rng = Rng::new(23);
+    let samples = if smoke { 5 } else { 20 };
+    let workers = layerpipe2::tensor::workers::pool_size() as f64;
+
+    let check = |name: &str, out: &Tensor, want_shape: &[usize]| {
+        assert_eq!(out.shape(), want_shape, "{name}: output shape mismatch");
+        assert!(
+            out.data().iter().all(|v| v.is_finite()),
+            "{name}: non-finite values in kernel output"
+        );
+    };
+
+    // ---- matmul / matmul_nt: C = A·B and A·Bᵀ --------------------------
+    let mm_cases: &[(usize, usize, usize)] = if smoke {
+        &[(192, 192, 192)]
+    } else {
+        &[(256, 256, 256), (512, 512, 512)]
+    };
+    for &(m, k, n) in mm_cases {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let bt = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let flops = 2.0 * (m * k * n) as f64;
+
+        for (kernel, reference, run_1t, run_par) in [
+            (
+                "matmul",
+                tensor::reference::matmul(&a, &b),
+                {
+                    let mut o = Tensor::empty();
+                    tensor::matmul_into_with_threads(&a, &b, &mut o, 1);
+                    o
+                },
+                {
+                    let mut o = Tensor::empty();
+                    tensor::matmul_into(&a, &b, &mut o);
+                    o
+                },
+            ),
+            (
+                "matmul_nt",
+                tensor::reference::matmul_nt(&a, &bt),
+                {
+                    let mut o = Tensor::empty();
+                    tensor::matmul_nt_into_with_threads(&a, &bt, &mut o, 1);
+                    o
+                },
+                {
+                    let mut o = Tensor::empty();
+                    tensor::matmul_nt_into(&a, &bt, &mut o);
+                    o
+                },
+            ),
+        ] {
+            let case = format!("{kernel}_{m}x{k}x{n}");
+            check(&case, &reference, &[m, n]);
+            check(&case, &run_1t, &[m, n]);
+            check(&case, &run_par, &[m, n]);
+            assert_eq!(run_1t, reference, "{case}: tiled kernel not bitwise vs reference");
+            assert_eq!(run_par, run_1t, "{case}: parallel split changed the bits");
+
+            let s_ref = bench(&format!("{case} (serial reference)"), 2, samples, || {
+                if kernel == "matmul" {
+                    tensor::reference::matmul(&a, &b)
+                } else {
+                    tensor::reference::matmul_nt(&a, &bt)
+                }
+            });
+            print_gflops(&s_ref, flops, 0.0);
+            let mut out = Tensor::empty();
+            let s_1t = bench(&format!("{case} (packed, 1 worker)"), 2, samples, || {
+                if kernel == "matmul" {
+                    tensor::matmul_into_with_threads(&a, &b, &mut out, 1)
+                } else {
+                    tensor::matmul_nt_into_with_threads(&a, &bt, &mut out, 1)
+                }
+            });
+            print_gflops(&s_1t, flops, 0.0);
+            let s_par = bench(&format!("{case} (packed, pool)"), 2, samples, || {
+                if kernel == "matmul" {
+                    tensor::matmul_into(&a, &b, &mut out)
+                } else {
+                    tensor::matmul_nt_into(&a, &bt, &mut out)
+                }
+            });
+            print_gflops(&s_par, flops, 0.0);
+            rows.push(jobj(vec![
+                ("kernel", Json::Str(kernel.to_string())),
+                ("case", Json::Str(case)),
+                ("gflops_serial", jnum(flops / s_ref.median_s / 1e9)),
+                ("gflops_1w", jnum(flops / s_1t.median_s / 1e9)),
+                ("gflops_parallel", jnum(flops / s_par.median_s / 1e9)),
+                ("workers", jnum(workers)),
+            ]));
+        }
+    }
+
+    // ---- matmul_tn: the dw reduction, serial vs deterministic tree -----
+    // (r, m, n): dense-like tall-r shapes plus a conv-im2col-like one.
+    let tn_cases: &[(usize, usize, usize)] = if smoke {
+        &[(1024, 128, 128)]
+    } else {
+        &[(2048, 256, 256), (4096, 72, 64)]
+    };
+    for &(r, m, n) in tn_cases {
+        let a = Tensor::randn(&[r, m], 0.5, &mut rng);
+        let b = Tensor::randn(&[r, n], 0.5, &mut rng);
+        let flops = 2.0 * (r * m * n) as f64;
+        let case = format!("matmul_tn_{r}x{m}x{n}");
+
+        let reference = tensor::reference::matmul_tn(&a, &b);
+        check(&case, &reference, &[m, n]);
+        let mut t1 = Tensor::empty();
+        tensor::matmul_tn_into_with_threads(&a, &b, &mut t1, 1);
+        check(&case, &t1, &[m, n]);
+        let mut tp = Tensor::empty();
+        tensor::matmul_tn_into(&a, &b, &mut tp);
+        check(&case, &tp, &[m, n]);
+        assert_eq!(tp, t1, "{case}: tree reduction not bit-stable across worker counts");
+        let drift = tp.max_abs_diff(&reference) / (r as f32).sqrt();
+        assert!(
+            drift < 1e-4,
+            "{case}: tree reduction drifted from sequential reference ({drift})"
+        );
+
+        let s_ref = bench(&format!("{case} (serial reference)"), 2, samples, || {
+            tensor::reference::matmul_tn(&a, &b)
+        });
+        print_gflops(&s_ref, flops, 0.0);
+        let mut out = Tensor::empty();
+        let s_1t = bench(&format!("{case} (tree, 1 worker)"), 2, samples, || {
+            tensor::matmul_tn_into_with_threads(&a, &b, &mut out, 1)
+        });
+        print_gflops(&s_1t, flops, 0.0);
+        let s_par = bench(&format!("{case} (tree, pool)"), 2, samples, || {
+            tensor::matmul_tn_into(&a, &b, &mut out)
+        });
+        print_gflops(&s_par, flops, 0.0);
+        let speedup = s_ref.median_s / s_par.median_s;
+        println!("    -> dw parallel speedup vs serial reference: {speedup:.2}x");
+        rows.push(jobj(vec![
+            ("kernel", Json::Str("matmul_tn".to_string())),
+            ("case", Json::Str(case)),
+            ("gflops_serial", jnum(flops / s_ref.median_s / 1e9)),
+            ("gflops_1w", jnum(flops / s_1t.median_s / 1e9)),
+            ("gflops_parallel", jnum(flops / s_par.median_s / 1e9)),
+            ("dw_speedup_vs_serial", jnum(speedup)),
+            ("workers", jnum(workers)),
+        ]));
+    }
+    Json::Arr(rows)
+}
+
 fn pjrt_section() {
     print_header("HOTPATH-b: PJRT single-artifact dispatch latency");
     let engine = match Engine::load("artifacts") {
@@ -371,6 +543,7 @@ fn main() {
         println!("[smoke mode: reduced sizes and sample counts]");
     }
     let kernels = host_kernel_section(smoke);
+    let kernel_family = kernel_family_section(smoke);
     let layers = layers_section(smoke);
     pjrt_section();
     let train = train_iteration_section(smoke);
@@ -396,4 +569,19 @@ fn main() {
         .unwrap_or_else(|_| "BENCH_layers.json".to_string());
     std::fs::write(&lpath, Json::Obj(lobj).to_string()).expect("write layers bench json");
     println!("wrote {lpath}");
+
+    // Kernel-family before/after (serial vs packed vs parallel/tree):
+    // its own trajectory file so the kernel layer is tracked across PRs.
+    let mut kobj = BTreeMap::new();
+    kobj.insert("bench".to_string(), Json::Str("runtime_hotpath/kernels".to_string()));
+    kobj.insert("smoke".to_string(), Json::Bool(smoke));
+    kobj.insert(
+        "workers".to_string(),
+        Json::Num(layerpipe2::tensor::workers::pool_size() as f64),
+    );
+    kobj.insert("kernels".to_string(), kernel_family);
+    let kpath = std::env::var("LAYERPIPE2_BENCH_KERNELS_JSON")
+        .unwrap_or_else(|_| "BENCH_kernels.json".to_string());
+    std::fs::write(&kpath, Json::Obj(kobj).to_string()).expect("write kernels bench json");
+    println!("wrote {kpath}");
 }

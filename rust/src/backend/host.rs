@@ -6,6 +6,13 @@
 //! loss/grad over one-hot labels), so the single-threaded trainer, the
 //! threaded pipelined executor, every test and every bench run unchanged
 //! on machines without PJRT artifacts.
+//!
+//! Every kernel this backend dispatches to — the packed matmuls, the
+//! tree-reduction `dw`, and the fused bias/ReLU epilogues — is
+//! worker-pool parallel past its size threshold while staying
+//! bit-identical across `LAYERPIPE2_WORKERS` values (`tensor::ops`
+//! module docs / DESIGN.md §7), so the backend keeps the `Exec`
+//! determinism contract at every pool size.
 
 use super::Exec;
 use crate::config::ModelConfig;

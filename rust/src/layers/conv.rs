@@ -1,4 +1,12 @@
-//! 2-D convolution via im2col + the existing blocked/worker-pool matmul.
+//! 2-D convolution via im2col + the packed/worker-pool matmul kernels.
+//!
+//! Every heavy pass is worker-pool parallel with deterministic results:
+//! the im2col gather splits patch rows across workers (pure data
+//! movement), the `dw = colsᵀ·dz` reduction rides the fixed-geometry
+//! tree of `matmul_tn_into`, and the fused mask+`db` epilogue uses the
+//! shared fixed-chunk reduction — so conv backward scales with
+//! `LAYERPIPE2_WORKERS` while staying bit-identical across worker
+//! counts.
 //!
 //! Layout: activations are NHWC flattened to `[batch, h·w·c]`, so a conv
 //! output (`[batch·oh·ow, out_c]` after the matmul) reshapes to the next
@@ -17,6 +25,7 @@
 
 use super::{Layer, LayerCost};
 use crate::backend::Exec;
+use crate::tensor::workers;
 use crate::tensor::{self, Tensor};
 use crate::util::Rng;
 use anyhow::{ensure, Result};
@@ -86,47 +95,65 @@ impl Conv2d {
         self.k * self.k * self.in_c
     }
 
-    /// Gather NHWC patches of `x` into `cols: [batch·oh·ow, k·k·in_c]`,
-    /// zero-filling out-of-bounds (padding) positions. Fully overwrites
-    /// `cols`, so dirty recycled storage is fine.
-    fn im2col(&self, x: &Tensor, cols: &mut Tensor) {
-        let bsz = x.shape()[0];
+    /// Gather the NHWC patch of one output position (`row` indexes
+    /// `bi·oh·ow + oy·ow + ox`) into `dst`, zero-filling out-of-bounds
+    /// (padding) positions. Fully overwrites `dst`.
+    fn gather_patch_row(&self, xd: &[f32], dst: &mut [f32], row: usize) {
         let (h, w, c) = (self.in_h, self.in_w, self.in_c);
         let (oh, ow) = self.out_hw();
-        let patch = self.patch();
-        cols.resize(&[bsz * oh * ow, patch]);
-        let xd = x.data();
-        let cd = cols.data_mut();
-        let mut row = 0usize;
-        for bi in 0..bsz {
-            let xoff = bi * h * w * c;
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let dst = &mut cd[row * patch..(row + 1) * patch];
-                    let mut p = 0usize;
-                    for ky in 0..self.k {
-                        let iy = (oy * self.stride + ky) as isize - self.pad as isize;
-                        if iy < 0 || iy >= h as isize {
-                            dst[p..p + self.k * c].fill(0.0);
-                            p += self.k * c;
-                            continue;
-                        }
-                        let rowoff = xoff + (iy as usize) * w * c;
-                        for kx in 0..self.k {
-                            let ix = (ox * self.stride + kx) as isize - self.pad as isize;
-                            if ix < 0 || ix >= w as isize {
-                                dst[p..p + c].fill(0.0);
-                            } else {
-                                let src = rowoff + (ix as usize) * c;
-                                dst[p..p + c].copy_from_slice(&xd[src..src + c]);
-                            }
-                            p += c;
-                        }
-                    }
-                    row += 1;
+        let bi = row / (oh * ow);
+        let rem = row % (oh * ow);
+        let (oy, ox) = (rem / ow, rem % ow);
+        let xoff = bi * h * w * c;
+        let mut p = 0usize;
+        for ky in 0..self.k {
+            let iy = (oy * self.stride + ky) as isize - self.pad as isize;
+            if iy < 0 || iy >= h as isize {
+                dst[p..p + self.k * c].fill(0.0);
+                p += self.k * c;
+                continue;
+            }
+            let rowoff = xoff + (iy as usize) * w * c;
+            for kx in 0..self.k {
+                let ix = (ox * self.stride + kx) as isize - self.pad as isize;
+                if ix < 0 || ix >= w as isize {
+                    dst[p..p + c].fill(0.0);
+                } else {
+                    let src = rowoff + (ix as usize) * c;
+                    dst[p..p + c].copy_from_slice(&xd[src..src + c]);
                 }
+                p += c;
             }
         }
+    }
+
+    /// Gather NHWC patches of `x` into `cols: [batch·oh·ow, k·k·in_c]`,
+    /// zero-filling out-of-bounds (padding) positions. Fully overwrites
+    /// `cols`, so dirty recycled storage is fine. Large gathers split
+    /// rows across pool workers — each patch row is written by exactly
+    /// one worker and the gather is pure data movement, so the result is
+    /// trivially identical for every worker count.
+    fn im2col(&self, x: &Tensor, cols: &mut Tensor) {
+        let bsz = x.shape()[0];
+        let (oh, ow) = self.out_hw();
+        let patch = self.patch();
+        let rows = bsz * oh * ow;
+        cols.resize(&[rows, patch]);
+        let xd = x.data();
+        let cd = cols.data_mut();
+        let threads = workers::unit_threads(rows * patch, rows);
+        if threads <= 1 {
+            for (row, dst) in cd.chunks_mut(patch).enumerate() {
+                self.gather_patch_row(xd, dst, row);
+            }
+            return;
+        }
+        let rows_per = rows.div_ceil(threads);
+        workers::run_chunked(cd, rows_per * patch, &|ci, chunk| {
+            for (i, dst) in chunk.chunks_mut(patch).enumerate() {
+                self.gather_patch_row(xd, dst, ci * rows_per + i);
+            }
+        });
     }
 
     /// Scatter-add the patch gradients back onto the input map:
@@ -301,26 +328,21 @@ impl Layer for Conv2d {
         let rows = bsz * oh * ow;
         let oc = self.out_c;
 
-        // dz = dy ⊙ (y > 0 when relu), db[ch] = Σ dz[·, ch]: one
-        // streaming pass over the [rows, out_c] channel-major view —
-        // same element order as the dense fused epilogue.
+        // dz = dy ⊙ (y > 0 when relu), db[ch] = Σ dz[·, ch], over the
+        // [rows, out_c] channel-major view — the shared fused epilogue
+        // kernel (worker-pool parallel past its threshold, fixed-chunk
+        // db reduction, same element order as the dense path).
         scratch.resize(&[rows, oc]);
         db.resize(&[oc]);
-        db.fill(0.0);
-        let (yd, dyd) = (y.data(), dy.data());
-        let zd = scratch.data_mut();
-        let bd = db.data_mut();
-        for r in 0..rows {
-            let o = r * oc;
-            for (ch, sv) in bd.iter_mut().enumerate() {
-                let mut g = dyd[o + ch];
-                if self.relu && yd[o + ch] <= 0.0 {
-                    g = 0.0;
-                }
-                zd[o + ch] = g;
-                *sv += g;
-            }
-        }
+        tensor::grad_col_sum_rows(
+            y.data(),
+            dy.data(),
+            scratch.data_mut(),
+            db.data_mut(),
+            rows,
+            oc,
+            self.relu,
+        );
 
         // dw = colsᵀ @ dz — im2col recomputed from the stashed input
         // (see module docs on the recompute-over-stash tradeoff).

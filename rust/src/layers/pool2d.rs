@@ -7,6 +7,7 @@
 
 use super::{Layer, LayerCost};
 use crate::backend::Exec;
+use crate::tensor::workers;
 use crate::tensor::Tensor;
 use anyhow::{ensure, Result};
 
@@ -63,6 +64,42 @@ impl MaxPool2d {
         );
         Ok(x.shape()[0])
     }
+
+    /// Forward body for one sample: fill `orow` with the window maxima
+    /// of `map`.
+    fn forward_sample(&self, map: &[f32], orow: &mut [f32]) {
+        let (oh, ow) = self.out_hw();
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..self.c {
+                    orow[(oy * ow + ox) * self.c + ch] = map[self.argmax(map, oy, ox, ch)];
+                }
+            }
+        }
+    }
+
+    /// Backward body for one sample: recompute each window's argmax and
+    /// scatter-add `grow` into `xrow` (zero-filled by the caller;
+    /// overlapping windows accumulate).
+    fn backward_sample(&self, map: &[f32], grow: &[f32], xrow: &mut [f32]) {
+        let (oh, ow) = self.out_hw();
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..self.c {
+                    xrow[self.argmax(map, oy, ox, ch)] += grow[(oy * ow + ox) * self.c + ch];
+                }
+            }
+        }
+    }
+
+    /// Worker count for a pass over `bsz` samples: samples are wholly
+    /// owned by one worker each (forward writes and backward scatters
+    /// never cross a sample boundary), so any split is bit-identical.
+    fn pass_threads(&self, bsz: usize) -> usize {
+        let (oh, ow) = self.out_hw();
+        let compares = bsz * oh * ow * self.c * self.k * self.k;
+        workers::unit_threads(compares, bsz)
+    }
 }
 
 impl Layer for MaxPool2d {
@@ -108,24 +145,26 @@ impl Layer for MaxPool2d {
     ) -> Result<()> {
         let _ = (exec, w, b);
         let bsz = self.check_input(x, "forward")?;
-        let (oh, ow) = self.out_hw();
         out.resize(&[bsz, self.out_dim()]);
         let xd = x.data();
         let od = out.data_mut();
         let per = self.in_dim();
-        let oper = oh * ow * self.c;
-        for bi in 0..bsz {
-            let map = &xd[bi * per..(bi + 1) * per];
-            let orow = &mut od[bi * oper..(bi + 1) * oper];
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    for ch in 0..self.c {
-                        orow[(oy * ow + ox) * self.c + ch] =
-                            map[self.argmax(map, oy, ox, ch)];
-                    }
-                }
+        let oper = self.out_dim();
+        let threads = self.pass_threads(bsz);
+        if threads <= 1 {
+            for (bi, orow) in od.chunks_mut(oper).enumerate() {
+                self.forward_sample(&xd[bi * per..(bi + 1) * per], orow);
             }
+            return Ok(());
         }
+        let per_task = bsz.div_ceil(threads);
+        let op: &MaxPool2d = self; // shared reborrow for the task closures
+        workers::run_chunked(od, per_task * oper, &|ci, chunk| {
+            for (i, orow) in chunk.chunks_mut(oper).enumerate() {
+                let bi = ci * per_task + i;
+                op.forward_sample(&xd[bi * per..(bi + 1) * per], orow);
+            }
+        });
         Ok(())
     }
 
@@ -149,7 +188,6 @@ impl Layer for MaxPool2d {
             dy.shape(),
             self.out_dim()
         );
-        let (oh, ow) = self.out_hw();
         dx.resize(&[bsz, self.in_dim()]);
         dx.fill(0.0);
         dw.resize(&[0]);
@@ -158,21 +196,30 @@ impl Layer for MaxPool2d {
         let gd = dy.data();
         let xgd = dx.data_mut();
         let per = self.in_dim();
-        let oper = oh * ow * self.c;
-        for bi in 0..bsz {
-            let map = &xd[bi * per..(bi + 1) * per];
-            let grow = &gd[bi * oper..(bi + 1) * oper];
-            let xrow = &mut xgd[bi * per..(bi + 1) * per];
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    for ch in 0..self.c {
-                        // Overlapping windows (stride < k) accumulate.
-                        xrow[self.argmax(map, oy, ox, ch)] +=
-                            grow[(oy * ow + ox) * self.c + ch];
-                    }
-                }
+        let oper = self.out_dim();
+        let threads = self.pass_threads(bsz);
+        if threads <= 1 {
+            for (bi, xrow) in xgd.chunks_mut(per).enumerate() {
+                self.backward_sample(
+                    &xd[bi * per..(bi + 1) * per],
+                    &gd[bi * oper..(bi + 1) * oper],
+                    xrow,
+                );
             }
+            return Ok(());
         }
+        let per_task = bsz.div_ceil(threads);
+        let op: &MaxPool2d = self; // shared reborrow for the task closures
+        workers::run_chunked(xgd, per_task * per, &|ci, chunk| {
+            for (i, xrow) in chunk.chunks_mut(per).enumerate() {
+                let bi = ci * per_task + i;
+                op.backward_sample(
+                    &xd[bi * per..(bi + 1) * per],
+                    &gd[bi * oper..(bi + 1) * oper],
+                    xrow,
+                );
+            }
+        });
         Ok(())
     }
 }

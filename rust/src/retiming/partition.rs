@@ -29,10 +29,16 @@ impl StagePartition {
     /// Cost-balanced contiguous split (LayerPipe: stage boundaries are
     /// chosen by per-layer compute, not layer count): minimizes the
     /// maximum per-stage cost over all contiguous partitions into
-    /// exactly `stages` stages. Deterministic tie-break: the greedy
-    /// left-fill at the optimal capacity, which loads *earlier* stages
-    /// first — for uniform costs this reduces to [`StagePartition::even`],
-    /// so homogeneous stacks keep their seed partitions.
+    /// exactly `stages` stages. Deterministic tie-break: at the optimal
+    /// capacity, each stage stops once it holds its *fair share* of the
+    /// remaining cost ([`pack_fair`]) instead of filling to the cap —
+    /// for uniform positive costs the repeated ceil-split reproduces
+    /// [`StagePartition::even`] exactly (every shape, not just the ones
+    /// where cap-filling happens to coincide), so homogeneous stacks
+    /// keep their seed partitions. If the fair-share materialization
+    /// cannot place every layer under the cap, the cap-filling greedy
+    /// (the feasibility oracle of the binary search) is used instead —
+    /// the min-max objective is met either way.
     ///
     /// The variable-delay assignment is untouched: whatever the
     /// boundaries, each layer's delay remains `2·S(l)` with `S(l)` the
@@ -58,7 +64,9 @@ impl StagePartition {
                 lo = mid + 1;
             }
         }
-        let stage_of = pack(costs, stages, lo).expect("max-cost capacity is always feasible");
+        let stage_of = pack_fair(costs, stages, lo)
+            .or_else(|| pack(costs, stages, lo))
+            .expect("max-cost capacity is always feasible");
         Ok(StagePartition { stage_of, stages })
     }
 
@@ -157,6 +165,43 @@ fn pack(costs: &[u64], stages: usize, cap: u64) -> Option<Vec<usize>> {
     Some(stage_of)
 }
 
+/// Fair-share materialization at a known-feasible `cap`: like [`pack`],
+/// but a stage also closes once its load reaches the *fair share* of the
+/// cost remaining when it opened (`remaining / stages_left`, rounded
+/// up), instead of greedily filling to the cap. Never exceeds `cap`
+/// (the cap break still applies), so any result it returns meets the
+/// min-max objective; it can only differ from [`pack`] in how it breaks
+/// ties. For uniform *positive* costs the repeated ceil-split takes
+/// exactly `ceil(layers_left / stages_left)` layers per stage — the
+/// [`StagePartition::even`] distribution. Returns `None` when stopping
+/// early strands more cost than the remaining stages can hold (rare,
+/// lumpy tails); the caller then falls back to [`pack`].
+fn pack_fair(costs: &[u64], stages: usize, cap: u64) -> Option<Vec<usize>> {
+    let n = costs.len();
+    let mut stage_of = Vec::with_capacity(n);
+    let mut remaining: u64 = costs.iter().sum();
+    let (mut s, mut load, mut count) = (0usize, 0u64, 0usize);
+    let mut target = remaining.div_ceil(stages as u64);
+    for (i, &c) in costs.iter().enumerate() {
+        let forced = count > 0 && (load + c > cap || n - i < stages - s);
+        let fair = count > 0 && load >= target && s + 1 < stages;
+        if forced || fair {
+            if s + 1 == stages {
+                return None; // `forced` on the last stage: cap busted
+            }
+            s += 1;
+            load = 0;
+            count = 0;
+            target = remaining.div_ceil((stages - s) as u64);
+        }
+        stage_of.push(s);
+        load += c;
+        count += 1;
+        remaining -= c;
+    }
+    (s + 1 == stages).then_some(stage_of)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,11 +247,16 @@ mod tests {
 
     #[test]
     fn balanced_uniform_costs_reduce_to_even() {
-        for (layers, stages) in [(8usize, 3usize), (6, 3), (5, 2), (4, 4), (7, 1)] {
-            let costs = vec![10u64; layers];
-            let b = StagePartition::balanced(&costs, stages).unwrap();
-            let e = StagePartition::even(layers, stages).unwrap();
-            assert_eq!(b, e, "{layers} layers / {stages} stages");
+        // Every shape — including the ones (like 7/3 or 10/4) where a
+        // cap-filling greedy would front-load [3,3,1]-style partitions,
+        // the fair-share tie-break must reproduce `even` exactly.
+        for layers in 1usize..=12 {
+            for stages in 1..=layers {
+                let costs = vec![10u64; layers];
+                let b = StagePartition::balanced(&costs, stages).unwrap();
+                let e = StagePartition::even(layers, stages).unwrap();
+                assert_eq!(b, e, "{layers} layers / {stages} stages");
+            }
         }
     }
 
@@ -243,12 +293,15 @@ mod tests {
 
     #[test]
     fn balanced_handles_zero_cost_layers() {
-        // Flatten-style zero-cost layers pack with their neighbors, and
-        // every stage still gets at least one layer.
+        // Flatten-style zero-cost layers: every stage still gets at
+        // least one layer, and the fair-share split spreads them like
+        // `even` (all shares are zero, so each stage closes after one
+        // layer until the last takes the rest).
         let costs = [0u64, 0, 0, 0];
         let p = StagePartition::balanced(&costs, 3).unwrap();
         assert_eq!(p.stages(), 3);
-        assert_eq!(p.stage_of(), &[0, 0, 1, 2]);
+        assert_eq!(p.stage_of(), &[0, 1, 2, 2]);
+        assert_eq!(p.max_stage_cost(&costs), 0);
         assert!(StagePartition::balanced(&costs, 5).is_err());
     }
 

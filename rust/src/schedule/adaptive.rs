@@ -37,6 +37,10 @@ pub struct AdaptiveChoice {
     pub speedup: f64,
     pub max_delay: usize,
     pub comm_bytes_per_batch: usize,
+    /// The chosen cost-balanced partition — the exact boundaries a
+    /// trainer built on the same cost reports will pick, so callers can
+    /// act on the choice without re-deriving it.
+    pub partition: StagePartition,
     /// (stages, speedup, feasible) for every candidate — the audit trail.
     pub candidates: Vec<(usize, f64, bool)>,
 }
@@ -44,12 +48,21 @@ pub struct AdaptiveChoice {
 /// Choose the stage count in `1..=layers` with the best modeled speedup
 /// that satisfies the limits. Always feasible: K=1 has zero delay and
 /// zero communication.
+///
+/// Conv-aware: every candidate `K` is evaluated on its **cost-balanced**
+/// partition (`StagePartition::balanced` over the model's per-layer
+/// totals) — the same boundaries `Trainer::with_spec` derives from the
+/// `LayerCost` reports — so the choice and the trainers agree on
+/// heterogeneous stacks. Uniform costs balance to the even split, which
+/// keeps the legacy behavior bit-for-bit.
 pub fn choose_stages(layers: usize, cost: &CostModel, limits: &AdaptiveLimits) -> AdaptiveChoice {
     assert!(layers >= 1);
+    assert_eq!(cost.fwd.len(), layers, "cost model covers every layer");
+    let costs_u64 = cost.layer_costs_u64();
     let mut best: Option<(usize, f64)> = None;
     let mut candidates = Vec::with_capacity(layers);
     for k in 1..=layers {
-        let p = StagePartition::even(layers, k).expect("valid partition");
+        let p = StagePartition::balanced(&costs_u64, k).expect("valid partition");
         let perf = evaluate(&p, cost, 10_000);
         let delay = p.max_delay();
         let comm = 2 * (k - 1) * cost.boundary_bytes;
@@ -61,12 +74,13 @@ pub fn choose_stages(layers: usize, cost: &CostModel, limits: &AdaptiveLimits) -
         }
     }
     let (stages, speedup) = best.expect("K=1 is always feasible");
-    let p = StagePartition::even(layers, stages).expect("valid partition");
+    let partition = StagePartition::balanced(&costs_u64, stages).expect("valid partition");
     AdaptiveChoice {
         stages,
         speedup,
-        max_delay: p.max_delay(),
+        max_delay: partition.max_delay(),
         comm_bytes_per_batch: 2 * (stages - 1) * cost.boundary_bytes,
+        partition,
         candidates,
     }
 }
@@ -114,6 +128,30 @@ mod tests {
         assert_eq!(c.candidates.len(), 4);
         // Speedup is essentially flat (≤ ~1.06x) — bottleneck-capped.
         assert!(c.speedup < 1.1, "speedup {}", c.speedup);
+    }
+
+    #[test]
+    fn hetero_costs_drive_balanced_partitions() {
+        use crate::layers::LayerCost;
+        // Conv-heavy head + cheap/zero-cost tail: the model must carry
+        // the LayerCost totals exactly, and the chosen partition must be
+        // the same cost-balanced split the trainers derive.
+        let costs = [
+            LayerCost { fwd_flops: 9000, bwd_flops: 18000, act_bytes: 4096, param_bytes: 512 },
+            LayerCost { fwd_flops: 300, bwd_flops: 600, act_bytes: 1024, param_bytes: 0 },
+            LayerCost { fwd_flops: 0, bwd_flops: 0, act_bytes: 1024, param_bytes: 0 },
+            LayerCost { fwd_flops: 400, bwd_flops: 800, act_bytes: 256, param_bytes: 128 },
+        ];
+        let cm = CostModel::from_layer_costs(&costs);
+        assert_eq!(cm.boundary_bytes, 4096);
+        let totals: Vec<u64> = costs.iter().map(LayerCost::total_flops).collect();
+        assert_eq!(cm.layer_costs_u64(), totals);
+        let c = choose_stages(4, &cm, &AdaptiveLimits { max_delay: 2, max_comm_bytes: 0 });
+        assert_eq!(c.stages, 2, "delay budget 2 caps K at 2");
+        let want = StagePartition::balanced(&totals, 2).unwrap();
+        assert_eq!(c.partition.stage_of(), want.stage_of(), "choice ≡ balanced");
+        // The conv layer dominates: it gets a stage to itself.
+        assert_eq!(c.partition.stage_of(), &[0, 1, 1, 1]);
     }
 
     #[test]

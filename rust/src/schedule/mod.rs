@@ -41,6 +41,34 @@ impl CostModel {
         CostModel { fwd: vec![1.0; layers], bwd: vec![2.0; layers], boundary_bytes: 0 }
     }
 
+    /// Conv-aware model from per-layer [`LayerCost`] reports (the same
+    /// reports [`StagePartition::balanced`] consumes via
+    /// `total_flops()`), so the adaptive stage-count choice and the
+    /// trainers' cost-balanced partitioning reason about the *same*
+    /// heterogeneous stack instead of assuming uniform per-layer cost.
+    /// `boundary_bytes` is the largest activation any boundary could
+    /// carry (conservative: which boundaries exist depends on the
+    /// partition under evaluation).
+    pub fn from_layer_costs(costs: &[crate::layers::LayerCost]) -> Self {
+        CostModel {
+            fwd: costs.iter().map(|c| c.fwd_flops as f64).collect(),
+            bwd: costs.iter().map(|c| c.bwd_flops as f64).collect(),
+            boundary_bytes: costs.iter().map(|c| c.act_bytes as usize).max().unwrap_or(0),
+        }
+    }
+
+    /// Integer per-layer totals (`fwd + bwd`, the balancing objective)
+    /// for [`StagePartition::balanced`]. Exact when built by
+    /// [`CostModel::from_layer_costs`]; rounds for hand-built fractional
+    /// models (where only relative magnitudes matter).
+    pub fn layer_costs_u64(&self) -> Vec<u64> {
+        self.fwd
+            .iter()
+            .zip(&self.bwd)
+            .map(|(f, b)| (f + b).round().max(0.0) as u64)
+            .collect()
+    }
+
     pub fn stage_cost(&self, part: &StagePartition, stage: usize) -> f64 {
         part.layers_in_stage(stage)
             .into_iter()

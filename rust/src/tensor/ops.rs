@@ -4,23 +4,54 @@
 //! caller-owned output (resizing it in place — combined with
 //! [`super::BufferPool`] the hot path allocates nothing), and an
 //! allocating wrapper that delegates to it, so the two are bitwise
-//! identical by construction. The blocked matmuls run i-k-j inside fixed
-//! `BLK`-edge cache blocks with tight, autovectorizer-friendly inner
-//! loops, and parallelize across row chunks on the persistent
-//! [`super::WorkerPool`] (no per-call thread spawns) once shapes are
-//! large enough to amortize the queue handoff. Results are bit-identical
-//! across worker counts: each row of `C` is always accumulated in the
-//! same block order by exactly one task.
+//! identical by construction.
+//!
+//! ### Kernel architecture (see DESIGN.md §7)
+//!
+//! The matmul family is register-tiled and panel-packed: [`matmul_into`]
+//! packs `B` into contiguous `BLK`-wide column panels (pooled scratch,
+//! pure data movement — bitwise-neutral) and accumulates each output row
+//! in a `BLK`-wide register block with an unconditional fused inner loop
+//! (no data-dependent branches, so the autovectorizer owns it);
+//! [`matmul_nt_into`] runs four independent dot-product chains per pass.
+//! The `dw` reduction [`matmul_tn_into`] parallelizes via a
+//! **deterministic tree reduction**: the batch dimension splits into
+//! fixed [`TN_CHUNK`]-row chunks (geometry a pure function of the shape,
+//! never the worker count), per-chunk partials accumulate into pooled
+//! scratch, and partials combine in a fixed pairwise order — so results
+//! are bit-identical for every `LAYERPIPE2_WORKERS` value, serial or
+//! parallel.
+//!
+//! Large kernels split across the persistent [`super::WorkerPool`] (no
+//! per-call thread spawns); every parallel split assigns each output row
+//! (or each reduction chunk) to exactly one task, and combination orders
+//! are fixed, so worker count can only change speed, never bits.
 
 use super::workers::{self, Task};
 use super::Tensor;
 
-/// Cache-block edge for the matmul kernels.
+/// Cache-block edge / packed-panel width for the matmul kernels.
 const BLK: usize = 32;
 
-/// Below this many multiply-adds the blocked matmul stays single-threaded
+/// Below this many multiply-adds the blocked matmuls stay single-threaded
 /// (the queue handoff costs more than the kernel itself).
 const PAR_MIN_MADDS: usize = 1 << 20;
+
+/// Touched-element threshold for the epilogue kernels — shared with the
+/// gather/pool passes ([`workers::PAR_MIN_WORK`]). Part of the chunk
+/// *geometry* for [`grad_col_sum_rows`] (single-pass vs chunked), so it
+/// must stay a pure function of the shape.
+const PAR_MIN_ELEMS: usize = workers::PAR_MIN_WORK;
+
+/// Fixed row-chunk length of the [`matmul_tn_into`] tree reduction. The
+/// chunk geometry depends only on this constant and the shape — never on
+/// the worker count — which is what makes the summation order (and thus
+/// the fp result) worker-count independent.
+const TN_CHUNK: usize = 64;
+
+/// Fixed row-chunk length of the chunked epilogue reduction in
+/// [`grad_col_sum_rows`] (same worker-count-independence argument).
+const EPI_CHUNK: usize = 256;
 
 /// Worker count for a matmul of `m·k·n` multiply-adds: 1 below the
 /// parallel threshold — WITHOUT touching the worker pool, so
@@ -33,31 +64,69 @@ fn matmul_threads(m: usize, k: usize, n: usize) -> usize {
     workers::pool_size().min(m.div_ceil(BLK)).max(1)
 }
 
-/// Blocked i-k-j kernel over the row range `[i0, i0 + rows)` of `A`,
-/// writing the matching rows of `C` (passed as the disjoint slice `cd`,
-/// which must be zero-initialized — the kernel accumulates).
-fn matmul_rows(ad: &[f32], bd: &[f32], cd: &mut [f32], i0: usize, rows: usize, k: usize, n: usize) {
-    for ib in (0..rows).step_by(BLK) {
-        let i1 = (ib + BLK).min(rows);
-        for k0 in (0..k).step_by(BLK) {
-            let k1 = (k0 + BLK).min(k);
-            for j0 in (0..n).step_by(BLK) {
-                let j1 = (j0 + BLK).min(n);
-                for i in ib..i1 {
-                    let arow = &ad[(i0 + i) * k..(i0 + i) * k + k];
-                    let crow = &mut cd[i * n + j0..i * n + j1];
-                    for kk in k0..k1 {
-                        let aik = arow[kk];
-                        if aik == 0.0 {
-                            continue;
-                        }
-                        let brow = &bd[kk * n + j0..kk * n + j1];
-                        for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
-                            *cv += aik * bv;
-                        }
+/// Pack `B: [k, n]` into contiguous `BLK`-wide column panels: panel `p`
+/// covers columns `[p·BLK, min((p+1)·BLK, n))`, storing its rows
+/// `kk = 0..k` back to back (`pack[p·BLK·k + kk·jw + jj]`). Pure data
+/// movement — the consuming kernel's multiply/add order is unchanged, so
+/// packed and unpacked kernels are bitwise identical; the win is that
+/// the inner loop streams one contiguous, cache-resident panel instead
+/// of `k` strided rows of `B`.
+fn pack_b_panels(bd: &[f32], k: usize, n: usize, pack: &mut [f32]) {
+    debug_assert_eq!(pack.len(), k * n);
+    if pack.is_empty() {
+        return; // degenerate k == 0 or n == 0: nothing to pack
+    }
+    for (p, panel) in pack.chunks_mut(BLK * k).enumerate() {
+        let j0 = p * BLK;
+        let jw = (n - j0).min(BLK);
+        for kk in 0..k {
+            panel[kk * jw..(kk + 1) * jw]
+                .copy_from_slice(&bd[kk * n + j0..kk * n + j0 + jw]);
+        }
+    }
+}
+
+/// Register-tiled row kernel over packed `B` panels: rows
+/// `[i0, i0 + rows)` of `A` into the matching rows of `C` (passed as the
+/// disjoint slice `cd`, fully overwritten). Each output row accumulates
+/// a `BLK`-wide register block per panel with an unconditional fused
+/// inner loop — no `aik == 0.0` sparsity skip (the branch defeated
+/// autovectorization and cost more than the multiplies it saved on ReLU
+/// activations). Per output element the multiply-add order is ascending
+/// `kk`, identical to a naive `i, j, k` triple loop, so this kernel is
+/// bitwise equal to [`reference::matmul`].
+fn matmul_rows(ad: &[f32], pack: &[f32], cd: &mut [f32], i0: usize, rows: usize, k: usize, n: usize) {
+    for i in 0..rows {
+        let arow = &ad[(i0 + i) * k..(i0 + i) * k + k];
+        let crow = &mut cd[i * n..(i + 1) * n];
+        let mut j0 = 0;
+        while j0 < n {
+            let jw = (n - j0).min(BLK);
+            let panel = &pack[j0 * k..j0 * k + jw * k];
+            if jw == BLK {
+                // Full panel: constant-width accumulator block (the
+                // compiler unrolls and vectorizes the fixed-size loops).
+                let mut acc = [0.0f32; BLK];
+                for (kk, &a) in arow.iter().enumerate() {
+                    let prow = &panel[kk * BLK..(kk + 1) * BLK];
+                    for (av, pv) in acc.iter_mut().zip(prow.iter()) {
+                        *av += a * pv;
                     }
                 }
+                crow[j0..j0 + BLK].copy_from_slice(&acc);
+            } else {
+                // Edge panel (n % BLK columns): same order, dynamic width.
+                let mut acc = [0.0f32; BLK];
+                let acc = &mut acc[..jw];
+                for (kk, &a) in arow.iter().enumerate() {
+                    let prow = &panel[kk * jw..(kk + 1) * jw];
+                    for (av, pv) in acc.iter_mut().zip(prow.iter()) {
+                        *av += a * pv;
+                    }
+                }
+                crow[j0..j0 + jw].copy_from_slice(acc);
             }
+            j0 += jw;
         }
     }
 }
@@ -83,26 +152,25 @@ pub fn matmul_into_with_threads(a: &Tensor, b: &Tensor, out: &mut Tensor, thread
     let (k2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
     out.resize(&[m, n]);
-    out.fill(0.0);
     let (ad, bd) = (a.data(), b.data());
+    // Pack B once per call (pooled scratch, shared read-only by every row
+    // chunk); the kernel then fully overwrites `out` — no zero-fill pass.
+    let mut pack = workers::take_scratch(k * n);
+    pack_b_panels(bd, k, n, &mut pack);
     let cd = out.data_mut();
     if m * k * n < PAR_MIN_MADDS || threads <= 1 {
-        matmul_rows(ad, bd, cd, 0, m, k, n);
-        return;
+        matmul_rows(ad, &pack, cd, 0, m, k, n);
+    } else {
+        // Row chunks aligned to the cache block so chunk boundaries are
+        // uniform across the kernel family (rows are independent — any
+        // partition is bit-identical).
+        let rows_per = m.div_ceil(threads).div_ceil(BLK) * BLK;
+        let pk: &[f32] = &pack;
+        workers::run_chunked(cd, rows_per * n, &|ci, c_chunk| {
+            matmul_rows(ad, pk, c_chunk, ci * rows_per, c_chunk.len() / n, k, n)
+        });
     }
-    // Row chunks aligned to the cache block so per-row accumulation order
-    // (and thus the fp result) is independent of the worker count.
-    let rows_per = m.div_ceil(threads).div_ceil(BLK) * BLK;
-    let tasks: Vec<Task<'_>> = cd
-        .chunks_mut(rows_per * n)
-        .enumerate()
-        .map(|(chunk_idx, c_chunk)| {
-            let i0 = chunk_idx * rows_per;
-            let rows = c_chunk.len() / n;
-            Box::new(move || matmul_rows(ad, bd, c_chunk, i0, rows, k, n)) as Task<'_>
-        })
-        .collect();
-    workers::global().run(tasks);
+    workers::recycle_scratch(pack);
 }
 
 /// `C = A @ B` for 2-D tensors (allocating wrapper over [`matmul_into`]).
@@ -112,18 +180,47 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     c
 }
 
-/// Row-dot kernel over `[i0, i0 + rows)` of `A` for [`matmul_nt`],
-/// writing the matching rows of `C` (disjoint slice `cd`).
+/// Register-tiled dot kernel over `[i0, i0 + rows)` of `A` for
+/// [`matmul_nt`], writing the matching rows of `C` (disjoint slice
+/// `cd`). `j` is blocked to `BLK` columns (the corresponding `BLK` rows
+/// of `B` stay cache-resident across the chunk's `A` rows — the same
+/// k/j blocking discipline as [`matmul_rows`]) and each pass drives four
+/// independent accumulator chains for ILP. Every dot still sums in
+/// ascending `kk` order, so the tiling is bitwise-neutral.
 fn matmul_nt_rows(ad: &[f32], bd: &[f32], cd: &mut [f32], i0: usize, rows: usize, k: usize, n: usize) {
-    for i in 0..rows {
-        let arow = &ad[(i0 + i) * k..(i0 + i + 1) * k];
-        for j in 0..n {
-            let brow = &bd[j * k..(j + 1) * k];
-            let mut s = 0.0f32;
-            for (av, bv) in arow.iter().zip(brow.iter()) {
-                s += av * bv;
+    for j0 in (0..n).step_by(BLK) {
+        let j1 = (j0 + BLK).min(n);
+        for i in 0..rows {
+            let arow = &ad[(i0 + i) * k..(i0 + i + 1) * k];
+            let crow = &mut cd[i * n..(i + 1) * n];
+            let mut j = j0;
+            while j + 4 <= j1 {
+                let b0 = &bd[j * k..(j + 1) * k];
+                let b1 = &bd[(j + 1) * k..(j + 2) * k];
+                let b2 = &bd[(j + 2) * k..(j + 3) * k];
+                let b3 = &bd[(j + 3) * k..(j + 4) * k];
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for (kk, &a) in arow.iter().enumerate() {
+                    s0 += a * b0[kk];
+                    s1 += a * b1[kk];
+                    s2 += a * b2[kk];
+                    s3 += a * b3[kk];
+                }
+                crow[j] = s0;
+                crow[j + 1] = s1;
+                crow[j + 2] = s2;
+                crow[j + 3] = s3;
+                j += 4;
             }
-            cd[i * n + j] = s;
+            while j < j1 {
+                let brow = &bd[j * k..(j + 1) * k];
+                let mut s = 0.0f32;
+                for (av, bv) in arow.iter().zip(brow.iter()) {
+                    s += av * bv;
+                }
+                crow[j] = s;
+                j += 1;
+            }
         }
     }
 }
@@ -155,17 +252,12 @@ pub fn matmul_nt_into_with_threads(a: &Tensor, b: &Tensor, out: &mut Tensor, thr
         matmul_nt_rows(ad, bd, cd, 0, m, k, n);
         return;
     }
-    let rows_per = m.div_ceil(threads);
-    let tasks: Vec<Task<'_>> = cd
-        .chunks_mut(rows_per * n)
-        .enumerate()
-        .map(|(chunk_idx, c_chunk)| {
-            let i0 = chunk_idx * rows_per;
-            let rows = c_chunk.len() / n;
-            Box::new(move || matmul_nt_rows(ad, bd, c_chunk, i0, rows, k, n)) as Task<'_>
-        })
-        .collect();
-    workers::global().run(tasks);
+    // BLK-aligned row chunks — uniform chunk-boundary rule across the
+    // kernel family (matmul / matmul_nt / matmul_tn epilogues).
+    let rows_per = m.div_ceil(threads).div_ceil(BLK) * BLK;
+    workers::run_chunked(cd, rows_per * n, &|ci, c_chunk| {
+        matmul_nt_rows(ad, bd, c_chunk, ci * rows_per, c_chunk.len() / n, k, n)
+    });
 }
 
 /// `C = A @ Bᵀ` (allocating wrapper over [`matmul_nt_into`]).
@@ -175,15 +267,60 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     c
 }
 
+/// Sequential partial of the tree reduction: accumulate rows
+/// `[r0, r0 + rr)` of the outer-product sum `Σ_r a[r, ·]ᵀ b[r, ·]` into
+/// the `m×n` partial `pd` (which must arrive zero-filled). Unconditional
+/// inner loop — the old `ari == 0.0` skip is gone for the same
+/// autovectorization reason as [`matmul_rows`].
+fn matmul_tn_chunk(ad: &[f32], bd: &[f32], pd: &mut [f32], r0: usize, rr: usize, m: usize, n: usize) {
+    for r in r0..r0 + rr {
+        let brow = &bd[r * n..(r + 1) * n];
+        let arow = &ad[r * m..(r + 1) * m];
+        for (i, &ari) in arow.iter().enumerate() {
+            let prow = &mut pd[i * n..(i + 1) * n];
+            for (pv, bv) in prow.iter_mut().zip(brow.iter()) {
+                *pv += ari * bv;
+            }
+        }
+    }
+}
+
+/// `dst += src`, elementwise — one combine step of the reduction tree.
+fn add_assign(dst: &mut [f32], src: &[f32]) {
+    for (dv, sv) in dst.iter_mut().zip(src.iter()) {
+        *dv += sv;
+    }
+}
+
 /// `C = Aᵀ @ B` into `out`, with `A: [r, m]`, `B: [r, n]` → `C: [m, n]`.
 ///
-/// The `dw = xᵀ @ dy` backward kernel, accumulated as a sum of row outer
-/// products so every access stays row-major. Stays single-threaded: `r`
-/// is the batch dimension (small at training shapes), and parallelizing
-/// the reduction would either need per-thread partials (changing fp
-/// summation order → breaking the oracle/executor bit-equivalence) or
-/// strided column chunking with poor locality.
+/// The `dw = xᵀ @ dy` backward kernel (dense and conv-im2col), now a
+/// **deterministic tree reduction** over the batch dimension: `r` splits
+/// into fixed [`TN_CHUNK`]-row chunks (geometry a pure function of the
+/// shape), each chunk accumulates an `m×n` partial sequentially — chunk
+/// 0 directly into `out`, the rest into pooled scratch — and the
+/// partials combine in a fixed pairwise order (`P[i] += P[i+gap]` for
+/// `gap = 1, 2, 4, …`). Worker count decides only *who* computes a
+/// chunk, never the chunk boundaries or the combine order, so the fp
+/// result is bit-identical across `LAYERPIPE2_WORKERS` values — the
+/// property the oracle/executor bit-equivalence rests on. (Relative to
+/// the pre-tree sequential kernel the summation order *did* change once
+/// `r > TN_CHUNK`; oracle and executor moved together.)
 pub fn matmul_tn_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    assert_eq!(a.ndim(), 2, "matmul_tn lhs must be 2-D");
+    assert_eq!(b.ndim(), 2, "matmul_tn rhs must be 2-D");
+    let (r, m, n) = (a.shape()[0], a.shape()[1], b.shape()[1]);
+    let threads = if r * m * n < PAR_MIN_MADDS {
+        1
+    } else {
+        workers::pool_size().min(r.div_ceil(TN_CHUNK)).max(1)
+    };
+    matmul_tn_into_with_threads(a, b, out, threads);
+}
+
+/// [`matmul_tn_into`] with an explicit worker count (determinism tests
+/// and benches; `threads` affects only the task split, never the bits).
+pub fn matmul_tn_into_with_threads(a: &Tensor, b: &Tensor, out: &mut Tensor, threads: usize) {
     assert_eq!(a.ndim(), 2, "matmul_tn lhs must be 2-D");
     assert_eq!(b.ndim(), 2, "matmul_tn rhs must be 2-D");
     let (r, m) = (a.shape()[0], a.shape()[1]);
@@ -193,19 +330,68 @@ pub fn matmul_tn_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
     out.fill(0.0);
     let (ad, bd) = (a.data(), b.data());
     let cd = out.data_mut();
-    for rr in 0..r {
-        let brow = &bd[rr * n..(rr + 1) * n];
-        for i in 0..m {
-            let ari = ad[rr * m + i];
-            if ari == 0.0 {
-                continue;
-            }
-            let crow = &mut cd[i * n..(i + 1) * n];
-            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
-                *cv += ari * bv;
-            }
+    let nchunks = r.div_ceil(TN_CHUNK).max(1);
+    if nchunks == 1 {
+        // Single chunk: plain sequential accumulation (identical to the
+        // tree with one leaf) — the common dense case, batch ≤ TN_CHUNK.
+        matmul_tn_chunk(ad, bd, cd, 0, r, m, n);
+        return;
+    }
+    let mn = m * n;
+    let mut ws = workers::take_scratch((nchunks - 1) * mn);
+    let chunk_rows = |ci: usize| TN_CHUNK.min(r - ci * TN_CHUNK);
+    if threads > 1 && r * m * n >= PAR_MIN_MADDS {
+        // Chunks grouped into at most `threads` tasks (so the parameter
+        // genuinely bounds parallelism); partial 0 is `out` (already
+        // zeroed), the rest zero their pooled slice before accumulating.
+        // Grouping never touches the chunk geometry or combine order, so
+        // the bits stay independent of `threads`.
+        let mut parts: Vec<(usize, &mut [f32])> = Vec::with_capacity(nchunks);
+        parts.push((0, &mut cd[..]));
+        for (i, w) in ws.chunks_mut(mn).enumerate() {
+            parts.push((i + 1, w));
+        }
+        let chunks_per_task = nchunks.div_ceil(threads.min(nchunks));
+        let mut tasks: Vec<Task<'_>> = Vec::with_capacity(nchunks.div_ceil(chunks_per_task));
+        while !parts.is_empty() {
+            let take = chunks_per_task.min(parts.len());
+            let group: Vec<(usize, &mut [f32])> = parts.drain(..take).collect();
+            tasks.push(Box::new(move || {
+                for (ci, pd) in group {
+                    if ci > 0 {
+                        pd.fill(0.0);
+                    }
+                    matmul_tn_chunk(ad, bd, pd, ci * TN_CHUNK, chunk_rows(ci), m, n);
+                }
+            }) as Task<'_>);
+        }
+        workers::global().run(tasks);
+    } else {
+        matmul_tn_chunk(ad, bd, cd, 0, chunk_rows(0), m, n);
+        for ci in 1..nchunks {
+            let pd = &mut ws[(ci - 1) * mn..ci * mn];
+            pd.fill(0.0);
+            matmul_tn_chunk(ad, bd, pd, ci * TN_CHUNK, chunk_rows(ci), m, n);
         }
     }
+    // Fixed pairwise combine: P[0] = out, P[i>0] = ws chunk i−1. The
+    // gap-doubling order depends only on `nchunks` — worker-count
+    // independent by construction.
+    let mut gap = 1;
+    while gap < nchunks {
+        let mut i = 0;
+        while i + gap < nchunks {
+            if i == 0 {
+                add_assign(cd, &ws[(gap - 1) * mn..gap * mn]);
+            } else {
+                let (lo, hi) = ws.split_at_mut((i + gap - 1) * mn);
+                add_assign(&mut lo[(i - 1) * mn..i * mn], &hi[..mn]);
+            }
+            i += 2 * gap;
+        }
+        gap *= 2;
+    }
+    workers::recycle_scratch(ws);
 }
 
 /// `C = Aᵀ @ B` (allocating wrapper over [`matmul_tn_into`]).
@@ -251,17 +437,9 @@ pub fn transpose(a: &Tensor) -> Tensor {
     t
 }
 
-/// Fused forward epilogue, in place on `y` (typically a fresh matmul
-/// result): `y[i, j] += b[j]`, then `max(0, ·)` when `relu` — one pass
-/// instead of the add-bias + relu pair, same per-element op order.
-pub fn bias_act_inplace(y: &mut Tensor, b: &Tensor, relu: bool) {
-    assert_eq!(y.ndim(), 2);
-    assert_eq!(b.ndim(), 1);
-    let (m, n) = (y.shape()[0], y.shape()[1]);
-    assert_eq!(n, b.shape()[0]);
-    let (yd, bd) = (y.data_mut(), b.data());
-    for i in 0..m {
-        let row = &mut yd[i * n..(i + 1) * n];
+/// Row body of [`bias_act_inplace`] over a chunk of rows.
+fn bias_act_rows(yd: &mut [f32], bd: &[f32], n: usize, relu: bool) {
+    for row in yd.chunks_mut(n) {
         if relu {
             for (v, bv) in row.iter_mut().zip(bd.iter()) {
                 *v = (*v + bv).max(0.0);
@@ -272,6 +450,29 @@ pub fn bias_act_inplace(y: &mut Tensor, b: &Tensor, relu: bool) {
             }
         }
     }
+}
+
+/// Fused forward epilogue, in place on `y` (typically a fresh matmul
+/// result): `y[i, j] += b[j]`, then `max(0, ·)` when `relu` — one pass
+/// instead of the add-bias + relu pair, same per-element op order.
+/// Large surfaces split rows across pool workers; rows are independent
+/// (no cross-row reduction), so any partition is bit-identical.
+pub fn bias_act_inplace(y: &mut Tensor, b: &Tensor, relu: bool) {
+    assert_eq!(y.ndim(), 2);
+    assert_eq!(b.ndim(), 1);
+    let (m, n) = (y.shape()[0], y.shape()[1]);
+    assert_eq!(n, b.shape()[0]);
+    if n == 0 {
+        return; // zero-width rows: nothing to add or activate
+    }
+    let (yd, bd) = (y.data_mut(), b.data());
+    let threads = workers::unit_threads(m * n, m);
+    if threads <= 1 {
+        bias_act_rows(yd, bd, n, relu);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    workers::run_chunked(yd, rows_per * n, &|_, chunk| bias_act_rows(chunk, bd, n, relu));
 }
 
 /// Row-broadcast add into `out`: `out[i, j] = x[i, j] + b[j]`.
@@ -324,29 +525,115 @@ pub fn relu_grad(y: &Tensor, dy: &Tensor) -> Tensor {
     g
 }
 
+/// One chunk of [`grad_col_sum_rows`]: mask + per-column reduction over
+/// `rows` rows, accumulating into the chunk's private `db` partial
+/// (which must arrive zero-filled).
+fn grad_col_sum_chunk(
+    yd: &[f32],
+    dyd: &[f32],
+    zd: &mut [f32],
+    db: &mut [f32],
+    n: usize,
+    relu: bool,
+) {
+    for (r, zrow) in zd.chunks_mut(n).enumerate() {
+        let yrow = &yd[r * n..(r + 1) * n];
+        let dyrow = &dyd[r * n..(r + 1) * n];
+        for (((zv, &yv), &gv), sv) in
+            zrow.iter_mut().zip(yrow.iter()).zip(dyrow.iter()).zip(db.iter_mut())
+        {
+            let g = if relu && yv <= 0.0 { 0.0 } else { gv };
+            *zv = g;
+            *sv += g;
+        }
+    }
+}
+
+/// Fused backward epilogue over a row-major `[rows, n]` view, on raw
+/// slices so spatial ops can apply it to their channel-major views
+/// (conv reads `[batch·oh·ow, out_c]` out of its flat wire tensors):
+/// `zd[r, j] = dyd[r, j] · mask` (mask = `yd[r, j] > 0` when `relu`,
+/// else pass-through) and `db[j] = Σ_r zd[r, j]`.
+///
+/// Small surfaces run as one streaming pass (row-major ascending — the
+/// pre-PR-4 order). Large surfaces split into fixed [`EPI_CHUNK`]-row
+/// chunks — geometry a pure function of `rows` — where each chunk owns
+/// its `zd` rows and reduces into a private partial, and partials
+/// combine in fixed ascending order: bit-identical across worker counts
+/// for the same reason as the [`matmul_tn_into`] tree.
+pub fn grad_col_sum_rows(
+    yd: &[f32],
+    dyd: &[f32],
+    zd: &mut [f32],
+    db: &mut [f32],
+    rows: usize,
+    n: usize,
+    relu: bool,
+) {
+    assert_eq!(yd.len(), rows * n, "grad_col_sum_rows: y view length");
+    assert_eq!(dyd.len(), rows * n, "grad_col_sum_rows: dy view length");
+    assert_eq!(zd.len(), rows * n, "grad_col_sum_rows: dz view length");
+    assert_eq!(db.len(), n, "grad_col_sum_rows: db length");
+    if n == 0 {
+        return; // zero-width rows: no dz elements, no db columns
+    }
+    db.fill(0.0);
+    let nchunks = if rows * n < PAR_MIN_ELEMS { 1 } else { rows.div_ceil(EPI_CHUNK) };
+    if nchunks <= 1 {
+        grad_col_sum_chunk(yd, dyd, zd, db, n, relu);
+        return;
+    }
+    let mut ws = workers::take_scratch((nchunks - 1) * n);
+    let run_chunk = |ci: usize, zchunk: &mut [f32], part: &mut [f32]| {
+        part.fill(0.0);
+        let r0 = ci * EPI_CHUNK;
+        let rr = zchunk.len() / n;
+        grad_col_sum_chunk(&yd[r0 * n..(r0 + rr) * n], &dyd[r0 * n..(r0 + rr) * n], zchunk, part, n, relu);
+    };
+    if workers::pool_size() > 1 {
+        let mut parts: Vec<&mut [f32]> = Vec::with_capacity(nchunks);
+        parts.push(&mut db[..]);
+        parts.extend(ws.chunks_mut(n));
+        let tasks: Vec<Task<'_>> = zd
+            .chunks_mut(EPI_CHUNK * n)
+            .zip(parts)
+            .enumerate()
+            .map(|(ci, (zchunk, part))| {
+                let rc = &run_chunk;
+                Box::new(move || rc(ci, zchunk, part)) as Task<'_>
+            })
+            .collect();
+        workers::global().run(tasks);
+    } else {
+        run_chunk(0, &mut zd[..EPI_CHUNK * n], db);
+        for (ci, (zchunk, part)) in
+            zd[EPI_CHUNK * n..].chunks_mut(EPI_CHUNK * n).zip(ws.chunks_mut(n)).enumerate()
+        {
+            run_chunk(ci + 1, zchunk, part);
+        }
+    }
+    // Fixed ascending combine of the db partials (geometry depends only
+    // on `rows`, so worker count never changes the summation order).
+    for part in ws.chunks(n) {
+        add_assign(db, part);
+    }
+    workers::recycle_scratch(ws);
+}
+
 /// Fused backward epilogue: the ReLU mask and the bias-grad reduction in
 /// one streaming pass — `dz = dy * (y > 0)` and `db[j] = Σ_i dz[i, j]`,
-/// bit-identical to [`relu_grad_into`] + [`col_sum_into`] (same
-/// per-element ops, same row-major accumulation order) but touching `dy`
-/// and `dz` once instead of twice.
+/// element-for-element equal to [`relu_grad_into`] + [`col_sum_into`]
+/// (identical per-element ops; for surfaces past the parallel threshold
+/// the `db` summation runs as the fixed-chunk reduction of
+/// [`grad_col_sum_rows`]) but touching `dy` and `dz` once instead of
+/// twice.
 pub fn relu_grad_col_sum_into(y: &Tensor, dy: &Tensor, dz: &mut Tensor, db: &mut Tensor) {
     assert_eq!(y.shape(), dy.shape());
     assert_eq!(y.ndim(), 2, "fused backward epilogue needs 2-D activations");
     let (m, n) = (y.shape()[0], y.shape()[1]);
-    dz.copy_from(dy);
+    dz.resize(&[m, n]);
     db.resize(&[n]);
-    db.fill(0.0);
-    let (zd, yd, sd) = (dz.data_mut(), y.data(), db.data_mut());
-    for i in 0..m {
-        let zrow = &mut zd[i * n..(i + 1) * n];
-        let yrow = &yd[i * n..(i + 1) * n];
-        for ((zv, yv), sv) in zrow.iter_mut().zip(yrow.iter()).zip(sd.iter_mut()) {
-            if *yv <= 0.0 {
-                *zv = 0.0;
-            }
-            *sv += *zv;
-        }
-    }
+    grad_col_sum_rows(y.data(), dy.data(), dz.data_mut(), db.data_mut(), m, n, true);
 }
 
 /// Numerically-stable row softmax into `out`.
@@ -449,18 +736,30 @@ pub fn softmax_xent_onehot(logits: &Tensor, onehot: &Tensor) -> (f32, Tensor, f3
     (loss, dl, correct)
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::util::Rng;
+/// Scalar reference kernels — the pre-packing/pre-tree serial paths,
+/// kept **only** as oracles for tests and the kernel bench (never called
+/// from the hot path; the trainers and backends use the tiled kernels
+/// above).
+///
+/// [`reference::matmul`] and [`reference::matmul_nt`] sum each output
+/// element in ascending `kk` order — the exact order the tiled kernels
+/// preserve — so the production kernels must match them **bitwise**.
+/// [`reference::matmul_tn`] is the old purely sequential `dw` reduction
+/// (rows ascending, no chunking): once `r > TN_CHUNK` the tree reduction
+/// legitimately reassociates the sum, so comparisons against it are
+/// tolerance-based, not bitwise.
+pub mod reference {
+    use super::Tensor;
 
-    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    /// Naive `C = A @ B`, ascending-`k` dots.
+    pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
         let (m, k) = (a.shape()[0], a.shape()[1]);
         let n = b.shape()[1];
+        assert_eq!(k, b.shape()[0]);
         let mut c = Tensor::zeros(&[m, n]);
         for i in 0..m {
             for j in 0..n {
-                let mut s = 0.0;
+                let mut s = 0.0f32;
                 for kk in 0..k {
                     s += a.at2(i, kk) * b.at2(kk, j);
                 }
@@ -468,6 +767,56 @@ mod tests {
             }
         }
         c
+    }
+
+    /// Naive `C = A @ Bᵀ`, ascending-`k` dots.
+    pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape()[0], a.shape()[1]);
+        let n = b.shape()[0];
+        assert_eq!(k, b.shape()[1]);
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for kk in 0..k {
+                    s += a.at2(i, kk) * b.at2(j, kk);
+                }
+                c.set2(i, j, s);
+            }
+        }
+        c
+    }
+
+    /// The pre-tree sequential `C = Aᵀ @ B`: one outer-product row at a
+    /// time, rows ascending — the summation order the trainers used
+    /// before the deterministic tree reduction.
+    pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+        let (r, m) = (a.shape()[0], a.shape()[1]);
+        let n = b.shape()[1];
+        assert_eq!(r, b.shape()[0]);
+        let mut c = Tensor::zeros(&[m, n]);
+        let (ad, bd, cd) = (a.data(), b.data(), c.data_mut());
+        for rr in 0..r {
+            let brow = &bd[rr * n..(rr + 1) * n];
+            for i in 0..m {
+                let ari = ad[rr * m + i];
+                let crow = &mut cd[i * n..(i + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += ari * bv;
+                }
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        reference::matmul(a, b)
     }
 
     #[test]
@@ -487,16 +836,18 @@ mod tests {
 
     #[test]
     fn matmul_is_deterministic_across_parallel_threshold() {
-        // Shapes straddling PAR_MIN_MADDS must agree with the naive
-        // kernel; the parallel split may not change the fp result.
+        // Shapes straddling PAR_MIN_MADDS: the parallel split may not
+        // change the fp result, and the packed kernel must stay bitwise
+        // equal to the naive ascending-k reference.
         let mut rng = Rng::new(11);
         let (m, k, n) = (160, 96, 96); // 160·96·96 ≈ 1.5M madds → parallel
         let a = Tensor::randn(&[m, k], 1.0, &mut rng);
         let b = Tensor::randn(&[k, n], 1.0, &mut rng);
         let par = matmul(&a, &b);
-        let mut serial = Tensor::zeros(&[m, n]);
-        matmul_rows(a.data(), b.data(), serial.data_mut(), 0, m, k, n);
+        let mut serial = Tensor::empty();
+        matmul_into_with_threads(&a, &b, &mut serial, 1);
         assert_eq!(par, serial, "parallel result must be bit-identical");
+        assert_eq!(par, reference::matmul(&a, &b), "packed kernel vs naive reference");
     }
 
     #[test]
@@ -512,9 +863,10 @@ mod tests {
             let a = Tensor::randn(&[m, k], 1.0, &mut rng);
             let b = Tensor::randn(&[n, k], 1.0, &mut rng);
             let got = matmul_nt(&a, &b);
-            let mut serial = Tensor::zeros(&[m, n]);
-            matmul_nt_rows(a.data(), b.data(), serial.data_mut(), 0, m, k, n);
+            let mut serial = Tensor::empty();
+            matmul_nt_into_with_threads(&a, &b, &mut serial, 1);
             assert_eq!(got, serial, "parallel nt must be bit-identical");
+            assert_eq!(got, reference::matmul_nt(&a, &b), "tiled nt vs naive reference");
             let want = matmul(&a, &transpose(&b));
             assert!(got.max_abs_diff(&want) < 1e-3);
         }
@@ -532,7 +884,29 @@ mod tests {
             let got = matmul_tn(&a, &b);
             let want = matmul(&transpose(&a), &b);
             assert!(got.max_abs_diff(&want) < 1e-4);
+            // Single-chunk shapes (r ≤ TN_CHUNK): the tree degenerates to
+            // the old sequential order — bitwise vs the reference.
+            assert_eq!(got, reference::matmul_tn(&a, &b));
         }
+    }
+
+    #[test]
+    fn matmul_tn_tree_reduction_is_chunk_deterministic() {
+        // r spanning several TN_CHUNK chunks but below the parallel
+        // threshold: serial execution must already use the tree order, so
+        // explicit thread counts can't change the bits.
+        let mut rng = Rng::new(29);
+        let (r, m, n) = (3 * TN_CHUNK + 7, 18, 13);
+        let a = Tensor::randn(&[r, m], 0.25, &mut rng);
+        let b = Tensor::randn(&[r, n], 0.25, &mut rng);
+        let got = matmul_tn(&a, &b);
+        for threads in [1usize, 2, 5, 8] {
+            let mut out = Tensor::empty();
+            matmul_tn_into_with_threads(&a, &b, &mut out, threads);
+            assert_eq!(got, out, "tree reduction diverged at threads={threads}");
+        }
+        // Tolerance (not bitwise) vs the pre-tree sequential order.
+        assert!(got.max_abs_diff(&reference::matmul_tn(&a, &b)) < 1e-5);
     }
 
     #[test]

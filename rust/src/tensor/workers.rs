@@ -14,6 +14,14 @@
 //!
 //! Tasks must not submit nested batches to the pool (a worker blocking in
 //! `run` would starve the queue it is supposed to drain).
+//!
+//! The module also owns the kernel scratch free lists
+//! ([`take_scratch`] / [`recycle_scratch`]): pooled `Vec<f32>` workspaces
+//! for tree-reduction partials and packed matmul panels, kept
+//! *per-thread* so the kernel hot path takes no shared lock. They live
+//! here — next to the pool the parallel kernels submit to — but are
+//! independent of the worker threads, so taking scratch never spawns
+//! them.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -146,6 +154,47 @@ impl WorkerPool {
     }
 }
 
+/// Touched-element threshold below which the memory-bound parallel
+/// passes (elementwise epilogues, gathers, pooling scans) stay
+/// single-threaded: the queue handoff costs more than the scan. One
+/// shared constant so the kernels can't drift apart.
+pub const PAR_MIN_WORK: usize = 1 << 20;
+
+/// Worker count for a memory-bound pass of `work` touched elements over
+/// `units` independently-ownable units (rows, samples, patch rows): 1
+/// below [`PAR_MIN_WORK`] — WITHOUT touching the pool, so small passes
+/// never spawn it — else the pool's parallelism clamped to the unit
+/// count.
+pub fn unit_threads(work: usize, units: usize) -> usize {
+    if work < PAR_MIN_WORK {
+        1
+    } else {
+        pool_size().min(units).max(1)
+    }
+}
+
+/// Shared fan-out scaffold for the row/sample-parallel kernels: split
+/// `data` into `chunk_elems`-sized mutable chunks and run
+/// `body(chunk_index, chunk)` for each across the global pool. The
+/// caller picks the chunk size (and with it the parallelism); chunks
+/// are disjoint, so any kernel whose writes stay inside its chunk is
+/// bit-identical for every split. One chunk (or less) runs inline.
+pub fn run_chunked(data: &mut [f32], chunk_elems: usize, body: &(impl Fn(usize, &mut [f32]) + Sync)) {
+    if data.is_empty() {
+        return;
+    }
+    if chunk_elems == 0 || chunk_elems >= data.len() {
+        body(0, data);
+        return;
+    }
+    let tasks: Vec<Task<'_>> = data
+        .chunks_mut(chunk_elems)
+        .enumerate()
+        .map(|(ci, chunk)| Box::new(move || body(ci, chunk)) as Task<'_>)
+        .collect();
+    global().run(tasks);
+}
+
 fn worker_loop(shared: &Shared) {
     loop {
         let job = {
@@ -171,6 +220,80 @@ fn default_size() -> usize {
         .and_then(|s| s.parse::<usize>().ok())
         .filter(|&n| n >= 1)
         .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()))
+}
+
+// ---------------------------------------------------------------------------
+// Kernel scratch workspaces.
+// ---------------------------------------------------------------------------
+
+/// Spare scratch buffers retained per thread; recycles beyond this are
+/// dropped (bounds parked memory if many distinct sizes churn).
+const MAX_SCRATCH_SPARES: usize = 8;
+
+thread_local! {
+    /// Per-thread free list of kernel scratch buffers (tree-reduction
+    /// partials, packed matmul panels). Thread-local on purpose:
+    /// take/recycle sit on the kernel hot path of every stage thread,
+    /// and a process-global list would put a shared lock under every
+    /// matmul — the pipeline's "no locks on the hot path" contract.
+    /// Also deliberately *not* tied to the worker threads: taking
+    /// scratch must never spawn the pool, so serial-sized kernels keep
+    /// their no-thread guarantee. (Scoped stage threads re-spawned per
+    /// epoch start with an empty list — a few amortized allocations per
+    /// epoch, not per iteration.)
+    static SCRATCH: std::cell::RefCell<Vec<Vec<f32>>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Aggregate take/recycle counters across all threads (observability;
+/// the free lists themselves are thread-local).
+static SCRATCH_HITS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+static SCRATCH_MISSES: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Hand out a scratch buffer of `len` f32s from the calling thread's
+/// free list. **Contents are unspecified** (recycled buffers keep stale
+/// values): callers must fully overwrite or zero-fill before reading.
+/// Steady-state cost is a lock-free pop + in-place `resize` (which
+/// reallocates only while capacities are still growing), so kernels
+/// that take/recycle every call allocate nothing once warm.
+pub fn take_scratch(len: usize) -> Vec<f32> {
+    let popped = SCRATCH.with(|s| s.borrow_mut().pop());
+    match popped {
+        Some(mut v) => {
+            SCRATCH_HITS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            v.resize(len, 0.0);
+            v
+        }
+        None => {
+            SCRATCH_MISSES.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            vec![0.0; len]
+        }
+    }
+}
+
+/// Return a scratch buffer to the calling thread's free list (capacity
+/// retained).
+pub fn recycle_scratch(v: Vec<f32>) {
+    if v.capacity() == 0 {
+        return;
+    }
+    SCRATCH.with(|s| {
+        let mut free = s.borrow_mut();
+        if free.len() < MAX_SCRATCH_SPARES {
+            free.push(v);
+        }
+    });
+}
+
+/// `(hits, misses)` summed over every thread's scratch free list —
+/// takes served from a recycled buffer vs fresh allocations. On a
+/// single-threaded trainer, misses must stop growing once the kernel
+/// working set is warm (asserted by `alloc_steady_state.rs`).
+pub fn scratch_stats() -> (u64, u64) {
+    (
+        SCRATCH_HITS.load(std::sync::atomic::Ordering::Relaxed),
+        SCRATCH_MISSES.load(std::sync::atomic::Ordering::Relaxed),
+    )
 }
 
 static POOL: OnceLock<WorkerPool> = OnceLock::new();
@@ -224,6 +347,28 @@ mod tests {
             pool.run(tasks);
             assert!(acc.iter().all(|&v| v == round), "round {round}");
         }
+    }
+
+    #[test]
+    fn scratch_recycles_capacity() {
+        // The free list is thread-local, so this thread's take/recycle
+        // sequence is fully deterministic (the stats counters are
+        // process-global, hence the before/after delta).
+        let (h0, _) = scratch_stats();
+        let mut a = take_scratch(16);
+        assert_eq!(a.len(), 16);
+        a.fill(7.0);
+        recycle_scratch(a);
+        let b = take_scratch(8);
+        assert_eq!(b.len(), 8);
+        assert!(b.iter().all(|&v| v == 7.0), "storage was not reused");
+        let (h1, _) = scratch_stats();
+        assert!(h1 > h0, "recycled scratch was never reused");
+        recycle_scratch(b);
+        // Growing past the recycled capacity still yields a valid buffer.
+        let c = take_scratch(64);
+        assert_eq!(c.len(), 64);
+        recycle_scratch(c);
     }
 
     #[test]

@@ -18,7 +18,7 @@ use layerpipe2::config::ExperimentConfig;
 use layerpipe2::data::{image_teacher_dataset, teacher_dataset};
 use layerpipe2::layers::{Feature, LayerSpec, NetworkSpec};
 use layerpipe2::strategy::StrategyKind;
-use layerpipe2::tensor::Tensor;
+use layerpipe2::tensor::{workers, Tensor};
 use layerpipe2::train::Trainer;
 use layerpipe2::util::Rng;
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -143,20 +143,40 @@ fn steady_state_iterations_allocate_near_zero() {
             trainer.iteration(Some(feed.pop().expect("primed batch"))).unwrap();
         }
         let before = ALLOCS.load(Ordering::Relaxed);
+        // The kernel scratch free list serves the matmul packing panels
+        // and the tree-reduction dw partials: once primed, measured
+        // iterations must be all hits (misses = fresh allocations only
+        // while the working set warms up).
+        let (scratch_hits_before, scratch_misses_before) = workers::scratch_stats();
         for _ in 0..measure {
             trainer.iteration(Some(feed.pop().expect("measured batch"))).unwrap();
         }
         let total = ALLOCS.load(Ordering::Relaxed) - before;
         let per_iter = total as f64 / measure as f64;
+        let (scratch_hits, scratch_misses) = workers::scratch_stats();
         println!(
-            "conv path / {}: {total} allocs over {measure} iters = {per_iter:.2}/iter",
-            kind.name()
+            "conv path / {}: {total} allocs over {measure} iters = {per_iter:.2}/iter \
+             (scratch: +{} hits, +{} misses)",
+            kind.name(),
+            scratch_hits - scratch_hits_before,
+            scratch_misses - scratch_misses_before
         );
         assert!(
             per_iter <= 4.0,
             "conv-path hot path regressed to {per_iter:.2} allocs/iter for {} \
              (expected (near-)zero: persistent im2col/dcols workspaces, pooled \
              chains, zero-length param-grad resizes)",
+            kind.name()
+        );
+        assert!(
+            scratch_hits > scratch_hits_before,
+            "conv path / {}: packing/partial workspaces never hit the scratch pool",
+            kind.name()
+        );
+        assert_eq!(
+            scratch_misses, scratch_misses_before,
+            "conv path / {}: steady-state iterations allocated fresh kernel scratch \
+             (packing panels / tree-reduction partials must recycle)",
             kind.name()
         );
     }

@@ -127,6 +127,92 @@ fn worker_pool_matmul_is_bit_stable_across_thread_counts() {
 }
 
 #[test]
+fn packed_matmuls_are_bitwise_equal_to_unpacked_reference() {
+    // The panel packing and register tiling are pure layout/scheduling
+    // changes: per output element the multiply-add order is ascending k,
+    // exactly the naive triple loop — so the production kernels must
+    // match the kept-for-tests scalar references BITWISE, including on
+    // dirty pooled output buffers.
+    let mut rng = Rng::new(515);
+    for case in 0..12 {
+        // Mix panel-edge shapes (n % 32 ≠ 0), k=1, and one parallel-path
+        // shape at the end.
+        let (m, k, n) = if case == 11 {
+            (160, 96, 96)
+        } else {
+            (1 + rng.index(70), 1 + rng.index(70), 1 + rng.index(70))
+        };
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let mut out = dirty(&mut rng);
+        tensor::matmul_into(&a, &b, &mut out);
+        assert_eq!(out, tensor::reference::matmul(&a, &b), "case {case}: packed matmul");
+
+        let bt = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let mut out = dirty(&mut rng);
+        tensor::matmul_nt_into(&a, &bt, &mut out);
+        assert_eq!(out, tensor::reference::matmul_nt(&a, &bt), "case {case}: tiled matmul_nt");
+    }
+}
+
+#[test]
+fn tree_reduction_matmul_tn_is_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(616);
+    // Shapes with several TN_CHUNK(=64)-row chunks: one below the
+    // parallel threshold (serial must already follow the tree order) and
+    // one above it (pooled chunk tasks engage). Small std keeps the
+    // naive-reference tolerance meaningful at these accumulation depths.
+    for (r, m, n) in [(200usize, 48usize, 40usize), (2048, 48, 48)] {
+        let a = Tensor::randn(&[r, m], 0.1, &mut rng);
+        let b = Tensor::randn(&[r, n], 0.1, &mut rng);
+        let mut reference = Tensor::empty();
+        tensor::matmul_tn_into_with_threads(&a, &b, &mut reference, 1);
+        for threads in 2..=8 {
+            let mut out = dirty(&mut rng);
+            tensor::matmul_tn_into_with_threads(&a, &b, &mut out, threads);
+            assert_eq!(out, reference, "matmul_tn diverged at r={r} threads={threads}");
+        }
+        // The default entry point (pool-sized) must sit on the same tree.
+        let mut auto = dirty(&mut rng);
+        tensor::matmul_tn_into(&a, &b, &mut auto);
+        assert_eq!(auto, reference, "matmul_tn auto path diverged at r={r}");
+        // Tolerance (never bitwise once r > TN_CHUNK — the tree
+        // legitimately reassociates) vs the old sequential order.
+        let naive = tensor::reference::matmul_tn(&a, &b);
+        assert!(
+            reference.max_abs_diff(&naive) < 1e-5,
+            "r={r}: tree drifted {} from the sequential reference",
+            reference.max_abs_diff(&naive)
+        );
+    }
+}
+
+#[test]
+fn chunked_epilogue_reduction_matches_composition() {
+    // Above the epilogue parallel threshold (rows·n ≥ 2^20) the fused
+    // mask+col-sum kernel switches to fixed 256-row chunks with an
+    // ascending partial combine. dz is per-row (bitwise); db changes
+    // summation order vs the single pass, so compare with tolerance —
+    // and re-running must be exactly reproducible (fixed geometry).
+    let mut rng = Rng::new(717);
+    let (rows, n) = (4099usize, 260usize); // ≥ 2^20 elements, ragged tail
+    let y = tensor::relu(&Tensor::randn(&[rows, n], 1.0, &mut rng));
+    let dy = Tensor::randn(&[rows, n], 1.0, &mut rng);
+    let (mut dz, mut db) = (dirty(&mut rng), dirty(&mut rng));
+    tensor::relu_grad_col_sum_into(&y, &dy, &mut dz, &mut db);
+    assert_eq!(dz, tensor::relu_grad(&y, &dy), "chunked dz must stay per-row exact");
+    let db_ref = tensor::col_sum(&tensor::relu_grad(&y, &dy));
+    assert!(
+        db.max_abs_diff(&db_ref) < 1e-3,
+        "chunked db drifted {} from the composition",
+        db.max_abs_diff(&db_ref)
+    );
+    let (mut dz2, mut db2) = (dirty(&mut rng), dirty(&mut rng));
+    tensor::relu_grad_col_sum_into(&y, &dy, &mut dz2, &mut db2);
+    assert_eq!(db, db2, "chunked reduction must be exactly reproducible");
+}
+
+#[test]
 fn worker_pool_survives_concurrent_submitters() {
     // Pipeline stage threads share the global pool: concurrent matmuls
     // from several OS threads must all come out bit-identical to the

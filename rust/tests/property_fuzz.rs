@@ -5,6 +5,7 @@
 use layerpipe2::config::toml::TomlDoc;
 use layerpipe2::ema::{ExactWindow, GradientAverager, PipelineAwareEma};
 use layerpipe2::graph::Dfg;
+use layerpipe2::layers::LayerCost;
 use layerpipe2::retiming::{closed_form_lags, insert_pipeline_delays, Retiming, StagePartition};
 use layerpipe2::schedule::{choose_stages, AdaptiveLimits, CostModel};
 use layerpipe2::tensor::Tensor;
@@ -174,6 +175,86 @@ fn adaptive_choice_is_always_feasible_and_best() {
                     c.speedup
                 );
             }
+        }
+    });
+}
+
+#[test]
+fn adaptive_choice_matches_brute_force_on_hetero_stacks() {
+    // The conv-aware schedule model: on random conv+dense stacks, the
+    // adaptive choice must (a) evaluate every candidate K on the same
+    // cost-balanced boundaries `StagePartition::balanced` derives from
+    // the LayerCost totals — with brute-force min-max optimality per K —
+    // and (b) pick the feasible K with the best modeled speedup.
+    property(50, |rng, case| {
+        let layers = 2 + rng.index(7);
+        let costs: Vec<LayerCost> = (0..layers)
+            // Layer 0 is always conv-like so total cost is nonzero (an
+            // all-free stack would make every speedup 0/0).
+            .map(|l| match if l == 0 { 0 } else { rng.index(4) } {
+                // conv-like: heavy, backward ≈ 2× forward, big activations
+                0 => {
+                    let f = 1_000 * (1 + rng.index(50)) as u64;
+                    LayerCost {
+                        fwd_flops: f,
+                        bwd_flops: 2 * f,
+                        act_bytes: 4_096 + rng.index(8_192) as u64,
+                        param_bytes: 512,
+                    }
+                }
+                // dense-like: moderate
+                1 | 2 => {
+                    let f = 10 * (1 + rng.index(200)) as u64;
+                    LayerCost {
+                        fwd_flops: f,
+                        bwd_flops: 2 * f,
+                        act_bytes: 256 + rng.index(1_024) as u64,
+                        param_bytes: 256,
+                    }
+                }
+                // flatten/pool-like: free or nearly free
+                _ => LayerCost {
+                    fwd_flops: rng.index(3) as u64,
+                    bwd_flops: rng.index(3) as u64,
+                    act_bytes: 128,
+                    param_bytes: 0,
+                },
+            })
+            .collect();
+        let cm = CostModel::from_layer_costs(&costs);
+        let totals: Vec<u64> = costs.iter().map(LayerCost::total_flops).collect();
+        let c = choose_stages(layers, &cm, &AdaptiveLimits::default());
+        // (a) chosen partition ≡ balanced on the same totals, and that
+        // partition is min-max optimal (brute force over boundary masks).
+        let want = StagePartition::balanced(&totals, c.stages).unwrap();
+        assert_eq!(c.partition.stage_of(), want.stage_of(), "case {case}");
+        let got = c.partition.max_stage_cost(&totals);
+        let slots = layers - 1;
+        let mut best = u64::MAX;
+        for mask in 0u32..(1 << slots) {
+            if mask.count_ones() as usize != c.stages - 1 {
+                continue;
+            }
+            let (mut mx, mut cur) = (0u64, totals[0]);
+            for l in 1..layers {
+                if mask & (1 << (l - 1)) != 0 {
+                    mx = mx.max(cur);
+                    cur = 0;
+                }
+                cur += totals[l];
+            }
+            best = best.min(mx.max(cur));
+        }
+        assert_eq!(got, best, "case {case}: partition not min-max optimal for K={}", c.stages);
+        // (b) no candidate K beats the chosen speedup.
+        assert_eq!(c.candidates.len(), layers, "case {case}");
+        for &(k, s, feasible) in &c.candidates {
+            assert!(feasible, "case {case}: unconstrained K={k} must be feasible");
+            assert!(
+                s <= c.speedup + 1e-9,
+                "case {case}: candidate K={k} ({s}) beats chosen ({})",
+                c.speedup
+            );
         }
     });
 }

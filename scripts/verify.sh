@@ -21,10 +21,15 @@ cargo clippy -- -D warnings -D clippy::perf
 
 # Release-mode bench smoke: runs the hot-path bench with reduced samples
 # so kernel/allocation regressions fail the gate (and refreshes
-# BENCH_hotpath.json + BENCH_layers.json — the dense and layer-zoo
-# machine-readable perf trajectories).
+# BENCH_hotpath.json + BENCH_layers.json + BENCH_kernels.json — the
+# dense, layer-zoo and kernel-family machine-readable perf
+# trajectories). The kernel-family section validates every kernel
+# in-run: shape mismatches, NaN/non-finite outputs, packed-vs-reference
+# bit drift and tree-reduction worker instability all abort the bench
+# and therefore fail this gate.
 echo "==> bench smoke (release, reduced samples)"
 LAYERPIPE2_BENCH_SMOKE=1 cargo bench --bench runtime_hotpath
+test -s BENCH_kernels.json || { echo "verify: BENCH_kernels.json missing or empty"; exit 1; }
 
 # Heterogeneous end-to-end smoke: conv+pool+dense and dense+LIF stacks
 # through the threaded executor with cost-balanced stages, asserting
