@@ -16,22 +16,26 @@
 //!
 //! Besides the human-readable tables, the run writes machine-readable
 //! trajectories: `BENCH_hotpath.json` (dense hot path),
-//! `BENCH_layers.json` (layer zoo) and `BENCH_kernels.json` (kernel
+//! `BENCH_layers.json` (layer zoo), `BENCH_kernels.json` (kernel
 //! family: scalar reference vs packed/tree kernels, serial vs parallel —
 //! with in-run NaN/shape/bit-stability validation, so a kernel
-//! regression fails the bench). Override paths with
-//! `LAYERPIPE2_BENCH_JSON` / `LAYERPIPE2_BENCH_LAYERS_JSON` /
-//! `LAYERPIPE2_BENCH_KERNELS_JSON`. Set `LAYERPIPE2_BENCH_SMOKE=1` for a
+//! regression fails the bench) and `BENCH_serving.json` (batched
+//! inference serving: requests/sec + p50/p99 batch latency vs
+//! `max_batch`, every response verified bitwise against the sequential
+//! oracle in-run). Override paths with `LAYERPIPE2_BENCH_JSON` /
+//! `LAYERPIPE2_BENCH_LAYERS_JSON` / `LAYERPIPE2_BENCH_KERNELS_JSON` /
+//! `LAYERPIPE2_BENCH_SERVING_JSON`. Set `LAYERPIPE2_BENCH_SMOKE=1` for a
 //! fast CI smoke run (reduced sizes and sample counts, same coverage).
 
 use layerpipe2::backend::{self, Exec, HostBackend};
 use layerpipe2::bench_util::{bench, print_header, print_row, BenchStats};
-use layerpipe2::config::ExperimentConfig;
+use layerpipe2::config::{ExperimentConfig, ModelConfig};
 use layerpipe2::data::teacher_dataset;
-use layerpipe2::layers::{Conv2d, Layer};
+use layerpipe2::layers::{Conv2d, Layer, Network, NetworkSpec};
 use layerpipe2::model::LayerRole;
 use layerpipe2::pipeline::PipelinedTrainer;
 use layerpipe2::runtime::Engine;
+use layerpipe2::serving::{Server, ServerConfig};
 use layerpipe2::strategy::StrategyKind;
 use layerpipe2::tensor::{self, Tensor};
 use layerpipe2::train::Trainer;
@@ -40,6 +44,7 @@ use layerpipe2::util::Rng;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 // ---- counting allocator (allocs/iter metric) --------------------------
 
@@ -537,6 +542,85 @@ fn executor_pool_section(smoke: bool) -> Json {
     ])
 }
 
+/// HOTPATH-g: batched inference serving — requests/sec, rows/sec and
+/// p50/p99 batch latency as a function of `max_batch`, written to
+/// `BENCH_serving.json` so the serving perf trajectory is tracked across
+/// PRs. Every response is verified bitwise against the sequential
+/// forward oracle in-run, so a serving correctness regression fails the
+/// bench (and `verify.sh`, which runs it in smoke mode).
+fn serving_section(smoke: bool) -> Json {
+    print_header("HOTPATH-g: batched inference serving (dense stack, 2 stages, 2 clients)");
+    let mut rows_out: Vec<Json> = Vec::new();
+    let mcfg = ModelConfig {
+        batch: 32,
+        input_dim: 64,
+        hidden_dim: 64,
+        classes: 10,
+        layers: 4,
+        init_scale: 1.0,
+    };
+    let net = Network::build(&NetworkSpec::mlp(&mcfg), &mut Rng::new(31)).unwrap();
+    let be = HostBackend::new();
+    let mut oracle = net.snapshot().unwrap();
+
+    let batch_sizes: &[usize] = if smoke { &[4, 16] } else { &[1, 8, 32] };
+    let n_clients = 2usize;
+    let per_client = if smoke { 200 } else { 2000 };
+    for &mb in batch_sizes {
+        let server = Server::start(
+            Arc::new(HostBackend::new()),
+            &net,
+            &ServerConfig { max_batch: mb, max_wait_ticks: 2, queue_depth: 64, stages: 2 },
+        )
+        .expect("server start");
+        let req_rows = (mb / 2).max(1);
+        let inputs = vec![Tensor::randn(&[req_rows, mcfg.input_dim], 1.0, &mut Rng::new(7))];
+        let expected = vec![vec![oracle.forward_full(&be, &inputs[0]).unwrap()]];
+
+        let sw = std::time::Instant::now();
+        std::thread::scope(|s| {
+            let inputs = &inputs;
+            let expected = &expected;
+            for _ in 0..n_clients {
+                let mut cl = server.client();
+                s.spawn(move || {
+                    // In-run correctness gate: every response bitwise ==
+                    // the sequential oracle, in FIFO order (window 8).
+                    layerpipe2::serving::drive_and_verify(&mut cl, inputs, expected, |_| 0, per_client, 8)
+                        .expect("serving bench responses must match the sequential oracle");
+                });
+            }
+        });
+        let elapsed = sw.elapsed().as_secs_f64();
+        let total = (n_clients * per_client) as f64;
+        let (p50, p99) = server.latency_ms().unwrap_or((0.0, 0.0));
+        let stats = server.shutdown().expect("shutdown");
+        assert_eq!(stats.completed, total as u64, "serving dropped responses");
+        println!(
+            "  max_batch {mb:>3}: {:>9.0} req/s {:>10.0} rows/s  batch p50 {p50:.3}ms p99 {p99:.3}ms  \
+             occupancy {:.2} ({} batches)",
+            total / elapsed,
+            total * req_rows as f64 / elapsed,
+            stats.occupancy,
+            stats.batches
+        );
+        rows_out.push(jobj(vec![
+            ("case", Json::Str(format!("serve_b{mb}"))),
+            ("max_batch", jnum(mb as f64)),
+            ("req_rows", jnum(req_rows as f64)),
+            ("requests_per_sec", jnum(total / elapsed)),
+            ("rows_per_sec", jnum(total * req_rows as f64 / elapsed)),
+            ("batch_p50_ms", jnum(p50)),
+            ("batch_p99_ms", jnum(p99)),
+            ("occupancy", jnum(stats.occupancy)),
+            ("batches", jnum(stats.batches as f64)),
+            ("pool_hits", jnum(stats.pool_hits as f64)),
+            ("pool_misses", jnum(stats.pool_misses as f64)),
+        ]));
+    }
+    Json::Arr(rows_out)
+}
+
 fn main() {
     let smoke = smoke();
     if smoke {
@@ -548,6 +632,7 @@ fn main() {
     pjrt_section();
     let train = train_iteration_section(smoke);
     let executor = executor_pool_section(smoke);
+    let serving = serving_section(smoke);
 
     let mut obj = BTreeMap::new();
     obj.insert("bench".to_string(), Json::Str("runtime_hotpath".to_string()));
@@ -584,4 +669,15 @@ fn main() {
         .unwrap_or_else(|_| "BENCH_kernels.json".to_string());
     std::fs::write(&kpath, Json::Obj(kobj).to_string()).expect("write kernels bench json");
     println!("wrote {kpath}");
+
+    // Serving throughput/latency: its own trajectory file so the
+    // forward-only serving path is tracked across PRs.
+    let mut sobj = BTreeMap::new();
+    sobj.insert("bench".to_string(), Json::Str("runtime_hotpath/serving".to_string()));
+    sobj.insert("smoke".to_string(), Json::Bool(smoke));
+    sobj.insert("serving".to_string(), serving);
+    let spath = std::env::var("LAYERPIPE2_BENCH_SERVING_JSON")
+        .unwrap_or_else(|_| "BENCH_serving.json".to_string());
+    std::fs::write(&spath, Json::Obj(sobj).to_string()).expect("write serving bench json");
+    println!("wrote {spath}");
 }

@@ -28,6 +28,10 @@
 //!   max-pool, flatten and surrogate-gradient spiking layers behind one
 //!   `Layer` trait, with per-layer cost reports driving cost-balanced
 //!   stage partitioning;
+//! - a **batched inference server** ([`serving`]): multi-client
+//!   request queue, coalescing batcher, forward-cost-balanced stage
+//!   workers and atomic epoch-versioned checkpoint hot-reload —
+//!   bitwise-equal to the sequential forward oracle;
 //! - supporting substrates written from scratch for this offline
 //!   environment: deterministic RNG, JSON, a TOML-subset config system,
 //!   host tensors, a bench harness and a property-test helper.
@@ -53,6 +57,7 @@ pub mod runtime;
 pub mod data;
 pub mod train;
 pub mod pipeline;
+pub mod serving;
 pub mod coordinator;
 pub mod metrics;
 pub mod bench_util;

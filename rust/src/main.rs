@@ -8,6 +8,8 @@
 //! layerpipe2 dlms    [--delays 0,1,4,16] [--mu MU] [--taps T]
 //! layerpipe2 schedule [--layers L] [--stages K] [--batches B]
 //! layerpipe2 throughput [--stages 1,2,4,8] [--batches B] [--artifacts DIR]
+//! layerpipe2 serve   [--clients N] [--requests M] [--rows R] [--max-batch B]
+//!                    [--wait-ticks T] [--stages K] [--reloads X] [--checkpoint F]
 //! layerpipe2 info    [--artifacts DIR]
 //! ```
 
@@ -19,8 +21,11 @@ use layerpipe2::dlms;
 use layerpipe2::model::Mlp;
 use layerpipe2::pipeline;
 use layerpipe2::retiming::{Derivation, StagePartition};
+use layerpipe2::layers::{Network, NetworkSpec};
+use layerpipe2::model::checkpoint;
 use layerpipe2::runtime::Manifest;
 use layerpipe2::schedule::{sweep_stages, CostModel, Schedule};
+use layerpipe2::serving::{Server, ServerConfig};
 use layerpipe2::strategy::StrategyKind;
 use layerpipe2::tensor::Tensor;
 use layerpipe2::util::Rng;
@@ -115,6 +120,7 @@ fn run(argv: &[String]) -> Result<()> {
         "dlms" => cmd_dlms(&args),
         "schedule" => cmd_schedule(&args),
         "throughput" => cmd_throughput(&args),
+        "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -143,6 +149,10 @@ COMMANDS:
               --layers L --stages K --batches B
   throughput  threaded pipeline throughput on real XLA compute
               --stages 1,2,4,8 --batches B --artifacts DIR
+  serve       batched inference serving with checkpoint hot-reload
+              --clients N --requests M --rows R --max-batch B
+              --wait-ticks T --stages K --reloads X --checkpoint F
+              (responses verified bitwise vs the sequential oracle)
   info        print artifact manifest details  --artifacts DIR"
     );
 }
@@ -293,6 +303,115 @@ fn cmd_throughput(args: &Args) -> Result<()> {
             r.batches_per_sec / seq.batches_per_sec
         );
     }
+    Ok(())
+}
+
+/// Batched inference serving demo: N client threads push M requests each
+/// through the live server while the main thread hot-reloads weights;
+/// every response is checked bitwise against the sequential forward
+/// oracle of the exact weight version that served it.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let clients = args.usize_or("clients", 4)?;
+    let requests = args.usize_or("requests", 128)?;
+    let rows = args.usize_or("rows", 4)?;
+    let max_batch = args.usize_or("max-batch", 32)?;
+    let wait_ticks = args.usize_or("wait-ticks", 2)? as u64;
+    let stages = args.usize_or("stages", 2)?;
+    let reloads = args.usize_or("reloads", 1)?;
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    if rows < 1 || rows > max_batch {
+        bail!("--rows must be in 1..=max-batch ({max_batch})");
+    }
+
+    let backend = backend::from_env(dir)?;
+    let mcfg = Manifest::model_config_or_default(dir);
+    let spec = NetworkSpec::mlp(&mcfg);
+    // Weight versions: epoch 0 serves first; each reload swaps in the
+    // next. A checkpoint (v2 network format) replaces version 0.
+    let mut versions = Vec::with_capacity(reloads + 1);
+    for k in 0..=reloads {
+        let mut net = Network::build(&spec, &mut Rng::new(7 + k as u64))?;
+        if k == 0 {
+            if let Some(path) = args.get("checkpoint") {
+                checkpoint::load_network(&mut net, path)
+                    .with_context(|| format!("loading checkpoint {path}"))?;
+            }
+        }
+        versions.push(net);
+    }
+
+    // Distinct request payloads + the per-version sequential oracle,
+    // computed on the *same* backend the server dispatches to (host and
+    // PJRT kernels are not bit-comparable with each other).
+    let mut rng = Rng::new(42);
+    let n_inputs = 16usize;
+    let inputs: Vec<Tensor> =
+        (0..n_inputs).map(|_| Tensor::randn(&[rows, mcfg.input_dim], 1.0, &mut rng)).collect();
+    let mut expected: Vec<Vec<Tensor>> = Vec::with_capacity(versions.len());
+    for v in &versions {
+        let mut oracle = v.snapshot()?;
+        expected.push(
+            inputs
+                .iter()
+                .map(|x| oracle.forward_full(backend.as_ref(), x))
+                .collect::<Result<_>>()?,
+        );
+    }
+
+    let cfg = ServerConfig { max_batch, max_wait_ticks: wait_ticks, queue_depth: 64, stages };
+    let server = Server::start(backend.clone(), &versions[0], &cfg)?;
+    println!(
+        "serving: backend {}  {} stages  partition {:?}",
+        backend.name(),
+        stages,
+        server.partition().stage_of()
+    );
+    println!(
+        "traffic: {clients} clients x {requests} requests x {rows} rows, max_batch {max_batch}, {reloads} hot reload(s)"
+    );
+
+    let mut per_version = vec![0u64; versions.len()];
+    let sw = std::time::Instant::now();
+    std::thread::scope(|s| -> Result<()> {
+        let inputs = &inputs;
+        let expected = &expected;
+        let mut handles = Vec::with_capacity(clients);
+        for c in 0..clients {
+            let mut cl = server.client();
+            handles.push(s.spawn(move || {
+                let pick = |i: usize| (c + 3 * i) % inputs.len();
+                layerpipe2::serving::drive_and_verify(&mut cl, inputs, expected, pick, requests, 8)
+            }));
+        }
+        // Hot reloads spread over the run.
+        for v in versions.iter().skip(1) {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            server.reload(v)?;
+        }
+        for h in handles {
+            let counts = h.join().expect("client thread")?;
+            for (k, n) in counts.iter().enumerate() {
+                per_version[k] += n;
+            }
+        }
+        Ok(())
+    })?;
+    let elapsed = sw.elapsed().as_secs_f64();
+
+    let total = (clients * requests) as u64;
+    let lat = server.latency_ms();
+    let stats = server.shutdown()?;
+    println!("served {total} requests in {elapsed:.3}s = {:.0} req/s ({:.0} rows/s)", total as f64 / elapsed, (total as usize * rows) as f64 / elapsed);
+    for (v, n) in per_version.iter().enumerate() {
+        println!("  version {v}: {n} responses");
+    }
+    if let Some((p50, p99)) = lat {
+        println!("batch latency: p50 {p50:.3}ms  p99 {p99:.3}ms");
+    }
+    println!(
+        "batches {}  occupancy {:.2}  reloads {}  pool {}h/{}m  (all responses bitwise == oracle)",
+        stats.batches, stats.occupancy, stats.reloads, stats.pool_hits, stats.pool_misses
+    );
     Ok(())
 }
 

@@ -3,7 +3,9 @@
 //! Two layers of machinery live here:
 //!
 //! 1. [`forward_throughput`] / [`forward_sequential`] — the forward-only
-//!    throughput harness the seed shipped, now backend-generic.
+//!    throughput harness the seed shipped, now backend-generic. The
+//!    live multi-client generalization of this stage loop (request
+//!    queue, batching, hot-reload) is [`crate::serving`].
 //! 2. [`PipelinedTrainer`] — a **pipelined training executor**: one OS
 //!    thread per stage, each owning its layers' parameters, optimizers
 //!    and weight-version strategy, interleaving the forward of batch `t`

@@ -1,0 +1,1197 @@
+//! Batched inference serving: multi-client forward-only traffic with
+//! checkpoint hot-reload.
+//!
+//! The ROADMAP north star includes heavy inference traffic on top of the
+//! training pipeline. This module is that serving path — the
+//! generalization of [`crate::pipeline::forward_throughput`]'s stage
+//! loop to heterogeneous [`Network`]s, live clients and live weights:
+//!
+//! ```text
+//!  clients ──submit──▶ bounded MPSC ──▶ batcher ──▶ [stage 0] ─▶ … ─▶ [stage K−1] ──▶ collector ──▶ per-client
+//!     ▲                (per-client FIFO) │  ▲           packets (epoch-versioned weights)   │        responses
+//!     └──────── recycled buffers ────────┘  └───────────── free-packet return ─────────────┘
+//! ```
+//!
+//! - **Request queue.** One bounded MPSC channel (`std::sync::mpsc`
+//!   `sync_channel`; array-based, allocation-free sends): every client
+//!   holds a sender clone, so per-client submission order is the
+//!   channel's per-producer FIFO guarantee. Backpressure is structural —
+//!   a full queue blocks `submit`, a full pipeline blocks the batcher.
+//!   Response channels are *unbounded*, so a slow (or stalled) client
+//!   grows only its own response queue and can never wedge the
+//!   collector — and therefore never stalls other clients.
+//!   Shutdown closes a submit gate and pushes a close marker through
+//!   the queue: every request whose `submit` returned `Ok` before
+//!   `shutdown` began is ordered ahead of the marker and gets served.
+//! - **Batcher.** A [`Coalescer`] (pure, property-fuzzed) greedily packs
+//!   whole requests — never splitting one — into batches of at most
+//!   `max_batch` rows, flushing a partial batch after `max_wait_ticks`
+//!   idle ticks (one tick = [`BATCH_TICK`] without traffic). Batches
+//!   materialize into pooled, zero-padded `[max_batch, in_dim]` tensors
+//!   riding recycled [`Packet`]s, so steady-state batching allocates
+//!   nothing.
+//! - **Stage workers.** `stages` OS threads, layers split by
+//!   *forward-cost*-balanced [`StagePartition`] (serving has no backward
+//!   lane, so boundaries balance `fwd_flops` alone). Each stage owns its
+//!   ops' persistent workspaces and ping-pongs a packet's `data`/`spare`
+//!   buffers through its layers — the kernels underneath run on the
+//!   shared PR 2/4 `WorkerPool`.
+//! - **Hot-reload.** Weights live in an epoch-versioned
+//!   `Arc<ModelVersion>` swapped atomically under a mutex by
+//!   [`Server::reload`]. The batcher pins the *current* version into
+//!   each packet at batch-formation time, so an in-flight batch finishes
+//!   on the version it started with — a response can never observe a
+//!   torn mix of two versions, and every [`Response`] carries the epoch
+//!   that produced it.
+//!
+//! **Determinism / oracle equivalence.** Every forward op is row-wise
+//! independent (per output element the madd order is ascending-`k`, and
+//! conv/pool/LIF never mix samples — DESIGN.md §7), so row `i` of a
+//! padded `[max_batch, d]` batch is bitwise identical to the same row
+//! forwarded alone: concurrent batched serving reproduces the
+//! single-threaded `Network::forward_full` oracle *bitwise*, for any
+//! batch composition and any `LAYERPIPE2_WORKERS` value
+//! (`tests/integration_serving.rs`).
+
+use crate::backend::{Backend, Exec};
+use crate::layers::{build_op, Layer, Network, NetworkSpec};
+use crate::model::checkpoint;
+use crate::retiming::StagePartition;
+use crate::tensor::{BufferPool, Tensor};
+use crate::util::Rng;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One batcher tick: how long the batcher waits for more traffic before
+/// counting an idle tick against `max_wait_ticks`. A partial batch
+/// therefore waits at most `max_wait_ticks · BATCH_TICK` after the last
+/// arrival before flushing.
+pub const BATCH_TICK: Duration = Duration::from_micros(200);
+
+/// Batch-latency samples retained for percentile reporting (ring).
+const LAT_CAP: usize = 4096;
+
+/// Serving engine knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Row capacity of one coalesced batch (requests are never split, so
+    /// a single request may hold at most this many rows).
+    pub max_batch: usize,
+    /// Idle ticks ([`BATCH_TICK`] each) a partial batch waits before
+    /// flushing; `0` flushes on every batcher poll (lowest latency).
+    pub max_wait_ticks: u64,
+    /// Bound of the request queue and each inter-stage channel
+    /// (per-client response channels are unbounded by design — see the
+    /// module docs).
+    pub queue_depth: usize,
+    /// Forward pipeline stages (1 ≤ stages ≤ layers).
+    pub stages: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig { max_batch: 32, max_wait_ticks: 4, queue_depth: 64, stages: 2 }
+    }
+}
+
+impl ServerConfig {
+    fn validate(&self, layers: usize) -> Result<()> {
+        ensure!(self.max_batch >= 1, "max_batch must be positive");
+        ensure!(self.queue_depth >= 1, "queue_depth must be positive");
+        ensure!(
+            self.stages >= 1 && self.stages <= layers,
+            "stages {} outside 1..={layers}",
+            self.stages
+        );
+        Ok(())
+    }
+}
+
+/// One in-flight inference request: `data` is `[rows, in_dim]` with
+/// `1 ≤ rows ≤ max_batch`. Public so the batching core is
+/// property-testable from `tests/property_fuzz.rs`.
+pub struct Request {
+    pub client: u32,
+    /// Per-client submission sequence number (assigned by the handle).
+    pub seq: u64,
+    pub data: Tensor,
+}
+
+impl Request {
+    pub fn rows(&self) -> usize {
+        self.data.shape()[0]
+    }
+}
+
+/// What flows through the request channel: traffic, or the shutdown
+/// marker. The marker rides the same FIFO queue, so everything enqueued
+/// before it is guaranteed to reach the batcher first.
+enum Inbound {
+    Req(Request),
+    Close,
+}
+
+/// One served result: `data` is `[rows, out_dim]` for the request's
+/// rows, `version` the weight epoch that computed it.
+pub struct Response {
+    pub client: u32,
+    pub seq: u64,
+    pub version: u64,
+    pub data: Tensor,
+}
+
+// ---------------------------------------------------------------------------
+// Coalescer: the pure batching core.
+// ---------------------------------------------------------------------------
+
+/// Greedy request coalescing, decoupled from threads and clocks so its
+/// invariants are fuzzable: requests leave in exactly the order they
+/// arrived (global FIFO ⇒ per-client FIFO), none is ever dropped,
+/// duplicated or split, and no batch exceeds `max_batch` rows.
+pub struct Coalescer {
+    max_batch: usize,
+    max_wait_ticks: u64,
+    queue: VecDeque<Request>,
+    waited: u64,
+}
+
+impl Coalescer {
+    pub fn new(max_batch: usize, max_wait_ticks: u64) -> Coalescer {
+        Coalescer { max_batch, max_wait_ticks, queue: VecDeque::new(), waited: 0 }
+    }
+
+    /// Enqueue a request (`rows` must already be validated ≤ max_batch).
+    pub fn push(&mut self, req: Request) {
+        debug_assert!(req.rows() >= 1 && req.rows() <= self.max_batch);
+        self.queue.push_back(req);
+    }
+
+    /// Register one idle tick (no traffic for [`BATCH_TICK`]).
+    pub fn tick(&mut self) {
+        if !self.queue.is_empty() {
+            self.waited += 1;
+        }
+    }
+
+    /// Rows currently pending (not yet emitted in a batch).
+    pub fn pending_rows(&self) -> usize {
+        self.queue.iter().map(Request::rows).sum()
+    }
+
+    /// Take the next batch if one is due: the greedy front prefix is
+    /// emitted when it is *full* (exactly `max_batch` rows, or the next
+    /// request would not fit), when the wait budget is spent, or when
+    /// `force` is set (shutdown drain). Returns at least one request or
+    /// `None`.
+    pub fn take_ready(&mut self, force: bool) -> Option<Vec<Request>> {
+        let mut out = Vec::new();
+        if self.take_ready_into(force, &mut out) {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// [`Coalescer::take_ready`] into a caller-owned (empty) Vec — the
+    /// batcher reuses one scratch Vec so steady-state batching performs
+    /// no heap allocation. Returns whether a batch was emitted.
+    pub fn take_ready_into(&mut self, force: bool, out: &mut Vec<Request>) -> bool {
+        debug_assert!(out.is_empty(), "scratch must be drained before reuse");
+        if self.queue.is_empty() {
+            self.waited = 0;
+            return false;
+        }
+        let mut rows = 0usize;
+        let mut n = 0usize;
+        for r in &self.queue {
+            if rows + r.rows() > self.max_batch {
+                break;
+            }
+            rows += r.rows();
+            n += 1;
+        }
+        debug_assert!(n >= 1, "a single request always fits");
+        let full = rows == self.max_batch || n < self.queue.len();
+        if full || force || self.waited >= self.max_wait_ticks {
+            self.waited = 0;
+            out.extend(self.queue.drain(..n));
+            true
+        } else {
+            false
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Versioned weights + circulating packets.
+// ---------------------------------------------------------------------------
+
+/// One immutable weight snapshot. Stages read only through the `Arc`
+/// pinned into their packet, so a version is observable either fully or
+/// not at all.
+struct ModelVersion {
+    epoch: u64,
+    /// `(w, b)` per global layer, in stack order.
+    params: Vec<(Tensor, Tensor)>,
+}
+
+/// Routing slice of one request inside a batch (rows are contiguous).
+struct Route {
+    client: u32,
+    seq: u64,
+    rows: usize,
+}
+
+/// A batch moving down the stage pipeline. Packets circulate: the
+/// collector returns spent ones to the batcher, whose `data`/`spare`
+/// backing stores and `routes` Vec are reused in place — the
+/// steady-state pipeline allocates nothing.
+struct Packet {
+    version: Arc<ModelVersion>,
+    occupied: usize,
+    routes: Vec<Route>,
+    /// Current activation, `[max_batch, dim]` (padding rows zeroed at
+    /// batch formation; their outputs are computed and discarded).
+    data: Tensor,
+    /// Ping-pong output buffer (capacity grows to the widest layer once,
+    /// then every resize is in place).
+    spare: Tensor,
+    /// Batch-formation time (latency accounting).
+    born: Instant,
+}
+
+impl Packet {
+    fn fresh(version: Arc<ModelVersion>) -> Packet {
+        Packet {
+            version,
+            occupied: 0,
+            routes: Vec::new(),
+            data: Tensor::empty(),
+            spare: Tensor::empty(),
+            born: Instant::now(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared counters.
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Stats {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    dropped: AtomicU64,
+    batches: AtomicU64,
+    rows: AtomicU64,
+    reloads: AtomicU64,
+    packets_created: AtomicU64,
+}
+
+/// A point-in-time snapshot of the serving counters.
+#[derive(Clone, Copy, Debug)]
+pub struct ServingStats {
+    /// Requests accepted by `submit`.
+    pub submitted: u64,
+    /// Responses delivered to a live client handle.
+    pub completed: u64,
+    /// Responses whose client handle was gone (buffer recycled).
+    pub dropped: u64,
+    /// Batches formed.
+    pub batches: u64,
+    /// Occupied (non-padding) rows served.
+    pub rows: u64,
+    /// Weight swaps performed.
+    pub reloads: u64,
+    /// Packets ever allocated (freezes once the ring is warm).
+    pub packets_created: u64,
+    /// Edge-pool takes served from recycled storage / fresh allocations.
+    pub pool_hits: u64,
+    pub pool_misses: u64,
+    /// Current weight epoch.
+    pub epoch: u64,
+    /// Mean occupied fraction of formed batches (0 when none formed).
+    pub occupancy: f64,
+}
+
+/// Fixed-capacity latency ring (seconds per batch, formation→collect).
+struct LatRing {
+    samples: Vec<f64>,
+    next: usize,
+}
+
+impl LatRing {
+    fn new() -> LatRing {
+        LatRing { samples: Vec::with_capacity(LAT_CAP), next: 0 }
+    }
+
+    fn push(&mut self, v: f64) {
+        if self.samples.len() < LAT_CAP {
+            self.samples.push(v);
+        } else {
+            self.samples[self.next] = v;
+            self.next = (self.next + 1) % LAT_CAP;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The server.
+// ---------------------------------------------------------------------------
+
+/// A running batched-inference server. Construct with [`Server::start`],
+/// mint client handles with [`Server::client`], swap weights live with
+/// [`Server::reload`], and stop with [`Server::shutdown`] (which drains
+/// outstanding requests before joining the workers).
+pub struct Server {
+    req_tx: SyncSender<Inbound>,
+    resp_txs: Arc<Mutex<Vec<Option<Sender<Response>>>>>,
+    version: Arc<Mutex<Arc<ModelVersion>>>,
+    pool: Arc<Mutex<BufferPool>>,
+    stats: Arc<Stats>,
+    lat: Arc<Mutex<LatRing>>,
+    fail: Arc<Mutex<Option<String>>>,
+    /// Submit gate: held shared for the duration of every `submit`'s
+    /// enqueue, taken exclusively (and set) by `shutdown` — so a submit
+    /// that returned `Ok` is strictly ordered before the close marker.
+    gate: Arc<RwLock<bool>>,
+    closing: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+    // Immutable architecture metadata (reload validation, rebuilds).
+    spec: NetworkSpec,
+    in_dim: usize,
+    out_dim: usize,
+    max_batch: usize,
+    partition: StagePartition,
+}
+
+impl Server {
+    /// Spin up the batcher, stage workers and collector around a weight
+    /// snapshot of `net` (epoch 0). The network itself is not consumed —
+    /// ops are rebuilt per stage with fresh workspaces, weights cloned
+    /// into the version table.
+    pub fn start(backend: Backend, net: &Network, cfg: &ServerConfig) -> Result<Server> {
+        cfg.validate(net.num_layers())?;
+        // Serving is host-kernel-only today: padded `[max_batch, in_dim]`
+        // batches and the row-wise bitwise-determinism argument are
+        // host-kernel properties, while PJRT artifacts are lowered for
+        // fixed training shapes (PJRT serving stages: ROADMAP item).
+        ensure!(
+            backend.name() != "pjrt",
+            "the serving path runs on host kernels — use the host backend \
+             (LAYERPIPE2_BACKEND=host); PJRT-backed serving stages need per-op \
+             artifacts (see ROADMAP)"
+        );
+        // Forward-only traffic: balance stage boundaries on fwd FLOPs.
+        let fwd: Vec<u64> = net.costs(cfg.max_batch).iter().map(|c| c.fwd_flops).collect();
+        let partition = StagePartition::balanced(&fwd, cfg.stages)?;
+
+        // Per-stage ops, rebuilt from the specs (same geometry as the
+        // network, private workspaces per stage thread).
+        let mut stage_ops: Vec<Vec<(usize, Box<dyn Layer>)>> =
+            (0..cfg.stages).map(|_| Vec::new()).collect();
+        let mut cur = net.input.clone();
+        for (l, nl) in net.layers.iter().enumerate() {
+            let (op, next) = build_op(&nl.spec, &cur, l)?;
+            stage_ops[partition.stage_of()[l]].push((l, op));
+            cur = next;
+        }
+
+        let version0 = Arc::new(ModelVersion {
+            epoch: 0,
+            params: net.layers.iter().map(|nl| (nl.w.clone(), nl.b.clone())).collect(),
+        });
+        let version = Arc::new(Mutex::new(version0));
+        let pool = Arc::new(Mutex::new(BufferPool::new()));
+        let stats = Arc::new(Stats::default());
+        let lat = Arc::new(Mutex::new(LatRing::new()));
+        let fail: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let gate = Arc::new(RwLock::new(false));
+        let closing = Arc::new(AtomicBool::new(false));
+        let resp_txs: Arc<Mutex<Vec<Option<Sender<Response>>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        // Boundary channels: batcher → stage 0 → … → stage K−1 → collector.
+        let mut txs = Vec::with_capacity(cfg.stages + 1);
+        let mut rxs = VecDeque::with_capacity(cfg.stages + 1);
+        for _ in 0..=cfg.stages {
+            let (tx, rx) = sync_channel::<Packet>(cfg.queue_depth);
+            txs.push(tx);
+            rxs.push_back(rx);
+        }
+        // Free-packet return: sized so the full circulating set fits and
+        // `try_send` never has to drop a warm packet.
+        let free_cap = cfg.queue_depth * (cfg.stages + 2) + 4;
+        let (free_tx, free_rx) = sync_channel::<Packet>(free_cap);
+        let (req_tx, req_rx) = sync_channel::<Inbound>(cfg.queue_depth);
+
+        let mut threads = Vec::with_capacity(cfg.stages + 2);
+        let ctx = BatcherCtx {
+            tx0: txs.remove(0),
+            free_rx,
+            version: Arc::clone(&version),
+            pool: Arc::clone(&pool),
+            stats: Arc::clone(&stats),
+            max_batch: cfg.max_batch,
+            in_dim: net.input_dim(),
+        };
+        let max_wait = cfg.max_wait_ticks;
+        let closing_b = Arc::clone(&closing);
+        threads.push(
+            std::thread::Builder::new()
+                .name("serve-batcher".into())
+                .spawn(move || batcher_loop(req_rx, ctx, max_wait, closing_b))
+                .expect("spawn batcher"),
+        );
+        for (s, ops) in stage_ops.into_iter().enumerate() {
+            let rx = rxs.pop_front().expect("stage rx");
+            let tx = txs.remove(0);
+            let exec = Arc::clone(&backend);
+            let fail_s = Arc::clone(&fail);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-stage-{s}"))
+                    .spawn(move || stage_loop(exec, ops, rx, tx, fail_s))
+                    .expect("spawn stage"),
+            );
+        }
+        let ctx = CollectorCtx {
+            free_tx,
+            resp_txs: Arc::clone(&resp_txs),
+            pool: Arc::clone(&pool),
+            stats: Arc::clone(&stats),
+            lat: Arc::clone(&lat),
+            out_dim: net.out_dim(),
+        };
+        let last_rx = rxs.pop_front().expect("collector rx");
+        threads.push(
+            std::thread::Builder::new()
+                .name("serve-collector".into())
+                .spawn(move || collector_loop(last_rx, ctx))
+                .expect("spawn collector"),
+        );
+
+        Ok(Server {
+            req_tx,
+            resp_txs,
+            version,
+            pool,
+            stats,
+            lat,
+            fail,
+            gate,
+            closing,
+            threads,
+            spec: NetworkSpec {
+                input: net.input.clone(),
+                layers: net.layers.iter().map(|nl| nl.spec.clone()).collect(),
+                init_scale: net.init_scale,
+            },
+            in_dim: net.input_dim(),
+            out_dim: net.out_dim(),
+            max_batch: cfg.max_batch,
+            partition,
+        })
+    }
+
+    /// Mint a client handle: its own (unbounded) response channel plus a
+    /// clone of the request sender (per-client FIFO rides the channel's
+    /// per-producer ordering). Client ids are never reused; a dropped
+    /// client's table slot is tombstoned — its channel freed — the first
+    /// time a response fails to deliver, leaving one machine word per
+    /// client ever minted.
+    pub fn client(&self) -> ServingClient {
+        let (tx, rx) = channel::<Response>();
+        let mut v = self.resp_txs.lock().expect("client table lock");
+        let id = v.len() as u32;
+        v.push(Some(tx));
+        ServingClient {
+            id,
+            seq: 0,
+            req_tx: self.req_tx.clone(),
+            resp_rx: rx,
+            pool: Arc::clone(&self.pool),
+            stats: Arc::clone(&self.stats),
+            gate: Arc::clone(&self.gate),
+            in_dim: self.in_dim,
+            max_batch: self.max_batch,
+        }
+    }
+
+    /// Atomically swap in `net`'s weights as a new epoch. The
+    /// architecture must match layer-for-layer; in-flight batches finish
+    /// on the version pinned at their formation. Returns the new epoch.
+    pub fn reload(&self, net: &Network) -> Result<u64> {
+        ensure!(
+            net.input == self.spec.input,
+            "reload architecture mismatch: input {:?} vs served {:?}",
+            net.input,
+            self.spec.input
+        );
+        ensure!(
+            net.layers.len() == self.spec.layers.len(),
+            "reload has {} layers, server serves {}",
+            net.layers.len(),
+            self.spec.layers.len()
+        );
+        for (l, (nl, spec)) in net.layers.iter().zip(&self.spec.layers).enumerate() {
+            ensure!(
+                nl.spec == *spec,
+                "reload layer {l}: spec {:?} vs served {:?}",
+                nl.spec,
+                spec
+            );
+        }
+        let params = net.layers.iter().map(|nl| (nl.w.clone(), nl.b.clone())).collect();
+        let mut cur = self.version.lock().expect("version lock");
+        let epoch = cur.epoch + 1;
+        *cur = Arc::new(ModelVersion { epoch, params });
+        self.stats.reloads.fetch_add(1, Ordering::Relaxed);
+        Ok(epoch)
+    }
+
+    /// [`Server::reload`] from a v2 network checkpoint on disk (the
+    /// restore-from-disk serving path): the file must hold an
+    /// architecture-matching checkpoint.
+    pub fn reload_from_file(&self, path: &str) -> Result<u64> {
+        // Scratch params are fully overwritten by the restore; the rng
+        // seed is irrelevant.
+        let mut scratch = Network::build(&self.spec, &mut Rng::new(0))?;
+        checkpoint::load_network(&mut scratch, path)?;
+        self.reload(&scratch)
+    }
+
+    /// Current weight epoch.
+    pub fn epoch(&self) -> u64 {
+        self.version.lock().expect("version lock").epoch
+    }
+
+    /// The forward-cost-balanced stage boundaries this server runs.
+    pub fn partition(&self) -> &StagePartition {
+        &self.partition
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Counter snapshot (cheap; atomics + one pool lock).
+    pub fn stats(&self) -> ServingStats {
+        let (pool_hits, pool_misses) = {
+            let p = self.pool.lock().expect("edge pool lock");
+            (p.hits(), p.misses())
+        };
+        let batches = self.stats.batches.load(Ordering::Relaxed);
+        let rows = self.stats.rows.load(Ordering::Relaxed);
+        ServingStats {
+            submitted: self.stats.submitted.load(Ordering::Relaxed),
+            completed: self.stats.completed.load(Ordering::Relaxed),
+            dropped: self.stats.dropped.load(Ordering::Relaxed),
+            batches,
+            rows,
+            reloads: self.stats.reloads.load(Ordering::Relaxed),
+            packets_created: self.stats.packets_created.load(Ordering::Relaxed),
+            pool_hits,
+            pool_misses,
+            epoch: self.epoch(),
+            occupancy: if batches == 0 {
+                0.0
+            } else {
+                rows as f64 / (batches * self.max_batch as u64) as f64
+            },
+        }
+    }
+
+    /// `(p50, p99)` batch latency in milliseconds over the retained
+    /// window (formation → collection), or `None` before any batch.
+    pub fn latency_ms(&self) -> Option<(f64, f64)> {
+        let mut s = self.lat.lock().expect("latency lock").samples.clone();
+        if s.is_empty() {
+            return None;
+        }
+        s.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        let pick = |q: f64| s[((s.len() - 1) as f64 * q).round() as usize] * 1e3;
+        Some((pick(0.50), pick(0.99)))
+    }
+
+    /// Drain outstanding requests, stop every worker and return the
+    /// final counters (or the first worker error). Every request whose
+    /// `submit` returned `Ok` before this call began is guaranteed to
+    /// have been served (its response sits in the client's channel).
+    pub fn shutdown(mut self) -> Result<ServingStats> {
+        // Close the submit gate: after this write completes, every
+        // in-flight submit has fully enqueued (and is therefore ordered
+        // ahead of the close marker below) and every later submit errors.
+        *self.gate.write().expect("gate lock") = true;
+        self.closing.store(true, Ordering::Release);
+        // Deliver the close marker. A full queue means the batcher is
+        // still draining — keep trying; a finished batcher means a
+        // worker error already tore the pipeline down — stop.
+        let mut msg = Inbound::Close;
+        loop {
+            match self.req_tx.try_send(msg) {
+                Ok(()) => break,
+                Err(TrySendError::Full(m)) => {
+                    if self.threads[0].is_finished() {
+                        break;
+                    }
+                    msg = m;
+                    std::thread::sleep(BATCH_TICK);
+                }
+                Err(TrySendError::Disconnected(_)) => break,
+            }
+        }
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(msg) = self.fail.lock().expect("fail lock").take() {
+            bail!("{msg}");
+        }
+        Ok(self.stats())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Un-shutdown drops still stop the workers: the batcher observes
+        // `closing` on its next loop iteration (even under sustained
+        // traffic) and drains best-effort. Closing the gate — best-effort
+        // only, drop must never block — makes later submits error instead
+        // of feeding a dying server. Use `shutdown` for the full
+        // served-before-join guarantee.
+        self.closing.store(true, Ordering::Release);
+        if let Ok(mut g) = self.gate.try_write() {
+            *g = true;
+        }
+    }
+}
+
+/// A client's connection: submit requests, poll/await responses, and
+/// borrow/return buffers from the server's edge pool so a
+/// submit→respond loop is allocation-free in steady state.
+pub struct ServingClient {
+    id: u32,
+    seq: u64,
+    req_tx: SyncSender<Inbound>,
+    resp_rx: Receiver<Response>,
+    pool: Arc<Mutex<BufferPool>>,
+    stats: Arc<Stats>,
+    gate: Arc<RwLock<bool>>,
+    in_dim: usize,
+    max_batch: usize,
+}
+
+impl ServingClient {
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+
+    /// Pooled buffer (contents unspecified — fully overwrite it).
+    pub fn take(&self, shape: &[usize]) -> Tensor {
+        self.pool.lock().expect("edge pool lock").take(shape)
+    }
+
+    /// Return a consumed buffer (request input or response output) to
+    /// the edge pool.
+    pub fn recycle(&self, t: Tensor) {
+        self.pool.lock().expect("edge pool lock").recycle(t);
+    }
+
+    /// Enqueue `[rows, in_dim]` input rows (`1 ≤ rows ≤ max_batch`);
+    /// blocks when the request queue is full. Returns this request's
+    /// per-client sequence number; responses arrive in sequence order.
+    pub fn submit(&mut self, data: Tensor) -> Result<u64> {
+        ensure!(
+            data.ndim() == 2 && data.shape()[1] == self.in_dim,
+            "request shape {:?} (expected [rows, {}])",
+            data.shape(),
+            self.in_dim
+        );
+        let rows = data.shape()[0];
+        ensure!(
+            rows >= 1 && rows <= self.max_batch,
+            "request rows {rows} outside 1..={}",
+            self.max_batch
+        );
+        let seq = self.seq;
+        // Hold the gate shared across the enqueue: shutdown's exclusive
+        // acquire then strictly orders this request ahead of the close
+        // marker, so an `Ok` here guarantees a response.
+        let gate = self.gate.read().expect("gate lock");
+        ensure!(!*gate, "server is shut down");
+        self.req_tx
+            .send(Inbound::Req(Request { client: self.id, seq, data }))
+            .map_err(|_| anyhow!("server is shut down"))?;
+        drop(gate);
+        self.seq += 1;
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(seq)
+    }
+
+    /// Next response if one is ready (non-blocking).
+    pub fn poll(&mut self) -> Option<Response> {
+        self.resp_rx.try_recv().ok()
+    }
+
+    /// Next response, blocking until served.
+    pub fn recv(&mut self) -> Result<Response> {
+        self.resp_rx
+            .recv()
+            .map_err(|_| anyhow!("server closed before responding"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Verification harness.
+// ---------------------------------------------------------------------------
+
+/// Drive one client end to end and verify every response — the shared
+/// harness behind the `serve` subcommand, `examples/serve_pipeline.rs`,
+/// `tests/integration_serving.rs` and the serving bench section (one
+/// implementation, so the Response contract is checked the same way
+/// everywhere).
+///
+/// Submits `count` requests (request `i` carries a pooled copy of
+/// `inputs[pick(i)]`), keeps at most `window` responses outstanding
+/// (`0` = strict submit→receive lockstep), and checks each response in
+/// order: per-client FIFO (`seq == i`), a known weight epoch, epochs
+/// non-decreasing, and the payload **bitwise equal** to
+/// `expected[epoch][pick(i)]` — the sequential oracle of exactly the
+/// version that served it (a torn read across a hot-reload would match
+/// none). Returns the per-epoch response counts; consumed response
+/// buffers are recycled into the edge pool.
+pub fn drive_and_verify(
+    cl: &mut ServingClient,
+    inputs: &[Tensor],
+    expected: &[Vec<Tensor>],
+    pick: impl Fn(usize) -> usize,
+    count: usize,
+    window: usize,
+) -> Result<Vec<u64>> {
+    let mut per_version = vec![0u64; expected.len()];
+    let mut last_version = 0u64;
+    let mut next_recv = 0usize;
+    for i in 0..count {
+        let j = pick(i);
+        let mut x = cl.take(inputs[j].shape());
+        x.copy_from(&inputs[j]);
+        cl.submit(x)?;
+        while i + 1 - next_recv > window {
+            verify_next(cl, expected, next_recv, pick(next_recv), &mut per_version, &mut last_version)?;
+            next_recv += 1;
+        }
+    }
+    while next_recv < count {
+        verify_next(cl, expected, next_recv, pick(next_recv), &mut per_version, &mut last_version)?;
+        next_recv += 1;
+    }
+    Ok(per_version)
+}
+
+/// One in-order receive + full response validation for
+/// [`drive_and_verify`].
+fn verify_next(
+    cl: &mut ServingClient,
+    expected: &[Vec<Tensor>],
+    i: usize,
+    j: usize,
+    per_version: &mut [u64],
+    last_version: &mut u64,
+) -> Result<()> {
+    let r = cl.recv()?;
+    ensure!(
+        r.seq == i as u64,
+        "client {}: response out of order (expected seq {i}, got {})",
+        cl.id(),
+        r.seq
+    );
+    let v = r.version as usize;
+    ensure!(v < expected.len(), "client {}: unknown weight epoch {v}", cl.id());
+    ensure!(
+        r.version >= *last_version,
+        "client {}: weight epoch went backwards ({} -> {})",
+        cl.id(),
+        last_version,
+        r.version
+    );
+    *last_version = r.version;
+    ensure!(
+        r.data == expected[v][j],
+        "client {} request {i}: response is not bitwise equal to the epoch-{v} \
+         sequential oracle (torn or wrong weights)",
+        cl.id()
+    );
+    per_version[v] += 1;
+    cl.recycle(r.data);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Worker loops.
+// ---------------------------------------------------------------------------
+
+struct BatcherCtx {
+    tx0: SyncSender<Packet>,
+    free_rx: Receiver<Packet>,
+    version: Arc<Mutex<Arc<ModelVersion>>>,
+    pool: Arc<Mutex<BufferPool>>,
+    stats: Arc<Stats>,
+    max_batch: usize,
+    in_dim: usize,
+}
+
+impl BatcherCtx {
+    /// Materialize one coalesced batch into a (recycled) packet and send
+    /// it downstream, draining `reqs` (the batcher's reused scratch).
+    /// `false` when the pipeline is gone.
+    fn emit(&self, reqs: &mut Vec<Request>) -> bool {
+        let version = self.version.lock().expect("version lock").clone();
+        let mut p = match self.free_rx.try_recv() {
+            Ok(mut p) => {
+                p.version = version;
+                p
+            }
+            Err(_) => {
+                self.stats.packets_created.fetch_add(1, Ordering::Relaxed);
+                Packet::fresh(version)
+            }
+        };
+        p.routes.clear();
+        p.data.resize(&[self.max_batch, self.in_dim]);
+        let mut offset = 0usize;
+        {
+            let mut pool = self.pool.lock().expect("edge pool lock");
+            for req in reqs.drain(..) {
+                let rows = req.rows();
+                let n = rows * self.in_dim;
+                p.data.data_mut()[offset * self.in_dim..offset * self.in_dim + n]
+                    .copy_from_slice(&req.data.data()[..n]);
+                p.routes.push(Route { client: req.client, seq: req.seq, rows });
+                offset += rows;
+                pool.recycle(req.data);
+            }
+        }
+        // Deterministic padding: the occupied rows were just fully
+        // overwritten, so only the tail needs zeroing — a batch's bits
+        // depend only on its requests (and row independence makes even
+        // that irrelevant to occupied rows).
+        p.data.data_mut()[offset * self.in_dim..].fill(0.0);
+        p.occupied = offset;
+        p.born = Instant::now();
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        self.stats.rows.fetch_add(offset as u64, Ordering::Relaxed);
+        self.tx0.send(p).is_ok()
+    }
+}
+
+fn batcher_loop(
+    rx: Receiver<Inbound>,
+    ctx: BatcherCtx,
+    max_wait_ticks: u64,
+    closing: Arc<AtomicBool>,
+) {
+    let mut co = Coalescer::new(ctx.max_batch, max_wait_ticks);
+    let mut scratch: Vec<Request> = Vec::new();
+    'serve: loop {
+        // Fallback exit for drop-without-shutdown (no marker was sent):
+        // checked every iteration, so even sustained traffic — where
+        // recv never times out — cannot keep a dropped server alive.
+        if closing.load(Ordering::Acquire) {
+            break 'serve;
+        }
+        match rx.recv_timeout(BATCH_TICK) {
+            Ok(Inbound::Req(req)) => co.push(req),
+            Ok(Inbound::Close) | Err(RecvTimeoutError::Disconnected) => break 'serve,
+            Err(RecvTimeoutError::Timeout) => co.tick(),
+        }
+        // Drain whatever else already arrived before forming batches.
+        loop {
+            match rx.try_recv() {
+                Ok(Inbound::Req(req)) => co.push(req),
+                Ok(Inbound::Close) => break 'serve,
+                Err(_) => break,
+            }
+        }
+        while co.take_ready_into(false, &mut scratch) {
+            if !ctx.emit(&mut scratch) {
+                return;
+            }
+        }
+    }
+    // Final drain. In the shutdown path everything enqueued before the
+    // close marker has already been popped into the coalescer (single
+    // consumer over one FIFO queue); the extra try_recv sweep covers
+    // the best-effort drop-without-shutdown path.
+    loop {
+        match rx.try_recv() {
+            Ok(Inbound::Req(req)) => co.push(req),
+            _ => break,
+        }
+    }
+    while co.take_ready_into(true, &mut scratch) {
+        if !ctx.emit(&mut scratch) {
+            return;
+        }
+    }
+}
+
+fn stage_loop(
+    exec: Backend,
+    mut ops: Vec<(usize, Box<dyn Layer>)>,
+    rx: Receiver<Packet>,
+    tx: SyncSender<Packet>,
+    fail: Arc<Mutex<Option<String>>>,
+) {
+    while let Ok(mut p) = rx.recv() {
+        for (l, op) in ops.iter_mut() {
+            let (w, b) = &p.version.params[*l];
+            if let Err(e) = op.forward_into(exec.as_ref(), &p.data, w, b, &mut p.spare) {
+                let mut slot = fail.lock().expect("fail lock");
+                if slot.is_none() {
+                    *slot = Some(format!("serving forward, layer {l}: {e:#}"));
+                }
+                // Dropping our endpoints disconnects both neighbors —
+                // the shutdown cascades instead of deadlocking.
+                return;
+            }
+            std::mem::swap(&mut p.data, &mut p.spare);
+        }
+        if tx.send(p).is_err() {
+            return;
+        }
+    }
+}
+
+struct CollectorCtx {
+    free_tx: SyncSender<Packet>,
+    resp_txs: Arc<Mutex<Vec<Option<Sender<Response>>>>>,
+    pool: Arc<Mutex<BufferPool>>,
+    stats: Arc<Stats>,
+    lat: Arc<Mutex<LatRing>>,
+    out_dim: usize,
+}
+
+fn collector_loop(rx: Receiver<Packet>, ctx: CollectorCtx) {
+    while let Ok(mut p) = rx.recv() {
+        let elapsed = p.born.elapsed().as_secs_f64();
+        let mut offset = 0usize;
+        // One pool guard and one client-table guard per *packet*, not
+        // per route: the unbounded sends never block, so holding both
+        // across the batch is cheap and halves the hot-path lock
+        // traffic contending with client take()/recycle(). Lock order
+        // (pool, then table) is unique to this function — no other
+        // thread ever holds both.
+        {
+            let mut pool = ctx.pool.lock().expect("edge pool lock");
+            let mut txs = ctx.resp_txs.lock().expect("client table lock");
+            for route in p.routes.drain(..) {
+                let mut out = pool.take(&[route.rows, ctx.out_dim]);
+                let n = route.rows * ctx.out_dim;
+                out.data_mut()[..n]
+                    .copy_from_slice(&p.data.data()[offset * ctx.out_dim..offset * ctx.out_dim + n]);
+                offset += route.rows;
+                let resp = Response {
+                    client: route.client,
+                    seq: route.seq,
+                    version: p.version.epoch,
+                    data: out,
+                };
+                let idx = route.client as usize;
+                match txs.get(idx).and_then(|slot| slot.clone()) {
+                    Some(tx) => match tx.send(resp) {
+                        Ok(()) => {
+                            ctx.stats.completed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(std::sync::mpsc::SendError(resp)) => {
+                            // Client handle dropped: reclaim the buffer
+                            // and tombstone the slot, freeing its channel.
+                            pool.recycle(resp.data);
+                            txs[idx] = None;
+                            ctx.stats.dropped.fetch_add(1, Ordering::Relaxed);
+                        }
+                    },
+                    None => {
+                        pool.recycle(resp.data);
+                        ctx.stats.dropped.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(offset, p.occupied);
+        ctx.lat.lock().expect("latency lock").push(elapsed);
+        // Return the packet to the batcher; capacity is sized so this
+        // never drops a warm packet in practice.
+        let _ = ctx.free_tx.try_send(p);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::HostBackend;
+    use crate::config::ModelConfig;
+
+    fn mcfg() -> ModelConfig {
+        ModelConfig { batch: 8, input_dim: 12, hidden_dim: 10, classes: 4, layers: 3, init_scale: 1.0 }
+    }
+
+    fn tiny_net(seed: u64) -> Network {
+        Network::build(&NetworkSpec::mlp(&mcfg()), &mut Rng::new(seed)).unwrap()
+    }
+
+    fn host() -> Backend {
+        Arc::new(HostBackend::new())
+    }
+
+    fn req(rows: usize, seq: u64) -> Request {
+        Request { client: 0, seq, data: Tensor::zeros(&[rows, 1]) }
+    }
+
+    #[test]
+    fn coalescer_emits_full_batches_immediately() {
+        let mut co = Coalescer::new(4, 10);
+        co.push(req(2, 0));
+        assert!(co.take_ready(false).is_none(), "partial batch must wait");
+        co.push(req(2, 1));
+        let b = co.take_ready(false).expect("exactly full");
+        assert_eq!(b.len(), 2);
+        assert_eq!(co.pending_rows(), 0);
+        // A request that does not fit closes the current batch.
+        co.push(req(3, 2));
+        co.push(req(2, 3));
+        let b = co.take_ready(false).expect("overflow closes the batch");
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].seq, 2);
+        assert_eq!(co.pending_rows(), 2);
+    }
+
+    #[test]
+    fn coalescer_flushes_after_wait_budget_and_on_force() {
+        let mut co = Coalescer::new(8, 2);
+        co.push(req(1, 0));
+        co.tick();
+        assert!(co.take_ready(false).is_none());
+        co.tick();
+        let b = co.take_ready(false).expect("wait budget spent");
+        assert_eq!(b.len(), 1);
+        // Ticks on an empty queue never count.
+        co.tick();
+        co.tick();
+        co.push(req(1, 1));
+        assert!(co.take_ready(false).is_none());
+        let b = co.take_ready(true).expect("force flush");
+        assert_eq!(b[0].seq, 1);
+        assert!(co.take_ready(true).is_none());
+    }
+
+    #[test]
+    fn roundtrip_matches_forward_full_bitwise_in_fifo_order() {
+        let net = tiny_net(5);
+        let mut oracle = net.snapshot().unwrap();
+        let be = HostBackend::new();
+        let cfg = ServerConfig { max_batch: 6, max_wait_ticks: 1, queue_depth: 16, stages: 2 };
+        let server = Server::start(host(), &net, &cfg).unwrap();
+        assert_eq!(server.partition().stages(), 2);
+        let mut cl = server.client();
+        let mut rng = Rng::new(9);
+        let inputs: Vec<Tensor> =
+            (0..7).map(|i| Tensor::randn(&[1 + i % 3, 12], 1.0, &mut rng)).collect();
+        for x in &inputs {
+            cl.submit(x.clone()).unwrap();
+        }
+        for (i, x) in inputs.iter().enumerate() {
+            let r = cl.recv().unwrap();
+            assert_eq!(r.seq, i as u64, "per-client FIFO order violated");
+            assert_eq!(r.version, 0);
+            assert_eq!(r.client, cl.id());
+            let want = oracle.forward_full(&be, x).unwrap();
+            assert_eq!(r.data, want, "request {i}: batched ≠ sequential oracle");
+            cl.recycle(r.data);
+        }
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.submitted, 7);
+        assert_eq!(stats.completed, 7);
+        assert_eq!(stats.dropped, 0);
+        assert_eq!(stats.rows, inputs.iter().map(|x| x.shape()[0] as u64).sum::<u64>());
+    }
+
+    #[test]
+    fn reload_swaps_epoch_and_weights() {
+        let net0 = tiny_net(5);
+        let net1 = tiny_net(6);
+        let mut oracle1 = net1.snapshot().unwrap();
+        let be = HostBackend::new();
+        let cfg = ServerConfig { max_batch: 4, max_wait_ticks: 0, queue_depth: 8, stages: 1 };
+        let server = Server::start(host(), &net0, &cfg).unwrap();
+        assert_eq!(server.epoch(), 0);
+        assert_eq!(server.reload(&net1).unwrap(), 1);
+        assert_eq!(server.epoch(), 1);
+        let mut cl = server.client();
+        let x = Tensor::randn(&[2, 12], 1.0, &mut Rng::new(3));
+        cl.submit(x.clone()).unwrap();
+        let r = cl.recv().unwrap();
+        assert_eq!(r.version, 1, "post-reload batch must carry the new epoch");
+        assert_eq!(r.data, oracle1.forward_full(&be, &x).unwrap());
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.reloads, 1);
+        assert_eq!(stats.epoch, 1);
+    }
+
+    #[test]
+    fn reload_rejects_architecture_mismatch() {
+        let net = tiny_net(5);
+        let cfg = ServerConfig { max_batch: 2, max_wait_ticks: 0, queue_depth: 4, stages: 1 };
+        let server = Server::start(host(), &net, &cfg).unwrap();
+        let other_cfg =
+            ModelConfig { batch: 8, input_dim: 12, hidden_dim: 11, classes: 4, layers: 3, init_scale: 1.0 };
+        let other = Network::build(&NetworkSpec::mlp(&other_cfg), &mut Rng::new(1)).unwrap();
+        let err = server.reload(&other).unwrap_err();
+        assert!(format!("{err:#}").contains("spec"));
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn submit_validates_shapes_and_errors_after_shutdown() {
+        let net = tiny_net(5);
+        let cfg = ServerConfig { max_batch: 4, max_wait_ticks: 0, queue_depth: 4, stages: 1 };
+        let server = Server::start(host(), &net, &cfg).unwrap();
+        let mut cl = server.client();
+        assert!(cl.submit(Tensor::zeros(&[2, 11])).is_err(), "wrong width");
+        assert!(cl.submit(Tensor::zeros(&[5, 12])).is_err(), "rows > max_batch");
+        assert!(cl.submit(Tensor::zeros(&[0, 12])).is_err(), "empty request");
+        assert!(cl.poll().is_none());
+        server.shutdown().unwrap();
+        let err = cl.submit(Tensor::zeros(&[1, 12])).unwrap_err();
+        assert!(format!("{err:#}").contains("shut down"));
+        assert!(cl.recv().is_err(), "recv after shutdown must error");
+    }
+
+    #[test]
+    fn shutdown_drains_outstanding_requests() {
+        let net = tiny_net(5);
+        // Large wait budget: without the shutdown drain these would sit
+        // in a partial batch forever.
+        let cfg = ServerConfig { max_batch: 8, max_wait_ticks: 1_000_000, queue_depth: 8, stages: 2 };
+        let server = Server::start(host(), &net, &cfg).unwrap();
+        let mut cl = server.client();
+        let x = Tensor::randn(&[2, 12], 1.0, &mut Rng::new(4));
+        cl.submit(x.clone()).unwrap();
+        cl.submit(x).unwrap();
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.completed, 2, "shutdown must flush the partial batch");
+        assert_eq!(cl.recv().unwrap().seq, 0);
+        assert_eq!(cl.recv().unwrap().seq, 1);
+    }
+}

@@ -180,4 +180,85 @@ fn steady_state_iterations_allocate_near_zero() {
             kind.name()
         );
     }
+
+    // ---- serving path (submit -> batch -> staged forward -> respond) ---
+    //
+    // The same discipline for the forward-only server: request and
+    // response buffers ride the shared edge pool (clients take/recycle),
+    // padded batch tensors and route tables ride circulating packets,
+    // and stage ping-pong buffers resize in place — once warm, a full
+    // submit->respond iteration allocates (near-)nothing anywhere in the
+    // batcher/stage/collector threads. Bounded std channels are
+    // array-based, so sends allocate nothing either.
+    {
+        use layerpipe2::layers::{Network, NetworkSpec};
+        use layerpipe2::serving::{Server, ServerConfig};
+
+        let scfg = layerpipe2::config::ModelConfig {
+            batch: 8,
+            input_dim: 32,
+            hidden_dim: 32,
+            classes: 8,
+            layers: 3,
+            init_scale: 1.0,
+        };
+        let net = Network::build(&NetworkSpec::mlp(&scfg), &mut Rng::new(4)).unwrap();
+        let backend: Backend = Arc::new(HostBackend::new());
+        let server = Server::start(
+            backend,
+            &net,
+            &ServerConfig { max_batch: 8, max_wait_ticks: 0, queue_depth: 16, stages: 2 },
+        )
+        .unwrap();
+        let mut cl = server.client();
+        let src = Tensor::randn(&[4, 32], 1.0, &mut Rng::new(5));
+
+        let prime = 64usize;
+        let measure = 64usize;
+        for _ in 0..prime {
+            let mut x = cl.take(&[4, 32]);
+            x.copy_from(&src);
+            cl.submit(x).unwrap();
+            let r = cl.recv().unwrap();
+            cl.recycle(r.data);
+        }
+        let s0 = server.stats();
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for _ in 0..measure {
+            let mut x = cl.take(&[4, 32]);
+            x.copy_from(&src);
+            cl.submit(x).unwrap();
+            let r = cl.recv().unwrap();
+            cl.recycle(r.data);
+        }
+        let total = ALLOCS.load(Ordering::Relaxed) - before;
+        let per_iter = total as f64 / measure as f64;
+        let s1 = server.stats();
+        println!(
+            "serving: {total} allocs over {measure} submit->respond iters = {per_iter:.2}/iter \
+             (edge pool: +{} hits, +{} misses; packets: +{})",
+            s1.pool_hits - s0.pool_hits,
+            s1.pool_misses - s0.pool_misses,
+            s1.packets_created - s0.packets_created
+        );
+        assert!(
+            per_iter <= 4.0,
+            "serving hot path regressed to {per_iter:.2} allocs/iter (expected \
+             (near-)zero: pooled request/response buffers, circulating packets, \
+             in-place ping-pong stage workspaces)"
+        );
+        assert!(
+            s1.pool_hits > s0.pool_hits,
+            "serving edge pool never served a steady-state take"
+        );
+        assert_eq!(
+            s1.pool_misses, s0.pool_misses,
+            "serving edge pool allocated fresh buffers in steady state"
+        );
+        assert_eq!(
+            s1.packets_created, s0.packets_created,
+            "packet ring grew in steady state (batch tensors not circulating)"
+        );
+        server.shutdown().unwrap();
+    }
 }

@@ -1,0 +1,245 @@
+//! Integration: the batched inference serving subsystem under real
+//! concurrency.
+//!
+//! The acceptance bar of the serving PR:
+//!  - N client threads x M requests each through the live server, every
+//!    response **bitwise equal** to the single-threaded sequential
+//!    forward oracle (`Network::forward_full`) — for a dense and a
+//!    conv+pool+dense network — with per-client response order
+//!    preserved;
+//!  - checkpoint hot-reload mid-traffic: every response is attributable
+//!    to exactly one weight epoch (its payload matches that epoch's
+//!    oracle bitwise — a torn read would match none), versions observed
+//!    by a client never go backwards, and a restore-from-disk roundtrip
+//!    serves identically to the in-memory network it was saved from.
+//!
+//! Worker-count note: the kernels under the serving stages are the PR 4
+//! family, bit-stable across `LAYERPIPE2_WORKERS` by construction
+//! (`tests/kernel_into_equivalence.rs` asserts it kernel-by-kernel), so
+//! oracle equivalence here holds for every worker count — this file
+//! runs under whatever the environment selects and stays green.
+//!
+//! Everything runs on the host backend so a clean checkout exercises
+//! the full machinery.
+
+use layerpipe2::backend::{Backend, HostBackend};
+use layerpipe2::layers::{Feature, LayerSpec, Network, NetworkSpec};
+use layerpipe2::model::checkpoint;
+use layerpipe2::serving::{drive_and_verify, Server, ServerConfig};
+use layerpipe2::tensor::Tensor;
+use layerpipe2::util::Rng;
+use std::sync::Arc;
+
+fn host() -> Backend {
+    Arc::new(HostBackend::new())
+}
+
+fn dense_spec() -> NetworkSpec {
+    NetworkSpec {
+        input: Feature::Flat(20),
+        layers: vec![
+            LayerSpec::Dense { units: 24, relu: true },
+            LayerSpec::Dense { units: 24, relu: true },
+            LayerSpec::Dense { units: 16, relu: true },
+            LayerSpec::Dense { units: 5, relu: false },
+        ],
+        init_scale: 1.0,
+    }
+}
+
+fn conv_spec() -> NetworkSpec {
+    NetworkSpec {
+        input: Feature::Image { h: 6, w: 6, c: 1 },
+        layers: vec![
+            LayerSpec::Conv2d { out_c: 3, k: 3, stride: 1, pad: 1, relu: true },
+            LayerSpec::MaxPool2d { k: 2, stride: 2 },
+            LayerSpec::Flatten,
+            LayerSpec::Dense { units: 12, relu: true },
+            LayerSpec::Dense { units: 4, relu: false },
+        ],
+        init_scale: 1.0,
+    }
+}
+
+/// N client threads x M requests of varying row counts; every response
+/// must be bitwise equal to the sequential oracle, in submit order.
+fn stress_one(name: &str, spec: &NetworkSpec, stages: usize) {
+    let net = Network::build(spec, &mut Rng::new(11)).unwrap();
+    let in_dim = net.input_dim();
+    let cfg = ServerConfig { max_batch: 8, max_wait_ticks: 1, queue_depth: 32, stages };
+    let server = Server::start(host(), &net, &cfg).unwrap();
+
+    let n_clients = 4usize;
+    let m = 32usize;
+    let be = HostBackend::new();
+    let mut oracle = net.snapshot().unwrap();
+
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        // Deterministic per-client payloads with varying row counts, and
+        // their single-threaded oracle outputs, computed up front.
+        let mut rng = Rng::new(1000 + c as u64);
+        let inputs: Vec<Tensor> = (0..m)
+            .map(|i| Tensor::randn(&[1 + (c + 3 * i) % cfg.max_batch, in_dim], 1.0, &mut rng))
+            .collect();
+        // Single weight epoch: the harness's epoch check pins every
+        // response to version 0 (expected.len() == 1).
+        let expected: Vec<Vec<Tensor>> =
+            vec![inputs.iter().map(|x| oracle.forward_full(&be, x).unwrap()).collect()];
+        let mut cl = server.client();
+        handles.push(std::thread::spawn(move || {
+            // Window 6: submits and responses genuinely interleave.
+            let counts = drive_and_verify(&mut cl, &inputs, &expected, |i| i, m, 6)
+                .unwrap_or_else(|e| panic!("client {c}: {e:#}"));
+            assert_eq!(counts, vec![m as u64], "client {c}: response count per epoch");
+        }));
+    }
+    for h in handles {
+        h.join().unwrap_or_else(|e| std::panic::resume_unwind(e));
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.submitted, (n_clients * m) as u64, "{name}: submit count");
+    assert_eq!(stats.completed, (n_clients * m) as u64, "{name}: response count");
+    assert_eq!(stats.dropped, 0, "{name}: dropped responses");
+    assert!(stats.batches > 0 && stats.batches <= stats.submitted, "{name}: batch count");
+}
+
+#[test]
+fn concurrent_clients_match_sequential_oracle_bitwise_dense() {
+    stress_one("dense", &dense_spec(), 2);
+}
+
+#[test]
+fn concurrent_clients_match_sequential_oracle_bitwise_conv() {
+    stress_one("conv", &conv_spec(), 3);
+}
+
+#[test]
+fn hot_reload_under_load_never_tears_a_version() {
+    // Four weight versions of the same architecture; the server starts
+    // on v0 and hot-reloads v1..v3 while three client threads keep the
+    // pipeline full. Every response must match exactly the oracle of
+    // the epoch it is tagged with — a torn mix of two versions would
+    // match none of them bitwise.
+    let spec = dense_spec();
+    let versions: Vec<Network> =
+        (0..4u64).map(|k| Network::build(&spec, &mut Rng::new(100 + k)).unwrap()).collect();
+    let in_dim = versions[0].input_dim();
+    let be = HostBackend::new();
+    let inputs: Vec<Tensor> =
+        (0..10).map(|i| Tensor::randn(&[1 + i % 4, in_dim], 1.0, &mut Rng::new(50 + i as u64))).collect();
+    let expected: Vec<Vec<Tensor>> = versions
+        .iter()
+        .map(|v| {
+            let mut o = v.snapshot().unwrap();
+            inputs.iter().map(|x| o.forward_full(&be, x).unwrap()).collect()
+        })
+        .collect();
+
+    let cfg = ServerConfig { max_batch: 8, max_wait_ticks: 1, queue_depth: 16, stages: 2 };
+    let server = Server::start(host(), &versions[0], &cfg).unwrap();
+    let m = 48usize;
+
+    std::thread::scope(|s| {
+        let inputs = &inputs;
+        let expected = &expected;
+        for c in 0..3usize {
+            let mut cl = server.client();
+            s.spawn(move || {
+                // Lockstep (window 0) so reloads interleave the traffic
+                // as finely as possible; the harness asserts FIFO order,
+                // known + non-decreasing epochs, and that every payload
+                // is bitwise the tagged epoch's oracle — a torn read
+                // across a hot-reload would match no epoch.
+                let pick = |i: usize| (c + 5 * i) % inputs.len();
+                let counts = drive_and_verify(&mut cl, inputs, expected, pick, m, 0)
+                    .unwrap_or_else(|e| panic!("client {c}: {e:#}"));
+                assert_eq!(counts.iter().sum::<u64>(), m as u64, "client {c}: response count");
+            });
+        }
+        for v in versions.iter().skip(1) {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            server.reload(v).unwrap();
+        }
+    });
+
+    // Traffic submitted after the last reload must see the final epoch.
+    let mut cl = server.client();
+    cl.submit(inputs[0].clone()).unwrap();
+    let r = cl.recv().unwrap();
+    assert_eq!(r.version, 3, "post-reload batch must carry the newest epoch");
+    assert_eq!(r.data, expected[3][0]);
+
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.reloads, 3);
+    assert_eq!(stats.epoch, 3);
+    assert_eq!(stats.completed, (3 * m + 1) as u64);
+    assert_eq!(stats.dropped, 0);
+}
+
+#[test]
+fn restore_from_disk_roundtrip_serves_identically() {
+    // save(net_a) -> reload_from_file must serve bitwise like net_a,
+    // after an intermediate reload proved the swap is observable.
+    let spec = conv_spec();
+    let net_a = Network::build(&spec, &mut Rng::new(7)).unwrap();
+    let net_b = Network::build(&spec, &mut Rng::new(8)).unwrap();
+    let be = HostBackend::new();
+    let x = Tensor::randn(&[3, net_a.input_dim()], 1.0, &mut Rng::new(9));
+    let want_a = net_a.snapshot().unwrap().forward_full(&be, &x).unwrap();
+    let want_b = net_b.snapshot().unwrap().forward_full(&be, &x).unwrap();
+    assert_ne!(want_a, want_b, "versions must be distinguishable");
+
+    let path = std::env::temp_dir().join(format!("lp2_serve_rt_{}.bin", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    checkpoint::save_network(&net_a, &path).unwrap();
+
+    let cfg = ServerConfig { max_batch: 4, max_wait_ticks: 0, queue_depth: 8, stages: 2 };
+    let server = Server::start(host(), &net_a, &cfg).unwrap();
+    let mut cl = server.client();
+
+    // Epoch 0: the in-memory original.
+    cl.submit(x.clone()).unwrap();
+    let r0 = cl.recv().unwrap();
+    assert_eq!((r0.version, &r0.data), (0, &want_a));
+
+    // Epoch 1: different weights — observably different responses.
+    server.reload(&net_b).unwrap();
+    cl.submit(x.clone()).unwrap();
+    let r1 = cl.recv().unwrap();
+    assert_eq!((r1.version, &r1.data), (1, &want_b));
+
+    // Epoch 2: restored from disk — bitwise back to the original.
+    let epoch = server.reload_from_file(&path).unwrap();
+    assert_eq!(epoch, 2);
+    std::fs::remove_file(&path).ok();
+    cl.submit(x.clone()).unwrap();
+    let r2 = cl.recv().unwrap();
+    assert_eq!(r2.version, 2);
+    assert_eq!(
+        r2.data, want_a,
+        "disk-roundtripped checkpoint must serve bitwise like the network it was saved from"
+    );
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn rejected_reload_leaves_serving_unaffected() {
+    // A reload whose architecture mismatches must fail fast without
+    // bumping the epoch or disturbing in-flight traffic.
+    let net = Network::build(&dense_spec(), &mut Rng::new(3)).unwrap();
+    let cfg = ServerConfig { max_batch: 4, max_wait_ticks: 0, queue_depth: 8, stages: 2 };
+    let server = Server::start(host(), &net, &cfg).unwrap();
+    let conv = Network::build(&conv_spec(), &mut Rng::new(3)).unwrap();
+    assert!(server.reload(&conv).is_err(), "cross-architecture reload must be rejected");
+    // Traffic still flows on the original epoch afterwards.
+    let mut cl = server.client();
+    let x = Tensor::randn(&[2, net.input_dim()], 1.0, &mut Rng::new(4));
+    cl.submit(x.clone()).unwrap();
+    let r = cl.recv().unwrap();
+    assert_eq!(r.version, 0);
+    let mut oracle = net.snapshot().unwrap();
+    assert_eq!(r.data, oracle.forward_full(&HostBackend::new(), &x).unwrap());
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.reloads, 0, "rejected reload must not bump the epoch");
+}

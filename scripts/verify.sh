@@ -21,21 +21,31 @@ cargo clippy -- -D warnings -D clippy::perf
 
 # Release-mode bench smoke: runs the hot-path bench with reduced samples
 # so kernel/allocation regressions fail the gate (and refreshes
-# BENCH_hotpath.json + BENCH_layers.json + BENCH_kernels.json — the
-# dense, layer-zoo and kernel-family machine-readable perf
-# trajectories). The kernel-family section validates every kernel
-# in-run: shape mismatches, NaN/non-finite outputs, packed-vs-reference
-# bit drift and tree-reduction worker instability all abort the bench
-# and therefore fail this gate.
+# BENCH_hotpath.json + BENCH_layers.json + BENCH_kernels.json +
+# BENCH_serving.json — the dense, layer-zoo, kernel-family and serving
+# machine-readable perf trajectories). The kernel-family section
+# validates every kernel in-run: shape mismatches, NaN/non-finite
+# outputs, packed-vs-reference bit drift and tree-reduction worker
+# instability all abort the bench and therefore fail this gate; the
+# serving section verifies every response bitwise against the
+# sequential forward oracle.
 echo "==> bench smoke (release, reduced samples)"
 LAYERPIPE2_BENCH_SMOKE=1 cargo bench --bench runtime_hotpath
 test -s BENCH_kernels.json || { echo "verify: BENCH_kernels.json missing or empty"; exit 1; }
+test -s BENCH_serving.json || { echo "verify: BENCH_serving.json missing or empty"; exit 1; }
 
 # Heterogeneous end-to-end smoke: conv+pool+dense and dense+LIF stacks
 # through the threaded executor with cost-balanced stages, asserting
 # oracle equivalence ≤ 1e-4 (the layers-PR acceptance bar).
 echo "==> conv pipeline example (smoke)"
 LAYERPIPE2_SMOKE=1 cargo run --release --example conv_pipeline
+
+# Serving end-to-end smoke: trained dense + conv networks through the
+# multi-client batched server with a mid-traffic hot reload and a
+# restore-from-disk roundtrip, every response asserted bitwise equal to
+# the sequential forward oracle of the epoch that served it.
+echo "==> serve pipeline example (smoke)"
+LAYERPIPE2_SMOKE=1 cargo run --release --example serve_pipeline
 
 if [[ "${1:-}" == "--pjrt" ]]; then
     echo "==> cargo build --release --features pjrt"
