@@ -19,12 +19,15 @@
 //! `BENCH_layers.json` (layer zoo), `BENCH_kernels.json` (kernel
 //! family: scalar reference vs packed/tree kernels, serial vs parallel —
 //! with in-run NaN/shape/bit-stability validation, so a kernel
-//! regression fails the bench) and `BENCH_serving.json` (batched
+//! regression fails the bench), `BENCH_serving.json` (batched
 //! inference serving: requests/sec + p50/p99 batch latency vs
 //! `max_batch`, every response verified bitwise against the sequential
-//! oracle in-run). Override paths with `LAYERPIPE2_BENCH_JSON` /
-//! `LAYERPIPE2_BENCH_LAYERS_JSON` / `LAYERPIPE2_BENCH_KERNELS_JSON` /
-//! `LAYERPIPE2_BENCH_SERVING_JSON`. Set `LAYERPIPE2_BENCH_SMOKE=1` for a
+//! oracle in-run) and `BENCH_ring.json` (weight-ring replica scaling:
+//! samples/sec + scaling efficiency vs replica count, final weights
+//! verified bitwise against the single-replica oracle in-run). Override
+//! paths with `LAYERPIPE2_BENCH_JSON` / `LAYERPIPE2_BENCH_LAYERS_JSON` /
+//! `LAYERPIPE2_BENCH_KERNELS_JSON` / `LAYERPIPE2_BENCH_SERVING_JSON` /
+//! `LAYERPIPE2_BENCH_RING_JSON`. Set `LAYERPIPE2_BENCH_SMOKE=1` for a
 //! fast CI smoke run (reduced sizes and sample counts, same coverage).
 
 use layerpipe2::backend::{self, Exec, HostBackend};
@@ -34,6 +37,7 @@ use layerpipe2::data::teacher_dataset;
 use layerpipe2::layers::{Conv2d, Layer, Network, NetworkSpec};
 use layerpipe2::model::LayerRole;
 use layerpipe2::pipeline::PipelinedTrainer;
+use layerpipe2::replica::{train_ring, RingConfig, RingReport};
 use layerpipe2::runtime::Engine;
 use layerpipe2::serving::{Server, ServerConfig};
 use layerpipe2::strategy::StrategyKind;
@@ -570,7 +574,7 @@ fn serving_section(smoke: bool) -> Json {
         let server = Server::start(
             Arc::new(HostBackend::new()),
             &net,
-            &ServerConfig { max_batch: mb, max_wait_ticks: 2, queue_depth: 64, stages: 2 },
+            &ServerConfig { max_batch: mb, max_wait_ticks: 2, shrink_under: 0, queue_depth: 64, stages: 2 },
         )
         .expect("server start");
         let req_rows = (mb / 2).max(1);
@@ -621,6 +625,83 @@ fn serving_section(smoke: bool) -> Json {
     Json::Arr(rows_out)
 }
 
+/// HOTPATH-h: weight-ring replica scaling — samples/sec and scaling
+/// efficiency as a function of the replica count on a fixed shard
+/// decomposition, written to `BENCH_ring.json` so the 2D (pipeline ×
+/// data) training trajectory is tracked across PRs. The final weights
+/// of every replica count are compared bitwise against the
+/// single-replica oracle in-run, so a determinism regression in the
+/// all-reduce fails the bench (and `verify.sh`, which runs it in smoke
+/// mode).
+fn ring_section(smoke: bool) -> Json {
+    print_header("HOTPATH-h: weight-ring replica scaling (fixed shards, deterministic all-reduce)");
+    let mut rows_out: Vec<Json> = Vec::new();
+    let mut ecfg = ExperimentConfig { epochs: if smoke { 1 } else { 2 }, ..ExperimentConfig::default() };
+    ecfg.model.batch = if smoke { 64 } else { 128 };
+    ecfg.model.input_dim = 64;
+    ecfg.model.hidden_dim = if smoke { 64 } else { 128 };
+    ecfg.model.classes = 10;
+    ecfg.model.layers = 4;
+    ecfg.pipeline.stages = 2;
+    ecfg.data.train_samples = if smoke { 256 } else { 2048 };
+    ecfg.data.test_samples = if smoke { 64 } else { 256 };
+    let data = teacher_dataset(&ecfg.model, &ecfg.data);
+    let shards = 8usize;
+    let kind = StrategyKind::PipelineAwareEma;
+    let backend = backend::from_env("artifacts").expect("backend selection");
+
+    let bitwise_eq = |a: &RingReport, b: &RingReport| {
+        a.final_weights.len() == b.final_weights.len()
+            && a.final_weights
+                .data()
+                .iter()
+                .zip(b.final_weights.data())
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    };
+
+    let mut oracle: Option<RingReport> = None;
+    for replicas in [1usize, 2, 4] {
+        let ring = RingConfig::new(replicas, shards);
+        let report =
+            train_ring(&backend, &ecfg, None, kind, &ring, &data).expect("ring training runs");
+        let base_sps = oracle.as_ref().map_or(report.samples_per_sec, |o| o.samples_per_sec);
+        let speedup = report.samples_per_sec / base_sps;
+        let efficiency = speedup / replicas as f64;
+        println!(
+            "  replicas {replicas}: {:>9.1} samples/s  speedup {speedup:.2}x  efficiency {:.2}  \
+             ({} iterations, loss {:.4})",
+            report.samples_per_sec,
+            efficiency,
+            report.iterations,
+            report.train_loss
+        );
+        if let Some(o) = &oracle {
+            // In-run determinism gate: any drift in the all-reduce is a
+            // bench failure, not just a perf regression.
+            assert!(
+                bitwise_eq(&report, o),
+                "ring final weights at {replicas} replicas differ from the single-replica oracle"
+            );
+        }
+        rows_out.push(jobj(vec![
+            ("case", Json::Str(format!("ring_r{replicas}_s{shards}"))),
+            ("replicas", jnum(replicas as f64)),
+            ("shards", jnum(shards as f64)),
+            ("iterations", jnum(report.iterations as f64)),
+            ("samples_per_sec", jnum(report.samples_per_sec)),
+            ("speedup_vs_1", jnum(speedup)),
+            ("scaling_efficiency", jnum(efficiency)),
+            ("train_loss", jnum(report.train_loss as f64)),
+            ("test_accuracy", jnum(report.test_accuracy as f64)),
+        ]));
+        if oracle.is_none() {
+            oracle = Some(report);
+        }
+    }
+    println!("  final weights bitwise identical across all replica counts");
+    Json::Arr(rows_out)
+}
+
 fn main() {
     let smoke = smoke();
     if smoke {
@@ -633,6 +714,7 @@ fn main() {
     let train = train_iteration_section(smoke);
     let executor = executor_pool_section(smoke);
     let serving = serving_section(smoke);
+    let ring = ring_section(smoke);
 
     let mut obj = BTreeMap::new();
     obj.insert("bench".to_string(), Json::Str("runtime_hotpath".to_string()));
@@ -680,4 +762,15 @@ fn main() {
         .unwrap_or_else(|_| "BENCH_serving.json".to_string());
     std::fs::write(&spath, Json::Obj(sobj).to_string()).expect("write serving bench json");
     println!("wrote {spath}");
+
+    // Weight-ring replica scaling: its own trajectory file so the 2D
+    // (pipeline × data) training path is tracked across PRs.
+    let mut robj = BTreeMap::new();
+    robj.insert("bench".to_string(), Json::Str("runtime_hotpath/ring".to_string()));
+    robj.insert("smoke".to_string(), Json::Bool(smoke));
+    robj.insert("ring".to_string(), ring);
+    let rpath = std::env::var("LAYERPIPE2_BENCH_RING_JSON")
+        .unwrap_or_else(|_| "BENCH_ring.json".to_string());
+    std::fs::write(&rpath, Json::Obj(robj).to_string()).expect("write ring bench json");
+    println!("wrote {rpath}");
 }

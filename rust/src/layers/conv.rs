@@ -3,10 +3,12 @@
 //! Every heavy pass is worker-pool parallel with deterministic results:
 //! the im2col gather splits patch rows across workers (pure data
 //! movement), the `dw = colsᵀ·dz` reduction rides the fixed-geometry
-//! tree of `matmul_tn_into`, and the fused mask+`db` epilogue uses the
-//! shared fixed-chunk reduction — so conv backward scales with
-//! `LAYERPIPE2_WORKERS` while staying bit-identical across worker
-//! counts.
+//! tree of `matmul_tn_into`, the fused mask+`db` epilogue uses the
+//! shared fixed-chunk reduction, and the col2im accumulation assigns
+//! each *input* row to exactly one worker, which gathers the patch
+//! windows touching it in the serial scatter's `(oy, ox)` order — so
+//! conv forward *and* backward scale with `LAYERPIPE2_WORKERS` while
+//! staying bit-identical across worker counts.
 //!
 //! Layout: activations are NHWC flattened to `[batch, h·w·c]`, so a conv
 //! output (`[batch·oh·ow, out_c]` after the matmul) reshapes to the next
@@ -156,10 +158,83 @@ impl Conv2d {
         });
     }
 
-    /// Scatter-add the patch gradients back onto the input map:
-    /// the exact transpose of [`Conv2d::im2col`]. `dx` must be resized
-    /// and zero-filled by the caller.
+    /// Accumulate the patch gradients back onto the input map: the
+    /// exact transpose of [`Conv2d::im2col`]. `dx` must be resized and
+    /// zero-filled by the caller. Large maps split *input* rows across
+    /// pool workers — each `(batch, iy)` row of `dx` is owned by
+    /// exactly one worker, which gathers every patch window touching it
+    /// in the serial scatter's accumulation order, so the result is
+    /// bitwise identical at every worker count.
     fn col2im_add(&self, dcols: &Tensor, dx: &mut Tensor) {
+        let bsz = dx.shape()[0];
+        let (oh, ow) = self.out_hw();
+        let threads = workers::unit_threads(bsz * oh * ow * self.patch(), bsz * self.in_h);
+        self.col2im_add_with_threads(dcols, dx, threads);
+    }
+
+    /// [`Conv2d::col2im_add`] with an explicit worker count — exposed to
+    /// the tests so the bitwise serial-vs-parallel sweep is direct.
+    fn col2im_add_with_threads(&self, dcols: &Tensor, dx: &mut Tensor, threads: usize) {
+        if threads <= 1 {
+            self.col2im_add_serial(dcols, dx);
+            return;
+        }
+        let bsz = dx.shape()[0];
+        let (h, w, c) = (self.in_h, self.in_w, self.in_c);
+        let rows = bsz * h;
+        let gd = dcols.data();
+        let xd = dx.data_mut();
+        let rows_per = rows.div_ceil(threads);
+        workers::run_chunked(xd, rows_per * w * c, &|ci, chunk| {
+            for (i, dst) in chunk.chunks_mut(w * c).enumerate() {
+                self.col2im_gather_row(gd, dst, ci * rows_per + i);
+            }
+        });
+    }
+
+    /// Gather-accumulate every patch-gradient contribution landing on
+    /// one input row of `dx` (`row` indexes `bi·in_h + iy`; `dst` is
+    /// that row's `[in_w · in_c]` slice).
+    ///
+    /// Bit-compatibility with the serial scatter: for a fixed `dx`
+    /// element, the scatter's contributions arrive ordered by
+    /// `(oy asc, ox asc)` (the `ky`/`kx` taps are determined by
+    /// `(oy, ox)` once the element is fixed). This gather walks the
+    /// same `(oy asc, ox asc)` order, so every element accumulates in
+    /// the identical f32 sequence.
+    fn col2im_gather_row(&self, gd: &[f32], dst: &mut [f32], row: usize) {
+        let (w, c) = (self.in_w, self.in_c);
+        let (oh, ow) = self.out_hw();
+        let patch = self.patch();
+        let bi = row / self.in_h;
+        let iy = row % self.in_h;
+        // Output rows whose kernel window covers input row iy:
+        // ky = iy + pad − oy·stride must lie in [0, k).
+        let t = iy + self.pad;
+        let oy_lo = t.saturating_sub(self.k - 1).div_ceil(self.stride);
+        let oy_hi = (t / self.stride).min(oh - 1);
+        for oy in oy_lo..=oy_hi {
+            let ky = t - oy * self.stride;
+            let src_base = (bi * oh + oy) * ow;
+            for ox in 0..ow {
+                let src = &gd[(src_base + ox) * patch..(src_base + ox + 1) * patch];
+                for kx in 0..self.k {
+                    let ix = (ox * self.stride + kx) as isize - self.pad as isize;
+                    if ix >= 0 && (ix as usize) < w {
+                        let at = ix as usize * c;
+                        let p = (ky * self.k + kx) * c;
+                        for (xv, gv) in dst[at..at + c].iter_mut().zip(src[p..p + c].iter()) {
+                            *xv += gv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The reference serial scatter (the gather paths must reproduce it
+    /// bit for bit; also the small-shape fast path).
+    fn col2im_add_serial(&self, dcols: &Tensor, dx: &mut Tensor) {
         let bsz = dx.shape()[0];
         let (h, w, c) = (self.in_h, self.in_w, self.in_c);
         let (oh, ow) = self.out_hw();
@@ -510,6 +585,37 @@ mod tests {
         let be = HostBackend::new();
         let mut y = Tensor::empty();
         assert!(op.forward_into(&be, &bad, &w, &b, &mut y).is_err());
+    }
+
+    #[test]
+    fn col2im_parallel_matches_serial_bitwise() {
+        // Strided + padded + unit geometries on batches big enough to
+        // split many ways: every worker count must reproduce the serial
+        // scatter bit for bit (per-element accumulation order is
+        // (oy asc, ox asc) on both paths).
+        let mut rng = Rng::new(31);
+        for (h, w, c, k, stride, pad) in
+            [(5, 6, 2, 3, 1, 1), (7, 5, 3, 3, 2, 1), (4, 4, 1, 2, 2, 0), (3, 3, 2, 3, 1, 2)]
+        {
+            let op = Conv2d::new(h, w, c, 3, k, stride, pad, false).unwrap();
+            let (oh, ow) = op.out_hw();
+            let bsz = 3;
+            let dcols = Tensor::randn(&[bsz * oh * ow, op.patch()], 1.0, &mut rng);
+            let mut want = Tensor::zeros(&[bsz, op.in_dim()]);
+            op.col2im_add_serial(&dcols, &mut want);
+            for threads in 1..=8 {
+                let mut got = Tensor::zeros(&[bsz, op.in_dim()]);
+                op.col2im_add_with_threads(&dcols, &mut got, threads);
+                for (i, (g, e)) in got.data().iter().zip(want.data()).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        e.to_bits(),
+                        "col2im drift at elem {i}, threads={threads}, \
+                         geo=({h},{w},{c},k{k},s{stride},p{pad})"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -32,6 +32,11 @@
 //!   request queue, coalescing batcher, forward-cost-balanced stage
 //!   workers and atomic epoch-versioned checkpoint hot-reload —
 //!   bitwise-equal to the sequential forward oracle;
+//! - **weight-ring replica parallelism** ([`replica`]): 2D (pipeline ×
+//!   data) training over N in-process replica workers with a
+//!   deterministic fixed-tree all-reduce — bit-identical weights at any
+//!   replica count — gradients circulating as flat codec buffers on
+//!   ping-pong ring links;
 //! - supporting substrates written from scratch for this offline
 //!   environment: deterministic RNG, JSON, a TOML-subset config system,
 //!   host tensors, a bench harness and a property-test helper.
@@ -58,6 +63,7 @@ pub mod data;
 pub mod train;
 pub mod pipeline;
 pub mod serving;
+pub mod replica;
 pub mod coordinator;
 pub mod metrics;
 pub mod bench_util;

@@ -10,6 +10,8 @@
 //! layerpipe2 throughput [--stages 1,2,4,8] [--batches B] [--artifacts DIR]
 //! layerpipe2 serve   [--clients N] [--requests M] [--rows R] [--max-batch B]
 //!                    [--wait-ticks T] [--stages K] [--reloads X] [--checkpoint F]
+//! layerpipe2 train-ring [--replicas 1,2,4] [--shards S] [--strategy S]
+//!                    [--epochs N] [--stages K] [--seed N]
 //! layerpipe2 info    [--artifacts DIR]
 //! ```
 
@@ -17,12 +19,14 @@ use anyhow::{bail, Context, Result};
 use layerpipe2::backend::{self, Exec};
 use layerpipe2::config::ExperimentConfig;
 use layerpipe2::coordinator::{check_fig5_shape, Coordinator, ExecutorKind};
+use layerpipe2::data::teacher_dataset;
 use layerpipe2::dlms;
 use layerpipe2::model::Mlp;
 use layerpipe2::pipeline;
 use layerpipe2::retiming::{Derivation, StagePartition};
 use layerpipe2::layers::{Network, NetworkSpec};
 use layerpipe2::model::checkpoint;
+use layerpipe2::replica;
 use layerpipe2::runtime::Manifest;
 use layerpipe2::schedule::{sweep_stages, CostModel, Schedule};
 use layerpipe2::serving::{Server, ServerConfig};
@@ -121,6 +125,7 @@ fn run(argv: &[String]) -> Result<()> {
         "schedule" => cmd_schedule(&args),
         "throughput" => cmd_throughput(&args),
         "serve" => cmd_serve(&args),
+        "train-ring" => cmd_train_ring(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -153,6 +158,10 @@ COMMANDS:
               --clients N --requests M --rows R --max-batch B
               --wait-ticks T --stages K --reloads X --checkpoint F
               (responses verified bitwise vs the sequential oracle)
+  train-ring  2D (pipeline x data) training on the weight ring
+              --replicas 1,2,4 --shards S --strategy S --epochs N
+              --stages K --seed N  (LAYERPIPE2_REPLICAS sets the
+              default; final weights verified bitwise across counts)
   info        print artifact manifest details  --artifacts DIR"
     );
 }
@@ -358,7 +367,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
 
-    let cfg = ServerConfig { max_batch, max_wait_ticks: wait_ticks, queue_depth: 64, stages };
+    let cfg = ServerConfig { max_batch, max_wait_ticks: wait_ticks, shrink_under: 0, queue_depth: 64, stages };
     let server = Server::start(backend.clone(), &versions[0], &cfg)?;
     println!(
         "serving: backend {}  {} stages  partition {:?}",
@@ -412,6 +421,99 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "batches {}  occupancy {:.2}  reloads {}  pool {}h/{}m  (all responses bitwise == oracle)",
         stats.batches, stats.occupancy, stats.reloads, stats.pool_hits, stats.pool_misses
     );
+    Ok(())
+}
+
+/// Weight-ring replica training demo: run the same workload at each
+/// requested replica count and check the deterministic all-reduce
+/// contract — final weights bitwise identical regardless of how many
+/// threads the fixed shard lanes are spread over.
+fn cmd_train_ring(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    }
+    cfg.epochs = args.usize_or("epochs", cfg.epochs)?;
+    cfg.pipeline.stages = args.usize_or("stages", cfg.pipeline.stages)?;
+    cfg.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
+    cfg.validate()?;
+    let kind = match args.get("strategy") {
+        Some(s) => StrategyKind::parse(s)?,
+        None => StrategyKind::PipelineAwareEma,
+    };
+    // Default shard count: the largest divisor of the batch ≤ 8, so the
+    // ring always validates out of the box.
+    let default_shards =
+        (1..=8.min(cfg.model.batch)).rev().find(|d| cfg.model.batch % d == 0).unwrap_or(1);
+    let shards = args.usize_or("shards", default_shards)?;
+    let replica_counts = match args.get("replicas") {
+        Some(_) => args.usize_list("replicas", &[])?,
+        None => {
+            // LAYERPIPE2_REPLICAS (clamped to a divisor of the shard
+            // count) picks the contender; 1 is always the oracle.
+            let n = replica::default_replicas(shards);
+            if n == 1 { vec![1] } else { vec![1, n] }
+        }
+    };
+    if replica_counts.is_empty() {
+        bail!("--replicas needs at least one count");
+    }
+
+    let backend = backend::from_env(&cfg.artifacts_dir)?;
+    let data = teacher_dataset(&cfg.model, &cfg.data);
+    println!(
+        "weight ring: backend {}  strategy {}  shards {}  batch {}  epochs {}",
+        backend.name(),
+        kind.name(),
+        shards,
+        cfg.model.batch,
+        cfg.epochs
+    );
+    println!(
+        "{:<10} {:>8} {:>12} {:>14} {:>10} {:>12} {:>10}",
+        "replicas", "shards", "iterations", "samples/s", "speedup", "train loss", "test acc"
+    );
+    let mut oracle: Option<replica::RingReport> = None;
+    for &n in &replica_counts {
+        let ring = replica::RingConfig::new(n, shards);
+        let report = replica::train_ring(&backend, &cfg, None, kind, &ring, &data)?;
+        let base = oracle.as_ref().map_or(report.samples_per_sec, |o| o.samples_per_sec);
+        println!(
+            "{:<10} {:>8} {:>12} {:>14.1} {:>9.2}x {:>12.4} {:>10.4}",
+            report.replicas,
+            report.shards,
+            report.iterations,
+            report.samples_per_sec,
+            report.samples_per_sec / base,
+            report.train_loss,
+            report.test_accuracy
+        );
+        match &oracle {
+            None => oracle = Some(report),
+            Some(o) => {
+                let same = report.final_weights.len() == o.final_weights.len()
+                    && report
+                        .final_weights
+                        .data()
+                        .iter()
+                        .zip(o.final_weights.data())
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                if !same {
+                    bail!(
+                        "final weights at {} replicas differ from {} replicas (determinism broken)",
+                        report.replicas,
+                        o.replicas
+                    );
+                }
+            }
+        }
+    }
+    if replica_counts.len() > 1 {
+        println!("final weights bitwise identical across all replica counts");
+    }
     Ok(())
 }
 

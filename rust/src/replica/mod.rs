@@ -1,0 +1,969 @@
+//! Weight-ring replica parallelism: 2D (pipeline × data) training with
+//! a deterministic all-reduce.
+//!
+//! LayerPipe2's per-layer delays come purely from downstream stage
+//! count, so the stage pipeline composes cleanly with data parallelism:
+//! N in-process replica workers each drive their own deferred-step
+//! [`Trainer`] over a shard of the batch stream, and gradients are
+//! combined with a fixed-geometry tree reduction before anyone steps.
+//!
+//! **The invariance trick.** Summing N per-replica gradients in an
+//! N-shaped tree would give different f32 bits at different replica
+//! counts. Instead every global batch is decomposed into `S` fixed
+//! micro-**shards** (`S` chosen once, independent of N): shard lane `j`
+//! always trains on rows `j·(B/S) .. (j+1)·(B/S)` of every global
+//! batch, and the all-reduce combines the `S` shard gradients in the
+//! gap-doubling pairwise order keyed on `S` alone —
+//! `((g0+g1)+(g2+g3))+…` — the same fixed-pairwise geometry the matmul
+//! `dw` tree reduction uses for worker-count stability. Replica count
+//! only decides which thread hosts which contiguous block of lanes
+//! (`S % N == 0`), so N=1,2,4,8 produce bit-identical weights by
+//! construction. The semantics are mean-of-shard-gradients: each
+//! lane's loss kernel already averages over its `B/S` rows, and the
+//! reduce scales by `1/S` — a mean of equal-shard means, i.e. the
+//! global batch mean up to f32 summation order.
+//!
+//! **Deferred steps.** Within one `Trainer` iteration each layer
+//! backwards at most once, every event reads only its *own* layer's
+//! pre-step weights, and cross-event dataflow is the `dx`→`dy` chain —
+//! so postponing all optimizer steps to end-of-iteration is
+//! bit-identical to stock immediate stepping. That is what lets a
+//! thread owning k lanes run split-phase (compute + ship all lanes,
+//! then receive + apply all lanes) without a blocking rendezvous in
+//! the middle of an iteration, and what makes the single-lane ring an
+//! exact bitwise replay of the stock trainer.
+//!
+//! **The ring.** Staged gradients flatten (event order) into each
+//! lane's [`RingLink`] — a WeiPipe-style ping-pong buffer pair — and
+//! ship over bounded std channels (array-based, allocation-free sends)
+//! to the coordinator thread, which gathers them into shard-indexed
+//! slots, tree-reduces, and ships the mean back in the same buffers.
+//! Buffers circulate: nothing is allocated in steady state, and the
+//! returned allocation becomes the next iteration's send side via
+//! `pingpong`. Weights move through the same flat codec
+//! ([`model_to_tensor`] / [`tensor_to_model`], v2 checkpoint record
+//! order: per-layer stack order, `w` then `b`) — used to broadcast the
+//! initial model and to verify end-of-run lane agreement bitwise.
+//!
+//! The replica count defaults from `LAYERPIPE2_REPLICAS` (mirroring
+//! `LAYERPIPE2_WORKERS`), clamped to the largest divisor of the shard
+//! count.
+
+use crate::backend::Backend;
+use crate::config::ExperimentConfig;
+use crate::data::{BatchIter, Dataset, Splits};
+use crate::layers::{Network, NetworkSpec};
+use crate::strategy::StrategyKind;
+use crate::tensor::{workers, Tensor};
+use crate::train::Trainer;
+use crate::util::Rng;
+use anyhow::{anyhow, ensure, Result};
+use std::sync::mpsc::sync_channel;
+use std::time::Instant;
+
+/// Env knob for the default replica count (mirrors `LAYERPIPE2_WORKERS`).
+pub const REPLICAS_ENV: &str = "LAYERPIPE2_REPLICAS";
+
+/// Upper bound on the shard-lane count: the elementwise combine keeps
+/// its partials in a stack array of this size.
+pub const MAX_SHARDS: usize = 64;
+
+/// Default replica count: `LAYERPIPE2_REPLICAS` if set (≥1), else the
+/// machine's available parallelism — in either case clamped to the
+/// largest divisor of `shards` (lanes are distributed in equal
+/// contiguous blocks, so the replica count must divide the lane count).
+pub fn default_replicas(shards: usize) -> usize {
+    let want = std::env::var(REPLICAS_ENV)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()));
+    largest_divisor_leq(shards, want)
+}
+
+/// Largest divisor of `shards` that is ≤ `want` (≥ 1).
+fn largest_divisor_leq(shards: usize, want: usize) -> usize {
+    let cap = want.min(shards).max(1);
+    (1..=cap).rev().find(|d| shards % d == 0).unwrap_or(1)
+}
+
+/// Ring geometry: `shards` fixed micro-shard lanes distributed over
+/// `replicas` threads. The bits of the training run depend on `shards`
+/// only; `replicas` is pure placement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RingConfig {
+    pub replicas: usize,
+    pub shards: usize,
+}
+
+impl RingConfig {
+    pub fn new(replicas: usize, shards: usize) -> RingConfig {
+        RingConfig { replicas, shards }
+    }
+
+    /// Geometry with the replica count taken from `LAYERPIPE2_REPLICAS`
+    /// (or the machine) — see [`default_replicas`].
+    pub fn from_env(shards: usize) -> RingConfig {
+        RingConfig { replicas: default_replicas(shards), shards }
+    }
+
+    pub fn lanes_per_replica(&self) -> usize {
+        self.shards / self.replicas.max(1)
+    }
+
+    pub fn validate(&self, batch: usize) -> Result<()> {
+        ensure!(
+            self.shards >= 1 && self.shards <= MAX_SHARDS,
+            "shards must be in 1..={MAX_SHARDS}, got {}",
+            self.shards
+        );
+        ensure!(
+            self.replicas >= 1 && self.replicas <= self.shards,
+            "replicas must be in 1..=shards ({}), got {}",
+            self.shards,
+            self.replicas
+        );
+        ensure!(
+            self.shards % self.replicas == 0,
+            "replicas ({}) must divide shards ({}) — lanes are placed in equal contiguous blocks",
+            self.replicas,
+            self.shards
+        );
+        ensure!(
+            batch % self.shards == 0,
+            "shards ({}) must divide the global batch ({batch}) — every lane owns an equal slice",
+            self.shards
+        );
+        Ok(())
+    }
+}
+
+// ---- deterministic tree reduce -----------------------------------------
+
+/// One output element of the fixed-pairwise combine: load the `n`
+/// partials into a stack array and fold with gap doubling —
+/// `((p0+p1)+(p2+p3))+…` — the PR 4 tree-reduction order, a pure
+/// function of `parts.len()`. Never arrival order, never thread count.
+fn combine_elem(parts: &[Tensor], i: usize) -> f32 {
+    let n = parts.len();
+    debug_assert!(n >= 1 && n <= MAX_SHARDS);
+    let mut acc = [0.0f32; MAX_SHARDS];
+    for (k, p) in parts.iter().enumerate() {
+        acc[k] = p.data()[i];
+    }
+    let mut gap = 1;
+    while gap < n {
+        let mut k = 0;
+        while k + gap < n {
+            acc[k] += acc[k + gap];
+            k += 2 * gap;
+        }
+        gap *= 2;
+    }
+    acc[0]
+}
+
+/// Deterministic all-reduce: `out[i] = inv_scale · treeΣ_k parts[k][i]`.
+///
+/// The combine is elementwise, so the result is independent of how the
+/// output range is chunked across workers — thread count is picked by
+/// the usual work threshold and cannot change a single bit. A scale of
+/// exactly 1.0 skips the multiply, so the single-shard ring replays the
+/// raw gradient bits untouched.
+pub fn tree_reduce_into(parts: &[Tensor], out: &mut Tensor, inv_scale: f32) {
+    let len = parts.first().map_or(0, Tensor::len);
+    let threads = workers::unit_threads(parts.len() * len, len.div_ceil(4096));
+    tree_reduce_into_with_threads(parts, out, inv_scale, threads);
+}
+
+/// [`tree_reduce_into`] with an explicit worker count — exposed so the
+/// property fuzz can sweep thread counts and assert bitwise stability.
+pub fn tree_reduce_into_with_threads(
+    parts: &[Tensor],
+    out: &mut Tensor,
+    inv_scale: f32,
+    threads: usize,
+) {
+    assert!(
+        !parts.is_empty() && parts.len() <= MAX_SHARDS,
+        "all-reduce over {} parts (must be 1..={MAX_SHARDS})",
+        parts.len()
+    );
+    let len = parts[0].len();
+    for p in parts {
+        assert_eq!(p.len(), len, "all-reduce parts must have equal length");
+    }
+    out.resize(&[len]);
+    if len == 0 {
+        return;
+    }
+    let body = |off: usize, chunk: &mut [f32]| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            let v = combine_elem(parts, off + i);
+            *o = if inv_scale == 1.0 { v } else { v * inv_scale };
+        }
+    };
+    if threads <= 1 {
+        body(0, out.data_mut());
+    } else {
+        let chunk = len.div_ceil(threads);
+        workers::run_chunked(out.data_mut(), chunk, &|ci, c| body(ci * chunk, c));
+    }
+}
+
+// ---- flat weight codec --------------------------------------------------
+
+/// Flatten a network's parameters into one rank-1 tensor, in the v2
+/// checkpoint record order (layer stack order, `w` then `b`;
+/// parameter-free layers contribute their zero-length params
+/// uniformly). `out` is resized in place — pooled callers reuse storage.
+pub fn model_to_tensor(net: &Network, out: &mut Tensor) {
+    out.resize(&[net.num_params()]);
+    let d = out.data_mut();
+    let mut at = 0;
+    for nl in &net.layers {
+        for t in [&nl.w, &nl.b] {
+            d[at..at + t.len()].copy_from_slice(t.data());
+            at += t.len();
+        }
+    }
+    debug_assert_eq!(at, d.len());
+}
+
+/// Inverse of [`model_to_tensor`]: scatter a flat buffer back into the
+/// network's parameter tensors (shapes stay authoritative on the
+/// network side; only the value bits move).
+pub fn tensor_to_model(flat: &Tensor, net: &mut Network) -> Result<()> {
+    ensure!(
+        flat.len() == net.num_params(),
+        "flat weight buffer holds {} values but the network carries {} parameters",
+        flat.len(),
+        net.num_params()
+    );
+    let d = flat.data();
+    let mut at = 0;
+    for nl in &mut net.layers {
+        for t in [&mut nl.w, &mut nl.b] {
+            let n = t.len();
+            t.data_mut().copy_from_slice(&d[at..at + n]);
+            at += n;
+        }
+    }
+    Ok(())
+}
+
+// ---- staged-gradient codec ----------------------------------------------
+
+/// Total flat length of the gradients staged by the last iteration.
+fn staged_len(tr: &mut Trainer) -> usize {
+    let mut total = 0;
+    for i in 0..tr.pending_steps().len() {
+        let l = tr.pending_steps()[i].0;
+        let (dw, db) = tr.staged_grads_mut(l);
+        total += dw.len() + db.len();
+    }
+    total
+}
+
+/// Flatten the staged gradients into `out`, in event order (`dw` then
+/// `db` per event). Every lane runs the identical schedule, so the
+/// layout agrees across lanes without any header.
+fn staged_to_flat(tr: &mut Trainer, out: &mut Tensor) {
+    let total = staged_len(tr);
+    out.resize(&[total]);
+    let mut at = 0;
+    for i in 0..tr.pending_steps().len() {
+        let l = tr.pending_steps()[i].0;
+        let (dw, db) = tr.staged_grads_mut(l);
+        for t in [&*dw, &*db] {
+            out.data_mut()[at..at + t.len()].copy_from_slice(t.data());
+            at += t.len();
+        }
+    }
+    debug_assert_eq!(at, total);
+}
+
+/// Scatter the reduced mean back into the staged-gradient workspaces,
+/// ready for [`Trainer::apply_pending`].
+fn flat_to_staged(flat: &Tensor, tr: &mut Trainer) -> Result<()> {
+    let mut at = 0;
+    for i in 0..tr.pending_steps().len() {
+        let l = tr.pending_steps()[i].0;
+        let (dw, db) = tr.staged_grads_mut(l);
+        for t in [dw, db] {
+            let n = t.len();
+            ensure!(
+                at + n <= flat.len(),
+                "reduced gradient buffer too short: {} < {}",
+                flat.len(),
+                at + n
+            );
+            t.data_mut().copy_from_slice(&flat.data()[at..at + n]);
+            at += n;
+        }
+    }
+    ensure!(
+        at == flat.len(),
+        "reduced gradient buffer length {} != staged total {at}",
+        flat.len()
+    );
+    Ok(())
+}
+
+// ---- ring link ----------------------------------------------------------
+
+/// WeiPipe-style ping-pong buffer pair for one lane's gradient traffic.
+///
+/// Per iteration: `take_send` hands out the active buffer (the codec
+/// fills it, the channel ships it), the *same allocation* comes back
+/// carrying the reduced mean, `put_recv` parks it on the opposite slot
+/// and `pingpong` flips roles — so one allocation circulates
+/// indefinitely and the send slot is free for refill before the
+/// previous exchange has landed (the overlap window of the split-phase
+/// schedule). Steady state allocates nothing.
+pub struct RingLink {
+    bufs: [Tensor; 2],
+    idx: usize,
+}
+
+impl RingLink {
+    pub fn new() -> RingLink {
+        RingLink { bufs: [Tensor::empty(), Tensor::empty()], idx: 0 }
+    }
+
+    /// Take the send-side buffer (leaves an empty placeholder).
+    pub fn take_send(&mut self) -> Tensor {
+        std::mem::replace(&mut self.bufs[self.idx], Tensor::empty())
+    }
+
+    /// Park the returned (reduced) buffer on the recv side.
+    pub fn put_recv(&mut self, t: Tensor) {
+        self.bufs[1 - self.idx] = t;
+    }
+
+    /// Flip roles: the parked recv buffer becomes the next send buffer.
+    pub fn pingpong(&mut self) {
+        self.idx = 1 - self.idx;
+    }
+}
+
+impl Default for RingLink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---- lanes --------------------------------------------------------------
+
+/// One shard lane: a full deferred-step trainer plus its ring link.
+struct Lane {
+    trainer: Trainer,
+    link: RingLink,
+}
+
+/// The contiguous block of lanes hosted by one replica thread.
+struct LaneBlock {
+    lanes: Vec<Lane>,
+    /// Global index of `lanes[0]`.
+    first: usize,
+    /// Rows each lane takes from every global batch.
+    shard_rows: usize,
+}
+
+impl LaneBlock {
+    /// Phase 1 of the split-phase iteration: every owned lane runs one
+    /// trainer iteration on its shard of the global batch (`idx`, or a
+    /// drain tick when `None`), flattens its staged gradients into its
+    /// ring buffer and ships it via `ship(global_lane, buffer)`.
+    fn compute(
+        &mut self,
+        idx: Option<&[usize]>,
+        train: &Dataset,
+        mut ship: impl FnMut(usize, Tensor) -> Result<()>,
+    ) -> Result<()> {
+        for i in 0..self.lanes.len() {
+            let j = self.first + i;
+            let lane = &mut self.lanes[i];
+            let batch = match idx {
+                Some(idx) => {
+                    let shard = &idx[j * self.shard_rows..(j + 1) * self.shard_rows];
+                    let (mut x, mut oh) =
+                        lane.trainer.take_feed(shard.len(), train.input_dim(), train.classes);
+                    train.batch_into(shard, &mut x, &mut oh);
+                    Some((x, oh))
+                }
+                None => None,
+            };
+            lane.trainer.iteration(batch)?;
+            let mut buf = lane.link.take_send();
+            staged_to_flat(&mut lane.trainer, &mut buf);
+            ship(j, buf)?;
+        }
+        Ok(())
+    }
+
+    /// Phase 2: write the reduced mean back into lane `j`'s staged
+    /// workspaces, replay its deferred optimizer steps, and park the
+    /// buffer for the next iteration.
+    fn apply(&mut self, j: usize, reduced: Tensor) -> Result<()> {
+        let lane = &mut self.lanes[j - self.first];
+        flat_to_staged(&reduced, &mut lane.trainer)?;
+        lane.trainer.apply_pending();
+        lane.link.put_recv(reduced);
+        lane.link.pingpong();
+        Ok(())
+    }
+
+    /// Lockstep drain condition: identical schedules make every lane's
+    /// in-flight count agree, so checking lane 0 stands for the block —
+    /// and for every other block, with no communication.
+    fn in_flight(&self) -> usize {
+        self.lanes[0].trainer.in_flight()
+    }
+}
+
+/// Build one thread's lane block. Lane 0 consumes its build draws from
+/// the returned feed rng — the exact stock pattern (`Trainer::new` then
+/// `train` on one rng), so the single-lane ring replays the oracle's
+/// batch stream bit for bit. Extra lanes burn an identical-seed clone,
+/// keeping the feed-rng state independent of how many lanes this
+/// thread owns (replica-count invariance hinges on that).
+fn build_block(
+    backend: &Backend,
+    cfg: &ExperimentConfig,
+    spec: Option<&NetworkSpec>,
+    kind: StrategyKind,
+    first: usize,
+    count: usize,
+    shard_rows: usize,
+) -> Result<(LaneBlock, Rng)> {
+    let mut feed_rng = Rng::new(cfg.seed);
+    let mut lanes = Vec::with_capacity(count);
+    for i in 0..count {
+        let mut fresh = Rng::new(cfg.seed);
+        let rng = if i == 0 { &mut feed_rng } else { &mut fresh };
+        let mut trainer = match spec {
+            Some(sp) => Trainer::with_spec(backend.clone(), cfg, sp, kind, rng)?,
+            None => Trainer::new(backend.clone(), cfg, kind, rng)?,
+        };
+        trainer.set_defer_steps(true);
+        lanes.push(Lane { trainer, link: RingLink::new() });
+    }
+    // Broadcast lane 0's weights through the flat codec. Identical
+    // seeds make this a re-sync no-op, but it exercises the codec on
+    // every construction and guards against init drift.
+    if count > 1 {
+        let mut flat = Tensor::empty();
+        model_to_tensor(&lanes[0].trainer.net, &mut flat);
+        for lane in &mut lanes[1..] {
+            tensor_to_model(&flat, &mut lane.trainer.net)?;
+        }
+    }
+    Ok((LaneBlock { lanes, first, shard_rows }, feed_rng))
+}
+
+/// The shared epoch/drain loop every replica thread runs: feed
+/// `cfg.epochs` epochs of shuffled global batches (every thread draws
+/// the identical stream from its identically-seeded feed rng), then
+/// drain in lockstep until the pipelines empty. `exchange` performs one
+/// full split-phase iteration. Returns the feeding iteration count.
+fn run_lane_loop(
+    block: &mut LaneBlock,
+    data: &Splits,
+    cfg: &ExperimentConfig,
+    feed_rng: &mut Rng,
+    exchange: &mut dyn FnMut(&mut LaneBlock, Option<&[usize]>, &Dataset) -> Result<()>,
+) -> Result<u64> {
+    let mut iterations = 0u64;
+    for _ in 0..cfg.epochs {
+        let mut iter = BatchIter::new(&data.train, cfg.model.batch, feed_rng);
+        while let Some(idx) = iter.next_indices() {
+            exchange(block, Some(idx), &data.train)?;
+            iterations += 1;
+        }
+    }
+    while block.in_flight() > 0 {
+        exchange(block, None, &data.train)?;
+    }
+    Ok(iterations)
+}
+
+// ---- single-replica ring ------------------------------------------------
+
+/// The replicas == 1 ring: all shard lanes co-resident on the calling
+/// thread, exchange running in place (no channels, no spawns). This is
+/// both the fast path for `train_ring` at N=1 and a stepwise-drivable
+/// harness for the allocation-discipline test.
+pub struct LocalRing {
+    block: LaneBlock,
+    slots: Vec<Tensor>,
+    reduced: Tensor,
+    inv: f32,
+    feed_rng: Rng,
+}
+
+impl LocalRing {
+    pub fn new(
+        backend: &Backend,
+        cfg: &ExperimentConfig,
+        spec: Option<&NetworkSpec>,
+        kind: StrategyKind,
+        shards: usize,
+    ) -> Result<LocalRing> {
+        cfg.validate()?;
+        RingConfig::new(1, shards).validate(cfg.model.batch)?;
+        let shard_rows = cfg.model.batch / shards;
+        let (block, feed_rng) = build_block(backend, cfg, spec, kind, 0, shards, shard_rows)?;
+        Ok(LocalRing {
+            block,
+            slots: (0..shards).map(|_| Tensor::empty()).collect(),
+            reduced: Tensor::empty(),
+            inv: 1.0 / shards as f32,
+            feed_rng,
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Rows each lane takes from a global batch.
+    pub fn shard_rows(&self) -> usize {
+        self.block.shard_rows
+    }
+
+    /// The feed rng (positioned exactly as the stock trainer's rng after
+    /// construction) — drive `BatchIter` with it for oracle-identical
+    /// batch streams.
+    pub fn feed_rng(&mut self) -> &mut Rng {
+        &mut self.feed_rng
+    }
+
+    /// One global iteration: every lane computes on its shard of `idx`
+    /// (`None` = drain tick), gradients tree-reduce in place, and every
+    /// lane applies the identical mean. Allocation-free in steady state.
+    pub fn iteration(&mut self, idx: Option<&[usize]>, train: &Dataset) -> Result<()> {
+        let slots = &mut self.slots;
+        self.block.compute(idx, train, |j, buf| {
+            slots[j] = buf;
+            Ok(())
+        })?;
+        tree_reduce_into(&self.slots, &mut self.reduced, self.inv);
+        for j in 0..self.slots.len() {
+            let mut buf = std::mem::replace(&mut self.slots[j], Tensor::empty());
+            buf.copy_from(&self.reduced);
+            self.block.apply(j, buf)?;
+        }
+        Ok(())
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.block.in_flight()
+    }
+
+    /// Lane 0's parameters through the flat codec.
+    pub fn weights_flat(&self, out: &mut Tensor) {
+        model_to_tensor(&self.block.lanes[0].trainer.net, out);
+    }
+
+    /// Drift guard: every lane's parameters must stay bitwise equal to
+    /// lane 0's (they apply identical reduced gradients to identical
+    /// initial weights, so any divergence is a bug).
+    pub fn lanes_bitwise_equal(&self) -> bool {
+        let mut a = Tensor::empty();
+        let mut b = Tensor::empty();
+        model_to_tensor(&self.block.lanes[0].trainer.net, &mut a);
+        for lane in &self.block.lanes[1..] {
+            model_to_tensor(&lane.trainer.net, &mut b);
+            if a.data() != b.data() {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Test accuracy of lane 0 (all lanes are bitwise equal).
+    pub fn evaluate(&mut self, data: &Splits) -> Result<f32> {
+        self.block.lanes[0].trainer.evaluate(data)
+    }
+
+    /// Mean training loss observed by lane 0 over the whole run.
+    pub fn mean_loss(&self) -> f32 {
+        let losses = self.block.lanes[0].trainer.observed_losses();
+        if losses.is_empty() {
+            f32::NAN
+        } else {
+            losses.iter().sum::<f32>() / losses.len() as f32
+        }
+    }
+}
+
+// ---- full ring driver ---------------------------------------------------
+
+/// Outcome of a ring training run.
+#[derive(Debug)]
+pub struct RingReport {
+    pub replicas: usize,
+    pub shards: usize,
+    /// Feeding iterations (global batches consumed).
+    pub iterations: u64,
+    /// Training samples consumed (`iterations · batch`).
+    pub samples: u64,
+    pub seconds: f64,
+    pub samples_per_sec: f64,
+    /// Mean training loss over the whole run (lane 0).
+    pub train_loss: f32,
+    pub test_accuracy: f32,
+    /// Final parameters through the flat codec — bitwise comparable
+    /// across replica counts.
+    pub final_weights: Tensor,
+}
+
+/// Train `cfg.epochs` epochs on the weight ring and return the report.
+///
+/// Bits depend on `ring.shards` (and the usual cfg/seed/strategy), not
+/// on `ring.replicas`: rerunning with any replica count that divides
+/// the shard count yields a bitwise-identical `final_weights`.
+pub fn train_ring(
+    backend: &Backend,
+    cfg: &ExperimentConfig,
+    spec: Option<&NetworkSpec>,
+    kind: StrategyKind,
+    ring: &RingConfig,
+    data: &Splits,
+) -> Result<RingReport> {
+    cfg.validate()?;
+    ring.validate(cfg.model.batch)?;
+    ensure!(data.train.len() >= cfg.model.batch, "train split smaller than one global batch");
+    if ring.replicas == 1 {
+        return train_ring_local(backend, cfg, spec, kind, ring.shards, data);
+    }
+    train_ring_threaded(backend, cfg, spec, kind, ring, data)
+}
+
+fn train_ring_local(
+    backend: &Backend,
+    cfg: &ExperimentConfig,
+    spec: Option<&NetworkSpec>,
+    kind: StrategyKind,
+    shards: usize,
+    data: &Splits,
+) -> Result<RingReport> {
+    let mut ring = LocalRing::new(backend, cfg, spec, kind, shards)?;
+    let t0 = Instant::now();
+    let mut iterations = 0u64;
+    for _ in 0..cfg.epochs {
+        let mut iter = BatchIter::new(&data.train, cfg.model.batch, &mut ring.feed_rng);
+        while let Some(idx) = iter.next_indices() {
+            ring.iteration(Some(idx), &data.train)?;
+            iterations += 1;
+        }
+    }
+    while ring.in_flight() > 0 {
+        ring.iteration(None, &data.train)?;
+    }
+    let seconds = t0.elapsed().as_secs_f64();
+    ensure!(ring.lanes_bitwise_equal(), "replica lanes drifted (single-replica ring)");
+    let mut final_weights = Tensor::empty();
+    ring.weights_flat(&mut final_weights);
+    let test_accuracy = ring.evaluate(data)?;
+    finish_report(1, shards, iterations, cfg, seconds, ring.mean_loss(), test_accuracy, final_weights)
+}
+
+fn train_ring_threaded(
+    backend: &Backend,
+    cfg: &ExperimentConfig,
+    spec: Option<&NetworkSpec>,
+    kind: StrategyKind,
+    ring: &RingConfig,
+    data: &Splits,
+) -> Result<RingReport> {
+    let lanes_per = ring.lanes_per_replica();
+    let shard_rows = cfg.model.batch / ring.shards;
+    let inv = 1.0 / ring.shards as f32;
+
+    // Coordinator block (lanes 0..lanes_per) lives on the calling thread.
+    let (mut coord, mut coord_rng) =
+        build_block(backend, cfg, spec, kind, 0, lanes_per, shard_rows)?;
+    let mut slots: Vec<Tensor> = (0..ring.shards).map(|_| Tensor::empty()).collect();
+    let mut reduced = Tensor::empty();
+
+    let t0 = Instant::now();
+    let mut iterations = 0u64;
+    let worker_weights = std::thread::scope(|s| -> Result<Vec<(usize, Tensor)>> {
+        // Per-worker bounded channels: gradients up, reduced means back.
+        // Bounded std channels are array-based, so steady-state sends
+        // allocate nothing; capacity lanes_per makes phase-1 sends
+        // non-blocking, which is what keeps the lockstep deadlock-free.
+        let mut grads_rxs = Vec::with_capacity(ring.replicas - 1);
+        let mut resp_txs = Vec::with_capacity(ring.replicas - 1);
+        let mut handles = Vec::with_capacity(ring.replicas - 1);
+        for r in 1..ring.replicas {
+            let (gtx, grx) = sync_channel::<(usize, Tensor)>(lanes_per);
+            let (rtx, rrx) = sync_channel::<(usize, Tensor)>(lanes_per);
+            grads_rxs.push(grx);
+            resp_txs.push(rtx);
+            let first = r * lanes_per;
+            handles.push(s.spawn(move || -> Result<Vec<(usize, Tensor)>> {
+                let (mut block, mut rng) =
+                    build_block(backend, cfg, spec, kind, first, lanes_per, shard_rows)?;
+                let mut step = |block: &mut LaneBlock,
+                                idx: Option<&[usize]>,
+                                train: &Dataset|
+                 -> Result<()> {
+                    block.compute(idx, train, |j, buf| {
+                        gtx.send((j, buf)).map_err(|_| anyhow!("ring torn down (coordinator gone)"))
+                    })?;
+                    for _ in 0..block.lanes.len() {
+                        let (j, buf) = rrx
+                            .recv()
+                            .map_err(|_| anyhow!("ring torn down (coordinator gone)"))?;
+                        block.apply(j, buf)?;
+                    }
+                    Ok(())
+                };
+                run_lane_loop(&mut block, data, cfg, &mut rng, &mut step)?;
+                Ok(block
+                    .lanes
+                    .iter()
+                    .enumerate()
+                    .map(|(i, lane)| {
+                        let mut flat = Tensor::empty();
+                        model_to_tensor(&lane.trainer.net, &mut flat);
+                        (first + i, flat)
+                    })
+                    .collect())
+            }));
+        }
+
+        let mut step = |block: &mut LaneBlock,
+                        idx: Option<&[usize]>,
+                        train: &Dataset|
+         -> Result<()> {
+            block.compute(idx, train, |j, buf| {
+                slots[j] = buf;
+                Ok(())
+            })?;
+            for rx in &grads_rxs {
+                for _ in 0..lanes_per {
+                    let (j, buf) =
+                        rx.recv().map_err(|_| anyhow!("ring torn down (worker died)"))?;
+                    slots[j] = buf;
+                }
+            }
+            tree_reduce_into(&slots, &mut reduced, inv);
+            for j in 0..slots.len() {
+                let mut buf = std::mem::replace(&mut slots[j], Tensor::empty());
+                buf.copy_from(&reduced);
+                if j < lanes_per {
+                    block.apply(j, buf)?;
+                } else {
+                    resp_txs[j / lanes_per - 1]
+                        .send((j, buf))
+                        .map_err(|_| anyhow!("ring torn down (worker died)"))?;
+                }
+            }
+            Ok(())
+        };
+        let coord_result = run_lane_loop(&mut coord, data, cfg, &mut coord_rng, &mut step);
+        drop(step);
+        // Close the channels so any worker still blocked in the torn-down
+        // case unblocks, then surface the most specific error available.
+        drop(grads_rxs);
+        drop(resp_txs);
+        let mut weights = Vec::with_capacity(ring.shards - lanes_per);
+        let mut worker_err = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(w)) => weights.extend(w),
+                Ok(Err(e)) => worker_err = Some(e),
+                Err(_) => worker_err = Some(anyhow!("replica worker panicked")),
+            }
+        }
+        if let Some(e) = worker_err {
+            return Err(e);
+        }
+        iterations = coord_result?;
+        Ok(weights)
+    })?;
+    let seconds = t0.elapsed().as_secs_f64();
+
+    // Drift guard, now across threads: every lane must agree bitwise.
+    let mut final_weights = Tensor::empty();
+    model_to_tensor(&coord.lanes[0].trainer.net, &mut final_weights);
+    let mut tmp = Tensor::empty();
+    for lane in &coord.lanes[1..] {
+        model_to_tensor(&lane.trainer.net, &mut tmp);
+        ensure!(tmp.data() == final_weights.data(), "replica lanes drifted (coordinator block)");
+    }
+    for (j, w) in &worker_weights {
+        ensure!(
+            w.data() == final_weights.data(),
+            "replica lane {j} drifted from lane 0 — all-reduce determinism violated"
+        );
+    }
+
+    let test_accuracy = coord.lanes[0].trainer.evaluate(data)?;
+    let losses = coord.lanes[0].trainer.observed_losses();
+    let train_loss = if losses.is_empty() {
+        f32::NAN
+    } else {
+        losses.iter().sum::<f32>() / losses.len() as f32
+    };
+    finish_report(
+        ring.replicas,
+        ring.shards,
+        iterations,
+        cfg,
+        seconds,
+        train_loss,
+        test_accuracy,
+        final_weights,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn finish_report(
+    replicas: usize,
+    shards: usize,
+    iterations: u64,
+    cfg: &ExperimentConfig,
+    seconds: f64,
+    train_loss: f32,
+    test_accuracy: f32,
+    final_weights: Tensor,
+) -> Result<RingReport> {
+    let samples = iterations * cfg.model.batch as u64;
+    let samples_per_sec = samples as f64 / seconds.max(1e-9);
+    crate::log_info!(
+        "[ring x{replicas}/{shards}] {iterations} iters, {samples} samples in {seconds:.2}s \
+         ({samples_per_sec:.0} samples/s), loss {train_loss:.4} acc {test_accuracy:.4}"
+    );
+    Ok(RingReport {
+        replicas,
+        shards,
+        iterations,
+        samples,
+        seconds,
+        samples_per_sec,
+        train_loss,
+        test_accuracy,
+        final_weights,
+    })
+}
+
+// Unit tests for the pure pieces; ring-vs-oracle equivalence and the
+// thread-count sweeps live in rust/tests/ (integration + property).
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn largest_divisor_clamps_to_divisors() {
+        assert_eq!(largest_divisor_leq(8, 8), 8);
+        assert_eq!(largest_divisor_leq(8, 5), 4);
+        assert_eq!(largest_divisor_leq(8, 3), 2);
+        assert_eq!(largest_divisor_leq(8, 1), 1);
+        assert_eq!(largest_divisor_leq(6, 4), 3);
+        assert_eq!(largest_divisor_leq(1, 64), 1);
+    }
+
+    #[test]
+    fn ring_config_validation() {
+        assert!(RingConfig::new(2, 8).validate(32).is_ok());
+        assert!(RingConfig::new(0, 8).validate(32).is_err()); // replicas < 1
+        assert!(RingConfig::new(3, 8).validate(32).is_err()); // 3 ∤ 8
+        assert!(RingConfig::new(16, 8).validate(32).is_err()); // replicas > shards
+        assert!(RingConfig::new(1, 5).validate(32).is_err()); // 5 ∤ 32
+        assert!(RingConfig::new(1, 0).validate(32).is_err()); // shards < 1
+        assert!(RingConfig::new(1, MAX_SHARDS + 1).validate(4 * (MAX_SHARDS + 1)).is_err());
+    }
+
+    /// Reference combine: the same gap-doubling recursion written as
+    /// plain recursion over index ranges.
+    fn reference_combine(vals: &[f32]) -> f32 {
+        fn tree(vals: &[f32], lo: usize, n: usize, span: usize) -> f32 {
+            if span == 1 {
+                return vals[lo];
+            }
+            let half = span / 2;
+            let left = tree(vals, lo, n, half);
+            if lo + half < n {
+                left + tree(vals, lo + half, n, half)
+            } else {
+                left
+            }
+        }
+        let span = vals.len().next_power_of_two();
+        tree(vals, 0, vals.len(), span)
+    }
+
+    #[test]
+    fn tree_reduce_matches_reference_order() {
+        for n in 1..=9usize {
+            let parts: Vec<Tensor> = (0..n)
+                .map(|k| Tensor::from_vec(&[3], vec![0.1 + k as f32, -2.5 * k as f32, 1e-3]))
+                .collect();
+            let mut out = Tensor::empty();
+            tree_reduce_into_with_threads(&parts, &mut out, 1.0, 1);
+            for i in 0..3 {
+                let vals: Vec<f32> = parts.iter().map(|p| p.data()[i]).collect();
+                assert_eq!(out.data()[i].to_bits(), reference_combine(&vals).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn tree_reduce_identity_at_single_part() {
+        let p = Tensor::from_vec(&[4], vec![1.5, -0.25, 3.75, f32::MIN_POSITIVE]);
+        let mut out = Tensor::empty();
+        tree_reduce_into(std::slice::from_ref(&p), &mut out, 1.0);
+        assert_eq!(out.data(), p.data());
+    }
+
+    #[test]
+    fn ring_link_circulates_one_allocation() {
+        let mut link = RingLink::new();
+        let mut t = link.take_send();
+        t.resize(&[4]);
+        t.fill(7.0);
+        let ptr = t.data().as_ptr();
+        link.put_recv(t);
+        link.pingpong();
+        let t2 = link.take_send();
+        assert_eq!(t2.data().as_ptr(), ptr, "ping-pong must hand back the parked allocation");
+        assert_eq!(t2.data(), &[7.0; 4]);
+        link.put_recv(t2);
+        link.pingpong();
+        assert_eq!(link.take_send().data().as_ptr(), ptr);
+    }
+
+    #[test]
+    fn weight_codec_roundtrips() {
+        let mcfg = ModelConfig {
+            batch: 8,
+            input_dim: 6,
+            hidden_dim: 5,
+            classes: 4,
+            layers: 3,
+            init_scale: 1.0,
+        };
+        let mut rng = Rng::new(11);
+        let mut net = Network::build(&NetworkSpec::mlp(&mcfg), &mut rng).unwrap();
+        let mut flat = Tensor::empty();
+        model_to_tensor(&net, &mut flat);
+        assert_eq!(flat.len(), net.num_params());
+        let golden = flat.clone();
+        for nl in &mut net.layers {
+            nl.w.fill(0.0);
+            nl.b.fill(0.0);
+        }
+        tensor_to_model(&golden, &mut net).unwrap();
+        model_to_tensor(&net, &mut flat);
+        assert_eq!(flat.data(), golden.data());
+
+        let short = Tensor::zeros(&[golden.len() - 1]);
+        assert!(tensor_to_model(&short, &mut net).is_err());
+    }
+}

@@ -26,10 +26,12 @@
 //! - **Batcher.** A [`Coalescer`] (pure, property-fuzzed) greedily packs
 //!   whole requests — never splitting one — into batches of at most
 //!   `max_batch` rows, flushing a partial batch after `max_wait_ticks`
-//!   idle ticks (one tick = [`BATCH_TICK`] without traffic). Batches
-//!   materialize into pooled, zero-padded `[max_batch, in_dim]` tensors
-//!   riding recycled [`Packet`]s, so steady-state batching allocates
-//!   nothing.
+//!   idle ticks (one tick = [`BATCH_TICK`] without traffic), and — with
+//!   `shrink_under > 0` — emitting a queue-emptying small batch
+//!   immediately (low-occupancy shrink: idle-traffic requests skip the
+//!   coalescing wait). Batches materialize into pooled, zero-padded
+//!   `[max_batch, in_dim]` tensors riding recycled [`Packet`]s, so
+//!   steady-state batching allocates nothing.
 //! - **Stage workers.** `stages` OS threads, layers split by
 //!   *forward-cost*-balanced [`StagePartition`] (serving has no backward
 //!   lane, so boundaries balance `fwd_flops` alone). Each stage owns its
@@ -85,6 +87,14 @@ pub struct ServerConfig {
     /// Idle ticks ([`BATCH_TICK`] each) a partial batch waits before
     /// flushing; `0` flushes on every batcher poll (lowest latency).
     pub max_wait_ticks: u64,
+    /// Low-occupancy batch shrink: when the queue would be *emptied* by
+    /// the next batch and that batch holds at most this many rows, emit
+    /// it immediately instead of waiting out `max_wait_ticks` — under
+    /// idle traffic a lone request stops paying the coalescing wait
+    /// (p99 relief), while any backlog (more pending than the prefix)
+    /// still coalesces normally. `0` disables shrinking (the default:
+    /// bit-for-bit the pre-knob behavior).
+    pub shrink_under: usize,
     /// Bound of the request queue and each inter-stage channel
     /// (per-client response channels are unbounded by design — see the
     /// module docs).
@@ -95,7 +105,7 @@ pub struct ServerConfig {
 
 impl Default for ServerConfig {
     fn default() -> ServerConfig {
-        ServerConfig { max_batch: 32, max_wait_ticks: 4, queue_depth: 64, stages: 2 }
+        ServerConfig { max_batch: 32, max_wait_ticks: 4, shrink_under: 0, queue_depth: 64, stages: 2 }
     }
 }
 
@@ -103,6 +113,12 @@ impl ServerConfig {
     fn validate(&self, layers: usize) -> Result<()> {
         ensure!(self.max_batch >= 1, "max_batch must be positive");
         ensure!(self.queue_depth >= 1, "queue_depth must be positive");
+        ensure!(
+            self.shrink_under <= self.max_batch,
+            "shrink_under {} exceeds max_batch {}",
+            self.shrink_under,
+            self.max_batch
+        );
         ensure!(
             self.stages >= 1 && self.stages <= layers,
             "stages {} outside 1..={layers}",
@@ -156,13 +172,24 @@ pub struct Response {
 pub struct Coalescer {
     max_batch: usize,
     max_wait_ticks: u64,
+    /// Low-occupancy shrink threshold (`0` = off) — see
+    /// [`ServerConfig::shrink_under`].
+    shrink_under: usize,
     queue: VecDeque<Request>,
     waited: u64,
 }
 
 impl Coalescer {
     pub fn new(max_batch: usize, max_wait_ticks: u64) -> Coalescer {
-        Coalescer { max_batch, max_wait_ticks, queue: VecDeque::new(), waited: 0 }
+        Self::with_shrink(max_batch, max_wait_ticks, 0)
+    }
+
+    /// [`Coalescer::new`] with the low-occupancy shrink rule enabled:
+    /// a queue-emptying prefix of ≤ `shrink_under` rows is emitted
+    /// immediately, skipping the idle-tick wait.
+    pub fn with_shrink(max_batch: usize, max_wait_ticks: u64, shrink_under: usize) -> Coalescer {
+        debug_assert!(shrink_under <= max_batch);
+        Coalescer { max_batch, max_wait_ticks, shrink_under, queue: VecDeque::new(), waited: 0 }
     }
 
     /// Enqueue a request (`rows` must already be validated ≤ max_batch).
@@ -217,7 +244,12 @@ impl Coalescer {
         }
         debug_assert!(n >= 1, "a single request always fits");
         let full = rows == self.max_batch || n < self.queue.len();
-        if full || force || self.waited >= self.max_wait_ticks {
+        // Low-occupancy shrink: the prefix drains the whole queue and is
+        // small — nothing is coming that it could coalesce with, so
+        // waiting only adds latency. Never splits/drops/reorders (same
+        // greedy prefix, emitted earlier).
+        let shrank = self.shrink_under > 0 && n == self.queue.len() && rows <= self.shrink_under;
+        if full || shrank || force || self.waited >= self.max_wait_ticks {
             self.waited = 0;
             out.extend(self.queue.drain(..n));
             true
@@ -440,11 +472,12 @@ impl Server {
             in_dim: net.input_dim(),
         };
         let max_wait = cfg.max_wait_ticks;
+        let shrink_under = cfg.shrink_under;
         let closing_b = Arc::clone(&closing);
         threads.push(
             std::thread::Builder::new()
                 .name("serve-batcher".into())
-                .spawn(move || batcher_loop(req_rx, ctx, max_wait, closing_b))
+                .spawn(move || batcher_loop(req_rx, ctx, max_wait, shrink_under, closing_b))
                 .expect("spawn batcher"),
         );
         for (s, ops) in stage_ops.into_iter().enumerate() {
@@ -900,9 +933,10 @@ fn batcher_loop(
     rx: Receiver<Inbound>,
     ctx: BatcherCtx,
     max_wait_ticks: u64,
+    shrink_under: usize,
     closing: Arc<AtomicBool>,
 ) {
-    let mut co = Coalescer::new(ctx.max_batch, max_wait_ticks);
+    let mut co = Coalescer::with_shrink(ctx.max_batch, max_wait_ticks, shrink_under);
     let mut scratch: Vec<Request> = Vec::new();
     'serve: loop {
         // Fallback exit for drop-without-shutdown (no marker was sent):
@@ -1097,11 +1131,38 @@ mod tests {
     }
 
     #[test]
+    fn coalescer_shrinks_queue_emptying_small_batches() {
+        // shrink_under 2: a lone small request flushes with zero ticks…
+        let mut co = Coalescer::with_shrink(8, 1_000, 2);
+        co.push(req(2, 0));
+        let b = co.take_ready(false).expect("queue-emptying small batch flushes immediately");
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].seq, 0);
+        // …a bigger-than-threshold prefix still waits…
+        co.push(req(3, 1));
+        assert!(co.take_ready(false).is_none(), "above shrink_under: normal coalescing");
+        // …and a backlog behind the prefix disables the shrink (the
+        // prefix would not empty the queue), even if the prefix is small.
+        let mut co = Coalescer::with_shrink(4, 1_000, 4);
+        co.push(req(3, 0));
+        co.push(req(3, 1));
+        let b = co.take_ready(false).expect("overflow closes the batch as before");
+        assert_eq!((b.len(), b[0].seq), (1, 0));
+        assert_eq!(co.pending_rows(), 3);
+        let b = co.take_ready(false).expect("remainder now empties the queue → shrink");
+        assert_eq!((b.len(), b[0].seq), (1, 1));
+        // shrink_under 0 is exactly the old behavior.
+        let mut co = Coalescer::new(8, 5);
+        co.push(req(1, 0));
+        assert!(co.take_ready(false).is_none(), "shrink disabled by default");
+    }
+
+    #[test]
     fn roundtrip_matches_forward_full_bitwise_in_fifo_order() {
         let net = tiny_net(5);
         let mut oracle = net.snapshot().unwrap();
         let be = HostBackend::new();
-        let cfg = ServerConfig { max_batch: 6, max_wait_ticks: 1, queue_depth: 16, stages: 2 };
+        let cfg = ServerConfig { max_batch: 6, max_wait_ticks: 1, shrink_under: 0, queue_depth: 16, stages: 2 };
         let server = Server::start(host(), &net, &cfg).unwrap();
         assert_eq!(server.partition().stages(), 2);
         let mut cl = server.client();
@@ -1133,7 +1194,7 @@ mod tests {
         let net1 = tiny_net(6);
         let mut oracle1 = net1.snapshot().unwrap();
         let be = HostBackend::new();
-        let cfg = ServerConfig { max_batch: 4, max_wait_ticks: 0, queue_depth: 8, stages: 1 };
+        let cfg = ServerConfig { max_batch: 4, max_wait_ticks: 0, shrink_under: 0, queue_depth: 8, stages: 1 };
         let server = Server::start(host(), &net0, &cfg).unwrap();
         assert_eq!(server.epoch(), 0);
         assert_eq!(server.reload(&net1).unwrap(), 1);
@@ -1152,7 +1213,7 @@ mod tests {
     #[test]
     fn reload_rejects_architecture_mismatch() {
         let net = tiny_net(5);
-        let cfg = ServerConfig { max_batch: 2, max_wait_ticks: 0, queue_depth: 4, stages: 1 };
+        let cfg = ServerConfig { max_batch: 2, max_wait_ticks: 0, shrink_under: 0, queue_depth: 4, stages: 1 };
         let server = Server::start(host(), &net, &cfg).unwrap();
         let other_cfg =
             ModelConfig { batch: 8, input_dim: 12, hidden_dim: 11, classes: 4, layers: 3, init_scale: 1.0 };
@@ -1165,7 +1226,7 @@ mod tests {
     #[test]
     fn submit_validates_shapes_and_errors_after_shutdown() {
         let net = tiny_net(5);
-        let cfg = ServerConfig { max_batch: 4, max_wait_ticks: 0, queue_depth: 4, stages: 1 };
+        let cfg = ServerConfig { max_batch: 4, max_wait_ticks: 0, shrink_under: 0, queue_depth: 4, stages: 1 };
         let server = Server::start(host(), &net, &cfg).unwrap();
         let mut cl = server.client();
         assert!(cl.submit(Tensor::zeros(&[2, 11])).is_err(), "wrong width");
@@ -1183,7 +1244,7 @@ mod tests {
         let net = tiny_net(5);
         // Large wait budget: without the shutdown drain these would sit
         // in a partial batch forever.
-        let cfg = ServerConfig { max_batch: 8, max_wait_ticks: 1_000_000, queue_depth: 8, stages: 2 };
+        let cfg = ServerConfig { max_batch: 8, max_wait_ticks: 1_000_000, shrink_under: 0, queue_depth: 8, stages: 2 };
         let server = Server::start(host(), &net, &cfg).unwrap();
         let mut cl = server.client();
         let x = Tensor::randn(&[2, 12], 1.0, &mut Rng::new(4));

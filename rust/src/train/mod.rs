@@ -266,6 +266,20 @@ pub struct Trainer {
     /// Emptied activation-chain Vecs from retired batches, reused by the
     /// forward lane.
     spare_chains: Vec<Vec<Tensor>>,
+    /// Ring mode ([`crate::replica`]): hold every optimizer step of the
+    /// current iteration until [`Trainer::apply_pending`], so the staged
+    /// gradients can be all-reduced across replica lanes first. Safe to
+    /// stage in the per-layer `dw_buf`/`db_buf` workspaces because each
+    /// layer backwards at most once per iteration (`t0 + d_l = t` has at
+    /// most one solution per layer), and bit-identical to immediate
+    /// stepping because within one iteration no event reads another
+    /// layer's post-step weights (each event touches only its own
+    /// layer's parameters; cross-event dataflow is the `dx`→`dy` chain,
+    /// which never reads weights of already-stepped layers).
+    defer_steps: bool,
+    /// Deferred `(layer, lr)` steps of the current iteration, in event
+    /// order (the order immediate stepping would have used).
+    pending: Vec<(usize, f32)>,
 }
 
 impl Trainer {
@@ -341,6 +355,8 @@ impl Trainer {
             pool: BufferPool::new(),
             bwd_scratch: Tensor::empty(),
             spare_chains: Vec::new(),
+            defer_steps: false,
+            pending: Vec::new(),
         })
     }
 
@@ -503,17 +519,91 @@ impl Trainer {
         // Apply immediately: the gradient lands d_l iterations after
         // launch, exactly the Eq. 1 staleness. Parameter-free layers
         // carry zero-length params — their step is a uniform no-op.
+        // In ring mode the step is queued instead: the staged gradient
+        // stays in `dw_buf`/`db_buf` until the all-reduce hands back the
+        // cross-lane mean and `apply_pending` replays the queue in this
+        // exact event order.
         let lr = self.lr.lr(t_now);
-        let state = &mut self.layers[l];
-        let layer = &mut self.net.layers[l];
-        let upd_w = state.opt_w.step(&mut layer.w, &state.dw_buf, lr);
-        state.strategy.on_update(upd_w);
-        state.opt_b.step(&mut layer.b, &state.db_buf, lr);
+        if self.defer_steps {
+            debug_assert!(
+                self.pending.iter().all(|&(pl, _)| pl != l),
+                "layer {l} staged twice in one iteration (apply_pending not called?)"
+            );
+            self.pending.push((l, lr));
+        } else {
+            let state = &mut self.layers[l];
+            let layer = &mut self.net.layers[l];
+            let upd_w = state.opt_w.step(&mut layer.w, &state.dw_buf, lr);
+            state.strategy.on_update(upd_w);
+            state.opt_b.step(&mut layer.b, &state.db_buf, lr);
+        }
 
         let rec = &mut self.inflight[idx];
         rec.dy = Some(dx);
         rec.next_bwd = if l == 0 { None } else { Some(l - 1) };
         Ok(())
+    }
+
+    // ---- replica-ring hooks (crate-internal; see `crate::replica`) ------
+
+    /// Switch optimizer stepping between immediate (stock) and deferred
+    /// (ring) mode. With deferral on, each `iteration` stages its
+    /// gradients in the per-layer workspaces and queues `(layer, lr)`
+    /// records; the caller must exchange/reduce the staged gradients and
+    /// call [`Trainer::apply_pending`] before the next `iteration`.
+    pub(crate) fn set_defer_steps(&mut self, on: bool) {
+        self.defer_steps = on;
+    }
+
+    /// The `(layer, lr)` optimizer steps staged by the last iteration,
+    /// in event order.
+    pub(crate) fn pending_steps(&self) -> &[(usize, f32)] {
+        &self.pending
+    }
+
+    /// Mutable access to layer `l`'s staged gradient workspaces, so the
+    /// ring codec can flatten them out and write the reduced mean back.
+    pub(crate) fn staged_grads_mut(&mut self, l: usize) -> (&mut Tensor, &mut Tensor) {
+        let state = &mut self.layers[l];
+        (&mut state.dw_buf, &mut state.db_buf)
+    }
+
+    /// Replay the deferred optimizer steps in the exact order immediate
+    /// stepping would have used. Bit-identical to stock stepping when
+    /// the staged gradients are untouched (the single-lane oracle);
+    /// in the ring they hold the cross-lane mean by the time this runs.
+    pub(crate) fn apply_pending(&mut self) {
+        // Indexed loop (entries are Copy): the queue Vec is cleared, not
+        // dropped, so its capacity is reused — the steady-state ring
+        // loop stays allocation-free.
+        for i in 0..self.pending.len() {
+            let (l, lr) = self.pending[i];
+            let state = &mut self.layers[l];
+            let layer = &mut self.net.layers[l];
+            let upd_w = state.opt_w.step(&mut layer.w, &state.dw_buf, lr);
+            state.strategy.on_update(upd_w);
+            state.opt_b.step(&mut layer.b, &state.db_buf, lr);
+        }
+        self.pending.clear();
+    }
+
+    /// Number of batches still in the pipeline — the ring's lockstep
+    /// drain condition (identical schedules make it agree across lanes).
+    pub(crate) fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Pooled feed buffers for external batch drivers (the replica
+    /// ring): same closed take→recycle loop as [`Trainer::train`] — the
+    /// batch tensors return to this pool when the batch retires.
+    pub(crate) fn take_feed(&mut self, rows: usize, d: usize, classes: usize) -> (Tensor, Tensor) {
+        (self.pool.take(&[rows, d]), self.pool.take(&[rows, classes]))
+    }
+
+    /// Losses observed so far (at backward time). The ring reports the
+    /// mean over the whole run instead of per-epoch slices.
+    pub(crate) fn observed_losses(&self) -> &[f32] {
+        &self.epoch_losses
     }
 
     /// Drain: run delay-only iterations until every in-flight batch has

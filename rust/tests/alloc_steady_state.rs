@@ -207,7 +207,7 @@ fn steady_state_iterations_allocate_near_zero() {
         let server = Server::start(
             backend,
             &net,
-            &ServerConfig { max_batch: 8, max_wait_ticks: 0, queue_depth: 16, stages: 2 },
+            &ServerConfig { max_batch: 8, max_wait_ticks: 0, shrink_under: 0, queue_depth: 16, stages: 2 },
         )
         .unwrap();
         let mut cl = server.client();
@@ -260,5 +260,57 @@ fn steady_state_iterations_allocate_near_zero() {
             "packet ring grew in steady state (batch tensors not circulating)"
         );
         server.shutdown().unwrap();
+    }
+
+    // ---- replica ring path (compute -> reduce -> apply) ----------------
+    //
+    // The same discipline for the weight ring: shard feeds come from
+    // each lane's buffer pool (`take_feed`), staged gradients flatten
+    // into ring-link buffers that circulate as exactly one allocation
+    // per lane (take_send -> slot -> reduced copy -> put_recv), the
+    // reduce tree writes a persistent output tensor, and deferred-step
+    // replay clears (never drops) its pending list. A full global
+    // iteration — every lane's forward + delayed backwards + reduce +
+    // optimizer replay — must allocate (near-)nothing once warm.
+    {
+        use layerpipe2::replica::LocalRing;
+
+        let mut rcfg = ExperimentConfig { epochs: 1, ..ExperimentConfig::default() };
+        rcfg.model.batch = 16;
+        rcfg.model.input_dim = 24;
+        rcfg.model.hidden_dim = 24;
+        rcfg.model.classes = 4;
+        rcfg.model.layers = 4;
+        rcfg.pipeline.stages = 2;
+        rcfg.data.train_samples = 64;
+        rcfg.data.test_samples = 32;
+        let rdata = teacher_dataset(&rcfg.model, &rcfg.data);
+
+        let backend: Backend = Arc::new(HostBackend::new());
+        let mut ring =
+            LocalRing::new(&backend, &rcfg, None, StrategyKind::PipelineAwareEma, 2).unwrap();
+        // A fixed global batch, indices allocated outside the counted
+        // region — feeding data is the loader's cost.
+        let idx: Vec<usize> = (0..rcfg.model.batch).collect();
+
+        let prime = 32usize;
+        let measure = 32usize;
+        for _ in 0..prime {
+            ring.iteration(Some(&idx), &rdata.train).unwrap();
+        }
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for _ in 0..measure {
+            ring.iteration(Some(&idx), &rdata.train).unwrap();
+        }
+        let total = ALLOCS.load(Ordering::Relaxed) - before;
+        let per_iter = total as f64 / measure as f64;
+        println!("ring: {total} allocs over {measure} global iters = {per_iter:.2}/iter");
+        assert!(
+            per_iter <= 4.0,
+            "ring hot path regressed to {per_iter:.2} allocs/iter (expected \
+             (near-)zero: pooled shard feeds, ping-pong ring links, persistent \
+             reduce output, cleared-not-dropped pending steps)"
+        );
+        assert!(ring.lanes_bitwise_equal(), "ring lanes drifted during the alloc test");
     }
 }

@@ -1,0 +1,212 @@
+//! Integration: weight-ring replica parallelism under the determinism
+//! contract.
+//!
+//! The acceptance bar of the replica-ring PR:
+//!  - `train_ring` produces **bitwise identical** final weights for
+//!    every replica count that divides the shard count — for all five
+//!    weight-handling strategies of Fig. 5 (the reduce tree is a pure
+//!    function of the shard decomposition, never of thread placement
+//!    or arrival order);
+//!  - the degenerate ring (1 replica, 1 shard) replays the stock
+//!    `Trainer` bit for bit: deferring optimizer steps to the end of
+//!    the iteration and pushing gradients through the flat ring codec
+//!    changes nothing;
+//!  - the ring composes with the heterogeneous layer zoo (conv + pool +
+//!    dense specs train through `Trainer::with_spec` lanes).
+//!
+//! Everything runs on the host backend so a clean checkout exercises
+//! the full machinery.
+
+use layerpipe2::backend::{Backend, HostBackend};
+use layerpipe2::config::{DataConfig, ExperimentConfig};
+use layerpipe2::data::{image_teacher_dataset, teacher_dataset, BatchIter, Splits};
+use layerpipe2::layers::{Feature, LayerSpec, NetworkSpec};
+use layerpipe2::replica::{model_to_tensor, train_ring, RingConfig, RingReport};
+use layerpipe2::strategy::StrategyKind;
+use layerpipe2::tensor::Tensor;
+use layerpipe2::train::Trainer;
+use layerpipe2::util::Rng;
+use std::sync::Arc;
+
+fn host() -> Backend {
+    Arc::new(HostBackend::new())
+}
+
+/// Small dense workload: 8 iterations/epoch x 2 epochs, batch 8.
+fn dense_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model.batch = 8;
+    cfg.model.input_dim = 10;
+    cfg.model.hidden_dim = 16;
+    cfg.model.classes = 3;
+    cfg.model.layers = 4;
+    cfg.pipeline.stages = 2;
+    cfg.epochs = 2;
+    cfg.seed = 33;
+    cfg.data = DataConfig {
+        train_samples: 64,
+        test_samples: 16,
+        teacher_hidden: 12,
+        label_noise: 0.0,
+        seed: 99,
+    };
+    cfg
+}
+
+fn bits_equal(a: &Tensor, b: &Tensor) -> bool {
+    a.len() == b.len()
+        && a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn run(cfg: &ExperimentConfig, kind: StrategyKind, replicas: usize, shards: usize, data: &Splits) -> RingReport {
+    let ring = RingConfig::new(replicas, shards);
+    train_ring(&host(), cfg, None, kind, &ring, data).expect("ring run")
+}
+
+/// Replica-count invariance, for every strategy: spreading the fixed
+/// shard lanes over 1, 2 or 4 threads must not change a single bit of
+/// the final weights.
+#[test]
+fn replica_counts_bitwise_identical_for_all_strategies() {
+    let cfg = dense_cfg();
+    let data = teacher_dataset(&cfg.model, &cfg.data);
+    let shards = 4usize;
+    for &kind in StrategyKind::all() {
+        let oracle = run(&cfg, kind, 1, shards, &data);
+        assert!(oracle.iterations > 0, "{}: ring fed no batches", kind.name());
+        for replicas in [2usize, 4] {
+            let r = run(&cfg, kind, replicas, shards, &data);
+            assert_eq!(
+                r.iterations,
+                oracle.iterations,
+                "{}: iteration count changed with replica count",
+                kind.name()
+            );
+            assert!(
+                bits_equal(&r.final_weights, &oracle.final_weights),
+                "{}: final weights at {} replicas differ from the single-replica oracle",
+                kind.name(),
+                replicas
+            );
+        }
+    }
+}
+
+/// The degenerate ring — one replica, one shard — is the stock trainer
+/// with extra plumbing (deferred steps, flat codec, identity reduce);
+/// the plumbing must be bit-free. The oracle feeds a stock `Trainer`
+/// by hand with the exact ring schedule: build and feed from one rng,
+/// iterate every shuffled batch, drain at the very end.
+#[test]
+fn single_lane_ring_replays_stock_trainer_bitwise() {
+    let cfg = dense_cfg();
+    let data = teacher_dataset(&cfg.model, &cfg.data);
+    for kind in [StrategyKind::Sequential, StrategyKind::Stashing, StrategyKind::PipelineAwareEma] {
+        let mut rng = Rng::new(cfg.seed);
+        let mut oracle = Trainer::new(host(), &cfg, kind, &mut rng).expect("oracle init");
+        for _ in 0..cfg.epochs {
+            let mut iter = BatchIter::new(&data.train, cfg.model.batch, &mut rng);
+            while let Some(idx) = iter.next_indices() {
+                let (x, oh) = data.train.batch(idx);
+                oracle.iteration(Some((x, oh))).expect("oracle iteration");
+            }
+        }
+        oracle.drain().expect("oracle drain");
+        let mut want = Tensor::empty();
+        model_to_tensor(&oracle.net, &mut want);
+
+        let ring = run(&cfg, kind, 1, 1, &data);
+        assert!(
+            bits_equal(&ring.final_weights, &want),
+            "{}: ring(1,1) drifted from the stock trainer",
+            kind.name()
+        );
+    }
+}
+
+/// The ring over a heterogeneous conv+pool+dense spec: replica-count
+/// invariance must survive the layer zoo (im2col workspaces, pooling
+/// argmax masks, cost-balanced partitions).
+#[test]
+fn conv_spec_ring_is_replica_count_invariant() {
+    let (h, w, c, classes) = (6usize, 6usize, 1usize, 3usize);
+    let spec = NetworkSpec {
+        input: Feature::Image { h, w, c },
+        layers: vec![
+            LayerSpec::Conv2d { out_c: 3, k: 3, stride: 1, pad: 1, relu: true },
+            LayerSpec::MaxPool2d { k: 2, stride: 2 },
+            LayerSpec::Flatten,
+            LayerSpec::Dense { units: 12, relu: true },
+            LayerSpec::Dense { units: classes, relu: false },
+        ],
+        init_scale: 1.0,
+    };
+    let mut cfg = ExperimentConfig::default();
+    cfg.model.batch = 8;
+    cfg.model.input_dim = h * w * c;
+    cfg.model.hidden_dim = 12;
+    cfg.model.classes = classes;
+    cfg.model.layers = spec.layers.len();
+    cfg.pipeline.stages = 2;
+    cfg.epochs = 1;
+    cfg.seed = 5;
+    cfg.data = DataConfig {
+        train_samples: 48,
+        test_samples: 16,
+        teacher_hidden: 12,
+        label_noise: 0.0,
+        seed: 77,
+    };
+    let data = image_teacher_dataset(h, w, c, classes, &cfg.data);
+
+    let kind = StrategyKind::PipelineAwareEma;
+    let ring1 = RingConfig::new(1, 2);
+    let ring2 = RingConfig::new(2, 2);
+    let a = train_ring(&host(), &cfg, Some(&spec), kind, &ring1, &data).expect("1-replica conv ring");
+    let b = train_ring(&host(), &cfg, Some(&spec), kind, &ring2, &data).expect("2-replica conv ring");
+    assert!(
+        bits_equal(&a.final_weights, &b.final_weights),
+        "conv ring weights differ between 1 and 2 replicas"
+    );
+}
+
+/// Report bookkeeping: iteration/sample counts follow from the config,
+/// throughput is positive and accuracy is a probability.
+#[test]
+fn ring_report_accounting_is_consistent() {
+    let cfg = dense_cfg();
+    let data = teacher_dataset(&cfg.model, &cfg.data);
+    let r = run(&cfg, StrategyKind::FixedEma, 2, 4, &data);
+    let per_epoch = (cfg.data.train_samples / cfg.model.batch) as u64;
+    assert_eq!(r.iterations, per_epoch * cfg.epochs as u64);
+    assert_eq!(r.samples, r.iterations * cfg.model.batch as u64);
+    assert_eq!(r.replicas, 2);
+    assert_eq!(r.shards, 4);
+    assert!(r.samples_per_sec > 0.0);
+    assert!(r.seconds >= 0.0);
+    assert!((0.0..=1.0).contains(&r.test_accuracy), "accuracy {}", r.test_accuracy);
+    assert!(r.train_loss.is_finite(), "loss {}", r.train_loss);
+    assert_eq!(r.final_weights.len(), {
+        let mut t = Tensor::empty();
+        let net = layerpipe2::layers::Network::build(
+            &NetworkSpec::mlp(&cfg.model),
+            &mut Rng::new(cfg.seed),
+        )
+        .unwrap();
+        model_to_tensor(&net, &mut t);
+        t.len()
+    });
+}
+
+/// Invalid ring shapes are rejected up front, not mid-run.
+#[test]
+fn ring_config_rejects_bad_shapes() {
+    let cfg = dense_cfg();
+    let data = teacher_dataset(&cfg.model, &cfg.data);
+    // 3 shards do not divide batch 8.
+    let bad = RingConfig::new(1, 3);
+    assert!(train_ring(&host(), &cfg, None, StrategyKind::Latest, &bad, &data).is_err());
+    // 3 replicas do not divide 4 shards.
+    let bad = RingConfig::new(3, 4);
+    assert!(train_ring(&host(), &cfg, None, StrategyKind::Latest, &bad, &data).is_err());
+}

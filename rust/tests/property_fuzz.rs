@@ -6,6 +6,7 @@ use layerpipe2::config::toml::TomlDoc;
 use layerpipe2::ema::{ExactWindow, GradientAverager, PipelineAwareEma};
 use layerpipe2::graph::Dfg;
 use layerpipe2::layers::LayerCost;
+use layerpipe2::replica::tree_reduce_into_with_threads;
 use layerpipe2::retiming::{closed_form_lags, insert_pipeline_delays, Retiming, StagePartition};
 use layerpipe2::schedule::{choose_stages, AdaptiveLimits, CostModel};
 use layerpipe2::serving::{Coalescer, Request};
@@ -369,16 +370,20 @@ fn balanced_partition_is_optimal_and_contiguous() {
 #[test]
 fn serving_coalescer_never_drops_duplicates_reorders_or_overfills() {
     // The serving batcher's pure core, under random request sizes,
-    // arrival orders, tick interleavings and (max_batch, max_wait_ticks)
-    // configs: the concatenation of all emitted batches must be exactly
-    // the arrival sequence (no drop, no duplicate, no reorder — global
-    // FIFO implies per-client FIFO), every batch must respect the row
-    // cap, and a non-forced emission must be justified (full batch or
-    // spent wait budget).
+    // arrival orders, tick interleavings and (max_batch, max_wait_ticks,
+    // shrink_under) configs: the concatenation of all emitted batches
+    // must be exactly the arrival sequence (no drop, no duplicate, no
+    // reorder — global FIFO implies per-client FIFO), every batch must
+    // respect the row cap, and a non-forced emission must be justified
+    // (full batch, spent wait budget, or a queue-emptying batch at or
+    // under the low-occupancy shrink threshold).
     property(150, |rng, case| {
         let max_batch = 1 + rng.index(8);
         let max_wait = rng.index(5) as u64;
-        let mut co = Coalescer::new(max_batch, max_wait);
+        // shrink_under = 0 (the default) in a third of the cases keeps
+        // the legacy behavior under the same harness.
+        let shrink_under = if rng.chance(0.33) { 0 } else { rng.index(max_batch + 1) };
+        let mut co = Coalescer::with_shrink(max_batch, max_wait, shrink_under);
         let mut expect: Vec<(u32, u64, usize)> = Vec::new();
         let mut got: Vec<(u32, u64, usize)> = Vec::new();
         let mut seqs = [0u64; 4];
@@ -397,12 +402,15 @@ fn serving_coalescer_never_drops_duplicates_reorders_or_overfills() {
                 );
                 if !force {
                     // Justified: full (cap hit or next request pending
-                    // didn't fit) or the wait budget was spent.
+                    // didn't fit), the wait budget was spent, or the
+                    // batch emptied the queue at low occupancy (shrink).
                     let full = rows == max_batch || co.pending_rows() > 0;
+                    let shrank = co.pending_rows() == 0 && rows <= shrink_under;
                     assert!(
-                        full || *idle >= max_wait,
-                        "case {case}: partial batch ({rows}/{max_batch} rows) emitted \
-                         after only {idle} idle ticks (budget {max_wait})"
+                        full || shrank || *idle >= max_wait,
+                        "case {case}: partial batch ({rows}/{max_batch} rows, \
+                         shrink_under {shrink_under}) emitted after only {idle} \
+                         idle ticks (budget {max_wait})"
                     );
                 }
                 *idle = 0;
@@ -435,6 +443,64 @@ fn serving_coalescer_never_drops_duplicates_reorders_or_overfills() {
             got, expect,
             "case {case}: emitted stream is not the arrival stream (drop/dup/reorder)"
         );
+    });
+}
+
+#[test]
+fn replica_tree_reduce_is_bitwise_stable_for_all_shapes_and_threads() {
+    // The replica ring's deterministic all-reduce: for random tensor
+    // shapes, part counts (1..=8 shards) and worker counts (1..=8), the
+    // reduction must (a) equal a scalar per-element gap-doubling
+    // reference **bitwise** — the combine order is a pure function of
+    // the slot index, never of chunking — and (b) be bitwise identical
+    // across every thread count, which is what makes N-replica training
+    // reproduce the single-replica oracle bit for bit.
+    property(60, |rng, case| {
+        let parts_n = 1 + rng.index(8);
+        let len = 1 + rng.index(3000);
+        let inv = if rng.chance(0.5) { 1.0 } else { 1.0 / parts_n as f32 };
+        let parts: Vec<Tensor> =
+            (0..parts_n).map(|_| Tensor::randn(&[len], 1.0, rng)).collect();
+
+        // Scalar reference: per element, fold the parts in fixed
+        // gap-doubling order ((p0+p1)+(p2+p3))+…
+        let reference: Vec<f32> = (0..len)
+            .map(|i| {
+                let mut acc: Vec<f32> = parts.iter().map(|p| p.data()[i]).collect();
+                let mut gap = 1;
+                while gap < acc.len() {
+                    let mut k = 0;
+                    while k + gap < acc.len() {
+                        acc[k] += acc[k + gap];
+                        k += 2 * gap;
+                    }
+                    gap *= 2;
+                }
+                if inv == 1.0 { acc[0] } else { acc[0] * inv }
+            })
+            .collect();
+
+        let mut first: Option<Vec<u32>> = None;
+        for threads in 1..=8 {
+            let mut out = Tensor::empty();
+            tree_reduce_into_with_threads(&parts, &mut out, inv, threads);
+            assert_eq!(out.shape(), &[len], "case {case}: bad output shape");
+            let bits: Vec<u32> = out.data().iter().map(|v| v.to_bits()).collect();
+            for (i, (&got, &want)) in out.data().iter().zip(&reference).enumerate() {
+                assert!(
+                    got.to_bits() == want.to_bits(),
+                    "case {case}: element {i} differs from scalar reference \
+                     ({got} vs {want}, {parts_n} parts, {threads} threads)"
+                );
+            }
+            match &first {
+                None => first = Some(bits),
+                Some(f) => assert_eq!(
+                    &bits, f,
+                    "case {case}: thread count {threads} changed the bits"
+                ),
+            }
+        }
     });
 }
 

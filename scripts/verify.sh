@@ -22,17 +22,20 @@ cargo clippy -- -D warnings -D clippy::perf
 # Release-mode bench smoke: runs the hot-path bench with reduced samples
 # so kernel/allocation regressions fail the gate (and refreshes
 # BENCH_hotpath.json + BENCH_layers.json + BENCH_kernels.json +
-# BENCH_serving.json — the dense, layer-zoo, kernel-family and serving
-# machine-readable perf trajectories). The kernel-family section
-# validates every kernel in-run: shape mismatches, NaN/non-finite
-# outputs, packed-vs-reference bit drift and tree-reduction worker
-# instability all abort the bench and therefore fail this gate; the
-# serving section verifies every response bitwise against the
-# sequential forward oracle.
+# BENCH_serving.json + BENCH_ring.json — the dense, layer-zoo,
+# kernel-family, serving and replica-ring machine-readable perf
+# trajectories). The kernel-family section validates every kernel
+# in-run: shape mismatches, NaN/non-finite outputs, packed-vs-reference
+# bit drift and tree-reduction worker instability all abort the bench
+# and therefore fail this gate; the serving section verifies every
+# response bitwise against the sequential forward oracle; the ring
+# section verifies every replica count's final weights bitwise against
+# the single-replica oracle.
 echo "==> bench smoke (release, reduced samples)"
 LAYERPIPE2_BENCH_SMOKE=1 cargo bench --bench runtime_hotpath
 test -s BENCH_kernels.json || { echo "verify: BENCH_kernels.json missing or empty"; exit 1; }
 test -s BENCH_serving.json || { echo "verify: BENCH_serving.json missing or empty"; exit 1; }
+test -s BENCH_ring.json || { echo "verify: BENCH_ring.json missing or empty"; exit 1; }
 
 # Heterogeneous end-to-end smoke: conv+pool+dense and dense+LIF stacks
 # through the threaded executor with cost-balanced stages, asserting
@@ -46,6 +49,13 @@ LAYERPIPE2_SMOKE=1 cargo run --release --example conv_pipeline
 # the sequential forward oracle of the epoch that served it.
 echo "==> serve pipeline example (smoke)"
 LAYERPIPE2_SMOKE=1 cargo run --release --example serve_pipeline
+
+# Replica-ring end-to-end smoke: the same pipelined workload trained at
+# 1, 2 and 4 replicas over a fixed shard decomposition, final weights
+# asserted bitwise identical across counts (the deterministic
+# all-reduce contract).
+echo "==> ring pipeline example (smoke)"
+LAYERPIPE2_SMOKE=1 cargo run --release --example ring_pipeline
 
 if [[ "${1:-}" == "--pjrt" ]]; then
     echo "==> cargo build --release --features pjrt"
