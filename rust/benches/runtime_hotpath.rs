@@ -19,7 +19,9 @@
 //! `BENCH_layers.json` (layer zoo), `BENCH_kernels.json` (kernel
 //! family: scalar reference vs packed/tree kernels, serial vs parallel —
 //! with in-run NaN/shape/bit-stability validation, so a kernel
-//! regression fails the bench), `BENCH_serving.json` (batched
+//! regression fails the bench — plus a `mixed_precision` section
+//! comparing f32 vs bf16 storage: GB/s, GFLOP/s and max error against
+//! the f32 oracle at the dtype-derived bound), `BENCH_serving.json` (batched
 //! inference serving: requests/sec + p50/p99 batch latency vs
 //! `max_batch`, every response verified bitwise against the sequential
 //! oracle in-run) and `BENCH_ring.json` (weight-ring replica scaling:
@@ -433,6 +435,137 @@ fn kernel_family_section(smoke: bool) -> Json {
     Json::Arr(rows)
 }
 
+/// HOTPATH-i: mixed precision — the packed matmul on bf16 storage vs
+/// the same kernel on f32, plus the quantize/widen conversion kernels,
+/// written into `BENCH_kernels.json` under `"mixed_precision"` (which
+/// `verify.sh` gates on). Per shape the section reports GFLOP/s and
+/// effective GB/s of storage traffic (bf16 halves the operand bytes;
+/// the f32 output is unchanged), and validates the DESIGN.md §11
+/// contract in-run: the bf16-input kernel must be **bitwise** equal to
+/// the f32 kernel run on pre-widened copies of the same operands
+/// (widening-on-pack: summation geometry is a pure function of shape),
+/// and its error against the unquantized f32 oracle must respect the
+/// dtype-derived per-element bound `eps_bf16 · Σ_k |a_ik|·|b_kj|`.
+fn mixed_precision_section(smoke: bool) -> Json {
+    use layerpipe2::tensor::{Dtype, EPS_BF16};
+    print_header("HOTPATH-i: mixed precision — f32 vs bf16 storage matmul (widen-on-pack)");
+    let mut rows: Vec<Json> = Vec::new();
+    let mut rng = Rng::new(41);
+    let samples = if smoke { 5 } else { 20 };
+    let workers = layerpipe2::tensor::workers::pool_size() as f64;
+
+    let mm_cases: &[(usize, usize, usize)] = if smoke {
+        &[(192, 192, 192)]
+    } else {
+        &[(256, 256, 256), (512, 512, 512)]
+    };
+    for &(m, k, n) in mm_cases {
+        let af = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let bf = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let ab = af.to_dtype(Dtype::Bf16);
+        let bb = bf.to_dtype(Dtype::Bf16);
+        let flops = 2.0 * (m * k * n) as f64;
+        // Storage traffic per run: both operands read once, f32 output
+        // written once — the quantity the bf16 panels actually halve.
+        let bytes_f32 = ((m * k + k * n) * 4 + m * n * 4) as f64;
+        let bytes_bf16 = ((m * k + k * n) * 2 + m * n * 4) as f64;
+
+        // Widening-on-pack determinism gate: bf16 inputs vs pre-widened
+        // f32 copies of the same (quantized) values must be bitwise.
+        let mut out_bf = Tensor::empty();
+        tensor::matmul_into(&ab, &bb, &mut out_bf);
+        let mut out_widened = Tensor::empty();
+        tensor::matmul_into(&ab.to_dtype(Dtype::F32), &bb.to_dtype(Dtype::F32), &mut out_widened);
+        assert_eq!(
+            out_bf, out_widened,
+            "matmul_{m}x{k}x{n}: bf16 kernel not bitwise vs widened-f32 kernel"
+        );
+
+        // Accuracy gate vs the unquantized f32 oracle, per element at
+        // the dtype-derived tolerance: input RTNE carries relative
+        // error <= eps_bf16/2 per operand, so the length-k reduction is
+        // bounded by eps_bf16 · Σ|a||b| (1.05 covers the cross terms
+        // and the f32 accumulation difference; +1e-6 floors it for
+        // cancellation-heavy elements).
+        let mut oracle = Tensor::empty();
+        tensor::matmul_into(&af, &bf, &mut oracle);
+        let abs_a =
+            Tensor::from_vec(&[m, k], af.data().iter().map(|v| v.abs()).collect());
+        let abs_b =
+            Tensor::from_vec(&[k, n], bf.data().iter().map(|v| v.abs()).collect());
+        let mut abs_mm = Tensor::empty();
+        tensor::matmul_into(&abs_a, &abs_b, &mut abs_mm);
+        let mut max_err = 0.0f32;
+        let mut max_ratio = 0.0f32;
+        for ((&got, &want), &bound) in
+            out_bf.data().iter().zip(oracle.data()).zip(abs_mm.data())
+        {
+            let err = (got - want).abs();
+            let tol = 1.05 * EPS_BF16 * bound + 1e-6;
+            assert!(
+                err <= tol,
+                "matmul_{m}x{k}x{n}: bf16 error {err} beyond dtype-derived bound {tol}"
+            );
+            max_err = max_err.max(err);
+            max_ratio = max_ratio.max(err / tol);
+        }
+
+        let mut out = Tensor::empty();
+        let s_f32 = bench(&format!("matmul_{m}x{k}x{n} (f32 storage)"), 2, samples, || {
+            tensor::matmul_into(&af, &bf, &mut out)
+        });
+        print_gflops(&s_f32, flops, 0.0);
+        let s_bf16 = bench(&format!("matmul_{m}x{k}x{n} (bf16 storage)"), 2, samples, || {
+            tensor::matmul_into(&ab, &bb, &mut out)
+        });
+        print_gflops(&s_bf16, flops, 0.0);
+        println!(
+            "    -> storage traffic {:.2} GB/s (f32) vs {:.2} GB/s effective (bf16), \
+             max |err| vs f32 oracle {max_err:.3e} ({:.0}% of dtype bound)",
+            bytes_f32 / s_f32.median_s / 1e9,
+            bytes_bf16 / s_bf16.median_s / 1e9,
+            max_ratio * 100.0
+        );
+        rows.push(jobj(vec![
+            ("kernel", Json::Str("matmul".to_string())),
+            ("case", Json::Str(format!("mixed_matmul_{m}x{k}x{n}"))),
+            ("gflops_f32", jnum(flops / s_f32.median_s / 1e9)),
+            ("gflops_bf16", jnum(flops / s_bf16.median_s / 1e9)),
+            ("gbps_f32", jnum(bytes_f32 / s_f32.median_s / 1e9)),
+            ("gbps_bf16", jnum(bytes_bf16 / s_bf16.median_s / 1e9)),
+            ("max_abs_err_vs_f32", jnum(max_err as f64)),
+            ("err_over_dtype_bound", jnum(max_ratio as f64)),
+            ("workers", jnum(workers)),
+        ]));
+    }
+
+    // The conversion kernels themselves: quantize (f32 -> bf16, 6 bytes
+    // moved per element) and widen (bf16 -> f32, same traffic) — these
+    // sit on every optimizer step and every ring flatten/scatter.
+    let len = if smoke { 1 << 18 } else { 1 << 22 };
+    let src = Tensor::randn(&[len], 1.0, &mut rng);
+    let mut q = Tensor::empty();
+    let s_q = bench("quantize f32->bf16", 2, samples, || q.quantize_from(&src));
+    print_row(&s_q);
+    let mut wide = Tensor::empty();
+    let s_w = bench("widen bf16->f32", 2, samples, || wide.widen_from(&q));
+    print_row(&s_w);
+    let conv_bytes = (len * (4 + 2)) as f64;
+    println!(
+        "    -> quantize {:.2} GB/s, widen {:.2} GB/s ({len} elements)",
+        conv_bytes / s_q.median_s / 1e9,
+        conv_bytes / s_w.median_s / 1e9
+    );
+    rows.push(jobj(vec![
+        ("kernel", Json::Str("convert".to_string())),
+        ("case", Json::Str(format!("convert_{len}"))),
+        ("gbps_quantize", jnum(conv_bytes / s_q.median_s / 1e9)),
+        ("gbps_widen", jnum(conv_bytes / s_w.median_s / 1e9)),
+        ("workers", jnum(workers)),
+    ]));
+    Json::Arr(rows)
+}
+
 fn pjrt_section() {
     print_header("HOTPATH-b: PJRT single-artifact dispatch latency");
     let engine = match Engine::load("artifacts") {
@@ -709,6 +842,7 @@ fn main() {
     }
     let kernels = host_kernel_section(smoke);
     let kernel_family = kernel_family_section(smoke);
+    let mixed = mixed_precision_section(smoke);
     let layers = layers_section(smoke);
     pjrt_section();
     let train = train_iteration_section(smoke);
@@ -747,6 +881,7 @@ fn main() {
         Json::Num(layerpipe2::tensor::workers::pool_size() as f64),
     );
     kobj.insert("kernels".to_string(), kernel_family);
+    kobj.insert("mixed_precision".to_string(), mixed);
     let kpath = std::env::var("LAYERPIPE2_BENCH_KERNELS_JSON")
         .unwrap_or_else(|_| "BENCH_kernels.json".to_string());
     std::fs::write(&kpath, Json::Obj(kobj).to_string()).expect("write kernels bench json");

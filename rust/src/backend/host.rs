@@ -47,6 +47,12 @@ impl Exec for HostBackend {
         cfg.validate()
     }
 
+    /// The host kernel family widens bf16 operands to f32 tiles while
+    /// packing (DESIGN.md §11), so both storage dtypes are servable.
+    fn supports_dtype(&self, _dtype: crate::tensor::Dtype) -> bool {
+        true
+    }
+
     fn forward(&self, role: LayerRole, x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
         let mut out = Tensor::empty();
         self.forward_into(role, x, w, b, &mut out)?;
@@ -335,6 +341,30 @@ mod tests {
         let err = be().forward(LayerRole::Hidden, &x, &w, &b);
         assert!(err.is_err());
         assert!(format!("{:#}", err.unwrap_err()).contains("shape"));
+    }
+
+    #[test]
+    fn bf16_operands_flow_through_exec_bitwise_vs_widened() {
+        // bf16 weights/activations must produce exactly the result of
+        // the f32 kernels on the (exactly) widened operands — the
+        // backend-level restatement of the widening-on-pack contract.
+        use crate::tensor::Dtype;
+        let mut rng = Rng::new(31);
+        let x = Tensor::randn(&[4, 6], 1.0, &mut rng).to_dtype(Dtype::Bf16);
+        let w = Tensor::randn(&[6, 5], 0.3, &mut rng).to_dtype(Dtype::Bf16);
+        let b = Tensor::randn(&[5], 0.1, &mut rng);
+        let (xw, ww) = (x.to_dtype(Dtype::F32), w.to_dtype(Dtype::F32));
+        let backend = be();
+        assert!(backend.supports_dtype(Dtype::Bf16));
+        assert!(backend.supports_dtype(Dtype::F32));
+        for role in [LayerRole::Hidden, LayerRole::Output] {
+            let y = backend.forward(role, &x, &w, &b).unwrap();
+            assert_eq!(y, backend.forward(role, &xw, &ww, &b).unwrap(), "{role:?} forward");
+            let dy = Tensor::randn(&[4, 5], 1.0, &mut rng);
+            let got = backend.backward(role, &x, &y, &w, &dy).unwrap();
+            let want = backend.backward(role, &xw, &y, &ww, &dy).unwrap();
+            assert_eq!(got, want, "{role:?} backward");
+        }
     }
 
     #[test]

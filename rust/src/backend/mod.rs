@@ -34,7 +34,7 @@ pub use pjrt::PjrtBackend;
 
 use crate::config::ModelConfig;
 use crate::model::{LayerParams, LayerRole};
-use crate::tensor::Tensor;
+use crate::tensor::{Dtype, Tensor};
 use anyhow::{bail, Result};
 use std::path::Path;
 use std::sync::Arc;
@@ -56,6 +56,14 @@ pub trait Exec: Send + Sync {
     /// backend is locked to the shapes its artifacts were lowered at;
     /// the host backend accepts anything).
     fn check_model(&self, cfg: &ModelConfig) -> Result<()>;
+
+    /// Whether this backend can execute on tensors of the given storage
+    /// dtype. Defaults to f32-only — the PJRT artifacts were lowered
+    /// for f32 literals; the host backend overrides (its kernel family
+    /// widens bf16 operands on pack, DESIGN.md §11).
+    fn supports_dtype(&self, dtype: Dtype) -> bool {
+        dtype == Dtype::F32
+    }
 
     /// One dense layer forward: `y = act(x @ w + b)` with the activation
     /// implied by `role` (`ReLU` except for the output layer).

@@ -10,6 +10,7 @@
 pub mod toml;
 
 use crate::strategy::StrategyKind;
+use crate::tensor::Dtype;
 use anyhow::{bail, Context, Result};
 use toml::TomlDoc;
 
@@ -165,6 +166,11 @@ pub struct ExperimentConfig {
     pub data: DataConfig,
     pub epochs: usize,
     pub seed: u64,
+    /// Storage dtype for weights, activations and gradient wire traffic
+    /// (DESIGN.md §11). `F32` is the bitwise-frozen default; `Bf16`
+    /// halves the hot-path footprint while optimizer masters and every
+    /// multi-element accumulation stay f32.
+    pub dtype: Dtype,
     /// Which weight-handling strategies a sweep covers.
     pub strategies: Vec<StrategyKind>,
     /// Directory with `manifest.json` + `*.hlo.txt`.
@@ -182,6 +188,7 @@ impl Default for ExperimentConfig {
             data: DataConfig::default(),
             epochs: 12,
             seed: 7,
+            dtype: Dtype::F32,
             strategies: StrategyKind::all().to_vec(),
             artifacts_dir: "artifacts".to_string(),
             csv_out: None,
@@ -235,6 +242,12 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_str("", "csv_out")? {
             c.csv_out = Some(v);
+        }
+        if let Some(v) = doc.get_str("", "dtype")? {
+            c.dtype = match Dtype::parse(&v) {
+                Some(d) => d,
+                None => bail!("unknown dtype {v:?} (expected \"f32\" or \"bf16\")"),
+            };
         }
         if let Some(items) = doc.get_str_array("", "strategies")? {
             c.strategies = items
@@ -362,5 +375,15 @@ stages = 4
     #[test]
     fn rejects_zero_epochs() {
         assert!(ExperimentConfig::from_toml_str("epochs = 0").is_err());
+    }
+
+    #[test]
+    fn dtype_key_parses_and_defaults_to_f32() {
+        assert_eq!(ExperimentConfig::default().dtype, Dtype::F32);
+        let c = ExperimentConfig::from_toml_str(r#"dtype = "bf16""#).unwrap();
+        assert_eq!(c.dtype, Dtype::Bf16);
+        let c = ExperimentConfig::from_toml_str(r#"dtype = "f32""#).unwrap();
+        assert_eq!(c.dtype, Dtype::F32);
+        assert!(ExperimentConfig::from_toml_str(r#"dtype = "fp8""#).is_err());
     }
 }

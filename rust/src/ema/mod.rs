@@ -23,7 +23,7 @@
 //! - [`FixedEma`] — conventional EMA with delay-independent `β` (the
 //!   paper's fixed-decay baseline, `β = 0.9`).
 
-use crate::tensor::Tensor;
+use crate::tensor::{Dtype, Tensor};
 
 /// Online estimator of the average recent update/gradient for one tensor.
 pub trait GradientAverager: Send {
@@ -53,8 +53,13 @@ pub trait GradientAverager: Send {
     /// [`GradientAverager::reconstruct`] without the allocation: copy +
     /// axpy into a caller-owned buffer (the per-layer reconstruction
     /// workspace of `strategy::LayerStrategy` on the hot path).
+    ///
+    /// The output is always f32: bf16 `current`/`Ḡ` are widened and the
+    /// axpy accumulates at full precision, so the reconstructed weights
+    /// feed the backward matmuls without a second rounding. For f32
+    /// inputs `widen_from` is a bitwise copy — the historical behaviour.
     fn reconstruct_into(&self, current: &Tensor, lr_sum: f32, out: &mut Tensor) {
-        out.copy_from(current);
+        out.widen_from(current);
         if let Some(g) = self.mean() {
             out.axpy(lr_sum, g);
         }
@@ -134,12 +139,21 @@ pub struct PipelineAwareEma {
     window: usize,
     mean: Option<Tensor>,
     count: usize,
+    /// Storage dtype of the accumulator (`Ḡ` history halves to bf16 in
+    /// mixed-precision runs; arithmetic still widens to f32 per element).
+    dtype: Dtype,
 }
 
 impl PipelineAwareEma {
     pub fn new(window: usize) -> Self {
+        PipelineAwareEma::new_with_dtype(window, Dtype::F32)
+    }
+
+    /// [`PipelineAwareEma::new`] with the accumulator stored in `dtype`
+    /// (DESIGN.md §11: bf16 history, f32 reconstruction arithmetic).
+    pub fn new_with_dtype(window: usize, dtype: Dtype) -> Self {
         assert!(window > 0, "window must be positive");
-        PipelineAwareEma { window, mean: None, count: 0 }
+        PipelineAwareEma { window, mean: None, count: 0, dtype }
     }
 
     /// The delay-conditioned decay currently in effect (Eq. 8).
@@ -161,7 +175,7 @@ impl GradientAverager for PipelineAwareEma {
         let beta = self.beta();
         match &mut self.mean {
             None => {
-                self.mean = Some(update.clone());
+                self.mean = Some(update.to_dtype(self.dtype));
             }
             Some(m) => {
                 m.ema_update(beta, update);
@@ -190,12 +204,19 @@ pub struct FixedEma {
     beta: f32,
     mean: Option<Tensor>,
     count: usize,
+    /// Storage dtype of the accumulator (see [`PipelineAwareEma`]).
+    dtype: Dtype,
 }
 
 impl FixedEma {
     pub fn new(beta: f32) -> Self {
+        FixedEma::new_with_dtype(beta, Dtype::F32)
+    }
+
+    /// [`FixedEma::new`] with the accumulator stored in `dtype`.
+    pub fn new_with_dtype(beta: f32, dtype: Dtype) -> Self {
         assert!((0.0..1.0).contains(&beta), "beta must be in [0,1)");
-        FixedEma { beta, mean: None, count: 0 }
+        FixedEma { beta, mean: None, count: 0, dtype }
     }
 
     pub fn beta(&self) -> f32 {
@@ -206,7 +227,7 @@ impl FixedEma {
 impl GradientAverager for FixedEma {
     fn push(&mut self, update: &Tensor) {
         match &mut self.mean {
-            None => self.mean = Some(update.clone()),
+            None => self.mean = Some(update.to_dtype(self.dtype)),
             Some(m) => m.ema_update(self.beta, update),
         }
         self.count += 1;
@@ -394,5 +415,40 @@ mod tests {
         let cur = t1(3.5);
         let r = ema.reconstruct(&cur, 0.7);
         assert_eq!(r.data(), cur.data());
+    }
+
+    #[test]
+    fn bf16_accumulator_halves_state_and_tracks_within_eps() {
+        // Mixed-precision accumulators: half the bytes, per-push error
+        // bounded by the bf16 quantization step (each ema_update widens,
+        // combines in f32, and re-rounds once).
+        let shape = [32, 16];
+        let mut rng = Rng::new(9);
+        let mut q = PipelineAwareEma::new_with_dtype(6, Dtype::Bf16);
+        let mut full = PipelineAwareEma::new(6);
+        for _ in 0..12 {
+            let u = Tensor::randn(&shape, 1.0, &mut rng);
+            q.push(&u);
+            full.push(&u);
+        }
+        assert_eq!(q.state_nbytes() * 2, full.state_nbytes());
+        assert_eq!(q.mean().unwrap().dtype(), Dtype::Bf16);
+        let (qm, fm) = (q.mean().unwrap().to_dtype(Dtype::F32), full.mean().unwrap());
+        // 12 pushes, each contributing ≤ eps relative rounding on values
+        // of magnitude ≲ 4: a loose absolute budget of 12·4·eps.
+        let budget = 12.0 * 4.0 * crate::tensor::EPS_BF16;
+        assert!(qm.max_abs_diff(fm) < budget, "diff {}", qm.max_abs_diff(fm));
+    }
+
+    #[test]
+    fn bf16_reconstruction_widens_to_f32() {
+        // reconstruct_into on bf16 current + bf16 mean must produce an
+        // f32 tensor computed as widen(cur) + lr_sum·widen(mean).
+        let mut ema = FixedEma::new_with_dtype(0.9, Dtype::Bf16);
+        ema.push(&t1(2.0).to_dtype(Dtype::Bf16));
+        let cur = t1(10.0).to_dtype(Dtype::Bf16);
+        let r = ema.reconstruct(&cur, 0.5);
+        assert_eq!(r.dtype(), Dtype::F32);
+        assert_eq!(r.data()[0], 10.0 + 0.5 * 2.0);
     }
 }

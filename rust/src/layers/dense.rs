@@ -62,6 +62,12 @@ impl Layer for Dense {
         (vec![self.din, self.dout], vec![self.dout])
     }
 
+    fn supports_dtype(&self, _dtype: crate::tensor::Dtype) -> bool {
+        // The dense kernel family widens bf16 operands during packing
+        // (DESIGN.md §11), so every storage dtype is servable.
+        true
+    }
+
     fn init_params(&self, init_scale: f32, rng: &mut Rng) -> (Tensor, Tensor) {
         // He init (ReLU nets), zero biases — identical to `Mlp::init`.
         let std = init_scale * (2.0 / self.din as f32).sqrt();
@@ -129,6 +135,25 @@ mod tests {
         op.backward_into(&be, &x, &y, &w, &dy, &mut scr, &mut dx, &mut dw, &mut db).unwrap();
         let (dx2, dw2, db2) = be.backward(LayerRole::Hidden, &x, &y, &w, &dy).unwrap();
         assert_eq!((dx, dw, db), (dx2, dw2, db2));
+    }
+
+    #[test]
+    fn dense_alone_serves_bf16() {
+        use crate::layers::{LayerSpec, Network, NetworkSpec, Feature};
+        use crate::tensor::Dtype;
+        let spec = NetworkSpec {
+            input: Feature::Flat(4),
+            layers: vec![
+                LayerSpec::Dense { units: 4, relu: true },
+                LayerSpec::Lif { v_th: 0.5, alpha: 1.0 },
+            ],
+            init_scale: 1.0,
+        };
+        let net = Network::build(&spec, &mut Rng::new(1)).unwrap();
+        assert!(net.layers[0].op.supports_dtype(Dtype::Bf16));
+        assert!(net.layers[0].op.supports_dtype(Dtype::F32));
+        assert!(!net.layers[1].op.supports_dtype(Dtype::Bf16), "LIF is f32-only");
+        assert!(net.layers[1].op.supports_dtype(Dtype::F32));
     }
 
     #[test]

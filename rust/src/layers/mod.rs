@@ -139,6 +139,16 @@ pub trait Layer: Send {
     /// Checkpoint record tag (stable across versions).
     fn checkpoint_tag(&self) -> u32;
 
+    /// Whether this op can compute on parameters/activations stored in
+    /// `dtype`. Defaults to f32-only: conv, pool and LIF kernels read
+    /// `data()` slices directly. [`Dense`] overrides — its matmul family
+    /// widens bf16 operand panels during packing (DESIGN.md §11), so a
+    /// dense stack is the mixed-precision-servable case. Trainers check
+    /// this at construction and fail fast with a readable error.
+    fn supports_dtype(&self, dtype: crate::tensor::Dtype) -> bool {
+        dtype == crate::tensor::Dtype::F32
+    }
+
     /// `(w, b)` shapes. Parameter-free layers report `[0]`/`[0]`.
     fn param_shapes(&self) -> (Vec<usize>, Vec<usize>) {
         (vec![0], vec![0])

@@ -31,7 +31,7 @@ use layerpipe2::runtime::Manifest;
 use layerpipe2::schedule::{sweep_stages, CostModel, Schedule};
 use layerpipe2::serving::{Server, ServerConfig};
 use layerpipe2::strategy::StrategyKind;
-use layerpipe2::tensor::Tensor;
+use layerpipe2::tensor::{Dtype, Tensor};
 use layerpipe2::util::Rng;
 use std::path::Path;
 
@@ -145,6 +145,7 @@ COMMANDS:
   train       run the Fig. 5 strategy sweep (pipelined training)
               --config F --strategy S (repeatable) --epochs N --stages K
               --csv PATH --artifacts DIR --seed N
+              --dtype f32|bf16 (storage dtype; LAYERPIPE2_DTYPE also works)
               --executor iteration|threaded (threaded = one thread/stage)
   retime      derive pipeline delays via retiming (Figs. 3/4)
               --layers L  --groups a,b,c (group sizes)
@@ -160,10 +161,27 @@ COMMANDS:
               (responses verified bitwise vs the sequential oracle)
   train-ring  2D (pipeline x data) training on the weight ring
               --replicas 1,2,4 --shards S --strategy S --epochs N
-              --stages K --seed N  (LAYERPIPE2_REPLICAS sets the
-              default; final weights verified bitwise across counts)
+              --stages K --seed N --dtype f32|bf16
+              (LAYERPIPE2_REPLICAS sets the default replica count;
+              final weights verified bitwise across counts)
   info        print artifact manifest details  --artifacts DIR"
     );
+}
+
+/// Resolve the storage dtype: `--dtype` beats `LAYERPIPE2_DTYPE`, which
+/// beats the config file's `dtype` key (already in `cfg`), which beats
+/// the f32 default.
+fn apply_dtype(args: &Args, cfg: &mut ExperimentConfig) -> Result<()> {
+    if let Some(d) = Dtype::from_env() {
+        cfg.dtype = d;
+    }
+    if let Some(s) = args.get("dtype") {
+        cfg.dtype = match Dtype::parse(s) {
+            Some(d) => d,
+            None => bail!("--dtype expects f32|bf16, got '{s}'"),
+        };
+    }
+    Ok(())
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -174,6 +192,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(dir) = args.get("artifacts") {
         cfg.artifacts_dir = dir.to_string();
     }
+    apply_dtype(args, &mut cfg)?;
     cfg.epochs = args.usize_or("epochs", cfg.epochs)?;
     cfg.pipeline.stages = args.usize_or("stages", cfg.pipeline.stages)?;
     cfg.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
@@ -194,6 +213,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         other => bail!("unknown --executor '{other}' (expected iteration|threaded)"),
     };
 
+    if cfg.dtype != Dtype::F32 {
+        println!("storage dtype: {} (f32 masters + f32 accumulation)", cfg.dtype);
+    }
     let coord = Coordinator::new(cfg)?;
     let result = coord.sweep_on(executor)?;
     println!("{}", result.table());
@@ -436,6 +458,7 @@ fn cmd_train_ring(args: &Args) -> Result<()> {
     if let Some(dir) = args.get("artifacts") {
         cfg.artifacts_dir = dir.to_string();
     }
+    apply_dtype(args, &mut cfg)?;
     cfg.epochs = args.usize_or("epochs", cfg.epochs)?;
     cfg.pipeline.stages = args.usize_or("stages", cfg.pipeline.stages)?;
     cfg.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
@@ -465,12 +488,13 @@ fn cmd_train_ring(args: &Args) -> Result<()> {
     let backend = backend::from_env(&cfg.artifacts_dir)?;
     let data = teacher_dataset(&cfg.model, &cfg.data);
     println!(
-        "weight ring: backend {}  strategy {}  shards {}  batch {}  epochs {}",
+        "weight ring: backend {}  strategy {}  shards {}  batch {}  epochs {}  dtype {}",
         backend.name(),
         kind.name(),
         shards,
         cfg.model.batch,
-        cfg.epochs
+        cfg.epochs,
+        cfg.dtype
     );
     println!(
         "{:<10} {:>8} {:>12} {:>14} {:>10} {:>12} {:>10}",

@@ -5,22 +5,29 @@
 //! a trailing FNV-1a checksum so truncated/corrupted files are rejected
 //! rather than silently loaded.
 //!
-//! Two record formats share the container: version 1 is the seed's
+//! Three record formats share the container: version 1 is the seed's
 //! dense-MLP layout (role tags), version 2 covers heterogeneous
 //! [`Network`]s (per-op `checkpoint_tag` + zero-length params for
-//! parameter-free layers). Both restore only into an
-//! architecture-matching model, so a checkpoint can never silently
-//! reshape a network.
+//! parameter-free layers, always f32), and version 3 adds a per-tensor
+//! dtype tag ahead of each record so bf16 parameters persist in their
+//! storage width (u16 payloads, half the bytes). The writer emits
+//! version 2 — byte-identical to the pre-dtype format — whenever every
+//! parameter is f32, and version 3 only when a bf16 tensor is present;
+//! the reader accepts both, so old f32 checkpoints keep loading and old
+//! readers are never handed a file they would misparse. All restore
+//! only into an architecture-matching model, so a checkpoint can never
+//! silently reshape a network.
 
 use super::{LayerRole, Mlp};
 use crate::layers::Network;
-use crate::tensor::Tensor;
+use crate::tensor::{Dtype, Tensor};
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 
 const MAGIC: &[u8; 8] = b"LPIPE2CK";
 const VERSION: u32 = 1;
 const NET_VERSION: u32 = 2;
+const NET_VERSION_DTYPE: u32 = 3;
 
 fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
@@ -78,17 +85,48 @@ fn tag_role(tag: u32) -> Result<LayerRole> {
     })
 }
 
+fn dtype_tag(d: Dtype) -> u32 {
+    match d {
+        Dtype::F32 => 0,
+        Dtype::Bf16 => 1,
+    }
+}
+
+fn tag_dtype(tag: u32) -> Result<Dtype> {
+    Ok(match tag {
+        0 => Dtype::F32,
+        1 => Dtype::Bf16,
+        other => bail!("unknown tensor dtype tag {other}"),
+    })
+}
+
 fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
     put_u32(out, t.ndim() as u32);
     for &d in t.shape() {
         put_u64(out, d as u64);
     }
-    for &v in t.data() {
-        out.extend_from_slice(&v.to_le_bytes());
+    match t.dtype() {
+        Dtype::F32 => {
+            for &v in t.data() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Dtype::Bf16 => {
+            for &b in t.bits() {
+                out.extend_from_slice(&b.to_le_bytes());
+            }
+        }
     }
 }
 
-fn read_tensor(r: &mut Reader<'_>) -> Result<Tensor> {
+/// Version-3 record: the dtype tag leads, then the version-2 layout
+/// (rank, dims, payload) with the payload in the tagged width.
+fn put_tensor_tagged(out: &mut Vec<u8>, t: &Tensor) {
+    put_u32(out, dtype_tag(t.dtype()));
+    put_tensor(out, t);
+}
+
+fn read_tensor_dtype(r: &mut Reader<'_>, dtype: Dtype) -> Result<Tensor> {
     let ndim = r.u32()? as usize;
     ensure!(ndim <= 8, "implausible tensor rank {ndim}");
     let mut shape = Vec::with_capacity(ndim);
@@ -97,12 +135,33 @@ fn read_tensor(r: &mut Reader<'_>) -> Result<Tensor> {
     }
     let n: usize = shape.iter().product();
     ensure!(n <= 1 << 28, "implausible tensor size {n}");
-    let raw = r.take(4 * n)?;
-    let data = raw
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
-        .collect();
-    Ok(Tensor::from_vec(&shape, data))
+    match dtype {
+        Dtype::F32 => {
+            let raw = r.take(4 * n)?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+                .collect();
+            Ok(Tensor::from_vec(&shape, data))
+        }
+        Dtype::Bf16 => {
+            let raw = r.take(2 * n)?;
+            let mut t = Tensor::zeros_dtype(&shape, Dtype::Bf16);
+            for (o, c) in t.bits_mut().iter_mut().zip(raw.chunks_exact(2)) {
+                *o = u16::from_le_bytes(c.try_into().expect("2 bytes"));
+            }
+            Ok(t)
+        }
+    }
+}
+
+fn read_tensor(r: &mut Reader<'_>) -> Result<Tensor> {
+    read_tensor_dtype(r, Dtype::F32)
+}
+
+fn read_tensor_tagged(r: &mut Reader<'_>) -> Result<Tensor> {
+    let dtype = tag_dtype(r.u32()?)?;
+    read_tensor_dtype(r, dtype)
 }
 
 /// Serialize the model parameters.
@@ -152,17 +211,29 @@ pub fn from_bytes(mlp: &mut Mlp, bytes: &[u8]) -> Result<()> {
     Ok(())
 }
 
-/// Serialize a heterogeneous network's parameters (version-2 records:
-/// per-op tag + `(w, b)`, zero-length tensors for parameter-free layers).
+/// Serialize a heterogeneous network's parameters (per-op tag + `(w,
+/// b)` records, zero-length tensors for parameter-free layers). Emits
+/// version 2 — byte-identical to the pre-dtype format — when every
+/// parameter is f32, version 3 (dtype-tagged records, bf16 payloads at
+/// half width) as soon as any tensor stores bf16.
 pub fn network_to_bytes(net: &Network) -> Vec<u8> {
+    let all_f32 = net
+        .layers
+        .iter()
+        .all(|nl| nl.w.dtype() == Dtype::F32 && nl.b.dtype() == Dtype::F32);
     let mut out = Vec::with_capacity(net.nbytes() + 256);
     out.extend_from_slice(MAGIC);
-    put_u32(&mut out, NET_VERSION);
+    put_u32(&mut out, if all_f32 { NET_VERSION } else { NET_VERSION_DTYPE });
     put_u32(&mut out, net.layers.len() as u32);
     for nl in &net.layers {
         put_u32(&mut out, nl.op.checkpoint_tag());
-        put_tensor(&mut out, &nl.w);
-        put_tensor(&mut out, &nl.b);
+        if all_f32 {
+            put_tensor(&mut out, &nl.w);
+            put_tensor(&mut out, &nl.b);
+        } else {
+            put_tensor_tagged(&mut out, &nl.w);
+            put_tensor_tagged(&mut out, &nl.b);
+        }
     }
     let sum = fnv1a(&out);
     put_u64(&mut out, sum);
@@ -170,7 +241,11 @@ pub fn network_to_bytes(net: &Network) -> Vec<u8> {
 }
 
 /// Restore parameters into an existing architecture-matching network
-/// (op tags and parameter shapes must agree layer by layer).
+/// (op tags and parameter shapes must agree layer by layer). Accepts
+/// version 2 (all-f32) and version 3 (dtype-tagged) files; restored
+/// tensors carry the dtype the file recorded, so a v2 checkpoint
+/// restores f32 weights even into a session that trains bf16 — the
+/// kernels widen per operand, so the mixture is servable either way.
 pub fn network_from_bytes(net: &mut Network, bytes: &[u8]) -> Result<()> {
     ensure!(bytes.len() >= 8 + 4 + 4 + 8, "checkpoint too short");
     let (body, tail) = bytes.split_at(bytes.len() - 8);
@@ -181,8 +256,8 @@ pub fn network_from_bytes(net: &mut Network, bytes: &[u8]) -> Result<()> {
     ensure!(r.take(8)? == MAGIC, "not a layerpipe2 checkpoint");
     let version = r.u32()?;
     ensure!(
-        version == NET_VERSION,
-        "checkpoint version {version} is not a network checkpoint (expected {NET_VERSION})"
+        version == NET_VERSION || version == NET_VERSION_DTYPE,
+        "checkpoint version {version} is not a network checkpoint (expected {NET_VERSION} or {NET_VERSION_DTYPE})"
     );
     let layers = r.u32()? as usize;
     ensure!(
@@ -198,8 +273,11 @@ pub fn network_from_bytes(net: &mut Network, bytes: &[u8]) -> Result<()> {
             nl.op.name(),
             nl.op.checkpoint_tag()
         );
-        let w = read_tensor(&mut r)?;
-        let b = read_tensor(&mut r)?;
+        let (w, b) = if version == NET_VERSION {
+            (read_tensor(&mut r)?, read_tensor(&mut r)?)
+        } else {
+            (read_tensor_tagged(&mut r)?, read_tensor_tagged(&mut r)?)
+        };
         ensure!(w.shape() == nl.w.shape(), "layer {i}: weight shape mismatch");
         ensure!(b.shape() == nl.b.shape(), "layer {i}: bias shape mismatch");
         nl.w = w;
@@ -374,6 +452,70 @@ mod tests {
         let mut other = Network::build(&spec, &mut Rng::new(1)).unwrap();
         let err = network_from_bytes(&mut other, &bytes).unwrap_err();
         assert!(format!("{err:#}").contains("tag"));
+    }
+
+    /// The byte offset of the version field (right after the magic).
+    fn version_of(bytes: &[u8]) -> u32 {
+        u32::from_le_bytes(bytes[8..12].try_into().unwrap())
+    }
+
+    #[test]
+    fn all_f32_network_still_writes_version_2() {
+        // The pre-dtype format is the compatibility contract: a reader
+        // from before the mixed-precision work must keep loading every
+        // checkpoint an all-f32 session writes.
+        let bytes = network_to_bytes(&hetero_net());
+        assert_eq!(version_of(&bytes), NET_VERSION);
+    }
+
+    #[test]
+    fn bf16_network_writes_version_3_and_roundtrips_bitwise() {
+        let mut src = hetero_net();
+        src.layers[3].w = src.layers[3].w.to_dtype(Dtype::Bf16);
+        let bytes = network_to_bytes(&src);
+        assert_eq!(version_of(&bytes), NET_VERSION_DTYPE);
+        // bf16 payloads are half-width: the v3 file must be smaller
+        // than the same network's all-f32 v2 image by exactly
+        // 2 bytes/element minus the per-record dtype tags.
+        let f32_bytes = network_to_bytes(&hetero_net());
+        let tags = 4 * 2 * src.layers.len();
+        assert_eq!(bytes.len() + 2 * src.layers[3].w.len(), f32_bytes.len() + tags);
+
+        let mut dst = hetero_net();
+        network_from_bytes(&mut dst, &bytes).unwrap();
+        assert_eq!(dst.layers[3].w.dtype(), Dtype::Bf16);
+        assert_eq!(dst.layers[3].w.bits(), src.layers[3].w.bits());
+        for (a, b) in src.layers.iter().zip(&dst.layers) {
+            assert_eq!(a.b, b.b, "f32 records restore bitwise through v3 too");
+        }
+    }
+
+    #[test]
+    fn v2_checkpoint_restores_into_bf16_session() {
+        // Cross-version restore: an old all-f32 file loads into a
+        // network whose weights currently store bf16 — the restored
+        // tensors carry the file's dtype (f32), which every kernel
+        // accepts alongside bf16 activations.
+        let src = hetero_net();
+        let v2 = network_to_bytes(&src);
+        assert_eq!(version_of(&v2), NET_VERSION);
+        let mut dst = hetero_net();
+        dst.layers[3].w = dst.layers[3].w.to_dtype(Dtype::Bf16);
+        network_from_bytes(&mut dst, &v2).unwrap();
+        assert_eq!(dst.layers[3].w.dtype(), Dtype::F32);
+        assert_eq!(dst.layers[3].w, src.layers[3].w);
+    }
+
+    #[test]
+    fn v3_corruption_and_bad_dtype_tag_are_detected() {
+        let mut src = hetero_net();
+        src.layers[3].w = src.layers[3].w.to_dtype(Dtype::Bf16);
+        let mut bytes = network_to_bytes(&src);
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        let mut dst = hetero_net();
+        let err = network_from_bytes(&mut dst, &bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"));
     }
 
     #[test]

@@ -21,6 +21,14 @@ impl Sgd {
     pub fn steps(&self) -> u64 {
         self.steps
     }
+
+    /// The momentum buffer — equal to the last applied update `U`.
+    /// Mixed-precision trainers step the f32 *master* weights and then
+    /// re-quantize, so they need the update by accessor rather than via
+    /// [`Optimizer::step`]'s return borrow (which the master step holds).
+    pub fn velocity(&self) -> &Tensor {
+        &self.velocity
+    }
 }
 
 impl Optimizer for Sgd {
@@ -89,5 +97,24 @@ mod tests {
     fn state_accounting() {
         let sgd = Sgd::new(&[8, 8], 0.9, 0.0);
         assert_eq!(sgd.state_nbytes(), 256);
+    }
+
+    #[test]
+    fn master_step_then_requantize_is_the_mixed_precision_update() {
+        // The bf16 training step: the optimizer touches only the f32
+        // master copy; the bf16 storage weights are re-quantized from it.
+        // velocity() must expose the same update step() returned.
+        use crate::tensor::Dtype;
+        let mut sgd = Sgd::new(&[2], 0.9, 0.0);
+        let mut master = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let mut stored = master.to_dtype(Dtype::Bf16);
+        let g = Tensor::from_vec(&[2], vec![0.5, -0.5]);
+        let upd = sgd.step(&mut master, &g, 0.1).clone();
+        assert_eq!(&upd, sgd.velocity());
+        stored.quantize_from(&master);
+        assert_eq!(stored.dtype(), Dtype::Bf16);
+        for i in 0..2 {
+            assert_eq!(stored.get(i), crate::tensor::bf16_round(master.get(i)));
+        }
     }
 }

@@ -51,7 +51,7 @@ use crate::model::Mlp;
 use crate::optim::{LrBook, Optimizer, Sgd};
 use crate::retiming::StagePartition;
 use crate::strategy::{LayerStrategy, StrategyKind};
-use crate::tensor::{BufferPool, Tensor};
+use crate::tensor::{BufferPool, Dtype, Tensor};
 use crate::train::{evaluate_network, lr_schedule_for};
 use crate::util::{Rng, Stopwatch};
 use anyhow::{anyhow, Context, Result};
@@ -201,6 +201,11 @@ struct StageLayer {
     /// gradients (overwritten every backward, never reallocated).
     dw_buf: Tensor,
     db_buf: Tensor,
+    /// Mixed precision: f32 master weights, stepped by the optimizer;
+    /// the bf16 storage weights re-quantize from them after every step.
+    /// `None` in f32 runs (the optimizer steps `w` directly) — see
+    /// `train::LayerState::master_w`.
+    master_w: Option<Tensor>,
 }
 
 /// Everything one stage thread owns: its layers, its slice of the lr
@@ -230,6 +235,11 @@ struct StageState {
     scratch: Tensor,
     /// Emptied activation-chain Vecs, reused by the forward lane.
     spare_chains: Vec<Vec<Tensor>>,
+    /// Storage dtype for weights and stashed activations (`cfg.dtype`).
+    dtype: Dtype,
+    /// Persistent f32 staging buffer for the bf16 forward lane (kernels
+    /// accumulate f32; the stored activation is its quantization).
+    fwd_scratch: Tensor,
 }
 
 impl StageState {
@@ -317,6 +327,8 @@ impl PipelinedTrainer {
         let stage_of = partition.stage_of().to_vec();
         let input = net.input.clone();
         let init_scale = net.init_scale;
+        let dtype = cfg.dtype;
+        crate::train::check_dtype_served(backend.as_ref(), &net, dtype)?;
 
         let mut stages: Vec<StageState> = (0..stages_n)
             .map(|s| StageState {
@@ -331,15 +343,25 @@ impl PipelinedTrainer {
                 pool: BufferPool::new(),
                 scratch: Tensor::empty(),
                 spare_chains: Vec::new(),
+                dtype,
+                fwd_scratch: Tensor::empty(),
             })
             .collect();
-        for (l, nl) in net.layers.into_iter().enumerate() {
+        for (l, mut nl) in net.layers.into_iter().enumerate() {
+            // Mixed precision: keep the f32 init as the master copy and
+            // quantize the storage weights once (train::assemble does
+            // the same, so both engines start from identical bits).
+            let master_w = (dtype != Dtype::F32).then(|| {
+                let master = nl.w.clone();
+                nl.w = nl.w.to_dtype(dtype);
+                master
+            });
             // All layers of a stage share one delay (d = 2·S(stage));
             // deriving the stage delay from the same `delays` vector the
             // strategies use keeps scheduler and stash windows in lockstep.
             stages[stage_of[l]].delay = delays[l] as u64;
             stages[stage_of[l]].layers.push(StageLayer {
-                strategy: LayerStrategy::new(kind, delays[l]),
+                strategy: LayerStrategy::new_with_dtype(kind, delays[l], dtype),
                 opt_w: Sgd::new(nl.w.shape(), cfg.optim.momentum, cfg.optim.weight_decay),
                 opt_b: Sgd::new(nl.b.shape(), cfg.optim.momentum, 0.0),
                 spec: nl.spec,
@@ -348,6 +370,7 @@ impl PipelinedTrainer {
                 b: nl.b,
                 dw_buf: Tensor::empty(),
                 db_buf: Tensor::empty(),
+                master_w,
             });
         }
 
@@ -714,14 +737,28 @@ fn stage_span_loop(
             for sl in st.layers.iter_mut() {
                 sl.strategy.on_forward(t, &sl.w);
                 let rows = acts.last().expect("chain nonempty").shape()[0];
-                let mut y = st.pool.take(&[rows, sl.op.out_dim()]);
-                sl.op.forward_into(
-                    backend,
-                    acts.last().expect("chain nonempty"),
-                    &sl.w,
-                    &sl.b,
-                    &mut y,
-                )?;
+                let mut y = st.pool.take_dtype(&[rows, sl.op.out_dim()], st.dtype);
+                if st.dtype == Dtype::F32 {
+                    sl.op.forward_into(
+                        backend,
+                        acts.last().expect("chain nonempty"),
+                        &sl.w,
+                        &sl.b,
+                        &mut y,
+                    )?;
+                } else {
+                    // bf16 lane: f32 accumulation in the staging buffer,
+                    // one quantization into the stashed activation —
+                    // identical to the oracle trainer's forward lane.
+                    sl.op.forward_into(
+                        backend,
+                        acts.last().expect("chain nonempty"),
+                        &sl.w,
+                        &sl.b,
+                        &mut st.fwd_scratch,
+                    )?;
+                    y.quantize_from(&st.fwd_scratch);
+                }
                 acts.push(y);
             }
             st.saved_bytes += acts.iter().map(Tensor::nbytes).sum::<usize>();
@@ -775,7 +812,7 @@ fn stage_span_loop(
         for sl in st.layers.iter_mut().rev() {
             let y = acts.pop().expect("layer output present");
             let mut dx = st.pool.take(acts.last().expect("layer input present").shape());
-            let StageLayer { op, w, b, strategy, opt_w, opt_b, dw_buf, db_buf, .. } = sl;
+            let StageLayer { op, w, b, strategy, opt_w, opt_b, dw_buf, db_buf, master_w, .. } = sl;
             let w_bwd = strategy.backward_weights(tb, w, lr_sum);
             op.backward_into(
                 backend,
@@ -788,8 +825,20 @@ fn stage_span_loop(
                 dw_buf,
                 db_buf,
             )?;
-            let upd_w = opt_w.step(w, dw_buf, lr);
-            strategy.on_update(upd_w);
+            match master_w {
+                Some(master) => {
+                    // Mixed precision: step the f32 master, re-quantize
+                    // the storage weights from it (one rounding per
+                    // step, no compounding), feed the EMA the update.
+                    opt_w.step(master, dw_buf, lr);
+                    w.quantize_from(&*master);
+                    strategy.on_update(opt_w.velocity());
+                }
+                None => {
+                    let upd_w = opt_w.step(w, dw_buf, lr);
+                    strategy.on_update(upd_w);
+                }
+            }
             opt_b.step(b, db_buf, lr);
             st.pool.recycle(y);
             let spent = std::mem::replace(&mut dy, dx);

@@ -54,7 +54,7 @@ use crate::config::ExperimentConfig;
 use crate::data::{BatchIter, Dataset, Splits};
 use crate::layers::{Network, NetworkSpec};
 use crate::strategy::StrategyKind;
-use crate::tensor::{workers, Tensor};
+use crate::tensor::{bf16_to_f32, f32_to_bf16, workers, Dtype, Tensor};
 use crate::train::Trainer;
 use crate::util::Rng;
 use anyhow::{anyhow, ensure, Result};
@@ -149,7 +149,9 @@ fn combine_elem(parts: &[Tensor], i: usize) -> f32 {
     debug_assert!(n >= 1 && n <= MAX_SHARDS);
     let mut acc = [0.0f32; MAX_SHARDS];
     for (k, p) in parts.iter().enumerate() {
-        acc[k] = p.data()[i];
+        // `get` widens bf16 wire gradients exactly; the fold below runs
+        // entirely in f32 (the mandatory-accumulation rule, DESIGN §11).
+        acc[k] = p.get(i);
     }
     let mut gap = 1;
     while gap < n {
@@ -213,26 +215,38 @@ pub fn tree_reduce_into_with_threads(
 
 // ---- flat weight codec --------------------------------------------------
 
-/// Flatten a network's parameters into one rank-1 tensor, in the v2
-/// checkpoint record order (layer stack order, `w` then `b`;
+/// Flatten a network's parameters into one rank-1 **f32** tensor, in the
+/// v2 checkpoint record order (layer stack order, `w` then `b`;
 /// parameter-free layers contribute their zero-length params
-/// uniformly). `out` is resized in place — pooled callers reuse storage.
+/// uniformly). bf16 parameters widen exactly — widening is injective,
+/// so bitwise equality of two flats is equivalent to bitwise equality
+/// of the underlying storage tensors, and the ring's drift guards keep
+/// working unchanged in mixed precision. `out` is resized in place.
 pub fn model_to_tensor(net: &Network, out: &mut Tensor) {
     out.resize(&[net.num_params()]);
     let d = out.data_mut();
     let mut at = 0;
     for nl in &net.layers {
         for t in [&nl.w, &nl.b] {
-            d[at..at + t.len()].copy_from_slice(t.data());
+            match t.dtype() {
+                Dtype::F32 => d[at..at + t.len()].copy_from_slice(t.data()),
+                Dtype::Bf16 => {
+                    for (o, &b) in d[at..at + t.len()].iter_mut().zip(t.bits()) {
+                        *o = bf16_to_f32(b);
+                    }
+                }
+            }
             at += t.len();
         }
     }
     debug_assert_eq!(at, d.len());
 }
 
-/// Inverse of [`model_to_tensor`]: scatter a flat buffer back into the
-/// network's parameter tensors (shapes stay authoritative on the
-/// network side; only the value bits move).
+/// Inverse of [`model_to_tensor`]: scatter a flat f32 buffer back into
+/// the network's parameter tensors (shapes *and dtypes* stay
+/// authoritative on the network side; only the value bits move —
+/// re-quantized for bf16 tensors, which round-trips exactly because
+/// every widened bf16 value quantizes back to the same bits).
 pub fn tensor_to_model(flat: &Tensor, net: &mut Network) -> Result<()> {
     ensure!(
         flat.len() == net.num_params(),
@@ -245,7 +259,14 @@ pub fn tensor_to_model(flat: &Tensor, net: &mut Network) -> Result<()> {
     for nl in &mut net.layers {
         for t in [&mut nl.w, &mut nl.b] {
             let n = t.len();
-            t.data_mut().copy_from_slice(&d[at..at + n]);
+            match t.dtype() {
+                Dtype::F32 => t.data_mut().copy_from_slice(&d[at..at + n]),
+                Dtype::Bf16 => {
+                    for (o, &v) in t.bits_mut().iter_mut().zip(&d[at..at + n]) {
+                        *o = f32_to_bf16(v);
+                    }
+                }
+            }
             at += n;
         }
     }
@@ -267,16 +288,27 @@ fn staged_len(tr: &mut Trainer) -> usize {
 
 /// Flatten the staged gradients into `out`, in event order (`dw` then
 /// `db` per event). Every lane runs the identical schedule, so the
-/// layout agrees across lanes without any header.
+/// layout agrees across lanes without any header. The wire tensor
+/// carries the trainer's storage dtype: under bf16 the staged f32
+/// gradients are quantized here, halving RingLink traffic (the flat
+/// buffer is the only thing the channels ship).
 fn staged_to_flat(tr: &mut Trainer, out: &mut Tensor) {
     let total = staged_len(tr);
-    out.resize(&[total]);
+    let wire = tr.dtype();
+    out.resize_dtype(&[total], wire);
     let mut at = 0;
     for i in 0..tr.pending_steps().len() {
         let l = tr.pending_steps()[i].0;
         let (dw, db) = tr.staged_grads_mut(l);
         for t in [&*dw, &*db] {
-            out.data_mut()[at..at + t.len()].copy_from_slice(t.data());
+            match wire {
+                Dtype::F32 => out.data_mut()[at..at + t.len()].copy_from_slice(t.data()),
+                Dtype::Bf16 => {
+                    for (o, &v) in out.bits_mut()[at..at + t.len()].iter_mut().zip(t.data()) {
+                        *o = f32_to_bf16(v);
+                    }
+                }
+            }
             at += t.len();
         }
     }
@@ -284,7 +316,10 @@ fn staged_to_flat(tr: &mut Trainer, out: &mut Tensor) {
 }
 
 /// Scatter the reduced mean back into the staged-gradient workspaces,
-/// ready for [`Trainer::apply_pending`].
+/// ready for [`Trainer::apply_pending`]. The flat buffer is
+/// self-describing: a bf16 wire widens exactly into the f32 workspaces,
+/// so every lane applies the identical gradient bits regardless of how
+/// many replicas contributed to the mean.
 fn flat_to_staged(flat: &Tensor, tr: &mut Trainer) -> Result<()> {
     let mut at = 0;
     for i in 0..tr.pending_steps().len() {
@@ -298,7 +333,14 @@ fn flat_to_staged(flat: &Tensor, tr: &mut Trainer) -> Result<()> {
                 flat.len(),
                 at + n
             );
-            t.data_mut().copy_from_slice(&flat.data()[at..at + n]);
+            match flat.dtype() {
+                Dtype::F32 => t.data_mut().copy_from_slice(&flat.data()[at..at + n]),
+                Dtype::Bf16 => {
+                    for (o, &b) in t.data_mut().iter_mut().zip(&flat.bits()[at..at + n]) {
+                        *o = bf16_to_f32(b);
+                    }
+                }
+            }
             at += n;
         }
     }
@@ -549,9 +591,17 @@ impl LocalRing {
             Ok(())
         })?;
         tree_reduce_into(&self.slots, &mut self.reduced, self.inv);
+        // The reduced mean is f32 (mandatory accumulation); the return
+        // leg re-quantizes it onto a bf16 wire so every lane receives —
+        // and applies — the identical bf16 bits, keeping the drift
+        // guard valid independent of the replica count.
+        let wire = self.block.lanes[0].trainer.dtype();
         for j in 0..self.slots.len() {
             let mut buf = std::mem::replace(&mut self.slots[j], Tensor::empty());
-            buf.copy_from(&self.reduced);
+            match wire {
+                Dtype::F32 => buf.copy_from(&self.reduced),
+                Dtype::Bf16 => buf.quantize_from(&self.reduced),
+            }
             self.block.apply(j, buf)?;
         }
         Ok(())
@@ -752,9 +802,16 @@ fn train_ring_threaded(
                 }
             }
             tree_reduce_into(&slots, &mut reduced, inv);
+            // Same return-leg re-quantization as `LocalRing::iteration`:
+            // a bf16 wire ships — and every lane applies — identical
+            // bf16 mean bits, at half the f32 channel traffic.
+            let wire = block.lanes[0].trainer.dtype();
             for j in 0..slots.len() {
                 let mut buf = std::mem::replace(&mut slots[j], Tensor::empty());
-                buf.copy_from(&reduced);
+                match wire {
+                    Dtype::F32 => buf.copy_from(&reduced),
+                    Dtype::Bf16 => buf.quantize_from(&reduced),
+                }
                 if j < lanes_per {
                     block.apply(j, buf)?;
                 } else {
@@ -965,5 +1022,59 @@ mod tests {
 
         let short = Tensor::zeros(&[golden.len() - 1]);
         assert!(tensor_to_model(&short, &mut net).is_err());
+    }
+
+    #[test]
+    fn weight_codec_widens_and_requantizes_bf16_exactly() {
+        let mcfg = ModelConfig {
+            batch: 8,
+            input_dim: 6,
+            hidden_dim: 5,
+            classes: 4,
+            layers: 3,
+            init_scale: 1.0,
+        };
+        let mut rng = Rng::new(12);
+        let mut net = Network::build(&NetworkSpec::mlp(&mcfg), &mut rng).unwrap();
+        for nl in &mut net.layers {
+            nl.w = nl.w.to_dtype(Dtype::Bf16);
+        }
+        let golden_bits: Vec<Vec<u16>> = net.layers.iter().map(|nl| nl.w.bits().to_vec()).collect();
+
+        // Flatten widens bf16 exactly: every flat value must round-trip
+        // through quantization back to the stored bits.
+        let mut flat = Tensor::empty();
+        model_to_tensor(&net, &mut flat);
+        assert_eq!(flat.dtype(), Dtype::F32, "the flat weight codec is always f32");
+        assert_eq!(flat.len(), net.num_params());
+
+        // Scatter re-quantizes; widen∘quantize is the identity on bf16
+        // bits, so the storage comes back bitwise and dtype intact.
+        for nl in &mut net.layers {
+            nl.w.fill(0.0);
+        }
+        tensor_to_model(&flat, &mut net).unwrap();
+        for (nl, golden) in net.layers.iter().zip(&golden_bits) {
+            assert_eq!(nl.w.dtype(), Dtype::Bf16);
+            assert_eq!(nl.w.bits(), &golden[..]);
+        }
+    }
+
+    #[test]
+    fn tree_reduce_widens_bf16_parts_bitwise() {
+        // bf16 wire parts must reduce to exactly the same f32 mean as
+        // their pre-widened f32 images: the combine reads elements via
+        // `get`, so the summation geometry never sees the storage dtype.
+        for n in 1..=5usize {
+            let mut rng = Rng::new(31 + n as u64);
+            let parts_q: Vec<Tensor> =
+                (0..n).map(|_| Tensor::randn(&[33], 0.7, &mut rng).to_dtype(Dtype::Bf16)).collect();
+            let parts_w: Vec<Tensor> = parts_q.iter().map(|p| p.to_dtype(Dtype::F32)).collect();
+            let (mut a, mut b) = (Tensor::empty(), Tensor::empty());
+            tree_reduce_into_with_threads(&parts_q, &mut a, 1.0 / n as f32, 1);
+            tree_reduce_into_with_threads(&parts_w, &mut b, 1.0 / n as f32, 1);
+            assert_eq!(a.dtype(), Dtype::F32, "reduced mean accumulates and lands in f32");
+            assert_eq!(a, b);
+        }
     }
 }

@@ -587,9 +587,13 @@ impl Server {
         Ok(epoch)
     }
 
-    /// [`Server::reload`] from a v2 network checkpoint on disk (the
-    /// restore-from-disk serving path): the file must hold an
-    /// architecture-matching checkpoint.
+    /// [`Server::reload`] from a network checkpoint on disk — v2
+    /// (all-f32) or v3 (dtype-tagged, bf16 payloads) — the
+    /// restore-from-disk serving path: the file must hold an
+    /// architecture-matching checkpoint. Restored tensors keep the
+    /// file's storage dtype; the kernels widen bf16 weights per
+    /// operand, so a bf16 checkpoint serves without any conversion
+    /// pass.
     pub fn reload_from_file(&self, path: &str) -> Result<u64> {
         // Scratch params are fully overwritten by the restore; the rng
         // seed is irrelevant.
@@ -1208,6 +1212,41 @@ mod tests {
         let stats = server.shutdown().unwrap();
         assert_eq!(stats.reloads, 1);
         assert_eq!(stats.epoch, 1);
+    }
+
+    #[test]
+    fn reload_from_file_roundtrips_bf16_checkpoints() {
+        use crate::model::checkpoint::save_network;
+        use crate::tensor::Dtype;
+        // A trained-in-bf16 network checkpoints as v3; the serving path
+        // must restore it bit-for-bit and serve responses that match
+        // the bf16 network's own sequential oracle.
+        let net0 = tiny_net(5);
+        let mut net1 = tiny_net(6);
+        for nl in &mut net1.layers {
+            nl.w = nl.w.to_dtype(Dtype::Bf16);
+        }
+        let mut oracle1 = net1.snapshot().unwrap();
+        let be = HostBackend::new();
+        let path = std::env::temp_dir().join(format!("lp2_srv_bf16_{}.bin", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        save_network(&net1, &path).unwrap();
+
+        let cfg = ServerConfig { max_batch: 4, max_wait_ticks: 0, shrink_under: 0, queue_depth: 8, stages: 2 };
+        let server = Server::start(host(), &net0, &cfg).unwrap();
+        assert_eq!(server.reload_from_file(&path).unwrap(), 1);
+        let mut cl = server.client();
+        let x = Tensor::randn(&[2, 12], 1.0, &mut Rng::new(3));
+        cl.submit(x.clone()).unwrap();
+        let r = cl.recv().unwrap();
+        assert_eq!(r.version, 1);
+        assert_eq!(
+            r.data,
+            oracle1.forward_full(&be, &x).unwrap(),
+            "served bf16 forward must equal the bf16 oracle bitwise"
+        );
+        server.shutdown().unwrap();
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

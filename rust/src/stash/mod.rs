@@ -202,6 +202,25 @@ mod tests {
     }
 
     #[test]
+    fn stash_inherits_storage_dtype_and_halves_bytes() {
+        // The stash clones / copy_froms whatever it is handed, so bf16
+        // weight history costs half the bytes of f32 — including through
+        // the at-capacity slot-recycling path.
+        use crate::tensor::Dtype;
+        let mut q = WeightStash::new(3);
+        let mut full = WeightStash::new(3);
+        for t in 0..6u64 {
+            q.push(t, &w(t as f32).to_dtype(Dtype::Bf16));
+            full.push(t, &w(t as f32));
+        }
+        assert_eq!(q.nbytes() * 2, full.nbytes());
+        assert_eq!(q.peak_nbytes() * 2, full.peak_nbytes());
+        let got = q.get(4).unwrap();
+        assert_eq!(got.dtype(), Dtype::Bf16);
+        assert_eq!(got, &w(4.0).to_dtype(Dtype::Bf16));
+    }
+
+    #[test]
     fn activation_fifo_order() {
         let mut a = ActivationStash::new();
         a.push(0, vec![w(0.0)]);

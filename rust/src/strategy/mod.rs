@@ -15,7 +15,7 @@
 
 use crate::ema::{FixedEma, GradientAverager, PipelineAwareEma};
 use crate::stash::WeightStash;
-use crate::tensor::Tensor;
+use crate::tensor::{Dtype, Tensor};
 use anyhow::bail;
 
 /// Identifier for a weight-handling strategy (config / CLI surface).
@@ -102,17 +102,27 @@ pub struct LayerStrategy {
 
 impl LayerStrategy {
     pub fn new(kind: StrategyKind, delay: usize) -> Self {
+        LayerStrategy::new_with_dtype(kind, delay, Dtype::F32)
+    }
+
+    /// [`LayerStrategy::new`] with staleness state (EMA accumulators)
+    /// stored in `dtype`. The stash needs no parameter: it clones the
+    /// weight tensors it is handed and so inherits their dtype; the
+    /// reconstruction workspace stays f32 (`reconstruct_into` widens).
+    pub fn new_with_dtype(kind: StrategyKind, delay: usize, dtype: Dtype) -> Self {
         let stash = match kind {
             StrategyKind::Stashing if delay > 0 => Some(WeightStash::new(delay + 1)),
             _ => None,
         };
         let averager: Option<Box<dyn GradientAverager>> = match kind {
-            StrategyKind::FixedEma => Some(Box::new(FixedEma::new(FIXED_EMA_BETA))),
+            StrategyKind::FixedEma => {
+                Some(Box::new(FixedEma::new_with_dtype(FIXED_EMA_BETA, dtype)))
+            }
             StrategyKind::PipelineAwareEma => {
                 // Window matched to the layer's own delay (Eq. 8–9);
                 // a zero-delay layer needs no reconstruction but keep a
                 // width-1 window so the state machine is uniform.
-                Some(Box::new(PipelineAwareEma::new(delay.max(1))))
+                Some(Box::new(PipelineAwareEma::new_with_dtype(delay.max(1), dtype)))
             }
             _ => None,
         };
@@ -288,6 +298,38 @@ mod tests {
             let bw = s.backward_weights(0, &cur, 0.3);
             assert_eq!(bw.data(), cur.data(), "{k:?}");
         }
+    }
+
+    #[test]
+    fn bf16_state_halves_and_reconstruction_is_f32() {
+        // Mixed-precision staleness state: EMA accumulators store bf16
+        // (half the bytes), the stash inherits the dtype of the weights
+        // pushed into it, and EMA reconstruction always emits f32.
+        let delay = 3;
+        let mut q = LayerStrategy::new_with_dtype(StrategyKind::PipelineAwareEma, delay, Dtype::Bf16);
+        let mut full = LayerStrategy::new(StrategyKind::PipelineAwareEma, delay);
+        let u = w(1.0);
+        for _ in 0..5 {
+            q.on_update(&u);
+            full.on_update(&u);
+        }
+        assert_eq!(q.staleness_nbytes() * 2, full.staleness_nbytes());
+        let cur = w(10.0).to_dtype(Dtype::Bf16);
+        let bw = q.backward_weights(0, &cur, 0.5);
+        assert_eq!(bw.dtype(), Dtype::F32, "reconstruction widens");
+        // Constant stream: mean is exactly u (representable in bf16), so
+        // recon = widen(cur) + 0.5·u exactly.
+        let mut expect = cur.to_dtype(Dtype::F32);
+        expect.axpy(0.5, &u);
+        assert_eq!(bw, &expect);
+
+        let mut st = LayerStrategy::new_with_dtype(StrategyKind::Stashing, delay, Dtype::Bf16);
+        for t in 0..4u64 {
+            st.on_forward(t, &w(t as f32).to_dtype(Dtype::Bf16));
+        }
+        let stashed = st.backward_weights(0, &cur, 0.0);
+        assert_eq!(stashed.dtype(), Dtype::Bf16, "stash keeps storage dtype");
+        assert_eq!(stashed, &w(0.0).to_dtype(Dtype::Bf16));
     }
 
     #[test]

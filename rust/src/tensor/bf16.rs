@@ -1,0 +1,151 @@
+//! Scalar bf16 <-> f32 conversions.
+//!
+//! bf16 is the top 16 bits of an IEEE-754 f32: 1 sign bit, the full 8
+//! exponent bits, 7 mantissa bits. That makes widening (`bf16 -> f32`)
+//! *exact* — a pure bit shift — and narrowing a pure mantissa rounding
+//! with the same dynamic range as f32 (no overflow-to-inf surprises
+//! below f32's own limits, subnormals fall out of the same bit
+//! arithmetic). We round to nearest, ties to even (RTNE), the rounding
+//! every hardware bf16 unit implements, so stored weights match what an
+//! accelerator would hold.
+//!
+//! These are the *only* conversion routines in the crate: kernels widen
+//! through [`bf16_to_f32`] when packing panels, and every store of a
+//! bf16 tensor funnels through [`f32_to_bf16`]. Keeping them scalar and
+//! branch-light matters — they sit inside the packing loops of the
+//! matmul family.
+
+/// Machine epsilon of the bf16 format (8 bits of precision incl. the
+/// implicit leading one): `2^-8`. The dtype-derived tolerance rule for
+/// comparing bf16 results against the f32 oracle is `k * EPS_BF16 *
+/// scale` for a length-`k` reduction (DESIGN.md §11).
+pub const EPS_BF16: f32 = 0.003_906_25;
+
+/// Narrow an f32 to bf16 storage bits, round to nearest, ties to even.
+///
+/// NaNs are quieted (the quiet bit is forced on) so that a signalling
+/// NaN whose payload lives entirely in the discarded low mantissa bits
+/// cannot round to an infinity bit pattern. Infinities and subnormals
+/// need no special casing: the carry arithmetic below is exact
+/// sign-magnitude rounding for every finite input, and +/-inf have an
+/// all-zero low half so the round increment never fires.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // Round-to-nearest-even on the low 16 bits: add 0x7FFF plus the
+    // current LSB of the retained half, then truncate. A half-way value
+    // (low half == 0x8000) bumps only when the retained LSB is odd —
+    // ties go to even. The carry can ripple from mantissa into exponent
+    // (that is correct rounding: 1.111..1 * 2^e rounds to 1.0 * 2^(e+1),
+    // and the largest finite magnitudes round to infinity) but can never
+    // reach the sign bit.
+    let lsb = (bits >> 16) & 1;
+    ((bits.wrapping_add(0x7FFF + lsb)) >> 16) as u16
+}
+
+/// Widen bf16 storage bits to f32. Exact for every bit pattern.
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Quantize through bf16 and back: the value a bf16-stored tensor
+/// actually holds for `x`.
+#[inline]
+pub fn bf16_round(x: f32) -> f32 {
+    bf16_to_f32(f32_to_bf16(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widening_is_a_pure_shift() {
+        for b in [0u16, 1, 0x3F80, 0x7F80, 0xFF80, 0x8000, 0xABCD, 0xFFFF] {
+            assert_eq!(bf16_to_f32(b).to_bits(), (b as u32) << 16, "bits {b:#06x}");
+        }
+    }
+
+    #[test]
+    fn representable_values_round_trip_exactly() {
+        // Anything whose low 16 f32 bits are zero is exactly representable.
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 256.0, -0.0078125, 3.140625] {
+            assert_eq!(v.to_bits() & 0xFFFF, 0, "test value {v} not representable");
+            assert_eq!(bf16_round(v).to_bits(), v.to_bits(), "{v} did not round-trip");
+        }
+        assert_eq!(bf16_round(f32::INFINITY), f32::INFINITY);
+        assert_eq!(bf16_round(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn rounds_to_nearest() {
+        // 1.0 = 0x3F800000; next bf16 up is 0x3F81 = 1.0078125.
+        let up = bf16_to_f32(0x3F81);
+        assert_eq!(bf16_round(1.001), 1.0, "below midpoint rounds down");
+        assert_eq!(bf16_round(1.007), up, "above midpoint rounds up");
+    }
+
+    #[test]
+    fn ties_go_to_even() {
+        // Exact midpoint between 0x3F80 (even) and 0x3F81 (odd): low
+        // half exactly 0x8000.
+        let tie_low = f32::from_bits(0x3F80_8000);
+        assert_eq!(f32_to_bf16(tie_low), 0x3F80, "tie must pick the even LSB");
+        // Midpoint between 0x3F81 (odd) and 0x3F82 (even).
+        let tie_high = f32::from_bits(0x3F81_8000);
+        assert_eq!(f32_to_bf16(tie_high), 0x3F82, "tie must pick the even LSB");
+    }
+
+    #[test]
+    fn mantissa_carry_ripples_into_exponent() {
+        // Largest f32 below 2.0 rounds up to exactly 2.0.
+        let just_below_two = f32::from_bits(0x3FFF_FFFF);
+        assert_eq!(bf16_to_f32(f32_to_bf16(just_below_two)), 2.0);
+        // Largest finite f32 rounds to +inf (bf16's top finite value is
+        // 0x7F7F; MAX is past its rounding midpoint).
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::MAX)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::MIN)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn nan_stays_nan_and_is_quieted() {
+        let quiet = f32_to_bf16(f32::NAN);
+        assert!(bf16_to_f32(quiet).is_nan());
+        // Signalling NaN with payload only in the discarded low half:
+        // exponent all ones, mantissa 0x0000_0001.
+        let snan = f32::from_bits(0x7F80_0001);
+        assert!(snan.is_nan());
+        let b = f32_to_bf16(snan);
+        assert!(bf16_to_f32(b).is_nan(), "sNaN must not collapse to inf");
+        assert_ne!(b & 0x0040, 0, "quiet bit must be forced on");
+    }
+
+    #[test]
+    fn subnormals_round_by_the_same_bit_arithmetic() {
+        // f32 subnormals are far below bf16's subnormal range only in
+        // mantissa; the shared exponent field means small f32 subnormals
+        // round to (signed) zero, large ones to bf16 subnormals.
+        let tiny = f32::from_bits(0x0000_0001); // smallest positive subnormal
+        assert_eq!(f32_to_bf16(tiny), 0x0000, "rounds to +0");
+        let neg_tiny = f32::from_bits(0x8000_0001);
+        assert_eq!(f32_to_bf16(neg_tiny), 0x8000, "rounds to -0");
+        let big_sub = f32::from_bits(0x007F_8000); // midpoint ties to even
+        assert_eq!(f32_to_bf16(big_sub), 0x0080);
+    }
+
+    #[test]
+    fn quantization_error_is_within_eps() {
+        // Relative error of RTNE is bounded by eps/2 for normal values.
+        let mut x = 1.0e-30f32;
+        while x < 1.0e30 {
+            let q = bf16_round(x);
+            let rel = ((q - x) / x).abs();
+            assert!(rel <= EPS_BF16 * 0.5 + 1e-9, "x={x} q={q} rel={rel}");
+            x *= 3.7;
+        }
+    }
+}

@@ -1,37 +1,127 @@
-//! Host-side dense `f32` tensors.
+//! Host-side dense tensors, storage-dtype parameterized.
 //!
 //! Weights, optimizer state, stashes and EMA accumulators live on the host
 //! in Rust; XLA executables only see them as input literals. This module
 //! provides the small set of operations those components need, plus a
 //! reference matmul used by tests to cross-check the PJRT path.
+//!
+//! A [`Tensor`] stores its payload in one of two dtypes ([`Dtype`]):
+//! `F32` (the default — bitwise-identical to the historical all-f32
+//! tensor) or `Bf16` (`u16` storage bits, round-to-nearest-even on
+//! store, exact widening on load — see [`bf16`]). The mixed-precision
+//! contract (DESIGN.md §11): *storage* may be bf16, *arithmetic* is
+//! always f32 — every multi-element reduction accumulates in f32, and
+//! the elementwise update primitives below read through f32 and
+//! re-quantize on write. `data()`/`data_mut()` keep their `&[f32]`
+//! signatures and panic on bf16 tensors, so every legacy call site is a
+//! checked assertion that the f32-only path never silently receives
+//! quantized storage.
 
+pub mod bf16;
 mod ops;
 pub mod pool;
 pub mod workers;
 
+pub use bf16::{bf16_round, bf16_to_f32, f32_to_bf16, EPS_BF16};
 pub use ops::*;
 pub use pool::BufferPool;
 pub use workers::WorkerPool;
 
-/// Dense row-major `f32` tensor with explicit shape.
+/// Env var selecting the training storage dtype (`f32` | `bf16`);
+/// mirrors `LAYERPIPE2_WORKERS` / `LAYERPIPE2_REPLICAS`. CLI `--dtype`
+/// overrides it.
+pub const DTYPE_ENV: &str = "LAYERPIPE2_DTYPE";
+
+/// Storage dtype of a [`Tensor`]'s payload.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    /// 4-byte IEEE-754 single precision (the default; bitwise-identical
+    /// behavior to the historical all-f32 tensor).
+    #[default]
+    F32,
+    /// 2-byte brain float: top half of an f32, RTNE on store, exact
+    /// widening on load.
+    Bf16,
+}
+
+impl Dtype {
+    /// Payload bytes per element.
+    pub fn size_of(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::Bf16 => 2,
+        }
+    }
+
+    /// Machine epsilon of the format — the unit of the dtype-derived
+    /// oracle tolerance `k * eps * scale` for length-`k` reductions.
+    pub fn eps(self) -> f32 {
+        match self {
+            Dtype::F32 => f32::EPSILON,
+            Dtype::Bf16 => EPS_BF16,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a CLI/env/TOML spelling. `None` for anything unknown.
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "float32" => Some(Dtype::F32),
+            "bf16" | "bfloat16" => Some(Dtype::Bf16),
+            _ => None,
+        }
+    }
+
+    /// Dtype requested via [`DTYPE_ENV`], if set and valid.
+    pub fn from_env() -> Option<Dtype> {
+        std::env::var(DTYPE_ENV).ok().as_deref().and_then(Dtype::parse)
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Dense row-major tensor with explicit shape and storage dtype.
+///
+/// Exactly one backing store is active (`data` for `F32`, `bits` for
+/// `Bf16`); the other is always empty but keeps its capacity, so a
+/// pooled buffer that flips dtype does not leak its old allocation.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
     shape: Vec<usize>,
     data: Vec<f32>,
+    bits: Vec<u16>,
+    dtype: Dtype,
 }
 
 impl Tensor {
-    /// Zero-filled tensor.
+    /// Zero-filled f32 tensor.
     pub fn zeros(shape: &[usize]) -> Self {
         let n = shape.iter().product();
-        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n], bits: Vec::new(), dtype: Dtype::F32 }
+    }
+
+    /// Zero-filled tensor of the given storage dtype.
+    pub fn zeros_dtype(shape: &[usize], dtype: Dtype) -> Self {
+        let mut t = Tensor::empty();
+        t.resize_dtype(shape, dtype);
+        t
     }
 
     /// Tensor from existing data; panics if the element count mismatches.
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
         let n: usize = shape.iter().product();
         assert_eq!(n, data.len(), "shape {shape:?} needs {n} elems, got {}", data.len());
-        Tensor { shape: shape.to_vec(), data }
+        Tensor { shape: shape.to_vec(), data, bits: Vec::new(), dtype: Dtype::F32 }
     }
 
     /// Allocation-free placeholder (no shape, no data). Used as the
@@ -39,33 +129,109 @@ impl Tensor {
     /// value of `_into`-kernel outputs, which resize it on first write.
     /// Only `len()`/`is_empty()`/`nbytes()` are meaningful on it.
     pub fn empty() -> Self {
-        Tensor { shape: Vec::new(), data: Vec::new() }
+        Tensor { shape: Vec::new(), data: Vec::new(), bits: Vec::new(), dtype: Dtype::F32 }
     }
 
-    /// Reshape in place, reusing the backing store when the element count
-    /// matches (the `_into`-kernel output contract). Grown elements are
-    /// zero-initialized; existing elements keep their (stale) values —
-    /// callers must overwrite or [`Tensor::fill`].
+    /// Storage dtype of the payload.
+    #[inline]
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// Reshape in place **as f32**, reusing the backing store when the
+    /// element count matches (the `_into`-kernel output contract: kernel
+    /// outputs are always f32, so a recycled bf16 buffer handed to a
+    /// kernel converts here rather than corrupting the result). Grown
+    /// elements are zero-initialized; existing elements keep their
+    /// (stale) values — callers must overwrite or [`Tensor::fill`].
     pub fn resize(&mut self, shape: &[usize]) {
-        let n: usize = shape.iter().product();
+        self.resize_dtype(shape, Dtype::F32);
+    }
+
+    /// Reshape in place to the given storage dtype. Switching dtype
+    /// empties the other backing store but keeps both capacities.
+    pub fn resize_dtype(&mut self, shape: &[usize], dtype: Dtype) {
         if self.shape.as_slice() != shape {
             self.shape.clear();
             self.shape.extend_from_slice(shape);
         }
-        if self.data.len() != n {
-            self.data.resize(n, 0.0);
+        if self.dtype != dtype {
+            self.dtype = dtype;
+            match dtype {
+                Dtype::F32 => self.bits.clear(),
+                Dtype::Bf16 => self.data.clear(),
+            }
+        }
+        let n: usize = self.shape.iter().product();
+        match dtype {
+            Dtype::F32 => {
+                if self.data.len() != n {
+                    self.data.resize(n, 0.0);
+                }
+            }
+            Dtype::Bf16 => {
+                if self.bits.len() != n {
+                    self.bits.resize(n, 0);
+                }
+            }
         }
     }
 
-    /// `self = src`, reusing the existing allocation when sizes match.
+    /// `self = src` (shape, dtype and payload), reusing the existing
+    /// allocation when sizes match.
     pub fn copy_from(&mut self, src: &Tensor) {
-        self.resize(&src.shape);
-        self.data.copy_from_slice(&src.data);
+        self.resize_dtype(&src.shape, src.dtype);
+        match src.dtype {
+            Dtype::F32 => self.data.copy_from_slice(&src.data),
+            Dtype::Bf16 => self.bits.copy_from_slice(&src.bits),
+        }
     }
 
-    /// Set every element to `v`.
+    /// `self = f32(src)`: widen `src` into this tensor as f32. Exact for
+    /// bf16 sources (widening is a bit shift); for f32 sources this is
+    /// bitwise `copy_from`.
+    pub fn widen_from(&mut self, src: &Tensor) {
+        self.resize_dtype(&src.shape, Dtype::F32);
+        match src.dtype {
+            Dtype::F32 => self.data.copy_from_slice(&src.data),
+            Dtype::Bf16 => {
+                for (o, &b) in self.data.iter_mut().zip(src.bits.iter()) {
+                    *o = bf16_to_f32(b);
+                }
+            }
+        }
+    }
+
+    /// `self = bf16(src)`: quantize an f32 tensor into this tensor's
+    /// bf16 storage (RTNE per element).
+    pub fn quantize_from(&mut self, src: &Tensor) {
+        self.resize_dtype(&src.shape, Dtype::Bf16);
+        match src.dtype {
+            Dtype::F32 => {
+                for (o, &v) in self.bits.iter_mut().zip(src.data.iter()) {
+                    *o = f32_to_bf16(v);
+                }
+            }
+            Dtype::Bf16 => self.bits.copy_from_slice(&src.bits),
+        }
+    }
+
+    /// Converted copy. `to_dtype(self.dtype())` is a plain clone.
+    pub fn to_dtype(&self, dtype: Dtype) -> Tensor {
+        let mut t = Tensor::empty();
+        match dtype {
+            Dtype::F32 => t.widen_from(self),
+            Dtype::Bf16 => t.quantize_from(self),
+        }
+        t
+    }
+
+    /// Set every element to `v` (quantized on bf16 tensors).
     pub fn fill(&mut self, v: f32) {
-        self.data.fill(v);
+        match self.dtype {
+            Dtype::F32 => self.data.fill(v),
+            Dtype::Bf16 => self.bits.fill(f32_to_bf16(v)),
+        }
     }
 
     /// i.i.d. normal entries with standard deviation `std`.
@@ -84,28 +250,70 @@ impl Tensor {
     }
 
     pub fn len(&self) -> usize {
-        self.data.len()
+        match self.dtype {
+            Dtype::F32 => self.data.len(),
+            Dtype::Bf16 => self.bits.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.len() == 0
     }
 
-    /// Size in bytes of the payload (for stash memory accounting).
+    /// Size in bytes of the payload (for stash memory accounting —
+    /// halves when the stash stores bf16).
     pub fn nbytes(&self) -> usize {
-        self.data.len() * std::mem::size_of::<f32>()
+        self.len() * self.dtype.size_of()
     }
 
+    /// f32 payload view; panics on bf16 tensors (use [`Tensor::get`] or
+    /// widen first — see the module contract).
+    #[inline]
     pub fn data(&self) -> &[f32] {
+        assert!(self.dtype == Dtype::F32, "data() on a {} tensor — widen first", self.dtype);
         &self.data
     }
 
+    #[inline]
     pub fn data_mut(&mut self) -> &mut [f32] {
+        assert!(self.dtype == Dtype::F32, "data_mut() on a {} tensor — widen first", self.dtype);
         &mut self.data
     }
 
+    /// bf16 storage-bit view; panics on f32 tensors.
+    #[inline]
+    pub fn bits(&self) -> &[u16] {
+        assert!(self.dtype == Dtype::Bf16, "bits() on a {} tensor", self.dtype);
+        &self.bits
+    }
+
+    #[inline]
+    pub fn bits_mut(&mut self) -> &mut [u16] {
+        assert!(self.dtype == Dtype::Bf16, "bits_mut() on a {} tensor", self.dtype);
+        &mut self.bits
+    }
+
     pub fn into_vec(self) -> Vec<f32> {
+        assert!(self.dtype == Dtype::F32, "into_vec() on a {} tensor", self.dtype);
         self.data
+    }
+
+    /// Read element `i` (flat index) as f32; exact on bf16 storage.
+    #[inline]
+    pub fn get(&self, i: usize) -> f32 {
+        match self.dtype {
+            Dtype::F32 => self.data[i],
+            Dtype::Bf16 => bf16_to_f32(self.bits[i]),
+        }
+    }
+
+    /// Write element `i` (flat index), quantizing on bf16 storage.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: f32) {
+        match self.dtype {
+            Dtype::F32 => self.data[i] = v,
+            Dtype::Bf16 => self.bits[i] = f32_to_bf16(v),
+        }
     }
 
     /// 2-D accessor (row-major); debug-asserts bounds.
@@ -113,54 +321,94 @@ impl Tensor {
     pub fn at2(&self, i: usize, j: usize) -> f32 {
         debug_assert_eq!(self.ndim(), 2);
         let cols = self.shape[1];
-        self.data[i * cols + j]
+        self.get(i * cols + j)
     }
 
     #[inline]
     pub fn set2(&mut self, i: usize, j: usize, v: f32) {
         debug_assert_eq!(self.ndim(), 2);
         let cols = self.shape[1];
-        self.data[i * cols + j] = v;
+        self.set(i * cols + j, v);
     }
 
-    /// `self += alpha * other` (axpy). Shapes must match.
+    /// `self += alpha * other` (axpy). Shapes must match. On the all-f32
+    /// path this is the historical bitwise loop; any bf16 operand reads
+    /// and accumulates through f32 and re-quantizes on store.
     pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
         assert_eq!(self.shape, other.shape, "axpy shape mismatch");
-        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
-            *a += alpha * b;
+        if self.dtype == Dtype::F32 && other.dtype == Dtype::F32 {
+            for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+                *a += alpha * b;
+            }
+        } else {
+            for i in 0..self.len() {
+                let v = self.get(i) + alpha * other.get(i);
+                self.set(i, v);
+            }
         }
     }
 
     /// `self *= s`.
     pub fn scale(&mut self, s: f32) {
-        for a in self.data.iter_mut() {
-            *a *= s;
+        match self.dtype {
+            Dtype::F32 => {
+                for a in self.data.iter_mut() {
+                    *a *= s;
+                }
+            }
+            Dtype::Bf16 => {
+                for b in self.bits.iter_mut() {
+                    *b = f32_to_bf16(bf16_to_f32(*b) * s);
+                }
+            }
         }
     }
 
     /// In-place convex blend `self = beta*self + (1-beta)*other` — the EMA
-    /// update primitive (paper Eq. 7).
+    /// update primitive (paper Eq. 7). The blend itself is always f32;
+    /// bf16 EMA state quantizes only the stored result (the "store bf16
+    /// history, reconstruct through f32" rule).
     pub fn ema_update(&mut self, beta: f32, other: &Tensor) {
         assert_eq!(self.shape, other.shape, "ema shape mismatch");
         let omb = 1.0 - beta;
-        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
-            *a = beta * *a + omb * b;
+        if self.dtype == Dtype::F32 && other.dtype == Dtype::F32 {
+            for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+                *a = beta * *a + omb * b;
+            }
+        } else {
+            for i in 0..self.len() {
+                let v = beta * self.get(i) + omb * other.get(i);
+                self.set(i, v);
+            }
         }
     }
 
-    /// Euclidean norm.
+    /// Euclidean norm (f32 accumulation regardless of storage dtype).
     pub fn norm(&self) -> f32 {
-        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+        match self.dtype {
+            Dtype::F32 => self.data.iter().map(|x| x * x).sum::<f32>().sqrt(),
+            Dtype::Bf16 => {
+                self.bits.iter().map(|&b| bf16_to_f32(b)).map(|x| x * x).sum::<f32>().sqrt()
+            }
+        }
     }
 
-    /// Max |a-b| against another tensor.
+    /// Max |a-b| against another tensor (either dtype; reads are exact).
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
         assert_eq!(self.shape, other.shape);
-        self.data
-            .iter()
-            .zip(other.data.iter())
-            .map(|(a, b)| (a - b).abs())
-            .fold(0.0, f32::max)
+        if self.dtype == Dtype::F32 && other.dtype == Dtype::F32 {
+            self.data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max)
+        } else {
+            let mut m = 0.0f32;
+            for i in 0..self.len() {
+                m = m.max((self.get(i) - other.get(i)).abs());
+            }
+            m
+        }
     }
 }
 
@@ -175,6 +423,7 @@ mod tests {
         assert_eq!(t.shape(), &[3, 4]);
         assert_eq!(t.len(), 12);
         assert_eq!(t.nbytes(), 48);
+        assert_eq!(t.dtype(), Dtype::F32);
         assert!(t.data().iter().all(|&x| x == 0.0));
     }
 
@@ -235,5 +484,99 @@ mod tests {
         let t = Tensor::from_vec(&[2, 3], vec![0., 1., 2., 3., 4., 5.]);
         assert_eq!(t.at2(0, 2), 2.0);
         assert_eq!(t.at2(1, 0), 3.0);
+    }
+
+    #[test]
+    fn dtype_parse_and_sizes() {
+        assert_eq!(Dtype::parse("f32"), Some(Dtype::F32));
+        assert_eq!(Dtype::parse("BF16"), Some(Dtype::Bf16));
+        assert_eq!(Dtype::parse("bfloat16"), Some(Dtype::Bf16));
+        assert_eq!(Dtype::parse("f16"), None);
+        assert_eq!(Dtype::F32.size_of(), 4);
+        assert_eq!(Dtype::Bf16.size_of(), 2);
+        assert_eq!(Dtype::Bf16.eps(), EPS_BF16);
+    }
+
+    #[test]
+    fn bf16_tensor_basics() {
+        let mut t = Tensor::zeros_dtype(&[2, 2], Dtype::Bf16);
+        assert_eq!(t.dtype(), Dtype::Bf16);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.nbytes(), 8, "bf16 payload is 2 bytes/elem");
+        t.set(0, 1.5);
+        t.set2(1, 1, -0.25);
+        assert_eq!(t.get(0), 1.5, "exactly representable values store exactly");
+        assert_eq!(t.at2(1, 1), -0.25);
+        t.fill(3.0);
+        assert!((0..4).all(|i| t.get(i) == 3.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "data() on a bf16 tensor")]
+    fn data_on_bf16_panics() {
+        let t = Tensor::zeros_dtype(&[2], Dtype::Bf16);
+        let _ = t.data();
+    }
+
+    #[test]
+    fn quantize_widen_roundtrip() {
+        let mut rng = Rng::new(9);
+        let src = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        let mut q = Tensor::empty();
+        q.quantize_from(&src);
+        assert_eq!(q.dtype(), Dtype::Bf16);
+        assert_eq!(q.shape(), src.shape());
+        let mut w = Tensor::empty();
+        w.widen_from(&q);
+        assert_eq!(w.dtype(), Dtype::F32);
+        // Widening is exact, so q and w agree bitwise elementwise...
+        for i in 0..q.len() {
+            assert_eq!(w.get(i).to_bits(), q.get(i).to_bits());
+        }
+        // ...and the quantization error vs the f32 source is within eps/2
+        // relative (RTNE bound).
+        for i in 0..src.len() {
+            let (x, y) = (src.get(i), w.get(i));
+            assert!((x - y).abs() <= x.abs() * EPS_BF16 * 0.5 + f32::MIN_POSITIVE);
+        }
+        // Re-quantizing the widened copy is exact (idempotent).
+        let q2 = w.to_dtype(Dtype::Bf16);
+        assert_eq!(q2, q);
+    }
+
+    #[test]
+    fn resize_converts_recycled_bf16_buffers_to_f32() {
+        // The `_into`-kernel output contract: outputs are f32, so a
+        // pooled bf16 buffer handed to a kernel must flip dtype here.
+        let mut t = Tensor::zeros_dtype(&[4], Dtype::Bf16);
+        t.fill(2.0);
+        t.resize(&[3]);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert_eq!(t.len(), 3);
+        let _ = t.data(); // must not panic
+    }
+
+    #[test]
+    fn copy_from_preserves_dtype() {
+        let src = Tensor::zeros_dtype(&[3], Dtype::Bf16);
+        let mut dst = Tensor::zeros(&[8]);
+        dst.copy_from(&src);
+        assert_eq!(dst.dtype(), Dtype::Bf16);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn mixed_dtype_axpy_and_ema_accumulate_in_f32() {
+        let mut acc = Tensor::zeros(&[2]); // f32 accumulator
+        let mut g = Tensor::empty();
+        g.quantize_from(&Tensor::from_vec(&[2], vec![1.0, -2.0]));
+        acc.axpy(0.5, &g);
+        assert_eq!(acc.data(), &[0.5, -1.0]);
+
+        let mut m = Tensor::zeros_dtype(&[2], Dtype::Bf16); // bf16 EMA state
+        let upd = Tensor::from_vec(&[2], vec![4.0, 8.0]);
+        m.ema_update(0.5, &upd);
+        assert_eq!(m.get(0), 2.0, "exactly representable blend stores exactly");
+        assert_eq!(m.get(1), 4.0);
     }
 }

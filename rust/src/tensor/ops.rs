@@ -28,7 +28,7 @@
 //! are fixed, so worker count can only change speed, never bits.
 
 use super::workers::{self, Task};
-use super::Tensor;
+use super::{bf16_to_f32, Dtype, Tensor};
 
 /// Cache-block edge / packed-panel width for the matmul kernels.
 const BLK: usize = 32;
@@ -52,6 +52,51 @@ const TN_CHUNK: usize = 64;
 /// Fixed row-chunk length of the chunked epilogue reduction in
 /// [`grad_col_sum_rows`] (same worker-count-independence argument).
 const EPI_CHUNK: usize = 256;
+
+/// Borrow-or-widen view of a kernel operand: f32 tensors borrow their
+/// payload directly (zero cost — the historical path, bitwise
+/// unchanged); bf16 tensors widen into pooled thread-local scratch
+/// (exact — widening is a bit shift per element), recycled on drop.
+///
+/// This is the mixed-precision entry point of the whole kernel family:
+/// widening is pure data movement *ahead of* the multiply/add stream,
+/// exactly like `B`-panel packing, so the consuming kernel's summation
+/// geometry — and with it the PR 4 worker-count determinism argument —
+/// is unchanged by the storage dtype (DESIGN.md §11).
+struct Widened<'a> {
+    borrowed: Option<&'a [f32]>,
+    owned: Option<Vec<f32>>,
+}
+
+impl<'a> Widened<'a> {
+    fn new(t: &'a Tensor) -> Widened<'a> {
+        match t.dtype() {
+            Dtype::F32 => Widened { borrowed: Some(t.data()), owned: None },
+            Dtype::Bf16 => {
+                let mut s = workers::take_scratch(t.len());
+                for (o, &b) in s.iter_mut().zip(t.bits().iter()) {
+                    *o = bf16_to_f32(b);
+                }
+                Widened { borrowed: None, owned: Some(s) }
+            }
+        }
+    }
+
+    fn as_slice(&self) -> &[f32] {
+        match self.borrowed {
+            Some(s) => s,
+            None => self.owned.as_deref().expect("widened scratch present"),
+        }
+    }
+}
+
+impl Drop for Widened<'_> {
+    fn drop(&mut self) {
+        if let Some(v) = self.owned.take() {
+            workers::recycle_scratch(v);
+        }
+    }
+}
 
 /// Worker count for a matmul of `m·k·n` multiply-adds: 1 below the
 /// parallel threshold — WITHOUT touching the worker pool, so
@@ -82,6 +127,28 @@ fn pack_b_panels(bd: &[f32], k: usize, n: usize, pack: &mut [f32]) {
         for kk in 0..k {
             panel[kk * jw..(kk + 1) * jw]
                 .copy_from_slice(&bd[kk * n + j0..kk * n + j0 + jw]);
+        }
+    }
+}
+
+/// [`pack_b_panels`] for bf16 storage bits: identical panel layout, with
+/// the (exact) widening fused into the packing copy — the bf16 matmul
+/// moves half the `B` bytes through memory and still hands the compute
+/// loop the same f32 tiles, so the multiply/add order is untouched.
+fn pack_b_panels_bf16(bb: &[u16], k: usize, n: usize, pack: &mut [f32]) {
+    debug_assert_eq!(pack.len(), k * n);
+    if pack.is_empty() {
+        return; // degenerate k == 0 or n == 0: nothing to pack
+    }
+    for (p, panel) in pack.chunks_mut(BLK * k).enumerate() {
+        let j0 = p * BLK;
+        let jw = (n - j0).min(BLK);
+        for kk in 0..k {
+            let dst = &mut panel[kk * jw..(kk + 1) * jw];
+            let src = &bb[kk * n + j0..kk * n + j0 + jw];
+            for (o, &b) in dst.iter_mut().zip(src.iter()) {
+                *o = bf16_to_f32(b);
+            }
         }
     }
 }
@@ -152,11 +219,17 @@ pub fn matmul_into_with_threads(a: &Tensor, b: &Tensor, out: &mut Tensor, thread
     let (k2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
     out.resize(&[m, n]);
-    let (ad, bd) = (a.data(), b.data());
+    let a_w = Widened::new(a);
+    let ad = a_w.as_slice();
     // Pack B once per call (pooled scratch, shared read-only by every row
     // chunk); the kernel then fully overwrites `out` — no zero-fill pass.
+    // bf16 `B` widens *during* packing (same panel layout, half the bytes
+    // read), so the compute loop always consumes f32 tiles.
     let mut pack = workers::take_scratch(k * n);
-    pack_b_panels(bd, k, n, &mut pack);
+    match b.dtype() {
+        Dtype::F32 => pack_b_panels(b.data(), k, n, &mut pack),
+        Dtype::Bf16 => pack_b_panels_bf16(b.bits(), k, n, &mut pack),
+    }
     let cd = out.data_mut();
     if m * k * n < PAR_MIN_MADDS || threads <= 1 {
         matmul_rows(ad, &pack, cd, 0, m, k, n);
@@ -246,7 +319,8 @@ pub fn matmul_nt_into_with_threads(a: &Tensor, b: &Tensor, out: &mut Tensor, thr
     let (n, k2) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "matmul_nt inner dims: {k} vs {k2}");
     out.resize(&[m, n]);
-    let (ad, bd) = (a.data(), b.data());
+    let (a_w, b_w) = (Widened::new(a), Widened::new(b));
+    let (ad, bd) = (a_w.as_slice(), b_w.as_slice());
     let cd = out.data_mut();
     if m * k * n < PAR_MIN_MADDS || threads <= 1 {
         matmul_nt_rows(ad, bd, cd, 0, m, k, n);
@@ -328,7 +402,8 @@ pub fn matmul_tn_into_with_threads(a: &Tensor, b: &Tensor, out: &mut Tensor, thr
     assert_eq!(r, r2, "matmul_tn outer dims: {r} vs {r2}");
     out.resize(&[m, n]);
     out.fill(0.0);
-    let (ad, bd) = (a.data(), b.data());
+    let (a_w, b_w) = (Widened::new(a), Widened::new(b));
+    let (ad, bd) = (a_w.as_slice(), b_w.as_slice());
     let cd = out.data_mut();
     let nchunks = r.div_ceil(TN_CHUNK).max(1);
     if nchunks == 1 {
@@ -480,7 +555,7 @@ pub fn add_bias_into(x: &Tensor, b: &Tensor, out: &mut Tensor) {
     assert_eq!(x.ndim(), 2);
     assert_eq!(b.ndim(), 1);
     assert_eq!(x.shape()[1], b.shape()[0]);
-    out.copy_from(x);
+    out.widen_from(x);
     bias_act_inplace(out, b, false);
 }
 
@@ -491,9 +566,10 @@ pub fn add_bias(x: &Tensor, b: &Tensor) -> Tensor {
     y
 }
 
-/// Elementwise ReLU into `out`.
+/// Elementwise ReLU into `out` (f32 output; bf16 inputs widen on entry,
+/// bitwise `copy_from` for f32 inputs).
 pub fn relu_into(x: &Tensor, out: &mut Tensor) {
-    out.copy_from(x);
+    out.widen_from(x);
     for v in out.data_mut().iter_mut() {
         *v = v.max(0.0);
     }
@@ -510,8 +586,9 @@ pub fn relu(x: &Tensor) -> Tensor {
 /// `dy * (y > 0)`.
 pub fn relu_grad_into(y: &Tensor, dy: &Tensor, out: &mut Tensor) {
     assert_eq!(y.shape(), dy.shape());
-    out.copy_from(dy);
-    for (gv, yv) in out.data_mut().iter_mut().zip(y.data().iter()) {
+    out.widen_from(dy);
+    let y_w = Widened::new(y);
+    for (gv, yv) in out.data_mut().iter_mut().zip(y_w.as_slice().iter()) {
         if *yv <= 0.0 {
             *gv = 0.0;
         }
@@ -633,14 +710,17 @@ pub fn relu_grad_col_sum_into(y: &Tensor, dy: &Tensor, dz: &mut Tensor, db: &mut
     let (m, n) = (y.shape()[0], y.shape()[1]);
     dz.resize(&[m, n]);
     db.resize(&[n]);
-    grad_col_sum_rows(y.data(), dy.data(), dz.data_mut(), db.data_mut(), m, n, true);
+    // `y` may be a bf16-stored activation (the mask only needs signs;
+    // widening is exact); `dy`/`dz`/`db` are gradients — always f32.
+    let y_w = Widened::new(y);
+    grad_col_sum_rows(y_w.as_slice(), dy.data(), dz.data_mut(), db.data_mut(), m, n, true);
 }
 
 /// Numerically-stable row softmax into `out`.
 pub fn softmax_rows_into(x: &Tensor, out: &mut Tensor) {
     assert_eq!(x.ndim(), 2);
     let (m, n) = (x.shape()[0], x.shape()[1]);
-    out.copy_from(x);
+    out.widen_from(x);
     for i in 0..m {
         let row = &mut out.data_mut()[i * n..(i + 1) * n];
         let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -1017,5 +1097,86 @@ mod tests {
         let (loss, _, correct) = softmax_xent(&logits, &[1, 2, 0]);
         assert!(loss < 1e-3);
         assert_eq!(correct, 3);
+    }
+
+    #[test]
+    fn bf16_operands_equal_widened_f32_kernels_bitwise() {
+        // Widening-on-pack is pure data movement: a matmul over bf16
+        // operands must be BITWISE equal to the f32 kernel applied to the
+        // (exactly) widened operands — for every kernel in the family,
+        // serial and parallel shapes alike.
+        let mut rng = Rng::new(41);
+        for (m, k, n) in [(5, 7, 9), (33, 40, 37), (160, 96, 96)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng).to_dtype(Dtype::Bf16);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng).to_dtype(Dtype::Bf16);
+            let (aw, bw) = (a.to_dtype(Dtype::F32), b.to_dtype(Dtype::F32));
+            assert_eq!(matmul(&a, &b), matmul(&aw, &bw), "matmul {m}x{k}x{n}");
+            let bt = Tensor::randn(&[n, k], 1.0, &mut rng).to_dtype(Dtype::Bf16);
+            let btw = bt.to_dtype(Dtype::F32);
+            assert_eq!(matmul_nt(&a, &bt), matmul_nt(&aw, &btw), "matmul_nt {m}x{k}x{n}");
+            // Mixed dtypes (bf16 weights, f32 gradients) widen per operand.
+            assert_eq!(matmul_nt(&aw, &bt), matmul_nt(&aw, &btw), "mixed nt {m}x{k}x{n}");
+        }
+        let (r, m, n) = (3 * TN_CHUNK + 7, 18, 13);
+        let a = Tensor::randn(&[r, m], 0.25, &mut rng).to_dtype(Dtype::Bf16);
+        let b = Tensor::randn(&[r, n], 0.25, &mut rng).to_dtype(Dtype::Bf16);
+        let (aw, bw) = (a.to_dtype(Dtype::F32), b.to_dtype(Dtype::F32));
+        assert_eq!(matmul_tn(&a, &b), matmul_tn(&aw, &bw), "tn tree");
+    }
+
+    #[test]
+    fn bf16_matmul_family_is_bit_stable_across_worker_counts() {
+        // The PR 4 determinism contract must hold WITHIN the bf16
+        // configuration: thread count changes placement, never bits.
+        let mut rng = Rng::new(42);
+        let a = Tensor::randn(&[160, 96], 1.0, &mut rng).to_dtype(Dtype::Bf16);
+        let b = Tensor::randn(&[96, 96], 1.0, &mut rng).to_dtype(Dtype::Bf16);
+        let bt = Tensor::randn(&[96, 96], 1.0, &mut rng).to_dtype(Dtype::Bf16);
+        let tn_a = Tensor::randn(&[3 * TN_CHUNK + 5, 24], 0.5, &mut rng).to_dtype(Dtype::Bf16);
+        let tn_b = Tensor::randn(&[3 * TN_CHUNK + 5, 17], 0.5, &mut rng).to_dtype(Dtype::Bf16);
+        let (mm, nt, tn) = (matmul(&a, &b), matmul_nt(&a, &bt), matmul_tn(&tn_a, &tn_b));
+        for threads in [1usize, 2, 3, 8] {
+            let mut out = Tensor::empty();
+            matmul_into_with_threads(&a, &b, &mut out, threads);
+            assert_eq!(mm, out, "bf16 matmul diverged at threads={threads}");
+            matmul_nt_into_with_threads(&a, &bt, &mut out, threads);
+            assert_eq!(nt, out, "bf16 matmul_nt diverged at threads={threads}");
+            matmul_tn_into_with_threads(&tn_a, &tn_b, &mut out, threads);
+            assert_eq!(tn, out, "bf16 matmul_tn diverged at threads={threads}");
+        }
+    }
+
+    #[test]
+    fn bf16_elementwise_kernels_widen_on_entry() {
+        let mut rng = Rng::new(43);
+        let x = Tensor::randn(&[6, 9], 1.0, &mut rng).to_dtype(Dtype::Bf16);
+        let xw = x.to_dtype(Dtype::F32);
+        let b = Tensor::randn(&[9], 0.5, &mut rng);
+        assert_eq!(relu(&x), relu(&xw));
+        assert_eq!(add_bias(&x, &b), add_bias(&xw, &b));
+        assert_eq!(softmax_rows(&x), softmax_rows(&xw));
+        let y = relu(&xw).to_dtype(Dtype::Bf16);
+        let yw = y.to_dtype(Dtype::F32);
+        let dy = Tensor::randn(&[6, 9], 1.0, &mut rng);
+        assert_eq!(relu_grad(&y, &dy), relu_grad(&yw, &dy));
+        let (mut dz1, mut db1) = (Tensor::empty(), Tensor::empty());
+        let (mut dz2, mut db2) = (Tensor::empty(), Tensor::empty());
+        relu_grad_col_sum_into(&y, &dy, &mut dz1, &mut db1);
+        relu_grad_col_sum_into(&yw, &dy, &mut dz2, &mut db2);
+        assert_eq!((dz1, db1), (dz2, db2));
+        // The loss kernel accepts bf16 logits (widened before softmax).
+        let onehot = {
+            let mut oh = Tensor::zeros(&[6, 9]);
+            for i in 0..6 {
+                oh.set2(i, i % 9, 1.0);
+            }
+            oh
+        };
+        let mut dl1 = Tensor::empty();
+        let mut dl2 = Tensor::empty();
+        let r1 = softmax_xent_onehot_into(&x, &onehot, &mut dl1);
+        let r2 = softmax_xent_onehot_into(&xw, &onehot, &mut dl2);
+        assert_eq!(r1, r2);
+        assert_eq!(dl1, dl2);
     }
 }

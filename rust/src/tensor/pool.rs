@@ -2,18 +2,26 @@
 //!
 //! The training hot path produces and retires same-shaped tensors every
 //! iteration (activations, gradients, loss buffers). A [`BufferPool`]
-//! keeps retired tensors bucketed by element count and hands them back
-//! out via [`BufferPool::take`], so the steady-state loop performs no
-//! heap allocation: `take` pops a spare and [`Tensor::resize`]s it in
-//! place (a no-op when the shape repeats, which it always does in steady
-//! state).
+//! keeps retired tensors bucketed by **(dtype, payload bytes)** and
+//! hands them back out via [`BufferPool::take`] /
+//! [`BufferPool::take_dtype`], so the steady-state loop performs no
+//! heap allocation: `take` pops a spare and [`Tensor::resize_dtype`]s
+//! it in place (a no-op when the shape repeats, which it always does in
+//! steady state).
+//!
+//! Keying by bytes *and* dtype (not element count) keeps the f32 and
+//! bf16 worlds from cross-contaminating: a 16-element f32 spare (64 B)
+//! and a 32-element bf16 spare (also 64 B) have equal byte footprints
+//! but different backing vectors — handing one out for the other would
+//! force a fresh allocation inside `resize_dtype` and silently break
+//! the ≤4-allocs/iter steady-state guarantee (`alloc_steady_state.rs`).
 //!
 //! Pools are owner-local (one per trainer / per pipeline stage) — no
 //! locks, no sharing. Tensors may be recycled into a *different* pool
 //! than they were taken from (gradients crossing stage boundaries do
 //! this); per-size-class caps keep any imbalance bounded.
 
-use super::Tensor;
+use super::{Dtype, Tensor};
 use std::collections::HashMap;
 
 /// Spare buffers retained per size class; recycles beyond this are
@@ -24,7 +32,7 @@ const MAX_SPARES_PER_SIZE: usize = 8;
 /// A recycling allocator for [`Tensor`] backing stores.
 #[derive(Debug, Default)]
 pub struct BufferPool {
-    free: HashMap<usize, Vec<Tensor>>,
+    free: HashMap<(Dtype, usize), Vec<Tensor>>,
     hits: u64,
     misses: u64,
 }
@@ -34,29 +42,35 @@ impl BufferPool {
         BufferPool::default()
     }
 
-    /// Hand out a tensor of `shape`. **Contents are unspecified** —
+    /// Hand out an f32 tensor of `shape`. **Contents are unspecified** —
     /// recycled buffers keep stale values — so pooled tensors must only
     /// be used as `_into`-kernel outputs (which fully overwrite or
     /// zero-initialize) or be explicitly [`Tensor::fill`]ed.
     pub fn take(&mut self, shape: &[usize]) -> Tensor {
+        self.take_dtype(shape, Dtype::F32)
+    }
+
+    /// Hand out a tensor of `shape` in the given storage dtype (same
+    /// unspecified-contents contract as [`BufferPool::take`]).
+    pub fn take_dtype(&mut self, shape: &[usize], dtype: Dtype) -> Tensor {
         let n: usize = shape.iter().product();
-        match self.free.get_mut(&n).and_then(Vec::pop) {
+        match self.free.get_mut(&(dtype, n * dtype.size_of())).and_then(Vec::pop) {
             Some(mut t) => {
                 self.hits += 1;
-                t.resize(shape);
+                t.resize_dtype(shape, dtype);
                 t
             }
             None => {
                 self.misses += 1;
-                Tensor::zeros(shape)
+                Tensor::zeros_dtype(shape, dtype)
             }
         }
     }
 
-    /// Pooled deep copy of `src`.
+    /// Pooled deep copy of `src` (same shape, dtype and payload).
     pub fn take_copy(&mut self, src: &Tensor) -> Tensor {
-        let mut t = self.take(src.shape());
-        t.data_mut().copy_from_slice(src.data());
+        let mut t = self.take_dtype(src.shape(), src.dtype());
+        t.copy_from(src);
         t
     }
 
@@ -66,7 +80,7 @@ impl BufferPool {
         if t.is_empty() {
             return;
         }
-        let bucket = self.free.entry(t.len()).or_default();
+        let bucket = self.free.entry((t.dtype(), t.nbytes())).or_default();
         if bucket.len() < MAX_SPARES_PER_SIZE {
             bucket.push(t);
         }
@@ -147,5 +161,29 @@ mod tests {
         let src = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
         let cp = pool.take_copy(&src);
         assert_eq!(cp, src);
+        // Dtype-preserving: a bf16 source takes a bf16 copy.
+        let qsrc = src.to_dtype(Dtype::Bf16);
+        let qcp = pool.take_copy(&qsrc);
+        assert_eq!(qcp.dtype(), Dtype::Bf16);
+        assert_eq!(qcp, qsrc);
+    }
+
+    #[test]
+    fn dtypes_never_cross_contaminate_size_classes() {
+        // A 32-elem bf16 tensor and a 16-elem f32 tensor both occupy
+        // 64 B, but must live in different buckets: a take of one dtype
+        // can never be served by a spare of the other.
+        let mut pool = BufferPool::new();
+        pool.recycle(Tensor::zeros_dtype(&[32], Dtype::Bf16));
+        let t = pool.take(&[16]);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert_eq!(pool.misses(), 1, "f32 take must not hit the bf16 spare");
+        assert_eq!(pool.spares(), 1, "bf16 spare stays parked");
+        let q = pool.take_dtype(&[32], Dtype::Bf16);
+        assert_eq!(q.dtype(), Dtype::Bf16);
+        assert_eq!(pool.hits(), 1, "bf16 take reuses the bf16 spare");
+        // bf16 spares report half the bytes of equal-element f32 spares.
+        pool.recycle(q);
+        assert_eq!(pool.spare_nbytes(), 32 * 2);
     }
 }

@@ -43,7 +43,7 @@ use crate::model::LayerParams;
 use crate::optim::{ConstantLr, CosineLr, LrBook, LrSchedule, Optimizer, Sgd};
 use crate::retiming::StagePartition;
 use crate::strategy::{LayerStrategy, StrategyKind};
-use crate::tensor::{BufferPool, Tensor};
+use crate::tensor::{BufferPool, Dtype, Tensor};
 use crate::util::{Rng, Stopwatch};
 use anyhow::{ensure, Context, Result};
 use std::collections::VecDeque;
@@ -163,6 +163,33 @@ fn check_backend_serves_spec(
     }
 }
 
+/// Fail fast at construction when a non-f32 storage dtype cannot be
+/// served: the backend must have widening kernels (host does; PJRT
+/// artifacts are lowered for f32 literals) and every op must accept the
+/// dtype (dense does; conv/pool/LIF kernels read f32 slices directly —
+/// ROADMAP open item). Shared by both engines' `assemble` paths.
+pub(crate) fn check_dtype_served(exec: &dyn Exec, net: &Network, dtype: Dtype) -> Result<()> {
+    if dtype == Dtype::F32 {
+        return Ok(());
+    }
+    ensure!(
+        exec.supports_dtype(dtype),
+        "backend '{}' cannot execute {dtype} tensors — use the host backend \
+         (LAYERPIPE2_BACKEND=host) for mixed precision",
+        exec.name()
+    );
+    for (l, nl) in net.layers.iter().enumerate() {
+        ensure!(
+            nl.op.supports_dtype(dtype),
+            "layer {l} ({}) has no {dtype} kernels — mixed precision currently \
+             serves pure-dense stacks (DESIGN.md §11; ROADMAP: conv/pool/LIF \
+             bf16 kernels)",
+            nl.op.name()
+        );
+    }
+    Ok(())
+}
+
 /// The shared `with_spec` front half of both training engines: validate
 /// the spec against the config and backend, build the network
 /// (consuming `rng` deterministically), and derive the cost-balanced
@@ -214,6 +241,13 @@ struct LayerState {
     /// gradients (overwritten every backward, never reallocated).
     dw_buf: Tensor,
     db_buf: Tensor,
+    /// Mixed precision (DESIGN.md §11): the f32 master copy of the
+    /// weights. The optimizer steps *this* tensor; the layer's storage
+    /// weights are re-quantized from it after every step, so rounding
+    /// error never compounds across steps. `None` in f32 runs — the
+    /// optimizer then steps the storage weights directly (the
+    /// bitwise-identical historical path). Biases stay f32 always.
+    master_w: Option<Tensor>,
 }
 
 /// One in-flight batch: everything the delayed backward will need.
@@ -280,6 +314,12 @@ pub struct Trainer {
     /// Deferred `(layer, lr)` steps of the current iteration, in event
     /// order (the order immediate stepping would have used).
     pending: Vec<(usize, f32)>,
+    /// Storage dtype for weights and stashed activations (`cfg.dtype`).
+    dtype: Dtype,
+    /// Persistent f32 staging buffer for the bf16 forward lane: kernels
+    /// accumulate into f32, the result is quantized into the pooled
+    /// bf16 activation. Unused (empty) in f32 runs.
+    fwd_scratch: Tensor,
 }
 
 impl Trainer {
@@ -322,21 +362,34 @@ impl Trainer {
         backend: Backend,
         cfg: &ExperimentConfig,
         kind: StrategyKind,
-        net: Network,
+        mut net: Network,
         partition: StagePartition,
     ) -> Result<Trainer> {
+        let dtype = cfg.dtype;
+        check_dtype_served(backend.as_ref(), &net, dtype)?;
         let delays = partition.gradient_delays();
         let layers = net
             .layers
-            .iter()
+            .iter_mut()
             .zip(&delays)
-            .map(|(nl, &d)| LayerState {
-                strategy: LayerStrategy::new(kind, d),
-                opt_w: Sgd::new(nl.w.shape(), cfg.optim.momentum, cfg.optim.weight_decay),
-                opt_b: Sgd::new(nl.b.shape(), cfg.optim.momentum, 0.0),
-                delay: d,
-                dw_buf: Tensor::empty(),
-                db_buf: Tensor::empty(),
+            .map(|(nl, &d)| {
+                // Mixed precision: the freshly initialized f32 weights
+                // become the master copy; storage weights quantize once
+                // here and are re-quantized from the master every step.
+                let master_w = (dtype != Dtype::F32).then(|| {
+                    let master = nl.w.clone();
+                    nl.w = nl.w.to_dtype(dtype);
+                    master
+                });
+                LayerState {
+                    strategy: LayerStrategy::new_with_dtype(kind, d, dtype),
+                    opt_w: Sgd::new(nl.w.shape(), cfg.optim.momentum, cfg.optim.weight_decay),
+                    opt_b: Sgd::new(nl.b.shape(), cfg.optim.momentum, 0.0),
+                    delay: d,
+                    dw_buf: Tensor::empty(),
+                    db_buf: Tensor::empty(),
+                    master_w,
+                }
             })
             .collect();
         let lr = LrBook::new(lr_schedule_for(cfg));
@@ -357,11 +410,18 @@ impl Trainer {
             spare_chains: Vec::new(),
             defer_steps: false,
             pending: Vec::new(),
+            dtype,
+            fwd_scratch: Tensor::empty(),
         })
     }
 
     pub fn kind(&self) -> StrategyKind {
         self.kind
+    }
+
+    /// Storage dtype of weights and stashed activations (`cfg.dtype`).
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
     }
 
     pub fn backend(&self) -> &dyn Exec {
@@ -393,12 +453,27 @@ impl Trainer {
             for l in 0..nl {
                 let rows = acts[l].shape()[0];
                 let dout = self.net.layers[l].op.out_dim();
-                let mut y = self.pool.take(&[rows, dout]);
+                let mut y = self.pool.take_dtype(&[rows, dout], self.dtype);
                 let layer = &mut self.net.layers[l];
                 self.layers[l].strategy.on_forward(t, &layer.w);
-                layer
-                    .op
-                    .forward_into(self.backend.as_ref(), &acts[l], &layer.w, &layer.b, &mut y)?;
+                if self.dtype == Dtype::F32 {
+                    layer
+                        .op
+                        .forward_into(self.backend.as_ref(), &acts[l], &layer.w, &layer.b, &mut y)?;
+                } else {
+                    // bf16 lane: the kernel accumulates into the f32
+                    // staging buffer; the stored activation is its
+                    // one-rounding quantization. The batch input
+                    // `acts[0]` stays f32 (the feed is f32 data).
+                    layer.op.forward_into(
+                        self.backend.as_ref(),
+                        &acts[l],
+                        &layer.w,
+                        &layer.b,
+                        &mut self.fwd_scratch,
+                    )?;
+                    y.quantize_from(&self.fwd_scratch);
+                }
                 acts.push(y);
             }
             self.inflight.push_back(Inflight {
@@ -531,17 +606,34 @@ impl Trainer {
             );
             self.pending.push((l, lr));
         } else {
-            let state = &mut self.layers[l];
-            let layer = &mut self.net.layers[l];
-            let upd_w = state.opt_w.step(&mut layer.w, &state.dw_buf, lr);
-            state.strategy.on_update(upd_w);
-            state.opt_b.step(&mut layer.b, &state.db_buf, lr);
+            self.step_layer(l, lr);
         }
 
         let rec = &mut self.inflight[idx];
         rec.dy = Some(dx);
         rec.next_bwd = if l == 0 { None } else { Some(l - 1) };
         Ok(())
+    }
+
+    /// Apply layer `l`'s staged gradient: SGD on the f32 master (mixed
+    /// precision) or directly on the storage weights (f32 — the
+    /// bitwise-identical historical path), then feed the applied update
+    /// to the strategy's EMA accumulators.
+    fn step_layer(&mut self, l: usize, lr: f32) {
+        let state = &mut self.layers[l];
+        let layer = &mut self.net.layers[l];
+        match &mut state.master_w {
+            Some(master) => {
+                state.opt_w.step(master, &state.dw_buf, lr);
+                layer.w.quantize_from(&*master);
+                state.strategy.on_update(state.opt_w.velocity());
+            }
+            None => {
+                let upd_w = state.opt_w.step(&mut layer.w, &state.dw_buf, lr);
+                state.strategy.on_update(upd_w);
+            }
+        }
+        state.opt_b.step(&mut layer.b, &state.db_buf, lr);
     }
 
     // ---- replica-ring hooks (crate-internal; see `crate::replica`) ------
@@ -578,11 +670,7 @@ impl Trainer {
         // loop stays allocation-free.
         for i in 0..self.pending.len() {
             let (l, lr) = self.pending[i];
-            let state = &mut self.layers[l];
-            let layer = &mut self.net.layers[l];
-            let upd_w = state.opt_w.step(&mut layer.w, &state.dw_buf, lr);
-            state.strategy.on_update(upd_w);
-            state.opt_b.step(&mut layer.b, &state.db_buf, lr);
+            self.step_layer(l, lr);
         }
         self.pending.clear();
     }

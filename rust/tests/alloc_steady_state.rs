@@ -98,6 +98,53 @@ fn steady_state_iterations_allocate_near_zero() {
         );
     }
 
+    // ---- bf16 storage path ---------------------------------------------
+    //
+    // Mixed precision must not regress the discipline: bf16 activations
+    // recycle through the (dtype, nbytes)-keyed pool, the forward
+    // quantization rides the persistent `fwd_scratch`, the f32 masters
+    // step in place and re-quantize into the existing weight storage,
+    // and the EMA/stash history stores bf16 in the same recycled slots.
+    {
+        use layerpipe2::tensor::Dtype;
+        let mut bcfg = ExperimentConfig { epochs: 1, ..ExperimentConfig::default() };
+        bcfg.dtype = Dtype::Bf16;
+        bcfg.data.train_samples = 256;
+        bcfg.data.test_samples = 64;
+        let bdata = teacher_dataset(&bcfg.model, &bcfg.data);
+        for kind in [StrategyKind::Stashing, StrategyKind::PipelineAwareEma] {
+            let backend: Backend = Arc::new(HostBackend::new());
+            let mut rng = Rng::new(1);
+            let mut trainer = Trainer::new(backend, &bcfg, kind, &mut rng).unwrap();
+            let (xb, oh) = bdata.train.batch(&(0..bcfg.model.batch).collect::<Vec<_>>());
+            let prime = 48usize;
+            let measure = 32usize;
+            let mut feed: Vec<(Tensor, Tensor)> =
+                (0..(prime + measure)).map(|_| (xb.clone(), oh.clone())).collect();
+            feed.reverse();
+            for _ in 0..prime {
+                trainer.iteration(Some(feed.pop().expect("primed batch"))).unwrap();
+            }
+            let before = ALLOCS.load(Ordering::Relaxed);
+            for _ in 0..measure {
+                trainer.iteration(Some(feed.pop().expect("measured batch"))).unwrap();
+            }
+            let total = ALLOCS.load(Ordering::Relaxed) - before;
+            let per_iter = total as f64 / measure as f64;
+            println!(
+                "bf16 / {}: {total} allocs over {measure} iters = {per_iter:.2}/iter",
+                kind.name()
+            );
+            assert!(
+                per_iter <= 4.0,
+                "bf16 hot path regressed to {per_iter:.2} allocs/iter for {} \
+                 (expected (near-)zero: dtype-keyed pooled activations, persistent \
+                 quantization scratch, in-place master step + re-quantize)",
+                kind.name()
+            );
+        }
+    }
+
     // ---- heterogeneous (conv + pool + dense + LIF) path ----------------
     //
     // The same discipline must hold for the layer zoo: im2col/dcols live

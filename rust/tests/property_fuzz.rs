@@ -504,6 +504,166 @@ fn replica_tree_reduce_is_bitwise_stable_for_all_shapes_and_threads() {
     });
 }
 
+/// The value a bf16 bit pattern stands for, on an extended lattice
+/// where ±inf sits at ±2¹²⁸ — the point the finite lattice would
+/// continue to. Working in f64 makes every candidate and every
+/// difference below exact (Sterbenz: the two candidates bracket `v`
+/// within one bf16 ulp).
+fn bf16_lattice_f64(b: u16) -> f64 {
+    if (b >> 7) & 0xFF == 0xFF && b & 0x7F == 0 {
+        let sign = if b & 0x8000 != 0 { -1.0 } else { 1.0 };
+        return sign * 2f64.powi(128);
+    }
+    f32::from_bits((b as u32) << 16) as f64
+}
+
+/// Independent scalar round-to-nearest-even: truncate to get the
+/// lower-magnitude candidate, compare exact f64 distances to both
+/// magnitude-adjacent lattice points, break ties toward the even
+/// (lsb-0) pattern. Deliberately shares no arithmetic with the
+/// production bias-trick implementation.
+fn reference_rtne(v: f32) -> u16 {
+    assert!(!v.is_nan());
+    let bits = v.to_bits();
+    let lo = (bits >> 16) as u16;
+    if bits & 0xFFFF == 0 {
+        return lo; // already on the lattice (covers ±0 and ±inf)
+    }
+    // Sign-magnitude ordering: incrementing the pattern moves away from
+    // zero, so `lo`/`hi` bracket v. `lo` can never be a NaN/inf pattern
+    // here (that would make v itself NaN, excluded above).
+    let hi = lo + 1;
+    let vd = v as f64;
+    let dl = (vd - bf16_lattice_f64(lo)).abs();
+    let dh = (bf16_lattice_f64(hi) - vd).abs();
+    if dl < dh {
+        lo
+    } else if dh < dl {
+        hi
+    } else if lo & 1 == 0 {
+        lo
+    } else {
+        hi
+    }
+}
+
+#[test]
+fn bf16_rtne_matches_scalar_reference_on_random_bit_patterns() {
+    // The conversion-correctness property behind the whole
+    // mixed-precision PR: the production bias-trick rounding
+    // (`bits + 0x7FFF + lsb >> 16`) must agree with an independent
+    // nearest-even reference on arbitrary f32 bit patterns — normals,
+    // subnormals, zeros, infinities, exact midpoints, overflow to inf —
+    // and must quiet NaNs without ever producing one from a non-NaN.
+    use layerpipe2::tensor::{bf16_to_f32, f32_to_bf16};
+    property(500, |rng, case| {
+        let bits = ((rng.index(1 << 16) as u32) << 16) | rng.index(1 << 16) as u32;
+        for v in [
+            f32::from_bits(bits),
+            // Force an exact midpoint (ties are measure-zero otherwise)
+            // and an on-lattice value from the same high half.
+            f32::from_bits((bits & 0xFFFF_0000) | 0x8000),
+            f32::from_bits(bits & 0xFFFF_0000),
+        ] {
+            let got = f32_to_bf16(v);
+            if v.is_nan() {
+                assert!(
+                    bf16_to_f32(got).is_nan(),
+                    "case {case}: NaN 0x{:08x} must stay NaN, got 0x{got:04x}",
+                    v.to_bits()
+                );
+                assert_eq!(
+                    got & 0xFF80,
+                    (v.to_bits() >> 16) as u16 & 0xFF80,
+                    "case {case}: NaN sign/exponent must be preserved"
+                );
+                continue;
+            }
+            let want = reference_rtne(v);
+            assert_eq!(
+                got,
+                want,
+                "case {case}: 0x{:08x} ({v:e}) rounded to 0x{got:04x}, reference says 0x{want:04x}",
+                v.to_bits()
+            );
+            // Round-trip exactness: the chosen lattice point converts
+            // back to itself (quantize ∘ widen = identity).
+            assert_eq!(
+                f32_to_bf16(bf16_to_f32(got)),
+                got,
+                "case {case}: lattice point 0x{got:04x} not a fixed point"
+            );
+        }
+    });
+}
+
+#[test]
+fn ema_reconstruction_holds_in_the_bf16_regime() {
+    // Eq. 9 under mixed precision (DESIGN.md §11): with the EMA
+    // accumulator stored in bf16 (widen → combine in f32 → re-round
+    // once per push), reconstruction `Ŵ(t−d) = W(t) + lr_sum·Ḡ` must
+    // stay within the dtype-derived tolerance of the stashed truth.
+    // For a constant bf16-representable update stream the quantized
+    // EMA's steady-state error is bounded by the fixed point of
+    // e' = β·e + round: |Ḡ − u| ≤ eps_bf16·|u|/(1−β) = (d+1)·eps·|u|,
+    // so the reconstruction error is ≤ lr_sum·(d+1)·eps_bf16·max|u|
+    // — about 0.035 for the d ≤ 8, lr_sum ≤ 0.24, |u| ≲ 4 ranges
+    // below; 0.06 leaves slack. The jittered bound is the f32 test's
+    // 0.08 plus the same bf16 term.
+    use layerpipe2::stash::WeightStash;
+    use layerpipe2::tensor::Dtype;
+    property(24, |rng, case| {
+        let d = 1 + rng.index(8);
+        let n = 4 + rng.index(8);
+        let lr = 0.03f32;
+        let jitter = if rng.chance(0.5) { 0.0 } else { 0.02 };
+        // A bf16-representable stream makes the constant case a pure
+        // accumulator-error measurement (no input-quantization term).
+        let base = Tensor::randn(&[n], 1.0, rng).to_dtype(Dtype::Bf16).to_dtype(Dtype::F32);
+        let mut w = Tensor::randn(&[n], 1.0, rng);
+        let mut stash = WeightStash::new(d + 1);
+        let mut ema = PipelineAwareEma::new_with_dtype(d, Dtype::Bf16);
+        let steps = (d as u64) + 4 + rng.index(30) as u64;
+        for t in 0..steps {
+            stash.push(t, &w);
+            let mut u = base.clone();
+            if jitter > 0.0 {
+                u.axpy(jitter, &Tensor::randn(&[n], 1.0, rng));
+            }
+            w.axpy(-lr, &u);
+            ema.push(&u);
+        }
+        let target = stash
+            .get(steps - d as u64)
+            .unwrap_or_else(|| panic!("case {case}: stash must retain t-d"));
+        let lr_sum = lr * d as f32;
+        // reconstruct() widens the bf16 mean per element and runs the
+        // axpy in f32 — never touch `ema.mean()` directly here, its
+        // backing store is u16 bits.
+        let recon = ema.reconstruct(&w, lr_sum);
+        assert_eq!(recon.dtype(), Dtype::F32, "case {case}: reconstruction must widen");
+        let recon_err = recon.max_abs_diff(target);
+        let latest_err = w.max_abs_diff(target);
+        if jitter == 0.0 {
+            assert!(
+                recon_err < 0.06,
+                "case {case} d={d}: bf16 constant-stream err {recon_err} beyond \
+                 lr_sum·(d+1)·eps_bf16·|u| bound"
+            );
+        } else {
+            assert!(
+                recon_err < 0.15,
+                "case {case} d={d}: bf16 reconstruction err {recon_err} beyond \
+                 Eq. 9 tolerance + bf16 slack"
+            );
+        }
+        assert!(
+            recon_err <= latest_err + 0.06,
+            "case {case} d={d}: recon {recon_err} much worse than latest {latest_err}"
+        );
+    });
+}
+
 #[test]
 fn ema_reconstruction_matches_stashed_weights_within_eq9_tolerance() {
     // The paper's Eq. 9 claim, as a property over random delay

@@ -34,6 +34,11 @@ cargo clippy -- -D warnings -D clippy::perf
 echo "==> bench smoke (release, reduced samples)"
 LAYERPIPE2_BENCH_SMOKE=1 cargo bench --bench runtime_hotpath
 test -s BENCH_kernels.json || { echo "verify: BENCH_kernels.json missing or empty"; exit 1; }
+# The mixed-precision section (f32 vs bf16 storage kernels) must have
+# run and recorded its rows — it carries the in-run widening-on-pack
+# bitwise gate and the dtype-derived error bound vs the f32 oracle.
+grep -q '"mixed_precision"' BENCH_kernels.json \
+    || { echo "verify: BENCH_kernels.json lacks the mixed_precision section"; exit 1; }
 test -s BENCH_serving.json || { echo "verify: BENCH_serving.json missing or empty"; exit 1; }
 test -s BENCH_ring.json || { echo "verify: BENCH_ring.json missing or empty"; exit 1; }
 
