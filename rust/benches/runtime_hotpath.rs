@@ -24,13 +24,17 @@
 //! the f32 oracle at the dtype-derived bound), `BENCH_serving.json` (batched
 //! inference serving: requests/sec + p50/p99 batch latency vs
 //! `max_batch`, every response verified bitwise against the sequential
-//! oracle in-run) and `BENCH_ring.json` (weight-ring replica scaling:
+//! oracle in-run), `BENCH_ring.json` (weight-ring replica scaling:
 //! samples/sec + scaling efficiency vs replica count, final weights
-//! verified bitwise against the single-replica oracle in-run). Override
+//! verified bitwise against the single-replica oracle in-run) and
+//! `BENCH_observability.json` (span-timing overhead: dense train
+//! iteration and serving round-trip with the obs gate off vs on —
+//! `verify.sh` gates on the dense overhead staying under 2%). Override
 //! paths with `LAYERPIPE2_BENCH_JSON` / `LAYERPIPE2_BENCH_LAYERS_JSON` /
 //! `LAYERPIPE2_BENCH_KERNELS_JSON` / `LAYERPIPE2_BENCH_SERVING_JSON` /
-//! `LAYERPIPE2_BENCH_RING_JSON`. Set `LAYERPIPE2_BENCH_SMOKE=1` for a
-//! fast CI smoke run (reduced sizes and sample counts, same coverage).
+//! `LAYERPIPE2_BENCH_RING_JSON` / `LAYERPIPE2_BENCH_OBSERVABILITY_JSON`.
+//! Set `LAYERPIPE2_BENCH_SMOKE=1` for a fast CI smoke run (reduced
+//! sizes and sample counts, same coverage).
 
 use layerpipe2::backend::{self, Exec, HostBackend};
 use layerpipe2::bench_util::{bench, print_header, print_row, BenchStats};
@@ -38,6 +42,7 @@ use layerpipe2::config::{ExperimentConfig, ModelConfig};
 use layerpipe2::data::teacher_dataset;
 use layerpipe2::layers::{Conv2d, Layer, Network, NetworkSpec};
 use layerpipe2::model::LayerRole;
+use layerpipe2::obs;
 use layerpipe2::pipeline::PipelinedTrainer;
 use layerpipe2::replica::{train_ring, RingConfig, RingReport};
 use layerpipe2::runtime::Engine;
@@ -835,6 +840,126 @@ fn ring_section(smoke: bool) -> Json {
     Json::Arr(rows_out)
 }
 
+/// HOTPATH-j: observability overhead — the dense train iteration and the
+/// serving round-trip benched with span timing off vs on
+/// ([`obs::set_enabled`]; counters are always on in both modes, the gate
+/// covers only the clock-reading spans). Alternating passes with
+/// best-of-medians per mode, so a slow outlier pass can't fake an
+/// overhead. Gate: the obs-on dense hot path must stay within 2% of
+/// obs-off (`"gate_ok"`, checked by `verify.sh`). Written to
+/// `BENCH_observability.json` together with the process-wide telemetry
+/// snapshot, so the instrument inventory rides along with the numbers.
+fn observability_section(smoke: bool) -> Json {
+    print_header("HOTPATH-j: observability overhead — span gate off vs on (dense + serving)");
+
+    // Dense: same workload as HOTPATH-c (PipelineAwareEma iteration).
+    let backend = backend::from_env("artifacts").expect("backend selection");
+    let mut ecfg = ExperimentConfig { epochs: 1, ..ExperimentConfig::default() };
+    ecfg.data.train_samples = 512;
+    ecfg.data.test_samples = 256;
+    let data = teacher_dataset(&ecfg.model, &ecfg.data);
+    let (warmup, reps) = if smoke { (3, 20) } else { (5, 100) };
+    let passes = if smoke { 1 } else { 2 };
+
+    let mut dense_pass = |on: bool| -> f64 {
+        obs::set_enabled(on);
+        let mut trng = Rng::new(1);
+        let mut trainer =
+            Trainer::new(backend.clone(), &ecfg, StrategyKind::PipelineAwareEma, &mut trng)
+                .unwrap();
+        let (xb, oh) = data.train.batch(&(0..ecfg.model.batch).collect::<Vec<_>>());
+        for _ in 0..32 {
+            trainer.iteration(Some((xb.clone(), oh.clone()))).unwrap();
+        }
+        let mut feed: Vec<(Tensor, Tensor)> =
+            (0..(warmup + reps)).map(|_| (xb.clone(), oh.clone())).collect();
+        feed.reverse();
+        let label = format!("dense train_iteration (obs {})", if on { "on" } else { "off" });
+        let (s, _) = bench_counted(&label, warmup, reps, || {
+            trainer.iteration(Some(feed.pop().expect("prefed batch"))).unwrap()
+        });
+        print_row(&s);
+        s.median_s
+    };
+    let (mut off_best, mut on_best) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..passes {
+        off_best = off_best.min(dense_pass(false));
+        on_best = on_best.min(dense_pass(true));
+    }
+    let dense_overhead_pct = (on_best - off_best) / off_best * 100.0;
+    let gate_pct = 2.0;
+    let gate_ok = dense_overhead_pct < gate_pct;
+    println!(
+        "    -> dense obs overhead {dense_overhead_pct:+.2}% (gate < {gate_pct:.0}%: {})",
+        if gate_ok { "OK" } else { "FAIL" }
+    );
+
+    // Serving: end-to-end round-trip throughput with the span gate off vs
+    // on — covers the `serving/forward` span plus the always-on latency
+    // histogram / queue gauge / flush counters. Responses stay verified
+    // bitwise against the oracle in both modes.
+    let mcfg = ModelConfig {
+        batch: 32,
+        input_dim: 64,
+        hidden_dim: 64,
+        classes: 10,
+        layers: 4,
+        init_scale: 1.0,
+    };
+    let net = Network::build(&NetworkSpec::mlp(&mcfg), &mut Rng::new(31)).unwrap();
+    let be = HostBackend::new();
+    let mut oracle = net.snapshot().unwrap();
+    let per_client = if smoke { 200 } else { 1000 };
+    let mut serve_pass = |on: bool| -> f64 {
+        obs::set_enabled(on);
+        let server = Server::start(
+            Arc::new(HostBackend::new()),
+            &net,
+            &ServerConfig { max_batch: 8, max_wait_ticks: 2, shrink_under: 0, queue_depth: 64, stages: 2 },
+        )
+        .expect("server start");
+        let inputs = vec![Tensor::randn(&[4, mcfg.input_dim], 1.0, &mut Rng::new(7))];
+        let expected = vec![vec![oracle.forward_full(&be, &inputs[0]).unwrap()]];
+        let sw = std::time::Instant::now();
+        std::thread::scope(|s| {
+            let inputs = &inputs;
+            let expected = &expected;
+            for _ in 0..2 {
+                let mut cl = server.client();
+                s.spawn(move || {
+                    layerpipe2::serving::drive_and_verify(&mut cl, inputs, expected, |_| 0, per_client, 8)
+                        .expect("responses must stay bitwise == oracle with obs toggled");
+                });
+            }
+        });
+        let elapsed = sw.elapsed().as_secs_f64();
+        server.shutdown().expect("shutdown");
+        (2 * per_client) as f64 / elapsed
+    };
+    let (mut serve_off, mut serve_on) = (0.0f64, 0.0f64);
+    for _ in 0..passes {
+        serve_off = serve_off.max(serve_pass(false));
+        serve_on = serve_on.max(serve_pass(true));
+    }
+    let serve_overhead_pct = (serve_off - serve_on) / serve_off * 100.0;
+    println!(
+        "    -> serving {serve_off:.0} req/s (obs off) vs {serve_on:.0} req/s (obs on): \
+         {serve_overhead_pct:+.2}% overhead"
+    );
+    obs::set_enabled(true); // restore the default gate for later sections
+
+    jobj(vec![
+        ("dense_ns_obs_off", jnum(off_best * 1e9)),
+        ("dense_ns_obs_on", jnum(on_best * 1e9)),
+        ("dense_overhead_pct", jnum(dense_overhead_pct)),
+        ("gate_pct", jnum(gate_pct)),
+        ("gate_ok", Json::Bool(gate_ok)),
+        ("serving_rps_obs_off", jnum(serve_off)),
+        ("serving_rps_obs_on", jnum(serve_on)),
+        ("serving_overhead_pct", jnum(serve_overhead_pct)),
+    ])
+}
+
 fn main() {
     let smoke = smoke();
     if smoke {
@@ -849,6 +974,7 @@ fn main() {
     let executor = executor_pool_section(smoke);
     let serving = serving_section(smoke);
     let ring = ring_section(smoke);
+    let observability = observability_section(smoke);
 
     let mut obj = BTreeMap::new();
     obj.insert("bench".to_string(), Json::Str("runtime_hotpath".to_string()));
@@ -908,4 +1034,16 @@ fn main() {
         .unwrap_or_else(|_| "BENCH_ring.json".to_string());
     std::fs::write(&rpath, Json::Obj(robj).to_string()).expect("write ring bench json");
     println!("wrote {rpath}");
+
+    // Observability overhead + the full instrument inventory the bench
+    // run accumulated: its own trajectory file, gated by verify.sh.
+    let mut oobj = BTreeMap::new();
+    oobj.insert("bench".to_string(), Json::Str("runtime_hotpath/observability".to_string()));
+    oobj.insert("smoke".to_string(), Json::Bool(smoke));
+    oobj.insert("observability".to_string(), observability);
+    oobj.insert("telemetry".to_string(), obs::TelemetrySnapshot::capture().to_json());
+    let opath = std::env::var("LAYERPIPE2_BENCH_OBSERVABILITY_JSON")
+        .unwrap_or_else(|_| "BENCH_observability.json".to_string());
+    std::fs::write(&opath, Json::Obj(oobj).to_string()).expect("write observability bench json");
+    println!("wrote {opath}");
 }

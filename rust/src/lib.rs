@@ -37,6 +37,12 @@
 //!   deterministic fixed-tree all-reduce — bit-identical weights at any
 //!   replica count — gradients circulating as flat codec buffers on
 //!   ping-pong ring links;
+//! - **unified runtime telemetry** ([`obs`]): a process-wide registry of
+//!   lock-free counters, gauges, log-scale histograms and scoped span
+//!   timers instrumenting all four runtimes (pipeline bubble accounting,
+//!   serving latency histograms, ring link traffic, pool/scratch
+//!   hit rates), with snapshot/diff/JSON export and an optional
+//!   Chrome-trace span dump — never perturbing bit-determinism;
 //! - supporting substrates written from scratch for this offline
 //!   environment: deterministic RNG, JSON, a TOML-subset config system,
 //!   host tensors, a bench harness and a property-test helper.
@@ -45,6 +51,7 @@
 //! and the executor threading model.
 
 pub mod util;
+pub mod obs;
 pub mod config;
 pub mod tensor;
 pub mod backend;

@@ -12,8 +12,12 @@
 //!                    [--wait-ticks T] [--stages K] [--reloads X] [--checkpoint F]
 //! layerpipe2 train-ring [--replicas 1,2,4] [--shards S] [--strategy S]
 //!                    [--epochs N] [--stages K] [--seed N]
+//! layerpipe2 stats   [--strategy S] [--epochs N] [--stages K] [--json PATH]
 //! layerpipe2 info    [--artifacts DIR]
 //! ```
+//!
+//! Every command honours `LAYERPIPE2_TRACE=<path>` (Chrome-trace span
+//! dump written at exit) and `LAYERPIPE2_OBS=off` (span timing off).
 
 use anyhow::{bail, Context, Result};
 use layerpipe2::backend::{self, Exec};
@@ -26,6 +30,7 @@ use layerpipe2::pipeline;
 use layerpipe2::retiming::{Derivation, StagePartition};
 use layerpipe2::layers::{Network, NetworkSpec};
 use layerpipe2::model::checkpoint;
+use layerpipe2::obs;
 use layerpipe2::replica;
 use layerpipe2::runtime::Manifest;
 use layerpipe2::schedule::{sweep_stages, CostModel, Schedule};
@@ -102,13 +107,31 @@ impl Args {
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let code = match run(&argv) {
+    // LAYERPIPE2_TRACE=<path>: arm the span trace for the whole command
+    // and dump Chrome-trace JSON at exit (load in chrome://tracing or
+    // Perfetto). Tracing implies span timing, so force the gate on.
+    let trace_path = std::env::var(obs::TRACE_ENV).ok().filter(|p| !p.is_empty());
+    if trace_path.is_some() {
+        obs::set_enabled(true);
+        obs::trace_begin();
+    }
+    let mut code = match run(&argv) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e:#}");
             2
         }
     };
+    if let Some(path) = trace_path {
+        let json = obs::trace_end_to_json();
+        match std::fs::write(&path, json.to_string()) {
+            Ok(()) => eprintln!("chrome trace written to {path}"),
+            Err(e) => {
+                eprintln!("error: writing trace to {path}: {e}");
+                code = 2;
+            }
+        }
+    }
     std::process::exit(code);
 }
 
@@ -126,6 +149,7 @@ fn run(argv: &[String]) -> Result<()> {
         "throughput" => cmd_throughput(&args),
         "serve" => cmd_serve(&args),
         "train-ring" => cmd_train_ring(&args),
+        "stats" => cmd_stats(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -164,7 +188,16 @@ COMMANDS:
               --stages K --seed N --dtype f32|bf16
               (LAYERPIPE2_REPLICAS sets the default replica count;
               final weights verified bitwise across counts)
-  info        print artifact manifest details  --artifacts DIR"
+  stats       run a short pipelined training with telemetry on and
+              print the full runtime telemetry table
+              --strategy S --epochs N --stages K --json PATH
+  info        print artifact manifest details  --artifacts DIR
+
+ENVIRONMENT:
+  LAYERPIPE2_TRACE=<path>  dump a Chrome-trace span timeline at exit
+  LAYERPIPE2_OBS=off       disable span timing (counters stay on)
+  LAYERPIPE2_LOG=off|error|warn|info|debug  log level (default info)
+  LAYERPIPE2_LOG_TS=1      prefix log lines with elapsed time"
     );
 }
 
@@ -430,18 +463,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let elapsed = sw.elapsed().as_secs_f64();
 
     let total = (clients * requests) as u64;
-    let lat = server.latency_ms();
+    let lat = server.latency_hist();
     let stats = server.shutdown()?;
     println!("served {total} requests in {elapsed:.3}s = {:.0} req/s ({:.0} rows/s)", total as f64 / elapsed, (total as usize * rows) as f64 / elapsed);
     for (v, n) in per_version.iter().enumerate() {
         println!("  version {v}: {n} responses");
     }
-    if let Some((p50, p99)) = lat {
-        println!("batch latency: p50 {p50:.3}ms  p99 {p99:.3}ms");
+    if lat.count > 0 {
+        let ms = |q: f64| lat.quantile_ns(q) as f64 / 1e6;
+        println!(
+            "request latency: p50 {:.3}ms  p90 {:.3}ms  p99 {:.3}ms  mean {:.3}ms  ({} samples)",
+            ms(0.50),
+            ms(0.90),
+            ms(0.99),
+            lat.mean_ns() as f64 / 1e6,
+            lat.count
+        );
     }
     println!(
-        "batches {}  occupancy {:.2}  reloads {}  pool {}h/{}m  (all responses bitwise == oracle)",
-        stats.batches, stats.occupancy, stats.reloads, stats.pool_hits, stats.pool_misses
+        "batches {}  occupancy {:.2}  flushes full/shrank/force/wait {}/{}/{}/{}  queue depth {}",
+        stats.batches,
+        stats.occupancy,
+        stats.flush_full,
+        stats.flush_shrank,
+        stats.flush_force,
+        stats.flush_wait,
+        stats.queue_depth
+    );
+    println!(
+        "reloads {}  pool {}h/{}m  (all responses bitwise == oracle)",
+        stats.reloads, stats.pool_hits, stats.pool_misses
     );
     Ok(())
 }
@@ -537,6 +588,64 @@ fn cmd_train_ring(args: &Args) -> Result<()> {
     }
     if replica_counts.len() > 1 {
         println!("final weights bitwise identical across all replica counts");
+    }
+    Ok(())
+}
+
+/// Telemetry demo: run a short pipelined training with the span gate
+/// forced on, then print the full registry table (the same `[stats]`
+/// lines the trainers emit at epoch boundaries) plus the per-stage
+/// bubble breakdown, and optionally the JSON export.
+fn cmd_stats(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    }
+    apply_dtype(args, &mut cfg)?;
+    cfg.epochs = args.usize_or("epochs", cfg.epochs.min(2))?;
+    cfg.pipeline.stages = args.usize_or("stages", cfg.pipeline.stages)?;
+    cfg.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
+    cfg.validate()?;
+    let kind = match args.get("strategy") {
+        Some(s) => StrategyKind::parse(s)?,
+        None => StrategyKind::PipelineAwareEma,
+    };
+    obs::set_enabled(true);
+
+    let backend = backend::from_env(&cfg.artifacts_dir)?;
+    let data = teacher_dataset(&cfg.model, &cfg.data);
+    println!(
+        "telemetry run: backend {}  strategy {}  stages {}  epochs {}",
+        backend.name(),
+        kind.name(),
+        cfg.pipeline.stages,
+        cfg.epochs
+    );
+    let before = obs::TelemetrySnapshot::capture();
+    let mut rng = Rng::new(cfg.seed);
+    let mut trainer = pipeline::PipelinedTrainer::new(backend, &cfg, kind, &mut rng)?;
+    let curve = trainer.train(&data, &mut rng)?;
+    let window = obs::TelemetrySnapshot::capture().diff(&before);
+
+    println!("final test accuracy: {:.4}", curve.final_accuracy());
+    println!("--- telemetry window (this run only) ---");
+    print!("{window}");
+    for b in trainer.bubble_report(&window) {
+        println!(
+            "[stats] bubble stage {}: compute {:.0}% (predicted {:.0}%)  bubble {:.1}%",
+            b.stage,
+            b.measured_share * 100.0,
+            b.predicted_share * 100.0,
+            b.bubble_fraction * 100.0
+        );
+    }
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, window.to_json().to_string())
+            .with_context(|| format!("writing telemetry json to {path}"))?;
+        println!("telemetry json written to {path}");
     }
     Ok(())
 }

@@ -1,0 +1,1024 @@
+//! Process-wide runtime telemetry (DESIGN.md §12).
+//!
+//! A single registry of lock-free, allocation-free instruments shared by
+//! every runtime in the crate:
+//!
+//! - **Counters** — monotonic relaxed `AtomicU64`s ([`counter`],
+//!   [`LazyCounter`] for static call sites).
+//! - **Gauges** — signed levels ([`gauge`]): queue depths, in-flight
+//!   request counts.
+//! - **Histograms** — fixed 256-bucket log-scale (`2` sub-bucket bits,
+//!   ≤25% relative bucket error) nanosecond distributions ([`hist`]):
+//!   p50/p90/p99 derivable from the buckets, no sample storage.
+//! - **Spans** — scoped timers ([`span!`]) aggregating into
+//!   per-(thread, label) duration sums. Thread slots are interned by
+//!   *logical* thread name ([`set_thread_name`]) so per-epoch respawned
+//!   pipeline stage threads keep accumulating into the same slot.
+//!
+//! Cost discipline: a counter bump is one relaxed `fetch_add`; a span is
+//! two `Instant::now()` reads plus two relaxed `fetch_add`s when
+//! enabled, and a **single relaxed load** when disabled
+//! (`LAYERPIPE2_OBS=off`, or [`set_enabled`]). Counters, gauges and
+//! histogram records are *always* on — they are pure atomics with no
+//! clock reads, and the stat-struct views over the registry
+//! (`scratch_stats`, `Server::stats`, …) must stay correct regardless
+//! of the span gate. Instruments allocate only at registration (leaked
+//! `'static` inners); the steady-state hot path allocates nothing
+//! (asserted by `alloc_steady_state.rs`).
+//!
+//! Determinism contract: observability **reads clocks, never branches
+//! on them** — no measurement feeds back into scheduling, batching or
+//! kernel dispatch, so all numeric results are bitwise-identical with
+//! obs on, off, or compiled out.
+//!
+//! Export surfaces: [`TelemetrySnapshot`] (typed, diffable between two
+//! points), its `Display` table (`[stats] …` lines for the CLI), JSON
+//! via [`crate::util::json`] for `BENCH_*.json` ride-alongs, and an
+//! optional Chrome-trace-format span dump ([`trace_begin`] /
+//! [`trace_end_to_json`], wired to `LAYERPIPE2_TRACE=<path>` by the
+//! CLI) for flame-style inspection in `chrome://tracing` / Perfetto.
+
+use crate::util::json::Json;
+use crate::util::timer::{fmt_duration, process_anchor};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Env var gating span timing (`off`/`0`/`false` disable; default on).
+/// Counters/gauges/histograms are not gated — they never read clocks.
+pub const OBS_ENV: &str = "LAYERPIPE2_OBS";
+
+/// Env var naming a file path for the Chrome-trace span dump (read by
+/// the CLI entry point, not by this module).
+pub const TRACE_ENV: &str = "LAYERPIPE2_TRACE";
+
+/// Distinct span labels the process can register; labels past the cap
+/// are counted in the `obs/labels_dropped` counter and not timed.
+pub const MAX_SPAN_LABELS: usize = 64;
+
+const HIST_BUCKETS: usize = 256;
+
+/// Trace events retained per [`trace_begin`]/[`trace_end_to_json`]
+/// window (preallocated; overflow is dropped and counted, never grows).
+const TRACE_CAP: usize = 1 << 16;
+
+/// Sentinel label id for spans past [`MAX_SPAN_LABELS`].
+const DROPPED_LABEL: u32 = u32::MAX;
+
+// ---------------------------------------------------------------------------
+// Enable gate.
+// ---------------------------------------------------------------------------
+
+/// 255 = uninitialised; 0 = off; 1 = on (same lazy-init idiom as
+/// `util::log::LEVEL`).
+static ENABLED: AtomicU8 = AtomicU8::new(255);
+
+/// Whether span timing is enabled. The hot-path fast gate: a single
+/// relaxed load after the first (lazy, env-reading) call.
+#[inline]
+pub fn enabled() -> bool {
+    match ENABLED.load(Ordering::Relaxed) {
+        255 => init_enabled(),
+        v => v == 1,
+    }
+}
+
+#[cold]
+fn init_enabled() -> bool {
+    let on = !matches!(
+        std::env::var(OBS_ENV).ok().as_deref(),
+        Some("off" | "0" | "false")
+    );
+    ENABLED.store(u8::from(on), Ordering::Relaxed);
+    on
+}
+
+/// Programmatic override of the span gate (tests and benches toggle
+/// this instead of the environment, which is unsafe to mutate with
+/// threads running).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(u8::from(on), Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Registry.
+// ---------------------------------------------------------------------------
+
+struct HistInner {
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+/// Per-(thread, label) span aggregation slot. Interned by logical
+/// thread name — `'static`, shared by every OS thread claiming the name.
+struct ThreadSlot {
+    name: String,
+    /// 1-based trace thread id (0 is never used; Chrome treats tid 0 as
+    /// the process row).
+    tid: u32,
+    sums_ns: [AtomicU64; MAX_SPAN_LABELS],
+    counts: [AtomicU64; MAX_SPAN_LABELS],
+}
+
+struct Registry {
+    counters: Mutex<BTreeMap<String, &'static AtomicU64>>,
+    gauges: Mutex<BTreeMap<String, &'static AtomicI64>>,
+    hists: Mutex<BTreeMap<String, &'static HistInner>>,
+    /// Registered span label names, indexed by label id.
+    labels: Mutex<Vec<&'static str>>,
+    slots: Mutex<Vec<&'static ThreadSlot>>,
+}
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Registry {
+        counters: Mutex::new(BTreeMap::new()),
+        gauges: Mutex::new(BTreeMap::new()),
+        hists: Mutex::new(BTreeMap::new()),
+        labels: Mutex::new(Vec::new()),
+        slots: Mutex::new(Vec::new()),
+    })
+}
+
+/// A monotonic counter handle: `Copy`, bump is one relaxed `fetch_add`.
+#[derive(Clone, Copy)]
+pub struct Counter(&'static AtomicU64);
+
+impl Counter {
+    #[inline]
+    pub fn inc(self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn value(self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A signed level gauge handle (queue depths, in-flight counts).
+#[derive(Clone, Copy)]
+pub struct Gauge(&'static AtomicI64);
+
+impl Gauge {
+    #[inline]
+    pub fn add(self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn sub(self, n: i64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn set(self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn value(self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A log-scale nanosecond histogram handle.
+#[derive(Clone, Copy)]
+pub struct Hist(&'static HistInner);
+
+impl Hist {
+    #[inline]
+    pub fn record_ns(self, ns: u64) {
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        self.0.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.0.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_secs(self, secs: f64) {
+        self.record_ns((secs * 1e9) as u64);
+    }
+
+    pub fn count(self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy of this histogram (for quantiles without going
+    /// through a full [`TelemetrySnapshot`]).
+    pub fn snapshot(self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.0.count.load(Ordering::Relaxed),
+            sum_ns: self.0.sum_ns.load(Ordering::Relaxed),
+            buckets: self.0.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+/// Register (or fetch) the counter named `name`. Same name ⇒ same
+/// instrument, process-wide; the inner is leaked once at registration.
+pub fn counter(name: &str) -> Counter {
+    let mut map = registry().counters.lock().expect("obs counters lock");
+    if let Some(c) = map.get(name) {
+        return Counter(c);
+    }
+    let inner: &'static AtomicU64 = Box::leak(Box::new(AtomicU64::new(0)));
+    map.insert(name.to_string(), inner);
+    Counter(inner)
+}
+
+/// Register (or fetch) the gauge named `name`.
+pub fn gauge(name: &str) -> Gauge {
+    let mut map = registry().gauges.lock().expect("obs gauges lock");
+    if let Some(g) = map.get(name) {
+        return Gauge(g);
+    }
+    let inner: &'static AtomicI64 = Box::leak(Box::new(AtomicI64::new(0)));
+    map.insert(name.to_string(), inner);
+    Gauge(inner)
+}
+
+/// Register (or fetch) the histogram named `name`.
+pub fn hist(name: &str) -> Hist {
+    let mut map = registry().hists.lock().expect("obs hists lock");
+    if let Some(h) = map.get(name) {
+        return Hist(h);
+    }
+    let inner: &'static HistInner = Box::leak(Box::new(HistInner {
+        count: AtomicU64::new(0),
+        sum_ns: AtomicU64::new(0),
+        buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+    }));
+    map.insert(name.to_string(), inner);
+    Hist(inner)
+}
+
+/// Current value of the counter named `name` (0 if never registered) —
+/// the accessor behind the thin stat-struct views.
+pub fn counter_value(name: &str) -> u64 {
+    registry()
+        .counters
+        .lock()
+        .expect("obs counters lock")
+        .get(name)
+        .map_or(0, |c| c.load(Ordering::Relaxed))
+}
+
+/// A counter with a `const`-constructible static call site: the name
+/// resolves to its registry entry once (`OnceLock`), after which every
+/// bump is a load + relaxed `fetch_add`.
+pub struct LazyCounter {
+    name: &'static str,
+    cell: OnceLock<Counter>,
+}
+
+impl LazyCounter {
+    pub const fn new(name: &'static str) -> LazyCounter {
+        LazyCounter { name, cell: OnceLock::new() }
+    }
+
+    #[inline]
+    pub fn get(&self) -> Counter {
+        *self.cell.get_or_init(|| counter(self.name))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.get().inc();
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.get().add(n);
+    }
+
+    pub fn value(&self) -> u64 {
+        self.get().value()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Histogram bucket geometry: log-scale with 2 sub-bucket bits
+// (HdrHistogram-lite). Values 0..=3 map directly; larger values index
+// by (exponent, top-2 mantissa bits), so each power of two splits into
+// 4 sub-buckets — worst-case relative bucket width 25%.
+// ---------------------------------------------------------------------------
+
+fn bucket_index(v: u64) -> usize {
+    if v < 4 {
+        return v as usize;
+    }
+    let exp = 63 - u64::from(v.leading_zeros());
+    (((exp << 2) | ((v >> (exp - 2)) & 3)) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Lower bound of bucket `idx` — the deterministic quantile
+/// representative (reported quantiles round *down* to a bucket floor).
+fn bucket_floor(idx: usize) -> u64 {
+    if idx < 4 {
+        return idx as u64;
+    }
+    let exp = (idx >> 2) as u64;
+    let sub = (idx & 3) as u64;
+    (1u64 << exp) | (sub << (exp - 2))
+}
+
+// ---------------------------------------------------------------------------
+// Spans.
+// ---------------------------------------------------------------------------
+
+/// A span label's static call-site registration: the name resolves to a
+/// small integer id once; after that entering the span is id load +
+/// thread-slot load + `Instant::now()`.
+pub struct SpanLabel {
+    name: &'static str,
+    id: OnceLock<u32>,
+}
+
+static LABELS_DROPPED: LazyCounter = LazyCounter::new("obs/labels_dropped");
+
+impl SpanLabel {
+    pub const fn new(name: &'static str) -> SpanLabel {
+        SpanLabel { name, id: OnceLock::new() }
+    }
+
+    fn resolve(&self) -> u32 {
+        *self.id.get_or_init(|| {
+            let mut tbl = registry().labels.lock().expect("obs labels lock");
+            if let Some(pos) = tbl.iter().position(|&n| n == self.name) {
+                return pos as u32;
+            }
+            if tbl.len() >= MAX_SPAN_LABELS {
+                LABELS_DROPPED.inc();
+                return DROPPED_LABEL;
+            }
+            tbl.push(self.name);
+            (tbl.len() - 1) as u32
+        })
+    }
+}
+
+fn intern_slot(name: &str) -> &'static ThreadSlot {
+    let mut slots = registry().slots.lock().expect("obs slots lock");
+    if let Some(s) = slots.iter().find(|s| s.name == name) {
+        return s;
+    }
+    let slot: &'static ThreadSlot = Box::leak(Box::new(ThreadSlot {
+        name: name.to_string(),
+        tid: slots.len() as u32 + 1,
+        sums_ns: std::array::from_fn(|_| AtomicU64::new(0)),
+        counts: std::array::from_fn(|_| AtomicU64::new(0)),
+    }));
+    slots.push(slot);
+    slot
+}
+
+thread_local! {
+    static SLOT: std::cell::Cell<Option<&'static ThreadSlot>> =
+        const { std::cell::Cell::new(None) };
+}
+
+static ANON_SEQ: AtomicU32 = AtomicU32::new(0);
+
+/// Bind the calling OS thread to the logical slot `name`. Spans entered
+/// on this thread aggregate there; threads respawned per epoch under
+/// the same name keep accumulating into the same slot. Unbound threads
+/// default to their OS thread name, or `thread-N`.
+pub fn set_thread_name(name: &str) {
+    let slot = intern_slot(name);
+    SLOT.with(|c| c.set(Some(slot)));
+}
+
+fn current_slot() -> &'static ThreadSlot {
+    SLOT.with(|c| match c.get() {
+        Some(s) => s,
+        None => {
+            let t = std::thread::current();
+            let slot = match t.name() {
+                Some(n) => intern_slot(n),
+                None => {
+                    let n = ANON_SEQ.fetch_add(1, Ordering::Relaxed);
+                    intern_slot(&format!("thread-{n}"))
+                }
+            };
+            c.set(Some(slot));
+            slot
+        }
+    })
+}
+
+struct Armed {
+    slot: &'static ThreadSlot,
+    id: u32,
+    start: Instant,
+}
+
+/// RAII span timer: created by [`span!`], records on drop. Nested spans
+/// each record their *own* full duration (self + children) — the
+/// breakdown reports pick non-overlapping labels, and the Chrome trace
+/// shows the nesting directly.
+pub struct SpanGuard {
+    armed: Option<Armed>,
+}
+
+impl SpanGuard {
+    #[inline]
+    pub fn enter(label: &SpanLabel) -> SpanGuard {
+        if !enabled() {
+            return SpanGuard { armed: None };
+        }
+        let id = label.resolve();
+        let slot = current_slot();
+        // Clock read last: registration/interning cost stays outside the
+        // measured window.
+        SpanGuard { armed: Some(Armed { slot, id, start: Instant::now() }) }
+    }
+}
+
+impl Drop for SpanGuard {
+    #[inline]
+    fn drop(&mut self) {
+        if let Some(a) = self.armed.take() {
+            let ns = a.start.elapsed().as_nanos() as u64;
+            if a.id != DROPPED_LABEL {
+                a.slot.sums_ns[a.id as usize].fetch_add(ns, Ordering::Relaxed);
+                a.slot.counts[a.id as usize].fetch_add(1, Ordering::Relaxed);
+                if TRACE_ON.load(Ordering::Relaxed) {
+                    push_trace_event(a.id, a.slot.tid, a.start, ns);
+                }
+            }
+        }
+    }
+}
+
+/// Scoped span timer: `obs::span!("stage3/backward");` times from the
+/// statement to the end of the enclosing block. Statically registers
+/// the label at the call site; when the gate is off the whole statement
+/// is a single relaxed load.
+#[macro_export]
+macro_rules! obs_span {
+    ($name:expr) => {
+        let _obs_span_guard = {
+            static __OBS_SPAN_LABEL: $crate::obs::SpanLabel = $crate::obs::SpanLabel::new($name);
+            $crate::obs::SpanGuard::enter(&__OBS_SPAN_LABEL)
+        };
+    };
+}
+
+pub use crate::obs_span as span;
+
+// ---------------------------------------------------------------------------
+// Chrome trace dump.
+// ---------------------------------------------------------------------------
+
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+static TRACE_DROPPED: AtomicU64 = AtomicU64::new(0);
+
+#[derive(Clone, Copy)]
+struct TraceEvent {
+    label: u32,
+    tid: u32,
+    /// Nanoseconds since [`process_anchor`].
+    start_ns: u64,
+    dur_ns: u64,
+}
+
+fn trace_buf() -> &'static Mutex<Vec<TraceEvent>> {
+    static BUF: OnceLock<Mutex<Vec<TraceEvent>>> = OnceLock::new();
+    BUF.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn push_trace_event(label: u32, tid: u32, start: Instant, dur_ns: u64) {
+    let start_ns = start
+        .checked_duration_since(process_anchor())
+        .unwrap_or_default()
+        .as_nanos() as u64;
+    let mut buf = trace_buf().lock().expect("obs trace lock");
+    if buf.len() < TRACE_CAP {
+        buf.push(TraceEvent { label, tid, start_ns, dur_ns });
+    } else {
+        TRACE_DROPPED.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Start capturing span events for a Chrome-trace dump: clears any prior
+/// window, preallocates the buffer (span recording stays
+/// allocation-free), and arms the trace gate. Timestamps are relative to
+/// [`process_anchor`], initialised here if not earlier.
+pub fn trace_begin() {
+    process_anchor();
+    let mut buf = trace_buf().lock().expect("obs trace lock");
+    buf.clear();
+    buf.reserve(TRACE_CAP);
+    TRACE_DROPPED.store(0, Ordering::Relaxed);
+    TRACE_ON.store(true, Ordering::Relaxed);
+}
+
+/// Whether a trace window is currently armed.
+pub fn trace_active() -> bool {
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// Disarm the trace gate and drain the captured window into a
+/// Chrome-trace-format (`trace_events`) JSON document: complete (`"X"`)
+/// events sorted by `(tid, start)` — per-thread timestamps are
+/// monotonically nondecreasing, with enclosing spans first at ties —
+/// plus thread-name metadata (`"M"`) events. `ts`/`dur` are
+/// microseconds (the format's unit), as exact ns/1000 fractions.
+pub fn trace_end_to_json() -> Json {
+    TRACE_ON.store(false, Ordering::Relaxed);
+    let mut events = {
+        let mut buf = trace_buf().lock().expect("obs trace lock");
+        std::mem::take(&mut *buf)
+    };
+    // Enclosing spans sort before their children at equal start.
+    events.sort_by_key(|e| (e.tid, e.start_ns, u64::MAX - e.dur_ns));
+    let labels: Vec<&'static str> = registry().labels.lock().expect("obs labels lock").clone();
+    let slot_names: BTreeMap<u32, String> = registry()
+        .slots
+        .lock()
+        .expect("obs slots lock")
+        .iter()
+        .map(|s| (s.tid, s.name.clone()))
+        .collect();
+
+    let mut arr: Vec<Json> = Vec::with_capacity(events.len() + slot_names.len());
+    let mut seen_tids: Vec<u32> = events.iter().map(|e| e.tid).collect();
+    seen_tids.sort_unstable();
+    seen_tids.dedup();
+    for tid in &seen_tids {
+        let mut args = BTreeMap::new();
+        args.insert(
+            "name".to_string(),
+            Json::Str(slot_names.get(tid).cloned().unwrap_or_default()),
+        );
+        let mut m = BTreeMap::new();
+        m.insert("ph".to_string(), Json::Str("M".to_string()));
+        m.insert("pid".to_string(), Json::Num(1.0));
+        m.insert("tid".to_string(), Json::Num(f64::from(*tid)));
+        m.insert("name".to_string(), Json::Str("thread_name".to_string()));
+        m.insert("args".to_string(), Json::Obj(args));
+        arr.push(Json::Obj(m));
+    }
+    for e in &events {
+        let mut m = BTreeMap::new();
+        m.insert("ph".to_string(), Json::Str("X".to_string()));
+        m.insert("pid".to_string(), Json::Num(1.0));
+        m.insert("tid".to_string(), Json::Num(f64::from(e.tid)));
+        m.insert(
+            "name".to_string(),
+            Json::Str(labels.get(e.label as usize).copied().unwrap_or("?").to_string()),
+        );
+        m.insert("ts".to_string(), Json::Num(e.start_ns as f64 / 1000.0));
+        m.insert("dur".to_string(), Json::Num(e.dur_ns as f64 / 1000.0));
+        arr.push(Json::Obj(m));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("traceEvents".to_string(), Json::Arr(arr));
+    top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    top.insert(
+        "spansDropped".to_string(),
+        Json::Num(TRACE_DROPPED.load(Ordering::Relaxed) as f64),
+    );
+    Json::Obj(top)
+}
+
+// ---------------------------------------------------------------------------
+// Snapshots.
+// ---------------------------------------------------------------------------
+
+/// One histogram's state at a point in time (diffable bucket-wise).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum_ns: u64,
+    buckets: Vec<u64>,
+}
+
+impl HistSnapshot {
+    /// The quantile-`q` value in ns (bucket floor; 0 when empty).
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_floor(i);
+            }
+        }
+        bucket_floor(HIST_BUCKETS - 1)
+    }
+
+    pub fn mean_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum_ns / self.count
+        }
+    }
+}
+
+/// One (thread, label) span aggregate at a point in time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanSnapshot {
+    pub count: u64,
+    pub total_ns: u64,
+}
+
+/// A typed capture of every registered instrument. Diffable
+/// ([`TelemetrySnapshot::diff`]) to scope measurements to an epoch, a
+/// bench section, or a serve window; printable as a `[stats]` table;
+/// exportable as JSON.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TelemetrySnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub hists: BTreeMap<String, HistSnapshot>,
+    /// thread name → span label → aggregate.
+    pub spans: BTreeMap<String, BTreeMap<String, SpanSnapshot>>,
+}
+
+impl TelemetrySnapshot {
+    /// Capture the current value of every registered instrument.
+    pub fn capture() -> TelemetrySnapshot {
+        let reg = registry();
+        let counters = reg
+            .counters
+            .lock()
+            .expect("obs counters lock")
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let gauges = reg
+            .gauges
+            .lock()
+            .expect("obs gauges lock")
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let hists = reg
+            .hists
+            .lock()
+            .expect("obs hists lock")
+            .iter()
+            .map(|(k, h)| {
+                (
+                    k.clone(),
+                    HistSnapshot {
+                        count: h.count.load(Ordering::Relaxed),
+                        sum_ns: h.sum_ns.load(Ordering::Relaxed),
+                        buckets: h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+                    },
+                )
+            })
+            .collect();
+        let labels: Vec<&'static str> = reg.labels.lock().expect("obs labels lock").clone();
+        let mut spans: BTreeMap<String, BTreeMap<String, SpanSnapshot>> = BTreeMap::new();
+        for slot in reg.slots.lock().expect("obs slots lock").iter() {
+            let mut per = BTreeMap::new();
+            for (i, label) in labels.iter().enumerate() {
+                let count = slot.counts[i].load(Ordering::Relaxed);
+                if count > 0 {
+                    per.insert(
+                        (*label).to_string(),
+                        SpanSnapshot { count, total_ns: slot.sums_ns[i].load(Ordering::Relaxed) },
+                    );
+                }
+            }
+            if !per.is_empty() {
+                spans.insert(slot.name.clone(), per);
+            }
+        }
+        TelemetrySnapshot { counters, gauges, hists, spans }
+    }
+
+    /// The change since `earlier`: counters/histograms/spans subtract
+    /// (saturating; instruments registered since appear as-is), gauges
+    /// keep the later level (a gauge is a state, not a rate).
+    pub fn diff(&self, earlier: &TelemetrySnapshot) -> TelemetrySnapshot {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, &v)| (k.clone(), v.saturating_sub(earlier.counters.get(k).copied().unwrap_or(0))))
+            .collect();
+        let hists = self
+            .hists
+            .iter()
+            .map(|(k, h)| {
+                let mut d = h.clone();
+                if let Some(e) = earlier.hists.get(k) {
+                    d.count = d.count.saturating_sub(e.count);
+                    d.sum_ns = d.sum_ns.saturating_sub(e.sum_ns);
+                    for (b, eb) in d.buckets.iter_mut().zip(&e.buckets) {
+                        *b = b.saturating_sub(*eb);
+                    }
+                }
+                (k.clone(), d)
+            })
+            .collect();
+        let mut spans: BTreeMap<String, BTreeMap<String, SpanSnapshot>> = BTreeMap::new();
+        for (thread, per) in &self.spans {
+            let eper = earlier.spans.get(thread);
+            let mut out = BTreeMap::new();
+            for (label, s) in per {
+                let e = eper.and_then(|p| p.get(label)).copied().unwrap_or_default();
+                let d = SpanSnapshot {
+                    count: s.count.saturating_sub(e.count),
+                    total_ns: s.total_ns.saturating_sub(e.total_ns),
+                };
+                if d.count > 0 || d.total_ns > 0 {
+                    out.insert(label.clone(), d);
+                }
+            }
+            if !out.is_empty() {
+                spans.insert(thread.clone(), out);
+            }
+        }
+        TelemetrySnapshot { counters, gauges: self.gauges.clone(), hists, spans }
+    }
+
+    /// The aggregate for span `label` on logical thread `thread`.
+    pub fn span(&self, thread: &str, label: &str) -> SpanSnapshot {
+        self.spans
+            .get(thread)
+            .and_then(|p| p.get(label))
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// JSON export for `BENCH_*.json` ride-alongs: counters and gauges
+    /// verbatim, histograms as count/sum/p50/p90/p99, spans nested by
+    /// thread. Deterministic key order (`BTreeMap` throughout).
+    pub fn to_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .iter()
+            .filter(|(_, &v)| v != 0)
+            .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+            .collect();
+        let hists: BTreeMap<String, Json> = self
+            .hists
+            .iter()
+            .filter(|(_, h)| h.count > 0)
+            .map(|(k, h)| {
+                let mut m = BTreeMap::new();
+                m.insert("count".to_string(), Json::Num(h.count as f64));
+                m.insert("sum_ns".to_string(), Json::Num(h.sum_ns as f64));
+                m.insert("p50_ns".to_string(), Json::Num(h.quantile_ns(0.50) as f64));
+                m.insert("p90_ns".to_string(), Json::Num(h.quantile_ns(0.90) as f64));
+                m.insert("p99_ns".to_string(), Json::Num(h.quantile_ns(0.99) as f64));
+                (k.clone(), Json::Obj(m))
+            })
+            .collect();
+        let spans: BTreeMap<String, Json> = self
+            .spans
+            .iter()
+            .map(|(thread, per)| {
+                let inner: BTreeMap<String, Json> = per
+                    .iter()
+                    .map(|(label, s)| {
+                        let mut m = BTreeMap::new();
+                        m.insert("count".to_string(), Json::Num(s.count as f64));
+                        m.insert("total_ns".to_string(), Json::Num(s.total_ns as f64));
+                        (label.clone(), Json::Obj(m))
+                    })
+                    .collect();
+                (thread.clone(), Json::Obj(inner))
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("counters".to_string(), Json::Obj(counters));
+        top.insert("gauges".to_string(), Json::Obj(gauges));
+        top.insert("hists".to_string(), Json::Obj(hists));
+        top.insert("spans".to_string(), Json::Obj(spans));
+        Json::Obj(top)
+    }
+}
+
+impl fmt::Display for TelemetrySnapshot {
+    /// The CLI `[stats]` table: one greppable line per live instrument
+    /// (zero counters and empty histograms are elided; gauges always
+    /// print — a zero queue depth is information).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (name, v) in &self.counters {
+            if *v != 0 {
+                writeln!(f, "[stats] counter {name} = {v}")?;
+            }
+        }
+        for (name, v) in &self.gauges {
+            writeln!(f, "[stats] gauge   {name} = {v}")?;
+        }
+        for (name, h) in &self.hists {
+            if h.count > 0 {
+                writeln!(
+                    f,
+                    "[stats] hist    {name}: n={} mean={} p50={} p90={} p99={}",
+                    h.count,
+                    fmt_duration(h.mean_ns() as f64 * 1e-9),
+                    fmt_duration(h.quantile_ns(0.50) as f64 * 1e-9),
+                    fmt_duration(h.quantile_ns(0.90) as f64 * 1e-9),
+                    fmt_duration(h.quantile_ns(0.99) as f64 * 1e-9),
+                )?;
+            }
+        }
+        for (thread, per) in &self.spans {
+            for (label, s) in per {
+                writeln!(
+                    f,
+                    "[stats] span    {thread} {label}: n={} total={} mean={}",
+                    s.count,
+                    fmt_duration(s.total_ns as f64 * 1e-9),
+                    fmt_duration(s.total_ns as f64 * 1e-9 / s.count.max(1) as f64),
+                )?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_and_views_share_the_registry() {
+        let c = counter("test/obs_counter");
+        c.add(3);
+        c.inc();
+        // Same name ⇒ same instrument.
+        assert_eq!(counter("test/obs_counter").value(), 4);
+        assert_eq!(counter_value("test/obs_counter"), 4);
+        assert_eq!(counter_value("test/never_registered"), 0);
+        let g = gauge("test/obs_gauge");
+        g.add(5);
+        g.sub(2);
+        assert_eq!(gauge("test/obs_gauge").value(), 3);
+        g.set(-1);
+        assert_eq!(g.value(), -1);
+        static LAZY: LazyCounter = LazyCounter::new("test/obs_lazy");
+        LAZY.inc();
+        LAZY.add(9);
+        assert_eq!(counter_value("test/obs_lazy"), 10);
+    }
+
+    #[test]
+    fn histogram_buckets_are_log_scale_and_quantiles_round_down() {
+        // Bucket geometry: floors are reachable and ordered.
+        for v in [0u64, 1, 2, 3, 4, 5, 7, 8, 1000, 123_456, u64::MAX / 2] {
+            let idx = bucket_index(v);
+            assert!(bucket_floor(idx) <= v, "floor({idx}) > {v}");
+            if idx + 1 < HIST_BUCKETS && bucket_floor(idx + 1) > bucket_floor(idx) {
+                // Within one sub-bucket: ≤25% relative width.
+                assert!(bucket_floor(idx + 1) > v || bucket_floor(idx + 1) >= v);
+            }
+        }
+        let h = hist("test/obs_hist");
+        for ms in 1..=100u64 {
+            h.record_ns(ms * 1_000_000);
+        }
+        let snap = TelemetrySnapshot::capture();
+        let hs = snap.hists.get("test/obs_hist").expect("registered hist");
+        assert_eq!(hs.count, 100);
+        let p50 = hs.quantile_ns(0.50);
+        let p99 = hs.quantile_ns(0.99);
+        // 50ms and 99ms, within one log-bucket (≤25%) below.
+        assert!((37_500_000..=50_000_000).contains(&p50), "p50 = {p50}");
+        assert!((74_250_000..=99_000_000).contains(&p99), "p99 = {p99}");
+        assert!(p50 <= p99);
+        assert_eq!(hs.mean_ns(), hs.sum_ns / 100);
+    }
+
+    #[test]
+    fn snapshot_diff_scopes_a_window() {
+        let c = counter("test/obs_diff");
+        c.add(7);
+        let before = TelemetrySnapshot::capture();
+        c.add(5);
+        let h = hist("test/obs_diff_hist");
+        h.record_ns(1_000);
+        let after = TelemetrySnapshot::capture();
+        let d = after.diff(&before);
+        assert_eq!(d.counters.get("test/obs_diff"), Some(&5));
+        assert_eq!(d.hists.get("test/obs_diff_hist").map(|h| h.count), Some(1));
+        // JSON export parses back through util::json.
+        let js = d.to_json().to_string();
+        let parsed = Json::parse(&js).expect("snapshot json parses");
+        assert_eq!(
+            parsed.get("counters").and_then(|c| c.get("test/obs_diff")).and_then(Json::as_f64),
+            Some(5.0)
+        );
+    }
+
+    /// The span gate, aggregation, and Chrome-trace dump in one
+    /// sequential test: the gate is process-global, so toggling it must
+    /// not race sibling tests that rely on spans.
+    #[test]
+    fn spans_aggregate_and_trace_round_trips() {
+        static OUTER: SpanLabel = SpanLabel::new("test/outer");
+        static INNER: SpanLabel = SpanLabel::new("test/inner");
+
+        // Disabled gate: no aggregation, guard is a no-op.
+        set_enabled(false);
+        assert!(!enabled());
+        {
+            let _g = SpanGuard::enter(&OUTER);
+        }
+        set_enabled(true);
+        assert!(enabled());
+
+        set_thread_name("obs-test");
+        let before = TelemetrySnapshot::capture();
+        trace_begin();
+        assert!(trace_active());
+        for _ in 0..3 {
+            let _outer = SpanGuard::enter(&OUTER);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            {
+                let _inner = SpanGuard::enter(&INNER);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        // The macro form registers and aggregates the same way.
+        {
+            crate::obs::span!("test/outer");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let trace = trace_end_to_json();
+        assert!(!trace_active());
+        let after = TelemetrySnapshot::capture();
+        let d = after.diff(&before);
+        let outer = d.span("obs-test", "test/outer");
+        let inner = d.span("obs-test", "test/inner");
+        assert_eq!(outer.count, 4);
+        assert_eq!(inner.count, 3);
+        // Nested spans record self + children: outer ≥ inner.
+        assert!(outer.total_ns >= inner.total_ns);
+
+        // Satellite: the emitted trace parses back through util::json,
+        // same-thread spans are properly nested (never partially
+        // overlapping), and per-thread timestamps are monotonic.
+        let parsed = Json::parse(&trace.to_string()).expect("trace json parses");
+        let events = parsed
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .expect("traceEvents array");
+        let mut last_ts: BTreeMap<i64, f64> = BTreeMap::new();
+        let mut open: BTreeMap<i64, Vec<f64>> = BTreeMap::new(); // tid → stack of end timestamps
+        let mut xs = 0usize;
+        for ev in events {
+            let ph = ev.get("ph").and_then(Json::as_str).expect("ph");
+            let tid = ev.get("tid").and_then(Json::as_f64).expect("tid") as i64;
+            if ph == "M" {
+                assert_eq!(ev.get("name").and_then(Json::as_str), Some("thread_name"));
+                continue;
+            }
+            assert_eq!(ph, "X");
+            xs += 1;
+            let ts = ev.get("ts").and_then(Json::as_f64).expect("ts");
+            let dur = ev.get("dur").and_then(Json::as_f64).expect("dur");
+            assert!(dur >= 0.0);
+            if let Some(&prev) = last_ts.get(&tid) {
+                assert!(ts >= prev, "timestamps regress on tid {tid}: {ts} < {prev}");
+            }
+            last_ts.insert(tid, ts);
+            let stack = open.entry(tid).or_default();
+            while let Some(&end) = stack.last() {
+                if ts >= end {
+                    stack.pop(); // sibling: the previous span closed first
+                } else {
+                    // Nested: must end within the enclosing span.
+                    assert!(
+                        ts + dur <= end + 1e-9,
+                        "partial overlap on tid {tid}: [{ts}, {}] vs enclosing end {end}",
+                        ts + dur
+                    );
+                    break;
+                }
+            }
+            stack.push(ts + dur);
+        }
+        // At least this test's 7 spans made it in (other obs-enabled
+        // tests running concurrently may add more).
+        assert!(xs >= 7, "expected ≥7 X events, got {xs}");
+        // A second window starts clean.
+        trace_begin();
+        let t2 = trace_end_to_json();
+        let n2 = t2.get("traceEvents").and_then(Json::as_arr).map_or(0, Vec::len);
+        assert!(n2 <= xs, "trace window did not reset");
+        // Display table is greppable and covers the span rows.
+        let table = format!("{d}");
+        assert!(table.contains("[stats] span    obs-test test/outer"));
+    }
+}

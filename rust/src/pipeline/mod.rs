@@ -48,6 +48,7 @@ use crate::data::{BatchIter, Splits};
 use crate::layers::{Feature, LayerSpec, Network, NetworkSpec};
 use crate::metrics::{EpochMetrics, RunCurve};
 use crate::model::Mlp;
+use crate::obs;
 use crate::optim::{LrBook, Optimizer, Sgd};
 use crate::retiming::StagePartition;
 use crate::strategy::{LayerStrategy, StrategyKind};
@@ -66,6 +67,32 @@ pub struct ThroughputReport {
     pub batches: usize,
     pub seconds: f64,
     pub batches_per_sec: f64,
+}
+
+/// One stage's wall-clock breakdown over a telemetry window — see
+/// [`PipelinedTrainer::bubble_report`]. All durations are span sums in
+/// nanoseconds; `compute_ns + recv_ns + send_ns + other_ns == wall_ns`
+/// by construction (`other_ns` is the derived remainder).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageBubble {
+    /// Stage index (thread `stage{s}`).
+    pub stage: usize,
+    /// Wall time inside the worker loop (`pipeline/stage`).
+    pub wall_ns: u64,
+    /// Forward + backward + EMA-reconstruct + optimizer time.
+    pub compute_ns: u64,
+    /// Time blocked receiving activations / gradients.
+    pub recv_ns: u64,
+    /// Time blocked sending into a full bounded channel.
+    pub send_ns: u64,
+    /// Unlabelled remainder (stash bookkeeping, pool ops, loop overhead).
+    pub other_ns: u64,
+    /// `(recv_ns + send_ns) / wall_ns` — the pipeline-bubble share.
+    pub bubble_fraction: f64,
+    /// Stage share of total model FLOPs (the partitioner's cost model).
+    pub predicted_share: f64,
+    /// Stage share of total measured compute time.
+    pub measured_share: f64,
 }
 
 /// Run `batches` forward passes through a `stages`-stage pipeline — one
@@ -455,6 +482,76 @@ impl PipelinedTrainer {
             .fold((0, 0), |(h, m), st| (h + st.pool.hits(), m + st.pool.misses()))
     }
 
+    /// Per-stage pipeline-bubble accounting over a telemetry `window`
+    /// (a [`obs::TelemetrySnapshot::diff`] spanning one or more epochs).
+    ///
+    /// For each stage the worker's wall time is split into compute
+    /// (`pipeline/fwd` + `pipeline/bwd` + `pipeline/ema` +
+    /// `pipeline/opt`), channel-blocked time (recv / send per bounded
+    /// link), and the unlabelled remainder — so the breakdown sums to
+    /// wall time by construction. The *bubble fraction* is the
+    /// channel-blocked share: time the stage sat on a bounded channel
+    /// while a neighbor ran long. `predicted_share` is the stage's slice
+    /// of total model FLOPs — what [`StagePartition::balanced`]
+    /// equalizes — and `measured_share` is its slice of measured compute
+    /// time; comparing the two grades the partitioner against reality.
+    ///
+    /// Spans require [`obs::enabled`]; with the gate off every field is
+    /// zero.
+    pub fn bubble_report(&self, window: &obs::TelemetrySnapshot) -> Vec<StageBubble> {
+        let batch = self.cfg.model.batch;
+        let flops: Vec<f64> = self
+            .stages
+            .iter()
+            .map(|st| st.layers.iter().map(|sl| sl.op.cost(batch).total_flops() as f64).sum())
+            .collect();
+        let total_flops: f64 = flops.iter().sum();
+        let span_ns = |thread: &str, label: &str| -> u64 {
+            window.span(thread, label).map_or(0, |s| s.total_ns)
+        };
+        let mut out: Vec<StageBubble> = self
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(s, _)| {
+                let th = format!("stage{s}");
+                let wall_ns = span_ns(&th, "pipeline/stage");
+                let compute_ns = span_ns(&th, "pipeline/fwd")
+                    + span_ns(&th, "pipeline/bwd")
+                    + span_ns(&th, "pipeline/ema")
+                    + span_ns(&th, "pipeline/opt");
+                let recv_ns = span_ns(&th, "pipeline/recv_act") + span_ns(&th, "pipeline/recv_grad");
+                let send_ns = span_ns(&th, "pipeline/send_act") + span_ns(&th, "pipeline/send_grad");
+                let other_ns = wall_ns.saturating_sub(compute_ns + recv_ns + send_ns);
+                let bubble_fraction = if wall_ns == 0 {
+                    0.0
+                } else {
+                    (recv_ns + send_ns) as f64 / wall_ns as f64
+                };
+                let predicted_share =
+                    if total_flops > 0.0 { flops[s] / total_flops } else { 0.0 };
+                StageBubble {
+                    stage: s,
+                    wall_ns,
+                    compute_ns,
+                    recv_ns,
+                    send_ns,
+                    other_ns,
+                    bubble_fraction,
+                    predicted_share,
+                    measured_share: 0.0, // filled below from the compute total
+                }
+            })
+            .collect();
+        let total_compute: u64 = out.iter().map(|b| b.compute_ns).sum();
+        if total_compute > 0 {
+            for b in &mut out {
+                b.measured_share = b.compute_ns as f64 / total_compute as f64;
+            }
+        }
+        out
+    }
+
     /// Peak bytes of stage-local activation stash, summed over stages.
     ///
     /// Accounting note: this counts the activation chains (stage input +
@@ -567,6 +664,10 @@ impl PipelinedTrainer {
                 }
             }
             let sw = Stopwatch::start();
+            // Bubble accounting window: snapshot before the span, diff
+            // after. Capture only reads atomics — it cannot perturb the
+            // numeric stream (obs never branches on measurements).
+            let obs_before = obs::enabled().then(obs::TelemetrySnapshot::capture);
             // Refill the persistent feed arenas in place (`batch_into`
             // fully overwrites): past the first epoch this allocates
             // nothing but the shuffle permutation.
@@ -629,6 +730,23 @@ impl PipelinedTrainer {
                 m.test_accuracy,
                 format!("{:.2}", m.seconds)
             );
+            if let Some(before) = obs_before {
+                let window = obs::TelemetrySnapshot::capture().diff(&before);
+                for b in self.bubble_report(&window) {
+                    crate::log_info!(
+                        "[stats] stage {}: wall {} compute {} ({:.0}% vs {:.0}% predicted) \
+                         recv {} send {} bubble {:.1}%",
+                        b.stage,
+                        crate::util::timer::fmt_duration(b.wall_ns as f64 / 1e9),
+                        crate::util::timer::fmt_duration(b.compute_ns as f64 / 1e9),
+                        b.measured_share * 100.0,
+                        b.predicted_share * 100.0,
+                        crate::util::timer::fmt_duration(b.recv_ns as f64 / 1e9),
+                        crate::util::timer::fmt_duration(b.send_ns as f64 / 1e9),
+                        b.bubble_fraction * 100.0
+                    );
+                }
+            }
             curve.epochs.push(m);
         }
         // Final drain: retire the pipeline tail (no new batches).
@@ -712,13 +830,28 @@ fn stage_span_loop(
     let last = st.is_last(stages);
     let fwd_end = t0 + fwd_count as u64;
 
+    // Telemetry (DESIGN.md §12): spans aggregate by logical thread name,
+    // so the per-epoch respawned worker keeps accumulating into the same
+    // `stage{s}` slot. The outer span is the stage's wall clock for this
+    // span; the inner labels partition it into compute
+    // (fwd/bwd/ema/opt), channel-blocked (recv/send per direction), and
+    // the unlabelled remainder — the bubble report reads the diff.
+    // Instrumentation only reads clocks; the f32 stream is untouched.
+    if crate::obs::enabled() {
+        crate::obs::set_thread_name(&format!("stage{s}"));
+    }
+    crate::obs::span!("pipeline/stage");
+
     for t in t0..t1 {
         // ---- forward lane -------------------------------------------
         if t < fwd_end {
             let h_in = match &links.act_in {
                 Some(rx) => {
-                    let (tin, h) = rx
-                        .recv()
+                    let recvd = {
+                        crate::obs::span!("pipeline/recv_act");
+                        rx.recv()
+                    };
+                    let (tin, h) = recvd
                         .map_err(|_| anyhow!("stage {s}: upstream closed before act {t}"))?;
                     debug_assert_eq!(tin, t, "activation arrived out of order");
                     h
@@ -734,32 +867,35 @@ fn stage_span_loop(
             debug_assert!(acts.is_empty());
             acts.reserve(st.layers.len() + 1);
             acts.push(h_in);
-            for sl in st.layers.iter_mut() {
-                sl.strategy.on_forward(t, &sl.w);
-                let rows = acts.last().expect("chain nonempty").shape()[0];
-                let mut y = st.pool.take_dtype(&[rows, sl.op.out_dim()], st.dtype);
-                if st.dtype == Dtype::F32 {
-                    sl.op.forward_into(
-                        backend,
-                        acts.last().expect("chain nonempty"),
-                        &sl.w,
-                        &sl.b,
-                        &mut y,
-                    )?;
-                } else {
-                    // bf16 lane: f32 accumulation in the staging buffer,
-                    // one quantization into the stashed activation —
-                    // identical to the oracle trainer's forward lane.
-                    sl.op.forward_into(
-                        backend,
-                        acts.last().expect("chain nonempty"),
-                        &sl.w,
-                        &sl.b,
-                        &mut st.fwd_scratch,
-                    )?;
-                    y.quantize_from(&st.fwd_scratch);
+            {
+                crate::obs::span!("pipeline/fwd");
+                for sl in st.layers.iter_mut() {
+                    sl.strategy.on_forward(t, &sl.w);
+                    let rows = acts.last().expect("chain nonempty").shape()[0];
+                    let mut y = st.pool.take_dtype(&[rows, sl.op.out_dim()], st.dtype);
+                    if st.dtype == Dtype::F32 {
+                        sl.op.forward_into(
+                            backend,
+                            acts.last().expect("chain nonempty"),
+                            &sl.w,
+                            &sl.b,
+                            &mut y,
+                        )?;
+                    } else {
+                        // bf16 lane: f32 accumulation in the staging buffer,
+                        // one quantization into the stashed activation —
+                        // identical to the oracle trainer's forward lane.
+                        sl.op.forward_into(
+                            backend,
+                            acts.last().expect("chain nonempty"),
+                            &sl.w,
+                            &sl.b,
+                            &mut st.fwd_scratch,
+                        )?;
+                        y.quantize_from(&st.fwd_scratch);
+                    }
+                    acts.push(y);
                 }
-                acts.push(y);
             }
             st.saved_bytes += acts.iter().map(Tensor::nbytes).sum::<usize>();
             st.peak_saved_bytes = st.peak_saved_bytes.max(st.saved_bytes);
@@ -767,8 +903,11 @@ fn stage_span_loop(
                 // The stash keeps the original; downstream gets a pooled
                 // copy (one copy per stage boundary, not per layer).
                 let out = st.pool.take_copy(acts.last().expect("chain nonempty"));
-                tx.send((t, out))
-                    .map_err(|_| anyhow!("stage {s}: downstream closed at act {t}"))?;
+                let sent = {
+                    crate::obs::span!("pipeline/send_act");
+                    tx.send((t, out))
+                };
+                sent.map_err(|_| anyhow!("stage {s}: downstream closed at act {t}"))?;
             }
             st.saved.push_back((t, acts));
         }
@@ -785,16 +924,23 @@ fn stage_span_loop(
             // one-hot row is borrowed in place, never copied.
             let onehot = &ohs[(tb - t0) as usize];
             let mut dl = st.pool.take(logits.shape());
-            let (loss, _correct) = backend.loss_grad_into(logits, onehot, &mut dl)?;
+            let (loss, _correct) = {
+                crate::obs::span!("pipeline/bwd");
+                backend.loss_grad_into(logits, onehot, &mut dl)?
+            };
             st.losses.push_back((tb, loss));
             dl
         } else {
-            let (tg, g) = links
-                .grad_in
-                .as_ref()
-                .expect("inner stage has a gradient input")
-                .recv()
-                .map_err(|_| anyhow!("stage {s}: downstream closed before grad {tb}"))?;
+            let recvd = {
+                crate::obs::span!("pipeline/recv_grad");
+                links
+                    .grad_in
+                    .as_ref()
+                    .expect("inner stage has a gradient input")
+                    .recv()
+            };
+            let (tg, g) =
+                recvd.map_err(|_| anyhow!("stage {s}: downstream closed before grad {tb}"))?;
             debug_assert_eq!(tg, tb, "gradient arrived out of order");
             g
         };
@@ -813,40 +959,54 @@ fn stage_span_loop(
             let y = acts.pop().expect("layer output present");
             let mut dx = st.pool.take(acts.last().expect("layer input present").shape());
             let StageLayer { op, w, b, strategy, opt_w, opt_b, dw_buf, db_buf, master_w, .. } = sl;
-            let w_bwd = strategy.backward_weights(tb, w, lr_sum);
-            op.backward_into(
-                backend,
-                acts.last().expect("layer input present"),
-                &y,
-                w_bwd,
-                &dy,
-                &mut st.scratch,
-                &mut dx,
-                dw_buf,
-                db_buf,
-            )?;
-            match master_w {
-                Some(master) => {
-                    // Mixed precision: step the f32 master, re-quantize
-                    // the storage weights from it (one rounding per
-                    // step, no compounding), feed the EMA the update.
-                    opt_w.step(master, dw_buf, lr);
-                    w.quantize_from(&*master);
-                    strategy.on_update(opt_w.velocity());
-                }
-                None => {
-                    let upd_w = opt_w.step(w, dw_buf, lr);
-                    strategy.on_update(upd_w);
-                }
+            // The span guard borrows nothing, so the reconstructed
+            // weight reference flows out of the timed block freely.
+            let w_bwd = {
+                crate::obs::span!("pipeline/ema");
+                strategy.backward_weights(tb, w, lr_sum)
+            };
+            {
+                crate::obs::span!("pipeline/bwd");
+                op.backward_into(
+                    backend,
+                    acts.last().expect("layer input present"),
+                    &y,
+                    w_bwd,
+                    &dy,
+                    &mut st.scratch,
+                    &mut dx,
+                    dw_buf,
+                    db_buf,
+                )?;
             }
-            opt_b.step(b, db_buf, lr);
+            {
+                crate::obs::span!("pipeline/opt");
+                match master_w {
+                    Some(master) => {
+                        // Mixed precision: step the f32 master, re-quantize
+                        // the storage weights from it (one rounding per
+                        // step, no compounding), feed the EMA the update.
+                        opt_w.step(master, dw_buf, lr);
+                        w.quantize_from(&*master);
+                        strategy.on_update(opt_w.velocity());
+                    }
+                    None => {
+                        let upd_w = opt_w.step(w, dw_buf, lr);
+                        strategy.on_update(upd_w);
+                    }
+                }
+                opt_b.step(b, db_buf, lr);
+            }
             st.pool.recycle(y);
             let spent = std::mem::replace(&mut dy, dx);
             st.pool.recycle(spent);
         }
         if let Some(tx) = &links.grad_out {
-            tx.send((tb, dy))
-                .map_err(|_| anyhow!("stage {s}: upstream closed at grad {tb}"))?;
+            let sent = {
+                crate::obs::span!("pipeline/send_grad");
+                tx.send((tb, dy))
+            };
+            sent.map_err(|_| anyhow!("stage {s}: upstream closed at grad {tb}"))?;
         } else {
             st.pool.recycle(dy);
         }
@@ -945,6 +1105,27 @@ mod tests {
             hits >= 3 * misses,
             "stage pools not steady: {hits} hits vs {misses} misses"
         );
+    }
+
+    #[test]
+    fn bubble_report_shares_follow_layer_costs() {
+        // Cost-model plumbing only — the live span path is exercised by
+        // tests/obs_determinism.rs (the obs gate is process-global, so
+        // lib unit tests leave it alone). An empty window yields zeroed
+        // durations; predicted shares still reflect the partition.
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(1);
+        let ex = PipelinedTrainer::new(backend(), &cfg, StrategyKind::Stashing, &mut rng).unwrap();
+        let snap = obs::TelemetrySnapshot::capture();
+        let report = ex.bubble_report(&snap.diff(&snap));
+        assert_eq!(report.len(), cfg.pipeline.stages);
+        let predicted: f64 = report.iter().map(|b| b.predicted_share).sum();
+        assert!((predicted - 1.0).abs() < 1e-9, "shares must sum to 1, got {predicted}");
+        for b in &report {
+            assert_eq!(b.wall_ns, 0, "empty window must carry no wall time");
+            assert_eq!(b.compute_ns + b.recv_ns + b.send_ns + b.other_ns, b.wall_ns);
+            assert!(b.predicted_share > 0.0, "every stage owns some compute");
+        }
     }
 
     #[test]

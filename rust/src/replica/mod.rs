@@ -53,6 +53,7 @@ use crate::backend::Backend;
 use crate::config::ExperimentConfig;
 use crate::data::{BatchIter, Dataset, Splits};
 use crate::layers::{Network, NetworkSpec};
+use crate::obs;
 use crate::strategy::StrategyKind;
 use crate::tensor::{bf16_to_f32, f32_to_bf16, workers, Dtype, Tensor};
 use crate::train::Trainer;
@@ -63,6 +64,15 @@ use std::time::Instant;
 
 /// Env knob for the default replica count (mirrors `LAYERPIPE2_WORKERS`).
 pub const REPLICAS_ENV: &str = "LAYERPIPE2_REPLICAS";
+
+/// Gradient bytes shipped over ring links (both legs, all channels) —
+/// the wire-traffic counter behind `layerpipe2 stats` (DESIGN.md §12).
+static LINK_BYTES: obs::LazyCounter = obs::LazyCounter::new("ring/link_bytes");
+
+/// Receives that found the channel empty and had to block: each stall
+/// is a replica waiting on a slower neighbor (the ring's bubble
+/// analogue; the blocked time itself lands in the `ring/recv` span).
+static LINK_STALLS: obs::LazyCounter = obs::LazyCounter::new("ring/stalls");
 
 /// Upper bound on the shard-lane count: the elementwise combine keeps
 /// its partials in a stack array of this size.
@@ -173,6 +183,7 @@ fn combine_elem(parts: &[Tensor], i: usize) -> f32 {
 /// exactly 1.0 skips the multiply, so the single-shard ring replays the
 /// raw gradient bits untouched.
 pub fn tree_reduce_into(parts: &[Tensor], out: &mut Tensor, inv_scale: f32) {
+    crate::obs::span!("ring/reduce");
     let len = parts.first().map_or(0, Tensor::len);
     let threads = workers::unit_threads(parts.len() * len, len.div_ceil(4096));
     tree_reduce_into_with_threads(parts, out, inv_scale, threads);
@@ -293,6 +304,7 @@ fn staged_len(tr: &mut Trainer) -> usize {
 /// gradients are quantized here, halving RingLink traffic (the flat
 /// buffer is the only thing the channels ship).
 fn staged_to_flat(tr: &mut Trainer, out: &mut Tensor) {
+    crate::obs::span!("ring/codec");
     let total = staged_len(tr);
     let wire = tr.dtype();
     out.resize_dtype(&[total], wire);
@@ -321,6 +333,7 @@ fn staged_to_flat(tr: &mut Trainer, out: &mut Tensor) {
 /// so every lane applies the identical gradient bits regardless of how
 /// many replicas contributed to the mean.
 fn flat_to_staged(flat: &Tensor, tr: &mut Trainer) -> Result<()> {
+    crate::obs::span!("ring/codec");
     let mut at = 0;
     for i in 0..tr.pending_steps().len() {
         let l = tr.pending_steps()[i].0;
@@ -648,6 +661,23 @@ impl LocalRing {
     }
 }
 
+/// Receive from a ring channel, counting a stall (and timing the wait
+/// in the `ring/recv` span) when the message has not arrived yet. The
+/// fast path is one `try_recv` — no clock read, no counter bump.
+fn recv_counting_stalls<T>(
+    rx: &std::sync::mpsc::Receiver<T>,
+) -> Result<T, std::sync::mpsc::RecvError> {
+    match rx.try_recv() {
+        Ok(m) => Ok(m),
+        Err(std::sync::mpsc::TryRecvError::Disconnected) => Err(std::sync::mpsc::RecvError),
+        Err(std::sync::mpsc::TryRecvError::Empty) => {
+            LINK_STALLS.inc();
+            crate::obs::span!("ring/recv");
+            rx.recv()
+        }
+    }
+}
+
 // ---- full ring driver ---------------------------------------------------
 
 /// Outcome of a ring training run.
@@ -755,6 +785,9 @@ fn train_ring_threaded(
             resp_txs.push(rtx);
             let first = r * lanes_per;
             handles.push(s.spawn(move || -> Result<Vec<(usize, Tensor)>> {
+                if crate::obs::enabled() {
+                    crate::obs::set_thread_name(&format!("ring-worker-{r}"));
+                }
                 let (mut block, mut rng) =
                     build_block(backend, cfg, spec, kind, first, lanes_per, shard_rows)?;
                 let mut step = |block: &mut LaneBlock,
@@ -762,11 +795,11 @@ fn train_ring_threaded(
                                 train: &Dataset|
                  -> Result<()> {
                     block.compute(idx, train, |j, buf| {
+                        LINK_BYTES.add(buf.nbytes() as u64);
                         gtx.send((j, buf)).map_err(|_| anyhow!("ring torn down (coordinator gone)"))
                     })?;
                     for _ in 0..block.lanes.len() {
-                        let (j, buf) = rrx
-                            .recv()
+                        let (j, buf) = recv_counting_stalls(&rrx)
                             .map_err(|_| anyhow!("ring torn down (coordinator gone)"))?;
                         block.apply(j, buf)?;
                     }
@@ -796,8 +829,9 @@ fn train_ring_threaded(
             })?;
             for rx in &grads_rxs {
                 for _ in 0..lanes_per {
-                    let (j, buf) =
-                        rx.recv().map_err(|_| anyhow!("ring torn down (worker died)"))?;
+                    let (j, buf) = recv_counting_stalls(rx)
+                        .map_err(|_| anyhow!("ring torn down (worker died)"))?;
+                    LINK_BYTES.add(buf.nbytes() as u64);
                     slots[j] = buf;
                 }
             }
@@ -815,6 +849,7 @@ fn train_ring_threaded(
                 if j < lanes_per {
                     block.apply(j, buf)?;
                 } else {
+                    LINK_BYTES.add(buf.nbytes() as u64);
                     resp_txs[j / lanes_per - 1]
                         .send((j, buf))
                         .map_err(|_| anyhow!("ring torn down (worker died)"))?;

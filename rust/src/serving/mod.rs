@@ -58,6 +58,7 @@
 use crate::backend::{Backend, Exec};
 use crate::layers::{build_op, Layer, Network, NetworkSpec};
 use crate::model::checkpoint;
+use crate::obs;
 use crate::retiming::StagePartition;
 use crate::tensor::{BufferPool, Tensor};
 use crate::util::Rng;
@@ -74,9 +75,6 @@ use std::time::{Duration, Instant};
 /// therefore waits at most `max_wait_ticks · BATCH_TICK` after the last
 /// arrival before flushing.
 pub const BATCH_TICK: Duration = Duration::from_micros(200);
-
-/// Batch-latency samples retained for percentile reporting (ring).
-const LAT_CAP: usize = 4096;
 
 /// Serving engine knobs.
 #[derive(Clone, Debug)]
@@ -136,6 +134,11 @@ pub struct Request {
     /// Per-client submission sequence number (assigned by the handle).
     pub seq: u64,
     pub data: Tensor,
+    /// Submission time — the start of the submit→respond latency the
+    /// collector records into the server's `obs` histogram. Never read
+    /// by the batching logic itself (determinism: clocks are observed,
+    /// not branched on).
+    pub born: Instant,
 }
 
 impl Request {
@@ -228,10 +231,22 @@ impl Coalescer {
     /// batcher reuses one scratch Vec so steady-state batching performs
     /// no heap allocation. Returns whether a batch was emitted.
     pub fn take_ready_into(&mut self, force: bool, out: &mut Vec<Request>) -> bool {
+        self.take_ready_into_reason(force, out).is_some()
+    }
+
+    /// [`Coalescer::take_ready_into`], additionally reporting *why* the
+    /// batch flushed (the batcher feeds these into the per-server
+    /// `flush_*` counters). Reasons are ranked full > shrank > force >
+    /// waited when several hold at once.
+    pub fn take_ready_into_reason(
+        &mut self,
+        force: bool,
+        out: &mut Vec<Request>,
+    ) -> Option<FlushReason> {
         debug_assert!(out.is_empty(), "scratch must be drained before reuse");
         if self.queue.is_empty() {
             self.waited = 0;
-            return false;
+            return None;
         }
         let mut rows = 0usize;
         let mut n = 0usize;
@@ -249,14 +264,35 @@ impl Coalescer {
         // waiting only adds latency. Never splits/drops/reorders (same
         // greedy prefix, emitted earlier).
         let shrank = self.shrink_under > 0 && n == self.queue.len() && rows <= self.shrink_under;
-        if full || shrank || force || self.waited >= self.max_wait_ticks {
-            self.waited = 0;
-            out.extend(self.queue.drain(..n));
-            true
+        let reason = if full {
+            FlushReason::Full
+        } else if shrank {
+            FlushReason::Shrank
+        } else if force {
+            FlushReason::Force
+        } else if self.waited >= self.max_wait_ticks {
+            FlushReason::Waited
         } else {
-            false
-        }
+            return None;
+        };
+        self.waited = 0;
+        out.extend(self.queue.drain(..n));
+        Some(reason)
     }
+}
+
+/// Why a coalesced batch left the queue — see
+/// [`Coalescer::take_ready_into_reason`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    /// The prefix hit `max_batch` rows (or the next request overflowed).
+    Full,
+    /// Low-occupancy shrink: a queue-emptying small prefix went early.
+    Shrank,
+    /// Forced drain (shutdown).
+    Force,
+    /// The idle-tick wait budget was spent.
+    Waited,
 }
 
 // ---------------------------------------------------------------------------
@@ -277,6 +313,8 @@ struct Route {
     client: u32,
     seq: u64,
     rows: usize,
+    /// Carried over from the request: submit→respond latency endpoint.
+    born: Instant,
 }
 
 /// A batch moving down the stage pipeline. Packets circulate: the
@@ -293,8 +331,6 @@ struct Packet {
     /// Ping-pong output buffer (capacity grows to the widest layer once,
     /// then every resize is in place).
     spare: Tensor,
-    /// Batch-formation time (latency accounting).
-    born: Instant,
 }
 
 impl Packet {
@@ -305,24 +341,70 @@ impl Packet {
             routes: Vec::new(),
             data: Tensor::empty(),
             spare: Tensor::empty(),
-            born: Instant::now(),
         }
     }
 }
 
 // ---------------------------------------------------------------------------
-// Shared counters.
+// Shared counters — per-server views over the `obs` registry.
 // ---------------------------------------------------------------------------
 
-#[derive(Default)]
-struct Stats {
-    submitted: AtomicU64,
-    completed: AtomicU64,
-    dropped: AtomicU64,
-    batches: AtomicU64,
-    rows: AtomicU64,
-    reloads: AtomicU64,
-    packets_created: AtomicU64,
+/// Server instance sequence: each [`Server::start`] claims the next id,
+/// so its instrument names (`serving#N/…`) are process-unique and every
+/// instance's counters start a fresh window at zero.
+static SERVER_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// One server's instrument handles on the shared [`crate::obs`]
+/// registry (DESIGN.md §12). `Copy` — every worker context carries the
+/// handles by value; [`Server::stats`] is a thin read-side view.
+#[derive(Clone, Copy)]
+struct Counters {
+    submitted: obs::Counter,
+    completed: obs::Counter,
+    dropped: obs::Counter,
+    batches: obs::Counter,
+    rows: obs::Counter,
+    reloads: obs::Counter,
+    packets_created: obs::Counter,
+    flush_full: obs::Counter,
+    flush_shrank: obs::Counter,
+    flush_force: obs::Counter,
+    flush_wait: obs::Counter,
+    /// Requests accepted by `submit` and not yet routed to a response —
+    /// the live queue depth across queue + coalescer + pipeline.
+    queue_depth: obs::Gauge,
+    /// Submit→respond latency per request.
+    latency: obs::Hist,
+}
+
+impl Counters {
+    fn register(id: u64) -> Counters {
+        let c = |k: &str| obs::counter(&format!("serving#{id}/{k}"));
+        Counters {
+            submitted: c("submitted"),
+            completed: c("completed"),
+            dropped: c("dropped"),
+            batches: c("batches"),
+            rows: c("rows"),
+            reloads: c("reloads"),
+            packets_created: c("packets_created"),
+            flush_full: c("flush_full"),
+            flush_shrank: c("flush_shrank"),
+            flush_force: c("flush_force"),
+            flush_wait: c("flush_wait"),
+            queue_depth: obs::gauge(&format!("serving#{id}/queue_depth")),
+            latency: obs::hist(&format!("serving#{id}/latency")),
+        }
+    }
+
+    fn mark_flush(&self, reason: FlushReason) {
+        match reason {
+            FlushReason::Full => self.flush_full.inc(),
+            FlushReason::Shrank => self.flush_shrank.inc(),
+            FlushReason::Force => self.flush_force.inc(),
+            FlushReason::Waited => self.flush_wait.inc(),
+        }
+    }
 }
 
 /// A point-in-time snapshot of the serving counters.
@@ -342,6 +424,17 @@ pub struct ServingStats {
     pub reloads: u64,
     /// Packets ever allocated (freezes once the ring is warm).
     pub packets_created: u64,
+    /// Batches flushed because the greedy prefix was full.
+    pub flush_full: u64,
+    /// Batches flushed by the low-occupancy shrink rule.
+    pub flush_shrank: u64,
+    /// Batches flushed by the shutdown drain.
+    pub flush_force: u64,
+    /// Batches flushed after the idle-tick wait budget.
+    pub flush_wait: u64,
+    /// Requests accepted but not yet routed to a response (0 after a
+    /// clean shutdown: every accepted request was served).
+    pub queue_depth: i64,
     /// Edge-pool takes served from recycled storage / fresh allocations.
     pub pool_hits: u64,
     pub pool_misses: u64,
@@ -349,27 +442,6 @@ pub struct ServingStats {
     pub epoch: u64,
     /// Mean occupied fraction of formed batches (0 when none formed).
     pub occupancy: f64,
-}
-
-/// Fixed-capacity latency ring (seconds per batch, formation→collect).
-struct LatRing {
-    samples: Vec<f64>,
-    next: usize,
-}
-
-impl LatRing {
-    fn new() -> LatRing {
-        LatRing { samples: Vec::with_capacity(LAT_CAP), next: 0 }
-    }
-
-    fn push(&mut self, v: f64) {
-        if self.samples.len() < LAT_CAP {
-            self.samples.push(v);
-        } else {
-            self.samples[self.next] = v;
-            self.next = (self.next + 1) % LAT_CAP;
-        }
-    }
 }
 
 // ---------------------------------------------------------------------------
@@ -385,8 +457,7 @@ pub struct Server {
     resp_txs: Arc<Mutex<Vec<Option<Sender<Response>>>>>,
     version: Arc<Mutex<Arc<ModelVersion>>>,
     pool: Arc<Mutex<BufferPool>>,
-    stats: Arc<Stats>,
-    lat: Arc<Mutex<LatRing>>,
+    stats: Counters,
     fail: Arc<Mutex<Option<String>>>,
     /// Submit gate: held shared for the duration of every `submit`'s
     /// enqueue, taken exclusively (and set) by `shutdown` — so a submit
@@ -440,8 +511,7 @@ impl Server {
         });
         let version = Arc::new(Mutex::new(version0));
         let pool = Arc::new(Mutex::new(BufferPool::new()));
-        let stats = Arc::new(Stats::default());
-        let lat = Arc::new(Mutex::new(LatRing::new()));
+        let stats = Counters::register(SERVER_SEQ.fetch_add(1, Ordering::Relaxed));
         let fail: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
         let gate = Arc::new(RwLock::new(false));
         let closing = Arc::new(AtomicBool::new(false));
@@ -467,7 +537,7 @@ impl Server {
             free_rx,
             version: Arc::clone(&version),
             pool: Arc::clone(&pool),
-            stats: Arc::clone(&stats),
+            stats,
             max_batch: cfg.max_batch,
             in_dim: net.input_dim(),
         };
@@ -496,8 +566,7 @@ impl Server {
             free_tx,
             resp_txs: Arc::clone(&resp_txs),
             pool: Arc::clone(&pool),
-            stats: Arc::clone(&stats),
-            lat: Arc::clone(&lat),
+            stats,
             out_dim: net.out_dim(),
         };
         let last_rx = rxs.pop_front().expect("collector rx");
@@ -514,7 +583,6 @@ impl Server {
             version,
             pool,
             stats,
-            lat,
             fail,
             gate,
             closing,
@@ -548,7 +616,7 @@ impl Server {
             req_tx: self.req_tx.clone(),
             resp_rx: rx,
             pool: Arc::clone(&self.pool),
-            stats: Arc::clone(&self.stats),
+            stats: self.stats,
             gate: Arc::clone(&self.gate),
             in_dim: self.in_dim,
             max_batch: self.max_batch,
@@ -583,7 +651,7 @@ impl Server {
         let mut cur = self.version.lock().expect("version lock");
         let epoch = cur.epoch + 1;
         *cur = Arc::new(ModelVersion { epoch, params });
-        self.stats.reloads.fetch_add(1, Ordering::Relaxed);
+        self.stats.reloads.inc();
         Ok(epoch)
     }
 
@@ -624,22 +692,28 @@ impl Server {
         self.max_batch
     }
 
-    /// Counter snapshot (cheap; atomics + one pool lock).
+    /// Counter snapshot — a thin view over this server's `obs` registry
+    /// instruments (cheap; relaxed loads + one pool lock).
     pub fn stats(&self) -> ServingStats {
         let (pool_hits, pool_misses) = {
             let p = self.pool.lock().expect("edge pool lock");
             (p.hits(), p.misses())
         };
-        let batches = self.stats.batches.load(Ordering::Relaxed);
-        let rows = self.stats.rows.load(Ordering::Relaxed);
+        let batches = self.stats.batches.value();
+        let rows = self.stats.rows.value();
         ServingStats {
-            submitted: self.stats.submitted.load(Ordering::Relaxed),
-            completed: self.stats.completed.load(Ordering::Relaxed),
-            dropped: self.stats.dropped.load(Ordering::Relaxed),
+            submitted: self.stats.submitted.value(),
+            completed: self.stats.completed.value(),
+            dropped: self.stats.dropped.value(),
             batches,
             rows,
-            reloads: self.stats.reloads.load(Ordering::Relaxed),
-            packets_created: self.stats.packets_created.load(Ordering::Relaxed),
+            reloads: self.stats.reloads.value(),
+            packets_created: self.stats.packets_created.value(),
+            flush_full: self.stats.flush_full.value(),
+            flush_shrank: self.stats.flush_shrank.value(),
+            flush_force: self.stats.flush_force.value(),
+            flush_wait: self.stats.flush_wait.value(),
+            queue_depth: self.stats.queue_depth.value(),
             pool_hits,
             pool_misses,
             epoch: self.epoch(),
@@ -651,16 +725,23 @@ impl Server {
         }
     }
 
-    /// `(p50, p99)` batch latency in milliseconds over the retained
-    /// window (formation → collection), or `None` before any batch.
+    /// Submit→respond latency histogram (per request, full lifetime:
+    /// queue + coalescing wait + pipeline). Quantiles come from the
+    /// log-scale buckets — p50/p90/p99 each round down to a bucket floor
+    /// (≤25 % relative error).
+    pub fn latency_hist(&self) -> obs::HistSnapshot {
+        self.stats.latency.snapshot()
+    }
+
+    /// `(p50, p99)` submit→respond latency in milliseconds, or `None`
+    /// before any response. Bucket-floor quantiles over the full request
+    /// history (the pre-registry ring kept only a sliding window).
     pub fn latency_ms(&self) -> Option<(f64, f64)> {
-        let mut s = self.lat.lock().expect("latency lock").samples.clone();
-        if s.is_empty() {
+        let h = self.latency_hist();
+        if h.count == 0 {
             return None;
         }
-        s.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
-        let pick = |q: f64| s[((s.len() - 1) as f64 * q).round() as usize] * 1e3;
-        Some((pick(0.50), pick(0.99)))
+        Some((h.quantile_ns(0.50) as f64 / 1e6, h.quantile_ns(0.99) as f64 / 1e6))
     }
 
     /// Drain outstanding requests, stop every worker and return the
@@ -724,7 +805,7 @@ pub struct ServingClient {
     req_tx: SyncSender<Inbound>,
     resp_rx: Receiver<Response>,
     pool: Arc<Mutex<BufferPool>>,
-    stats: Arc<Stats>,
+    stats: Counters,
     gate: Arc<RwLock<bool>>,
     in_dim: usize,
     max_batch: usize,
@@ -769,11 +850,12 @@ impl ServingClient {
         let gate = self.gate.read().expect("gate lock");
         ensure!(!*gate, "server is shut down");
         self.req_tx
-            .send(Inbound::Req(Request { client: self.id, seq, data }))
+            .send(Inbound::Req(Request { client: self.id, seq, data, born: Instant::now() }))
             .map_err(|_| anyhow!("server is shut down"))?;
         drop(gate);
         self.seq += 1;
-        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        self.stats.submitted.inc();
+        self.stats.queue_depth.add(1);
         Ok(seq)
     }
 
@@ -884,7 +966,7 @@ struct BatcherCtx {
     free_rx: Receiver<Packet>,
     version: Arc<Mutex<Arc<ModelVersion>>>,
     pool: Arc<Mutex<BufferPool>>,
-    stats: Arc<Stats>,
+    stats: Counters,
     max_batch: usize,
     in_dim: usize,
 }
@@ -901,7 +983,7 @@ impl BatcherCtx {
                 p
             }
             Err(_) => {
-                self.stats.packets_created.fetch_add(1, Ordering::Relaxed);
+                self.stats.packets_created.inc();
                 Packet::fresh(version)
             }
         };
@@ -915,7 +997,12 @@ impl BatcherCtx {
                 let n = rows * self.in_dim;
                 p.data.data_mut()[offset * self.in_dim..offset * self.in_dim + n]
                     .copy_from_slice(&req.data.data()[..n]);
-                p.routes.push(Route { client: req.client, seq: req.seq, rows });
+                p.routes.push(Route {
+                    client: req.client,
+                    seq: req.seq,
+                    rows,
+                    born: req.born,
+                });
                 offset += rows;
                 pool.recycle(req.data);
             }
@@ -926,9 +1013,8 @@ impl BatcherCtx {
         // that irrelevant to occupied rows).
         p.data.data_mut()[offset * self.in_dim..].fill(0.0);
         p.occupied = offset;
-        p.born = Instant::now();
-        self.stats.batches.fetch_add(1, Ordering::Relaxed);
-        self.stats.rows.fetch_add(offset as u64, Ordering::Relaxed);
+        self.stats.batches.inc();
+        self.stats.rows.add(offset as u64);
         self.tx0.send(p).is_ok()
     }
 }
@@ -962,7 +1048,8 @@ fn batcher_loop(
                 Err(_) => break,
             }
         }
-        while co.take_ready_into(false, &mut scratch) {
+        while let Some(reason) = co.take_ready_into_reason(false, &mut scratch) {
+            ctx.stats.mark_flush(reason);
             if !ctx.emit(&mut scratch) {
                 return;
             }
@@ -978,7 +1065,8 @@ fn batcher_loop(
             _ => break,
         }
     }
-    while co.take_ready_into(true, &mut scratch) {
+    while let Some(reason) = co.take_ready_into_reason(true, &mut scratch) {
+        ctx.stats.mark_flush(reason);
         if !ctx.emit(&mut scratch) {
             return;
         }
@@ -993,6 +1081,10 @@ fn stage_loop(
     fail: Arc<Mutex<Option<String>>>,
 ) {
     while let Ok(mut p) = rx.recv() {
+        // Span slot: the OS thread name ("serve-stage-{s}") keys the
+        // aggregate, so each stage reports separately without an
+        // explicit set_thread_name.
+        crate::obs::span!("serving/forward");
         for (l, op) in ops.iter_mut() {
             let (w, b) = &p.version.params[*l];
             if let Err(e) = op.forward_into(exec.as_ref(), &p.data, w, b, &mut p.spare) {
@@ -1016,14 +1108,12 @@ struct CollectorCtx {
     free_tx: SyncSender<Packet>,
     resp_txs: Arc<Mutex<Vec<Option<Sender<Response>>>>>,
     pool: Arc<Mutex<BufferPool>>,
-    stats: Arc<Stats>,
-    lat: Arc<Mutex<LatRing>>,
+    stats: Counters,
     out_dim: usize,
 }
 
 fn collector_loop(rx: Receiver<Packet>, ctx: CollectorCtx) {
     while let Ok(mut p) = rx.recv() {
-        let elapsed = p.born.elapsed().as_secs_f64();
         let mut offset = 0usize;
         // One pool guard and one client-table guard per *packet*, not
         // per route: the unbounded sends never block, so holding both
@@ -1035,6 +1125,11 @@ fn collector_loop(rx: Receiver<Packet>, ctx: CollectorCtx) {
             let mut pool = ctx.pool.lock().expect("edge pool lock");
             let mut txs = ctx.resp_txs.lock().expect("client table lock");
             for route in p.routes.drain(..) {
+                // Submit→respond latency, recorded whether or not the
+                // client is still listening; the queue-depth gauge
+                // retires the request either way.
+                ctx.stats.latency.record_secs(route.born.elapsed().as_secs_f64());
+                ctx.stats.queue_depth.sub(1);
                 let mut out = pool.take(&[route.rows, ctx.out_dim]);
                 let n = route.rows * ctx.out_dim;
                 out.data_mut()[..n]
@@ -1050,25 +1145,24 @@ fn collector_loop(rx: Receiver<Packet>, ctx: CollectorCtx) {
                 match txs.get(idx).and_then(|slot| slot.clone()) {
                     Some(tx) => match tx.send(resp) {
                         Ok(()) => {
-                            ctx.stats.completed.fetch_add(1, Ordering::Relaxed);
+                            ctx.stats.completed.inc();
                         }
                         Err(std::sync::mpsc::SendError(resp)) => {
                             // Client handle dropped: reclaim the buffer
                             // and tombstone the slot, freeing its channel.
                             pool.recycle(resp.data);
                             txs[idx] = None;
-                            ctx.stats.dropped.fetch_add(1, Ordering::Relaxed);
+                            ctx.stats.dropped.inc();
                         }
                     },
                     None => {
                         pool.recycle(resp.data);
-                        ctx.stats.dropped.fetch_add(1, Ordering::Relaxed);
+                        ctx.stats.dropped.inc();
                     }
                 }
             }
         }
         debug_assert_eq!(offset, p.occupied);
-        ctx.lat.lock().expect("latency lock").push(elapsed);
         // Return the packet to the batcher; capacity is sized so this
         // never drops a warm packet in practice.
         let _ = ctx.free_tx.try_send(p);
@@ -1094,7 +1188,7 @@ mod tests {
     }
 
     fn req(rows: usize, seq: u64) -> Request {
-        Request { client: 0, seq, data: Tensor::zeros(&[rows, 1]) }
+        Request { client: 0, seq, data: Tensor::zeros(&[rows, 1]), born: Instant::now() }
     }
 
     #[test]
@@ -1162,6 +1256,33 @@ mod tests {
     }
 
     #[test]
+    fn coalescer_reports_flush_reasons() {
+        let mut co = Coalescer::with_shrink(4, 2, 1);
+        let mut out = Vec::new();
+        // Full: exactly max_batch rows.
+        co.push(req(2, 0));
+        co.push(req(2, 1));
+        assert_eq!(co.take_ready_into_reason(false, &mut out), Some(FlushReason::Full));
+        out.clear();
+        // Shrank: queue-emptying prefix ≤ shrink_under.
+        co.push(req(1, 2));
+        assert_eq!(co.take_ready_into_reason(false, &mut out), Some(FlushReason::Shrank));
+        out.clear();
+        // Waited: idle-tick budget spent.
+        co.push(req(2, 3));
+        co.tick();
+        assert_eq!(co.take_ready_into_reason(false, &mut out), None);
+        co.tick();
+        assert_eq!(co.take_ready_into_reason(false, &mut out), Some(FlushReason::Waited));
+        out.clear();
+        // Force: shutdown drain beats the wait budget.
+        co.push(req(2, 4));
+        assert_eq!(co.take_ready_into_reason(true, &mut out), Some(FlushReason::Force));
+        out.clear();
+        assert_eq!(co.take_ready_into_reason(true, &mut out), None, "empty queue");
+    }
+
+    #[test]
     fn roundtrip_matches_forward_full_bitwise_in_fifo_order() {
         let net = tiny_net(5);
         let mut oracle = net.snapshot().unwrap();
@@ -1185,11 +1306,20 @@ mod tests {
             assert_eq!(r.data, want, "request {i}: batched ≠ sequential oracle");
             cl.recycle(r.data);
         }
+        let hist = server.latency_hist();
+        assert_eq!(hist.count, 7, "one latency sample per request");
+        assert!(server.latency_ms().is_some());
         let stats = server.shutdown().unwrap();
         assert_eq!(stats.submitted, 7);
         assert_eq!(stats.completed, 7);
         assert_eq!(stats.dropped, 0);
         assert_eq!(stats.rows, inputs.iter().map(|x| x.shape()[0] as u64).sum::<u64>());
+        assert_eq!(stats.queue_depth, 0, "every accepted request was routed");
+        assert_eq!(
+            stats.flush_full + stats.flush_shrank + stats.flush_force + stats.flush_wait,
+            stats.batches,
+            "every batch carries exactly one flush reason"
+        );
     }
 
     #[test]

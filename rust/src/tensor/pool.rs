@@ -22,7 +22,15 @@
 //! this); per-size-class caps keep any imbalance bounded.
 
 use super::{Dtype, Tensor};
+use crate::obs;
 use std::collections::HashMap;
+
+/// Process-wide take mirrors on the shared `obs` registry (DESIGN.md
+/// §12): pools stay owner-local and lock-free — `hits()`/`misses()`
+/// keep their per-instance semantics — while the registry accumulates
+/// the cross-pool totals for `layerpipe2 stats` and snapshot diffs.
+static POOL_HITS: obs::LazyCounter = obs::LazyCounter::new("pool/hits");
+static POOL_MISSES: obs::LazyCounter = obs::LazyCounter::new("pool/misses");
 
 /// Spare buffers retained per size class; recycles beyond this are
 /// dropped, bounding pool memory when a size class has unbalanced
@@ -57,11 +65,13 @@ impl BufferPool {
         match self.free.get_mut(&(dtype, n * dtype.size_of())).and_then(Vec::pop) {
             Some(mut t) => {
                 self.hits += 1;
+                POOL_HITS.inc();
                 t.resize_dtype(shape, dtype);
                 t
             }
             None => {
                 self.misses += 1;
+                POOL_MISSES.inc();
                 Tensor::zeros_dtype(shape, dtype)
             }
         }

@@ -23,9 +23,15 @@
 //! independent of the worker threads, so taking scratch never spawns
 //! them.
 
+use crate::obs;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Registry instruments (DESIGN.md §12): batches submitted through
+/// [`WorkerPool::run`] (inline or queued) and the tasks they carried.
+static POOL_DISPATCHES: obs::LazyCounter = obs::LazyCounter::new("workers/dispatches");
+static POOL_TASKS: obs::LazyCounter = obs::LazyCounter::new("workers/tasks");
 
 /// A borrowed unit of work: executed exactly once, strictly before the
 /// submitting [`WorkerPool::run`] call returns.
@@ -130,6 +136,8 @@ impl WorkerPool {
         if n == 0 {
             return;
         }
+        POOL_DISPATCHES.inc();
+        POOL_TASKS.add(n as u64);
         if n == 1 || self.size <= 1 {
             for task in tasks {
                 task();
@@ -245,10 +253,11 @@ thread_local! {
         const { std::cell::RefCell::new(Vec::new()) };
 }
 
-/// Aggregate take/recycle counters across all threads (observability;
-/// the free lists themselves are thread-local).
-static SCRATCH_HITS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-static SCRATCH_MISSES: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+/// Aggregate take/recycle counters across all threads, kept on the
+/// shared `obs` registry (the free lists themselves are thread-local).
+/// [`scratch_stats`] is a thin view over these.
+static SCRATCH_HITS: obs::LazyCounter = obs::LazyCounter::new("workers/scratch_hits");
+static SCRATCH_MISSES: obs::LazyCounter = obs::LazyCounter::new("workers/scratch_misses");
 
 /// Hand out a scratch buffer of `len` f32s from the calling thread's
 /// free list. **Contents are unspecified** (recycled buffers keep stale
@@ -260,12 +269,12 @@ pub fn take_scratch(len: usize) -> Vec<f32> {
     let popped = SCRATCH.with(|s| s.borrow_mut().pop());
     match popped {
         Some(mut v) => {
-            SCRATCH_HITS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            SCRATCH_HITS.inc();
             v.resize(len, 0.0);
             v
         }
         None => {
-            SCRATCH_MISSES.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            SCRATCH_MISSES.inc();
             vec![0.0; len]
         }
     }
@@ -288,12 +297,11 @@ pub fn recycle_scratch(v: Vec<f32>) {
 /// `(hits, misses)` summed over every thread's scratch free list —
 /// takes served from a recycled buffer vs fresh allocations. On a
 /// single-threaded trainer, misses must stop growing once the kernel
-/// working set is warm (asserted by `alloc_steady_state.rs`).
+/// working set is warm (asserted by `alloc_steady_state.rs`). A thin
+/// view over the `workers/scratch_hits` / `workers/scratch_misses`
+/// registry counters.
 pub fn scratch_stats() -> (u64, u64) {
-    (
-        SCRATCH_HITS.load(std::sync::atomic::Ordering::Relaxed),
-        SCRATCH_MISSES.load(std::sync::atomic::Ordering::Relaxed),
-    )
+    (SCRATCH_HITS.value(), SCRATCH_MISSES.value())
 }
 
 static POOL: OnceLock<WorkerPool> = OnceLock::new();

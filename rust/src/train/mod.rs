@@ -443,6 +443,7 @@ impl Trainer {
 
         // ---- forward lane ------------------------------------------------
         if let Some((x, onehot)) = batch {
+            crate::obs::span!("train/fwd");
             let nl = self.net.num_layers();
             // Recycled chain Vec + pooled output buffers: the steady-state
             // forward performs zero heap allocation.
@@ -491,6 +492,7 @@ impl Trainer {
         // ---- backward lane -----------------------------------------------
         // Delays are non-increasing in l, so scanning in-flight batches
         // oldest-first and their layers top-down preserves dataflow order.
+        crate::obs::span!("train/bwd");
         let mut retired = 0;
         for idx in 0..self.inflight.len() {
             loop {

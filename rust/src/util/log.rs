@@ -1,8 +1,13 @@
 //! Leveled stderr logging with an env-controlled threshold.
 //!
-//! `LAYERPIPE2_LOG` ∈ {error, warn, info, debug, trace}; default `info`.
-//! Deliberately tiny: no timestamps by default (keeps test output stable),
-//! atomics for the level, zero allocation when filtered out.
+//! `LAYERPIPE2_LOG` ∈ {error, warn, info, debug, trace, off}; default
+//! `info`. `off` (also `0`/`none`) silences *everything* including
+//! `error` — for bit-stability test runs that diff stderr.
+//! `LAYERPIPE2_LOG_TS=1` opts into an elapsed-since-start prefix on
+//! every line (via [`crate::util::timer::process_anchor`]); the default
+//! output stays byte-identical to the historical format.
+//! Deliberately tiny: atomics for the level, zero allocation when
+//! filtered out.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
@@ -15,30 +20,45 @@ pub enum Level {
     Trace = 4,
 }
 
+/// Raw threshold value meaning "emit nothing, not even errors". Kept
+/// outside the [`Level`] enum so `l <= level()` ordering stays intact.
+const OFF: u8 = 5;
+
 static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialised
+static TIMESTAMPS: AtomicU8 = AtomicU8::new(255); // 255 = uninitialised
 
 fn init_from_env() -> u8 {
     let lvl = match std::env::var("LAYERPIPE2_LOG").ok().as_deref() {
-        Some("error") => Level::Error,
-        Some("warn") => Level::Warn,
-        Some("debug") => Level::Debug,
-        Some("trace") => Level::Trace,
-        _ => Level::Info,
-    } as u8;
+        Some("error") => Level::Error as u8,
+        Some("warn") => Level::Warn as u8,
+        Some("debug") => Level::Debug as u8,
+        Some("trace") => Level::Trace as u8,
+        Some("off" | "0" | "none") => OFF,
+        _ => Level::Info as u8,
+    };
     LEVEL.store(lvl, Ordering::Relaxed);
     lvl
 }
 
-/// Current threshold, lazily read from the environment.
-pub fn level() -> Level {
+fn raw_level() -> u8 {
     let raw = LEVEL.load(Ordering::Relaxed);
-    let raw = if raw == 255 { init_from_env() } else { raw };
-    match raw {
-        0 => Level::Error,
+    if raw == 255 {
+        init_from_env()
+    } else {
+        raw
+    }
+}
+
+/// Current threshold, lazily read from the environment. When logging is
+/// fully off this reports `Error` (the most restrictive named level) —
+/// use [`enabled`] for emission decisions.
+pub fn level() -> Level {
+    match raw_level() {
         1 => Level::Warn,
         2 => Level::Info,
         3 => Level::Debug,
-        _ => Level::Trace,
+        4 => Level::Trace,
+        _ => Level::Error, // 0 and OFF
     }
 }
 
@@ -47,9 +67,25 @@ pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// Silence every level, `error` included (programmatic `LAYERPIPE2_LOG=off`).
+pub fn set_off() {
+    LEVEL.store(OFF, Ordering::Relaxed);
+}
+
 /// `true` if a message at `l` would be emitted.
 pub fn enabled(l: Level) -> bool {
-    l <= level()
+    let raw = raw_level();
+    raw != OFF && (l as u8) <= raw
+}
+
+fn timestamps_enabled() -> bool {
+    let raw = TIMESTAMPS.load(Ordering::Relaxed);
+    if raw != 255 {
+        return raw == 1;
+    }
+    let on = std::env::var("LAYERPIPE2_LOG_TS").ok().as_deref() == Some("1");
+    TIMESTAMPS.store(u8::from(on), Ordering::Relaxed);
+    on
 }
 
 #[doc(hidden)]
@@ -62,7 +98,12 @@ pub fn emit(l: Level, args: std::fmt::Arguments<'_>) {
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         };
-        eprintln!("[{tag}] {args}");
+        if timestamps_enabled() {
+            let elapsed = super::timer::process_anchor().elapsed().as_secs_f64();
+            eprintln!("[{tag} +{}] {args}", super::timer::fmt_duration(elapsed));
+        } else {
+            eprintln!("[{tag}] {args}");
+        }
     }
 }
 
@@ -81,12 +122,20 @@ macro_rules! log_trace { ($($t:tt)*) => { $crate::util::log::emit($crate::util::
 mod tests {
     use super::*;
 
+    /// One sequential test: the threshold is process-global, so the
+    /// Warn and Off phases must not run as parallel sibling tests.
     #[test]
-    fn threshold_filters() {
+    fn threshold_filters_and_off_silences_error_too() {
         set_level(Level::Warn);
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
+        set_off();
+        assert!(!enabled(Level::Error));
+        assert!(!enabled(Level::Trace));
+        // level() stays a valid named level even while off.
+        assert_eq!(level(), Level::Error);
         set_level(Level::Info);
+        assert!(enabled(Level::Error));
     }
 }

@@ -1,6 +1,16 @@
 //! Wall-clock timing helpers used by the bench harness and perf logs.
 
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
+
+/// The process-wide time origin: first call pins it, every later call
+/// returns the same `Instant`. Shared by `obs` trace timestamps and
+/// `util::log`'s opt-in elapsed-time prefix, so both clocks agree (and
+/// so neither module has to depend on the other).
+pub fn process_anchor() -> Instant {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    *ANCHOR.get_or_init(Instant::now)
+}
 
 /// A resettable stopwatch.
 #[derive(Debug)]

@@ -360,4 +360,70 @@ fn steady_state_iterations_allocate_near_zero() {
         );
         assert!(ring.lanes_bitwise_equal(), "ring lanes drifted during the alloc test");
     }
+
+    // ---- observability on: spans and instruments must not allocate -----
+    //
+    // The telemetry discipline (DESIGN.md §12): instruments allocate only
+    // at registration (leaked 'static inners, interned thread slots);
+    // the steady-state record path — span enter/exit, counter bumps,
+    // gauge moves, histogram records — is pure relaxed atomics. With the
+    // span gate forced on, the dense hot path must hold the exact same
+    // allocs/iter bar as with it off.
+    {
+        use layerpipe2::obs;
+        obs::set_enabled(true);
+
+        let mut ocfg = ExperimentConfig { epochs: 1, ..ExperimentConfig::default() };
+        ocfg.data.train_samples = 256;
+        ocfg.data.test_samples = 64;
+        let odata = teacher_dataset(&ocfg.model, &ocfg.data);
+        let backend: Backend = Arc::new(HostBackend::new());
+        let mut rng = Rng::new(1);
+        let mut trainer =
+            Trainer::new(backend, &ocfg, StrategyKind::PipelineAwareEma, &mut rng).unwrap();
+        let (xb, oh) = odata.train.batch(&(0..ocfg.model.batch).collect::<Vec<_>>());
+        let prime = 48usize;
+        let measure = 32usize;
+        let mut feed: Vec<(Tensor, Tensor)> =
+            (0..(prime + measure)).map(|_| (xb.clone(), oh.clone())).collect();
+        feed.reverse();
+        // Priming also registers every span label and this thread's slot,
+        // so the counted region sees only the record path.
+        for _ in 0..prime {
+            trainer.iteration(Some(feed.pop().expect("primed batch"))).unwrap();
+        }
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for _ in 0..measure {
+            trainer.iteration(Some(feed.pop().expect("measured batch"))).unwrap();
+        }
+        let total = ALLOCS.load(Ordering::Relaxed) - before;
+        let per_iter = total as f64 / measure as f64;
+        println!("obs on: {total} allocs over {measure} iters = {per_iter:.2}/iter");
+        assert!(
+            per_iter <= 4.0,
+            "span-instrumented hot path regressed to {per_iter:.2} allocs/iter \
+             (spans must be clock reads + relaxed atomics, no allocation)"
+        );
+
+        // The instruments themselves: registration may allocate (once),
+        // the record path must allocate exactly nothing.
+        let c = obs::counter("alloc_test/ctr");
+        let g = obs::gauge("alloc_test/gauge");
+        let h = obs::hist("alloc_test/hist");
+        c.inc();
+        g.set(1);
+        h.record_ns(10);
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for i in 0..1000u64 {
+            c.add(1);
+            g.add(1);
+            h.record_ns(i * 37);
+        }
+        let grew = ALLOCS.load(Ordering::Relaxed) - before;
+        assert_eq!(
+            grew, 0,
+            "registered instruments allocated on the record path ({grew} allocations \
+             over 3000 ops — counters/gauges/histograms must be pure atomics)"
+        );
+    }
 }

@@ -97,11 +97,33 @@ fn stress_one(name: &str, spec: &NetworkSpec, stages: usize) {
     for h in handles {
         h.join().unwrap_or_else(|e| std::panic::resume_unwind(e));
     }
+
+    // Telemetry acceptance: the submit→respond latency histogram saw
+    // every request (it is always on — not gated by LAYERPIPE2_OBS),
+    // its quantiles are ordered, and the legacy latency_ms() view agrees
+    // with the bucket floors.
+    let lat = server.latency_hist();
+    assert_eq!(lat.count, (n_clients * m) as u64, "{name}: latency sample count");
+    let (p50, p90, p99) = (lat.quantile_ns(0.50), lat.quantile_ns(0.90), lat.quantile_ns(0.99));
+    assert!(p50 > 0, "{name}: zero p50 latency");
+    assert!(p50 <= p90 && p90 <= p99, "{name}: latency quantiles out of order");
+    let (ms50, ms99) = server.latency_ms().expect("latency view empty after traffic");
+    assert_eq!((ms50, ms99), (p50 as f64 / 1e6, p99 as f64 / 1e6));
+
     let stats = server.shutdown().unwrap();
     assert_eq!(stats.submitted, (n_clients * m) as u64, "{name}: submit count");
     assert_eq!(stats.completed, (n_clients * m) as u64, "{name}: response count");
     assert_eq!(stats.dropped, 0, "{name}: dropped responses");
     assert!(stats.batches > 0 && stats.batches <= stats.submitted, "{name}: batch count");
+    // Queue-depth gauge: every submit was matched by a respond, so the
+    // level is back to zero; every emitted batch had exactly one flush
+    // reason.
+    assert_eq!(stats.queue_depth, 0, "{name}: queue gauge nonzero after drain");
+    assert_eq!(
+        stats.flush_full + stats.flush_shrank + stats.flush_force + stats.flush_wait,
+        stats.batches,
+        "{name}: flush reasons don't partition the batches"
+    );
 }
 
 #[test]

@@ -1,0 +1,156 @@
+//! Observability must not perturb numerics (DESIGN.md §12): training the
+//! threaded pipeline with the span gate off vs on must produce
+//! bitwise-identical final weights — obs reads clocks, it never branches
+//! on them. With the gate on, the per-stage span accounting must
+//! actually cover the stage wall time, and an armed Chrome-trace window
+//! must round-trip through `util::json` with monotonic per-thread
+//! timestamps.
+//!
+//! The obs gate is process-global, so this file holds a single `#[test]`
+//! that toggles it sequentially.
+
+use layerpipe2::backend::{Backend, HostBackend};
+use layerpipe2::config::{DataConfig, ExperimentConfig};
+use layerpipe2::data::teacher_dataset;
+use layerpipe2::layers::Network;
+use layerpipe2::obs;
+use layerpipe2::pipeline::PipelinedTrainer;
+use layerpipe2::strategy::StrategyKind;
+use layerpipe2::util::json::Json;
+use layerpipe2::util::Rng;
+use std::sync::Arc;
+
+fn tiny_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model.batch = 8;
+    cfg.model.input_dim = 12;
+    cfg.model.hidden_dim = 10;
+    cfg.model.classes = 4;
+    cfg.model.layers = 4;
+    cfg.pipeline.stages = 4;
+    cfg.epochs = 2;
+    cfg.data = DataConfig {
+        train_samples: 64,
+        test_samples: 32,
+        teacher_hidden: 8,
+        label_noise: 0.0,
+        seed: 3,
+    };
+    cfg
+}
+
+/// Train the threaded executor once and return the final network plus
+/// the telemetry window the run accumulated (empty when the gate is
+/// off) and the trainer itself (for `bubble_report`).
+fn train_once(cfg: &ExperimentConfig) -> (Network, obs::TelemetrySnapshot, PipelinedTrainer) {
+    let backend: Backend = Arc::new(HostBackend::new());
+    let data = teacher_dataset(&cfg.model, &cfg.data);
+    let before = obs::TelemetrySnapshot::capture();
+    let mut rng = Rng::new(1);
+    let mut trainer =
+        PipelinedTrainer::new(backend, cfg, StrategyKind::PipelineAwareEma, &mut rng).unwrap();
+    let mut batch_rng = Rng::new(5);
+    trainer.train(&data, &mut batch_rng).unwrap();
+    let window = obs::TelemetrySnapshot::capture().diff(&before);
+    (trainer.network().unwrap(), window, trainer)
+}
+
+#[test]
+fn obs_gate_is_bit_invisible_and_spans_cover_wall_time() {
+    let cfg = tiny_cfg();
+
+    // ---- gate off: no stage spans recorded -----------------------------
+    obs::set_enabled(false);
+    let (net_off, window_off, _) = train_once(&cfg);
+    assert!(
+        window_off.span("stage0", "pipeline/stage").map_or(true, |s| s.total_ns == 0),
+        "span timing leaked through a disabled gate"
+    );
+
+    // ---- gate on, trace armed ------------------------------------------
+    obs::set_enabled(true);
+    obs::trace_begin();
+    let (net_on, window_on, trainer) = train_once(&cfg);
+    let trace = obs::trace_end_to_json();
+
+    // Determinism: final weights bitwise identical across gate states.
+    assert_eq!(net_off.layers.len(), net_on.layers.len());
+    for (l, (a, b)) in net_off.layers.iter().zip(net_on.layers.iter()).enumerate() {
+        assert_eq!(a.w.shape(), b.w.shape(), "layer {l} weight shape changed");
+        assert!(
+            a.w.data().iter().zip(b.w.data()).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "layer {l} weights differ bitwise with obs on vs off"
+        );
+        assert!(
+            a.b.data().iter().zip(b.b.data()).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "layer {l} biases differ bitwise with obs on vs off"
+        );
+    }
+
+    // Bubble accounting: every stage has a wall span, the
+    // compute/recv/send/other breakdown sums to it (within the 5%
+    // acceptance bar; exact by construction today), and the shares are
+    // proper distributions.
+    let report = trainer.bubble_report(&window_on);
+    assert_eq!(report.len(), cfg.pipeline.stages);
+    let (mut predicted, mut measured) = (0.0f64, 0.0f64);
+    for b in &report {
+        assert!(b.wall_ns > 0, "stage {} recorded no wall span with obs on", b.stage);
+        assert!(b.compute_ns > 0, "stage {} recorded no compute spans", b.stage);
+        let parts = b.compute_ns + b.recv_ns + b.send_ns + b.other_ns;
+        let rel = (parts as f64 - b.wall_ns as f64).abs() / b.wall_ns as f64;
+        assert!(
+            rel <= 0.05,
+            "stage {}: breakdown {parts}ns vs wall {}ns ({:.1}% apart)",
+            b.stage,
+            b.wall_ns,
+            rel * 100.0
+        );
+        assert!(
+            (0.0..=1.0).contains(&b.bubble_fraction),
+            "stage {}: bubble fraction {} outside [0,1]",
+            b.stage,
+            b.bubble_fraction
+        );
+        predicted += b.predicted_share;
+        measured += b.measured_share;
+    }
+    assert!((predicted - 1.0).abs() < 1e-9, "predicted shares sum to {predicted}");
+    assert!((measured - 1.0).abs() < 1e-6, "measured shares sum to {measured}");
+
+    // The JSON export carries the span rows the report was built from.
+    let snap_json = window_on.to_json();
+    assert!(snap_json.get("spans").is_some(), "telemetry JSON lost its spans section");
+
+    // Chrome-trace round trip: serialized dump parses back through
+    // util::json, contains the stage spans, and per-thread timestamps
+    // are monotonically nondecreasing.
+    let parsed = Json::parse(&trace.to_string()).expect("trace dump must be valid JSON");
+    let events = parsed
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("trace dump lacks traceEvents");
+    let mut saw_stage_span = false;
+    let mut last_ts: std::collections::BTreeMap<i64, f64> = std::collections::BTreeMap::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).expect("event lacks ph");
+        if ph != "X" {
+            continue;
+        }
+        let name = ev.get("name").and_then(|n| n.as_str()).expect("event lacks name");
+        saw_stage_span |= name == "pipeline/stage";
+        let tid = ev.get("tid").and_then(|t| t.as_f64()).expect("event lacks tid") as i64;
+        let ts = ev.get("ts").and_then(|t| t.as_f64()).expect("event lacks ts");
+        assert!(
+            ev.get("dur").and_then(|d| d.as_f64()).expect("event lacks dur") >= 0.0,
+            "negative span duration in trace"
+        );
+        let prev = last_ts.entry(tid).or_insert(f64::NEG_INFINITY);
+        assert!(
+            ts >= *prev,
+            "trace timestamps regressed on tid {tid}: {ts} after {prev}"
+        );
+        *prev = ts;
+    }
+    assert!(saw_stage_span, "trace dump lost the pipeline/stage spans");
+}

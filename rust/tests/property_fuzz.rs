@@ -433,7 +433,12 @@ fn serving_coalescer_never_drops_duplicates_reorders_or_overfills() {
                 let seq = seqs[client as usize];
                 seqs[client as usize] += 1;
                 expect.push((client, seq, rows));
-                co.push(Request { client, seq, data: Tensor::zeros(&[rows, 1]) });
+                co.push(Request {
+                    client,
+                    seq,
+                    data: Tensor::zeros(&[rows, 1]),
+                    born: std::time::Instant::now(),
+                });
             }
             drain(&mut co, &mut got, false, &mut ticks_since_take);
         }

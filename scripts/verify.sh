@@ -41,6 +41,13 @@ grep -q '"mixed_precision"' BENCH_kernels.json \
     || { echo "verify: BENCH_kernels.json lacks the mixed_precision section"; exit 1; }
 test -s BENCH_serving.json || { echo "verify: BENCH_serving.json missing or empty"; exit 1; }
 test -s BENCH_ring.json || { echo "verify: BENCH_ring.json missing or empty"; exit 1; }
+# Observability overhead gate: the HOTPATH-j section must have run and
+# the span-gated dense hot path must stay within 2% of the obs-off
+# baseline (gate_ok is computed in-run by the bench).
+test -s BENCH_observability.json \
+    || { echo "verify: BENCH_observability.json missing or empty"; exit 1; }
+grep -q '"gate_ok":true' BENCH_observability.json \
+    || { echo "verify: observability overhead gate failed (see BENCH_observability.json)"; exit 1; }
 
 # Heterogeneous end-to-end smoke: conv+pool+dense and dense+LIF stacks
 # through the threaded executor with cost-balanced stages, asserting
