@@ -54,7 +54,13 @@ fn train_network(cfg: &ExperimentConfig, spec: &NetworkSpec, data: &Splits) -> N
 /// verify every response bitwise against the per-version oracle.
 fn serve_and_verify(name: &str, versions: &[Network], clients: usize, per_client: usize) {
     let in_dim = versions[0].input_dim();
-    let cfg = ServerConfig { max_batch: 8, max_wait_ticks: 2, shrink_under: 0, queue_depth: 32, stages: 2 };
+    let cfg = ServerConfig {
+        max_batch: 8,
+        max_wait_ticks: 2,
+        queue_depth: 32,
+        stages: 2,
+        ..ServerConfig::default()
+    };
     let server = Server::start(backend(), &versions[0], &cfg).expect("server start");
     println!(
         "  serving {name}: stages {:?}, {clients} clients x {per_client} requests",
@@ -121,7 +127,13 @@ fn serve_and_verify(name: &str, versions: &[Network], clients: usize, per_client
 /// Disk roundtrip: a checkpoint written from `net` and hot-reloaded from
 /// the file must serve bitwise like `net` itself.
 fn checkpoint_roundtrip(net: &Network, in_dim: usize) {
-    let cfg = ServerConfig { max_batch: 4, max_wait_ticks: 0, shrink_under: 0, queue_depth: 8, stages: 2 };
+    let cfg = ServerConfig {
+        max_batch: 4,
+        max_wait_ticks: 0,
+        queue_depth: 8,
+        stages: 2,
+        ..ServerConfig::default()
+    };
     // Start from *different* weights so the reload is observable.
     let spec = NetworkSpec {
         input: net.input.clone(),

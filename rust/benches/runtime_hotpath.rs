@@ -712,7 +712,13 @@ fn serving_section(smoke: bool) -> Json {
         let server = Server::start(
             Arc::new(HostBackend::new()),
             &net,
-            &ServerConfig { max_batch: mb, max_wait_ticks: 2, shrink_under: 0, queue_depth: 64, stages: 2 },
+            &ServerConfig {
+                max_batch: mb,
+                max_wait_ticks: 2,
+                queue_depth: 64,
+                stages: 2,
+                ..ServerConfig::default()
+            },
         )
         .expect("server start");
         let req_rows = (mb / 2).max(1);
@@ -761,6 +767,94 @@ fn serving_section(smoke: bool) -> Json {
         ]));
     }
     Json::Arr(rows_out)
+}
+
+/// HOTPATH-g2: AIMD adaptive batching — the same serving workload with
+/// the p99-driven controller on, against an aggressive latency target so
+/// the backoff path actually runs. Written into `BENCH_serving.json`
+/// under `"adaptive"` (gated by `verify.sh`). Responses stay verified
+/// bitwise against the sequential oracle — the controller only moves
+/// batch-formation limits, never payloads — and the final limits must
+/// sit inside the configured clamps.
+fn adaptive_section(smoke: bool) -> Json {
+    print_header("HOTPATH-g2: AIMD adaptive batching (p99-driven limits, oracle-verified)");
+    let mcfg = ModelConfig {
+        batch: 32,
+        input_dim: 64,
+        hidden_dim: 64,
+        classes: 10,
+        layers: 4,
+        init_scale: 1.0,
+    };
+    let net = Network::build(&NetworkSpec::mlp(&mcfg), &mut Rng::new(31)).unwrap();
+    let be = HostBackend::new();
+    let mut oracle = net.snapshot().unwrap();
+    let cfg = ServerConfig {
+        max_batch: 16,
+        max_wait_ticks: 4,
+        queue_depth: 64,
+        stages: 2,
+        adaptive: true,
+        // Aggressive target: steady traffic overshoots it, so the
+        // multiplicative-decrease path is exercised, not just idled.
+        adapt_target_p99_ms: 0.05,
+        adapt_min_batch: 2,
+        adapt_min_wait_ticks: 0,
+        ..ServerConfig::default()
+    };
+    let server = Server::start(Arc::new(HostBackend::new()), &net, &cfg).expect("server start");
+    let inputs = vec![Tensor::randn(&[4, mcfg.input_dim], 1.0, &mut Rng::new(7))];
+    let expected = vec![vec![oracle.forward_full(&be, &inputs[0]).unwrap()]];
+    let n_clients = 2usize;
+    let per_client = if smoke { 200 } else { 2000 };
+
+    let sw = std::time::Instant::now();
+    std::thread::scope(|s| {
+        let inputs = &inputs;
+        let expected = &expected;
+        for _ in 0..n_clients {
+            let mut cl = server.client();
+            s.spawn(move || {
+                layerpipe2::serving::drive_and_verify(&mut cl, inputs, expected, |_| 0, per_client, 8)
+                    .expect("adaptive serving must stay bitwise == the sequential oracle");
+            });
+        }
+    });
+    let elapsed = sw.elapsed().as_secs_f64();
+    let total = (n_clients * per_client) as f64;
+    let (p50, p99) = server.latency_ms().unwrap_or((0.0, 0.0));
+    let (fin_batch, fin_wait) =
+        server.adaptive_limits().expect("adaptive server must expose its limits");
+    assert!(
+        (cfg.adapt_min_batch..=cfg.max_batch).contains(&fin_batch)
+            && (cfg.adapt_min_wait_ticks..=cfg.max_wait_ticks).contains(&fin_wait),
+        "adaptive limits ({fin_batch}, {fin_wait}) escaped the configured clamps"
+    );
+    let stats = server.shutdown().expect("shutdown");
+    assert_eq!(stats.completed, total as u64, "adaptive serving dropped responses");
+    println!(
+        "  adaptive: {:>9.0} req/s  batch p50 {p50:.3}ms p99 {p99:.3}ms  \
+         final limits (max_batch {fin_batch}, max_wait_ticks {fin_wait}) \
+         within [{}..={}] x [{}..={}]",
+        total / elapsed,
+        cfg.adapt_min_batch,
+        cfg.max_batch,
+        cfg.adapt_min_wait_ticks,
+        cfg.max_wait_ticks
+    );
+    jobj(vec![
+        ("requests_per_sec", jnum(total / elapsed)),
+        ("batch_p50_ms", jnum(p50)),
+        ("batch_p99_ms", jnum(p99)),
+        ("target_p99_ms", jnum(cfg.adapt_target_p99_ms)),
+        ("final_max_batch", jnum(fin_batch as f64)),
+        ("final_max_wait_ticks", jnum(fin_wait as f64)),
+        ("min_batch", jnum(cfg.adapt_min_batch as f64)),
+        ("max_batch", jnum(cfg.max_batch as f64)),
+        ("min_wait_ticks", jnum(cfg.adapt_min_wait_ticks as f64)),
+        ("max_wait_ticks", jnum(cfg.max_wait_ticks as f64)),
+        ("batches", jnum(stats.batches as f64)),
+    ])
 }
 
 /// HOTPATH-h: weight-ring replica scaling — samples/sec and scaling
@@ -915,7 +1009,13 @@ fn observability_section(smoke: bool) -> Json {
         let server = Server::start(
             Arc::new(HostBackend::new()),
             &net,
-            &ServerConfig { max_batch: 8, max_wait_ticks: 2, shrink_under: 0, queue_depth: 64, stages: 2 },
+            &ServerConfig {
+                max_batch: 8,
+                max_wait_ticks: 2,
+                queue_depth: 64,
+                stages: 2,
+                ..ServerConfig::default()
+            },
         )
         .expect("server start");
         let inputs = vec![Tensor::randn(&[4, mcfg.input_dim], 1.0, &mut Rng::new(7))];
@@ -973,6 +1073,7 @@ fn main() {
     let train = train_iteration_section(smoke);
     let executor = executor_pool_section(smoke);
     let serving = serving_section(smoke);
+    let adaptive = adaptive_section(smoke);
     let ring = ring_section(smoke);
     let observability = observability_section(smoke);
 
@@ -1019,6 +1120,7 @@ fn main() {
     sobj.insert("bench".to_string(), Json::Str("runtime_hotpath/serving".to_string()));
     sobj.insert("smoke".to_string(), Json::Bool(smoke));
     sobj.insert("serving".to_string(), serving);
+    sobj.insert("adaptive".to_string(), adaptive);
     let spath = std::env::var("LAYERPIPE2_BENCH_SERVING_JSON")
         .unwrap_or_else(|_| "BENCH_serving.json".to_string());
     std::fs::write(&spath, Json::Obj(sobj).to_string()).expect("write serving bench json");

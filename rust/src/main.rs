@@ -10,6 +10,7 @@
 //! layerpipe2 throughput [--stages 1,2,4,8] [--batches B] [--artifacts DIR]
 //! layerpipe2 serve   [--clients N] [--requests M] [--rows R] [--max-batch B]
 //!                    [--wait-ticks T] [--stages K] [--reloads X] [--checkpoint F]
+//! layerpipe2 soak    [--seed N] [--smoke] [--json PATH]
 //! layerpipe2 train-ring [--replicas 1,2,4] [--shards S] [--strategy S]
 //!                    [--epochs N] [--stages K] [--seed N]
 //! layerpipe2 stats   [--strategy S] [--epochs N] [--stages K] [--json PATH]
@@ -140,6 +141,11 @@ fn run(argv: &[String]) -> Result<()> {
         print_usage();
         return Ok(());
     };
+    if cmd == "soak" {
+        // `soak` takes bare flags (`--smoke`), which the `--key value`
+        // parser cannot express; it parses its own argv.
+        return cmd_soak(&argv[1..]);
+    }
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
         "train" => cmd_train(&args),
@@ -183,6 +189,13 @@ COMMANDS:
               --clients N --requests M --rows R --max-batch B
               --wait-ticks T --stages K --reloads X --checkpoint F
               (responses verified bitwise vs the sequential oracle)
+  soak        deterministic serving chaos/soak harness: client churn,
+              slow clients, reload storms, saturation bursts, injected
+              stage stalls — asserts zero lost/duplicated/reordered
+              accepted responses and bitwise payloads
+              --seed N --smoke --json PATH (merges a \"soak\" section
+              into BENCH_serving.json; LAYERPIPE2_BENCH_SERVING_JSON
+              overrides the default path)
   train-ring  2D (pipeline x data) training on the weight ring
               --replicas 1,2,4 --shards S --strategy S --epochs N
               --stages K --seed N --dtype f32|bf16
@@ -422,7 +435,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
 
-    let cfg = ServerConfig { max_batch, max_wait_ticks: wait_ticks, shrink_under: 0, queue_depth: 64, stages };
+    let cfg = ServerConfig {
+        max_batch,
+        max_wait_ticks: wait_ticks,
+        shrink_under: 0,
+        queue_depth: 64,
+        stages,
+        ..ServerConfig::default()
+    };
     let server = Server::start(backend.clone(), &versions[0], &cfg)?;
     println!(
         "serving: backend {}  {} stages  partition {:?}",
@@ -491,10 +511,160 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.queue_depth
     );
     println!(
+        "survival: rejected rate/budget {}/{}  shed deadline/backpressure/shutdown {}/{}/{}  late {}  faults {}",
+        stats.rejected_rate,
+        stats.rejected_budget,
+        stats.shed_deadline,
+        stats.shed_backpressure,
+        stats.shed_shutdown,
+        stats.late,
+        stats.faults_injected
+    );
+    println!(
         "reloads {}  pool {}h/{}m  (all responses bitwise == oracle)",
         stats.reloads, stats.pool_hits, stats.pool_misses
     );
     Ok(())
+}
+
+/// Deterministic serving chaos/soak harness (see `serving::chaos`).
+/// Flags: `--seed N`, `--smoke` (CI-sized run), `--json PATH` (report
+/// destination; default `BENCH_serving.json`, overridable with
+/// `LAYERPIPE2_BENCH_SERVING_JSON`). The report is merged into the
+/// bench file as a `"soak"` section, preserving other sections.
+fn cmd_soak(argv: &[String]) -> Result<()> {
+    let mut smoke = false;
+    let mut seed: u64 = 0xC0FFEE;
+    let mut json_path: Option<String> = None;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--smoke" => {
+                smoke = true;
+                i += 1;
+            }
+            "--seed" => {
+                let v = argv.get(i + 1).context("--seed needs a value")?;
+                seed = v.parse().with_context(|| format!("--seed expects an integer, got '{v}'"))?;
+                i += 2;
+            }
+            "--json" => {
+                json_path = Some(argv.get(i + 1).context("--json needs a path")?.clone());
+                i += 2;
+            }
+            other => bail!("unknown soak flag '{other}' (expected --seed N, --smoke, --json PATH)"),
+        }
+    }
+    let cfg = layerpipe2::serving::chaos::SoakConfig { seed, smoke };
+    println!("soak: seed {seed}  mode {}", if smoke { "smoke" } else { "full" });
+    let report = layerpipe2::serving::chaos::run_soak(&cfg)?;
+    println!(
+        "{:<14} {:>9} {:>9} {:>8} {:>8} {:>6} {:>6} {:>7} {:>7}",
+        "scenario", "submitted", "completed", "dropped", "rejected", "shed", "late", "faults", "reloads"
+    );
+    for s in &report.scenarios {
+        println!(
+            "{:<14} {:>9} {:>9} {:>8} {:>8} {:>6} {:>6} {:>7} {:>7}",
+            s.name, s.submitted, s.completed, s.dropped, s.rejected, s.shed, s.late, s.faults, s.reloads
+        );
+    }
+    println!(
+        "steady state: {:.0} req/s  p50 {:.3}ms  p99 {:.3}ms",
+        report.req_per_s, report.p50_ms, report.p99_ms
+    );
+    println!(
+        "invariants: lost {}  duplicated {}  reordered {}  (payloads bitwise == pinned-epoch oracle)",
+        report.lost, report.duplicated, report.reordered
+    );
+    let path = json_path
+        .or_else(|| std::env::var("LAYERPIPE2_BENCH_SERVING_JSON").ok().filter(|p| !p.is_empty()))
+        .unwrap_or_else(|| "BENCH_serving.json".to_string());
+    merge_json_section(&path, "soak", &report.to_json())?;
+    println!("soak report merged into {path} (\"soak\" section)");
+    Ok(())
+}
+
+/// Set `key` to `value` (a serialized JSON value) inside the top-level
+/// JSON object stored at `path`, preserving every other section —
+/// creates the file as `{"key":value}` when missing or empty. The
+/// splice is a balanced scan, not a full parser: enough to make
+/// repeated soak runs idempotent against the bench writer's output.
+fn merge_json_section(path: &str, key: &str, value: &str) -> Result<()> {
+    let body = std::fs::read_to_string(path).unwrap_or_default();
+    let merged = splice_json_key(&body, key, value)?;
+    std::fs::write(path, merged).with_context(|| format!("writing {path}"))?;
+    Ok(())
+}
+
+fn splice_json_key(body: &str, key: &str, value: &str) -> Result<String> {
+    let trimmed = body.trim();
+    if trimmed.is_empty() {
+        return Ok(format!("{{\"{key}\":{value}}}\n"));
+    }
+    anyhow::ensure!(
+        trimmed.starts_with('{') && trimmed.ends_with('}'),
+        "cannot merge into non-object JSON"
+    );
+    let needle = format!("\"{key}\"");
+    if let Some(kpos) = trimmed.find(&needle) {
+        // Replace the existing value: skip whitespace + ':', then a
+        // balanced JSON value.
+        let mut vstart = kpos + needle.len();
+        let bytes = trimmed.as_bytes();
+        while vstart < bytes.len() && (bytes[vstart].is_ascii_whitespace() || bytes[vstart] == b':')
+        {
+            vstart += 1;
+        }
+        let vlen = json_value_len(&trimmed[vstart..])?;
+        Ok(format!("{}{}{}", &trimmed[..vstart], value, &trimmed[vstart + vlen..]))
+    } else {
+        let head = trimmed[..trimmed.len() - 1].trim_end();
+        let sep = if head.ends_with('{') { "" } else { "," };
+        Ok(format!("{head}{sep}\"{key}\":{value}}}"))
+    }
+}
+
+/// Length of the JSON value at the start of `s` (strings, nested
+/// objects/arrays, or scalars up to a top-level ',' or closing
+/// brace/bracket).
+fn json_value_len(s: &str) -> Result<usize> {
+    let bytes = s.as_bytes();
+    let mut depth = 0i64;
+    let mut in_str = false;
+    let mut esc = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        let c = b as char;
+        if in_str {
+            if esc {
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                in_str = false;
+                if depth == 0 && i > 0 && bytes[0] == b'"' {
+                    return Ok(i + 1);
+                }
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '{' | '[' => depth += 1,
+            '}' | ']' => {
+                if depth == 0 {
+                    return Ok(i); // closing brace of the enclosing object
+                }
+                depth -= 1;
+                if depth == 0 && matches!(bytes[0], b'{' | b'[') {
+                    return Ok(i + 1);
+                }
+            }
+            ',' if depth == 0 => return Ok(i),
+            _ => {}
+        }
+    }
+    anyhow::ensure!(depth == 0 && !in_str, "unbalanced JSON value");
+    Ok(s.len())
 }
 
 /// Weight-ring replica training demo: run the same workload at each
@@ -687,6 +857,32 @@ mod tests {
         let a = args(&["--epochs", "many"]);
         assert!(a.usize_or("epochs", 1).is_err());
         assert!(args(&["--mu", "x"]).f64_or("mu", 0.1).is_err());
+    }
+
+    #[test]
+    fn json_splice_inserts_updates_and_preserves() {
+        // Empty/missing file: a fresh one-key object.
+        assert_eq!(
+            super::splice_json_key("", "soak", "{\"lost\":0}").unwrap(),
+            "{\"soak\":{\"lost\":0}}\n"
+        );
+        // Insert alongside existing sections.
+        let merged = super::splice_json_key("{\"gate_ok\":true}", "soak", "{\"lost\":0}").unwrap();
+        assert_eq!(merged, "{\"gate_ok\":true,\"soak\":{\"lost\":0}}");
+        // Replace in place (idempotent reruns); braces inside strings
+        // must not confuse the scan.
+        let twice =
+            super::splice_json_key(&merged, "soak", "{\"lost\":1,\"s\":\"a}b\"}").unwrap();
+        assert_eq!(twice, "{\"gate_ok\":true,\"soak\":{\"lost\":1,\"s\":\"a}b\"}}");
+        // Object → scalar and a spaced writer style both splice cleanly.
+        let back = super::splice_json_key(&twice, "soak", "7").unwrap();
+        assert_eq!(back, "{\"gate_ok\":true,\"soak\":7}");
+        let spaced =
+            super::splice_json_key("{\"soak\": {\"x\": [1,2]}, \"other\": 3}", "soak", "9")
+                .unwrap();
+        assert_eq!(spaced, "{\"soak\": 9, \"other\": 3}");
+        // Only top-level objects are mergeable.
+        assert!(super::splice_json_key("[1,2]", "k", "1").is_err());
     }
 }
 

@@ -623,6 +623,21 @@ impl HistSnapshot {
             self.sum_ns / self.count
         }
     }
+
+    /// The change since `earlier` (saturating, bucket-wise): windowed
+    /// quantiles for consumers that sample a live histogram
+    /// periodically — the serving AIMD batch controller diffs
+    /// consecutive snapshots so its p99 reflects *recent* requests, not
+    /// the full history.
+    pub fn since(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        let mut d = self.clone();
+        d.count = d.count.saturating_sub(earlier.count);
+        d.sum_ns = d.sum_ns.saturating_sub(earlier.sum_ns);
+        for (b, eb) in d.buckets.iter_mut().zip(&earlier.buckets) {
+            *b = b.saturating_sub(*eb);
+        }
+        d
+    }
 }
 
 /// One (thread, label) span aggregate at a point in time.
@@ -712,14 +727,10 @@ impl TelemetrySnapshot {
             .hists
             .iter()
             .map(|(k, h)| {
-                let mut d = h.clone();
-                if let Some(e) = earlier.hists.get(k) {
-                    d.count = d.count.saturating_sub(e.count);
-                    d.sum_ns = d.sum_ns.saturating_sub(e.sum_ns);
-                    for (b, eb) in d.buckets.iter_mut().zip(&e.buckets) {
-                        *b = b.saturating_sub(*eb);
-                    }
-                }
+                let d = match earlier.hists.get(k) {
+                    Some(e) => h.since(e),
+                    None => h.clone(),
+                };
                 (k.clone(), d)
             })
             .collect();

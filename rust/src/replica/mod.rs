@@ -74,6 +74,41 @@ static LINK_BYTES: obs::LazyCounter = obs::LazyCounter::new("ring/link_bytes");
 /// analogue; the blocked time itself lands in the `ring/recv` span).
 static LINK_STALLS: obs::LazyCounter = obs::LazyCounter::new("ring/stalls");
 
+/// `LAYERPIPE2_FAULT_RING=<seed>`: chaos hook — every ring participant
+/// injects short seeded stalls at the top of its link phase (the same
+/// discipline as the serving `fault_stall_seed` knob). Stalls reorder
+/// *time* only: the lockstep protocol and ordered channels mean final
+/// weights stay bitwise identical to an un-faulted run, and the replica
+/// tests assert exactly that. `0`, unset, or unparseable = off.
+pub const FAULT_RING_ENV: &str = "LAYERPIPE2_FAULT_RING";
+
+/// Stalls injected by the `LAYERPIPE2_FAULT_RING` hook.
+static RING_FAULTS: obs::LazyCounter = obs::LazyCounter::new("ring/faults_injected");
+
+fn fault_ring_seed() -> u64 {
+    std::env::var(FAULT_RING_ENV).ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+}
+
+/// One ring participant's stall injector, seeded per participant so the
+/// schedule is reproducible for a given seed and replica count.
+struct LinkFault(Option<Rng>);
+
+impl LinkFault {
+    fn new(seed: u64, participant: u64) -> LinkFault {
+        LinkFault((seed != 0).then(|| Rng::new(seed.wrapping_add(participant))))
+    }
+
+    /// Maybe sleep 50–500µs (seeded, 25% of iterations). Time-only.
+    fn maybe_stall(&mut self) {
+        if let Some(rng) = self.0.as_mut() {
+            if rng.chance(0.25) {
+                RING_FAULTS.inc();
+                std::thread::sleep(std::time::Duration::from_micros(50 + rng.below(450)));
+            }
+        }
+    }
+}
+
 /// Upper bound on the shard-lane count: the elementwise combine keeps
 /// its partials in a stack array of this size.
 pub const MAX_SHARDS: usize = 64;
@@ -761,6 +796,7 @@ fn train_ring_threaded(
     let lanes_per = ring.lanes_per_replica();
     let shard_rows = cfg.model.batch / ring.shards;
     let inv = 1.0 / ring.shards as f32;
+    let fault_seed = fault_ring_seed();
 
     // Coordinator block (lanes 0..lanes_per) lives on the calling thread.
     let (mut coord, mut coord_rng) =
@@ -790,10 +826,12 @@ fn train_ring_threaded(
                 }
                 let (mut block, mut rng) =
                     build_block(backend, cfg, spec, kind, first, lanes_per, shard_rows)?;
+                let mut fault = LinkFault::new(fault_seed, r as u64);
                 let mut step = |block: &mut LaneBlock,
                                 idx: Option<&[usize]>,
                                 train: &Dataset|
                  -> Result<()> {
+                    fault.maybe_stall();
                     block.compute(idx, train, |j, buf| {
                         LINK_BYTES.add(buf.nbytes() as u64);
                         gtx.send((j, buf)).map_err(|_| anyhow!("ring torn down (coordinator gone)"))
@@ -819,10 +857,12 @@ fn train_ring_threaded(
             }));
         }
 
+        let mut coord_fault = LinkFault::new(fault_seed, 0);
         let mut step = |block: &mut LaneBlock,
                         idx: Option<&[usize]>,
                         train: &Dataset|
          -> Result<()> {
+            coord_fault.maybe_stall();
             block.compute(idx, train, |j, buf| {
                 slots[j] = buf;
                 Ok(())

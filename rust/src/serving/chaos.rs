@@ -1,0 +1,585 @@
+//! Deterministic fault-injection + soak harness for the serving
+//! survival layer.
+//!
+//! Five scripted scenarios — client churn, a slow (backpressured)
+//! client, a hot-reload storm, admission-controlled saturation bursts,
+//! and injected stage-worker stalls — all driven by one seeded
+//! [`Rng`](crate::util::Rng). Every scenario asserts the survival
+//! invariants the ISSUE names:
+//!
+//! * **zero lost**: every accepted request gets exactly one terminal
+//!   response (payload or shed notice) — checked both on the wire
+//!   (gapless per-client seq streams) and against the obs counters
+//!   (`submitted == completed + dropped + shed_deadline +
+//!   shed_shutdown`, `queue_depth == 0` after shutdown);
+//! * **zero duplicated / reordered**: the per-client seq stream is
+//!   strictly `0, 1, 2, …` in receive order;
+//! * **bitwise payloads**: every payload equals the sequential oracle
+//!   of exactly the weight epoch that served it;
+//! * **exact accounting**: rejects and sheds observed by the driver
+//!   match the obs counters one for one (where the driver can observe
+//!   them synchronously).
+//!
+//! Faults are *time-only* by construction (stalls reorder wall time,
+//! never data; deadlines and sheds are decided on the batcher's tick
+//! clock), so the invariants hold on every run — the harness is a soak,
+//! not a flake generator. Wall-clock throughput and latency quantiles
+//! are measured for the report only; nothing branches on them.
+
+use super::{
+    drive_and_verify, drive_and_verify_shed, Response, Server, ServerConfig, ServingClient,
+    ServingStats, Status, SubmitVerdict,
+};
+use crate::backend::{Backend, HostBackend};
+use crate::config::ModelConfig;
+use crate::layers::{Network, NetworkSpec};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Soak harness configuration. `smoke` shrinks every scenario to a
+/// CI-sized run (sub-second) without changing any invariant checked.
+#[derive(Clone, Copy, Debug)]
+pub struct SoakConfig {
+    /// Seed for every scripted decision (inputs, churn order, stalls).
+    pub seed: u64,
+    /// Small sizes for CI gates; `false` is the full soak.
+    pub smoke: bool,
+}
+
+impl Default for SoakConfig {
+    fn default() -> SoakConfig {
+        SoakConfig { seed: 0xC0FFEE, smoke: false }
+    }
+}
+
+/// Per-scenario outcome. `lost`/`duplicated`/`reordered` are always 0
+/// on success — a violation fails the soak with an error instead of
+/// reporting a nonzero count, so a passing report *is* the invariant.
+#[derive(Clone, Debug, Default)]
+pub struct ScenarioReport {
+    pub name: &'static str,
+    pub submitted: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub rejected: u64,
+    pub shed: u64,
+    pub late: u64,
+    pub faults: u64,
+    pub reloads: u64,
+    pub lost: u64,
+    pub duplicated: u64,
+    pub reordered: u64,
+}
+
+impl ScenarioReport {
+    fn from_stats(name: &'static str, stats: &ServingStats) -> ScenarioReport {
+        ScenarioReport {
+            name,
+            submitted: stats.submitted,
+            completed: stats.completed,
+            dropped: stats.dropped,
+            rejected: stats.rejected_rate + stats.rejected_budget,
+            shed: stats.shed_deadline + stats.shed_shutdown + stats.shed_backpressure,
+            late: stats.late,
+            faults: stats.faults_injected,
+            reloads: stats.reloads,
+            lost: 0,
+            duplicated: 0,
+            reordered: 0,
+        }
+    }
+
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"submitted\":{},\"completed\":{},\"dropped\":{},\
+             \"rejected\":{},\"shed\":{},\"late\":{},\"faults\":{},\"reloads\":{},\
+             \"lost\":{},\"duplicated\":{},\"reordered\":{}}}",
+            self.name,
+            self.submitted,
+            self.completed,
+            self.dropped,
+            self.rejected,
+            self.shed,
+            self.late,
+            self.faults,
+            self.reloads,
+            self.lost,
+            self.duplicated,
+            self.reordered
+        )
+    }
+}
+
+/// The whole soak: per-scenario reports plus an aggregate steady-state
+/// throughput/latency measurement (wall-clock, report-only).
+#[derive(Clone, Debug)]
+pub struct SoakReport {
+    pub seed: u64,
+    pub smoke: bool,
+    pub scenarios: Vec<ScenarioReport>,
+    pub req_per_s: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub lost: u64,
+    pub duplicated: u64,
+    pub reordered: u64,
+}
+
+impl SoakReport {
+    /// The `"soak"` section of `BENCH_serving.json` (verify.sh greps
+    /// for `"lost":0` and `"duplicated":0` — keys carry no spaces).
+    pub fn to_json(&self) -> String {
+        let scenarios: Vec<String> = self.scenarios.iter().map(|s| s.to_json()).collect();
+        format!(
+            "{{\"seed\":{},\"smoke\":{},\"lost\":{},\"duplicated\":{},\"reordered\":{},\
+             \"req_per_s\":{:.1},\"p50_ms\":{:.3},\"p99_ms\":{:.3},\"scenarios\":[{}]}}",
+            self.seed,
+            self.smoke,
+            self.lost,
+            self.duplicated,
+            self.reordered,
+            self.req_per_s,
+            self.p50_ms,
+            self.p99_ms,
+            scenarios.join(",")
+        )
+    }
+}
+
+/// Run every scenario plus the steady-state measurement. Any invariant
+/// violation (lost, duplicated, reordered, accounting drift, non-bitwise
+/// payload) is an `Err` — a returned report always carries zeros.
+pub fn run_soak(cfg: &SoakConfig) -> Result<SoakReport> {
+    let scenarios = vec![
+        scenario_churn(cfg)?,
+        scenario_slow_client(cfg)?,
+        scenario_reload_storm(cfg)?,
+        scenario_saturation(cfg)?,
+        scenario_stage_stall(cfg)?,
+    ];
+    let (req_per_s, p50_ms, p99_ms) = measure_steady_state(cfg)?;
+    let lost = scenarios.iter().map(|s| s.lost).sum();
+    let duplicated = scenarios.iter().map(|s| s.duplicated).sum();
+    let reordered = scenarios.iter().map(|s| s.reordered).sum();
+    ensure!(
+        lost == 0 && duplicated == 0 && reordered == 0,
+        "soak invariants violated: lost={lost} duplicated={duplicated} reordered={reordered}"
+    );
+    Ok(SoakReport {
+        seed: cfg.seed,
+        smoke: cfg.smoke,
+        scenarios,
+        req_per_s,
+        p50_ms,
+        p99_ms,
+        lost,
+        duplicated,
+        reordered,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Shared fixtures.
+// ---------------------------------------------------------------------------
+
+const IN_DIM: usize = 16;
+
+fn mcfg() -> ModelConfig {
+    ModelConfig { batch: 8, input_dim: IN_DIM, hidden_dim: 12, classes: 6, layers: 3, init_scale: 1.0 }
+}
+
+fn build_net(seed: u64) -> Result<Network> {
+    Network::build(&NetworkSpec::mlp(&mcfg()), &mut Rng::new(seed))
+}
+
+fn host() -> Backend {
+    Arc::new(HostBackend::new())
+}
+
+/// Seeded request inputs, `1..=3` rows each (every scenario config keeps
+/// `max_batch >= 4`, so any of them fits any batch).
+fn inputs_for(rng: &mut Rng, n: usize) -> Vec<Tensor> {
+    (0..n).map(|_| Tensor::randn(&[1 + rng.below(3) as usize, IN_DIM], 1.0, rng)).collect()
+}
+
+/// Sequential-oracle outputs of `net` for each input (one epoch).
+fn oracle_outputs(net: &Network, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let be = HostBackend::new();
+    let mut oracle = net.snapshot()?;
+    inputs.iter().map(|x| oracle.forward_full(&be, x)).collect()
+}
+
+/// The terminal accounting identity every scenario must end in: no
+/// request in limbo, every accepted request exactly one terminal event.
+fn check_terminal_identity(name: &str, stats: &ServingStats) -> Result<()> {
+    ensure!(stats.queue_depth == 0, "{name}: {} requests left in limbo", stats.queue_depth);
+    ensure!(
+        stats.submitted
+            == stats.completed + stats.dropped + stats.shed_deadline + stats.shed_shutdown,
+        "{name}: terminal accounting broken: {stats:?}"
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Scenarios.
+// ---------------------------------------------------------------------------
+
+/// Client churn: short-lived clients come and go, some submitting and
+/// vanishing without ever reading a response (dead clients). Live
+/// clients verify FIFO + bitwise payloads; dead clients' responses must
+/// be accounted as `dropped`, never leaked or delivered to a stranger.
+fn scenario_churn(cfg: &SoakConfig) -> Result<ScenarioReport> {
+    let (rounds, reqs) = if cfg.smoke { (3, 6) } else { (10, 16) };
+    let net = build_net(cfg.seed ^ 0x01)?;
+    let mut rng = Rng::new(cfg.seed ^ 0x0101);
+    let inputs = inputs_for(&mut rng, 8);
+    let expected = vec![oracle_outputs(&net, &inputs)?];
+    let scfg = ServerConfig {
+        max_batch: 8,
+        max_wait_ticks: 2,
+        queue_depth: 32,
+        stages: 2,
+        ..ServerConfig::default()
+    };
+    let server = Server::start(host(), &net, &scfg)?;
+    for round in 0..rounds {
+        let mut cl = server.client();
+        let skew = rng.below(inputs.len() as u64) as usize;
+        drive_and_verify(&mut cl, &inputs, &expected, |i| (i + skew) % inputs.len(), reqs, 4)?;
+        drop(cl);
+        if round % 2 == 1 {
+            // A dead client: submits, then vanishes mid-flight.
+            let mut dead = server.client();
+            for k in 0..3usize {
+                let j = (round + k) % inputs.len();
+                let mut x = dead.take(inputs[j].shape());
+                x.copy_from(&inputs[j]);
+                dead.submit(x)?;
+            }
+            drop(dead);
+        }
+    }
+    let stats = server.shutdown()?;
+    check_terminal_identity("churn", &stats)?;
+    Ok(ScenarioReport::from_stats("churn", &stats))
+}
+
+/// One slow client: it submits a burst and reads nothing until every
+/// response has landed in its bounded queue. The oldest payloads must
+/// be stripped to `Backpressure` notices — gapless seq stream, bounded
+/// memory, survivors still bitwise.
+fn scenario_slow_client(cfg: &SoakConfig) -> Result<ScenarioReport> {
+    let n: usize = if cfg.smoke { 10 } else { 48 };
+    let cap: usize = 4;
+    let net = build_net(cfg.seed ^ 0x02)?;
+    let mut rng = Rng::new(cfg.seed ^ 0x0202);
+    let inputs = inputs_for(&mut rng, 8);
+    let expected = oracle_outputs(&net, &inputs)?;
+    let scfg = ServerConfig {
+        max_batch: 4,
+        max_wait_ticks: 1,
+        queue_depth: 16,
+        stages: 2,
+        client_queue_cap: cap,
+        ..ServerConfig::default()
+    };
+    let server = Server::start(host(), &net, &scfg)?;
+    let mut cl = server.client();
+    let mut js = Vec::with_capacity(n);
+    for _ in 0..n {
+        let j = rng.below(inputs.len() as u64) as usize;
+        let mut x = cl.take(inputs[j].shape());
+        x.copy_from(&inputs[j]);
+        cl.submit(x)?;
+        js.push(j);
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.stats().completed < n as u64 {
+        ensure!(Instant::now() < deadline, "slow_client: server wedged draining the burst");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let mut notices = 0u64;
+    for (i, &j) in js.iter().enumerate() {
+        let r = cl
+            .poll()
+            .ok_or_else(|| anyhow::anyhow!("slow_client: seq {i} missing (lost response)"))?;
+        ensure!(r.seq == i as u64, "slow_client: reordered at {i} (got seq {})", r.seq);
+        match r.status {
+            Status::Shed(super::ShedReason::Backpressure) => notices += 1,
+            _ => {
+                ensure!(r.data == expected[j], "slow_client: payload {i} not bitwise");
+                cl.recycle(r.data);
+            }
+        }
+    }
+    ensure!(cl.poll().is_none(), "slow_client: duplicated responses");
+    let stats = server.shutdown()?;
+    check_terminal_identity("slow_client", &stats)?;
+    ensure!(
+        stats.shed_backpressure == notices && notices == (n - cap) as u64,
+        "slow_client: expected {} strips, saw {notices} (counter {})",
+        n - cap,
+        stats.shed_backpressure
+    );
+    Ok(ScenarioReport::from_stats("slow_client", &stats))
+}
+
+/// Hot-reload storm: weight swaps race in-flight traffic. Every payload
+/// must match the oracle of exactly the epoch that served it, and
+/// epochs observed by one client never go backwards.
+fn scenario_reload_storm(cfg: &SoakConfig) -> Result<ScenarioReport> {
+    let (epochs, inflight) = if cfg.smoke { (3usize, 4usize) } else { (6, 8) };
+    let nets: Vec<Network> =
+        (0..epochs).map(|e| build_net(cfg.seed ^ 0x03 ^ ((e as u64) << 8))).collect::<Result<_>>()?;
+    let mut rng = Rng::new(cfg.seed ^ 0x0303);
+    let inputs = inputs_for(&mut rng, 6);
+    let expected: Vec<Vec<Tensor>> =
+        nets.iter().map(|n| oracle_outputs(n, &inputs)).collect::<Result<_>>()?;
+    let scfg = ServerConfig {
+        max_batch: 4,
+        max_wait_ticks: 1,
+        queue_depth: 16,
+        stages: 3,
+        ..ServerConfig::default()
+    };
+    let server = Server::start(host(), &nets[0], &scfg)?;
+    let mut cl = server.client();
+    let mut next_seq = 0u64;
+    let mut last_version = 0u64;
+    for e in 0..epochs {
+        // Submit a window, swap weights *while it is in flight*, then
+        // verify each response against the epoch it reports.
+        let mut pending = Vec::with_capacity(inflight);
+        for k in 0..inflight {
+            let j = (e + k) % inputs.len();
+            let mut x = cl.take(inputs[j].shape());
+            x.copy_from(&inputs[j]);
+            cl.submit(x)?;
+            pending.push(j);
+        }
+        if e + 1 < epochs {
+            server.reload(&nets[e + 1])?;
+        }
+        for j in pending {
+            let r = cl.recv()?;
+            ensure!(r.seq == next_seq, "reload_storm: reordered (want {next_seq}, got {})", r.seq);
+            next_seq += 1;
+            let v = r.version as usize;
+            ensure!(v < expected.len(), "reload_storm: unknown epoch {v}");
+            ensure!(r.version >= last_version, "reload_storm: epoch went backwards");
+            last_version = r.version;
+            ensure!(r.data == expected[v][j], "reload_storm: payload not bitwise for epoch {v}");
+            cl.recycle(r.data);
+        }
+    }
+    let stats = server.shutdown()?;
+    check_terminal_identity("reload_storm", &stats)?;
+    ensure!(stats.reloads == (epochs - 1) as u64, "reload_storm: reload count drifted");
+    Ok(ScenarioReport::from_stats("reload_storm", &stats))
+}
+
+/// Saturation bursts against full admission control: a token bucket,
+/// a global in-flight budget, and short deadlines. Rejections must be
+/// synchronous and uncounted as traffic; every *accepted* request must
+/// still get exactly one terminal event (payload, `Deadline` shed, or
+/// `Shutdown` shed at teardown).
+fn scenario_saturation(cfg: &SoakConfig) -> Result<ScenarioReport> {
+    let (bursts, burst_len) = if cfg.smoke { (4usize, 8usize) } else { (16, 16) };
+    let net = build_net(cfg.seed ^ 0x04)?;
+    let mut rng = Rng::new(cfg.seed ^ 0x0404);
+    let inputs = inputs_for(&mut rng, 8);
+    let expected = oracle_outputs(&net, &inputs)?;
+    let scfg = ServerConfig {
+        max_batch: 4,
+        max_wait_ticks: 2,
+        queue_depth: 8,
+        stages: 2,
+        admit_rate: 2,
+        admit_burst: 8,
+        inflight_cap: 12,
+        deadline_ticks: 64,
+        ..ServerConfig::default()
+    };
+    let server = Server::start(host(), &net, &scfg)?;
+    let mut cl = server.client();
+    let mut js: Vec<usize> = Vec::new();
+    let mut rejected = 0u64;
+    let mut st = SatState::default();
+    for _ in 0..bursts {
+        for _ in 0..burst_len {
+            let j = rng.below(inputs.len() as u64) as usize;
+            let mut x = cl.take(inputs[j].shape());
+            x.copy_from(&inputs[j]);
+            match cl.submit_with(x, 64)? {
+                SubmitVerdict::Accepted(seq) => {
+                    ensure!(seq == js.len() as u64, "saturation: seq skipped on accept");
+                    js.push(j);
+                }
+                SubmitVerdict::Rejected { data, .. } => {
+                    rejected += 1;
+                    cl.recycle(data);
+                }
+            }
+        }
+        while let Some(r) = cl.poll() {
+            sat_handle(r, &js, &expected, &mut st, &mut cl)?;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // Drain: deadlines guarantee queued stragglers terminate without
+    // needing the shutdown flush, but cap the wait defensively.
+    let wall = Instant::now() + Duration::from_secs(10);
+    while st.next_recv < js.len() as u64 {
+        ensure!(Instant::now() < wall, "saturation: lost {} responses", js.len() as u64 - st.next_recv);
+        if let Some(r) = cl.recv_timeout(Duration::from_millis(100)) {
+            sat_handle(r, &js, &expected, &mut st, &mut cl)?;
+        }
+    }
+    let stats = server.shutdown()?;
+    check_terminal_identity("saturation", &stats)?;
+    ensure!(stats.submitted == js.len() as u64, "saturation: accepted count drifted");
+    ensure!(
+        stats.rejected_rate + stats.rejected_budget == rejected,
+        "saturation: reject accounting drifted (driver {rejected}, obs {})",
+        stats.rejected_rate + stats.rejected_budget
+    );
+    ensure!(
+        st.completed + st.shed == js.len() as u64,
+        "saturation: terminal events ({} + {}) != accepted {}",
+        st.completed,
+        st.shed,
+        js.len()
+    );
+    Ok(ScenarioReport::from_stats("saturation", &stats))
+}
+
+#[derive(Default)]
+struct SatState {
+    next_recv: u64,
+    completed: u64,
+    shed: u64,
+}
+
+fn sat_handle(
+    r: Response,
+    js: &[usize],
+    expected: &[Tensor],
+    st: &mut SatState,
+    cl: &mut ServingClient,
+) -> Result<()> {
+    ensure!(
+        r.seq == st.next_recv,
+        "saturation: reordered/duplicated (want {}, got {})",
+        st.next_recv,
+        r.seq
+    );
+    st.next_recv += 1;
+    if r.shed().is_some() {
+        st.shed += 1;
+        return Ok(());
+    }
+    let j = js[r.seq as usize];
+    ensure!(r.data == expected[j], "saturation: payload {} not bitwise", r.seq);
+    st.completed += 1;
+    cl.recycle(r.data);
+    Ok(())
+}
+
+/// Injected stage-worker stalls (`fault_stall_seed`): seeded time-only
+/// sleeps inside every stage. Lockstep traffic (window 0) keeps batch
+/// formation deterministic, and every payload must remain bitwise —
+/// stalls reorder time, never data.
+fn scenario_stage_stall(cfg: &SoakConfig) -> Result<ScenarioReport> {
+    let reqs = if cfg.smoke { 16 } else { 64 };
+    let net = build_net(cfg.seed ^ 0x05)?;
+    let mut rng = Rng::new(cfg.seed ^ 0x0505);
+    let inputs = inputs_for(&mut rng, 8);
+    let expected = vec![oracle_outputs(&net, &inputs)?];
+    let scfg = ServerConfig {
+        max_batch: 4,
+        max_wait_ticks: 1,
+        queue_depth: 8,
+        stages: 3,
+        fault_stall_seed: cfg.seed | 1,
+        ..ServerConfig::default()
+    };
+    let server = Server::start(host(), &net, &scfg)?;
+    let mut cl = server.client();
+    let report = drive_and_verify_shed(
+        &mut cl,
+        &inputs,
+        &expected,
+        |i| i % inputs.len(),
+        reqs,
+        0, // lockstep: one packet per request, so the stall schedule is seed-determined
+        |_| false,
+    )?;
+    ensure!(report.per_version[0] == reqs as u64, "stage_stall: responses went missing");
+    let stats = server.shutdown()?;
+    check_terminal_identity("stage_stall", &stats)?;
+    ensure!(stats.faults_injected > 0, "stage_stall: the fault hook never fired");
+    Ok(ScenarioReport::from_stats("stage_stall", &stats))
+}
+
+/// Steady-state throughput + latency for the report (wall-clock;
+/// report-only, nothing asserts on it beyond bitwise correctness).
+fn measure_steady_state(cfg: &SoakConfig) -> Result<(f64, f64, f64)> {
+    let n = if cfg.smoke { 48 } else { 512 };
+    let net = build_net(cfg.seed ^ 0x06)?;
+    let mut rng = Rng::new(cfg.seed ^ 0x0606);
+    let inputs = inputs_for(&mut rng, 8);
+    let expected = vec![oracle_outputs(&net, &inputs)?];
+    let scfg = ServerConfig {
+        max_batch: 8,
+        max_wait_ticks: 1,
+        queue_depth: 32,
+        stages: 2,
+        ..ServerConfig::default()
+    };
+    let server = Server::start(host(), &net, &scfg)?;
+    let mut cl = server.client();
+    let t0 = Instant::now();
+    drive_and_verify(&mut cl, &inputs, &expected, |i| i % inputs.len(), n, 8)?;
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    let h = server.latency_hist();
+    let p50_ms = h.quantile_ns(0.5) as f64 / 1e6;
+    let p99_ms = h.quantile_ns(0.99) as f64 / 1e6;
+    server.shutdown()?;
+    Ok((n as f64 / secs, p50_ms, p99_ms))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soak_smoke_passes_with_exact_accounting() {
+        let report = run_soak(&SoakConfig { seed: 42, smoke: true }).unwrap();
+        assert_eq!(report.scenarios.len(), 5, "all five scenarios ran");
+        assert_eq!((report.lost, report.duplicated, report.reordered), (0, 0, 0));
+        for s in &report.scenarios {
+            assert!(s.submitted > 0, "{}: scenario did no work", s.name);
+        }
+        let slow = report.scenarios.iter().find(|s| s.name == "slow_client").unwrap();
+        assert!(slow.shed > 0, "slow_client must strip payloads");
+        let stall = report.scenarios.iter().find(|s| s.name == "stage_stall").unwrap();
+        assert!(stall.faults > 0, "stage_stall must inject faults");
+        let json = report.to_json();
+        assert!(json.contains("\"lost\":0"), "verify.sh greps this literal: {json}");
+        assert!(json.contains("\"duplicated\":0"));
+        assert!(json.contains("\"reordered\":0"));
+        assert!(json.contains("\"scenarios\":["));
+    }
+
+    #[test]
+    fn soak_seed_changes_are_still_clean() {
+        // Different seed, same invariants: the harness is seed-robust,
+        // not tuned to one lucky schedule.
+        let report = run_soak(&SoakConfig { seed: 7, smoke: true }).unwrap();
+        assert_eq!((report.lost, report.duplicated, report.reordered), (0, 0, 0));
+    }
+}

@@ -17,12 +17,29 @@
 //!   holds a sender clone, so per-client submission order is the
 //!   channel's per-producer FIFO guarantee. Backpressure is structural —
 //!   a full queue blocks `submit`, a full pipeline blocks the batcher.
-//!   Response channels are *unbounded*, so a slow (or stalled) client
-//!   grows only its own response queue and can never wedge the
-//!   collector — and therefore never stalls other clients.
+//!   Response queues are *bounded* ([`ServerConfig::client_queue_cap`]
+//!   payload-bearing responses per client, shed-oldest-with-notice), so
+//!   a slow (or stalled) client can neither wedge the collector nor
+//!   grow memory without limit — and never stalls other clients.
 //!   Shutdown closes a submit gate and pushes a close marker through
 //!   the queue: every request whose `submit` returned `Ok` before
-//!   `shutdown` began is ordered ahead of the marker and gets served.
+//!   `shutdown` began is ordered ahead of the marker and gets a
+//!   terminal response (served, or an explicit shed notice — never a
+//!   silent drop).
+//! - **Survival layer** (admission, deadlines, shedding, adaptive
+//!   batching — DESIGN.md §13). `submit_with` runs per-client
+//!   token-bucket admission ([`ServerConfig::admit_rate`]) and a global
+//!   in-flight budget ([`ServerConfig::inflight_cap`]) *synchronously*:
+//!   overload answers with [`SubmitVerdict::Rejected`] immediately
+//!   instead of queue growth. Each request may carry a deadline in
+//!   batcher ticks; the batcher sheds expired requests *before* batch
+//!   formation, decided purely by the [`Coalescer`]'s tick clock (wall
+//!   time is never consulted — reproducible), and the collector tags
+//!   responses that were served past their deadline [`Status::Late`].
+//!   An optional AIMD controller ([`ServerConfig::adaptive`]) adapts
+//!   `max_batch`/`max_wait_ticks` to the observed p99 within configured
+//!   clamps. All knobs default off: the PR-5 behavior is bit-for-bit
+//!   unchanged.
 //! - **Batcher.** A [`Coalescer`] (pure, property-fuzzed) greedily packs
 //!   whole requests — never splitting one — into batches of at most
 //!   `max_batch` rows, flushing a partial batch after `max_wait_ticks`
@@ -65,10 +82,12 @@ use crate::util::Rng;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+pub mod chaos;
 
 /// One batcher tick: how long the batcher waits for more traffic before
 /// counting an idle tick against `max_wait_ticks`. A partial batch
@@ -94,16 +113,73 @@ pub struct ServerConfig {
     /// bit-for-bit the pre-knob behavior).
     pub shrink_under: usize,
     /// Bound of the request queue and each inter-stage channel
-    /// (per-client response channels are unbounded by design — see the
-    /// module docs).
+    /// (per-client response queues are bounded separately by
+    /// `client_queue_cap`).
     pub queue_depth: usize,
     /// Forward pipeline stages (1 ≤ stages ≤ layers).
     pub stages: usize,
+    /// Per-client token-bucket admission: rows admitted per batcher tick
+    /// (refill rate). `0` disables admission control (the default).
+    pub admit_rate: u64,
+    /// Token-bucket capacity in rows (burst allowance). `0` means
+    /// `max_batch` rows.
+    pub admit_burst: u64,
+    /// Global in-flight budget: `submit_with` rejects
+    /// ([`RejectReason::Saturated`]) while this many accepted requests
+    /// are still unanswered. `0` disables the budget (the default).
+    /// Racing clients can overshoot by at most one request each — the
+    /// check and the enqueue are not atomic — so the real bound is
+    /// `inflight_cap + clients`.
+    pub inflight_cap: usize,
+    /// Default per-request deadline in batcher ticks, applied by
+    /// [`ServingClient::submit`]; `submit_with` overrides per request.
+    /// A request older than its deadline (measured on the coalescer's
+    /// tick clock, never wall time) is shed *before* batch formation
+    /// with an explicit [`ShedReason::Deadline`] notice. `0` = no
+    /// deadline (the default).
+    pub deadline_ticks: u64,
+    /// Payload-bearing responses buffered per client before the oldest
+    /// is stripped to a [`ShedReason::Backpressure`] notice (notices
+    /// keep per-seq continuity and never count toward the cap).
+    pub client_queue_cap: usize,
+    /// p99-driven AIMD adaptation of `max_batch`/`max_wait_ticks`
+    /// (clamped to `adapt_min_batch..=max_batch` and
+    /// `adapt_min_wait_ticks..=max_wait_ticks`). Off by default: the
+    /// configured limits are immutable and behavior is byte-identical
+    /// to previous releases.
+    pub adaptive: bool,
+    /// AIMD latency target: windowed p99 above this shrinks the batch
+    /// limits (multiplicative), below grows them (additive).
+    pub adapt_target_p99_ms: f64,
+    /// Floor for the adapted batch size (≥ 1).
+    pub adapt_min_batch: usize,
+    /// Floor for the adapted wait budget.
+    pub adapt_min_wait_ticks: u64,
+    /// Chaos hook: when non-zero, every stage worker injects short
+    /// seeded sleeps between packets (time-only faults — data, order
+    /// and accounting are untouched; `faults_injected` counts them).
+    pub fault_stall_seed: u64,
 }
 
 impl Default for ServerConfig {
     fn default() -> ServerConfig {
-        ServerConfig { max_batch: 32, max_wait_ticks: 4, shrink_under: 0, queue_depth: 64, stages: 2 }
+        ServerConfig {
+            max_batch: 32,
+            max_wait_ticks: 4,
+            shrink_under: 0,
+            queue_depth: 64,
+            stages: 2,
+            admit_rate: 0,
+            admit_burst: 0,
+            inflight_cap: 0,
+            deadline_ticks: 0,
+            client_queue_cap: 1024,
+            adaptive: false,
+            adapt_target_p99_ms: 2.0,
+            adapt_min_batch: 1,
+            adapt_min_wait_ticks: 0,
+            fault_stall_seed: 0,
+        }
     }
 }
 
@@ -122,6 +198,25 @@ impl ServerConfig {
             "stages {} outside 1..={layers}",
             self.stages
         );
+        ensure!(self.client_queue_cap >= 1, "client_queue_cap must be positive");
+        if self.adaptive {
+            ensure!(
+                self.adapt_min_batch >= 1 && self.adapt_min_batch <= self.max_batch,
+                "adapt_min_batch {} outside 1..={}",
+                self.adapt_min_batch,
+                self.max_batch
+            );
+            ensure!(
+                self.adapt_min_wait_ticks <= self.max_wait_ticks,
+                "adapt_min_wait_ticks {} exceeds max_wait_ticks {}",
+                self.adapt_min_wait_ticks,
+                self.max_wait_ticks
+            );
+            ensure!(
+                self.adapt_target_p99_ms > 0.0,
+                "adaptive mode needs a positive adapt_target_p99_ms"
+            );
+        }
         Ok(())
     }
 }
@@ -139,6 +234,12 @@ pub struct Request {
     /// by the batching logic itself (determinism: clocks are observed,
     /// not branched on).
     pub born: Instant,
+    /// Batcher tick at submission (the client samples the shared tick
+    /// clock) — the deadline's epoch. Unlike `born` this *is* read by
+    /// the shed logic: tick counts are reproducible, wall time is not.
+    pub born_tick: u64,
+    /// Deadline in batcher ticks past `born_tick`; `0` = none.
+    pub deadline_ticks: u64,
 }
 
 impl Request {
@@ -156,12 +257,180 @@ enum Inbound {
 }
 
 /// One served result: `data` is `[rows, out_dim]` for the request's
-/// rows, `version` the weight epoch that computed it.
+/// rows, `version` the weight epoch that computed it. A shed response
+/// is a payload-free *notice* (`data` empty) that keeps the per-client
+/// seq stream gapless — every accepted request gets exactly one
+/// terminal response.
 pub struct Response {
     pub client: u32,
     pub seq: u64,
     pub version: u64,
     pub data: Tensor,
+    pub status: Status,
+}
+
+impl Response {
+    /// `Some(reason)` when this is a payload-free shed notice.
+    pub fn shed(&self) -> Option<ShedReason> {
+        match self.status {
+            Status::Shed(r) => Some(r),
+            _ => None,
+        }
+    }
+}
+
+/// Terminal disposition of an accepted request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    /// Served within its deadline (or it had none).
+    Ok,
+    /// Served *past* its deadline (tick-measured). Observational only:
+    /// the payload is still delivered and still bitwise-exact.
+    Late,
+    /// Not served — a payload-free notice explaining why.
+    Shed(ShedReason),
+}
+
+/// Why a request was shed (terminal, no payload was computed — except
+/// `Backpressure`, which strips an already-computed payload).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Expired in the queue: older than its `deadline_ticks` before a
+    /// batch could form.
+    Deadline,
+    /// The client's bounded response queue was full of unread payloads;
+    /// this (oldest) one was stripped to make room.
+    Backpressure,
+    /// The pipeline went away (stage failure / teardown) before the
+    /// request could be served.
+    Shutdown,
+}
+
+/// Why `submit_with` refused a request outright (no seq consumed, the
+/// input buffer is handed back).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The per-client token bucket is empty (`admit_rate`).
+    RateLimited,
+    /// The global in-flight budget is spent (`inflight_cap`).
+    Saturated,
+}
+
+/// Outcome of [`ServingClient::submit_with`]: admission is synchronous,
+/// so overload is a fast observable signal instead of queue growth.
+#[derive(Debug)]
+pub enum SubmitVerdict {
+    /// Accepted; the per-client sequence number a terminal [`Response`]
+    /// will carry.
+    Accepted(u64),
+    /// Rejected before enqueue; `data` is the caller's input back.
+    Rejected { reason: RejectReason, data: Tensor },
+}
+
+// ---------------------------------------------------------------------------
+// Admission control + adaptive batch control: pure, unit-testable cores.
+// ---------------------------------------------------------------------------
+
+/// A token bucket over the batcher's tick clock: `capacity` tokens of
+/// burst, `refill_per_tick` tokens back per elapsed tick, one token per
+/// request row. Pure (no clocks of its own) so it property-fuzzes: an
+/// admitted-cost total can never exceed `capacity + refill · elapsed`.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    capacity: u64,
+    refill_per_tick: u64,
+    tokens: u64,
+    last_tick: u64,
+}
+
+impl TokenBucket {
+    /// A full bucket at tick 0.
+    pub fn new(capacity: u64, refill_per_tick: u64) -> TokenBucket {
+        TokenBucket { capacity, refill_per_tick, tokens: capacity, last_tick: 0 }
+    }
+
+    /// Refill for the ticks elapsed since the last call (the clock is
+    /// treated as monotonic — a stale `now_tick` refills nothing), then
+    /// admit iff `cost` tokens are available, spending them.
+    pub fn admit(&mut self, now_tick: u64, cost: u64) -> bool {
+        let elapsed = now_tick.saturating_sub(self.last_tick);
+        self.last_tick = self.last_tick.max(now_tick);
+        self.tokens = self
+            .tokens
+            .saturating_add(elapsed.saturating_mul(self.refill_per_tick))
+            .min(self.capacity);
+        if cost <= self.tokens {
+            self.tokens -= cost;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Tokens currently available (after the last refill).
+    pub fn tokens(&self) -> u64 {
+        self.tokens
+    }
+}
+
+/// AIMD controller over the serving batch limits, fed by the windowed
+/// p99 of the obs latency histogram: over target → multiplicative
+/// decrease (halve the wait, shrink the batch to ¾), under target →
+/// additive increase (+1 each), always clamped to the configured
+/// bounds. Pure — the batcher owns the sampling cadence.
+#[derive(Clone, Debug)]
+pub struct AimdBatchControl {
+    min_batch: usize,
+    max_batch: usize,
+    min_wait: u64,
+    max_wait: u64,
+    target_p99_ns: u64,
+    batch: usize,
+    wait: u64,
+}
+
+impl AimdBatchControl {
+    /// Starts at the configured ceiling (`max_batch`, `max_wait`): with
+    /// no pressure observed yet, behave exactly as configured.
+    pub fn new(
+        min_batch: usize,
+        max_batch: usize,
+        min_wait: u64,
+        max_wait: u64,
+        target_p99_ns: u64,
+    ) -> AimdBatchControl {
+        assert!(min_batch >= 1 && min_batch <= max_batch, "batch clamp order");
+        assert!(min_wait <= max_wait, "wait clamp order");
+        AimdBatchControl {
+            min_batch,
+            max_batch,
+            min_wait,
+            max_wait,
+            target_p99_ns,
+            batch: max_batch,
+            wait: max_wait,
+        }
+    }
+
+    /// Feed one windowed p99 observation; returns the new
+    /// `(max_batch, max_wait_ticks)` limits (always within the clamps).
+    pub fn observe(&mut self, p99_ns: u64) -> (usize, u64) {
+        if p99_ns > self.target_p99_ns {
+            // Multiplicative decrease: back off fast under pressure.
+            self.wait = (self.wait / 2).max(self.min_wait);
+            self.batch = (self.batch * 3 / 4).max(self.min_batch);
+        } else {
+            // Additive increase: creep back toward the ceiling.
+            self.wait = (self.wait + 1).min(self.max_wait);
+            self.batch = (self.batch + 1).min(self.max_batch);
+        }
+        (self.batch, self.wait)
+    }
+
+    /// Current `(max_batch, max_wait_ticks)` limits.
+    pub fn limits(&self) -> (usize, u64) {
+        (self.batch, self.wait)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -180,6 +449,12 @@ pub struct Coalescer {
     shrink_under: usize,
     queue: VecDeque<Request>,
     waited: u64,
+    /// Absolute tick clock: advances by one on every idle tick *and*
+    /// every emitted batch, so request age is measured in units of
+    /// batcher progress whether the server is idle or saturated — and
+    /// deadline shedding is a pure function of the push/tick/emit
+    /// sequence, never of wall time.
+    now: u64,
 }
 
 impl Coalescer {
@@ -192,20 +467,71 @@ impl Coalescer {
     /// immediately, skipping the idle-tick wait.
     pub fn with_shrink(max_batch: usize, max_wait_ticks: u64, shrink_under: usize) -> Coalescer {
         debug_assert!(shrink_under <= max_batch);
-        Coalescer { max_batch, max_wait_ticks, shrink_under, queue: VecDeque::new(), waited: 0 }
+        Coalescer { max_batch, max_wait_ticks, shrink_under, queue: VecDeque::new(), waited: 0, now: 0 }
     }
 
-    /// Enqueue a request (`rows` must already be validated ≤ max_batch).
+    /// Enqueue a request. Rows are validated against the *configured*
+    /// cap by the server edge; the adaptive controller may have lowered
+    /// this coalescer's cap below a request's size, in which case it is
+    /// emitted as a singleton batch (see `take_ready_into_reason`).
     pub fn push(&mut self, req: Request) {
-        debug_assert!(req.rows() >= 1 && req.rows() <= self.max_batch);
+        debug_assert!(req.rows() >= 1);
         self.queue.push_back(req);
     }
 
     /// Register one idle tick (no traffic for [`BATCH_TICK`]).
     pub fn tick(&mut self) {
+        self.now += 1;
         if !self.queue.is_empty() {
             self.waited += 1;
         }
+    }
+
+    /// The absolute tick clock (idle ticks + emitted batches).
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Replace the batch limits (the AIMD controller's knob). The shrink
+    /// threshold is left alone — it only ever fires on queue-emptying
+    /// prefixes, so a cap below it just means small batches flush early.
+    pub fn set_limits(&mut self, max_batch: usize, max_wait_ticks: u64) {
+        debug_assert!(max_batch >= 1);
+        self.max_batch = max_batch;
+        self.max_wait_ticks = max_wait_ticks;
+    }
+
+    /// Extract every request older than its deadline (`now − born_tick ≥
+    /// deadline_ticks`, deadline 0 = never), preserving the arrival
+    /// order of both survivors and the shed. Appends to `out` and
+    /// returns how many were shed. Called *before* batch formation so an
+    /// expired request never consumes pipeline capacity; the decision
+    /// reads only the tick clock — rerunning the same push/tick/emit
+    /// sequence sheds exactly the same requests.
+    pub fn shed_expired(&mut self, out: &mut Vec<Request>) -> usize {
+        let before = out.len();
+        let now = self.now;
+        let mut i = 0;
+        while i < self.queue.len() {
+            let r = &self.queue[i];
+            if r.deadline_ticks > 0 && now.saturating_sub(r.born_tick) >= r.deadline_ticks {
+                let r = self.queue.remove(i).expect("index in bounds");
+                out.push(r);
+            } else {
+                i += 1;
+            }
+        }
+        if self.queue.is_empty() {
+            self.waited = 0;
+        }
+        out.len() - before
+    }
+
+    /// Drain every queued request (shutdown teardown: the caller turns
+    /// them into terminal shed notices).
+    pub fn drain_all(&mut self, out: &mut Vec<Request>) {
+        out.extend(self.queue.drain(..));
+        self.waited = 0;
     }
 
     /// Rows currently pending (not yet emitted in a batch).
@@ -251,14 +577,17 @@ impl Coalescer {
         let mut rows = 0usize;
         let mut n = 0usize;
         for r in &self.queue {
-            if rows + r.rows() > self.max_batch {
+            // `n > 0`: a request larger than an *adapted* cap still goes
+            // out as a singleton batch (the packet buffer is sized to
+            // the configured cap, which every request fits).
+            if n > 0 && rows + r.rows() > self.max_batch {
                 break;
             }
             rows += r.rows();
             n += 1;
         }
-        debug_assert!(n >= 1, "a single request always fits");
-        let full = rows == self.max_batch || n < self.queue.len();
+        debug_assert!(n >= 1, "a non-empty queue always yields a prefix");
+        let full = rows >= self.max_batch || n < self.queue.len();
         // Low-occupancy shrink: the prefix drains the whole queue and is
         // small — nothing is coming that it could coalesce with, so
         // waiting only adds latency. Never splits/drops/reorders (same
@@ -276,6 +605,10 @@ impl Coalescer {
             return None;
         };
         self.waited = 0;
+        // An emitted batch is one step of batcher progress: advance the
+        // deadline clock so queued requests age under saturation too
+        // (idle ticks alone would freeze time under sustained traffic).
+        self.now += 1;
         out.extend(self.queue.drain(..n));
         Some(reason)
     }
@@ -315,6 +648,11 @@ struct Route {
     rows: usize,
     /// Carried over from the request: submit→respond latency endpoint.
     born: Instant,
+    /// Carried over from the request: the collector tags the response
+    /// `Late` when it lands past `born_tick + deadline_ticks` on the
+    /// shared tick clock (observational — the payload still ships).
+    born_tick: u64,
+    deadline_ticks: u64,
 }
 
 /// A batch moving down the stage pipeline. Packets circulate: the
@@ -346,6 +684,149 @@ impl Packet {
 }
 
 // ---------------------------------------------------------------------------
+// Bounded per-client response queues.
+// ---------------------------------------------------------------------------
+
+/// A client's bounded response queue (Mutex + Condvar): at most `cap`
+/// payload-bearing responses buffered; pushing past the cap strips the
+/// *oldest* payload in place to a [`ShedReason::Backpressure`] notice
+/// (its buffer returns to the pool), so a stalled client costs O(cap)
+/// memory while its seq stream stays gapless. Notices never count
+/// toward the cap and are never dropped. Lock order elsewhere is
+/// pool → client table → chan; nothing is ever locked while holding a
+/// chan, so the hierarchy is cycle-free.
+#[derive(Clone)]
+struct RespChan(Arc<(Mutex<RespState>, Condvar)>);
+
+struct RespState {
+    q: VecDeque<Response>,
+    /// Payload-bearing (non-notice) responses currently queued.
+    payloads: usize,
+    cap: usize,
+    /// Client handle still alive (false after `ServingClient` drop).
+    open: bool,
+    /// Server side finished — `recv` errors once the queue is drained.
+    done: bool,
+}
+
+/// What `RespChan::push` did with a response.
+enum PushOutcome {
+    /// Queued. When the cap forced the oldest payload out, its buffer
+    /// comes back for recycling (the stripped response itself stays
+    /// queued as a `Shed(Backpressure)` notice).
+    Delivered { shed_payload: Option<Tensor> },
+    /// The client handle is gone; the response comes back untouched.
+    Gone(Response),
+}
+
+impl RespChan {
+    fn new(cap: usize) -> RespChan {
+        debug_assert!(cap >= 1);
+        RespChan(Arc::new((
+            Mutex::new(RespState { q: VecDeque::new(), payloads: 0, cap, open: true, done: false }),
+            Condvar::new(),
+        )))
+    }
+
+    fn push(&self, resp: Response) -> PushOutcome {
+        let (m, cv) = &*self.0;
+        let mut st = m.lock().expect("resp chan lock");
+        if !st.open {
+            return PushOutcome::Gone(resp);
+        }
+        let mut shed_payload = None;
+        if resp.shed().is_none() {
+            if st.payloads >= st.cap {
+                // Shed-oldest-with-notice: keep the victim's identity
+                // (client/seq/version) so the receiver still sees every
+                // seq exactly once, in order.
+                if let Some(victim) = st.q.iter_mut().find(|r| r.shed().is_none()) {
+                    victim.status = Status::Shed(ShedReason::Backpressure);
+                    shed_payload = Some(std::mem::replace(&mut victim.data, Tensor::empty()));
+                    st.payloads -= 1;
+                }
+            }
+            st.payloads += 1;
+        }
+        st.q.push_back(resp);
+        cv.notify_one();
+        PushOutcome::Delivered { shed_payload }
+    }
+
+    fn pop(st: &mut RespState) -> Option<Response> {
+        let r = st.q.pop_front()?;
+        if r.shed().is_none() {
+            st.payloads -= 1;
+        }
+        Some(r)
+    }
+
+    fn try_recv(&self) -> Option<Response> {
+        let (m, _) = &*self.0;
+        Self::pop(&mut m.lock().expect("resp chan lock"))
+    }
+
+    /// Blocking receive; `None` once the server is done *and* the queue
+    /// is drained (responses queued before teardown still deliver).
+    fn recv(&self) -> Option<Response> {
+        let (m, cv) = &*self.0;
+        let mut st = m.lock().expect("resp chan lock");
+        loop {
+            if let Some(r) = Self::pop(&mut st) {
+                return Some(r);
+            }
+            if st.done {
+                return None;
+            }
+            st = cv.wait(st).expect("resp chan wait");
+        }
+    }
+
+    /// [`RespChan::recv`] with a wall-clock cap (chaos harness: turns a
+    /// would-be hang into a counted loss instead of wedging the suite).
+    fn recv_timeout(&self, timeout: Duration) -> Option<Response> {
+        let deadline = Instant::now() + timeout;
+        let (m, cv) = &*self.0;
+        let mut st = m.lock().expect("resp chan lock");
+        loop {
+            if let Some(r) = Self::pop(&mut st) {
+                return Some(r);
+            }
+            if st.done {
+                return None;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return None;
+            }
+            let (guard, _) = cv.wait_timeout(st, left).expect("resp chan wait");
+            st = guard;
+        }
+    }
+
+    /// Server side: no further responses will ever be pushed — wake
+    /// every blocked receiver so it can drain and return.
+    fn mark_done(&self) {
+        let (m, cv) = &*self.0;
+        m.lock().expect("resp chan lock").done = true;
+        cv.notify_all();
+    }
+
+    /// Client side (handle drop): refuse future pushes and surrender the
+    /// queued payload buffers (the caller recycles them *outside* the
+    /// chan lock, respecting the pool → table → chan order).
+    fn close(&self) -> Vec<Tensor> {
+        let (m, cv) = &*self.0;
+        let mut st = m.lock().expect("resp chan lock");
+        st.open = false;
+        st.payloads = 0;
+        let out = st.q.drain(..).filter(|r| r.shed().is_none()).map(|r| r.data).collect();
+        cv.notify_all();
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Shared counters — per-server views over the `obs` registry.
 // ---------------------------------------------------------------------------
 
@@ -370,6 +851,19 @@ struct Counters {
     flush_shrank: obs::Counter,
     flush_force: obs::Counter,
     flush_wait: obs::Counter,
+    /// Synchronous admission rejections (no seq consumed).
+    rejected_rate: obs::Counter,
+    rejected_budget: obs::Counter,
+    /// Terminal sheds (each retires an accepted request)…
+    shed_deadline: obs::Counter,
+    shed_shutdown: obs::Counter,
+    /// …and post-completion payload strips (orthogonal: the request was
+    /// already counted `completed`).
+    shed_backpressure: obs::Counter,
+    /// Payload responses delivered past their deadline (`Status::Late`).
+    late: obs::Counter,
+    /// Chaos stalls injected by stage workers (`fault_stall_seed`).
+    faults: obs::Counter,
     /// Requests accepted by `submit` and not yet routed to a response —
     /// the live queue depth across queue + coalescer + pipeline.
     queue_depth: obs::Gauge,
@@ -392,6 +886,13 @@ impl Counters {
             flush_shrank: c("flush_shrank"),
             flush_force: c("flush_force"),
             flush_wait: c("flush_wait"),
+            rejected_rate: c("rejected_rate"),
+            rejected_budget: c("rejected_budget"),
+            shed_deadline: c("shed_deadline"),
+            shed_shutdown: c("shed_shutdown"),
+            shed_backpressure: c("shed_backpressure"),
+            late: c("late"),
+            faults: c("faults_injected"),
             queue_depth: obs::gauge(&format!("serving#{id}/queue_depth")),
             latency: obs::hist(&format!("serving#{id}/latency")),
         }
@@ -432,8 +933,27 @@ pub struct ServingStats {
     pub flush_force: u64,
     /// Batches flushed after the idle-tick wait budget.
     pub flush_wait: u64,
+    /// Submits rejected by the per-client token bucket.
+    pub rejected_rate: u64,
+    /// Submits rejected by the global in-flight budget.
+    pub rejected_budget: u64,
+    /// Accepted requests shed on deadline expiry (terminal notice, no
+    /// payload computed).
+    pub shed_deadline: u64,
+    /// Accepted requests shed because the pipeline went away before
+    /// serving them (terminal notice).
+    pub shed_shutdown: u64,
+    /// Completed payloads later stripped by a full client queue —
+    /// orthogonal to the terminal accounting (they stay `completed`).
+    pub shed_backpressure: u64,
+    /// Payload responses delivered past their deadline.
+    pub late: u64,
+    /// Chaos stalls injected by stage workers.
+    pub faults_injected: u64,
     /// Requests accepted but not yet routed to a response (0 after a
-    /// clean shutdown: every accepted request was served).
+    /// clean shutdown: `submitted == completed + dropped + shed_deadline
+    /// + shed_shutdown` — every accepted request got exactly one
+    /// terminal event).
     pub queue_depth: i64,
     /// Edge-pool takes served from recycled storage / fresh allocations.
     pub pool_hits: u64,
@@ -454,7 +974,7 @@ pub struct ServingStats {
 /// outstanding requests before joining the workers).
 pub struct Server {
     req_tx: SyncSender<Inbound>,
-    resp_txs: Arc<Mutex<Vec<Option<Sender<Response>>>>>,
+    resp_txs: Arc<Mutex<Vec<Option<RespChan>>>>,
     version: Arc<Mutex<Arc<ModelVersion>>>,
     pool: Arc<Mutex<BufferPool>>,
     stats: Counters,
@@ -464,12 +984,19 @@ pub struct Server {
     /// that returned `Ok` is strictly ordered before the close marker.
     gate: Arc<RwLock<bool>>,
     closing: Arc<AtomicBool>,
+    /// The batcher's published tick clock (mirrors `Coalescer::now`):
+    /// clients stamp `born_tick` off it, token buckets refill on it,
+    /// the collector reads it to tag late responses.
+    clock: Arc<AtomicU64>,
+    /// Latest `(max_batch, max_wait_ticks)` chosen by the AIMD
+    /// controller (= the configured limits while adaptation is off).
+    adapt_state: Arc<Mutex<(usize, u64)>>,
     threads: Vec<JoinHandle<()>>,
     // Immutable architecture metadata (reload validation, rebuilds).
     spec: NetworkSpec,
+    cfg: ServerConfig,
     in_dim: usize,
     out_dim: usize,
-    max_batch: usize,
     partition: StagePartition,
 }
 
@@ -515,7 +1042,9 @@ impl Server {
         let fail: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
         let gate = Arc::new(RwLock::new(false));
         let closing = Arc::new(AtomicBool::new(false));
-        let resp_txs: Arc<Mutex<Vec<Option<Sender<Response>>>>> = Arc::new(Mutex::new(Vec::new()));
+        let clock = Arc::new(AtomicU64::new(0));
+        let adapt_state = Arc::new(Mutex::new((cfg.max_batch, cfg.max_wait_ticks)));
+        let resp_txs: Arc<Mutex<Vec<Option<RespChan>>>> = Arc::new(Mutex::new(Vec::new()));
 
         // Boundary channels: batcher → stage 0 → … → stage K−1 → collector.
         let mut txs = Vec::with_capacity(cfg.stages + 1);
@@ -537,17 +1066,31 @@ impl Server {
             free_rx,
             version: Arc::clone(&version),
             pool: Arc::clone(&pool),
+            resp_txs: Arc::clone(&resp_txs),
+            clock: Arc::clone(&clock),
+            adapt_state: Arc::clone(&adapt_state),
             stats,
             max_batch: cfg.max_batch,
             in_dim: net.input_dim(),
         };
-        let max_wait = cfg.max_wait_ticks;
-        let shrink_under = cfg.shrink_under;
+        let tune = BatcherTuning {
+            max_wait_ticks: cfg.max_wait_ticks,
+            shrink_under: cfg.shrink_under,
+            adaptive: cfg.adaptive.then(|| {
+                AimdBatchControl::new(
+                    cfg.adapt_min_batch,
+                    cfg.max_batch,
+                    cfg.adapt_min_wait_ticks,
+                    cfg.max_wait_ticks,
+                    (cfg.adapt_target_p99_ms * 1e6) as u64,
+                )
+            }),
+        };
         let closing_b = Arc::clone(&closing);
         threads.push(
             std::thread::Builder::new()
                 .name("serve-batcher".into())
-                .spawn(move || batcher_loop(req_rx, ctx, max_wait, shrink_under, closing_b))
+                .spawn(move || batcher_loop(req_rx, ctx, tune, closing_b))
                 .expect("spawn batcher"),
         );
         for (s, ops) in stage_ops.into_iter().enumerate() {
@@ -555,10 +1098,13 @@ impl Server {
             let tx = txs.remove(0);
             let exec = Arc::clone(&backend);
             let fail_s = Arc::clone(&fail);
+            // Chaos: per-stage seeded fault source (time-only stalls).
+            let fault = (cfg.fault_stall_seed != 0)
+                .then(|| Rng::new(cfg.fault_stall_seed.wrapping_add(s as u64)));
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("serve-stage-{s}"))
-                    .spawn(move || stage_loop(exec, ops, rx, tx, fail_s))
+                    .spawn(move || stage_loop(exec, ops, rx, tx, fail_s, fault, stats))
                     .expect("spawn stage"),
             );
         }
@@ -566,6 +1112,7 @@ impl Server {
             free_tx,
             resp_txs: Arc::clone(&resp_txs),
             pool: Arc::clone(&pool),
+            clock: Arc::clone(&clock),
             stats,
             out_dim: net.out_dim(),
         };
@@ -586,40 +1133,49 @@ impl Server {
             fail,
             gate,
             closing,
+            clock,
+            adapt_state,
             threads,
             spec: NetworkSpec {
                 input: net.input.clone(),
                 layers: net.layers.iter().map(|nl| nl.spec.clone()).collect(),
                 init_scale: net.init_scale,
             },
+            cfg: cfg.clone(),
             in_dim: net.input_dim(),
             out_dim: net.out_dim(),
-            max_batch: cfg.max_batch,
             partition,
         })
     }
 
-    /// Mint a client handle: its own (unbounded) response channel plus a
+    /// Mint a client handle: its own bounded response queue
+    /// ([`ServerConfig::client_queue_cap`] payloads, shed-oldest) plus a
     /// clone of the request sender (per-client FIFO rides the channel's
-    /// per-producer ordering). Client ids are never reused; a dropped
-    /// client's table slot is tombstoned — its channel freed — the first
-    /// time a response fails to deliver, leaving one machine word per
-    /// client ever minted.
+    /// per-producer ordering) and — when admission is configured — a
+    /// private token bucket over the shared tick clock. Client ids are
+    /// never reused; a dropped client's table slot is tombstoned the
+    /// first time a response fails to deliver.
     pub fn client(&self) -> ServingClient {
-        let (tx, rx) = channel::<Response>();
+        let chan = RespChan::new(self.cfg.client_queue_cap);
         let mut v = self.resp_txs.lock().expect("client table lock");
         let id = v.len() as u32;
-        v.push(Some(tx));
+        v.push(Some(chan.clone()));
+        let burst =
+            if self.cfg.admit_burst == 0 { self.cfg.max_batch as u64 } else { self.cfg.admit_burst };
         ServingClient {
             id,
             seq: 0,
             req_tx: self.req_tx.clone(),
-            resp_rx: rx,
+            chan,
             pool: Arc::clone(&self.pool),
             stats: self.stats,
             gate: Arc::clone(&self.gate),
+            clock: Arc::clone(&self.clock),
+            bucket: (self.cfg.admit_rate > 0).then(|| TokenBucket::new(burst, self.cfg.admit_rate)),
+            inflight_cap: self.cfg.inflight_cap,
+            default_deadline: self.cfg.deadline_ticks,
             in_dim: self.in_dim,
-            max_batch: self.max_batch,
+            max_batch: self.cfg.max_batch,
         }
     }
 
@@ -689,7 +1245,22 @@ impl Server {
     }
 
     pub fn max_batch(&self) -> usize {
-        self.max_batch
+        self.cfg.max_batch
+    }
+
+    /// The batcher's published tick clock (idle ticks + emitted
+    /// batches) — the time base for deadlines and token buckets.
+    pub fn tick_now(&self) -> u64 {
+        self.clock.load(Ordering::Acquire)
+    }
+
+    /// The AIMD controller's current `(max_batch, max_wait_ticks)`, or
+    /// `None` when `ServerConfig::adaptive` is off (the limits are then
+    /// immutable by construction).
+    pub fn adaptive_limits(&self) -> Option<(usize, u64)> {
+        self.cfg
+            .adaptive
+            .then(|| *self.adapt_state.lock().expect("adapt state lock"))
     }
 
     /// Counter snapshot — a thin view over this server's `obs` registry
@@ -713,6 +1284,13 @@ impl Server {
             flush_shrank: self.stats.flush_shrank.value(),
             flush_force: self.stats.flush_force.value(),
             flush_wait: self.stats.flush_wait.value(),
+            rejected_rate: self.stats.rejected_rate.value(),
+            rejected_budget: self.stats.rejected_budget.value(),
+            shed_deadline: self.stats.shed_deadline.value(),
+            shed_shutdown: self.stats.shed_shutdown.value(),
+            shed_backpressure: self.stats.shed_backpressure.value(),
+            late: self.stats.late.value(),
+            faults_injected: self.stats.faults.value(),
             queue_depth: self.stats.queue_depth.value(),
             pool_hits,
             pool_misses,
@@ -720,7 +1298,7 @@ impl Server {
             occupancy: if batches == 0 {
                 0.0
             } else {
-                rows as f64 / (batches * self.max_batch as u64) as f64
+                rows as f64 / (batches * self.cfg.max_batch as u64) as f64
             },
         }
     }
@@ -803,10 +1381,17 @@ pub struct ServingClient {
     id: u32,
     seq: u64,
     req_tx: SyncSender<Inbound>,
-    resp_rx: Receiver<Response>,
+    chan: RespChan,
     pool: Arc<Mutex<BufferPool>>,
     stats: Counters,
     gate: Arc<RwLock<bool>>,
+    clock: Arc<AtomicU64>,
+    /// Per-client admission bucket (`None`: admission off).
+    bucket: Option<TokenBucket>,
+    /// Global in-flight budget (`0`: off).
+    inflight_cap: usize,
+    /// Deadline `submit` applies (ticks; `0`: none).
+    default_deadline: u64,
     in_dim: usize,
     max_batch: usize,
 }
@@ -828,9 +1413,27 @@ impl ServingClient {
     }
 
     /// Enqueue `[rows, in_dim]` input rows (`1 ≤ rows ≤ max_batch`);
-    /// blocks when the request queue is full. Returns this request's
-    /// per-client sequence number; responses arrive in sequence order.
+    /// blocks when the request queue is full. Applies the configured
+    /// default deadline; an admission rejection surfaces as an `Err`
+    /// (the input buffer is recycled back into the edge pool). Returns
+    /// this request's per-client sequence number; responses arrive in
+    /// sequence order.
     pub fn submit(&mut self, data: Tensor) -> Result<u64> {
+        match self.submit_with(data, self.default_deadline)? {
+            SubmitVerdict::Accepted(seq) => Ok(seq),
+            SubmitVerdict::Rejected { reason, data } => {
+                self.recycle(data);
+                Err(anyhow!("request rejected: {reason:?}"))
+            }
+        }
+    }
+
+    /// [`ServingClient::submit`] with an explicit per-request deadline
+    /// (ticks; `0` = none) and a non-panicking overload signal: a
+    /// rejected request consumes no sequence number and hands the input
+    /// buffer back, so callers under load can retry, downsample or
+    /// recycle — overload is a fast verdict, never queue growth.
+    pub fn submit_with(&mut self, data: Tensor, deadline_ticks: u64) -> Result<SubmitVerdict> {
         ensure!(
             data.ndim() == 2 && data.shape()[1] == self.in_dim,
             "request shape {:?} (expected [rows, {}])",
@@ -843,32 +1446,77 @@ impl ServingClient {
             "request rows {rows} outside 1..={}",
             self.max_batch
         );
+        let born_tick = self.clock.load(Ordering::Acquire);
+        // Global in-flight budget first (a budget reject must not spend
+        // bucket tokens), then the per-client token bucket.
+        if self.inflight_cap > 0 && self.stats.queue_depth.value() >= self.inflight_cap as i64 {
+            self.stats.rejected_budget.inc();
+            return Ok(SubmitVerdict::Rejected { reason: RejectReason::Saturated, data });
+        }
+        if let Some(bucket) = self.bucket.as_mut() {
+            if !bucket.admit(born_tick, rows as u64) {
+                self.stats.rejected_rate.inc();
+                return Ok(SubmitVerdict::Rejected { reason: RejectReason::RateLimited, data });
+            }
+        }
         let seq = self.seq;
         // Hold the gate shared across the enqueue: shutdown's exclusive
         // acquire then strictly orders this request ahead of the close
-        // marker, so an `Ok` here guarantees a response.
+        // marker, so an `Ok` here guarantees a terminal response.
         let gate = self.gate.read().expect("gate lock");
         ensure!(!*gate, "server is shut down");
         self.req_tx
-            .send(Inbound::Req(Request { client: self.id, seq, data, born: Instant::now() }))
+            .send(Inbound::Req(Request {
+                client: self.id,
+                seq,
+                data,
+                born: Instant::now(),
+                born_tick,
+                deadline_ticks,
+            }))
             .map_err(|_| anyhow!("server is shut down"))?;
         drop(gate);
         self.seq += 1;
         self.stats.submitted.inc();
         self.stats.queue_depth.add(1);
-        Ok(seq)
+        Ok(SubmitVerdict::Accepted(seq))
     }
 
     /// Next response if one is ready (non-blocking).
     pub fn poll(&mut self) -> Option<Response> {
-        self.resp_rx.try_recv().ok()
+        self.chan.try_recv()
     }
 
-    /// Next response, blocking until served.
+    /// Next response, blocking until served (or the server is gone and
+    /// the queue is drained).
     pub fn recv(&mut self) -> Result<Response> {
-        self.resp_rx
+        self.chan
             .recv()
-            .map_err(|_| anyhow!("server closed before responding"))
+            .ok_or_else(|| anyhow!("server closed before responding"))
+    }
+
+    /// [`ServingClient::recv`] with a wall-clock cap: `None` on timeout
+    /// or a drained, closed queue (the chaos harness counts either as a
+    /// loss instead of hanging the suite).
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Option<Response> {
+        self.chan.recv_timeout(timeout)
+    }
+}
+
+impl Drop for ServingClient {
+    fn drop(&mut self) {
+        // Close our end (future pushes get `Gone` and tombstone the
+        // table slot) and reclaim the queued payload buffers. The chan
+        // lock is released before touching the pool — the push path
+        // locks pool → table → chan, so taking pool while holding chan
+        // would invert the order.
+        let drained = self.chan.close();
+        if !drained.is_empty() {
+            let mut pool = self.pool.lock().expect("edge pool lock");
+            for t in drained {
+                pool.recycle(t);
+            }
+        }
     }
 }
 
@@ -899,7 +1547,41 @@ pub fn drive_and_verify(
     count: usize,
     window: usize,
 ) -> Result<Vec<u64>> {
-    let mut per_version = vec![0u64; expected.len()];
+    let report = drive_and_verify_shed(cl, inputs, expected, pick, count, window, |_| false)?;
+    Ok(report.per_version)
+}
+
+/// What [`drive_and_verify_shed`] observed (every entry verified).
+#[derive(Clone, Debug, Default)]
+pub struct DriveReport {
+    /// Payload responses per weight epoch (each bitwise-verified).
+    pub per_version: Vec<u64>,
+    /// Seqs that came back as shed notices, in receive order (each
+    /// permitted by the caller's `may_shed` policy).
+    pub shed: Vec<u64>,
+    /// Payload responses tagged [`Status::Late`] (still bitwise-exact).
+    pub late: u64,
+}
+
+/// [`drive_and_verify`] under a shedding policy — the chaos/soak
+/// scenarios reuse this instead of forking a fifth harness. `may_shed`
+/// says which seqs are *allowed* to come back as shed notices (`|_|
+/// false` reproduces the strict harness exactly); the report records
+/// which actually did. Shed or not, every response must arrive in
+/// per-client FIFO order with a gapless seq stream, and every payload
+/// must be bitwise equal to its pinned epoch's oracle — `Late` tags are
+/// observational and change neither ordering nor payload checks.
+pub fn drive_and_verify_shed(
+    cl: &mut ServingClient,
+    inputs: &[Tensor],
+    expected: &[Vec<Tensor>],
+    pick: impl Fn(usize) -> usize,
+    count: usize,
+    window: usize,
+    may_shed: impl Fn(u64) -> bool,
+) -> Result<DriveReport> {
+    let mut report =
+        DriveReport { per_version: vec![0u64; expected.len()], shed: Vec::new(), late: 0 };
     let mut last_version = 0u64;
     let mut next_recv = 0usize;
     for i in 0..count {
@@ -908,25 +1590,26 @@ pub fn drive_and_verify(
         x.copy_from(&inputs[j]);
         cl.submit(x)?;
         while i + 1 - next_recv > window {
-            verify_next(cl, expected, next_recv, pick(next_recv), &mut per_version, &mut last_version)?;
+            verify_next(cl, expected, next_recv, pick(next_recv), &may_shed, &mut report, &mut last_version)?;
             next_recv += 1;
         }
     }
     while next_recv < count {
-        verify_next(cl, expected, next_recv, pick(next_recv), &mut per_version, &mut last_version)?;
+        verify_next(cl, expected, next_recv, pick(next_recv), &may_shed, &mut report, &mut last_version)?;
         next_recv += 1;
     }
-    Ok(per_version)
+    Ok(report)
 }
 
 /// One in-order receive + full response validation for
-/// [`drive_and_verify`].
+/// [`drive_and_verify_shed`].
 fn verify_next(
     cl: &mut ServingClient,
     expected: &[Vec<Tensor>],
     i: usize,
     j: usize,
-    per_version: &mut [u64],
+    may_shed: &impl Fn(u64) -> bool,
+    report: &mut DriveReport,
     last_version: &mut u64,
 ) -> Result<()> {
     let r = cl.recv()?;
@@ -936,6 +1619,15 @@ fn verify_next(
         cl.id(),
         r.seq
     );
+    if let Some(reason) = r.shed() {
+        ensure!(
+            may_shed(r.seq),
+            "client {}: request {i} was shed ({reason:?}) but the policy expected it served",
+            cl.id()
+        );
+        report.shed.push(r.seq);
+        return Ok(());
+    }
     let v = r.version as usize;
     ensure!(v < expected.len(), "client {}: unknown weight epoch {v}", cl.id());
     ensure!(
@@ -952,7 +1644,10 @@ fn verify_next(
          sequential oracle (torn or wrong weights)",
         cl.id()
     );
-    per_version[v] += 1;
+    if r.status == Status::Late {
+        report.late += 1;
+    }
+    report.per_version[v] += 1;
     cl.recycle(r.data);
     Ok(())
 }
@@ -966,15 +1661,66 @@ struct BatcherCtx {
     free_rx: Receiver<Packet>,
     version: Arc<Mutex<Arc<ModelVersion>>>,
     pool: Arc<Mutex<BufferPool>>,
+    resp_txs: Arc<Mutex<Vec<Option<RespChan>>>>,
+    clock: Arc<AtomicU64>,
+    adapt_state: Arc<Mutex<(usize, u64)>>,
     stats: Counters,
     max_batch: usize,
     in_dim: usize,
 }
 
+/// Best-effort delivery of a payload-free terminal notice; a gone
+/// client tombstones its slot. The shed counters — not `dropped` —
+/// account for the request either way (a notice carries no buffer).
+fn deliver_notice(txs: &mut [Option<RespChan>], notice: Response) {
+    let idx = notice.client as usize;
+    if let Some(slot) = txs.get_mut(idx) {
+        let gone = match slot {
+            Some(chan) => matches!(chan.push(notice), PushOutcome::Gone(_)),
+            None => false,
+        };
+        if gone {
+            *slot = None;
+        }
+    }
+}
+
 impl BatcherCtx {
+    /// Terminate every request in `reqs` with a shed notice: count it,
+    /// retire its queue-depth slot, recycle its input buffer, deliver a
+    /// payload-free terminal response. Drains `reqs`.
+    fn shed_all(&self, reqs: &mut Vec<Request>, reason: ShedReason) {
+        if reqs.is_empty() {
+            return;
+        }
+        let epoch = self.version.lock().expect("version lock").epoch;
+        let mut pool = self.pool.lock().expect("edge pool lock");
+        let mut txs = self.resp_txs.lock().expect("client table lock");
+        for req in reqs.drain(..) {
+            match reason {
+                ShedReason::Deadline => self.stats.shed_deadline.inc(),
+                ShedReason::Shutdown => self.stats.shed_shutdown.inc(),
+                ShedReason::Backpressure => self.stats.shed_backpressure.inc(),
+            }
+            self.stats.queue_depth.sub(1);
+            let notice = Response {
+                client: req.client,
+                seq: req.seq,
+                version: epoch,
+                data: Tensor::empty(),
+                status: Status::Shed(reason),
+            };
+            pool.recycle(req.data);
+            deliver_notice(&mut txs, notice);
+        }
+    }
+
     /// Materialize one coalesced batch into a (recycled) packet and send
     /// it downstream, draining `reqs` (the batcher's reused scratch).
-    /// `false` when the pipeline is gone.
+    /// `false` when the pipeline is gone — in which case every routed
+    /// request was already terminated with an explicit `Shutdown` shed
+    /// notice (no accepted request ever silently vanishes with a
+    /// packet).
     fn emit(&self, reqs: &mut Vec<Request>) -> bool {
         let version = self.version.lock().expect("version lock").clone();
         let mut p = match self.free_rx.try_recv() {
@@ -1002,6 +1748,8 @@ impl BatcherCtx {
                     seq: req.seq,
                     rows,
                     born: req.born,
+                    born_tick: req.born_tick,
+                    deadline_ticks: req.deadline_ticks,
                 });
                 offset += rows;
                 pool.recycle(req.data);
@@ -1015,19 +1763,58 @@ impl BatcherCtx {
         p.occupied = offset;
         self.stats.batches.inc();
         self.stats.rows.add(offset as u64);
-        self.tx0.send(p).is_ok()
+        match self.tx0.send(p) {
+            Ok(()) => true,
+            Err(std::sync::mpsc::SendError(mut p)) => {
+                // A stage died and tore the channel down: the packet (and
+                // its routed requests) came back to us. Convert every
+                // route into an explicit Shutdown shed notice — this was
+                // the PR-5 silent-drop path.
+                let epoch = p.version.epoch;
+                let mut txs = self.resp_txs.lock().expect("client table lock");
+                for route in p.routes.drain(..) {
+                    self.stats.shed_shutdown.inc();
+                    self.stats.queue_depth.sub(1);
+                    deliver_notice(
+                        &mut txs,
+                        Response {
+                            client: route.client,
+                            seq: route.seq,
+                            version: epoch,
+                            data: Tensor::empty(),
+                            status: Status::Shed(ShedReason::Shutdown),
+                        },
+                    );
+                }
+                false
+            }
+        }
     }
 }
 
-fn batcher_loop(
-    rx: Receiver<Inbound>,
-    ctx: BatcherCtx,
+/// Immutable batcher knobs bundled at spawn time.
+struct BatcherTuning {
     max_wait_ticks: u64,
     shrink_under: usize,
-    closing: Arc<AtomicBool>,
-) {
-    let mut co = Coalescer::with_shrink(ctx.max_batch, max_wait_ticks, shrink_under);
+    /// `Some` iff `ServerConfig::adaptive` (the controller lives on the
+    /// batcher thread — no shared mutable state on the hot path).
+    adaptive: Option<AimdBatchControl>,
+}
+
+/// How many batcher iterations between AIMD observations: long enough
+/// to see a latency window, short enough to react within milliseconds.
+const ADAPT_EVERY: u64 = 32;
+
+fn batcher_loop(rx: Receiver<Inbound>, ctx: BatcherCtx, tune: BatcherTuning, closing: Arc<AtomicBool>) {
+    let mut co = Coalescer::with_shrink(ctx.max_batch, tune.max_wait_ticks, tune.shrink_under);
     let mut scratch: Vec<Request> = Vec::new();
+    let mut expired: Vec<Request> = Vec::new();
+    let mut ctl = tune.adaptive;
+    let mut last_hist = ctx.stats.latency.snapshot();
+    let mut iters: u64 = 0;
+    // Set on pipeline teardown (a stage died): everything still in hand
+    // must be shed, not emitted.
+    let mut torn = false;
     'serve: loop {
         // Fallback exit for drop-without-shutdown (no marker was sent):
         // checked every iteration, so even sustained traffic — where
@@ -1048,10 +1835,36 @@ fn batcher_loop(
                 Err(_) => break,
             }
         }
+        ctx.clock.store(co.now(), Ordering::Release);
+        // Deadline shedding happens BEFORE batch formation, decided
+        // purely on the coalescer's tick clock (never wall time): an
+        // expired request costs a notice, not pipeline capacity.
+        if co.shed_expired(&mut expired) > 0 {
+            ctx.shed_all(&mut expired, ShedReason::Deadline);
+        }
         while let Some(reason) = co.take_ready_into_reason(false, &mut scratch) {
             ctx.stats.mark_flush(reason);
             if !ctx.emit(&mut scratch) {
-                return;
+                torn = true;
+                break 'serve;
+            }
+            ctx.clock.store(co.now(), Ordering::Release);
+        }
+        // p99-driven AIMD adaptation over the *windowed* latency
+        // histogram (consecutive snapshot diffs — recent requests, not
+        // full history). Off by default; the controller only ever moves
+        // limits within the configured clamps.
+        iters += 1;
+        if let Some(c) = ctl.as_mut() {
+            if iters % ADAPT_EVERY == 0 {
+                let hist = ctx.stats.latency.snapshot();
+                let window = hist.since(&last_hist);
+                if window.count > 0 {
+                    let (batch, wait) = c.observe(window.quantile_ns(0.99));
+                    co.set_limits(batch, wait);
+                    *ctx.adapt_state.lock().expect("adapt state lock") = (batch, wait);
+                }
+                last_hist = hist;
             }
         }
     }
@@ -1065,11 +1878,36 @@ fn batcher_loop(
             _ => break,
         }
     }
-    while let Some(reason) = co.take_ready_into_reason(true, &mut scratch) {
-        ctx.stats.mark_flush(reason);
-        if !ctx.emit(&mut scratch) {
-            return;
+    ctx.clock.store(co.now(), Ordering::Release);
+    if !torn {
+        // Drain-or-shed: expired requests shed, everything else force-
+        // emitted through the still-live pipeline.
+        if co.shed_expired(&mut expired) > 0 {
+            ctx.shed_all(&mut expired, ShedReason::Deadline);
         }
+        while let Some(reason) = co.take_ready_into_reason(true, &mut scratch) {
+            ctx.stats.mark_flush(reason);
+            if !ctx.emit(&mut scratch) {
+                torn = true;
+                break;
+            }
+        }
+    }
+    if torn {
+        // The pipeline died under us: no downstream thread will ever
+        // answer, so terminate every request still in hand with an
+        // explicit Shutdown notice (emit already shed the ones routed
+        // into its failed packet). One last channel sweep catches
+        // requests that raced in while we were shedding; later submits
+        // fail on the disconnected channel once `rx` drops.
+        co.drain_all(&mut scratch);
+        loop {
+            match rx.try_recv() {
+                Ok(Inbound::Req(req)) => scratch.push(req),
+                _ => break,
+            }
+        }
+        ctx.shed_all(&mut scratch, ShedReason::Shutdown);
     }
 }
 
@@ -1079,8 +1917,19 @@ fn stage_loop(
     rx: Receiver<Packet>,
     tx: SyncSender<Packet>,
     fail: Arc<Mutex<Option<String>>>,
+    mut fault: Option<Rng>,
+    stats: Counters,
 ) {
     while let Ok(mut p) = rx.recv() {
+        // Chaos hook (`fault_stall_seed`): a seeded, time-only stall
+        // between packets. Reorders nothing, touches no data — the
+        // survival invariants must hold under arbitrary stage timing.
+        if let Some(rng) = fault.as_mut() {
+            if rng.chance(0.25) {
+                stats.faults.inc();
+                std::thread::sleep(Duration::from_micros(100 + rng.below(900)));
+            }
+        }
         // Span slot: the OS thread name ("serve-stage-{s}") keys the
         // aggregate, so each stage reports separately without an
         // explicit set_thread_name.
@@ -1106,21 +1955,23 @@ fn stage_loop(
 
 struct CollectorCtx {
     free_tx: SyncSender<Packet>,
-    resp_txs: Arc<Mutex<Vec<Option<Sender<Response>>>>>,
+    resp_txs: Arc<Mutex<Vec<Option<RespChan>>>>,
     pool: Arc<Mutex<BufferPool>>,
+    clock: Arc<AtomicU64>,
     stats: Counters,
     out_dim: usize,
 }
 
 fn collector_loop(rx: Receiver<Packet>, ctx: CollectorCtx) {
     while let Ok(mut p) = rx.recv() {
+        let now_tick = ctx.clock.load(Ordering::Acquire);
         let mut offset = 0usize;
         // One pool guard and one client-table guard per *packet*, not
-        // per route: the unbounded sends never block, so holding both
-        // across the batch is cheap and halves the hot-path lock
-        // traffic contending with client take()/recycle(). Lock order
-        // (pool, then table) is unique to this function — no other
-        // thread ever holds both.
+        // per route: the bounded-queue pushes never block (shed-oldest,
+        // not wait), so holding both across the batch is cheap and
+        // halves the hot-path lock traffic contending with client
+        // take()/recycle(). Lock order (pool → table → chan) is unique
+        // to this path — no other thread locks downward from a chan.
         {
             let mut pool = ctx.pool.lock().expect("edge pool lock");
             let mut txs = ctx.resp_txs.lock().expect("client table lock");
@@ -1135,21 +1986,41 @@ fn collector_loop(rx: Receiver<Packet>, ctx: CollectorCtx) {
                 out.data_mut()[..n]
                     .copy_from_slice(&p.data.data()[offset * ctx.out_dim..offset * ctx.out_dim + n]);
                 offset += route.rows;
+                // Tick-measured late tag — observational only: the
+                // payload still ships and is still bitwise-exact.
+                let status = if route.deadline_ticks > 0
+                    && now_tick.saturating_sub(route.born_tick) > route.deadline_ticks
+                {
+                    Status::Late
+                } else {
+                    Status::Ok
+                };
                 let resp = Response {
                     client: route.client,
                     seq: route.seq,
                     version: p.version.epoch,
                     data: out,
+                    status,
                 };
                 let idx = route.client as usize;
                 match txs.get(idx).and_then(|slot| slot.clone()) {
-                    Some(tx) => match tx.send(resp) {
-                        Ok(()) => {
+                    Some(chan) => match chan.push(resp) {
+                        PushOutcome::Delivered { shed_payload } => {
                             ctx.stats.completed.inc();
+                            if status == Status::Late {
+                                ctx.stats.late.inc();
+                            }
+                            if let Some(t) = shed_payload {
+                                // Bounded-queue backpressure: the oldest
+                                // buffered payload was stripped to a
+                                // notice; reclaim its buffer.
+                                ctx.stats.shed_backpressure.inc();
+                                pool.recycle(t);
+                            }
                         }
-                        Err(std::sync::mpsc::SendError(resp)) => {
+                        PushOutcome::Gone(resp) => {
                             // Client handle dropped: reclaim the buffer
-                            // and tombstone the slot, freeing its channel.
+                            // and tombstone the slot.
                             pool.recycle(resp.data);
                             txs[idx] = None;
                             ctx.stats.dropped.inc();
@@ -1166,6 +2037,14 @@ fn collector_loop(rx: Receiver<Packet>, ctx: CollectorCtx) {
         // Return the packet to the batcher; capacity is sized so this
         // never drops a warm packet in practice.
         let _ = ctx.free_tx.try_send(p);
+    }
+    // No more responses can ever arrive (the batcher sheds rather than
+    // sends once the pipeline is torn, and its sheds happen-before our
+    // exit in the orderly path): wake every client blocked in recv so
+    // it drains its queue and gets a clean disconnect.
+    let txs = ctx.resp_txs.lock().expect("client table lock");
+    for chan in txs.iter().flatten() {
+        chan.mark_done();
     }
 }
 
@@ -1188,7 +2067,18 @@ mod tests {
     }
 
     fn req(rows: usize, seq: u64) -> Request {
-        Request { client: 0, seq, data: Tensor::zeros(&[rows, 1]), born: Instant::now() }
+        req_dl(rows, seq, 0, 0)
+    }
+
+    fn req_dl(rows: usize, seq: u64, born_tick: u64, deadline_ticks: u64) -> Request {
+        Request {
+            client: 0,
+            seq,
+            data: Tensor::zeros(&[rows, 1]),
+            born: Instant::now(),
+            born_tick,
+            deadline_ticks,
+        }
     }
 
     #[test]
@@ -1287,7 +2177,14 @@ mod tests {
         let net = tiny_net(5);
         let mut oracle = net.snapshot().unwrap();
         let be = HostBackend::new();
-        let cfg = ServerConfig { max_batch: 6, max_wait_ticks: 1, shrink_under: 0, queue_depth: 16, stages: 2 };
+        let cfg = ServerConfig {
+            max_batch: 6,
+            max_wait_ticks: 1,
+            shrink_under: 0,
+            queue_depth: 16,
+            stages: 2,
+            ..ServerConfig::default()
+        };
         let server = Server::start(host(), &net, &cfg).unwrap();
         assert_eq!(server.partition().stages(), 2);
         let mut cl = server.client();
@@ -1328,7 +2225,14 @@ mod tests {
         let net1 = tiny_net(6);
         let mut oracle1 = net1.snapshot().unwrap();
         let be = HostBackend::new();
-        let cfg = ServerConfig { max_batch: 4, max_wait_ticks: 0, shrink_under: 0, queue_depth: 8, stages: 1 };
+        let cfg = ServerConfig {
+            max_batch: 4,
+            max_wait_ticks: 0,
+            shrink_under: 0,
+            queue_depth: 8,
+            stages: 1,
+            ..ServerConfig::default()
+        };
         let server = Server::start(host(), &net0, &cfg).unwrap();
         assert_eq!(server.epoch(), 0);
         assert_eq!(server.reload(&net1).unwrap(), 1);
@@ -1362,7 +2266,14 @@ mod tests {
         let path = path.to_str().unwrap().to_string();
         save_network(&net1, &path).unwrap();
 
-        let cfg = ServerConfig { max_batch: 4, max_wait_ticks: 0, shrink_under: 0, queue_depth: 8, stages: 2 };
+        let cfg = ServerConfig {
+            max_batch: 4,
+            max_wait_ticks: 0,
+            shrink_under: 0,
+            queue_depth: 8,
+            stages: 2,
+            ..ServerConfig::default()
+        };
         let server = Server::start(host(), &net0, &cfg).unwrap();
         assert_eq!(server.reload_from_file(&path).unwrap(), 1);
         let mut cl = server.client();
@@ -1382,7 +2293,14 @@ mod tests {
     #[test]
     fn reload_rejects_architecture_mismatch() {
         let net = tiny_net(5);
-        let cfg = ServerConfig { max_batch: 2, max_wait_ticks: 0, shrink_under: 0, queue_depth: 4, stages: 1 };
+        let cfg = ServerConfig {
+            max_batch: 2,
+            max_wait_ticks: 0,
+            shrink_under: 0,
+            queue_depth: 4,
+            stages: 1,
+            ..ServerConfig::default()
+        };
         let server = Server::start(host(), &net, &cfg).unwrap();
         let other_cfg =
             ModelConfig { batch: 8, input_dim: 12, hidden_dim: 11, classes: 4, layers: 3, init_scale: 1.0 };
@@ -1395,7 +2313,14 @@ mod tests {
     #[test]
     fn submit_validates_shapes_and_errors_after_shutdown() {
         let net = tiny_net(5);
-        let cfg = ServerConfig { max_batch: 4, max_wait_ticks: 0, shrink_under: 0, queue_depth: 4, stages: 1 };
+        let cfg = ServerConfig {
+            max_batch: 4,
+            max_wait_ticks: 0,
+            shrink_under: 0,
+            queue_depth: 4,
+            stages: 1,
+            ..ServerConfig::default()
+        };
         let server = Server::start(host(), &net, &cfg).unwrap();
         let mut cl = server.client();
         assert!(cl.submit(Tensor::zeros(&[2, 11])).is_err(), "wrong width");
@@ -1413,7 +2338,14 @@ mod tests {
         let net = tiny_net(5);
         // Large wait budget: without the shutdown drain these would sit
         // in a partial batch forever.
-        let cfg = ServerConfig { max_batch: 8, max_wait_ticks: 1_000_000, shrink_under: 0, queue_depth: 8, stages: 2 };
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_wait_ticks: 1_000_000,
+            shrink_under: 0,
+            queue_depth: 8,
+            stages: 2,
+            ..ServerConfig::default()
+        };
         let server = Server::start(host(), &net, &cfg).unwrap();
         let mut cl = server.client();
         let x = Tensor::randn(&[2, 12], 1.0, &mut Rng::new(4));
@@ -1423,5 +2355,266 @@ mod tests {
         assert_eq!(stats.completed, 2, "shutdown must flush the partial batch");
         assert_eq!(cl.recv().unwrap().seq, 0);
         assert_eq!(cl.recv().unwrap().seq, 1);
+    }
+
+    #[test]
+    fn token_bucket_enforces_rate_and_burst() {
+        let mut tb = TokenBucket::new(4, 2);
+        // Starts full: burst of 4 spends down to zero.
+        assert!(tb.admit(0, 3));
+        assert!(tb.admit(0, 1));
+        assert!(!tb.admit(0, 1), "burst exhausted within a tick");
+        assert_eq!(tb.tokens(), 0);
+        // One elapsed tick refills `refill_per_tick`.
+        assert!(tb.admit(1, 2));
+        assert!(!tb.admit(1, 1));
+        // A long gap refills at most `capacity`.
+        assert!(tb.admit(100, 4));
+        assert!(!tb.admit(100, 1));
+        // A stale (non-monotonic) tick refills nothing.
+        assert!(!tb.admit(50, 1));
+        // …and does not corrupt the high-water mark.
+        assert!(tb.admit(101, 2));
+    }
+
+    #[test]
+    fn aimd_controller_converges_within_clamps() {
+        let mut ctl = AimdBatchControl::new(2, 32, 1, 8, 2_000_000);
+        assert_eq!(ctl.limits(), (32, 8), "starts at the configured ceiling");
+        // Sustained pressure: multiplicative decrease to the floor.
+        for _ in 0..64 {
+            let (b, w) = ctl.observe(10_000_000);
+            assert!((2..=32).contains(&b) && (1..=8).contains(&w), "clamps hold every step");
+        }
+        assert_eq!(ctl.limits(), (2, 1), "converges to the floor under pressure");
+        // Sustained headroom: additive increase back to the ceiling.
+        for _ in 0..64 {
+            let (b, w) = ctl.observe(100_000);
+            assert!((2..=32).contains(&b) && (1..=8).contains(&w), "clamps hold every step");
+        }
+        assert_eq!(ctl.limits(), (32, 8), "recovers to the ceiling when idle");
+    }
+
+    #[test]
+    fn coalescer_sheds_expired_requests_deterministically() {
+        let mut co = Coalescer::new(8, 1_000_000);
+        let t0 = co.now();
+        co.push(req_dl(1, 0, t0, 2));
+        co.push(req_dl(1, 1, t0, 0)); // deadline 0: never expires
+        co.push(req_dl(1, 2, t0, 5));
+        let mut out = Vec::new();
+        assert_eq!(co.shed_expired(&mut out), 0);
+        co.tick();
+        assert_eq!(co.shed_expired(&mut out), 0, "one tick short of the deadline");
+        co.tick();
+        assert_eq!(co.shed_expired(&mut out), 1, "expires exactly at deadline_ticks");
+        assert_eq!(out[0].seq, 0);
+        co.tick();
+        co.tick();
+        co.tick();
+        assert_eq!(co.shed_expired(&mut out), 1);
+        assert_eq!(out[1].seq, 2);
+        for _ in 0..100 {
+            co.tick();
+        }
+        assert_eq!(co.shed_expired(&mut out), 0, "deadline 0 must never expire");
+        assert_eq!(co.pending_rows(), 1);
+        // The tick clock also advances when a batch is emitted, so
+        // deadlines keep maturing under saturation (no idle ticks).
+        let mut co = Coalescer::new(2, 1_000_000);
+        let t0 = co.now();
+        co.push(req(2, 0));
+        assert_eq!(co.take_ready_into_reason(false, &mut out), Some(FlushReason::Full));
+        assert_eq!(co.now(), t0 + 1, "emitting a batch advances the clock");
+    }
+
+    #[test]
+    fn shutdown_same_tick_submits_get_terminal_responses() {
+        let net = tiny_net(5);
+        let mut oracle = net.snapshot().unwrap();
+        let be = HostBackend::new();
+        // Large wait budget: these requests are still queued in the
+        // coalescer when shutdown lands.
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_wait_ticks: 1_000_000,
+            shrink_under: 0,
+            queue_depth: 8,
+            stages: 2,
+            ..ServerConfig::default()
+        };
+        let server = Server::start(host(), &net, &cfg).unwrap();
+        let mut cl = server.client();
+        let mut rng = Rng::new(11);
+        let xs: Vec<Tensor> = (0..3).map(|_| Tensor::randn(&[1, 12], 1.0, &mut rng)).collect();
+        for x in &xs {
+            cl.submit(x.clone()).unwrap();
+        }
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.submitted, 3);
+        assert_eq!(
+            stats.completed + stats.shed_shutdown + stats.shed_deadline,
+            3,
+            "every accepted request gets exactly one terminal event"
+        );
+        assert_eq!(stats.queue_depth, 0, "no request left in limbo");
+        for (i, x) in xs.iter().enumerate() {
+            let r = cl.recv().expect("terminal response, never a silent drop");
+            assert_eq!(r.seq, i as u64, "terminal events stay in FIFO order");
+            match r.status {
+                Status::Shed(ShedReason::Shutdown) => assert_eq!(r.data, Tensor::empty()),
+                _ => {
+                    assert_eq!(r.data, oracle.forward_full(&be, x).unwrap());
+                    cl.recycle(r.data);
+                }
+            }
+        }
+        assert!(cl.recv().is_err(), "exactly one terminal event per request");
+    }
+
+    #[test]
+    fn deadline_expiry_sheds_before_batch_formation() {
+        let net = tiny_net(5);
+        // Wait budget far beyond the deadline: without deadline shedding
+        // this request would sit in a partial batch until shutdown.
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_wait_ticks: 1_000_000,
+            shrink_under: 0,
+            queue_depth: 8,
+            stages: 1,
+            deadline_ticks: 2,
+            ..ServerConfig::default()
+        };
+        let server = Server::start(host(), &net, &cfg).unwrap();
+        let mut cl = server.client();
+        cl.submit(Tensor::randn(&[1, 12], 1.0, &mut Rng::new(2))).unwrap();
+        let r = cl.recv().unwrap();
+        assert_eq!(r.seq, 0);
+        assert_eq!(r.status, Status::Shed(ShedReason::Deadline));
+        assert_eq!(r.data, Tensor::empty(), "no payload was ever computed");
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.shed_deadline, 1);
+        assert_eq!(stats.completed, 0);
+        assert_eq!(stats.queue_depth, 0);
+    }
+
+    #[test]
+    fn backpressure_strips_oldest_payload_with_notice() {
+        let net = tiny_net(5);
+        let mut oracle = net.snapshot().unwrap();
+        let be = HostBackend::new();
+        let cfg = ServerConfig {
+            max_batch: 1, // every submit forms its own batch immediately
+            max_wait_ticks: 0,
+            shrink_under: 0,
+            queue_depth: 8,
+            stages: 1,
+            client_queue_cap: 2,
+            ..ServerConfig::default()
+        };
+        let server = Server::start(host(), &net, &cfg).unwrap();
+        let mut cl = server.client();
+        let mut rng = Rng::new(13);
+        let xs: Vec<Tensor> = (0..5).map(|_| Tensor::randn(&[1, 12], 1.0, &mut rng)).collect();
+        for x in &xs {
+            cl.submit(x.clone()).unwrap();
+        }
+        // Let all five complete while the client reads nothing: the
+        // bounded queue must strip the three oldest payloads in place.
+        while server.stats().completed < 5 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        for (i, x) in xs.iter().enumerate() {
+            let r = cl.poll().expect("notice or payload for every request");
+            assert_eq!(r.seq, i as u64, "stripping must not reorder the stream");
+            if i < 3 {
+                assert_eq!(r.status, Status::Shed(ShedReason::Backpressure));
+                assert_eq!(r.data, Tensor::empty());
+            } else {
+                assert_eq!(r.status, Status::Ok);
+                assert_eq!(r.data, oracle.forward_full(&be, x).unwrap());
+                cl.recycle(r.data);
+            }
+        }
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.completed, 5, "strips happen after completion");
+        assert_eq!(stats.shed_backpressure, 3);
+        assert_eq!(stats.queue_depth, 0);
+    }
+
+    #[test]
+    fn admission_rate_limit_rejects_and_accounts() {
+        let net = tiny_net(5);
+        let cfg = ServerConfig {
+            max_batch: 4,
+            max_wait_ticks: 0,
+            shrink_under: 0,
+            queue_depth: 8,
+            stages: 1,
+            admit_rate: 1,
+            admit_burst: 1,
+            ..ServerConfig::default()
+        };
+        let server = Server::start(host(), &net, &cfg).unwrap();
+        let mut cl = server.client();
+        let (mut accepted, mut rejected) = (0u64, 0u64);
+        for _ in 0..32 {
+            match cl.submit_with(Tensor::zeros(&[1, 12]), 0).unwrap() {
+                SubmitVerdict::Accepted(seq) => {
+                    assert_eq!(seq, accepted, "rejections must not consume seq numbers");
+                    accepted += 1;
+                }
+                SubmitVerdict::Rejected { reason, data } => {
+                    assert_eq!(reason, RejectReason::RateLimited);
+                    rejected += 1;
+                    cl.recycle(data);
+                }
+            }
+        }
+        assert!(accepted >= 1, "a full bucket admits the first request");
+        assert!(rejected >= 1, "a tight loop must outrun refill at 1 row/tick");
+        for i in 0..accepted {
+            let r = cl.recv().unwrap();
+            assert_eq!(r.seq, i, "accepted stream stays gapless FIFO");
+            cl.recycle(r.data);
+        }
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.submitted, accepted, "rejected requests never count as submitted");
+        assert_eq!(stats.rejected_rate, rejected);
+        assert_eq!(stats.rejected_budget, 0);
+    }
+
+    #[test]
+    fn admission_budget_rejects_when_saturated() {
+        let net = tiny_net(5);
+        // Wait budget keeps the first request in flight indefinitely, so
+        // the second submit deterministically finds the budget spent.
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_wait_ticks: 1_000_000,
+            shrink_under: 0,
+            queue_depth: 8,
+            stages: 1,
+            inflight_cap: 1,
+            ..ServerConfig::default()
+        };
+        let server = Server::start(host(), &net, &cfg).unwrap();
+        let mut cl = server.client();
+        match cl.submit_with(Tensor::zeros(&[1, 12]), 0).unwrap() {
+            SubmitVerdict::Accepted(0) => {}
+            v => panic!("first request must be admitted, got {v:?}"),
+        }
+        match cl.submit_with(Tensor::zeros(&[1, 12]), 0).unwrap() {
+            SubmitVerdict::Rejected { reason: RejectReason::Saturated, data } => cl.recycle(data),
+            v => panic!("budget must reject the second request, got {v:?}"),
+        }
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.submitted, 1);
+        assert_eq!(stats.rejected_budget, 1);
+        assert_eq!(stats.rejected_rate, 0);
+        assert_eq!(stats.completed + stats.shed_shutdown, 1, "the admitted request terminates");
+        let r = cl.recv().unwrap();
+        assert_eq!(r.seq, 0);
     }
 }

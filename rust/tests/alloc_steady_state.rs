@@ -254,7 +254,13 @@ fn steady_state_iterations_allocate_near_zero() {
         let server = Server::start(
             backend,
             &net,
-            &ServerConfig { max_batch: 8, max_wait_ticks: 0, shrink_under: 0, queue_depth: 16, stages: 2 },
+            &ServerConfig {
+                max_batch: 8,
+                max_wait_ticks: 0,
+                queue_depth: 16,
+                stages: 2,
+                ..ServerConfig::default()
+            },
         )
         .unwrap();
         let mut cl = server.client();

@@ -198,6 +198,32 @@ fn ring_report_accounting_is_consistent() {
     });
 }
 
+/// Chaos hook: `LAYERPIPE2_FAULT_RING=<seed>` makes every ring
+/// participant inject short seeded stalls at the top of its link phase.
+/// Stalls reorder *time*, never data — the lockstep protocol and
+/// ordered channels mean the final weights must stay bitwise identical
+/// to the un-faulted oracle. (If the hook leaks into a concurrently
+/// running ring test, that test's invariants still hold for the same
+/// reason; the stalls only slow it down.)
+#[test]
+fn injected_ring_stalls_never_change_weights() {
+    let cfg = dense_cfg();
+    let data = teacher_dataset(&cfg.model, &cfg.data);
+    let kind = StrategyKind::PipelineAwareEma;
+    let oracle = run(&cfg, kind, 2, 4, &data);
+    let before = layerpipe2::obs::counter("ring/faults_injected").value();
+    std::env::set_var(layerpipe2::replica::FAULT_RING_ENV, "1234");
+    let faulted = run(&cfg, kind, 2, 4, &data);
+    std::env::remove_var(layerpipe2::replica::FAULT_RING_ENV);
+    let injected = layerpipe2::obs::counter("ring/faults_injected").value() - before;
+    assert!(injected > 0, "fault hook armed but never fired");
+    assert_eq!(faulted.iterations, oracle.iterations);
+    assert!(
+        bits_equal(&faulted.final_weights, &oracle.final_weights),
+        "injected stalls changed the final weights (determinism broken)"
+    );
+}
+
 /// Invalid ring shapes are rejected up front, not mid-run.
 #[test]
 fn ring_config_rejects_bad_shapes() {

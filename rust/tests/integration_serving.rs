@@ -66,7 +66,13 @@ fn conv_spec() -> NetworkSpec {
 fn stress_one(name: &str, spec: &NetworkSpec, stages: usize) {
     let net = Network::build(spec, &mut Rng::new(11)).unwrap();
     let in_dim = net.input_dim();
-    let cfg = ServerConfig { max_batch: 8, max_wait_ticks: 1, shrink_under: 0, queue_depth: 32, stages };
+    let cfg = ServerConfig {
+        max_batch: 8,
+        max_wait_ticks: 1,
+        queue_depth: 32,
+        stages,
+        ..ServerConfig::default()
+    };
     let server = Server::start(host(), &net, &cfg).unwrap();
 
     let n_clients = 4usize;
@@ -158,7 +164,13 @@ fn hot_reload_under_load_never_tears_a_version() {
         })
         .collect();
 
-    let cfg = ServerConfig { max_batch: 8, max_wait_ticks: 1, shrink_under: 0, queue_depth: 16, stages: 2 };
+    let cfg = ServerConfig {
+        max_batch: 8,
+        max_wait_ticks: 1,
+        queue_depth: 16,
+        stages: 2,
+        ..ServerConfig::default()
+    };
     let server = Server::start(host(), &versions[0], &cfg).unwrap();
     let m = 48usize;
 
@@ -216,7 +228,13 @@ fn restore_from_disk_roundtrip_serves_identically() {
     let path = path.to_str().unwrap().to_string();
     checkpoint::save_network(&net_a, &path).unwrap();
 
-    let cfg = ServerConfig { max_batch: 4, max_wait_ticks: 0, shrink_under: 0, queue_depth: 8, stages: 2 };
+    let cfg = ServerConfig {
+        max_batch: 4,
+        max_wait_ticks: 0,
+        queue_depth: 8,
+        stages: 2,
+        ..ServerConfig::default()
+    };
     let server = Server::start(host(), &net_a, &cfg).unwrap();
     let mut cl = server.client();
 
@@ -250,7 +268,13 @@ fn rejected_reload_leaves_serving_unaffected() {
     // A reload whose architecture mismatches must fail fast without
     // bumping the epoch or disturbing in-flight traffic.
     let net = Network::build(&dense_spec(), &mut Rng::new(3)).unwrap();
-    let cfg = ServerConfig { max_batch: 4, max_wait_ticks: 0, shrink_under: 0, queue_depth: 8, stages: 2 };
+    let cfg = ServerConfig {
+        max_batch: 4,
+        max_wait_ticks: 0,
+        queue_depth: 8,
+        stages: 2,
+        ..ServerConfig::default()
+    };
     let server = Server::start(host(), &net, &cfg).unwrap();
     let conv = Network::build(&conv_spec(), &mut Rng::new(3)).unwrap();
     assert!(server.reload(&conv).is_err(), "cross-architecture reload must be rejected");

@@ -9,7 +9,7 @@ use layerpipe2::layers::LayerCost;
 use layerpipe2::replica::tree_reduce_into_with_threads;
 use layerpipe2::retiming::{closed_form_lags, insert_pipeline_delays, Retiming, StagePartition};
 use layerpipe2::schedule::{choose_stages, AdaptiveLimits, CostModel};
-use layerpipe2::serving::{Coalescer, Request};
+use layerpipe2::serving::{AimdBatchControl, Coalescer, Request, TokenBucket};
 use layerpipe2::tensor::Tensor;
 use layerpipe2::testing::property;
 use layerpipe2::util::json::Json;
@@ -438,6 +438,8 @@ fn serving_coalescer_never_drops_duplicates_reorders_or_overfills() {
                     seq,
                     data: Tensor::zeros(&[rows, 1]),
                     born: std::time::Instant::now(),
+                    born_tick: 0,
+                    deadline_ticks: 0,
                 });
             }
             drain(&mut co, &mut got, false, &mut ticks_since_take);
@@ -448,6 +450,148 @@ fn serving_coalescer_never_drops_duplicates_reorders_or_overfills() {
             got, expect,
             "case {case}: emitted stream is not the arrival stream (drop/dup/reorder)"
         );
+    });
+}
+
+#[test]
+fn serving_token_bucket_admitted_cost_is_rate_bounded() {
+    // Admission control's pure core: over random (capacity, refill)
+    // configs and random tick sequences — monotonic, repeated, and
+    // stale ticks alike — the total admitted cost can never exceed
+    // `capacity + refill · highest-tick-seen` (the bucket starts full
+    // at tick 0), and the bucket never holds more than `capacity`
+    // tokens. Stale ticks must refill nothing.
+    property(200, |rng, case| {
+        let capacity = 1 + rng.index(16) as u64;
+        let refill = rng.index(4) as u64;
+        let mut tb = TokenBucket::new(capacity, refill);
+        let mut now = 0u64;
+        let mut hi = 0u64;
+        let mut admitted = 0u64;
+        for _ in 0..rng.index(80) {
+            match rng.index(4) {
+                0 => now += rng.index(5) as u64,
+                1 => {} // repeated tick
+                2 => now = now.saturating_sub(rng.index(3) as u64), // stale tick
+                _ => now += 1,
+            }
+            hi = hi.max(now);
+            let cost = 1 + rng.index(6) as u64;
+            if tb.admit(now, cost) {
+                admitted += cost;
+            }
+            assert!(
+                tb.tokens() <= capacity,
+                "case {case}: bucket overfilled ({} > {capacity})",
+                tb.tokens()
+            );
+            assert!(
+                admitted <= capacity + refill * hi,
+                "case {case}: admitted {admitted} tokens exceeds burst {capacity} \
+                 + {refill}/tick over {hi} ticks"
+            );
+        }
+    });
+}
+
+#[test]
+fn serving_deadline_shed_partitions_the_arrival_stream() {
+    // Deadline shedding on the tick clock: under random interleavings
+    // of push / tick / shed_expired / take_ready, every pushed request
+    // leaves the coalescer exactly once — as an emitted batch member or
+    // as shed — each stream individually preserving arrival order, and
+    // a request is shed only when genuinely expired on the tick clock
+    // (`now − born_tick ≥ deadline_ticks`; deadline 0 is never shed).
+    property(150, |rng, case| {
+        let max_batch = 1 + rng.index(6);
+        let max_wait = rng.index(4) as u64;
+        let mut co = Coalescer::new(max_batch, max_wait);
+        let mut emitted: Vec<u64> = Vec::new();
+        let mut shed: Vec<u64> = Vec::new();
+        let mut scratch = Vec::new();
+        let mut seq = 0u64;
+        for _ in 0..rng.index(80) {
+            match rng.index(4) {
+                0 => co.tick(),
+                1 => {
+                    let rows = 1 + rng.index(max_batch);
+                    let deadline = rng.index(6) as u64; // 0 = never expires
+                    co.push(Request {
+                        client: 0,
+                        seq,
+                        data: Tensor::zeros(&[rows, 1]),
+                        born: std::time::Instant::now(),
+                        born_tick: co.now(),
+                        deadline_ticks: deadline,
+                    });
+                    seq += 1;
+                }
+                2 => {
+                    scratch.clear();
+                    co.shed_expired(&mut scratch);
+                    for r in &scratch {
+                        let age = co.now() - r.born_tick;
+                        assert!(
+                            r.deadline_ticks > 0 && age >= r.deadline_ticks,
+                            "case {case}: seq {} shed at age {age} ticks with \
+                             deadline {} — not expired",
+                            r.seq,
+                            r.deadline_ticks
+                        );
+                        shed.push(r.seq);
+                    }
+                }
+                _ => {
+                    if let Some(batch) = co.take_ready(rng.chance(0.2)) {
+                        emitted.extend(batch.iter().map(|r| r.seq));
+                    }
+                }
+            }
+        }
+        scratch.clear();
+        co.drain_all(&mut scratch);
+        emitted.extend(scratch.iter().map(|r| r.seq));
+        let mut all: Vec<u64> = emitted.iter().chain(&shed).copied().collect();
+        all.sort_unstable();
+        let want: Vec<u64> = (0..seq).collect();
+        assert_eq!(all, want, "case {case}: requests lost or duplicated across emit/shed");
+        assert!(
+            emitted.windows(2).all(|w| w[0] < w[1]),
+            "case {case}: emitted stream reordered"
+        );
+        assert!(
+            shed.windows(2).all(|w| w[0] < w[1]),
+            "case {case}: shed stream reordered"
+        );
+    });
+}
+
+#[test]
+fn serving_aimd_limits_never_leave_the_clamps() {
+    // The AIMD controller under arbitrary p99 observations: whatever the
+    // pressure sequence, the returned (batch, wait) limits stay inside
+    // the configured [min, max] clamps, and `limits()` always agrees
+    // with the last `observe()` return.
+    property(200, |rng, case| {
+        let max_batch = 1 + rng.index(32);
+        let min_batch = 1 + rng.index(max_batch);
+        let max_wait = rng.index(16) as u64;
+        let min_wait = rng.index(max_wait as usize + 1) as u64;
+        let target = 1 + rng.index(5_000_000) as u64;
+        let mut ctl = AimdBatchControl::new(min_batch, max_batch, min_wait, max_wait, target);
+        for _ in 0..rng.index(100) {
+            let p99 = rng.index(10_000_000) as u64;
+            let (b, w) = ctl.observe(p99);
+            assert!(
+                (min_batch..=max_batch).contains(&b),
+                "case {case}: batch {b} outside [{min_batch}, {max_batch}]"
+            );
+            assert!(
+                (min_wait..=max_wait).contains(&w),
+                "case {case}: wait {w} outside [{min_wait}, {max_wait}]"
+            );
+            assert_eq!((b, w), ctl.limits(), "case {case}: limits() disagrees with observe()");
+        }
     });
 }
 

@@ -40,6 +40,11 @@ test -s BENCH_kernels.json || { echo "verify: BENCH_kernels.json missing or empt
 grep -q '"mixed_precision"' BENCH_kernels.json \
     || { echo "verify: BENCH_kernels.json lacks the mixed_precision section"; exit 1; }
 test -s BENCH_serving.json || { echo "verify: BENCH_serving.json missing or empty"; exit 1; }
+# The AIMD adaptive-batching section must have run (it carries the in-run
+# bitwise-oracle gate with the controller enabled and the clamp check on
+# the final limits).
+grep -q '"adaptive"' BENCH_serving.json \
+    || { echo "verify: BENCH_serving.json lacks the adaptive section"; exit 1; }
 test -s BENCH_ring.json || { echo "verify: BENCH_ring.json missing or empty"; exit 1; }
 # Observability overhead gate: the HOTPATH-j section must have run and
 # the span-gated dense hot path must stay within 2% of the obs-off
@@ -61,6 +66,22 @@ LAYERPIPE2_SMOKE=1 cargo run --release --example conv_pipeline
 # the sequential forward oracle of the epoch that served it.
 echo "==> serve pipeline example (smoke)"
 LAYERPIPE2_SMOKE=1 cargo run --release --example serve_pipeline
+
+# Chaos/soak smoke: the deterministic fault-injection harness — client
+# churn, slow/dead clients, reload storms, admission saturation and
+# stage-worker stalls — asserting zero lost/duplicated/reordered
+# accepted responses with every payload bitwise equal to its epoch's
+# oracle, and merging the accounting into BENCH_serving.json under
+# "soak" (the bench smoke above rewrites that file, so the soak gate
+# must run after it).
+echo "==> serving chaos soak (smoke)"
+cargo run --release -- soak --smoke
+grep -q '"soak"' BENCH_serving.json \
+    || { echo "verify: BENCH_serving.json lacks the soak section"; exit 1; }
+grep -q '"lost":0' BENCH_serving.json \
+    || { echo "verify: soak reported lost responses"; exit 1; }
+grep -q '"duplicated":0' BENCH_serving.json \
+    || { echo "verify: soak reported duplicated responses"; exit 1; }
 
 # Replica-ring end-to-end smoke: the same pipelined workload trained at
 # 1, 2 and 4 replicas over a fixed shard decomposition, final weights
