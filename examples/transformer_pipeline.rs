@@ -1,0 +1,141 @@
+//! Transformer-style pipelined training, end to end: an
+//! Embedding → [SelfAttention → LayerNorm → Dense] × 2 stack on
+//! token-sequence teacher data, executed by the multi-threaded
+//! `PipelinedTrainer` with stage boundaries chosen by cost-balanced
+//! compute over the new attention/embedding/layernorm `LayerCost`
+//! reports, checked batch-for-batch against the iteration-indexed
+//! `Trainer` oracle for **all five** weight-version strategies.
+//!
+//!     cargo run --release --example transformer_pipeline
+//!     LAYERPIPE2_SMOKE=1 cargo run --release --example transformer_pipeline   # CI smoke
+//!
+//! What it demonstrates:
+//!   1. the `2·S(l)` delay rule generalizes unchanged to attention
+//!      stacks (delays depend only on downstream stage count);
+//!   2. the masked softmax keeps causal attention finite end to end;
+//!   3. threaded execution ≡ the oracle (≤ 1e-4) for every strategy;
+//!   4. the stack actually learns the token-teacher task.
+
+use layerpipe2::backend::{Backend, HostBackend};
+use layerpipe2::config::{DataConfig, ExperimentConfig};
+use layerpipe2::data::{token_teacher_dataset, Splits};
+use layerpipe2::layers::{Feature, LayerSpec, Network, NetworkSpec};
+use layerpipe2::pipeline::PipelinedTrainer;
+use layerpipe2::strategy::StrategyKind;
+use layerpipe2::train::Trainer;
+use layerpipe2::util::Rng;
+use std::sync::Arc;
+
+fn smoke() -> bool {
+    std::env::var_os("LAYERPIPE2_SMOKE").is_some()
+        || std::env::var_os("LAYERPIPE2_BENCH_SMOKE").is_some()
+}
+
+fn backend() -> Backend {
+    Arc::new(HostBackend::new())
+}
+
+/// Two-block causal transformer over `seq` tokens of `d_model` features.
+fn transformer_spec(seq: usize, d_model: usize, vocab: usize, classes: usize) -> NetworkSpec {
+    let mut layers = vec![LayerSpec::Embedding { vocab, dim: d_model }];
+    for _ in 0..2 {
+        layers.push(LayerSpec::SelfAttention { seq, d_model, causal: true });
+        layers.push(LayerSpec::LayerNorm { eps: 1e-5 });
+        layers.push(LayerSpec::Dense { units: seq * d_model, relu: true });
+    }
+    layers.push(LayerSpec::Dense { units: classes, relu: false });
+    NetworkSpec { input: Feature::Flat(seq), layers, init_scale: 1.0 }
+}
+
+/// Train on both engines with one strategy; return (oracle acc, worst gap).
+fn run_strategy(
+    cfg: &ExperimentConfig,
+    spec: &NetworkSpec,
+    data: &Splits,
+    kind: StrategyKind,
+) -> (f32, f32) {
+    let oracle = {
+        let mut rng = Rng::new(cfg.seed);
+        let mut t = Trainer::with_spec(backend(), cfg, spec, kind, &mut rng).expect("oracle init");
+        let mut batch_rng = Rng::new(cfg.seed ^ 0x5EED_BA7C);
+        t.train(data, &mut batch_rng).expect("oracle train")
+    };
+    let threaded = {
+        let mut rng = Rng::new(cfg.seed);
+        let mut ex =
+            PipelinedTrainer::with_spec(backend(), cfg, spec, kind, &mut rng).expect("executor init");
+        let mut batch_rng = Rng::new(cfg.seed ^ 0x5EED_BA7C);
+        ex.train(data, &mut batch_rng).expect("executor train")
+    };
+    let mut worst = 0.0f32;
+    for (a, b) in oracle.epochs.iter().zip(&threaded.epochs) {
+        assert!(!a.train_loss.is_nan(), "{kind:?}: oracle loss went NaN");
+        assert!(!b.train_loss.is_nan(), "{kind:?}: executor loss went NaN");
+        worst = worst.max((a.train_loss - b.train_loss).abs());
+        worst = worst.max((a.test_accuracy - b.test_accuracy).abs());
+    }
+    assert!(worst <= 1e-4, "{kind:?}: executor diverged from oracle (worst gap {worst})");
+    (oracle.final_accuracy(), worst)
+}
+
+fn main() {
+    let smoke = smoke();
+    if smoke {
+        println!("[smoke mode: reduced samples and epochs]");
+    }
+    let (train_n, test_n, epochs) = if smoke { (128, 64, 2) } else { (512, 256, 6) };
+
+    let (seq, d_model, vocab, classes) = (8usize, 8usize, 16usize, 4usize);
+    let spec = transformer_spec(seq, d_model, vocab, classes);
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.model.batch = 16;
+    cfg.model.input_dim = seq;
+    cfg.model.classes = classes;
+    cfg.model.layers = spec.layers.len();
+    cfg.model.hidden_dim = seq * d_model; // informational for this spec
+    cfg.pipeline.stages = 3;
+    cfg.epochs = epochs;
+    cfg.seed = 13;
+    cfg.data = DataConfig {
+        train_samples: train_n,
+        test_samples: test_n,
+        teacher_hidden: 24,
+        label_noise: 0.0,
+        seed: 2026,
+    };
+    let data = token_teacher_dataset(seq, vocab, classes, &cfg.data);
+
+    // Cost reports and the partition they induce.
+    let net = Network::build(&spec, &mut Rng::new(cfg.seed)).expect("spec builds");
+    let costs: Vec<u64> = net.costs(cfg.model.batch).iter().map(|c| c.total_flops()).collect();
+    println!("\n=== causal transformer ({} layers, {} stages) ===", net.num_layers(), cfg.pipeline.stages);
+    for (l, nl) in net.layers.iter().enumerate() {
+        println!("  layer {l}: {:<40} {:>12} flop/iter", nl.op.name(), costs[l]);
+    }
+    {
+        let mut rng = Rng::new(cfg.seed);
+        let t = Trainer::with_spec(backend(), &cfg, &spec, StrategyKind::PipelineAwareEma, &mut rng)
+            .expect("trainer init");
+        println!(
+            "  partition (cost-balanced): {:?}  delays: {:?}",
+            t.partition().stage_of(),
+            t.gradient_delays()
+        );
+    }
+
+    let mut final_acc = 0.0f32;
+    for &kind in StrategyKind::all() {
+        let (acc, worst) = run_strategy(&cfg, &spec, &data, kind);
+        println!("  {kind:?}: acc {acc:.4}, worst oracle/executor gap {worst:.2e} (≤ 1e-4 ✓)");
+        if kind == StrategyKind::PipelineAwareEma {
+            final_acc = acc;
+        }
+    }
+
+    let chance = 1.0 / classes as f32;
+    if !smoke {
+        assert!(final_acc > 1.5 * chance, "transformer did not learn: {final_acc}");
+    }
+    println!("\ntransformer_pipeline: OK (acc {final_acc:.4}, chance {chance:.2})");
+}

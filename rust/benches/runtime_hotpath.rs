@@ -40,7 +40,7 @@ use layerpipe2::backend::{self, Exec, HostBackend};
 use layerpipe2::bench_util::{bench, print_header, print_row, BenchStats};
 use layerpipe2::config::{ExperimentConfig, ModelConfig};
 use layerpipe2::data::teacher_dataset;
-use layerpipe2::layers::{Conv2d, Layer, Network, NetworkSpec};
+use layerpipe2::layers::{Conv2d, Layer, Network, NetworkSpec, SelfAttention};
 use layerpipe2::model::LayerRole;
 use layerpipe2::obs;
 use layerpipe2::pipeline::PipelinedTrainer;
@@ -258,6 +258,70 @@ fn layers_section(smoke: bool) -> Json {
                 .unwrap()
         });
         print_gflops(&s_bwd, bwd_flops, n_bwd);
+
+        rows.push(jobj(vec![
+            ("case", Json::Str(case)),
+            ("gflops_fwd", jnum(fwd_flops / s_fwd.median_s / 1e9)),
+            ("gflops_bwd", jnum(bwd_flops / s_bwd.median_s / 1e9)),
+            ("ns_per_iter_fwd", jnum(s_fwd.median_s * 1e9)),
+            ("ns_per_iter_bwd", jnum(s_bwd.median_s * 1e9)),
+            ("allocs_per_iter_fwd", jnum(n_fwd)),
+            ("allocs_per_iter_bwd", jnum(n_bwd)),
+        ]));
+    }
+    Json::Arr(rows)
+}
+
+/// HOTPATH-k: self-attention layer (fused QKV on the pooled matmul +
+/// masked softmax + per-sample aggregation) — GFLOP/s and allocs/iter
+/// for forward and backward, written to `BENCH_layers.json` next to the
+/// conv kernels so the transformer perf trajectory is tracked per PR.
+fn attention_section(smoke: bool) -> Json {
+    print_header("HOTPATH-k: self-attention fwd/bwd (fused QKV + masked softmax, persistent workspaces)");
+    let mut rows: Vec<Json> = Vec::new();
+    let mut rng = Rng::new(19);
+    // (batch, seq, d_model, causal): small stays serial; large crosses
+    // the worker-pool threshold inside the fused projection.
+    let cases: &[(usize, usize, usize, bool)] = if smoke {
+        &[(16, 16, 32, true), (8, 64, 64, true)]
+    } else {
+        &[(16, 16, 32, true), (8, 64, 64, true), (8, 128, 128, false)]
+    };
+    let samples = if smoke { 5 } else { 30 };
+    for &(bsz, seq, dm, causal) in cases {
+        let mut op = SelfAttention::new(seq, dm, causal).unwrap();
+        let (wt, b) = op.init_params(1.0, &mut rng);
+        let x = Tensor::randn(&[bsz, op.in_dim()], 1.0, &mut rng);
+        let be = HostBackend::new();
+        let case = format!(
+            "attn_{bsz}x{seq}x{dm}{}",
+            if causal { "_causal" } else { "" }
+        );
+        let cost = op.cost(bsz);
+        let fwd_flops = cost.fwd_flops as f64;
+        let bwd_flops = cost.bwd_flops as f64;
+
+        let mut y = Tensor::empty();
+        let (s_fwd, n_fwd) = bench_counted(&format!("{case} fwd"), 3, samples, || {
+            op.forward_into(&be, &x, &wt, &b, &mut y).unwrap()
+        });
+        print_gflops(&s_fwd, fwd_flops, n_fwd);
+
+        let dy = Tensor::randn(&[bsz, op.out_dim()], 1.0, &mut rng);
+        let (mut scr, mut dx, mut dw, mut db) =
+            (Tensor::empty(), Tensor::empty(), Tensor::empty(), Tensor::empty());
+        let (s_bwd, n_bwd) = bench_counted(&format!("{case} bwd"), 3, samples, || {
+            op.backward_into(&be, &x, &y, &wt, &dy, &mut scr, &mut dx, &mut dw, &mut db)
+                .unwrap()
+        });
+        print_gflops(&s_bwd, bwd_flops, n_bwd);
+
+        // In-run validation: attention outputs must stay finite (the
+        // masked softmax's total-function contract).
+        assert!(
+            y.data().iter().all(|v| v.is_finite()),
+            "{case}: non-finite attention output"
+        );
 
         rows.push(jobj(vec![
             ("case", Json::Str(case)),
@@ -1069,6 +1133,7 @@ fn main() {
     let kernel_family = kernel_family_section(smoke);
     let mixed = mixed_precision_section(smoke);
     let layers = layers_section(smoke);
+    let attention = attention_section(smoke);
     pjrt_section();
     let train = train_iteration_section(smoke);
     let executor = executor_pool_section(smoke);
@@ -1093,6 +1158,7 @@ fn main() {
     lobj.insert("bench".to_string(), Json::Str("runtime_hotpath/layers".to_string()));
     lobj.insert("smoke".to_string(), Json::Bool(smoke));
     lobj.insert("conv_kernels".to_string(), layers);
+    lobj.insert("attention".to_string(), attention);
     let lpath = std::env::var("LAYERPIPE2_BENCH_LAYERS_JSON")
         .unwrap_or_else(|_| "BENCH_layers.json".to_string());
     std::fs::write(&lpath, Json::Obj(lobj).to_string()).expect("write layers bench json");

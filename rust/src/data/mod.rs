@@ -176,6 +176,40 @@ pub fn image_teacher_dataset(
     Splits { train, test }
 }
 
+/// Deterministic *token-sequence* teacher dataset for transformer
+/// workloads: each sample is `seq` f32-encoded integer token ids drawn
+/// uniformly from `[0, vocab)` (the wire format
+/// [`crate::layers::Embedding`] consumes and validates). Labels come
+/// from the same frozen-teacher recipe as [`teacher_dataset`], with the
+/// teacher reading the raw id values directly — ids correlate with the
+/// label through the teacher, so an embedding + attention stack has
+/// real structure to learn while test accuracy still saturates below
+/// 100 %.
+pub fn token_teacher_dataset(
+    seq: usize,
+    vocab: usize,
+    classes: usize,
+    data: &DataConfig,
+) -> Splits {
+    assert!(seq > 0 && vocab > 0 && classes > 0, "token dims must be positive");
+    let mut rng = Rng::new(data.seed);
+    let t_w1 = Tensor::randn(&[seq, data.teacher_hidden], 1.0, &mut rng);
+    let t_w2 = Tensor::randn(&[data.teacher_hidden, classes], 1.0, &mut rng);
+
+    let gen = |n: usize, rng: &mut Rng| -> Dataset {
+        let mut x = Tensor::zeros(&[n, seq]);
+        for v in x.data_mut().iter_mut() {
+            *v = rng.index(vocab) as f32;
+        }
+        let labels = teacher_labels(&x, &t_w1, &t_w2, classes, data.label_noise, rng);
+        Dataset { x, labels, classes }
+    };
+
+    let train = gen(data.train_samples, &mut rng);
+    let test = gen(data.test_samples, &mut rng);
+    Splits { train, test }
+}
+
 /// Deterministic epoch iterator over shuffled fixed-size batches
 /// (drops the trailing partial batch — artifact shapes are static).
 pub struct BatchIter<'a> {
@@ -360,6 +394,38 @@ mod tests {
         let (_, mut d) = cfgs();
         d.train_samples = 256;
         let s = image_teacher_dataset(6, 6, 1, 4, &d);
+        let mut seen = vec![false; 4];
+        for &l in &s.train.labels {
+            seen[l] = true;
+        }
+        assert!(seen.iter().filter(|&&x| x).count() >= 3, "teacher too degenerate");
+    }
+
+    #[test]
+    fn token_dataset_ids_are_integers_in_vocab_and_deterministic() {
+        let (_, d) = cfgs();
+        let s = token_teacher_dataset(6, 11, 4, &d);
+        assert_eq!(s.train.x.shape(), &[64, 6]);
+        assert_eq!(s.test.len(), 32);
+        assert!(s.train.labels.iter().all(|&l| l < 4));
+        for &v in s.train.x.data() {
+            assert!(v >= 0.0 && v.fract() == 0.0 && (v as usize) < 11, "bad token id {v}");
+        }
+        let s2 = token_teacher_dataset(6, 11, 4, &d);
+        assert_eq!(s.train.x, s2.train.x);
+        assert_eq!(s.train.labels, s2.train.labels);
+    }
+
+    #[test]
+    fn token_dataset_covers_vocab_and_classes() {
+        let (_, mut d) = cfgs();
+        d.train_samples = 256;
+        let s = token_teacher_dataset(8, 7, 4, &d);
+        let mut ids = vec![false; 7];
+        for &v in s.train.x.data() {
+            ids[v as usize] = true;
+        }
+        assert!(ids.iter().all(|&x| x), "some token ids never drawn");
         let mut seen = vec![false; 4];
         for &l in &s.train.labels {
             seen[l] = true;

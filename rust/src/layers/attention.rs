@@ -1,0 +1,615 @@
+//! Single-head self-attention on the packed/worker-pool matmul kernels.
+//!
+//! The wire format stays the flat `[batch, seq·d_model]` activation
+//! every other layer speaks; internally rows reinterpret as
+//! `[batch·seq, d_model]` (same backing order, one copy into a
+//! persistent workspace so the matmul family sees a 2-D operand).
+//!
+//! Forward: one fused QKV projection `[batch·seq, 3·d_model]` on the
+//! packed matmul (worker-pool parallel past the usual threshold), then
+//! per sample: scaled scores `s = q·kᵀ/√d`, the optional causal mask
+//! through [`crate::tensor::masked_softmax_rows_into`] (total on every
+//! input — fully-masked rows yield zero rows, never NaN), and the
+//! attention-weighted value aggregation `y = p·v`.
+//!
+//! The projection is deliberately *bias-free* (`b` is the `[0]`-shaped
+//! paramless placeholder, the convention of most modern transformer
+//! stacks): [`Layer::backward_into`] receives only `(x, y, w, dy)`, and
+//! LayerPipe's delayed backward substitutes historical/EMA weights per
+//! iteration — so everything the backward recomputes must be a pure
+//! function of exactly those inputs. With a bias the recomputed scores
+//! would need a `b` the contract does not provide.
+//!
+//! Backward mirrors conv's recompute-over-stash: scores and softmax
+//! probabilities are *recomputed* from the stashed input instead of
+//! cached per in-flight batch (a `d`-deep stash of `[seq, seq]` prob
+//! matrices per stage otherwise). Gradients:
+//! `dV = pᵀ·dy`, `dP = dy·vᵀ`,
+//! `dS = p ⊙ (dP − rowsum(dP ⊙ p)) / √d`, `dQ = dS·k`, `dK = dSᵀ·q`,
+//! then the fused projection backward `dw = xᵀ·dqkv`,
+//! `dx = dqkv·wᵀ`. Every matmul rides the deterministic kernel family
+//! (fixed chunk geometry, gap-doubling `tn` tree) and the per-sample
+//! loop and softmax passes are serial, so results are bit-identical
+//! across `LAYERPIPE2_WORKERS`.
+
+use super::{Layer, LayerCost};
+use crate::backend::Exec;
+use crate::tensor::{self, Tensor};
+use crate::util::Rng;
+use anyhow::{ensure, Result};
+
+/// `y[b] = softmax(mask(q·kᵀ/√d))·v` per sample, with fused bias-free
+/// QKV projection `w: [d_model, 3·d_model]` (`q | k | v` column blocks).
+pub struct SelfAttention {
+    seq: usize,
+    d_model: usize,
+    causal: bool,
+    /// `1/√d_model`, applied to the scores before masking.
+    scale: f32,
+    /// Additive `[seq, seq]` causal mask (`0` keep / `-inf` drop);
+    /// `None` when not causal.
+    mask: Option<Tensor>,
+    /// Persistent `[batch·seq, d_model]` row view of the input.
+    xr: Tensor,
+    /// Persistent fused projection output `[batch·seq, 3·d_model]`.
+    qkv: Tensor,
+    // Per-sample workspaces, all `[seq, d_model]` or `[seq, seq]`.
+    q: Tensor,
+    k: Tensor,
+    v: Tensor,
+    /// Scores `[seq, seq]`.
+    sc: Tensor,
+    /// Softmax probabilities `[seq, seq]`.
+    pr: Tensor,
+    /// One sample's upstream gradient rows `[seq, d_model]`.
+    dyb: Tensor,
+    /// `dP`, overwritten in place into `dS` `[seq, seq]`.
+    dp: Tensor,
+    gq: Tensor,
+    gk: Tensor,
+    gv: Tensor,
+    /// Weighted aggregation output for one sample `[seq, d_model]`.
+    yb: Tensor,
+}
+
+impl SelfAttention {
+    pub fn new(seq: usize, d_model: usize, causal: bool) -> Result<SelfAttention> {
+        ensure!(seq > 0 && d_model > 0, "attention seq/d_model must be positive");
+        let mask = causal.then(|| {
+            let mut m = Tensor::zeros(&[seq, seq]);
+            for i in 0..seq {
+                for j in (i + 1)..seq {
+                    m.set2(i, j, f32::NEG_INFINITY);
+                }
+            }
+            m
+        });
+        Ok(SelfAttention {
+            seq,
+            d_model,
+            causal,
+            scale: 1.0 / (d_model as f32).sqrt(),
+            mask,
+            xr: Tensor::empty(),
+            qkv: Tensor::empty(),
+            q: Tensor::empty(),
+            k: Tensor::empty(),
+            v: Tensor::empty(),
+            sc: Tensor::empty(),
+            pr: Tensor::empty(),
+            dyb: Tensor::empty(),
+            dp: Tensor::empty(),
+            gq: Tensor::empty(),
+            gk: Tensor::empty(),
+            gv: Tensor::empty(),
+            yb: Tensor::empty(),
+        })
+    }
+
+    fn check_input(&self, x: &Tensor, what: &str) -> Result<usize> {
+        ensure!(
+            x.ndim() == 2 && x.shape()[1] == self.in_dim(),
+            "attention {what}: expected [batch, {}], got {:?}",
+            self.in_dim(),
+            x.shape()
+        );
+        Ok(x.shape()[0])
+    }
+
+    fn check_params(&self, w: &Tensor, what: &str) -> Result<()> {
+        ensure!(
+            w.shape() == [self.d_model, 3 * self.d_model],
+            "attention {what}: weight shape {:?} vs expected [{}, {}]",
+            w.shape(),
+            self.d_model,
+            3 * self.d_model
+        );
+        Ok(())
+    }
+
+    /// Copy `x: [batch, seq·d]` into the persistent `[batch·seq, d]`
+    /// row view (same element order; the copy exists so the matmul
+    /// family sees a plain 2-D operand).
+    fn load_rows(&mut self, x: &Tensor, bsz: usize) {
+        self.xr.resize(&[bsz * self.seq, self.d_model]);
+        self.xr.data_mut().copy_from_slice(x.data());
+    }
+
+    /// Recompute the fused projection `qkv = xr · w` (bias-free).
+    fn project(&mut self, w: &Tensor) {
+        tensor::matmul_into(&self.xr, w, &mut self.qkv);
+    }
+
+    /// Slice sample `bi`'s `q/k/v` `[seq, d_model]` blocks out of the
+    /// fused `[batch·seq, 3·d_model]` projection.
+    fn split_sample(&mut self, bi: usize) {
+        let (seq, dm) = (self.seq, self.d_model);
+        self.q.resize(&[seq, dm]);
+        self.k.resize(&[seq, dm]);
+        self.v.resize(&[seq, dm]);
+        let stride = 3 * dm;
+        let base = bi * seq * stride;
+        let src = self.qkv.data();
+        let qd = self.q.data_mut();
+        let kd = self.k.data_mut();
+        let vd = self.v.data_mut();
+        for r in 0..seq {
+            let row = &src[base + r * stride..base + (r + 1) * stride];
+            qd[r * dm..(r + 1) * dm].copy_from_slice(&row[..dm]);
+            kd[r * dm..(r + 1) * dm].copy_from_slice(&row[dm..2 * dm]);
+            vd[r * dm..(r + 1) * dm].copy_from_slice(&row[2 * dm..]);
+        }
+    }
+
+    /// Sample `bi`'s masked softmax probabilities into `self.pr`
+    /// (recomputed from `self.q`/`self.k`; shared by both passes so
+    /// forward and backward can never disagree on the scores).
+    fn probs_sample(&mut self) {
+        tensor::matmul_nt_into(&self.q, &self.k, &mut self.sc);
+        self.sc.scale(self.scale);
+        tensor::masked_softmax_rows_into(&self.sc, self.mask.as_ref(), &mut self.pr);
+    }
+}
+
+impl Layer for SelfAttention {
+    fn name(&self) -> String {
+        format!(
+            "self_attn[{}x{}{}]",
+            self.seq,
+            self.d_model,
+            if self.causal { ",causal" } else { "" }
+        )
+    }
+
+    fn in_dim(&self) -> usize {
+        self.seq * self.d_model
+    }
+
+    fn out_dim(&self) -> usize {
+        self.seq * self.d_model
+    }
+
+    fn checkpoint_tag(&self) -> u32 {
+        7
+    }
+
+    fn param_shapes(&self) -> (Vec<usize>, Vec<usize>) {
+        (vec![self.d_model, 3 * self.d_model], vec![0])
+    }
+
+    fn init_params(&self, init_scale: f32, rng: &mut Rng) -> (Tensor, Tensor) {
+        // Xavier-style on the d_model fan-in: the projection feeds a
+        // softmax, not a ReLU, so no He factor of 2.
+        let std = init_scale * (1.0 / self.d_model as f32).sqrt();
+        (Tensor::randn(&[self.d_model, 3 * self.d_model], std, rng), Tensor::zeros(&[0]))
+    }
+
+    fn cost(&self, batch: usize) -> LayerCost {
+        let (b, s, d) = (batch as u64, self.seq as u64, self.d_model as u64);
+        // m1: fused-projection madds; m2: one score-shaped matmul's
+        // madds (scores and the weighted aggregation are both m2);
+        // e: softmax surface elements (~5 ops each: mask add, max, sub,
+        // exp≈1, div).
+        let m1 = b * s * d * 3 * d;
+        let m2 = b * s * s * d;
+        let e = b * s * s;
+        LayerCost {
+            fwd_flops: 2 * m1 + 4 * m2 + 5 * e,
+            // Recompute (projection + scores + softmax) + the four
+            // score-shaped gradient matmuls (dV/dP/dQ/dK) + the softmax
+            // backward (~4 ops/elem) + projection backward (dw, dx).
+            bwd_flops: 6 * m1 + 10 * m2 + 9 * e,
+            act_bytes: b * s * d * 4,
+            param_bytes: d * 3 * d * 4,
+        }
+    }
+
+    fn forward_into(
+        &mut self,
+        exec: &dyn Exec,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        let _ = exec; // host kernels; PJRT attention artifacts are an open item
+        let bsz = self.check_input(x, "forward")?;
+        self.check_params(w, "forward")?;
+        ensure!(
+            b.shape() == [0],
+            "attention forward: projection is bias-free, expected [0], got {:?}",
+            b.shape()
+        );
+        let (seq, dm) = (self.seq, self.d_model);
+        self.load_rows(x, bsz);
+        self.project(w);
+        out.resize(&[bsz * seq, dm]);
+        for bi in 0..bsz {
+            self.split_sample(bi);
+            self.probs_sample();
+            tensor::matmul_into(&self.pr, &self.v, &mut self.yb);
+            out.data_mut()[bi * seq * dm..(bi + 1) * seq * dm].copy_from_slice(self.yb.data());
+        }
+        out.resize(&[bsz, seq * dm]); // same storage, wire shape
+        Ok(())
+    }
+
+    fn backward_into(
+        &mut self,
+        exec: &dyn Exec,
+        x: &Tensor,
+        y: &Tensor,
+        w: &Tensor,
+        dy: &Tensor,
+        scratch: &mut Tensor,
+        dx: &mut Tensor,
+        dw: &mut Tensor,
+        db: &mut Tensor,
+    ) -> Result<()> {
+        let _ = exec;
+        let bsz = self.check_input(x, "backward")?;
+        self.check_params(w, "backward")?;
+        ensure!(
+            y.shape() == [bsz, self.out_dim()] && dy.shape() == y.shape(),
+            "attention backward: y {:?} / dy {:?} vs expected [{bsz}, {}]",
+            y.shape(),
+            dy.shape(),
+            self.out_dim()
+        );
+        let (seq, dm) = (self.seq, self.d_model);
+        let rows = bsz * seq;
+
+        // Recompute the fused projection from the stashed input and the
+        // (possibly strategy-substituted) weights — see module docs.
+        self.load_rows(x, bsz);
+        self.project(w);
+
+        // dqkv assembles per sample into the shared scratch.
+        scratch.resize(&[rows, 3 * dm]);
+        for bi in 0..bsz {
+            self.split_sample(bi);
+            self.probs_sample();
+            self.dyb.resize(&[seq, dm]);
+            self.dyb.data_mut().copy_from_slice(&dy.data()[bi * seq * dm..(bi + 1) * seq * dm]);
+            // dV = pᵀ·dy_b, dP = dy_b·vᵀ.
+            tensor::matmul_tn_into(&self.pr, &self.dyb, &mut self.gv);
+            tensor::matmul_nt_into(&self.dyb, &self.v, &mut self.dp);
+            // Softmax backward in place: dS = p ⊙ (dP − Σⱼ dPⱼpⱼ), then
+            // the score scale. Fully-masked rows have p ≡ 0 ⇒ dS ≡ 0,
+            // finite by the masked-softmax contract.
+            {
+                let pd = self.pr.data();
+                let dpd = self.dp.data_mut();
+                for i in 0..seq {
+                    let prow = &pd[i * seq..(i + 1) * seq];
+                    let drow = &mut dpd[i * seq..(i + 1) * seq];
+                    let mut dot = 0.0f32;
+                    for (dv, pv) in drow.iter().zip(prow) {
+                        dot += dv * pv;
+                    }
+                    for (dv, pv) in drow.iter_mut().zip(prow) {
+                        *dv = pv * (*dv - dot) * self.scale;
+                    }
+                }
+            }
+            // dQ = dS·k, dK = dSᵀ·q.
+            tensor::matmul_into(&self.dp, &self.k, &mut self.gq);
+            tensor::matmul_tn_into(&self.dp, &self.q, &mut self.gk);
+            // Interleave back into the fused dqkv rows.
+            let stride = 3 * dm;
+            let base = bi * seq * stride;
+            let sd = scratch.data_mut();
+            for r in 0..seq {
+                let row = &mut sd[base + r * stride..base + (r + 1) * stride];
+                row[..dm].copy_from_slice(&self.gq.data()[r * dm..(r + 1) * dm]);
+                row[dm..2 * dm].copy_from_slice(&self.gk.data()[r * dm..(r + 1) * dm]);
+                row[2 * dm..].copy_from_slice(&self.gv.data()[r * dm..(r + 1) * dm]);
+            }
+        }
+
+        // Projection backward: dw = xrᵀ·dqkv (deterministic tn tree),
+        // dx = dqkv·wᵀ, bias-free ⇒ db stays the [0] placeholder.
+        tensor::matmul_tn_into(&self.xr, scratch, dw);
+        tensor::matmul_nt_into(scratch, w, dx);
+        dx.resize(&[bsz, seq * dm]);
+        db.resize(&[0]);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::HostBackend;
+    use crate::tensor::ops::{matmul_into_with_threads, matmul_nt_into_with_threads};
+
+    /// Plain-loop attention reference (no kernels, no masking tricks).
+    fn naive_attn(op: &SelfAttention, x: &Tensor, w: &Tensor) -> Tensor {
+        let bsz = x.shape()[0];
+        let (seq, dm) = (op.seq, op.d_model);
+        let mut out = Tensor::zeros(&[bsz, seq * dm]);
+        for bi in 0..bsz {
+            // qkv rows for this sample.
+            let mut qkv = vec![0.0f32; seq * 3 * dm];
+            for t in 0..seq {
+                for o in 0..3 * dm {
+                    let mut s = 0.0;
+                    for i in 0..dm {
+                        s += x.data()[bi * seq * dm + t * dm + i] * w.data()[i * 3 * dm + o];
+                    }
+                    qkv[t * 3 * dm + o] = s;
+                }
+            }
+            for t in 0..seq {
+                // Scores against every (visible) position.
+                let mut sc = vec![f32::NEG_INFINITY; seq];
+                let lim = if op.causal { t + 1 } else { seq };
+                for u in 0..lim {
+                    let mut s = 0.0;
+                    for i in 0..dm {
+                        s += qkv[t * 3 * dm + i] * qkv[u * 3 * dm + dm + i];
+                    }
+                    sc[u] = s * op.scale;
+                }
+                let mx = sc.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut p: Vec<f32> = sc.iter().map(|&s| (s - mx).exp()).collect();
+                let sum: f32 = p.iter().sum();
+                for v in p.iter_mut() {
+                    *v /= sum;
+                }
+                for i in 0..dm {
+                    let mut s = 0.0;
+                    for u in 0..seq {
+                        s += p[u] * qkv[u * 3 * dm + 2 * dm + i];
+                    }
+                    out.data_mut()[bi * seq * dm + t * dm + i] = s;
+                }
+            }
+        }
+        out
+    }
+
+    fn mk(causal: bool, seq: usize, dm: usize) -> (SelfAttention, Tensor, Tensor, Tensor) {
+        let mut rng = Rng::new(17);
+        let op = SelfAttention::new(seq, dm, causal).unwrap();
+        let (w, b) = op.init_params(1.0, &mut rng);
+        let x = Tensor::randn(&[2, op.in_dim()], 1.0, &mut rng);
+        (op, x, w, b)
+    }
+
+    #[test]
+    fn forward_matches_naive_attention() {
+        for causal in [false, true] {
+            let (mut op, x, w, b) = mk(causal, 5, 4);
+            let be = HostBackend::new();
+            let mut y = Tensor::empty();
+            op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+            assert_eq!(y.shape(), &[2, op.out_dim()]);
+            let want = naive_attn(&op, &x, &w);
+            assert!(y.max_abs_diff(&want) < 1e-4, "causal={causal}");
+        }
+    }
+
+    #[test]
+    fn causal_mask_blocks_future_positions() {
+        // Perturbing token t may only change outputs at positions ≥ t.
+        let (mut op, x, w, b) = mk(true, 6, 4);
+        let be = HostBackend::new();
+        let mut y0 = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y0).unwrap();
+        let t = 4usize;
+        let mut x2 = x.clone();
+        for i in 0..op.d_model {
+            let v = x2.at2(0, t * op.d_model + i) + 3.0;
+            x2.set2(0, t * op.d_model + i, v);
+        }
+        let mut y1 = Tensor::empty();
+        op.forward_into(&be, &x2, &w, &b, &mut y1).unwrap();
+        for u in 0..t {
+            for i in 0..op.d_model {
+                let (a, c) = (y0.at2(0, u * op.d_model + i), y1.at2(0, u * op.d_model + i));
+                assert_eq!(a.to_bits(), c.to_bits(), "position {u} saw the future token {t}");
+            }
+        }
+        // …and the perturbed position itself must actually change.
+        let mut moved = false;
+        for i in 0..op.d_model {
+            moved |= y0.at2(0, t * op.d_model + i) != y1.at2(0, t * op.d_model + i);
+        }
+        assert!(moved, "perturbation had no effect at its own position");
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        for causal in [false, true] {
+            let mut rng = Rng::new(23);
+            let mut op = SelfAttention::new(4, 3, causal).unwrap();
+            let (w, b) = op.init_params(1.0, &mut rng);
+            let x = Tensor::randn(&[2, op.in_dim()], 0.8, &mut rng);
+            let proj = Tensor::randn(&[2, op.out_dim()], 1.0, &mut rng);
+            let be = HostBackend::new();
+            let mut fwd = |op: &mut SelfAttention, x: &Tensor, w: &Tensor| -> f32 {
+                let mut y = Tensor::empty();
+                op.forward_into(&be, x, w, &b, &mut y).unwrap();
+                y.data().iter().zip(proj.data()).map(|(a, p)| a * p).sum()
+            };
+            let mut y = Tensor::empty();
+            op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+            let (mut scr, mut dx, mut dw, mut db) =
+                (Tensor::empty(), Tensor::empty(), Tensor::empty(), Tensor::empty());
+            op.backward_into(&be, &x, &y, &w, &proj, &mut scr, &mut dx, &mut dw, &mut db)
+                .unwrap();
+            assert_eq!(db.shape(), &[0], "bias-free projection");
+            let eps = 1e-2;
+            for (which, grad, target) in [("w", &dw, &w), ("x", &dx, &x)] {
+                for idx in 0..target.len() {
+                    let (mut tp, mut tm) = (target.clone(), target.clone());
+                    tp.data_mut()[idx] += eps;
+                    tm.data_mut()[idx] -= eps;
+                    let (fp, fm) = match which {
+                        "w" => (fwd(&mut op, &x, &tp), fwd(&mut op, &x, &tm)),
+                        _ => (fwd(&mut op, &tp, &w), fwd(&mut op, &tm, &w)),
+                    };
+                    let fd = (fp - fm) / (2.0 * eps);
+                    assert!(
+                        (fd - grad.data()[idx]).abs() < 3e-2,
+                        "causal={causal} {which}[{idx}]: fd {fd} vs analytic {}",
+                        grad.data()[idx]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_equals_kernel_composition_bitwise_across_thread_counts() {
+        // Shapes past PAR_MIN_MADDS so the fused projection engages the
+        // worker pool; the op must equal an explicit kernel composition
+        // bit for bit at EVERY thread count 1..=8 (the kernel family's
+        // worker-count invariance lifted to the layer — this is the
+        // layer zoo's bit-determinism sweep, same shape as conv's
+        // col2im sweep).
+        let mut rng = Rng::new(31);
+        let (bsz, seq, dm) = (4usize, 32usize, 48usize);
+        let mut op = SelfAttention::new(seq, dm, true).unwrap();
+        let (w, b) = op.init_params(1.0, &mut rng);
+        let x = Tensor::randn(&[bsz, seq * dm], 1.0, &mut rng);
+        assert!(bsz * seq * dm * 3 * dm > 1 << 20, "projection must cross the pool threshold");
+        let be = HostBackend::new();
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+
+        let mut xr = Tensor::zeros(&[bsz * seq, dm]);
+        xr.data_mut().copy_from_slice(x.data());
+        for threads in 1..=8 {
+            let mut qkv = Tensor::empty();
+            matmul_into_with_threads(&xr, &w, &mut qkv, threads);
+            let mut want = Tensor::zeros(&[bsz, seq * dm]);
+            let (mut q, mut k, mut v) =
+                (Tensor::zeros(&[seq, dm]), Tensor::zeros(&[seq, dm]), Tensor::zeros(&[seq, dm]));
+            for bi in 0..bsz {
+                for r in 0..seq {
+                    let row = &qkv.data()[(bi * seq + r) * 3 * dm..(bi * seq + r + 1) * 3 * dm];
+                    q.data_mut()[r * dm..(r + 1) * dm].copy_from_slice(&row[..dm]);
+                    k.data_mut()[r * dm..(r + 1) * dm].copy_from_slice(&row[dm..2 * dm]);
+                    v.data_mut()[r * dm..(r + 1) * dm].copy_from_slice(&row[2 * dm..]);
+                }
+                let mut sc = Tensor::empty();
+                matmul_nt_into_with_threads(&q, &k, &mut sc, threads);
+                sc.scale(op.scale);
+                let mut pr = Tensor::empty();
+                tensor::masked_softmax_rows_into(&sc, op.mask.as_ref(), &mut pr);
+                let mut yb = Tensor::empty();
+                matmul_into_with_threads(&pr, &v, &mut yb, threads);
+                want.data_mut()[bi * seq * dm..(bi + 1) * seq * dm].copy_from_slice(yb.data());
+            }
+            for (i, (g, e)) in y.data().iter().zip(want.data()).enumerate() {
+                assert_eq!(g.to_bits(), e.to_bits(), "forward drift at elem {i}, threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_projection_grads_equal_kernel_composition_across_thread_counts() {
+        // The backward's pool-parallel kernels are the projection pair
+        // `dw = xrᵀ·dqkv` / `dx = dqkv·wᵀ` (everything between them is a
+        // serial per-sample loop). After `backward_into`, `scratch`
+        // holds the assembled dqkv — recompute both products with
+        // explicit thread counts 1..=8 and demand bit-equality with
+        // what the layer produced.
+        let mut rng = Rng::new(41);
+        let (bsz, seq, dm) = (4usize, 32usize, 48usize);
+        let mut op = SelfAttention::new(seq, dm, true).unwrap();
+        let (w, b) = op.init_params(1.0, &mut rng);
+        let x = Tensor::randn(&[bsz, seq * dm], 1.0, &mut rng);
+        let dy = Tensor::randn(&[bsz, seq * dm], 1.0, &mut rng);
+        let be = HostBackend::new();
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        let (mut scr, mut dx, mut dw, mut db) =
+            (Tensor::empty(), Tensor::empty(), Tensor::empty(), Tensor::empty());
+        op.backward_into(&be, &x, &y, &w, &dy, &mut scr, &mut dx, &mut dw, &mut db).unwrap();
+        let mut xr = Tensor::zeros(&[bsz * seq, dm]);
+        xr.data_mut().copy_from_slice(x.data());
+        for threads in 1..=8 {
+            let mut dw_ref = Tensor::empty();
+            crate::tensor::ops::matmul_tn_into_with_threads(&xr, &scr, &mut dw_ref, threads);
+            for (i, (g, e)) in dw.data().iter().zip(dw_ref.data()).enumerate() {
+                assert_eq!(g.to_bits(), e.to_bits(), "dw drift at elem {i}, threads={threads}");
+            }
+            let mut dx_ref = Tensor::empty();
+            matmul_nt_into_with_threads(&scr, &w, &mut dx_ref, threads);
+            for (i, (g, e)) in dx.data().iter().zip(dx_ref.data()).enumerate() {
+                assert_eq!(g.to_bits(), e.to_bits(), "dx drift at elem {i}, threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn repeat_calls_are_bitwise_deterministic_and_workspaces_persist() {
+        let (mut op, x, w, b) = mk(true, 6, 5);
+        let be = HostBackend::new();
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        let cap0 = op.qkv.len();
+        assert!(cap0 > 0, "projection workspace materialized");
+        let y0 = y.clone();
+        let (mut scr, mut dx, mut dw, mut db) =
+            (Tensor::empty(), Tensor::empty(), Tensor::empty(), Tensor::empty());
+        op.backward_into(&be, &x, &y0, &w, &y0, &mut scr, &mut dx, &mut dw, &mut db).unwrap();
+        let (dx0, dw0) = (dx.clone(), dw.clone());
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        assert_eq!(y, y0, "repeat forward drifted");
+        op.backward_into(&be, &x, &y0, &w, &y0, &mut scr, &mut dx, &mut dw, &mut db).unwrap();
+        assert_eq!(dx, dx0, "repeat backward drifted (dx)");
+        assert_eq!(dw, dw0, "repeat backward drifted (dw)");
+        assert_eq!(op.qkv.len(), cap0, "workspace reused, not regrown");
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(SelfAttention::new(0, 4, false).is_err());
+        assert!(SelfAttention::new(4, 0, false).is_err());
+        let (mut op, _, w, b) = mk(false, 5, 4);
+        let be = HostBackend::new();
+        let mut y = Tensor::empty();
+        let bad = Tensor::zeros(&[2, 7]);
+        assert!(op.forward_into(&be, &bad, &w, &b, &mut y).is_err());
+        let badw = Tensor::zeros(&[4, 8]);
+        let goodx = Tensor::zeros(&[2, op.in_dim()]);
+        assert!(op.forward_into(&be, &goodx, &badw, &b, &mut y).is_err());
+        let badb = Tensor::zeros(&[3]);
+        assert!(op.forward_into(&be, &goodx, &w, &badb, &mut y).is_err());
+    }
+
+    #[test]
+    fn cost_counts_projection_scores_and_softmax() {
+        let op = SelfAttention::new(8, 6, true).unwrap();
+        let c = op.cost(2);
+        let (m1, m2, e) = (2u64 * 8 * 6 * 18, 2u64 * 8 * 8 * 6, 2u64 * 8 * 8);
+        assert_eq!(c.fwd_flops, 2 * m1 + 4 * m2 + 5 * e);
+        assert_eq!(c.bwd_flops, 6 * m1 + 10 * m2 + 9 * e);
+        assert_eq!(c.act_bytes, 2 * 8 * 6 * 4);
+        assert_eq!(c.param_bytes, 6 * 18 * 4);
+    }
+}

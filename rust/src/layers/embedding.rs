@@ -1,0 +1,276 @@
+//! Token embedding: gather forward, fixed-order scatter-add backward.
+//!
+//! Input is `[batch, seq]` of f32-encoded token ids (the pipeline's
+//! activation wire is f32 end to end; ids must be exact non-negative
+//! integers below `vocab` — enforced, not truncated). Output is the
+//! flat `[batch, seq·dim]` activation every downstream layer speaks.
+//!
+//! Determinism: the backward scatter-add walks flat positions in
+//! strictly ascending order (sample-major, then sequence position) on a
+//! single thread, so duplicate token ids accumulate their gradient
+//! contributions in one fixed order regardless of
+//! `LAYERPIPE2_WORKERS` — bit-identical by construction, no atomics or
+//! per-worker partials to reduce. The table is `vocab·dim` reads of
+//! pure gather in forward; neither pass is matmul-shaped, so nothing
+//! here touches the worker pool.
+//!
+//! Token ids are not differentiable, so `dx` is a correctly-shaped
+//! all-zero tensor: upstream of an `Embedding` there is nothing to
+//! train, but the executor still threads a `dx` buffer through every
+//! stage boundary uniformly.
+
+use super::{Layer, LayerCost};
+use crate::backend::Exec;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use anyhow::{ensure, Result};
+
+/// `y[b, t] = table[x[b, t]]` with table `[vocab, dim]`.
+pub struct Embedding {
+    seq: usize,
+    vocab: usize,
+    dim: usize,
+}
+
+impl Embedding {
+    pub fn new(seq: usize, vocab: usize, dim: usize) -> Result<Embedding> {
+        ensure!(seq > 0 && vocab > 0 && dim > 0, "embedding seq/vocab/dim must be positive");
+        Ok(Embedding { seq, vocab, dim })
+    }
+
+    fn check_input(&self, x: &Tensor, what: &str) -> Result<usize> {
+        ensure!(
+            x.ndim() == 2 && x.shape()[1] == self.seq,
+            "embedding {what}: expected [batch, {}], got {:?}",
+            self.seq,
+            x.shape()
+        );
+        Ok(x.shape()[0])
+    }
+
+    fn check_params(&self, w: &Tensor, what: &str) -> Result<()> {
+        ensure!(
+            w.shape() == [self.vocab, self.dim],
+            "embedding {what}: table shape {:?} vs expected [{}, {}]",
+            w.shape(),
+            self.vocab,
+            self.dim
+        );
+        Ok(())
+    }
+
+    /// Validate and decode one f32-encoded token id.
+    fn token_id(&self, raw: f32, flat: usize) -> Result<usize> {
+        ensure!(
+            raw >= 0.0 && raw.fract() == 0.0 && (raw as usize) < self.vocab,
+            "embedding: input[{flat}] = {raw} is not an integer token id in [0, {})",
+            self.vocab
+        );
+        Ok(raw as usize)
+    }
+}
+
+impl Layer for Embedding {
+    fn name(&self) -> String {
+        format!("embed[{}->{}x{}]", self.vocab, self.seq, self.dim)
+    }
+
+    fn in_dim(&self) -> usize {
+        self.seq
+    }
+
+    fn out_dim(&self) -> usize {
+        self.seq * self.dim
+    }
+
+    fn checkpoint_tag(&self) -> u32 {
+        8
+    }
+
+    fn param_shapes(&self) -> (Vec<usize>, Vec<usize>) {
+        (vec![self.vocab, self.dim], vec![0])
+    }
+
+    fn init_params(&self, init_scale: f32, rng: &mut Rng) -> (Tensor, Tensor) {
+        let std = init_scale * (1.0 / self.dim as f32).sqrt();
+        (Tensor::randn(&[self.vocab, self.dim], std, rng), Tensor::zeros(&[0]))
+    }
+
+    fn cost(&self, batch: usize) -> LayerCost {
+        let moved = (batch * self.seq * self.dim) as u64;
+        LayerCost {
+            // Gather/scatter are bandwidth, not FLOPs; count one unit
+            // per moved element so the partitioner still sees the work.
+            fwd_flops: moved,
+            bwd_flops: moved,
+            act_bytes: moved * 4,
+            param_bytes: (self.vocab * self.dim * 4) as u64,
+        }
+    }
+
+    fn forward_into(
+        &mut self,
+        exec: &dyn Exec,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        let _ = exec;
+        let bsz = self.check_input(x, "forward")?;
+        self.check_params(w, "forward")?;
+        ensure!(
+            b.shape() == [0],
+            "embedding forward: no bias, expected [0], got {:?}",
+            b.shape()
+        );
+        out.resize(&[bsz, self.seq * self.dim]);
+        let dim = self.dim;
+        for flat in 0..bsz * self.seq {
+            let id = self.token_id(x.data()[flat], flat)?;
+            out.data_mut()[flat * dim..(flat + 1) * dim]
+                .copy_from_slice(&w.data()[id * dim..(id + 1) * dim]);
+        }
+        Ok(())
+    }
+
+    fn backward_into(
+        &mut self,
+        exec: &dyn Exec,
+        x: &Tensor,
+        y: &Tensor,
+        w: &Tensor,
+        dy: &Tensor,
+        scratch: &mut Tensor,
+        dx: &mut Tensor,
+        dw: &mut Tensor,
+        db: &mut Tensor,
+    ) -> Result<()> {
+        let _ = (exec, scratch);
+        let bsz = self.check_input(x, "backward")?;
+        self.check_params(w, "backward")?;
+        ensure!(
+            y.shape() == [bsz, self.out_dim()] && dy.shape() == y.shape(),
+            "embedding backward: y {:?} / dy {:?} vs expected [{bsz}, {}]",
+            y.shape(),
+            dy.shape(),
+            self.out_dim()
+        );
+        // Token ids carry no gradient.
+        dx.resize(&[bsz, self.seq]);
+        dx.fill(0.0);
+        dw.resize(&[self.vocab, self.dim]);
+        dw.fill(0.0);
+        db.resize(&[0]);
+        let dim = self.dim;
+        // Flat-position-ascending scatter-add: one fixed accumulation
+        // order for duplicate ids, independent of worker count.
+        for flat in 0..bsz * self.seq {
+            let id = self.token_id(x.data()[flat], flat)?;
+            let src = &dy.data()[flat * dim..(flat + 1) * dim];
+            let dst = &mut dw.data_mut()[id * dim..(id + 1) * dim];
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::HostBackend;
+
+    fn mk() -> (Embedding, Tensor, Tensor, Tensor) {
+        let mut rng = Rng::new(29);
+        let op = Embedding::new(3, 5, 4).unwrap();
+        let (w, b) = op.init_params(1.0, &mut rng);
+        // Deliberate duplicate token (id 2 twice in sample 0).
+        let x = Tensor::from_vec(&[2, 3], vec![2.0, 0.0, 2.0, 4.0, 1.0, 3.0]);
+        (op, x, w, b)
+    }
+
+    #[test]
+    fn forward_gathers_table_rows() {
+        let (mut op, x, w, b) = mk();
+        let be = HostBackend::new();
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        assert_eq!(y.shape(), &[2, 12]);
+        for (flat, &idf) in x.data().iter().enumerate() {
+            let id = idf as usize;
+            for j in 0..4 {
+                assert_eq!(
+                    y.data()[flat * 4 + j].to_bits(),
+                    w.at2(id, j).to_bits(),
+                    "gather mismatch at flat {flat} col {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_token_ids() {
+        let (mut op, _, w, b) = mk();
+        let be = HostBackend::new();
+        let mut y = Tensor::empty();
+        for bad in [
+            Tensor::from_vec(&[2, 3], vec![0.0, 1.0, 5.0, 0.0, 0.0, 0.0]), // out of range
+            Tensor::from_vec(&[2, 3], vec![0.0, 1.5, 2.0, 0.0, 0.0, 0.0]), // fractional
+            Tensor::from_vec(&[2, 3], vec![0.0, -1.0, 2.0, 0.0, 0.0, 0.0]), // negative
+        ] {
+            assert!(op.forward_into(&be, &bad, &w, &b, &mut y).is_err());
+        }
+        let badshape = Tensor::zeros(&[2, 4]);
+        assert!(op.forward_into(&be, &badshape, &w, &b, &mut y).is_err());
+    }
+
+    #[test]
+    fn backward_scatter_matches_finite_difference_with_duplicates() {
+        let (mut op, x, w, b) = mk();
+        let be = HostBackend::new();
+        let mut rng = Rng::new(37);
+        let proj = Tensor::randn(&[2, op.out_dim()], 1.0, &mut rng);
+        let mut fwd = |op: &mut Embedding, w: &Tensor| -> f32 {
+            let mut y = Tensor::empty();
+            op.forward_into(&be, &x, w, &b, &mut y).unwrap();
+            y.data().iter().zip(proj.data()).map(|(a, p)| a * p).sum()
+        };
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        let (mut scr, mut dx, mut dw, mut db) =
+            (Tensor::empty(), Tensor::empty(), Tensor::empty(), Tensor::empty());
+        op.backward_into(&be, &x, &y, &w, &proj, &mut scr, &mut dx, &mut dw, &mut db).unwrap();
+        assert_eq!(dx.shape(), &[2, 3]);
+        assert!(dx.data().iter().all(|&v| v == 0.0), "token ids are not differentiable");
+        assert_eq!(db.shape(), &[0]);
+        let eps = 1e-2;
+        for idx in 0..w.len() {
+            let (mut wp, mut wm) = (w.clone(), w.clone());
+            wp.data_mut()[idx] += eps;
+            wm.data_mut()[idx] -= eps;
+            let fd = (fwd(&mut op, &wp) - fwd(&mut op, &wm)) / (2.0 * eps);
+            assert!(
+                (fd - dw.data()[idx]).abs() < 3e-2,
+                "dw[{idx}]: fd {fd} vs analytic {}",
+                dw.data()[idx]
+            );
+        }
+        // Row for the duplicated token accumulated both positions.
+        for j in 0..4 {
+            let want = proj.data()[j] + proj.data()[8 + j];
+            assert!((dw.at2(2, j) - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cost_counts_moved_elements() {
+        let op = Embedding::new(3, 5, 4).unwrap();
+        let c = op.cost(2);
+        assert_eq!(c.fwd_flops, 24);
+        assert_eq!(c.bwd_flops, 24);
+        assert_eq!(c.act_bytes, 96);
+        assert_eq!(c.param_bytes, 80);
+    }
+}

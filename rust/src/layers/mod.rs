@@ -37,16 +37,22 @@
 //! EMA accumulators run uniformly over every layer with no special
 //! cases — a zero-length SGD step, stash push or EMA update is a no-op.
 
+mod attention;
 mod conv;
 mod dense;
+mod embedding;
 mod flatten;
 mod lif;
+mod norm;
 mod pool2d;
 
+pub use attention::SelfAttention;
 pub use conv::Conv2d;
 pub use dense::Dense;
+pub use embedding::Embedding;
 pub use flatten::Flatten;
 pub use lif::Lif;
+pub use norm::LayerNorm;
 pub use pool2d::MaxPool2d;
 
 use crate::backend::Exec;
@@ -203,6 +209,9 @@ pub enum Feature {
     Flat(usize),
     /// NHWC spatial feature map (flattened to `h·w·c` on the wire).
     Image { h: usize, w: usize, c: usize },
+    /// Token sequence of `t` positions × `d` model features (flattened
+    /// to `t·d` on the wire, position-major like NHWC flattens `h·w·c`).
+    Seq { t: usize, d: usize },
 }
 
 impl Feature {
@@ -211,6 +220,7 @@ impl Feature {
         match *self {
             Feature::Flat(d) => d,
             Feature::Image { h, w, c } => h * w * c,
+            Feature::Seq { t, d } => t * d,
         }
     }
 }
@@ -229,6 +239,15 @@ pub enum LayerSpec {
     /// Leaky-integrate-and-fire spiking activation with a triangular
     /// surrogate gradient; treats its input as the membrane potential.
     Lif { v_th: f32, alpha: f32 },
+    /// Token-id gather `[seq] → [seq·dim]` with a learned `[vocab, dim]`
+    /// table; inputs are f32-encoded integer ids.
+    Embedding { vocab: usize, dim: usize },
+    /// Single-head self-attention over `[seq, d_model]` rows with a
+    /// fused bias-free QKV projection; `causal` adds the strictly-lower-
+    /// triangular visibility mask.
+    SelfAttention { seq: usize, d_model: usize, causal: bool },
+    /// Per-row (trailing-axis) layer normalization with learned affine.
+    LayerNorm { eps: f32 },
 }
 
 /// A full heterogeneous model description.
@@ -314,6 +333,45 @@ pub fn build_op(spec: &LayerSpec, cur: &Feature, index: usize) -> Result<(Box<dy
             // Spiking activations preserve the feature shape (spatial or
             // flat) — they are elementwise on the membrane potential.
             let op = Lif::new(dim, v_th, alpha).with_context(|| format!("layer {index}"))?;
+            Ok((Box::new(op), cur.clone()))
+        }
+        LayerSpec::Embedding { vocab, dim } => {
+            // Every incoming feature element is one token id.
+            let seq = cur.numel();
+            let op = Embedding::new(seq, vocab, dim).with_context(|| format!("layer {index}"))?;
+            Ok((Box::new(op), Feature::Seq { t: seq, d: dim }))
+        }
+        LayerSpec::SelfAttention { seq, d_model, causal } => {
+            // Accept a matching Seq shape, or any feature whose flat
+            // width factors as seq·d_model (a Dense output re-entering
+            // the attention wire format).
+            if let Feature::Seq { t, d } = *cur {
+                ensure!(
+                    t == seq && d == d_model,
+                    "layer {index}: attention [{seq}x{d_model}] on sequence [{t}x{d}]"
+                );
+            }
+            ensure!(
+                cur.numel() == seq * d_model,
+                "layer {index}: attention needs {}x{}={} input features, got {}",
+                seq,
+                d_model,
+                seq * d_model,
+                cur.numel()
+            );
+            let op =
+                SelfAttention::new(seq, d_model, causal).with_context(|| format!("layer {index}"))?;
+            Ok((Box::new(op), Feature::Seq { t: seq, d: d_model }))
+        }
+        LayerSpec::LayerNorm { eps } => {
+            // Normalize over the trailing feature axis: per-position
+            // d_model features for sequences, the whole flat vector
+            // otherwise (t = 1).
+            let (t, d) = match *cur {
+                Feature::Seq { t, d } => (t, d),
+                ref f => (1, f.numel()),
+            };
+            let op = LayerNorm::new(t, d, eps).with_context(|| format!("layer {index}"))?;
             Ok((Box::new(op), cur.clone()))
         }
     }
@@ -537,6 +595,48 @@ mod tests {
         assert_eq!(net.layers[1].w.shape(), &[0]);
         assert_eq!(net.layers[2].w.shape(), &[0]);
         assert_eq!(net.layers[3].w.shape(), &[64, 10]);
+    }
+
+    #[test]
+    fn transformer_stack_shapes_flow() {
+        let (seq, dm, vocab) = (6, 4, 11);
+        let spec = NetworkSpec {
+            input: Feature::Flat(seq),
+            layers: vec![
+                LayerSpec::Embedding { vocab, dim: dm },
+                LayerSpec::SelfAttention { seq, d_model: dm, causal: true },
+                LayerSpec::LayerNorm { eps: 1e-5 },
+                LayerSpec::Dense { units: seq * dm, relu: true },
+                LayerSpec::SelfAttention { seq, d_model: dm, causal: true },
+                LayerSpec::LayerNorm { eps: 1e-5 },
+                LayerSpec::Dense { units: 3, relu: false },
+            ],
+            init_scale: 1.0,
+        };
+        assert_eq!(spec.out_dim().unwrap(), 3);
+        let net = Network::build(&spec, &mut Rng::new(1)).unwrap();
+        assert_eq!(net.input_dim(), seq);
+        assert_eq!(net.out_dim(), 3);
+        assert_eq!(net.layers[0].w.shape(), &[vocab, dm]); // embedding table
+        assert_eq!(net.layers[0].b.shape(), &[0]);
+        assert_eq!(net.layers[1].w.shape(), &[dm, 3 * dm]); // fused QKV, bias-free
+        assert_eq!(net.layers[1].b.shape(), &[0]);
+        assert_eq!(net.layers[2].w.shape(), &[dm]); // gamma/beta per feature
+        assert_eq!(net.layers[2].b.shape(), &[dm]);
+        // The Dense output (Flat(seq·dm)) re-enters attention by width.
+        assert_eq!(net.layers[4].w.shape(), &[dm, 3 * dm]);
+        assert!(!spec.is_dense());
+        assert!(net.dense_params().is_none());
+        // Mismatched attention geometry fails at build time.
+        let bad = NetworkSpec {
+            input: Feature::Flat(seq),
+            layers: vec![
+                LayerSpec::Embedding { vocab, dim: dm },
+                LayerSpec::SelfAttention { seq: seq + 1, d_model: dm, causal: false },
+            ],
+            init_scale: 1.0,
+        };
+        assert!(Network::build(&bad, &mut Rng::new(1)).is_err());
     }
 
     #[test]

@@ -1,0 +1,345 @@
+//! Layer normalization over the trailing feature axis.
+//!
+//! The wire activation `[batch, t·d]` reinterprets as `batch·t` rows of
+//! `d` features; each row is normalized to zero mean / unit variance
+//! (f32 accumulation, biased variance) and affinely mapped by the
+//! learned per-feature `gamma` (stored in the `w` slot, shape `[d]`)
+//! and `beta` (the `b` slot, `[d]`).
+//!
+//! Backward is the standard three-term formula. With
+//! `x̂ = (x − μ)·inv`, `inv = 1/√(σ² + ε)` and `dx̂ = dy ⊙ γ`:
+//!
+//! `dx = inv · (dx̂ − mean(dx̂) − x̂ ⊙ mean(dx̂ ⊙ x̂))`
+//!
+//! `dγ[j] = Σ_rows dy·x̂`, `dβ[j] = Σ_rows dy`, accumulated in
+//! row-ascending order. Everything is serial per row — the per-row
+//! reductions are tiny next to the matmuls on either side, and serial
+//! loops are bit-identical across `LAYERPIPE2_WORKERS` for free. μ/inv
+//! and x̂ are recomputed from the stashed input in backward (no stash
+//! beyond the executor's usual x), matching the recompute-over-stash
+//! discipline of conv and attention.
+
+use super::{Layer, LayerCost};
+use crate::backend::Exec;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use anyhow::{ensure, Result};
+
+/// Per-row normalization: `y = γ ⊙ (x − μ)/√(σ² + ε) + β`.
+pub struct LayerNorm {
+    t: usize,
+    d: usize,
+    eps: f32,
+}
+
+impl LayerNorm {
+    pub fn new(t: usize, d: usize, eps: f32) -> Result<LayerNorm> {
+        ensure!(t > 0 && d > 0, "layernorm t/d must be positive");
+        ensure!(eps > 0.0 && eps.is_finite(), "layernorm eps must be a positive finite value");
+        Ok(LayerNorm { t, d, eps })
+    }
+
+    fn check_input(&self, x: &Tensor, what: &str) -> Result<usize> {
+        ensure!(
+            x.ndim() == 2 && x.shape()[1] == self.in_dim(),
+            "layernorm {what}: expected [batch, {}], got {:?}",
+            self.in_dim(),
+            x.shape()
+        );
+        Ok(x.shape()[0])
+    }
+
+    fn check_params(&self, w: &Tensor, b: &Tensor, what: &str) -> Result<()> {
+        ensure!(
+            w.shape() == [self.d] && b.shape() == [self.d],
+            "layernorm {what}: gamma {:?} / beta {:?} vs expected [{}]",
+            w.shape(),
+            b.shape(),
+            self.d
+        );
+        Ok(())
+    }
+
+    /// Row mean and `1/√(σ²+ε)` with f32 accumulation (two passes —
+    /// numerically safer than the single-pass E[x²]−E[x]² form).
+    fn row_stats(&self, row: &[f32]) -> (f32, f32) {
+        let n = self.d as f32;
+        let mut mean = 0.0f32;
+        for &v in row {
+            mean += v;
+        }
+        mean /= n;
+        let mut var = 0.0f32;
+        for &v in row {
+            let c = v - mean;
+            var += c * c;
+        }
+        var /= n;
+        (mean, 1.0 / (var + self.eps).sqrt())
+    }
+}
+
+impl Layer for LayerNorm {
+    fn name(&self) -> String {
+        format!("layernorm[{}x{}]", self.t, self.d)
+    }
+
+    fn in_dim(&self) -> usize {
+        self.t * self.d
+    }
+
+    fn out_dim(&self) -> usize {
+        self.t * self.d
+    }
+
+    fn checkpoint_tag(&self) -> u32 {
+        9
+    }
+
+    fn param_shapes(&self) -> (Vec<usize>, Vec<usize>) {
+        (vec![self.d], vec![self.d])
+    }
+
+    fn init_params(&self, _init_scale: f32, _rng: &mut Rng) -> (Tensor, Tensor) {
+        // Identity transform at init: γ = 1, β = 0. Draws nothing from
+        // the rng so the layers after it see the same stream whether or
+        // not a LayerNorm sits between them.
+        let mut gamma = Tensor::zeros(&[self.d]);
+        gamma.fill(1.0);
+        (gamma, Tensor::zeros(&[self.d]))
+    }
+
+    fn cost(&self, batch: usize) -> LayerCost {
+        let rows = (batch * self.t) as u64;
+        let d = self.d as u64;
+        LayerCost {
+            // ~8 ops/element forward (two stat passes + normalize +
+            // affine), ~16 backward (recompute + three-term formula) —
+            // documented approximations, tiny next to any matmul.
+            fwd_flops: 8 * rows * d,
+            bwd_flops: 16 * rows * d,
+            act_bytes: rows * d * 4,
+            param_bytes: 2 * d * 4,
+        }
+    }
+
+    fn forward_into(
+        &mut self,
+        exec: &dyn Exec,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        let _ = exec;
+        let bsz = self.check_input(x, "forward")?;
+        self.check_params(w, b, "forward")?;
+        out.resize(&[bsz, self.in_dim()]);
+        let d = self.d;
+        for r in 0..bsz * self.t {
+            let row = &x.data()[r * d..(r + 1) * d];
+            let (mean, inv) = self.row_stats(row);
+            let orow = &mut out.data_mut()[r * d..(r + 1) * d];
+            for j in 0..d {
+                orow[j] = w.data()[j] * (row[j] - mean) * inv + b.data()[j];
+            }
+        }
+        Ok(())
+    }
+
+    fn backward_into(
+        &mut self,
+        exec: &dyn Exec,
+        x: &Tensor,
+        y: &Tensor,
+        w: &Tensor,
+        dy: &Tensor,
+        scratch: &mut Tensor,
+        dx: &mut Tensor,
+        dw: &mut Tensor,
+        db: &mut Tensor,
+    ) -> Result<()> {
+        let _ = exec;
+        let bsz = self.check_input(x, "backward")?;
+        ensure!(
+            w.shape() == [self.d],
+            "layernorm backward: gamma {:?} vs expected [{}]",
+            w.shape(),
+            self.d
+        );
+        ensure!(
+            y.shape() == [bsz, self.out_dim()] && dy.shape() == y.shape(),
+            "layernorm backward: y {:?} / dy {:?} vs expected [{bsz}, {}]",
+            y.shape(),
+            dy.shape(),
+            self.out_dim()
+        );
+        let d = self.d;
+        dx.resize(&[bsz, self.in_dim()]);
+        dw.resize(&[d]);
+        dw.fill(0.0);
+        db.resize(&[d]);
+        db.fill(0.0);
+        // Per-row x̂ buffer lives in the shared scratch.
+        scratch.resize(&[d]);
+        let n = d as f32;
+        for r in 0..bsz * self.t {
+            let row = &x.data()[r * d..(r + 1) * d];
+            let (mean, inv) = self.row_stats(row);
+            let xhat = scratch.data_mut();
+            for j in 0..d {
+                xhat[j] = (row[j] - mean) * inv;
+            }
+            let dyrow = &dy.data()[r * d..(r + 1) * d];
+            // Row-ascending parameter accumulation (bit-stable order).
+            for j in 0..d {
+                dw.data_mut()[j] += dyrow[j] * xhat[j];
+                db.data_mut()[j] += dyrow[j];
+            }
+            // Three-term formula on dx̂ = dy ⊙ γ.
+            let (mut m1, mut m2) = (0.0f32, 0.0f32);
+            for j in 0..d {
+                let dxh = dyrow[j] * w.data()[j];
+                m1 += dxh;
+                m2 += dxh * xhat[j];
+            }
+            m1 /= n;
+            m2 /= n;
+            let xhat = scratch.data();
+            let dxrow = &mut dx.data_mut()[r * d..(r + 1) * d];
+            for j in 0..d {
+                let dxh = dyrow[j] * w.data()[j];
+                dxrow[j] = inv * (dxh - m1 - xhat[j] * m2);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::HostBackend;
+
+    #[test]
+    fn identity_affine_normalizes_rows() {
+        let mut rng = Rng::new(43);
+        let mut op = LayerNorm::new(3, 8, 1e-5).unwrap();
+        let (w, b) = op.init_params(1.0, &mut rng);
+        let x = Tensor::randn(&[2, op.in_dim()], 2.5, &mut rng);
+        let be = HostBackend::new();
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        for r in 0..6 {
+            let row = &y.data()[r * 8..(r + 1) * 8];
+            let mean: f32 = row.iter().sum::<f32>() / 8.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 8.0;
+            assert!(mean.abs() < 1e-5, "row {r} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "row {r} var {var}");
+        }
+    }
+
+    #[test]
+    fn forward_matches_naive_reference_with_random_affine() {
+        let mut rng = Rng::new(47);
+        let mut op = LayerNorm::new(2, 5, 1e-5).unwrap();
+        let w = Tensor::randn(&[5], 1.0, &mut rng);
+        let b = Tensor::randn(&[5], 1.0, &mut rng);
+        let x = Tensor::randn(&[3, 10], 1.7, &mut rng);
+        let be = HostBackend::new();
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        for r in 0..6 {
+            let row = &x.data()[r * 5..(r + 1) * 5];
+            let mean: f32 = row.iter().sum::<f32>() / 5.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 5.0;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            for j in 0..5 {
+                let want = w.data()[j] * (row[j] - mean) * inv + b.data()[j];
+                assert!((y.data()[r * 5 + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let mut rng = Rng::new(53);
+        let mut op = LayerNorm::new(2, 4, 1e-5).unwrap();
+        let w = Tensor::randn(&[4], 0.9, &mut rng);
+        let b = Tensor::randn(&[4], 0.5, &mut rng);
+        let x = Tensor::randn(&[2, 8], 1.2, &mut rng);
+        let proj = Tensor::randn(&[2, 8], 1.0, &mut rng);
+        let be = HostBackend::new();
+        let mut fwd = |op: &mut LayerNorm, x: &Tensor, w: &Tensor, b: &Tensor| -> f32 {
+            let mut y = Tensor::empty();
+            op.forward_into(&be, x, w, b, &mut y).unwrap();
+            y.data().iter().zip(proj.data()).map(|(a, p)| a * p).sum()
+        };
+        let mut y = Tensor::empty();
+        op.forward_into(&be, &x, &w, &b, &mut y).unwrap();
+        let (mut scr, mut dx, mut dw, mut db) =
+            (Tensor::empty(), Tensor::empty(), Tensor::empty(), Tensor::empty());
+        op.backward_into(&be, &x, &y, &w, &proj, &mut scr, &mut dx, &mut dw, &mut db).unwrap();
+        let eps = 1e-2;
+        for idx in 0..x.len() {
+            let (mut xp, mut xm) = (x.clone(), x.clone());
+            xp.data_mut()[idx] += eps;
+            xm.data_mut()[idx] -= eps;
+            let fd = (fwd(&mut op, &xp, &w, &b) - fwd(&mut op, &xm, &w, &b)) / (2.0 * eps);
+            assert!((fd - dx.data()[idx]).abs() < 3e-2, "dx[{idx}]: fd {fd} vs {}", dx.data()[idx]);
+        }
+        for idx in 0..4 {
+            let (mut wp, mut wm) = (w.clone(), w.clone());
+            wp.data_mut()[idx] += eps;
+            wm.data_mut()[idx] -= eps;
+            let fd = (fwd(&mut op, &x, &wp, &b) - fwd(&mut op, &x, &wm, &b)) / (2.0 * eps);
+            assert!((fd - dw.data()[idx]).abs() < 3e-2, "dw[{idx}]: fd {fd} vs {}", dw.data()[idx]);
+            let (mut bp, mut bm) = (b.clone(), b.clone());
+            bp.data_mut()[idx] += eps;
+            bm.data_mut()[idx] -= eps;
+            let fd = (fwd(&mut op, &x, &w, &bp) - fwd(&mut op, &x, &w, &bm)) / (2.0 * eps);
+            assert!((fd - db.data()[idx]).abs() < 3e-2, "db[{idx}]: fd {fd} vs {}", db.data()[idx]);
+        }
+    }
+
+    #[test]
+    fn init_params_consumes_no_rng_and_is_identity() {
+        let mut r1 = Rng::new(61);
+        let mut r2 = Rng::new(61);
+        let op = LayerNorm::new(1, 6, 1e-5).unwrap();
+        let (g, beta) = op.init_params(1.0, &mut r1);
+        assert!(g.data().iter().all(|&v| v == 1.0));
+        assert!(beta.data().iter().all(|&v| v == 0.0));
+        // Same next draw from both rngs ⇒ init consumed nothing.
+        let a = Tensor::randn(&[4], 1.0, &mut r1);
+        let c = Tensor::randn(&[4], 1.0, &mut r2);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(LayerNorm::new(0, 4, 1e-5).is_err());
+        assert!(LayerNorm::new(2, 0, 1e-5).is_err());
+        assert!(LayerNorm::new(2, 4, 0.0).is_err());
+        assert!(LayerNorm::new(2, 4, f32::NAN).is_err());
+        let mut op = LayerNorm::new(2, 4, 1e-5).unwrap();
+        let be = HostBackend::new();
+        let mut y = Tensor::empty();
+        let w = Tensor::zeros(&[4]);
+        let b = Tensor::zeros(&[4]);
+        assert!(op.forward_into(&be, &Tensor::zeros(&[2, 7]), &w, &b, &mut y).is_err());
+        assert!(op
+            .forward_into(&be, &Tensor::zeros(&[2, 8]), &Tensor::zeros(&[3]), &b, &mut y)
+            .is_err());
+    }
+
+    #[test]
+    fn cost_is_linear_in_rows_and_features() {
+        let op = LayerNorm::new(3, 16, 1e-5).unwrap();
+        let c = op.cost(2);
+        assert_eq!(c.fwd_flops, 8 * 6 * 16);
+        assert_eq!(c.bwd_flops, 16 * 6 * 16);
+        assert_eq!(c.act_bytes, 6 * 16 * 4);
+        assert_eq!(c.param_bytes, 2 * 16 * 4);
+    }
+}

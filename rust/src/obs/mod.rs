@@ -601,11 +601,24 @@ pub struct HistSnapshot {
 
 impl HistSnapshot {
     /// The quantile-`q` value in ns (bucket floor; 0 when empty).
+    ///
+    /// The rank is computed from the *bucket sum*, not `count`: captures
+    /// read relaxed atomics one by one, so a concurrent `record` can be
+    /// visible in `count` before its bucket increment is — and diffing
+    /// two such torn captures (`since`) makes the shortfall routine. A
+    /// rank derived from `count` can then exceed the bucket sum, fall
+    /// through the scan, and report the top-bucket floor — spiking
+    /// windowed p99 by orders of magnitude and spuriously triggering the
+    /// serving AIMD multiplicative decrease. Ranking over the bucket sum
+    /// keeps the quantile a statement about the records actually visible
+    /// in the buckets; consistent snapshots (sum == count) are
+    /// unchanged.
     pub fn quantile_ns(&self, q: f64) -> u64 {
-        if self.count == 0 {
+        let total: u64 = self.buckets.iter().sum();
+        if total == 0 {
             return 0;
         }
-        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
         let mut cum = 0u64;
         for (i, &c) in self.buckets.iter().enumerate() {
             cum += c;
@@ -614,6 +627,19 @@ impl HistSnapshot {
             }
         }
         bucket_floor(HIST_BUCKETS - 1)
+    }
+
+    /// Test-only constructor for deliberately inconsistent snapshots —
+    /// `count` disagreeing with the bucket sum, the shape a torn
+    /// relaxed-atomic capture produces. `entries` is `(value_ns, n)`
+    /// pairs routed through the real bucket mapping.
+    #[cfg(test)]
+    pub(crate) fn synthetic(count: u64, sum_ns: u64, entries: &[(u64, u64)]) -> HistSnapshot {
+        let mut buckets = vec![0u64; HIST_BUCKETS];
+        for &(v, n) in entries {
+            buckets[bucket_index(v)] += n;
+        }
+        HistSnapshot { count, sum_ns, buckets }
     }
 
     pub fn mean_ns(&self) -> u64 {
@@ -909,6 +935,42 @@ mod tests {
         assert!((74_250_000..=99_000_000).contains(&p99), "p99 = {p99}");
         assert!(p50 <= p99);
         assert_eq!(hs.mean_ns(), hs.sum_ns / 100);
+    }
+
+    #[test]
+    fn windowed_quantile_ranks_over_bucket_sum_not_count() {
+        // Torn windowed diff: 4 records landed in `count` whose bucket
+        // increments were not yet visible at capture time. Every record
+        // the buckets *do* show sits near 1 µs — p99 must report that
+        // bucket's floor, not fall through to the top-bucket floor.
+        let torn = HistSnapshot::synthetic(14, 14_000, &[(1_000, 10)]);
+        let p99 = torn.quantile_ns(0.99);
+        assert_eq!(p99, bucket_floor(bucket_index(1_000)), "p99 = {p99}");
+        assert!(p99 < bucket_floor(HIST_BUCKETS - 1));
+        // Fully torn window (count > 0, no visible buckets) reads empty.
+        let all_torn = HistSnapshot::synthetic(3, 999, &[]);
+        assert_eq!(all_torn.quantile_ns(0.99), 0);
+        // Consistent snapshots (sum == count) are unchanged by the fix:
+        // `histogram_buckets_are_log_scale_and_quantiles_round_down`
+        // pins the absolute values; here pin equality with a count-ranked
+        // scan on a two-bucket layout.
+        let consistent = HistSnapshot::synthetic(10, 10_000, &[(1_000, 9), (1_000_000, 1)]);
+        assert_eq!(consistent.quantile_ns(0.50), bucket_floor(bucket_index(1_000)));
+        assert_eq!(consistent.quantile_ns(0.99), bucket_floor(bucket_index(1_000_000)));
+        // A `since` of two live captures with records in between stays
+        // consistent end-to-end through the public path.
+        let h = hist("test/obs_windowed_rank");
+        h.record_ns(2_000);
+        let s0 = TelemetrySnapshot::capture();
+        for _ in 0..5 {
+            h.record_ns(2_000);
+        }
+        let s1 = TelemetrySnapshot::capture();
+        let hs0 = s0.hists.get("test/obs_windowed_rank").expect("hist registered");
+        let hs1 = s1.hists.get("test/obs_windowed_rank").expect("hist registered");
+        let win = hs1.since(hs0);
+        assert_eq!(win.count, 5);
+        assert_eq!(win.quantile_ns(0.99), bucket_floor(bucket_index(2_000)));
     }
 
     #[test]

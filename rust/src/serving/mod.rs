@@ -2396,6 +2396,31 @@ mod tests {
     }
 
     #[test]
+    fn aimd_does_not_shrink_on_torn_snapshot_skew() {
+        // Regression for the windowed-quantile inconsistency: the AIMD
+        // window diffs two relaxed-atomic captures, so a record can be
+        // visible in `count` before its bucket increment is. With the
+        // rank derived from `count`, the bucket scan fell short and p99
+        // read as the top-bucket floor (hundreds of seconds) even though
+        // every visible latency was microseconds — one such window per
+        // ADAPT_EVERY was enough to halve the limits spuriously. The
+        // fixed rank comes from the bucket sum, so the torn window
+        // reports the visible-record quantile and the controller holds.
+        let target = 2_000_000u64; // 2 ms
+        let torn = crate::obs::HistSnapshot::synthetic(14, 14_000, &[(1_000, 10)]);
+        let p99 = torn.quantile_ns(0.99);
+        assert!(
+            p99 <= target,
+            "torn window must report the visible-record p99 ({p99} ns), not the top bucket"
+        );
+        let mut ctl = AimdBatchControl::new(2, 32, 1, 8, target);
+        for _ in 0..8 {
+            ctl.observe(torn.quantile_ns(0.99));
+        }
+        assert_eq!(ctl.limits(), (32, 8), "controller must not shrink on the synthetic skew");
+    }
+
+    #[test]
     fn coalescer_sheds_expired_requests_deterministically() {
         let mut co = Coalescer::new(8, 1_000_000);
         let t0 = co.now();

@@ -716,14 +716,49 @@ pub fn relu_grad_col_sum_into(y: &Tensor, dy: &Tensor, dz: &mut Tensor, db: &mut
     grad_col_sum_rows(y_w.as_slice(), dy.data(), dz.data_mut(), db.data_mut(), m, n, true);
 }
 
-/// Numerically-stable row softmax into `out`.
+/// Numerically-stable row softmax into `out`. Total on every input:
+/// a fully-masked row (every entry `-inf`) or a zero-width row yields a
+/// deterministic all-zero row instead of the `(-inf) - (-inf) = NaN`
+/// and `0/0` cascade. Rows with at least one finite entry are
+/// bitwise-unchanged from the historical kernel.
 pub fn softmax_rows_into(x: &Tensor, out: &mut Tensor) {
+    masked_softmax_rows_into(x, None, out);
+}
+
+/// Row softmax with an optional additive mask: mask entries are `0.0`
+/// to keep a position or `f32::NEG_INFINITY` to exclude it, added to
+/// the logits before the stable-softmax pass. The mask is 2-D with the
+/// same row width as `x` and broadcasts cyclically over rows — score
+/// row `i` uses mask row `i % mask_rows` — so a single `[seq, seq]`
+/// causal mask serves every sample of a flattened `[batch·seq, seq]`
+/// score matrix. Fully-masked rows produce all-zero rows (no NaN);
+/// `mask == None` is bitwise-identical to [`softmax_rows_into`].
+pub fn masked_softmax_rows_into(x: &Tensor, mask: Option<&Tensor>, out: &mut Tensor) {
     assert_eq!(x.ndim(), 2);
     let (m, n) = (x.shape()[0], x.shape()[1]);
     out.widen_from(x);
+    let mask_w = mask.map(|mk| {
+        assert_eq!(mk.ndim(), 2, "softmax mask must be 2-D");
+        assert_eq!(mk.shape()[1], n, "softmax mask width {} vs row width {n}", mk.shape()[1]);
+        assert!(mk.shape()[0] > 0, "softmax mask needs at least one row");
+        (mk.shape()[0], Widened::new(mk))
+    });
     for i in 0..m {
         let row = &mut out.data_mut()[i * n..(i + 1) * n];
+        if let Some((mrows, ref mw)) = mask_w {
+            let mrow = &mw.as_slice()[(i % mrows) * n..(i % mrows + 1) * n];
+            for (v, &mv) in row.iter_mut().zip(mrow) {
+                *v += mv;
+            }
+        }
         let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        if mx == f32::NEG_INFINITY {
+            // No finite support (fully masked or n == 0): the limit
+            // distribution is undefined, so emit zeros deterministically
+            // rather than letting -inf - -inf poison the row with NaN.
+            row.fill(0.0);
+            continue;
+        }
         let mut sum = 0.0;
         for v in row.iter_mut() {
             *v = (*v - mx).exp();
@@ -1062,6 +1097,99 @@ mod tests {
             let s: f32 = (0..9).map(|j| p.at2(i, j)).sum();
             assert!((s - 1.0).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn softmax_fully_masked_rows_are_finite_zeros() {
+        // Every row pattern the padding/causal masks can produce: fully
+        // -inf, partially -inf, a single -inf survivor, and empty width.
+        let x = Tensor::from_vec(
+            &[3, 4],
+            vec![
+                f32::NEG_INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY,
+                1.0, f32::NEG_INFINITY, 2.0, f32::NEG_INFINITY,
+                f32::NEG_INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY, 0.5,
+            ],
+        );
+        let p = softmax_rows(&x);
+        assert!(p.data().iter().all(|v| v.is_finite()), "softmax emitted non-finite values");
+        assert_eq!(&p.data()[0..4], &[0.0; 4], "fully-masked row must be all zeros");
+        let s1: f32 = p.data()[4..8].iter().sum();
+        assert!((s1 - 1.0).abs() < 1e-6);
+        assert_eq!(p.at2(1, 1), 0.0);
+        assert_eq!(p.at2(1, 3), 0.0);
+        // Single survivor gets the whole mass.
+        assert_eq!(&p.data()[8..12], &[0.0, 0.0, 0.0, 1.0]);
+        // Zero-width rows: nothing to write, nothing to NaN.
+        let empty = Tensor::zeros(&[3, 0]);
+        let pe = softmax_rows(&empty);
+        assert_eq!(pe.shape(), &[3, 0]);
+    }
+
+    #[test]
+    fn softmax_unmasked_rows_bitwise_unchanged_by_fix() {
+        // The guard only fires on rows with no finite entry; ordinary
+        // inputs must reproduce the historical kernel bit-for-bit.
+        let mut rng = Rng::new(41);
+        let x = Tensor::randn(&[7, 11], 3.0, &mut rng);
+        let p = softmax_rows(&x);
+        let (m, n) = (x.shape()[0], x.shape()[1]);
+        let mut want = x.clone();
+        for i in 0..m {
+            let row = &mut want.data_mut()[i * n..(i + 1) * n];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+        for (g, e) in p.data().iter().zip(want.data()) {
+            assert_eq!(g.to_bits(), e.to_bits(), "unmasked softmax drifted from legacy kernel");
+        }
+    }
+
+    #[test]
+    fn masked_softmax_matches_premasked_input_and_broadcasts_rows() {
+        let mut rng = Rng::new(42);
+        let (b, seq) = (3usize, 5usize);
+        let x = Tensor::randn(&[b * seq, seq], 1.5, &mut rng);
+        // Causal mask: strictly-upper triangle excluded.
+        let mut mask = Tensor::zeros(&[seq, seq]);
+        for i in 0..seq {
+            for j in (i + 1)..seq {
+                mask.set2(i, j, f32::NEG_INFINITY);
+            }
+        }
+        let mut got = Tensor::empty();
+        masked_softmax_rows_into(&x, Some(&mask), &mut got);
+        // Reference: add the mask row (cyclic over samples) by hand, then
+        // run the unmasked kernel.
+        let mut xm = x.clone();
+        for i in 0..b * seq {
+            for j in 0..seq {
+                let mv = mask.at2(i % seq, j);
+                let v = xm.at2(i, j) + mv;
+                xm.set2(i, j, v);
+            }
+        }
+        let want = softmax_rows(&xm);
+        assert_eq!(got, want, "masked kernel vs pre-masked composition");
+        // Masked positions carry exactly zero probability; rows sum to 1.
+        for i in 0..b * seq {
+            for j in ((i % seq) + 1)..seq {
+                assert_eq!(got.at2(i, j), 0.0);
+            }
+            let s: f32 = (0..seq).map(|j| got.at2(i, j)).sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+        }
+        // None-mask path is bitwise the plain kernel.
+        let mut none_path = Tensor::empty();
+        masked_softmax_rows_into(&x, None, &mut none_path);
+        assert_eq!(none_path, softmax_rows(&x));
     }
 
     #[test]

@@ -228,6 +228,75 @@ fn steady_state_iterations_allocate_near_zero() {
         );
     }
 
+    // ---- transformer (embedding + attention + layernorm) path ----------
+    //
+    // The same discipline for the transformer zoo: the fused QKV
+    // projection, per-sample q/k/v/score/prob blocks and the row view
+    // live in persistent op workspaces, dqkv assembles into the shared
+    // scratch, the embedding scatter writes the persistent dw workspace
+    // in place, and layernorm borrows scratch per row. Shapes stay under
+    // the parallel-matmul threshold so the worker pool (whose task
+    // boxing allocates) never engages.
+    {
+        use layerpipe2::data::token_teacher_dataset;
+
+        let (seq, dm, vocab, classes) = (8usize, 8usize, 12usize, 4usize);
+        let tspec = NetworkSpec {
+            input: Feature::Flat(seq),
+            layers: vec![
+                LayerSpec::Embedding { vocab, dim: dm },
+                LayerSpec::SelfAttention { seq, d_model: dm, causal: true },
+                LayerSpec::LayerNorm { eps: 1e-5 },
+                LayerSpec::Dense { units: seq * dm, relu: true },
+                LayerSpec::SelfAttention { seq, d_model: dm, causal: true },
+                LayerSpec::LayerNorm { eps: 1e-5 },
+                LayerSpec::Dense { units: classes, relu: false },
+            ],
+            init_scale: 1.0,
+        };
+        let mut tcfg = ExperimentConfig { epochs: 1, ..ExperimentConfig::default() };
+        tcfg.model.batch = 16;
+        tcfg.model.input_dim = seq;
+        tcfg.model.classes = classes;
+        tcfg.model.layers = tspec.layers.len();
+        tcfg.pipeline.stages = 3;
+        tcfg.data.train_samples = 128;
+        tcfg.data.test_samples = 32;
+        let tdata = token_teacher_dataset(seq, vocab, classes, &tcfg.data);
+
+        for kind in [StrategyKind::Stashing, StrategyKind::PipelineAwareEma] {
+            let backend: Backend = Arc::new(HostBackend::new());
+            let mut rng = Rng::new(3);
+            let mut trainer = Trainer::with_spec(backend, &tcfg, &tspec, kind, &mut rng).unwrap();
+            let (xb, oh) = tdata.train.batch(&(0..tcfg.model.batch).collect::<Vec<_>>());
+            let prime = 24usize;
+            let measure = 32usize;
+            let mut feed: Vec<(Tensor, Tensor)> =
+                (0..(prime + measure)).map(|_| (xb.clone(), oh.clone())).collect();
+            feed.reverse();
+            for _ in 0..prime {
+                trainer.iteration(Some(feed.pop().expect("primed batch"))).unwrap();
+            }
+            let before = ALLOCS.load(Ordering::Relaxed);
+            for _ in 0..measure {
+                trainer.iteration(Some(feed.pop().expect("measured batch"))).unwrap();
+            }
+            let total = ALLOCS.load(Ordering::Relaxed) - before;
+            let per_iter = total as f64 / measure as f64;
+            println!(
+                "transformer path / {}: {total} allocs over {measure} iters = {per_iter:.2}/iter",
+                kind.name()
+            );
+            assert!(
+                per_iter <= 4.0,
+                "transformer hot path regressed to {per_iter:.2} allocs/iter for {} \
+                 (expected (near-)zero: persistent qkv/score/prob workspaces, shared \
+                 dqkv scratch, in-place embedding scatter)",
+                kind.name()
+            );
+        }
+    }
+
     // ---- serving path (submit -> batch -> staged forward -> respond) ---
     //
     // The same discipline for the forward-only server: request and

@@ -39,6 +39,12 @@ test -s BENCH_kernels.json || { echo "verify: BENCH_kernels.json missing or empt
 # bitwise gate and the dtype-derived error bound vs the f32 oracle.
 grep -q '"mixed_precision"' BENCH_kernels.json \
     || { echo "verify: BENCH_kernels.json lacks the mixed_precision section"; exit 1; }
+test -s BENCH_layers.json || { echo "verify: BENCH_layers.json missing or empty"; exit 1; }
+# The HOTPATH-k attention section must have run and recorded its rows —
+# it validates every forward/backward output finite in-run (the masked
+# softmax total-function contract under causal masking).
+grep -q '"attention"' BENCH_layers.json \
+    || { echo "verify: BENCH_layers.json lacks the attention section"; exit 1; }
 test -s BENCH_serving.json || { echo "verify: BENCH_serving.json missing or empty"; exit 1; }
 # The AIMD adaptive-batching section must have run (it carries the in-run
 # bitwise-oracle gate with the controller enabled and the clamp check on
@@ -59,6 +65,13 @@ grep -q '"gate_ok":true' BENCH_observability.json \
 # oracle equivalence ≤ 1e-4 (the layers-PR acceptance bar).
 echo "==> conv pipeline example (smoke)"
 LAYERPIPE2_SMOKE=1 cargo run --release --example conv_pipeline
+
+# Transformer end-to-end smoke: Embedding → [SelfAttention → LayerNorm
+# → Dense] × 2 on token-teacher data through the threaded executor with
+# cost-balanced stages, asserting oracle equivalence ≤ 1e-4 for all
+# five weight-version strategies.
+echo "==> transformer pipeline example (smoke)"
+LAYERPIPE2_SMOKE=1 cargo run --release --example transformer_pipeline
 
 # Serving end-to-end smoke: trained dense + conv networks through the
 # multi-client batched server with a mid-traffic hot reload and a
